@@ -1,0 +1,15 @@
+//! Development diagnostic: RAS rejection-reason breakdown per load.
+use medge::config::SystemConfig;
+use medge::experiments::{run_scenario, SchedKind};
+use medge::workload::trace::TraceSpec;
+
+fn main() {
+    let cfg = SystemConfig::default();
+    for n in 1..=4 {
+        let m = run_scenario(&cfg, SchedKind::Ras, TraceSpec::Weighted(n), 95, &format!("RAS_{n}"));
+        println!(
+            "RAS_{n}: init={:<4} fail={:<4} realloc_ok={:<3}/{:<3} reasons[cfg,link,win,commit]={:?}",
+            m.lp_allocated_initial, m.lp_alloc_failures, m.lp_realloc_success, m.lp_realloc_attempts, m.reject_reasons
+        );
+    }
+}

@@ -1,0 +1,43 @@
+//! Quickstart: simulate the paper's testbed for a few minutes under the
+//! RAS scheduler and print the headline metrics.
+//!
+//!     cargo run --release --example quickstart
+
+use medge::config::SystemConfig;
+use medge::experiments::{frames_for_minutes, run_scenario, SchedKind};
+use medge::workload::trace::TraceSpec;
+
+fn main() {
+    let cfg = SystemConfig::default();
+    println!(
+        "network: {} devices × {} cores, {:.0} Mb/s link, frame period {:.2} s",
+        cfg.n_devices,
+        cfg.cores_per_device,
+        cfg.link_bps / 1e6,
+        cfg.frame_period_s
+    );
+    let frames = frames_for_minutes(&cfg, 10.0);
+    for kind in [SchedKind::Wps, SchedKind::Ras] {
+        let m = run_scenario(&cfg, kind, TraceSpec::Weighted(3), frames, kind.label());
+        println!(
+            "\n[{}] 10 simulated minutes of weighted-3 load:",
+            kind.label()
+        );
+        println!(
+            "  frames {}/{} ({:.1}%)  lp completed {} (+{} reallocated)  violations {}",
+            m.frames_completed,
+            m.frames_total,
+            m.frame_completion_rate() * 100.0,
+            m.lp_completed_initial,
+            m.lp_completed_realloc,
+            m.lp_violations
+        );
+        println!(
+            "  scheduling latency: hp {:.2} ms, lp {:.2} ms, preempt {:.2} ms",
+            m.lat_hp_alloc.mean_ms(),
+            m.lat_lp_alloc.mean_ms(),
+            m.lat_hp_preempt.mean_ms()
+        );
+    }
+    println!("\n(see `medge all` for every figure/table of the paper)");
+}

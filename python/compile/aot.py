@@ -1,0 +1,54 @@
+"""AOT-lower every pipeline stage to HLO text for the rust runtime.
+
+HLO *text*, not `.serialize()`: jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 (what the published
+`xla` crate binds) rejects; the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md and DESIGN.md.
+
+Usage: python -m compile.aot --outdir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.model import IMAGE_SIDE, stage_fn
+
+STAGES = ("detector", "binary", "classifier")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_stage(stage: str) -> str:
+    spec = jax.ShapeDtypeStruct((1, IMAGE_SIDE, IMAGE_SIDE, 3), jnp.float32)
+    lowered = jax.jit(stage_fn(stage)).lower(spec)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--stages", nargs="*", default=list(STAGES))
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+    for stage in args.stages:
+        text = lower_stage(stage)
+        path = os.path.join(args.outdir, f"{stage}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {stage}: {len(text)} chars -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Layer 1: Pallas tiled matmul kernel — the compute hot-spot of every
+pipeline stage (convolutions run as im2col + matmul; dense heads call it
+directly).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's DNNs run
+on Raspberry Pi CPUs via TFLite, so there is no GPU kernel to port.
+We express the hot loop the TPU way regardless: the matmul is tiled over
+an (M/bm, N/bn, K/bk) grid with VMEM-sized blocks shaped for the MXU
+systolic array, accumulating partial products across the K dimension and
+fusing the bias + leaky-ReLU epilogue into the final K step (one HBM
+round-trip per output tile). `interpret=True` everywhere: the CPU PJRT
+client cannot execute Mosaic custom-calls, and correctness is what the
+build-time pytest checks; TPU perf is estimated statically in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block sizes: 128×128 output tiles match the MXU; 32-wide K slabs keep
+# x/y blocks + accumulator well under VMEM (~(128·32 + 32·128 + 128·128)·4 B
+# ≈ 98 kB of a ~16 MB VMEM).
+BM = 128
+BN = 128
+BK = 32
+
+
+def _matmul_kernel(x_ref, y_ref, b_ref, o_ref, *, n_k: int, slope: float, fuse_bias: bool):
+    """One (bm, bn) output tile; grid axis 2 walks the K slabs."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        acc = o_ref[...]
+        if fuse_bias:
+            acc = acc + b_ref[...]
+        if slope >= 0.0:
+            # leaky ReLU (slope=0 → plain ReLU); slope<0 disables.
+            acc = jnp.where(acc > 0, acc, acc * slope)
+        o_ref[...] = acc
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("activation",))
+def _identity(x, activation=None):  # pragma: no cover - trivial
+    return x
+
+
+def pallas_matmul(
+    x: jax.Array,
+    y: jax.Array,
+    bias: jax.Array | None = None,
+    activation: str | None = None,
+    leaky_slope: float = 0.1,
+) -> jax.Array:
+    """`activation(x @ y + bias)` as a tiled Pallas kernel.
+
+    x: (M, K), y: (K, N), bias: (N,) or None.
+    activation: None | "relu" | "leaky_relu".
+    Inputs are zero-padded up to block multiples and the result sliced
+    back, so arbitrary shapes are accepted.
+    """
+    assert x.ndim == 2 and y.ndim == 2, (x.shape, y.shape)
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {y.shape}"
+    out_dtype = jnp.promote_types(x.dtype, y.dtype)
+
+    bm = min(BM, _ceil_to(m, 8))
+    bn = min(BN, _ceil_to(n, 8))
+    bk = min(BK, _ceil_to(k, 8))
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k))).astype(out_dtype)
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n))).astype(out_dtype)
+    if bias is None:
+        bp = jnp.zeros((1, np_), out_dtype)
+        fuse_bias = False
+    else:
+        assert bias.shape == (n,), bias.shape
+        bp = jnp.pad(bias, (0, np_ - n)).astype(out_dtype)[None, :]
+        fuse_bias = True
+
+    slope = {None: -1.0, "relu": 0.0, "leaky_relu": leaky_slope}[activation]
+    n_k = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k, slope=slope, fuse_bias=fuse_bias),
+        grid=(mp // bm, np_ // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, yp, bp)
+    return out[:m, :n]

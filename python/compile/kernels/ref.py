@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth
+used by the build-time pytest gate (and hypothesis sweeps)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_matmul(x, y, bias=None, activation=None, leaky_slope=0.1):
+    """activation(x @ y + bias) in plain jnp."""
+    out = jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32))
+    if bias is not None:
+        out = out + bias
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation == "leaky_relu":
+        out = jnp.where(out > 0, out, out * leaky_slope)
+    elif activation is not None:
+        raise ValueError(f"unknown activation {activation}")
+    return out
+
+
+def ref_conv2d(x, w, b, stride=2, activation="leaky_relu", leaky_slope=0.1):
+    """NHWC conv + bias + activation via lax (oracle for the im2col path).
+
+    x: (N, H, W, Cin); w: (kh, kw, Cin, Cout); b: (Cout,).
+    'SAME' padding, square stride.
+    """
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    out = out + b
+    if activation == "leaky_relu":
+        out = jnp.where(out > 0, out, out * leaky_slope)
+    elif activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    return out

@@ -1,0 +1,112 @@
+"""Layer 2: the three-stage waste-classification pipeline (paper Fig. 1)
+as JAX models whose convolution/dense hot loops run through the Layer-1
+Pallas matmul kernel (convs are lowered to im2col + tiled matmul).
+
+Stage 1 — object detector: is waste present in the frame?
+Stage 2 — binary classifier: recyclable vs non-recyclable.
+Stage 3 — high-complexity classifier: four recyclable classes
+          (YoloV2-flavoured: strided convs + leaky ReLU).
+
+Weights are deterministic (fixed PRNG key per stage) and baked into the
+AOT artifact as constants, so the rust runtime loads a self-contained
+HLO module per stage.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.matmul import pallas_matmul
+
+IMAGE_SIDE = 64
+N_RECYCLABLE_CLASSES = 4
+
+
+def _im2col(x, kh, kw, stride):
+    """NHWC → (N·H'·W', kh·kw·Cin) patch matrix ('SAME' padding)."""
+    n, h, w, c = x.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    # patches: (N, H', W', Cin·kh·kw) with channel-major patch layout.
+    ho, wo = patches.shape[1], patches.shape[2]
+    return patches.reshape(n * ho * wo, c * kh * kw), (n, ho, wo)
+
+
+def conv2d(x, w, b, stride=2, activation="leaky_relu"):
+    """Conv as im2col + the Pallas tiled matmul (bias+activation fused).
+
+    w: (kh, kw, Cin, Cout) — reordered to match the patch layout
+    (Cin-major) produced by conv_general_dilated_patches.
+    """
+    kh, kw, cin, cout = w.shape
+    cols, (n, ho, wo) = _im2col(x, kh, kw, stride)
+    w2 = jnp.transpose(w, (2, 0, 1, 3)).reshape(kh * kw * cin, cout)
+    out = pallas_matmul(cols, w2, bias=b, activation=activation)
+    return out.reshape(n, ho, wo, cout)
+
+
+def global_avg_pool(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def dense(x, w, b, activation=None):
+    return pallas_matmul(x, w, bias=b, activation=activation)
+
+
+def _init(key, shape, scale=None):
+    fan_in = 1
+    for d in shape[:-1]:
+        fan_in *= d
+    scale = scale or (2.0 / fan_in) ** 0.5
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def _conv_stack(params, x):
+    for w, b in params["convs"]:
+        x = conv2d(x, w, b, stride=2, activation="leaky_relu")
+    x = global_avg_pool(x)
+    return dense(x, *params["head"])
+
+
+def make_params(stage: str):
+    """Deterministic weights per stage (fixed key ⇒ reproducible HLO)."""
+    specs = {
+        # (conv channel progression, classes)
+        "detector": ([8, 16], 2),
+        "binary": ([16, 16], 2),
+        "classifier": ([16, 32, 64], N_RECYCLABLE_CLASSES),
+    }
+    chans, n_cls = specs[stage]
+    key = jax.random.PRNGKey(sum(ord(c) for c in stage))
+    convs = []
+    cin = 3
+    for cout in chans:
+        key, k1 = jax.random.split(key)
+        convs.append((_init(k1, (3, 3, cin, cout)), jnp.zeros((cout,), jnp.float32)))
+        cin = cout
+    key, k2 = jax.random.split(key)
+    head = (_init(k2, (cin, n_cls)), jnp.zeros((n_cls,), jnp.float32))
+    return {"convs": convs, "head": head}
+
+
+@functools.partial(jax.jit, static_argnames=("stage",))
+def forward(stage: str, x):
+    """Run one pipeline stage on (1, 64, 64, 3) f32 frames → logits."""
+    params = make_params(stage)
+    return _conv_stack(params, x)
+
+
+def stage_fn(stage: str):
+    """A closed-over single-input function suitable for AOT lowering."""
+    def fn(x):
+        return (forward(stage, x),)
+
+    return fn

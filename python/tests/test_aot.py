@@ -1,0 +1,39 @@
+"""AOT gate: every stage lowers to non-trivial, ENTRY-bearing HLO text
+(the exact format the rust runtime parses), and the Pallas kernel lowers
+to plain HLO ops (no Mosaic custom-calls that the CPU client can't run)."""
+
+import pytest
+
+from compile.aot import STAGES, lower_stage
+
+
+@pytest.fixture(scope="module")
+def lowered():
+    return {s: lower_stage(s) for s in STAGES}
+
+
+def test_all_stages_lower(lowered):
+    for stage in STAGES:
+        assert len(lowered[stage]) > 10_000, f"{stage} HLO suspiciously small"
+
+
+def test_hlo_has_entry(lowered):
+    for stage, text in lowered.items():
+        assert "ENTRY" in text, f"{stage} missing ENTRY computation"
+        assert "f32[1,64,64,3]" in text, f"{stage} missing input parameter"
+
+
+def test_no_mosaic_custom_calls(lowered):
+    # interpret=True keeps the kernel executable on the CPU PJRT client.
+    for stage, text in lowered.items():
+        assert "tpu_custom_call" not in text, f"{stage} contains a Mosaic custom-call"
+
+
+def test_outputs_are_tuples(lowered):
+    # return_tuple=True: the rust side unwraps with to_tuple1().
+    for stage, text in lowered.items():
+        assert "(f32[1," in text.split("ENTRY")[1], f"{stage} entry should return a tuple"
+
+
+def test_stage_list_matches_rust_runtime():
+    assert STAGES == ("detector", "binary", "classifier")

@@ -1,0 +1,114 @@
+"""Layer-1 correctness gate: the Pallas matmul kernel vs the pure-jnp
+oracle, across shapes, dtypes, epilogues — including a hypothesis sweep."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.matmul import pallas_matmul, BM, BN, BK
+from compile.kernels.ref import ref_matmul
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32).astype(dtype)
+
+
+class TestMatmulBasics:
+    def test_identity(self):
+        x = jnp.eye(8, dtype=jnp.float32)
+        y = _rand(0, (8, 8), jnp.float32)
+        np.testing.assert_allclose(pallas_matmul(x, y), y, rtol=1e-6)
+
+    def test_matches_ref_square(self):
+        x = _rand(1, (32, 32), jnp.float32)
+        y = _rand(2, (32, 32), jnp.float32)
+        np.testing.assert_allclose(pallas_matmul(x, y), ref_matmul(x, y), rtol=1e-5, atol=1e-5)
+
+    def test_non_multiple_shapes_are_padded(self):
+        # Shapes that don't divide the block sizes exercise the pad/slice path.
+        x = _rand(3, (37, 23), jnp.float32)
+        y = _rand(4, (23, 11), jnp.float32)
+        np.testing.assert_allclose(pallas_matmul(x, y), ref_matmul(x, y), rtol=1e-5, atol=1e-5)
+
+    def test_larger_than_one_block(self):
+        x = _rand(5, (BM + 32, BK * 2 + 8), jnp.float32)
+        y = _rand(6, (BK * 2 + 8, BN + 16), jnp.float32)
+        np.testing.assert_allclose(pallas_matmul(x, y), ref_matmul(x, y), rtol=1e-4, atol=1e-4)
+
+    def test_vector_like(self):
+        x = _rand(7, (1, 64), jnp.float32)
+        y = _rand(8, (64, 1), jnp.float32)
+        np.testing.assert_allclose(pallas_matmul(x, y), ref_matmul(x, y), rtol=1e-5, atol=1e-5)
+
+
+class TestEpilogues:
+    def test_bias(self):
+        x = _rand(9, (16, 24), jnp.float32)
+        y = _rand(10, (24, 8), jnp.float32)
+        b = _rand(11, (8,), jnp.float32)
+        np.testing.assert_allclose(
+            pallas_matmul(x, y, bias=b), ref_matmul(x, y, bias=b), rtol=1e-5, atol=1e-5
+        )
+
+    @pytest.mark.parametrize("act", ["relu", "leaky_relu"])
+    def test_activations(self, act):
+        x = _rand(12, (16, 16), jnp.float32)
+        y = _rand(13, (16, 16), jnp.float32)
+        b = _rand(14, (16,), jnp.float32)
+        np.testing.assert_allclose(
+            pallas_matmul(x, y, bias=b, activation=act),
+            ref_matmul(x, y, bias=b, activation=act),
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+    def test_leaky_slope_is_respected(self):
+        x = -jnp.ones((8, 8), jnp.float32)
+        y = jnp.eye(8, dtype=jnp.float32)
+        out = pallas_matmul(x, y, activation="leaky_relu", leaky_slope=0.25)
+        np.testing.assert_allclose(out, -0.25 * jnp.ones((8, 8)), rtol=1e-6)
+
+    def test_no_activation_passes_negatives(self):
+        x = -jnp.ones((4, 4), jnp.float32)
+        y = jnp.eye(4, dtype=jnp.float32)
+        np.testing.assert_allclose(pallas_matmul(x, y), x, rtol=1e-6)
+
+
+class TestDtypes:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtype_support(self, dtype):
+        x = _rand(15, (16, 32), dtype)
+        y = _rand(16, (32, 8), dtype)
+        got = pallas_matmul(x, y)
+        want = ref_matmul(x, y)
+        tol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+        )
+
+    def test_mixed_dtypes_promote(self):
+        x = _rand(17, (8, 8), jnp.bfloat16)
+        y = _rand(18, (8, 8), jnp.float32)
+        assert pallas_matmul(x, y).dtype == jnp.float32
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 2 * BM + 3),
+    k=st.integers(1, 2 * BK + 3),
+    n=st.integers(1, BN + 5),
+    seed=st.integers(0, 2**31 - 1),
+    act=st.sampled_from([None, "relu", "leaky_relu"]),
+    with_bias=st.booleans(),
+)
+def test_hypothesis_shape_sweep(m, k, n, seed, act, with_bias):
+    """The kernel agrees with the oracle on arbitrary shapes/epilogues."""
+    kx, ky, kb = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    y = jax.random.normal(ky, (k, n), jnp.float32)
+    b = jax.random.normal(kb, (n,), jnp.float32) if with_bias else None
+    got = pallas_matmul(x, y, bias=b, activation=act)
+    want = ref_matmul(x, y, bias=b, activation=act)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)

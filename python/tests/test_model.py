@@ -1,0 +1,84 @@
+"""Layer-2 checks: conv-as-pallas-matmul vs the lax oracle, stage model
+shapes, determinism, and pipeline semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import ref_conv2d
+from compile.model import (
+    IMAGE_SIDE,
+    N_RECYCLABLE_CLASSES,
+    conv2d,
+    forward,
+    global_avg_pool,
+    make_params,
+)
+
+
+class TestConv2d:
+    def test_matches_lax_conv(self):
+        key = jax.random.PRNGKey(0)
+        k1, k2, k3 = jax.random.split(key, 3)
+        x = jax.random.normal(k1, (1, 16, 16, 3), jnp.float32)
+        w = jax.random.normal(k2, (3, 3, 3, 8), jnp.float32) * 0.2
+        b = jax.random.normal(k3, (8,), jnp.float32) * 0.1
+        got = conv2d(x, w, b, stride=2, activation="leaky_relu")
+        want = ref_conv2d(x, w, b, stride=2, activation="leaky_relu")
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        side=st.sampled_from([8, 12, 16]),
+        cin=st.integers(1, 4),
+        cout=st.sampled_from([4, 8]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_conv_sweep(self, side, cin, cout, seed):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = jax.random.normal(k1, (1, side, side, cin), jnp.float32)
+        w = jax.random.normal(k2, (3, 3, cin, cout), jnp.float32) * 0.2
+        b = jax.random.normal(k3, (cout,), jnp.float32) * 0.1
+        got = conv2d(x, w, b)
+        want = ref_conv2d(x, w, b)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_stride_halves_resolution(self):
+        x = jnp.zeros((1, 16, 16, 3), jnp.float32)
+        w = jnp.zeros((3, 3, 3, 4), jnp.float32)
+        b = jnp.zeros((4,), jnp.float32)
+        assert conv2d(x, w, b, stride=2).shape == (1, 8, 8, 4)
+
+
+class TestStages:
+    @pytest.mark.parametrize(
+        "stage,n_out", [("detector", 2), ("binary", 2), ("classifier", N_RECYCLABLE_CLASSES)]
+    )
+    def test_output_shapes(self, stage, n_out):
+        x = jnp.zeros((1, IMAGE_SIDE, IMAGE_SIDE, 3), jnp.float32)
+        assert forward(stage, x).shape == (1, n_out)
+
+    def test_deterministic_weights(self):
+        a = make_params("classifier")
+        b = make_params("classifier")
+        for (wa, ba), (wb, bb) in zip(a["convs"], b["convs"]):
+            np.testing.assert_array_equal(wa, wb)
+            np.testing.assert_array_equal(ba, bb)
+
+    def test_stages_have_distinct_weights(self):
+        det = make_params("detector")
+        bin_ = make_params("binary")
+        assert det["convs"][0][0].shape != bin_["convs"][0][0].shape or not np.allclose(
+            det["convs"][0][0], bin_["convs"][0][0]
+        )
+
+    def test_forward_varies_with_input(self):
+        x0 = jnp.zeros((1, IMAGE_SIDE, IMAGE_SIDE, 3), jnp.float32)
+        x1 = jnp.ones((1, IMAGE_SIDE, IMAGE_SIDE, 3), jnp.float32)
+        assert not np.allclose(forward("classifier", x0), forward("classifier", x1))
+
+    def test_gap_reduces_spatial(self):
+        x = jnp.ones((2, 4, 4, 8), jnp.float32)
+        assert global_avg_pool(x).shape == (2, 8)

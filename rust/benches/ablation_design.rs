@@ -1,0 +1,64 @@
+//! Ablation bench for the design choices DESIGN.md calls out:
+//!
+//! 1. Link discretisation geometry — base-bucket count vs exponential
+//!    region (accuracy near `now` vs covered horizon).
+//! 2. Controller op-cost sensitivity — where the accuracy-vs-performance
+//!    crossover (Fig. 4) moves as the scheduler gets slower/faster.
+//! 3. The future-work contextual multi-scheduler switch threshold.
+
+use medge::config::SystemConfig;
+use medge::experiments::{frames_for_minutes, run_scenario, SchedKind};
+use medge::util::bench::bench_once;
+use medge::workload::trace::TraceSpec;
+
+fn main() {
+    let minutes: f64 = std::env::var("MEDGE_BENCH_MINUTES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(30.0);
+
+    println!("== ablation 1: link geometry (RAS, weighted-4) ==");
+    for (base, exp) in [(4usize, 13usize), (16, 11), (64, 9), (256, 5)] {
+        let cfg = SystemConfig { base_buckets: base, exp_buckets: exp, ..Default::default() };
+        let frames = frames_for_minutes(&cfg, minutes);
+        let (m, _) = bench_once(&format!("base={base} exp={exp}"), || {
+            run_scenario(&cfg, SchedKind::Ras, TraceSpec::Weighted(4), frames, "RAS")
+        });
+        println!(
+            "    frames {:.1}%  lp_fail {}  offloaded {}/{}",
+            m.frame_completion_rate() * 100.0,
+            m.lp_alloc_failures,
+            m.offloaded_completed,
+            m.offloaded_total
+        );
+    }
+
+    println!("\n== ablation 2: op-cost sensitivity (crossover position) ==");
+    for op_cost in [50.0f64, 200.0, 800.0] {
+        let cfg = SystemConfig { op_cost_us: op_cost, ..Default::default() };
+        let frames = frames_for_minutes(&cfg, minutes);
+        for n in [2u8, 3, 4] {
+            let wps = run_scenario(&cfg, SchedKind::Wps, TraceSpec::Weighted(n), frames, "WPS");
+            let ras = run_scenario(&cfg, SchedKind::Ras, TraceSpec::Weighted(n), frames, "RAS");
+            println!(
+                "op_cost {op_cost:>5} µs  W{n}: WPS {:.1}% vs RAS {:.1}%  ({})",
+                wps.frame_completion_rate() * 100.0,
+                ras.frame_completion_rate() * 100.0,
+                if ras.frames_completed >= wps.frames_completed { "RAS" } else { "WPS" },
+            );
+        }
+    }
+
+    println!("\n== ablation 3: multi-scheduler switch threshold (weighted-3) ==");
+    let frames = frames_for_minutes(&SystemConfig::default(), minutes);
+    for kind in [SchedKind::Wps, SchedKind::Ras, SchedKind::Multi] {
+        let cfg = SystemConfig::default();
+        let m = run_scenario(&cfg, kind, TraceSpec::Weighted(3), frames, kind.label());
+        println!(
+            "    {:<6} frames {:.1}%  lp_alloc {:.2} ms",
+            kind.label(),
+            m.frame_completion_rate() * 100.0,
+            m.lat_lp_alloc.mean_ms()
+        );
+    }
+}

@@ -1,0 +1,32 @@
+//! Regenerates Fig. 4 — "Task Completion across various categories":
+//! WPS_N vs RAS_N over the weighted 1..4 loads. Also prints wall time per
+//! scenario (the whole-run cost of each scheduler).
+
+use medge::config::SystemConfig;
+use medge::experiments::fig4_fig5;
+use medge::metrics::report;
+use medge::util::bench::bench_once;
+
+fn main() {
+    let cfg = SystemConfig::default();
+    let minutes: f64 = std::env::var("MEDGE_BENCH_MINUTES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(30.0);
+    let (runs, _) = bench_once(&format!("fig4: 8 scenarios × {minutes} min"), || {
+        fig4_fig5(&cfg, minutes)
+    });
+    print!("{}", report::fig4(&runs));
+    // Shape checks the paper's narrative expects (soft-reported, not
+    // asserted: this is a bench, not a test).
+    let rate = |label: &str| {
+        runs.iter()
+            .find(|m| m.label == label)
+            .map(|m| m.frame_completion_rate())
+            .unwrap_or(0.0)
+    };
+    println!("\nshape: W1 WPS {:.3} vs RAS {:.3} (paper: WPS ahead)", rate("WPS_1"), rate("RAS_1"));
+    println!("shape: W2 WPS {:.3} vs RAS {:.3} (paper: ~equal)", rate("WPS_2"), rate("RAS_2"));
+    println!("shape: W3 WPS {:.3} vs RAS {:.3} (paper: RAS ahead)", rate("WPS_3"), rate("RAS_3"));
+    println!("shape: W4 WPS {:.3} vs RAS {:.3} (paper: RAS ahead, gap grows)", rate("WPS_4"), rate("RAS_4"));
+}

@@ -1,0 +1,32 @@
+//! Regenerates Fig. 5 — scheduling latency by initial allocation and
+//! preemption/reallocation scenarios for both schedulers.
+
+use medge::config::SystemConfig;
+use medge::experiments::fig4_fig5;
+use medge::metrics::report;
+use medge::util::bench::bench_once;
+
+fn main() {
+    let cfg = SystemConfig::default();
+    let minutes: f64 = std::env::var("MEDGE_BENCH_MINUTES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(30.0);
+    let (runs, _) = bench_once(&format!("fig5: 8 scenarios × {minutes} min"), || {
+        fig4_fig5(&cfg, minutes)
+    });
+    print!("{}", report::fig5(&runs));
+    let wps4 = runs.iter().find(|m| m.label == "WPS_4").unwrap();
+    let ras4 = runs.iter().find(|m| m.label == "RAS_4").unwrap();
+    println!(
+        "\nshape: LP alloc W4 — WPS {:.1} ms vs RAS {:.2} ms ({:.0}× ; paper ~205 ms vs <6 ms)",
+        wps4.lat_lp_alloc.mean_ms(),
+        ras4.lat_lp_alloc.mean_ms(),
+        wps4.lat_lp_alloc.mean_ms() / ras4.lat_lp_alloc.mean_ms().max(1e-9)
+    );
+    println!(
+        "shape: preempt W4 — WPS {:.1} ms vs RAS {:.2} ms (paper ≥250 ms vs ≤100 ms)",
+        wps4.lat_hp_preempt.mean_ms(),
+        ras4.lat_hp_preempt.mean_ms()
+    );
+}

@@ -1,0 +1,24 @@
+//! Regenerates Fig. 6 — low-priority (stage-3) completion by mechanism
+//! across bandwidth-interval scenarios (BIT 1.5/5/10/20/30 s).
+
+use medge::config::SystemConfig;
+use medge::experiments::fig6_fig7;
+use medge::metrics::report;
+use medge::util::bench::bench_once;
+
+fn main() {
+    let cfg = SystemConfig::default();
+    let minutes: f64 = std::env::var("MEDGE_BENCH_MINUTES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(30.0);
+    let (runs, _) = bench_once(&format!("fig6: 5 BIT scenarios × {minutes} min"), || {
+        fig6_fig7(&cfg, minutes)
+    });
+    print!("{}", report::fig6(&runs));
+    println!(
+        "\nshape: LP completed 1.5 s → 30 s: {} → {} (paper: rises with interval)",
+        runs.first().unwrap().lp_completed_total(),
+        runs.last().unwrap().lp_completed_total()
+    );
+}

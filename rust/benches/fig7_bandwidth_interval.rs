@@ -1,0 +1,24 @@
+//! Regenerates Fig. 7 — bandwidth-interval tests: task completion across
+//! categories on a 30-min weighted-4 slice.
+
+use medge::config::SystemConfig;
+use medge::experiments::fig6_fig7;
+use medge::metrics::report;
+use medge::util::bench::bench_once;
+
+fn main() {
+    let cfg = SystemConfig::default();
+    let minutes: f64 = std::env::var("MEDGE_BENCH_MINUTES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(30.0);
+    let (runs, _) = bench_once(&format!("fig7: 5 BIT scenarios × {minutes} min"), || {
+        fig6_fig7(&cfg, minutes)
+    });
+    print!("{}", report::fig7(&runs));
+    println!(
+        "\nshape: frames 1.5 s → 30 s: {} → {} (paper: completion rises as probing slows)",
+        runs.first().unwrap().frames_completed,
+        runs.last().unwrap().frames_completed
+    );
+}

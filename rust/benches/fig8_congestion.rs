@@ -1,0 +1,28 @@
+//! Regenerates Fig. 8 + Table II — network-traffic congestion tests:
+//! duty-cycled background bursts at 0/25/50/75 % of the 30 s interval.
+
+use medge::config::SystemConfig;
+use medge::experiments::fig8_table2;
+use medge::metrics::report;
+use medge::util::bench::bench_once;
+
+fn main() {
+    let cfg = SystemConfig::default();
+    let minutes: f64 = std::env::var("MEDGE_BENCH_MINUTES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(30.0);
+    let (runs, _) = bench_once(&format!("fig8+table2: 4 duty cycles × {minutes} min"), || {
+        fig8_table2(&cfg, minutes)
+    });
+    print!("{}", report::fig8(&runs));
+    print!("{}", report::table2(&runs));
+    let q = &runs[0];
+    let h = &runs[3];
+    println!(
+        "\nshape: frame drop 0% → 75%: {:.1}% (paper ~18%); four-core share {:.1}% → {:.1}% (paper 0% → 12.3%)",
+        (q.frames_completed.saturating_sub(h.frames_completed)) as f64 / q.frames_completed.max(1) as f64 * 100.0,
+        q.core_mix().1,
+        h.core_mix().1
+    );
+}

@@ -1,0 +1,95 @@
+//! Micro benchmarks of the paper's data structures — the raw wall-clock
+//! counterpart of the ops-based latencies in Fig. 5. Demonstrates the
+//! accuracy-vs-performance trade at the query level: RAS containment
+//! (early-exit) vs WPS overlapping-range scan, as live-task count grows.
+
+use std::time::Duration;
+
+use medge::config::SystemConfig;
+use medge::coordinator::netlink::{CommTask, DiscretisedLink};
+use medge::coordinator::ras::DeviceAvailability;
+use medge::coordinator::scheduler::WorkloadState;
+use medge::coordinator::task::{Allocation, TaskConfig};
+use medge::util::bench::bench;
+use medge::util::Rng;
+
+const SAMPLE: Duration = Duration::from_millis(300);
+
+fn workload(n: usize, rng: &mut Rng) -> (WorkloadState, DeviceAvailability) {
+    let cfg = SystemConfig::default();
+    let mut state = WorkloadState::new(1);
+    let mut avail = DeviceAvailability::new(&cfg, 0);
+    for task in 0..n as u64 {
+        let start = rng.gen_range(600_000_000);
+        let end = start + 17_212_000;
+        let a = Allocation {
+            task,
+            frame: task,
+            device: 0,
+            config: TaskConfig::LowTwoCore,
+            cores: 2,
+            start,
+            end,
+            deadline: end + 1_000_000,
+            offloaded: false,
+            comm: None,
+        };
+        state.insert(a);
+        avail.write_all(start, end, 2);
+    }
+    (state, avail)
+}
+
+fn main() {
+    println!("== micro_structures: query cost vs live-task count ==");
+    let mut rng = Rng::seed_from_u64(42);
+    for n in [8usize, 32, 128, 512] {
+        let (state, avail) = workload(n, &mut rng);
+        let mut qrng = Rng::seed_from_u64(7);
+        bench(&format!("ras_containment_query/{n}_tasks"), SAMPLE, || {
+            let t = qrng.gen_range(600_000_000);
+            avail.query(TaskConfig::LowTwoCore, t, t + 17_212_000)
+        });
+        let mut qrng = Rng::seed_from_u64(7);
+        bench(&format!("wps_overlap_scan/{n}_tasks"), SAMPLE, || {
+            let t = qrng.gen_range(600_000_000);
+            state.peak_usage(0, t, t + 17_212_000)
+        });
+    }
+
+    println!("\n== discretised link ==");
+    let link = DiscretisedLink::build(0, 30_000, 16, 11);
+    let mut qrng = Rng::seed_from_u64(9);
+    let horizon = link.horizon();
+    bench("link_index_o1", SAMPLE, || {
+        let t = qrng.gen_range(horizon);
+        link.index(t)
+    });
+    let mut prng = Rng::seed_from_u64(11);
+    bench("link_place_and_remove", SAMPLE, || {
+        let mut l = link.clone();
+        for task in 0..8u64 {
+            let t = prng.gen_range(horizon / 2);
+            let _ = l.place(t, horizon, CommTask { task, from: 0, to: 1, planned_start: t });
+        }
+        l.pending()
+    });
+    let mut full = link.clone();
+    for task in 0..24u64 {
+        let t = (task * 37_000) % (horizon / 2);
+        let _ = full.place(t, horizon, CommTask { task, from: 0, to: 1, planned_start: t });
+    }
+    bench("link_rebuild_cascade_24_items", SAMPLE, || full.rebuild(100_000, 60_000));
+
+    println!("\n== preemption reconstruction ==");
+    let cfg = SystemConfig::default();
+    for n in [4usize, 16, 64] {
+        let (state, _) = workload(n, &mut rng);
+        let allocs: Vec<Allocation> = state.allocations.values().cloned().collect();
+        bench(&format!("ras_reconstruct/{n}_tasks"), SAMPLE, || {
+            let mut d = DeviceAvailability::new(&cfg, 0);
+            d.reconstruct(&cfg, 0, allocs.iter());
+            d.window_count()
+        });
+    }
+}

@@ -1,0 +1,124 @@
+//! Dynamic bandwidth estimation (Section V).
+//!
+//! The controller starts from an iperf3-style baseline, then periodically
+//! (every `bandwidth_interval`) has a randomly chosen edge device send 10
+//! 1400-byte pings to each other device, converts per-ping round-trip time
+//! to bits per second, and folds the mean into an EWMA (α = 0.3). Each
+//! update triggers a rebuild of the discretised network link.
+
+
+use super::ewma::Ewma;
+use crate::config::SystemConfig;
+use crate::time::{SimDuration, SimTime};
+
+/// Result of one probe round: per-ping throughput samples in bits/second.
+#[derive(Debug, Clone)]
+pub struct ProbeRound {
+    pub host: usize,
+    pub samples_bps: Vec<f64>,
+}
+
+impl ProbeRound {
+    pub fn mean_bps(&self) -> Option<f64> {
+        if self.samples_bps.is_empty() {
+            return None;
+        }
+        Some(self.samples_bps.iter().sum::<f64>() / self.samples_bps.len() as f64)
+    }
+}
+
+/// The controller's bandwidth estimator.
+#[derive(Debug, Clone)]
+pub struct BandwidthEstimator {
+    ewma: Ewma,
+    /// Probe interval (µs).
+    pub interval: SimDuration,
+    /// Time of the last completed update.
+    pub last_update: SimTime,
+    /// Number of updates applied (diagnostics; Fig. 6/7 sweeps this rate).
+    pub updates: u64,
+}
+
+impl BandwidthEstimator {
+    /// Seed from the initial baseline test (the paper's startup iperf3).
+    pub fn new(cfg: &SystemConfig, baseline_bps: f64) -> Self {
+        Self {
+            ewma: Ewma::with_initial(cfg.ewma_alpha, baseline_bps),
+            interval: cfg.bandwidth_interval(),
+            last_update: 0,
+            updates: 0,
+        }
+    }
+
+    /// Current estimate in bits per second.
+    pub fn estimate_bps(&self) -> f64 {
+        self.ewma.value().expect("estimator is always seeded")
+    }
+
+    /// Fold a probe round into the estimate. Returns the new estimate, or
+    /// `None` if the round carried no samples (probe failure — estimate
+    /// unchanged, no link rebuild needed).
+    pub fn apply(&mut self, now: SimTime, round: &ProbeRound) -> Option<f64> {
+        let mean = round.mean_bps()?;
+        self.last_update = now;
+        self.updates += 1;
+        Some(self.ewma.update(mean))
+    }
+
+    /// When the next probe is due.
+    pub fn next_due(&self) -> SimTime {
+        self.last_update + self.interval
+    }
+
+    /// Convert ping RTT (µs) for `bytes` payload into a bits/s sample, the
+    /// way the paper's edge devices do.
+    pub fn rtt_to_bps(bytes: u64, rtt_us: SimDuration) -> f64 {
+        if rtt_us == 0 {
+            return f64::INFINITY;
+        }
+        // Payload travels out and back: 2·bytes over the RTT.
+        (2.0 * bytes as f64 * 8.0) / (rtt_us as f64 / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SystemConfig {
+        SystemConfig::default()
+    }
+
+    #[test]
+    fn seeded_estimate() {
+        let e = BandwidthEstimator::new(&cfg(), 40e6);
+        assert_eq!(e.estimate_bps(), 40e6);
+        assert_eq!(e.next_due(), 30_000_000);
+    }
+
+    #[test]
+    fn apply_moves_estimate_towards_samples() {
+        let mut e = BandwidthEstimator::new(&cfg(), 40e6);
+        let round = ProbeRound { host: 0, samples_bps: vec![20e6; 30] };
+        let v = e.apply(1_000_000, &round).unwrap();
+        // 0.3·20M + 0.7·40M = 34M
+        assert!((v - 34e6).abs() < 1.0);
+        assert_eq!(e.updates, 1);
+        assert_eq!(e.next_due(), 31_000_000);
+    }
+
+    #[test]
+    fn empty_round_is_ignored() {
+        let mut e = BandwidthEstimator::new(&cfg(), 40e6);
+        assert!(e.apply(5, &ProbeRound { host: 1, samples_bps: vec![] }).is_none());
+        assert_eq!(e.estimate_bps(), 40e6);
+        assert_eq!(e.updates, 0);
+    }
+
+    #[test]
+    fn rtt_conversion() {
+        // 1400 B out + back in 1 ms → 22.4 Mb/s.
+        let bps = BandwidthEstimator::rtt_to_bps(1400, 1000);
+        assert!((bps - 22.4e6).abs() < 1.0);
+    }
+}

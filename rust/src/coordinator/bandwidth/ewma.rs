@@ -1,0 +1,71 @@
+//! Exponentially-weighted moving average, as used by the controller to
+//! smooth bandwidth probe results (the paper uses α = 0.3).
+
+
+/// EWMA accumulator: `value ← α · sample + (1 − α) · value`.
+#[derive(Debug, Clone)]
+pub struct Ewma {
+    pub alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha), "alpha must be in [0, 1]");
+        Self { alpha, value: None }
+    }
+
+    /// Seeded with an initial value (the paper's initial iperf3 baseline).
+    pub fn with_initial(alpha: f64, initial: f64) -> Self {
+        Self { alpha, value: Some(initial) }
+    }
+
+    /// Feed a sample; returns the updated average.
+    pub fn update(&mut self, sample: f64) -> f64 {
+        let v = match self.value {
+            None => sample,
+            Some(v) => self.alpha * sample + (1.0 - self.alpha) * v,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn value(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_sample_seeds() {
+        let mut e = Ewma::new(0.3);
+        assert_eq!(e.value(), None);
+        assert_eq!(e.update(10.0), 10.0);
+    }
+
+    #[test]
+    fn converges_towards_constant_input() {
+        let mut e = Ewma::with_initial(0.3, 0.0);
+        let mut v = 0.0;
+        for _ in 0..50 {
+            v = e.update(100.0);
+        }
+        assert!((v - 100.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn alpha_weights_new_sample() {
+        let mut e = Ewma::with_initial(0.3, 100.0);
+        // 0.3·0 + 0.7·100 = 70
+        assert!((e.update(0.0) - 70.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_alpha() {
+        let _ = Ewma::new(1.5);
+    }
+}

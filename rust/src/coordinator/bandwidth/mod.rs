@@ -1,0 +1,7 @@
+//! Dynamic bandwidth estimation: EWMA over periodic ping probes.
+
+pub mod estimator;
+pub mod ewma;
+
+pub use estimator::{BandwidthEstimator, ProbeRound};
+pub use ewma::Ewma;

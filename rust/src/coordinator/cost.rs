@@ -1,0 +1,80 @@
+//! Scheduler latency accounting.
+//!
+//! The paper's central claim is that scheduler *processing time adds to
+//! task latency*, and that the cheap abstraction wins under load because of
+//! it. To keep that feedback loop honest in simulation, the DES engine
+//! measures the real wall-clock time of every scheduling call on this host,
+//! scales it through [`CostModel`], and charges it to virtual time before
+//! the decision takes effect — so the exhaustive WPS search really does
+//! delay task starts relative to the RAS containment query.
+
+use std::time::Instant;
+
+
+use crate::time::SimDuration;
+
+/// Converts measured wall-clock scheduler time into virtual latency.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// Multiplier on measured nanoseconds (1.0 = charge raw measurement).
+    /// The paper's controller is C++ on an M1; a scale > 1 can emulate a
+    /// slower controller without changing relative algorithm costs.
+    pub scale: f64,
+    /// Floor charged per scheduling call (µs) — models fixed dispatch
+    /// overhead (syscall, queueing) that a wall-clock microbenchmark on a
+    /// fast host under-reports.
+    pub floor_us: SimDuration,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self { scale: 1.0, floor_us: 50 }
+    }
+}
+
+impl CostModel {
+    pub fn new(scale: f64) -> Self {
+        Self { scale, ..Default::default() }
+    }
+
+    /// Convert a measured wall-clock duration to charged virtual µs.
+    pub fn charge(&self, wall: std::time::Duration) -> SimDuration {
+        let us = (wall.as_nanos() as f64 * self.scale / 1000.0).round() as SimDuration;
+        us.max(self.floor_us)
+    }
+
+    /// Run `f`, measure it, and return `(result, charged_virtual_us)`.
+    pub fn timed<T>(&self, f: impl FnOnce() -> T) -> (T, SimDuration) {
+        let t0 = Instant::now();
+        let out = f();
+        (out, self.charge(t0.elapsed()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn floor_applies() {
+        let c = CostModel::default();
+        assert_eq!(c.charge(std::time::Duration::from_nanos(10)), 50);
+    }
+
+    #[test]
+    fn scale_multiplies() {
+        let c = CostModel { scale: 10.0, floor_us: 0 };
+        assert_eq!(c.charge(std::time::Duration::from_micros(100)), 1000);
+    }
+
+    #[test]
+    fn timed_returns_value_and_charge() {
+        let c = CostModel::default();
+        let (v, charged) = c.timed(|| {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(charged >= 1000, "charged {charged} < 1ms");
+    }
+}

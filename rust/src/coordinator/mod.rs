@@ -1,0 +1,24 @@
+//! The controller (Layer 3): the paper's coordination contribution.
+//!
+//! The system is centralised — scheduling decisions are made by a
+//! controller that maintains the state of communication and computation
+//! resources based on information received from the edge devices
+//! (Section III). This module holds:
+//!
+//! * [`task`] — the task/allocation model;
+//! * [`ras`] — the resource-availability abstraction (Section IV-A1);
+//! * [`netlink`] — the discretised network link (Section IV-A2);
+//! * [`bandwidth`] — the EWMA dynamic bandwidth estimator (Section V);
+//! * [`scheduler`] — the RAS scheduler, the WPS baseline, and the
+//!   future-work contextual multi-scheduler;
+//! * [`cost`] — scheduler-latency accounting for the simulator.
+
+pub mod bandwidth;
+pub mod cost;
+pub mod netlink;
+pub mod ras;
+pub mod scheduler;
+pub mod task;
+
+pub use scheduler::{HpOutcome, LpOutcome, Scheduler};
+pub use task::{Allocation, DeviceId, FrameId, Priority, Task, TaskConfig, TaskId};

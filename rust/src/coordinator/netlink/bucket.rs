@@ -1,0 +1,78 @@
+//! Buckets of the discretised network link (Fig. 3).
+//!
+//! Each bucket `b_i` covers the time window `[t1_i, t2_i)` with
+//! `t1_i == t2_{i-1}` and `t2_i == t1_i + c_i · D`, where `D` is the unit
+//! transfer time (one maximum-size image at the estimated bandwidth) and
+//! `c_i` the bucket's capacity in communication tasks.
+
+
+use crate::coordinator::task::{DeviceId, TaskId};
+use crate::time::SimTime;
+
+/// A communication task occupying link capacity: the input-image transfer
+/// of an offloaded DNN task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CommTask {
+    pub task: TaskId,
+    pub from: DeviceId,
+    pub to: DeviceId,
+    /// The time the transfer was planned to start (used to re-index the
+    /// task when the link is rebuilt and items cascade).
+    pub planned_start: SimTime,
+}
+
+/// One slot of the discretised link.
+#[derive(Debug, Clone)]
+pub struct Bucket {
+    pub t1: SimTime,
+    pub t2: SimTime,
+    /// Capacity in unit transfers (c_i).
+    pub capacity: u32,
+    pub items: Vec<CommTask>,
+}
+
+impl Bucket {
+    pub fn new(t1: SimTime, t2: SimTime, capacity: u32) -> Self {
+        debug_assert!(t1 < t2);
+        Self { t1, t2, capacity, items: Vec::new() }
+    }
+
+    #[inline]
+    pub fn is_full(&self) -> bool {
+        self.items.len() as u32 >= self.capacity
+    }
+
+    #[inline]
+    pub fn spare(&self) -> u32 {
+        self.capacity - self.items.len() as u32
+    }
+
+    pub fn push(&mut self, c: CommTask) {
+        debug_assert!(!self.is_full());
+        self.items.push(c);
+    }
+
+    pub fn remove_task(&mut self, task: TaskId) -> Option<CommTask> {
+        let i = self.items.iter().position(|c| c.task == task)?;
+        Some(self.items.remove(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_accounting() {
+        let mut b = Bucket::new(0, 100, 2);
+        assert_eq!(b.spare(), 2);
+        b.push(CommTask { task: 1, from: 0, to: 1, planned_start: 0 });
+        assert!(!b.is_full());
+        b.push(CommTask { task: 2, from: 1, to: 2, planned_start: 10 });
+        assert!(b.is_full());
+        assert_eq!(b.spare(), 0);
+        assert!(b.remove_task(1).is_some());
+        assert!(b.remove_task(1).is_none());
+        assert_eq!(b.spare(), 1);
+    }
+}

@@ -1,0 +1,366 @@
+//! The discretised network link (Section IV-A2).
+//!
+//! Construction: round the current time up to the next multiple of the unit
+//! transfer time `D` — that alignment point is the *current time of
+//! reasoning* `t_r`. The first `n` buckets have capacity 1·D ("higher
+//! accuracy for potential windows in the near future"); the following `j`
+//! buckets have exponentially increasing capacity `2, 4, 8, …` (and
+//! correspondingly longer windows), bounding the structure's memory while
+//! still covering a long horizon.
+//!
+//! Querying converts a timestamp to a bucket index in O(1):
+//! `base_index = ((t_p − t_r) + (D − ((t_p − t_r) mod D))) / D` — i.e. the
+//! number of D-units, rounded up. If that lands in the base region the
+//! index is used directly; otherwise the exponential region is indexed by
+//! `log2` of the distance past the base region.
+//!
+//! *Faithfulness note*: the paper prints the exponential-region formula as
+//! `floor(log2(base_index) + 2)`, which is not monotone with the bucket
+//! layout it describes (it maps base_index = n back below n for n > 4). We
+//! implement the evident intent — an O(1) log2 lookup of the exponential
+//! bucket whose span contains the timestamp: bucket `n + k` covers
+//! base-units `[n + 2^{k+1} − 2, n + 2^{k+2} − 2)`, so
+//! `k = floor(log2((base_index − n)/2 + 1))`. DESIGN.md records the
+//! deviation.
+
+
+use super::bucket::{Bucket, CommTask};
+use crate::time::{round_up, SimDuration, SimTime};
+
+/// The controller's model of the shared wireless link.
+#[derive(Debug, Clone)]
+pub struct DiscretisedLink {
+    /// Unit transfer time D (µs): one maximum-size image at the estimated
+    /// bandwidth.
+    pub unit: SimDuration,
+    /// Current time of reasoning t_r (start of bucket 0).
+    pub t_r: SimTime,
+    /// Number of capacity-1 base buckets (n).
+    pub base_count: usize,
+    /// Number of exponential buckets (j).
+    pub exp_count: usize,
+    pub buckets: Vec<Bucket>,
+}
+
+impl DiscretisedLink {
+    /// Build an empty discretisation starting at the first multiple of
+    /// `unit` at or after `now`.
+    pub fn build(now: SimTime, unit: SimDuration, base_count: usize, exp_count: usize) -> Self {
+        let unit = unit.max(1);
+        let t_r = round_up(now, unit);
+        let mut buckets = Vec::with_capacity(base_count + exp_count);
+        let mut t = t_r;
+        for _ in 0..base_count {
+            buckets.push(Bucket::new(t, t + unit, 1));
+            t += unit;
+        }
+        let mut cap: u32 = 2;
+        for _ in 0..exp_count {
+            let span = unit * cap as SimDuration;
+            buckets.push(Bucket::new(t, t + span, cap));
+            t += span;
+            cap = cap.saturating_mul(2);
+        }
+        Self { unit, t_r, base_count, exp_count, buckets }
+    }
+
+    /// End of the link's covered horizon.
+    pub fn horizon(&self) -> SimTime {
+        self.buckets.last().map(|b| b.t2).unwrap_or(self.t_r)
+    }
+
+    /// O(1) timestamp → bucket index (the paper's query formula, with the
+    /// exponential-region correction documented above). Returns `None` for
+    /// timestamps before `t_r` that round to the past ("negative index":
+    /// the communication has already happened) and for timestamps beyond
+    /// the horizon.
+    pub fn index(&self, t_p: SimTime) -> Option<usize> {
+        if t_p + self.unit <= self.t_r {
+            return None; // entirely in the past of the discretisation
+        }
+        let t_p = t_p.max(self.t_r);
+        let off = t_p - self.t_r;
+        // Number of whole D-units, rounding any partial unit up — matches
+        // ((t_p - t_r) + (D - ((t_p - t_r) % D))) / D from the paper for
+        // non-aligned t_p, and keeps aligned timestamps in their own slot.
+        let base_index = (off / self.unit) as usize;
+        if base_index < self.base_count {
+            return Some(base_index);
+        }
+        // Exponential region: bucket n+k spans base-units
+        // [n + 2^{k+1} - 2, n + 2^{k+2} - 2).
+        let past = (base_index - self.base_count) as u64;
+        let k = (past / 2 + 1).ilog2() as usize;
+        let idx = self.base_count + k;
+        if idx < self.buckets.len() && self.buckets[idx].t1 <= t_p && t_p < self.buckets[idx].t2 {
+            Some(idx)
+        } else if idx < self.buckets.len() {
+            // Guard against rounding at region edges: linear fix-up by at
+            // most one bucket.
+            self.buckets
+                .iter()
+                .position(|b| b.t1 <= t_p && t_p < b.t2)
+        } else {
+            None
+        }
+    }
+
+    /// Find the first bucket at or after `t_p` with spare capacity, insert
+    /// the communication task, and return `(bucket_index, comm_window)`.
+    /// The transfer starts at the later of the bucket's opening and `t_p`
+    /// and takes one unit `D` (the bucket's capacity says how many unit
+    /// transfers it can host; a wide exponential bucket hosts many, each
+    /// still `D` long). Iterates forward from the O(1) index as the paper
+    /// describes. `deadline` bounds when the transfer must complete.
+    pub fn place(&mut self, t_p: SimTime, deadline: SimTime, mut comm: CommTask) -> Option<(usize, SimTime, SimTime)> {
+        let start = self.index(t_p).unwrap_or(0);
+        for i in start..self.buckets.len() {
+            let b = &self.buckets[i];
+            if b.t1 + self.unit > deadline {
+                return None;
+            }
+            if !b.is_full() && b.t2 > t_p {
+                let c1 = b.t1.max(t_p);
+                let c2 = c1 + self.unit;
+                if c2 > deadline {
+                    return None;
+                }
+                comm.planned_start = c1;
+                self.buckets[i].push(comm);
+                return Some((i, c1, c2));
+            }
+        }
+        None
+    }
+
+    /// Capacity-probe version of [`place`]: would `count` transfers fit
+    /// starting from `t_p` before `deadline`? Does not mutate.
+    pub fn can_place(&self, t_p: SimTime, deadline: SimTime, count: u32) -> bool {
+        let start = match self.index(t_p) {
+            Some(i) => i,
+            None => 0,
+        };
+        let mut need = count;
+        for b in &self.buckets[start..] {
+            if b.t1 >= deadline {
+                break;
+            }
+            if b.t2 <= t_p {
+                continue;
+            }
+            need = need.saturating_sub(b.spare());
+            if need == 0 {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Remove a pending communication task (e.g. its DNN task was
+    /// preempted or violated its deadline before transfer).
+    pub fn remove_task(&mut self, task: crate::coordinator::task::TaskId) -> Option<CommTask> {
+        for b in &mut self.buckets {
+            if let Some(c) = b.remove_task(task) {
+                return Some(c);
+            }
+        }
+        None
+    }
+
+    /// Rebuild the discretisation for a new unit transfer time (after a
+    /// bandwidth estimate update) and *cascade* the pending items of `self`
+    /// into the new structure (Section IV-A2): each item is re-indexed by
+    /// its planned start; items whose index is negative (already in the
+    /// past / completed) are excluded.
+    pub fn rebuild(&self, now: SimTime, new_unit: SimDuration) -> (DiscretisedLink, usize) {
+        let mut fresh = DiscretisedLink::build(now, new_unit, self.base_count, self.exp_count);
+        let mut dropped = 0usize;
+        for b in &self.buckets {
+            for item in &b.items {
+                // Items already started (or in the past) are excluded.
+                if item.planned_start < fresh.t_r {
+                    dropped += 1;
+                    continue;
+                }
+                match fresh.index(item.planned_start) {
+                    Some(idx) => {
+                        // Insert at the indexed bucket or the next with
+                        // room (same forward scan as placement).
+                        let mut placed = false;
+                        for i in idx..fresh.buckets.len() {
+                            if !fresh.buckets[i].is_full() {
+                                fresh.buckets[i].push(*item);
+                                placed = true;
+                                break;
+                            }
+                        }
+                        if !placed {
+                            dropped += 1;
+                        }
+                    }
+                    None => dropped += 1,
+                }
+            }
+        }
+        (fresh, dropped)
+    }
+
+    /// Total pending communication tasks.
+    pub fn pending(&self) -> usize {
+        self.buckets.iter().map(|b| b.items.len()).sum()
+    }
+
+    /// Invariants: contiguous windows, capacities respected, exponential
+    /// growth pattern.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut prev_t2 = self.t_r;
+        for (i, b) in self.buckets.iter().enumerate() {
+            if b.t1 != prev_t2 {
+                return Err(format!("bucket {i} not contiguous: t1={} prev_t2={prev_t2}", b.t1));
+            }
+            if b.t2 - b.t1 != self.unit * b.capacity as u64 {
+                return Err(format!("bucket {i} span != capacity·D"));
+            }
+            if b.items.len() as u32 > b.capacity {
+                return Err(format!("bucket {i} over capacity"));
+            }
+            let expected_cap = if i < self.base_count {
+                1
+            } else {
+                2u32 << (i - self.base_count)
+            };
+            if b.capacity != expected_cap {
+                return Err(format!("bucket {i} capacity {} != expected {expected_cap}", b.capacity));
+            }
+            prev_t2 = b.t2;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn comm(task: u64) -> CommTask {
+        CommTask { task, from: 0, to: 1, planned_start: 0 }
+    }
+
+    #[test]
+    fn build_layout_matches_paper() {
+        // D=100, 4 base buckets of capacity 1, then 2,4,8.
+        let l = DiscretisedLink::build(50, 100, 4, 3);
+        assert_eq!(l.t_r, 100); // rounded up to multiple of D
+        l.check_invariants().unwrap();
+        assert_eq!(l.buckets.len(), 7);
+        assert_eq!(l.buckets[0].t1, 100);
+        assert_eq!(l.buckets[3].t2, 500);
+        assert_eq!(l.buckets[4].capacity, 2);
+        assert_eq!(l.buckets[4].t2 - l.buckets[4].t1, 200);
+        assert_eq!(l.buckets[6].capacity, 8);
+        assert_eq!(l.horizon(), 500 + 200 + 400 + 800);
+    }
+
+    #[test]
+    fn index_is_o1_and_monotone() {
+        let l = DiscretisedLink::build(0, 100, 4, 3);
+        // Base region.
+        assert_eq!(l.index(0), Some(0));
+        assert_eq!(l.index(99), Some(0));
+        assert_eq!(l.index(100), Some(1));
+        assert_eq!(l.index(399), Some(3));
+        // Exponential region.
+        assert_eq!(l.index(400), Some(4));
+        assert_eq!(l.index(599), Some(4));
+        assert_eq!(l.index(600), Some(5));
+        assert_eq!(l.index(999), Some(5));
+        assert_eq!(l.index(1000), Some(6));
+        assert_eq!(l.index(1799), Some(6));
+        // Past the horizon.
+        assert_eq!(l.index(1800), None);
+        // Every timestamp maps to the bucket that contains it.
+        for t in 0..1800 {
+            let i = l.index(t).unwrap();
+            assert!(l.buckets[i].t1 <= t && t < l.buckets[i].t2, "t={t} i={i}");
+        }
+    }
+
+    #[test]
+    fn index_in_past_is_none() {
+        let l = DiscretisedLink::build(1000, 100, 4, 3);
+        assert_eq!(l.t_r, 1000);
+        assert_eq!(l.index(0), None);
+        assert_eq!(l.index(899), None);
+        // Within one unit below t_r rounds up into bucket 0.
+        assert_eq!(l.index(950), Some(0));
+    }
+
+    #[test]
+    fn place_iterates_past_full_buckets() {
+        let mut l = DiscretisedLink::build(0, 100, 2, 2);
+        let (i0, t1, t2) = l.place(0, 10_000, comm(1)).unwrap();
+        assert_eq!((i0, t1, t2), (0, 0, 100)); // one unit transfer from t=0
+        // Bucket 0 now full (capacity 1) — next placement goes to bucket 1.
+        let (i1, ..) = l.place(0, 10_000, comm(2)).unwrap();
+        assert_eq!(i1, 1);
+        // Fill bucket 1 too; next goes to the exponential bucket (cap 2).
+        let (i2, ..) = l.place(0, 10_000, comm(3)).unwrap();
+        assert_eq!(i2, 2);
+        let (i3, ..) = l.place(0, 10_000, comm(4)).unwrap();
+        assert_eq!(i3, 2);
+        l.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn place_respects_deadline() {
+        let mut l = DiscretisedLink::build(0, 100, 1, 1);
+        assert!(l.place(0, 100, comm(1)).is_some()); // transfer [0, 100)
+        // Bucket 0 full; bucket 1's transfer would finish at 200 > 100.
+        assert!(l.place(0, 100, comm(2)).is_none());
+        assert_eq!(l.pending(), 1);
+        // A later deadline lets it start in bucket 1.
+        let (_, c1, c2) = l.place(0, 250, comm(3)).unwrap();
+        assert_eq!((c1, c2), (100, 200));
+    }
+
+    #[test]
+    fn can_place_counts_spare_capacity() {
+        let l = DiscretisedLink::build(0, 100, 2, 1);
+        assert!(l.can_place(0, 200, 2)); // two base buckets
+        assert!(!l.can_place(0, 200, 3)); // third would start at 200
+        assert!(l.can_place(0, 400, 4)); // +2 in the exponential bucket
+    }
+
+    #[test]
+    fn rebuild_cascades_pending_items() {
+        let mut l = DiscretisedLink::build(0, 100, 4, 3);
+        l.place(150, 10_000, comm(1)).unwrap();
+        l.place(450, 10_000, comm(2)).unwrap();
+        l.place(50, 10_000, comm(3)).unwrap(); // planned_start 50 < new t_r
+        assert_eq!(l.pending(), 3);
+        // Bandwidth halved → unit doubles; rebuild from t=200. The new
+        // t_r is 200: items whose planned start precedes it (task 3 at 50
+        // and task 1 at 150 — both already underway) are excluded.
+        let (fresh, dropped) = l.rebuild(200, 200);
+        fresh.check_invariants().unwrap();
+        assert_eq!(dropped, 2);
+        assert_eq!(fresh.pending(), 1);
+        // Every survivor sits in the bucket containing (or following) its
+        // planned start.
+        for b in &fresh.buckets {
+            for it in &b.items {
+                assert!(b.t2 > it.planned_start, "task {} landed before its start", it.task);
+            }
+        }
+    }
+
+    #[test]
+    fn remove_task_frees_capacity() {
+        let mut l = DiscretisedLink::build(0, 100, 1, 0);
+        l.place(0, 1000, comm(7)).unwrap();
+        assert!(l.place(0, 100, comm(8)).is_none());
+        assert!(l.remove_task(7).is_some());
+        assert!(l.place(0, 100, comm(8)).is_some());
+        assert!(l.remove_task(99).is_none());
+    }
+}

@@ -1,0 +1,7 @@
+//! Network link discretisation (the paper's Section IV-A2).
+
+pub mod bucket;
+pub mod link;
+
+pub use bucket::{Bucket, CommTask};
+pub use link::DiscretisedLink;

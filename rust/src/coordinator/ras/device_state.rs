@@ -1,0 +1,221 @@
+//! Per-device availability state: one [`ResourceAvailabilityList`] per task
+//! configuration, plus the cross-list write and the full reconstruction used
+//! after preemption (Section IV-A1).
+//!
+//! The asymmetry the paper exploits: *queries* (scheduling, latency-critical)
+//! touch one list and early-exit; *writes* (after allocation, off the
+//! latency path) fan out across all lists; *preemption* (rare) pays for a
+//! full rebuild from the device's active workload because reclaimed windows
+//! cannot be re-inserted — a window only certifies the track's minimum
+//! capacity, not total usage.
+
+
+use super::list::{ResourceAvailabilityList, WindowRef};
+use crate::config::SystemConfig;
+use crate::coordinator::task::{Allocation, TaskConfig, ALL_CONFIGS};
+use crate::time::SimTime;
+
+/// Availability state for one device: `lists[config.index()]`.
+#[derive(Debug, Clone)]
+pub struct DeviceAvailability {
+    pub lists: Vec<ResourceAvailabilityList>,
+}
+
+impl DeviceAvailability {
+    /// Fully-available device from time `from`.
+    pub fn new(cfg: &SystemConfig, from: SimTime) -> Self {
+        let lists = ALL_CONFIGS
+            .iter()
+            .map(|&c| {
+                let cores = c.cores(cfg);
+                let tracks = (cfg.cores_per_device / cores).max(1) as usize;
+                ResourceAvailabilityList::fully_available(cores, c.proc_time(cfg), tracks, from)
+            })
+            .collect();
+        Self { lists }
+    }
+
+    pub fn list(&self, c: TaskConfig) -> &ResourceAvailabilityList {
+        &self.lists[c.index()]
+    }
+
+    pub fn list_mut(&mut self, c: TaskConfig) -> &mut ResourceAvailabilityList {
+        &mut self.lists[c.index()]
+    }
+
+    /// Containment query on the configuration's own list (the fast path).
+    pub fn query(&self, c: TaskConfig, s1: SimTime, s2: SimTime) -> Option<WindowRef> {
+        self.list(c).query_containment(s1, s2)
+    }
+
+    /// Earliest fit of `dur` within `[s1, deadline)` on the configuration's
+    /// list.
+    pub fn query_earliest_fit(
+        &self,
+        c: TaskConfig,
+        s1: SimTime,
+        deadline: SimTime,
+        dur: u64,
+    ) -> Option<(WindowRef, SimTime)> {
+        self.list(c).query_earliest_fit(s1, deadline, dur)
+    }
+
+    /// Record an allocation of `cores` over `[s1, s2)` across *all* lists
+    /// (the background write the paper performs after task allocation).
+    pub fn write_all(&mut self, s1: SimTime, s2: SimTime, cores: u32) {
+        for l in &mut self.lists {
+            l.write(s1, s2, cores);
+        }
+    }
+
+    /// Rebuild every list from the device's active workload — the paper's
+    /// preemption path: fresh fully-available lists, then replay each
+    /// remaining allocation as a write.
+    pub fn reconstruct<'a>(
+        &mut self,
+        cfg: &SystemConfig,
+        now: SimTime,
+        workload: impl Iterator<Item = &'a Allocation>,
+    ) {
+        *self = DeviceAvailability::new(cfg, now);
+        for a in workload {
+            if a.end > now {
+                self.write_all(a.start.max(now), a.end, a.cores);
+            }
+        }
+    }
+
+    /// Advance all lists to `now` (drop the past).
+    pub fn advance(&mut self, now: SimTime) {
+        for l in &mut self.lists {
+            l.advance(now);
+        }
+    }
+
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for l in &self.lists {
+            l.check_invariants()?;
+        }
+        Ok(())
+    }
+
+    /// Diagnostics: total windows across lists.
+    pub fn window_count(&self) -> usize {
+        self.lists.iter().map(|l| l.window_count()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::task::TaskConfig::*;
+
+    fn cfg() -> SystemConfig {
+        SystemConfig::default()
+    }
+
+    fn alloc(device: usize, config: TaskConfig, cores: u32, start: SimTime, end: SimTime) -> Allocation {
+        Allocation {
+            task: 0,
+            frame: 0,
+            device,
+            config,
+            cores,
+            start,
+            end,
+            deadline: end,
+            offloaded: false,
+            comm: None,
+        }
+    }
+
+    #[test]
+    fn track_counts_follow_core_ratio() {
+        let c = cfg();
+        let d = DeviceAvailability::new(&c, 0);
+        assert_eq!(d.list(HighPriority).track_count(), 1); // 4 cores / 4
+        assert_eq!(d.list(LowTwoCore).track_count(), 2); // 4 / 2
+        assert_eq!(d.list(LowFourCore).track_count(), 1); // 4 / 4
+    }
+
+    #[test]
+    fn cross_list_write_is_visible_everywhere() {
+        let c = cfg();
+        let mut d = DeviceAvailability::new(&c, 0);
+        let (s1, s2) = (1_000_000, 1_000_000 + c.lp2_proc());
+        // Allocate a two-core task.
+        d.write_all(s1, s2, 2);
+        d.check_invariants().unwrap();
+        // Four-core config sees the device as busy there (2 free < 4).
+        assert!(d.query(LowFourCore, s1, s1 + c.lp4_proc()).is_none());
+        // Two-core config still has its second track.
+        assert!(d.query(LowTwoCore, s1, s2).is_some());
+        // A second two-core task fills the device for four-core *and*
+        // two-core configs.
+        d.write_all(s1, s2, 2);
+        assert!(d.query(LowTwoCore, s1, s2).is_none());
+        // HP list (one 4-core track): any occupancy blocks it.
+        assert!(d.query(HighPriority, s1, s1 + c.hp_proc()).is_none());
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn two_two_core_tasks_fit_but_not_three() {
+        // The paper: "our devices have four cores, they can process at most
+        // two DNN tasks with a two-core allocation locally".
+        let c = cfg();
+        let mut d = DeviceAvailability::new(&c, 0);
+        let (s1, s2) = (0, c.lp2_proc());
+        for expected_some in [true, true, false] {
+            let q = d.query(LowTwoCore, s1, s2);
+            assert_eq!(q.is_some(), expected_some);
+            if let Some(r) = q {
+                d.list_mut(LowTwoCore).allocate_at(r, s1, s2);
+                // Mirror to the other lists, as the scheduler's write does.
+                d.list_mut(HighPriority).write(s1, s2, 2);
+                d.list_mut(LowFourCore).write(s1, s2, 2);
+            }
+        }
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn reconstruct_matches_incremental_writes() {
+        let c = cfg();
+        let mut incr = DeviceAvailability::new(&c, 0);
+        let allocs = vec![
+            alloc(0, LowTwoCore, 2, 1_000_000, 18_000_000),
+            alloc(0, HighPriority, 1, 2_000_000, 2_980_000),
+            alloc(0, LowFourCore, 4, 20_000_000, 32_000_000),
+        ];
+        for a in &allocs {
+            incr.write_all(a.start, a.end, a.cores);
+        }
+        let mut rebuilt = DeviceAvailability::new(&c, 0);
+        rebuilt.reconstruct(&c, 0, allocs.iter());
+        // Same availability answers on a probe grid. (Window layouts can
+        // differ in which track holds which hole; query answers must not.)
+        for t in (0..40_000_000).step_by(500_000) {
+            for &cf in &ALL_CONFIGS {
+                let dur = cf.proc_time(&c);
+                assert_eq!(
+                    incr.query(cf, t, t + dur).is_some(),
+                    rebuilt.query(cf, t, t + dur).is_some(),
+                    "mismatch at t={t} config={cf:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reconstruct_skips_completed_tasks() {
+        let c = cfg();
+        let mut d = DeviceAvailability::new(&c, 0);
+        let past = alloc(0, LowTwoCore, 2, 0, 1_000_000);
+        let future = alloc(0, LowFourCore, 4, 5_000_000, 17_000_000);
+        d.reconstruct(&c, 2_000_000, [past, future].iter());
+        d.check_invariants().unwrap();
+        // Past allocation ignored; future one blocks everything.
+        assert!(d.query(LowFourCore, 5_000_000, 5_000_000 + c.lp4_proc()).is_none());
+    }
+}

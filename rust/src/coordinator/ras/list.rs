@@ -1,0 +1,395 @@
+//! Resource availability lists (Section IV-A1).
+//!
+//! One list per (device, task configuration). A device with `n` cores and a
+//! configuration needing `j` cores gets `n / j` *tracks*; each track is a
+//! sorted vector of non-overlapping [`AvailWindow`]s. A capacity query is a
+//! *containment* search with early exit — the headline latency win over the
+//! overlapping-range scan of the WPS baseline — and every window in the list
+//! is guaranteed to satisfy the list's minimum core count and minimum
+//! duration, so the first hit can always host the task.
+
+
+use super::window::AvailWindow;
+use crate::time::{SimDuration, SimTime, INFINITY};
+
+/// Availability list for one (device, configuration) pair.
+#[derive(Debug, Clone)]
+pub struct ResourceAvailabilityList {
+    /// Minimum core capacity each track represents (j in the paper).
+    pub min_cores: u32,
+    /// Minimum duration a window must have to be kept (the configuration's
+    /// processing time — anything shorter could never host a task).
+    pub min_dur: SimDuration,
+    /// `n / j` tracks of sorted, non-overlapping windows.
+    pub tracks: Vec<Vec<AvailWindow>>,
+}
+
+/// Location of a window found by a containment query.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WindowRef {
+    pub track: usize,
+    pub index: usize,
+}
+
+impl ResourceAvailabilityList {
+    /// A fully-available list: every track is one window `[from, INFINITY)`.
+    pub fn fully_available(min_cores: u32, min_dur: SimDuration, track_count: usize, from: SimTime) -> Self {
+        Self {
+            min_cores,
+            min_dur,
+            tracks: vec![vec![AvailWindow::new(from, INFINITY)]; track_count],
+        }
+    }
+
+    pub fn track_count(&self) -> usize {
+        self.tracks.len()
+    }
+
+    /// Total number of windows across tracks (diagnostics / benches).
+    pub fn window_count(&self) -> usize {
+        self.tracks.iter().map(Vec::len).sum()
+    }
+
+    /// Containment query: find the first window (lowest track, earliest
+    /// window) that fully contains `[s1, s2)`. Early exit on the first hit.
+    ///
+    /// Within a track, windows are sorted and non-overlapping, so the only
+    /// candidate is the last window starting at or before `s1` — found by
+    /// binary search, O(log w) per track.
+    pub fn query_containment(&self, s1: SimTime, s2: SimTime) -> Option<WindowRef> {
+        for (ti, track) in self.tracks.iter().enumerate() {
+            if let Some(wi) = Self::track_containing(track, s1, s2) {
+                return Some(WindowRef { track: ti, index: wi });
+            }
+        }
+        None
+    }
+
+    /// Multi-containment query (Section IV-B2): *every* window that fully
+    /// contains `[s1, s2)` — at most one per track, since windows within a
+    /// track are disjoint. Used by low-priority batch scheduling, which
+    /// needs one window per task in the request.
+    pub fn query_all_containing(&self, s1: SimTime, s2: SimTime) -> Vec<WindowRef> {
+        let mut out = Vec::new();
+        for (ti, track) in self.tracks.iter().enumerate() {
+            if let Some(wi) = Self::track_containing(track, s1, s2) {
+                out.push(WindowRef { track: ti, index: wi });
+            }
+        }
+        out
+    }
+
+    /// Multi-fit query: for each track, the earliest window that can host
+    /// a `dur`-long slot positioned inside the placement window
+    /// `[s1, deadline)`. Because every window in the list is at least
+    /// `min_dur` (= the configuration's processing time) long, the first
+    /// window starting early enough is guaranteed to host the task — the
+    /// same early-exit property as pure containment, but it also finds
+    /// placements on tracks that free up part-way through the placement
+    /// window (essential for reallocating preempted tasks).
+    pub fn query_all_fits(&self, s1: SimTime, deadline: SimTime, dur: SimDuration) -> Vec<(WindowRef, SimTime)> {
+        let mut out = Vec::new();
+        for (ti, track) in self.tracks.iter().enumerate() {
+            let lo = track.partition_point(|w| w.t2 <= s1);
+            for (wi, w) in track.iter().enumerate().skip(lo) {
+                let start = w.t1.max(s1);
+                if start + dur <= w.t2 && start + dur <= deadline {
+                    out.push((WindowRef { track: ti, index: wi }, start));
+                    break; // earliest per track — early exit
+                }
+                if w.t1 + dur > deadline {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// Find the earliest slot of length `dur` that starts at or after `s1`
+    /// and finishes by `deadline`. Returns `(WindowRef, start)`. Used when
+    /// the desired placement window `[now, deadline)` is wider than the
+    /// processing time: the paper queries containment of the *placement*
+    /// window's start, then slides the task to the earliest fit.
+    pub fn query_earliest_fit(
+        &self,
+        s1: SimTime,
+        deadline: SimTime,
+        dur: SimDuration,
+    ) -> Option<(WindowRef, SimTime)> {
+        let mut best: Option<(WindowRef, SimTime)> = None;
+        for (ti, track) in self.tracks.iter().enumerate() {
+            // First window that ends after s1 (earlier ones are irrelevant).
+            let lo = track.partition_point(|w| w.t2 <= s1);
+            for (wi, w) in track.iter().enumerate().skip(lo) {
+                let start = w.t1.max(s1);
+                if start + dur <= w.t2 && start + dur <= deadline {
+                    match best {
+                        Some((_, b)) if b <= start => {}
+                        _ => best = Some((WindowRef { track: ti, index: wi }, start)),
+                    }
+                    break; // earliest in this track found; try other tracks
+                }
+                if w.t1 > deadline {
+                    break;
+                }
+            }
+        }
+        best
+    }
+
+    fn track_containing(track: &[AvailWindow], s1: SimTime, s2: SimTime) -> Option<usize> {
+        // Last window with t1 <= s1.
+        let idx = track.partition_point(|w| w.t1 <= s1);
+        if idx == 0 {
+            return None;
+        }
+        let wi = idx - 1;
+        if track[wi].contains(s1, s2) {
+            Some(wi)
+        } else {
+            None
+        }
+    }
+
+    /// Allocate `[s1, s2)` out of the window at `r`, bisecting it and
+    /// keeping remainders that satisfy `min_dur`. Panics in debug if the
+    /// window does not contain the slot (callers query first).
+    pub fn allocate_at(&mut self, r: WindowRef, s1: SimTime, s2: SimTime) {
+        let track = &mut self.tracks[r.track];
+        debug_assert!(track[r.index].contains(s1, s2), "allocate_at: slot not contained");
+        let (l, rw) = track[r.index].bisect(s1, s2, self.min_dur);
+        // Replace in place, preserving sort order.
+        track.remove(r.index);
+        let mut at = r.index;
+        if let Some(w) = l {
+            track.insert(at, w);
+            at += 1;
+        }
+        if let Some(w) = rw {
+            track.insert(at, w);
+        }
+    }
+
+    /// Cross-list write (Section IV-A1 trade-off): record that `cores`
+    /// cores are occupied over `[s1, s2)`. On a list whose tracks are
+    /// `min_cores` wide, that blocks `ceil(cores / min_cores)` tracks —
+    /// deliberately conservative (this is the "accuracy" the abstraction
+    /// gives up for speed).
+    ///
+    /// Tracks whose window fully contains the interval are preferred (they
+    /// fragment least); otherwise any overlapping availability is clipped.
+    pub fn write(&mut self, s1: SimTime, s2: SimTime, cores: u32) {
+        if s1 >= s2 {
+            return;
+        }
+        let mut need = cores.div_ceil(self.min_cores).min(self.tracks.len() as u32);
+        if need == 0 {
+            return;
+        }
+        // Pass 1: tracks with a window fully containing [s1, s2).
+        for ti in 0..self.tracks.len() {
+            if need == 0 {
+                break;
+            }
+            if let Some(wi) = Self::track_containing(&self.tracks[ti], s1, s2) {
+                self.allocate_at(WindowRef { track: ti, index: wi }, s1, s2);
+                need -= 1;
+            }
+        }
+        // Pass 2: clip any overlapping availability from remaining tracks.
+        if need > 0 {
+            for ti in 0..self.tracks.len() {
+                if need == 0 {
+                    break;
+                }
+                if self.clip_track(ti, s1, s2) {
+                    need -= 1;
+                }
+            }
+        }
+        // If still short, the device is simply out of capacity here — the
+        // remaining tracks had no availability in the interval anyway, so
+        // the conservative guarantee still holds.
+    }
+
+    /// Remove any overlap with `[s1, s2)` from track `ti`. Returns whether
+    /// anything was removed.
+    fn clip_track(&mut self, ti: usize, s1: SimTime, s2: SimTime) -> bool {
+        let min_dur = self.min_dur;
+        let track = &mut self.tracks[ti];
+        let mut touched = false;
+        let mut out: Vec<AvailWindow> = Vec::with_capacity(track.len() + 1);
+        for w in track.iter() {
+            if w.overlaps(s1, s2) {
+                touched = true;
+                let (l, r) = w.bisect(s1, s2, min_dur);
+                if let Some(lw) = l {
+                    out.push(lw);
+                }
+                if let Some(rw) = r {
+                    out.push(rw);
+                }
+            } else {
+                out.push(*w);
+            }
+        }
+        if touched {
+            *track = out;
+        }
+        touched
+    }
+
+    /// Drop windows entirely in the past and clamp the current one to `now`
+    /// (keeping clamped windows even if they fall under `min_dur` would be
+    /// wrong — they are dropped like any other fragment).
+    pub fn advance(&mut self, now: SimTime) {
+        for track in &mut self.tracks {
+            track.retain_mut(|w| {
+                if w.t2 <= now {
+                    return false;
+                }
+                if w.t1 < now {
+                    w.t1 = now;
+                }
+                w.duration() >= self.min_dur
+            });
+        }
+    }
+
+    /// Invariant check used by tests and proptests: windows sorted,
+    /// non-overlapping, all at least `min_dur` long.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for (ti, track) in self.tracks.iter().enumerate() {
+            for (i, w) in track.iter().enumerate() {
+                if w.t1 >= w.t2 {
+                    return Err(format!("track {ti} window {i} is empty/inverted: [{}, {})", w.t1, w.t2));
+                }
+                if w.duration() < self.min_dur {
+                    return Err(format!(
+                        "track {ti} window {i} shorter than min_dur: {} < {}",
+                        w.duration(),
+                        self.min_dur
+                    ));
+                }
+                if i > 0 && track[i - 1].t2 > w.t1 {
+                    return Err(format!("track {ti} windows {i}-1 and {i} overlap or are unsorted"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn list2() -> ResourceAvailabilityList {
+        // Two tracks of 2 cores each (a 4-core device, two-core config),
+        // min duration 100.
+        ResourceAvailabilityList::fully_available(2, 100, 2, 0)
+    }
+
+    #[test]
+    fn fresh_list_contains_everything() {
+        let l = list2();
+        let r = l.query_containment(0, 1_000_000).unwrap();
+        assert_eq!(r, WindowRef { track: 0, index: 0 });
+        l.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn allocate_bisects_and_query_skips_hole() {
+        let mut l = list2();
+        let r = l.query_containment(1000, 2000).unwrap();
+        l.allocate_at(r, 1000, 2000);
+        l.check_invariants().unwrap();
+        // The hole on track 0 forces the query onto track 1.
+        let r2 = l.query_containment(1000, 2000).unwrap();
+        assert_eq!(r2.track, 1);
+        // Either side of the hole still available on track 0.
+        assert_eq!(l.query_containment(0, 1000).unwrap().track, 0);
+        assert_eq!(l.query_containment(2000, 5000).unwrap().track, 0);
+    }
+
+    #[test]
+    fn exhausting_all_tracks_returns_none() {
+        let mut l = list2();
+        for _ in 0..2 {
+            let r = l.query_containment(1000, 2000).unwrap();
+            l.allocate_at(r, 1000, 2000);
+        }
+        assert!(l.query_containment(1000, 2000).is_none());
+        // But a slot elsewhere still works.
+        assert!(l.query_containment(2000, 3000).is_some());
+        l.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn write_blocks_ceil_cores_over_min() {
+        // 4 one-core tracks (HP list): a 2-core task blocks 2 tracks.
+        let mut l = ResourceAvailabilityList::fully_available(1, 10, 4, 0);
+        l.write(100, 200, 2);
+        let free: usize = l
+            .tracks
+            .iter()
+            .filter(|t| ResourceAvailabilityList::track_containing(t, 100, 200).is_some())
+            .count();
+        assert_eq!(free, 2);
+        l.check_invariants().unwrap();
+
+        // On a 1-track 4-core list, a 2-core task still blocks the whole
+        // track (conservative rounding — the paper's accuracy trade-off).
+        let mut l4 = ResourceAvailabilityList::fully_available(4, 10, 1, 0);
+        l4.write(100, 200, 2);
+        assert!(l4.query_containment(100, 200).is_none());
+        assert!(l4.query_containment(200, 300).is_some());
+    }
+
+    #[test]
+    fn write_clips_partial_overlaps() {
+        let mut l = ResourceAvailabilityList::fully_available(2, 100, 1, 0);
+        // First occupy [1000, 2000) so the track has a hole.
+        l.write(1000, 2000, 2);
+        // Now write an interval straddling the hole's right edge; no window
+        // fully contains it, so pass 2 must clip.
+        l.write(1500, 2500, 2);
+        l.check_invariants().unwrap();
+        assert!(l.query_containment(2000, 2400).is_none());
+        assert!(l.query_containment(2500, 3000).is_some());
+    }
+
+    #[test]
+    fn min_duration_fragments_are_dropped() {
+        let mut l = ResourceAvailabilityList::fully_available(2, 1000, 1, 0);
+        // Leaves a 500-long left fragment, below min_dur 1000 — dropped.
+        l.write(500, 5000, 2);
+        assert!(l.query_containment(0, 400).is_none());
+        l.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn advance_clamps_and_drops() {
+        let mut l = ResourceAvailabilityList::fully_available(2, 100, 2, 0);
+        l.write(0, 1000, 4); // both tracks blocked until 1000
+        l.advance(500);
+        l.check_invariants().unwrap();
+        assert!(l.query_containment(500, 600).is_none());
+        assert!(l.query_containment(1000, 2000).is_some());
+        l.advance(1500);
+        for track in &l.tracks {
+            assert!(track.iter().all(|w| w.t1 >= 1500));
+        }
+    }
+
+    #[test]
+    fn earliest_fit_slides_past_busy_region() {
+        let mut l = ResourceAvailabilityList::fully_available(2, 100, 1, 0);
+        l.write(0, 1000, 4);
+        let (r, start) = l.query_earliest_fit(0, 10_000, 500).unwrap();
+        assert_eq!(start, 1000);
+        assert_eq!(r.track, 0);
+        // Deadline too tight: no fit.
+        assert!(l.query_earliest_fit(0, 1400, 500).is_none());
+    }
+}

@@ -1,0 +1,10 @@
+//! The resource availability abstraction model (the paper's Section IV-A1):
+//! computational capacity as guaranteed periods of availability.
+
+pub mod device_state;
+pub mod list;
+pub mod window;
+
+pub use device_state::DeviceAvailability;
+pub use list::{ResourceAvailabilityList, WindowRef};
+pub use window::AvailWindow;

@@ -1,0 +1,137 @@
+//! Availability windows: half-open periods `[t1, t2)` during which a track
+//! (a `min_cores`-wide slice of a device) is guaranteed free.
+//!
+//! Fig. 2 of the paper: allocating a slot inside a window *bisects* it into
+//! up to two remainder windows (left / right), which are only kept if they
+//! still satisfy the list's minimum-duration requirement — this is what
+//! guarantees that any window found by a containment query can actually
+//! host a task of that configuration.
+
+
+use crate::time::{SimDuration, SimTime};
+
+/// A guaranteed period of availability `[t1, t2)` on one track.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AvailWindow {
+    pub t1: SimTime,
+    pub t2: SimTime,
+}
+
+impl AvailWindow {
+    pub fn new(t1: SimTime, t2: SimTime) -> Self {
+        debug_assert!(t1 <= t2, "window must be ordered: [{t1}, {t2})");
+        Self { t1, t2 }
+    }
+
+    #[inline]
+    pub fn duration(&self) -> SimDuration {
+        self.t2 - self.t1
+    }
+
+    /// Does this window fully contain `[s1, s2)`? (The containment query.)
+    #[inline]
+    pub fn contains(&self, s1: SimTime, s2: SimTime) -> bool {
+        self.t1 <= s1 && s2 <= self.t2
+    }
+
+    /// Does this window overlap `[s1, s2)` at all?
+    #[inline]
+    pub fn overlaps(&self, s1: SimTime, s2: SimTime) -> bool {
+        self.t1 < s2 && s1 < self.t2
+    }
+
+    /// Remove `[s1, s2)` from this window, producing the 0–2 remainder
+    /// windows (left-hand side, right-hand side). Remainders shorter than
+    /// `min_dur` are dropped — they could never host a task of this
+    /// configuration, and keeping them would break the guarantee that any
+    /// window in the list can accommodate a task.
+    ///
+    /// `[s1, s2)` need not be contained: it is clipped to the window first
+    /// (needed by the cross-list write path, where the allocated slot was
+    /// chosen on a *different* configuration's list).
+    pub fn bisect(&self, s1: SimTime, s2: SimTime, min_dur: SimDuration) -> (Option<AvailWindow>, Option<AvailWindow>) {
+        let s1 = s1.max(self.t1);
+        let s2 = s2.min(self.t2);
+        if s1 >= s2 {
+            // No actual overlap: the window survives whole on one side.
+            // Caller should have checked overlaps(); treat as "keep all".
+            return (Some(*self), None);
+        }
+        let left = if s1 > self.t1 && s1 - self.t1 >= min_dur {
+            Some(AvailWindow::new(self.t1, s1))
+        } else {
+            None
+        };
+        let right = if s2 < self.t2 && self.t2 - s2 >= min_dur {
+            Some(AvailWindow::new(s2, self.t2))
+        } else {
+            None
+        };
+        (left, right)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn containment_and_overlap() {
+        let w = AvailWindow::new(100, 200);
+        assert!(w.contains(100, 200));
+        assert!(w.contains(120, 180));
+        assert!(!w.contains(99, 150));
+        assert!(!w.contains(150, 201));
+        assert!(w.overlaps(199, 300));
+        assert!(!w.overlaps(200, 300)); // half-open
+        assert!(!w.overlaps(0, 100));
+    }
+
+    #[test]
+    fn bisect_middle_keeps_both_sides() {
+        let w = AvailWindow::new(0, 100);
+        let (l, r) = w.bisect(40, 60, 10);
+        assert_eq!(l, Some(AvailWindow::new(0, 40)));
+        assert_eq!(r, Some(AvailWindow::new(60, 100)));
+    }
+
+    #[test]
+    fn bisect_drops_fragments_below_min_duration() {
+        let w = AvailWindow::new(0, 100);
+        let (l, r) = w.bisect(5, 95, 10);
+        assert_eq!(l, None); // 5 < 10
+        assert_eq!(r, None); // 5 < 10
+    }
+
+    #[test]
+    fn bisect_aligned_edges_produce_no_fragments() {
+        let w = AvailWindow::new(0, 100);
+        let (l, r) = w.bisect(0, 50, 1);
+        assert_eq!(l, None);
+        assert_eq!(r, Some(AvailWindow::new(50, 100)));
+        let (l, r) = w.bisect(50, 100, 1);
+        assert_eq!(l, Some(AvailWindow::new(0, 50)));
+        assert_eq!(r, None);
+    }
+
+    #[test]
+    fn bisect_clips_uncontained_slot() {
+        let w = AvailWindow::new(100, 200);
+        // Slot starts before the window: only the right remainder exists.
+        let (l, r) = w.bisect(50, 150, 10);
+        assert_eq!(l, None);
+        assert_eq!(r, Some(AvailWindow::new(150, 200)));
+        // Slot entirely outside: window survives.
+        let (l, r) = w.bisect(300, 400, 10);
+        assert_eq!(l, Some(w));
+        assert_eq!(r, None);
+    }
+
+    #[test]
+    fn bisect_full_cover_removes_window() {
+        let w = AvailWindow::new(100, 200);
+        let (l, r) = w.bisect(100, 200, 1);
+        assert_eq!(l, None);
+        assert_eq!(r, None);
+    }
+}

@@ -1,0 +1,273 @@
+//! Scheduling algorithms (Section IV-B).
+//!
+//! Two schedulers implement the common [`Scheduler`] trait:
+//!
+//! * [`ras_sched::RasScheduler`] — the paper's contribution: containment
+//!   queries on resource-availability lists + the discretised network link
+//!   + dynamic bandwidth estimation.
+//! * [`wps::WpsScheduler`] — the authors' prior "weighted pre-emption
+//!   scheduler" baseline: exact per-device task lists searched with
+//!   overlapping-range scans. More accurate placement, more work per
+//!   decision.
+//!
+//! Every scheduling entry point returns the decision *and* an operation
+//! count (`ops`): the number of elementary data-structure steps the call
+//! performed (windows visited, overlap checks, write/bisect operations).
+//! The DES engine converts ops to virtual scheduling latency through the
+//! configured cost model, so the accuracy-vs-performance feedback loop the
+//! paper studies — slow scheduling delays task starts and burns deadline
+//! slack — is driven by the real algorithmic costs of the two
+//! implementations. Criterion benches additionally measure raw wall-clock
+//! for the §Perf pass.
+
+pub mod multi;
+pub mod ras_sched;
+pub mod wps;
+
+use std::collections::HashMap;
+
+
+use crate::coordinator::task::{Allocation, DeviceId, Task, TaskId};
+use crate::time::SimTime;
+
+/// Operation count for one scheduling call.
+pub type Ops = u64;
+
+/// Outcome of a high-priority scheduling request.
+#[derive(Debug, Clone)]
+pub enum HpOutcome {
+    /// Task fits locally without disturbing anyone.
+    Allocated { alloc: Allocation, ops: Ops },
+    /// No window on the source device: the scheduler performed preemption
+    /// (Section IV-B3). `victims` were evicted and should re-enter
+    /// low-priority scheduling once the preemption completes.
+    Preempted {
+        alloc: Allocation,
+        victims: Vec<Allocation>,
+        ops: Ops,
+    },
+    /// Preemption could not free the window either (no overlapping
+    /// low-priority task to evict, or only non-preemptable high-priority
+    /// work overlaps). Any low-priority tasks that *were* evicted before
+    /// the attempt gave up still re-enter low-priority scheduling.
+    Rejected { victims: Vec<Allocation>, ops: Ops },
+}
+
+/// Outcome of a low-priority batch scheduling request. The paper treats
+/// the request atomically: if fewer windows are found than tasks, the
+/// whole request fails.
+#[derive(Debug, Clone)]
+pub enum LpOutcome {
+    Allocated { allocs: Vec<Allocation>, ops: Ops },
+    Rejected { ops: Ops },
+}
+
+/// The scheduling interface the discrete-event engine drives.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+
+    /// Schedule a high-priority task (always local to its source device).
+    fn schedule_high(&mut self, now: SimTime, task: &Task) -> HpOutcome;
+
+    /// Schedule a batch of low-priority DNN tasks (1–4 per request).
+    /// `realloc` marks re-entry of preempted tasks (tracked separately in
+    /// the paper's Fig. 4/5).
+    fn schedule_low(&mut self, now: SimTime, tasks: &[Task], realloc: bool) -> LpOutcome;
+
+    /// Task finished (free its resources from the scheduler's state).
+    fn on_complete(&mut self, now: SimTime, task: TaskId);
+
+    /// Task missed its deadline and was abandoned.
+    fn on_violation(&mut self, now: SimTime, task: TaskId);
+
+    /// A bandwidth probe round produced a new estimate (bits/s). Returns
+    /// the ops spent updating internal structures (the RAS link rebuild is
+    /// *not* free — Fig. 6/7 hinge on this).
+    fn on_bandwidth_update(&mut self, now: SimTime, bps: f64) -> Ops;
+
+    /// Current bandwidth estimate used for transfer planning (bits/s).
+    fn bandwidth_estimate(&self) -> f64;
+
+    /// Access the committed allocation table (engine reads placements).
+    fn state(&self) -> &WorkloadState;
+
+    /// Diagnostic counters: low-priority rejection reasons
+    /// `[no viable config, link capacity, insufficient windows, commit]`.
+    fn reject_diag(&self) -> [u64; 4] {
+        [0; 4]
+    }
+}
+
+/// Exact allocation bookkeeping shared by both schedulers: WPS searches
+/// this directly; RAS keeps it for preemption victim selection and
+/// availability-list reconstruction.
+#[derive(Debug, Clone, Default)]
+pub struct WorkloadState {
+    pub allocations: HashMap<TaskId, Allocation>,
+    /// Task ids allocated to each device.
+    pub by_device: Vec<Vec<TaskId>>,
+}
+
+impl WorkloadState {
+    pub fn new(n_devices: usize) -> Self {
+        Self {
+            allocations: HashMap::new(),
+            by_device: vec![Vec::new(); n_devices],
+        }
+    }
+
+    pub fn insert(&mut self, a: Allocation) {
+        self.by_device[a.device].push(a.task);
+        self.allocations.insert(a.task, a);
+    }
+
+    pub fn remove(&mut self, task: TaskId) -> Option<Allocation> {
+        let a = self.allocations.remove(&task)?;
+        if let Some(pos) = self.by_device[a.device].iter().position(|&t| t == task) {
+            self.by_device[a.device].swap_remove(pos);
+        }
+        Some(a)
+    }
+
+    pub fn get(&self, task: TaskId) -> Option<&Allocation> {
+        self.allocations.get(&task)
+    }
+
+    /// Allocations on `device`, in arbitrary order.
+    pub fn device_allocs(&self, device: DeviceId) -> impl Iterator<Item = &Allocation> {
+        self.by_device[device].iter().filter_map(|t| self.allocations.get(t))
+    }
+
+    /// Exact peak core usage on `device` over `[t1, t2)` — the ground
+    /// truth both schedulers must respect. Used by tests to verify no
+    /// scheduler ever over-subscribes a device, and by WPS as its search
+    /// primitive. Returns (peak_cores, overlap_checks_performed).
+    pub fn peak_usage(&self, device: DeviceId, t1: SimTime, t2: SimTime) -> (u32, Ops) {
+        // Hot path for the WPS baseline (called per candidate-start per
+        // device per request): keep the event list on the stack for the
+        // common case (≤16 overlapping allocations) and fall back to the
+        // heap only beyond that. See EXPERIMENTS.md §Perf.
+        const INLINE: usize = 32;
+        let mut inline: [(SimTime, i64); INLINE] = [(0, 0); INLINE];
+        let mut n = 0usize;
+        let mut spill: Vec<(SimTime, i64)> = Vec::new();
+        let mut ops: Ops = 0;
+        let push = |ev: (SimTime, i64), n: &mut usize, spill: &mut Vec<(SimTime, i64)>, inline: &mut [(SimTime, i64); INLINE]| {
+            if *n < INLINE {
+                inline[*n] = ev;
+                *n += 1;
+            } else {
+                spill.push(ev);
+            }
+        };
+        for a in self.device_allocs(device) {
+            ops += 1;
+            if a.overlaps(t1, t2) {
+                push((a.start.max(t1), a.cores as i64), &mut n, &mut spill, &mut inline);
+                push((a.end.min(t2), -(a.cores as i64)), &mut n, &mut spill, &mut inline);
+            }
+        }
+        let events: &mut [(SimTime, i64)] = if spill.is_empty() {
+            &mut inline[..n]
+        } else {
+            spill.extend_from_slice(&inline[..n]);
+            &mut spill[..]
+        };
+        events.sort_unstable();
+        let mut cur = 0i64;
+        let mut peak = 0i64;
+        for &(_, d) in events.iter() {
+            cur += d;
+            peak = peak.max(cur);
+        }
+        (peak as u32, ops + 1)
+    }
+
+    pub fn len(&self) -> usize {
+        self.allocations.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.allocations.is_empty()
+    }
+}
+
+/// Selects the preemption victim per the paper: among low-priority
+/// allocations on `device` overlapping `[t1, t2)`, the one with the
+/// *farthest* deadline. Returns (victim_task, ops).
+pub fn select_victim(state: &WorkloadState, device: DeviceId, t1: SimTime, t2: SimTime) -> (Option<TaskId>, Ops) {
+    let mut ops = 0;
+    let mut best: Option<(TaskId, SimTime)> = None;
+    for a in state.device_allocs(device) {
+        ops += 1;
+        if a.config.priority() == crate::coordinator::task::Priority::Low && a.overlaps(t1, t2) {
+            match best {
+                Some((_, d)) if d >= a.deadline => {}
+                _ => best = Some((a.task, a.deadline)),
+            }
+        }
+    }
+    (best.map(|(t, _)| t), ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::task::TaskConfig;
+
+    fn alloc(task: TaskId, device: DeviceId, cores: u32, start: SimTime, end: SimTime, deadline: SimTime, config: TaskConfig) -> Allocation {
+        Allocation {
+            task,
+            frame: 0,
+            device,
+            config,
+            cores,
+            start,
+            end,
+            deadline,
+            offloaded: false,
+            comm: None,
+        }
+    }
+
+    #[test]
+    fn workload_insert_remove() {
+        let mut w = WorkloadState::new(2);
+        w.insert(alloc(1, 0, 2, 0, 100, 100, TaskConfig::LowTwoCore));
+        w.insert(alloc(2, 1, 4, 0, 100, 100, TaskConfig::LowFourCore));
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.device_allocs(0).count(), 1);
+        let a = w.remove(1).unwrap();
+        assert_eq!(a.task, 1);
+        assert!(w.remove(1).is_none());
+        assert_eq!(w.device_allocs(0).count(), 0);
+    }
+
+    #[test]
+    fn peak_usage_stacks_concurrent_tasks() {
+        let mut w = WorkloadState::new(1);
+        w.insert(alloc(1, 0, 2, 0, 100, 100, TaskConfig::LowTwoCore));
+        w.insert(alloc(2, 0, 2, 50, 150, 150, TaskConfig::LowTwoCore));
+        let (peak, _) = w.peak_usage(0, 0, 200);
+        assert_eq!(peak, 4);
+        let (peak, _) = w.peak_usage(0, 0, 50);
+        assert_eq!(peak, 2);
+        let (peak, _) = w.peak_usage(0, 100, 150);
+        assert_eq!(peak, 2);
+        let (peak, _) = w.peak_usage(0, 150, 300);
+        assert_eq!(peak, 0);
+    }
+
+    #[test]
+    fn victim_is_farthest_deadline_low_priority_overlap() {
+        let mut w = WorkloadState::new(1);
+        w.insert(alloc(1, 0, 2, 0, 100, 500, TaskConfig::LowTwoCore));
+        w.insert(alloc(2, 0, 2, 0, 100, 900, TaskConfig::LowTwoCore));
+        w.insert(alloc(3, 0, 1, 0, 100, 2000, TaskConfig::HighPriority)); // HP: never a victim
+        w.insert(alloc(4, 0, 2, 200, 300, 9999, TaskConfig::LowTwoCore)); // no overlap
+        let (v, _) = select_victim(&w, 0, 0, 100);
+        assert_eq!(v, Some(2));
+        let (v, _) = select_victim(&w, 0, 150, 180);
+        assert_eq!(v, None);
+    }
+}

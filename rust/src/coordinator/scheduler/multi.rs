@@ -1,0 +1,215 @@
+//! Contextual multi-scheduler — the paper's *future work* (Section VII):
+//! "utilising a more accurate approach under lightly loaded conditions and
+//! switching to light-weight scheduling abstraction models in times of
+//! higher network load."
+//!
+//! Implemented here as an ablation: requests are routed to an inner WPS
+//! while the live workload is below `switch_threshold` allocations, and to
+//! an inner RAS above it. Both inner schedulers see *every* state-changing
+//! event (completions, violations, bandwidth updates) so whichever is
+//! active always works from a current view; allocations are tracked by the
+//! scheduler that made them, and the merged exact state is exposed for the
+//! engine.
+
+use super::ras_sched::RasScheduler;
+use super::wps::WpsScheduler;
+use super::{HpOutcome, LpOutcome, Ops, Scheduler, WorkloadState};
+use crate::config::SystemConfig;
+use crate::coordinator::task::{Task, TaskId};
+use crate::time::SimTime;
+
+/// Which inner scheduler handled a task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Owner {
+    Wps,
+    Ras,
+}
+
+/// Load-adaptive composite scheduler.
+pub struct MultiScheduler {
+    wps: WpsScheduler,
+    ras: RasScheduler,
+    owners: std::collections::HashMap<TaskId, Owner>,
+    merged: WorkloadState,
+    /// Switch to RAS when live allocations reach this count.
+    pub switch_threshold: usize,
+    /// Diagnostics: requests served by each inner scheduler.
+    pub wps_requests: u64,
+    pub ras_requests: u64,
+}
+
+impl MultiScheduler {
+    pub fn new(cfg: &SystemConfig, now: SimTime, baseline_bps: f64, switch_threshold: usize) -> Self {
+        Self {
+            wps: WpsScheduler::new(cfg, now, baseline_bps),
+            ras: RasScheduler::new(cfg, now, baseline_bps),
+            owners: std::collections::HashMap::new(),
+            merged: WorkloadState::new(cfg.n_devices),
+            switch_threshold,
+            wps_requests: 0,
+            ras_requests: 0,
+        }
+    }
+
+    fn use_ras(&self) -> bool {
+        self.merged.len() >= self.switch_threshold
+    }
+
+    /// Mirror an allocation made by `owner` into the other scheduler's
+    /// state so both views stay consistent.
+    fn record(&mut self, owner: Owner, allocs: &[crate::coordinator::task::Allocation]) {
+        for a in allocs {
+            self.owners.insert(a.task, owner);
+            self.merged.insert(a.clone());
+            // The passive scheduler must also see the occupancy, or its
+            // next activation would double-book the device.
+            match owner {
+                Owner::Wps => self.ras.mirror_external(a),
+                Owner::Ras => self.wps.mirror_external(a),
+            }
+        }
+    }
+
+    fn drop_task(&mut self, now: SimTime, task: TaskId) {
+        self.owners.remove(&task);
+        self.merged.remove(task);
+        self.wps.on_complete(now, task);
+        self.ras.on_complete(now, task);
+    }
+}
+
+impl Scheduler for MultiScheduler {
+    fn name(&self) -> &'static str {
+        "MULTI"
+    }
+
+    fn schedule_high(&mut self, now: SimTime, task: &Task) -> HpOutcome {
+        let (owner, out) = if self.use_ras() {
+            self.ras_requests += 1;
+            (Owner::Ras, self.ras.schedule_high(now, task))
+        } else {
+            self.wps_requests += 1;
+            (Owner::Wps, self.wps.schedule_high(now, task))
+        };
+        match &out {
+            HpOutcome::Allocated { alloc, .. } => self.record(owner, std::slice::from_ref(alloc)),
+            HpOutcome::Preempted { alloc, victims, .. } => {
+                for v in victims {
+                    self.drop_task(now, v.task);
+                }
+                self.record(owner, std::slice::from_ref(alloc));
+            }
+            HpOutcome::Rejected { victims, .. } => {
+                for v in victims {
+                    self.drop_task(now, v.task);
+                }
+            }
+        }
+        out
+    }
+
+    fn schedule_low(&mut self, now: SimTime, tasks: &[Task], realloc: bool) -> LpOutcome {
+        let (owner, out) = if self.use_ras() {
+            self.ras_requests += 1;
+            (Owner::Ras, self.ras.schedule_low(now, tasks, realloc))
+        } else {
+            self.wps_requests += 1;
+            (Owner::Wps, self.wps.schedule_low(now, tasks, realloc))
+        };
+        if let LpOutcome::Allocated { allocs, .. } = &out {
+            let allocs = allocs.clone();
+            self.record(owner, &allocs);
+        }
+        out
+    }
+
+    fn on_complete(&mut self, now: SimTime, task: TaskId) {
+        self.drop_task(now, task);
+    }
+
+    fn on_violation(&mut self, now: SimTime, task: TaskId) {
+        self.owners.remove(&task);
+        self.merged.remove(task);
+        self.wps.on_violation(now, task);
+        self.ras.on_violation(now, task);
+    }
+
+    fn on_bandwidth_update(&mut self, now: SimTime, bps: f64) -> Ops {
+        self.wps.on_bandwidth_update(now, bps) + self.ras.on_bandwidth_update(now, bps)
+    }
+
+    fn bandwidth_estimate(&self) -> f64 {
+        if self.use_ras() {
+            self.ras.bandwidth_estimate()
+        } else {
+            self.wps.bandwidth_estimate()
+        }
+    }
+
+    fn state(&self) -> &WorkloadState {
+        &self.merged
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::task::DeviceId;
+
+    fn cfg() -> SystemConfig {
+        SystemConfig::default()
+    }
+
+    fn lp_batch(base: TaskId, n: usize, source: DeviceId, now: SimTime, c: &SystemConfig) -> Vec<Task> {
+        let deadline = now + c.frame_period();
+        (0..n as u64)
+            .map(|i| Task::low(base + i, base, source, now, deadline, c))
+            .collect()
+    }
+
+    #[test]
+    fn light_load_routes_to_wps_heavy_to_ras() {
+        let c = cfg();
+        let mut s = MultiScheduler::new(&c, 0, c.link_bps, 3);
+        // First batch (empty state) goes to WPS.
+        let b1 = lp_batch(1, 3, 0, 0, &c);
+        assert!(matches!(s.schedule_low(0, &b1, false), LpOutcome::Allocated { .. }));
+        assert_eq!(s.wps_requests, 1);
+        assert_eq!(s.ras_requests, 0);
+        // State now ≥ threshold: next request goes to RAS.
+        let b2 = lp_batch(11, 2, 1, 0, &c);
+        let _ = s.schedule_low(0, &b2, false);
+        assert_eq!(s.ras_requests, 1);
+    }
+
+    #[test]
+    fn completion_returns_control_to_wps() {
+        let c = cfg();
+        let mut s = MultiScheduler::new(&c, 0, c.link_bps, 2);
+        let b = lp_batch(1, 2, 0, 0, &c);
+        assert!(matches!(s.schedule_low(0, &b, false), LpOutcome::Allocated { .. }));
+        assert!(s.use_ras());
+        s.on_complete(1_000, 1);
+        s.on_complete(1_000, 2);
+        assert!(!s.use_ras());
+    }
+
+    #[test]
+    fn no_double_booking_across_inner_schedulers() {
+        let c = cfg();
+        let mut s = MultiScheduler::new(&c, 0, c.link_bps, 3);
+        let mut id = 1u64;
+        for round in 0..5u64 {
+            let now = round * 3_000_000;
+            let batch = lp_batch(id, 3, (round % 4) as usize, now, &c);
+            id += 3;
+            let _ = s.schedule_low(now, &batch, false);
+        }
+        for d in 0..c.n_devices {
+            for t in (0..40_000_000u64).step_by(500_000) {
+                let (peak, _) = s.state().peak_usage(d, t, t + 500_000);
+                assert!(peak <= c.cores_per_device, "device {d} oversubscribed at {t}");
+            }
+        }
+    }
+}

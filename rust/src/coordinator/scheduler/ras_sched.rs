@@ -1,0 +1,589 @@
+//! The paper's scheduler (RAS): containment queries over resource
+//! availability lists, a discretised network link, and dynamic bandwidth
+//! estimation (Sections IV-A and IV-B).
+
+use super::{select_victim, HpOutcome, LpOutcome, Ops, Scheduler, WorkloadState};
+use crate::config::SystemConfig;
+use crate::coordinator::netlink::{CommTask, DiscretisedLink};
+use crate::coordinator::ras::{DeviceAvailability, WindowRef};
+use crate::coordinator::task::{Allocation, DeviceId, Task, TaskConfig, TaskId};
+use crate::time::SimTime;
+use crate::util::Rng;
+
+/// The resource-availability abstraction scheduler.
+pub struct RasScheduler {
+    cfg: SystemConfig,
+    devices: Vec<DeviceAvailability>,
+    link: DiscretisedLink,
+    state: WorkloadState,
+    /// Current bandwidth estimate (bits/s) — updated by probe rounds.
+    bps: f64,
+    rng: Rng,
+    /// Cumulative link rebuilds (Fig. 6/7 diagnostics).
+    pub link_rebuilds: u64,
+    /// Items dropped during cascades.
+    pub cascade_dropped: u64,
+    /// Rejection diagnostics: [no viable config, link capacity,
+    /// insufficient windows, commit-time failure].
+    pub reject_reasons: [u64; 4],
+}
+
+impl RasScheduler {
+    pub fn new(cfg: &SystemConfig, now: SimTime, baseline_bps: f64) -> Self {
+        let unit = cfg.transfer_unit(baseline_bps);
+        Self {
+            devices: (0..cfg.n_devices).map(|_| DeviceAvailability::new(cfg, now)).collect(),
+            link: DiscretisedLink::build(now, unit, cfg.base_buckets, cfg.exp_buckets),
+            state: WorkloadState::new(cfg.n_devices),
+            bps: baseline_bps,
+            rng: Rng::seed_from_u64(cfg.seed ^ 0x5241_53), // "RAS"
+            link_rebuilds: 0,
+            cascade_dropped: 0,
+            reject_reasons: [0; 4],
+            cfg: cfg.clone(),
+        }
+    }
+
+    /// Viable low-priority configurations in preference order
+    /// (Section IV-B2): two cores first (conservative), four cores when
+    /// two would violate the deadline — and, per the compensation the
+    /// congestion experiments observe (Table II), also as a *fallback*
+    /// when the two-core attempt finds no placement: a shorter processing
+    /// time widens the allocation window that long transfers eat into.
+    fn viable_configs(&self, now: SimTime, deadline: SimTime) -> Vec<TaskConfig> {
+        let mut out = Vec::with_capacity(2);
+        if now + self.cfg.lp2_proc() <= deadline {
+            out.push(TaskConfig::LowTwoCore);
+        }
+        if now + self.cfg.lp4_proc() <= deadline {
+            out.push(TaskConfig::LowFourCore);
+        }
+        out
+    }
+
+    fn commit(
+        &mut self,
+        device: DeviceId,
+        config: TaskConfig,
+        r: WindowRef,
+        task: &Task,
+        start: SimTime,
+        end: SimTime,
+        comm: Option<(SimTime, SimTime)>,
+    ) -> (Allocation, Ops) {
+        let cores = config.cores(&self.cfg);
+        let dev = &mut self.devices[device];
+        dev.list_mut(config).allocate_at(r, start, end);
+        // Background cross-list write (the paper's post-allocation write).
+        let mut ops: Ops = 2;
+        for c in crate::coordinator::task::ALL_CONFIGS {
+            if c != config {
+                dev.list_mut(c).write(start, end, cores);
+                ops += dev.list(c).track_count() as Ops;
+            }
+        }
+        let alloc = Allocation {
+            task: task.id,
+            frame: task.frame,
+            device,
+            config,
+            cores,
+            start,
+            end,
+            deadline: task.deadline,
+            offloaded: device != task.source,
+            comm,
+        };
+        self.state.insert(alloc.clone());
+        (alloc, ops)
+    }
+
+    /// Roll a failed batch back: drop the already-committed allocations and
+    /// reconstruct the touched devices (windows cannot be re-inserted).
+    fn rollback(&mut self, committed: &[Allocation], now: SimTime) -> Ops {
+        let mut ops: Ops = 0;
+        let mut touched: Vec<DeviceId> = Vec::new();
+        for a in committed {
+            self.state.remove(a.task);
+            self.link.remove_task(a.task);
+            if !touched.contains(&a.device) {
+                touched.push(a.device);
+            }
+            ops += 2;
+        }
+        for d in touched {
+            ops += self.reconstruct_device(d, now);
+        }
+        ops
+    }
+
+    fn reconstruct_device(&mut self, device: DeviceId, now: SimTime) -> Ops {
+        let allocs: Vec<Allocation> = self.state.device_allocs(device).cloned().collect();
+        let n = allocs.len() as Ops;
+        self.devices[device].reconstruct(&self.cfg, now, allocs.iter());
+        // Cost: one fresh list set + one cross-list write per live task.
+        n * 7 + 7
+    }
+
+    /// Record an allocation decided by another scheduler (used by the
+    /// contextual multi-scheduler ablation): occupancy is written across
+    /// the device's availability lists and the exact state, without going
+    /// through this scheduler's own placement logic.
+    pub fn mirror_external(&mut self, a: &Allocation) {
+        self.devices[a.device].write_all(a.start, a.end, a.cores);
+        self.state.insert(a.clone());
+    }
+
+    /// Expose internals for white-box tests/benches.
+    pub fn device_availability(&self, d: DeviceId) -> &DeviceAvailability {
+        &self.devices[d]
+    }
+
+    pub fn link(&self) -> &DiscretisedLink {
+        &self.link
+    }
+
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for d in &self.devices {
+            d.check_invariants()?;
+        }
+        self.link.check_invariants()
+    }
+
+    /// One attempt of the low-priority batch algorithm with a fixed core
+    /// configuration. Returns the committed allocations, or `None` after
+    /// rolling back (the caller may retry with the four-core config).
+    fn try_config(
+        &mut self,
+        now: SimTime,
+        tasks: &[Task],
+        deadline: SimTime,
+        config: TaskConfig,
+        ops: &mut Ops,
+    ) -> Option<Vec<Allocation>> {
+        let proc = config.proc_time(&self.cfg);
+        let source = tasks[0].source;
+
+        // Step 2: check communication viability — a potential slot per task
+        // (not all will be used; local placements skip the link).
+        let comm_deadline = deadline.saturating_sub(proc);
+        *ops += 2;
+        if !self.link.can_place(now, comm_deadline, tasks.len() as u32) {
+            // Not enough link capacity even if everything offloads — but if
+            // the source device alone can host the batch the request can
+            // still succeed, so only reject when it cannot.
+            let local = self.devices[source]
+                .list(config)
+                .query_all_fits(now, deadline, proc)
+                .len();
+            *ops += self.devices[source].list(config).track_count() as Ops;
+            if local < tasks.len() {
+                self.reject_reasons[1] += 1;
+                return None;
+            }
+        }
+
+        // Step 3: multi-fit query of the placement window [now, deadline)
+        // across every device: the earliest slot per track that can host
+        // the configuration's processing time (every window in a list is
+        // at least that long by construction, so the first window starting
+        // early enough is guaranteed to fit — same early-exit speed as
+        // pure containment, but tracks that free up part-way through the
+        // placement window are still usable, which reallocation of
+        // preempted tasks depends on). Remote candidates must leave room
+        // for one unit transfer before processing starts.
+        let unit = self.cfg.transfer_unit(self.bps);
+        let mut windows: Vec<(DeviceId, WindowRef, SimTime)> = Vec::new();
+        for d in 0..self.cfg.n_devices {
+            self.devices[d].advance(now);
+            let earliest = if d == source { now } else { now + unit };
+            let list = self.devices[d].list(config);
+            *ops += list.track_count() as Ops;
+            for (r, start) in list.query_all_fits(earliest, deadline, proc) {
+                windows.push((d, r, start));
+            }
+        }
+        if windows.len() < tasks.len() {
+            self.reject_reasons[2] += 1;
+            return None;
+        }
+
+        // Step 4: prioritise source-device windows, then shuffle the remote
+        // devices and round-robin one window at a time (load balancing).
+        let mut source_windows: Vec<(DeviceId, WindowRef, SimTime)> =
+            windows.iter().copied().filter(|(d, ..)| *d == source).collect();
+        let mut remote_devices: Vec<DeviceId> = (0..self.cfg.n_devices).filter(|&d| d != source).collect();
+        self.rng.shuffle(&mut remote_devices);
+        let mut remote_per_dev: Vec<Vec<(DeviceId, WindowRef, SimTime)>> = remote_devices
+            .iter()
+            .map(|&d| windows.iter().copied().filter(|(w, ..)| *w == d).collect())
+            .collect();
+        let mut picks: Vec<(DeviceId, WindowRef, SimTime)> = Vec::with_capacity(tasks.len());
+        while picks.len() < tasks.len() {
+            if let Some(w) = source_windows.pop() {
+                picks.push(w);
+                continue;
+            }
+            let mut advanced = false;
+            for dev_windows in remote_per_dev.iter_mut() {
+                if picks.len() == tasks.len() {
+                    break;
+                }
+                if let Some(w) = dev_windows.pop() {
+                    picks.push(w);
+                    advanced = true;
+                }
+            }
+            if picks.len() < tasks.len() && !advanced {
+                self.reject_reasons[2] += 1;
+                return None;
+            }
+        }
+
+        // Step 5: commit task-by-task; offloads reserve a link slot that
+        // must complete before the processing slot opens.
+        let mut committed: Vec<Allocation> = Vec::with_capacity(tasks.len());
+        for (task, (device, r, fit_start)) in tasks.iter().zip(picks) {
+            let (start, comm) = if device == task.source {
+                (fit_start, None)
+            } else {
+                let placed = self.link.place(
+                    now,
+                    comm_deadline,
+                    CommTask { task: task.id, from: task.source, to: device, planned_start: now },
+                );
+                *ops += 3;
+                match placed {
+                    Some((_idx, c1, c2)) => (fit_start.max(c2), Some((c1, c2))),
+                    None => {
+                        self.reject_reasons[3] += 1;
+                        *ops += self.rollback(&committed, now);
+                        return None;
+                    }
+                }
+            };
+            let end = start + proc;
+            // A late communication slot can push the start past the fitted
+            // window's end; re-verify containment before committing.
+            let window_ok = {
+                let list = self.devices[device].list(config);
+                list.tracks[r.track]
+                    .get(r.index)
+                    .map(|w| w.contains(start, end))
+                    .unwrap_or(false)
+            };
+            if end > task.deadline || !window_ok {
+                self.reject_reasons[3] += 1;
+                *ops += self.rollback(&committed, now);
+                return None;
+            }
+            let (alloc, c_ops) = self.commit(device, config, r, task, start, end, comm);
+            *ops += c_ops;
+            committed.push(alloc);
+        }
+        Some(committed)
+    }
+}
+
+impl Scheduler for RasScheduler {
+    fn name(&self) -> &'static str {
+        "RAS"
+    }
+
+    fn schedule_high(&mut self, now: SimTime, task: &Task) -> HpOutcome {
+        let mut ops: Ops = 0;
+        let (t1, t2) = (now, now + self.cfg.hp_proc());
+        if t2 > task.deadline {
+            return HpOutcome::Rejected { victims: vec![], ops: 1 };
+        }
+        let dev = task.source;
+        self.devices[dev].advance(now);
+        // Containment query on the device's high-priority list.
+        let q = self.devices[dev].query(TaskConfig::HighPriority, t1, t2);
+        ops += self.devices[dev].list(TaskConfig::HighPriority).track_count() as Ops;
+        if let Some(r) = q {
+            let (alloc, c_ops) = self.commit(dev, TaskConfig::HighPriority, r, task, t1, t2, None);
+            return HpOutcome::Allocated { alloc, ops: ops + c_ops };
+        }
+        // Preemption request for the source device at the same window
+        // (Section IV-B3): evict the overlapping low-priority task with
+        // the farthest deadline, rebuild the availability lists from the
+        // remaining workload, then allocate. If the window is still busy
+        // (another low-priority task overlaps), the controller regenerates
+        // the preemption request — bounded by the device's possible
+        // co-resident tasks.
+        let mut victims: Vec<Allocation> = Vec::new();
+        for _ in 0..self.cfg.cores_per_device {
+            let (victim, v_ops) = select_victim(&self.state, dev, t1, t2);
+            ops += v_ops;
+            let Some(victim) = victim else { break };
+            let victim_alloc = self.state.remove(victim).expect("victim tracked");
+            self.link.remove_task(victim);
+            victims.push(victim_alloc);
+            ops += self.reconstruct_device(dev, now);
+            let q = self.devices[dev].query(TaskConfig::HighPriority, t1, t2);
+            ops += self.devices[dev].list(TaskConfig::HighPriority).track_count() as Ops;
+            if let Some(r) = q {
+                let (alloc, c_ops) = self.commit(dev, TaskConfig::HighPriority, r, task, t1, t2, None);
+                return HpOutcome::Preempted { alloc, victims, ops: ops + c_ops };
+            }
+        }
+        // The window never freed (nothing preemptable overlapped, or only
+        // non-preemptable high-priority work remains). Evicted tasks still
+        // re-enter low-priority scheduling, matching the paper's
+        // "preempted task will have a chance to receive reallocation".
+        HpOutcome::Rejected { victims, ops }
+    }
+
+    fn schedule_low(&mut self, now: SimTime, tasks: &[Task], _realloc: bool) -> LpOutcome {
+        let mut ops: Ops = 0;
+        if tasks.is_empty() {
+            return LpOutcome::Rejected { ops: 1 };
+        }
+        let deadline = tasks.iter().map(|t| t.deadline).min().unwrap();
+        // Step 1: enumerate viable core configurations (or exit early).
+        let configs = self.viable_configs(now, deadline);
+        if configs.is_empty() {
+            self.reject_reasons[0] += 1;
+            return LpOutcome::Rejected { ops: 1 };
+        }
+        for config in configs {
+            match self.try_config(now, tasks, deadline, config, &mut ops) {
+                Some(allocs) => return LpOutcome::Allocated { allocs, ops },
+                None => continue, // fall back to the faster configuration
+            }
+        }
+        LpOutcome::Rejected { ops }
+    }
+
+
+    fn on_complete(&mut self, _now: SimTime, task: TaskId) {
+        // Windows are not re-inserted (their true capacity is unknown) —
+        // completion only clears the exact-state bookkeeping.
+        self.state.remove(task);
+        self.link.remove_task(task);
+    }
+
+    fn on_violation(&mut self, now: SimTime, task: TaskId) {
+        if let Some(a) = self.state.remove(task) {
+            self.link.remove_task(task);
+            // Reclaim the abandoned reservation if a meaningful tail
+            // remains: same reconstruction path as preemption.
+            if a.end > now + self.cfg.hp_proc() {
+                self.reconstruct_device(a.device, now);
+            }
+        }
+    }
+
+    fn on_bandwidth_update(&mut self, now: SimTime, bps: f64) -> Ops {
+        self.bps = bps;
+        let unit = self.cfg.transfer_unit(bps);
+        let (fresh, dropped) = self.link.rebuild(now, unit);
+        let ops = (self.link.pending() + self.link.buckets.len()) as Ops + fresh.buckets.len() as Ops;
+        self.link = fresh;
+        self.link_rebuilds += 1;
+        self.cascade_dropped += dropped as u64;
+        ops
+    }
+
+    fn bandwidth_estimate(&self) -> f64 {
+        self.bps
+    }
+
+    fn state(&self) -> &WorkloadState {
+        &self.state
+    }
+
+    fn reject_diag(&self) -> [u64; 4] {
+        self.reject_reasons
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::task::Priority;
+
+    fn cfg() -> SystemConfig {
+        SystemConfig::default()
+    }
+
+    fn hp(id: TaskId, source: DeviceId, now: SimTime, c: &SystemConfig) -> Task {
+        Task::high(id, id, source, now, c)
+    }
+
+    fn lp_batch(base: TaskId, n: usize, source: DeviceId, now: SimTime, c: &SystemConfig) -> Vec<Task> {
+        let deadline = now + c.frame_period();
+        (0..n as u64)
+            .map(|i| Task::low(base + i, base, source, now, deadline, c))
+            .collect()
+    }
+
+    #[test]
+    fn hp_allocates_locally() {
+        let c = cfg();
+        let mut s = RasScheduler::new(&c, 0, c.link_bps);
+        match s.schedule_high(0, &hp(1, 0, 0, &c)) {
+            HpOutcome::Allocated { alloc, .. } => {
+                assert_eq!(alloc.device, 0);
+                assert_eq!(alloc.start, 0);
+                assert_eq!(alloc.end, c.hp_proc());
+                assert!(!alloc.offloaded);
+            }
+            other => panic!("expected Allocated, got {other:?}"),
+        }
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lp_batch_prefers_source_then_balances() {
+        let c = cfg();
+        let mut s = RasScheduler::new(&c, 0, c.link_bps);
+        let tasks = lp_batch(10, 4, 1, 0, &c);
+        match s.schedule_low(0, &tasks, false) {
+            LpOutcome::Allocated { allocs, .. } => {
+                assert_eq!(allocs.len(), 4);
+                // Source device hosts its two-core capacity (2 tracks).
+                let local = allocs.iter().filter(|a| a.device == 1).count();
+                assert_eq!(local, 2);
+                // Offloaded tasks carry comm windows; locals don't.
+                for a in &allocs {
+                    assert_eq!(a.offloaded, a.device != 1);
+                    assert_eq!(a.comm.is_some(), a.offloaded);
+                    assert_eq!(a.config, TaskConfig::LowTwoCore);
+                    assert!(a.end <= a.deadline);
+                }
+            }
+            LpOutcome::Rejected { .. } => panic!("batch should fit an idle network"),
+        }
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lp_uses_four_cores_when_two_would_violate() {
+        let c = cfg();
+        let mut s = RasScheduler::new(&c, 0, c.link_bps);
+        let now = 0;
+        // Deadline leaves room for the 4-core config only.
+        let deadline = now + c.lp4_proc() + 100_000;
+        let tasks = vec![Task::low(1, 1, 0, now, deadline, &c)];
+        match s.schedule_low(now, &tasks, false) {
+            LpOutcome::Allocated { allocs, .. } => {
+                assert_eq!(allocs[0].config, TaskConfig::LowFourCore);
+            }
+            LpOutcome::Rejected { .. } => panic!("4-core config should fit"),
+        }
+    }
+
+    #[test]
+    fn lp_rejects_when_no_config_fits() {
+        let c = cfg();
+        let mut s = RasScheduler::new(&c, 0, c.link_bps);
+        let tasks = vec![Task::low(1, 1, 0, 0, c.lp4_proc() - 1, &c)];
+        assert!(matches!(s.schedule_low(0, &tasks, false), LpOutcome::Rejected { .. }));
+    }
+
+    #[test]
+    fn hp_preempts_farthest_deadline_lp() {
+        let c = cfg();
+        let mut s = RasScheduler::new(&c, 0, c.link_bps);
+        // The HP stage needs the whole device: a resident 2-core LP task
+        // forces a preemption request.
+        let tasks = lp_batch(10, 1, 0, 0, &c);
+        assert!(matches!(s.schedule_low(0, &tasks, false), LpOutcome::Allocated { .. }));
+        match s.schedule_high(0, &hp(30, 0, 0, &c)) {
+            HpOutcome::Preempted { alloc, victims, .. } => {
+                assert_eq!(victims.len(), 1);
+                assert_eq!(victims[0].task, 10);
+                assert_eq!(alloc.task, 30);
+                assert_eq!(victims[0].config.priority(), Priority::Low);
+            }
+            other => panic!("expected Preempted, got {other:?}"),
+        }
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn hp_evicts_multiple_victims_when_needed() {
+        let c = cfg();
+        let mut s = RasScheduler::new(&c, 0, c.link_bps);
+        // Two co-resident 2-core LP tasks: freeing the whole device takes
+        // two preemption rounds.
+        let tasks = lp_batch(10, 2, 0, 0, &c);
+        assert!(matches!(s.schedule_low(0, &tasks, false), LpOutcome::Allocated { .. }));
+        match s.schedule_high(0, &hp(30, 0, 0, &c)) {
+            HpOutcome::Preempted { victims, .. } => {
+                assert_eq!(victims.len(), 2);
+            }
+            other => panic!("expected Preempted, got {other:?}"),
+        }
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn hp_rejected_when_nothing_to_preempt() {
+        let c = cfg();
+        let mut s = RasScheduler::new(&c, 0, c.link_bps);
+        // An HP task holds the device; HP work is not preemptable.
+        assert!(matches!(s.schedule_high(0, &hp(1, 0, 0, &c)), HpOutcome::Allocated { .. }));
+        match s.schedule_high(0, &hp(9, 0, 0, &c)) {
+            HpOutcome::Rejected { victims, .. } => assert!(victims.is_empty()),
+            other => panic!("expected Rejected, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bandwidth_update_rebuilds_link_and_cascades() {
+        let c = cfg();
+        let mut s = RasScheduler::new(&c, 0, c.link_bps);
+        let tasks = lp_batch(1, 4, 0, 0, &c);
+        assert!(matches!(s.schedule_low(0, &tasks, false), LpOutcome::Allocated { .. }));
+        let pending_before = s.link().pending();
+        assert!(pending_before > 0, "offloads should reserve link slots");
+        let ops = s.on_bandwidth_update(1_000, c.link_bps / 2.0);
+        assert!(ops > 0);
+        assert_eq!(s.link_rebuilds, 1);
+        // Unit doubled after halving bandwidth.
+        assert_eq!(s.link().unit, c.transfer_unit(c.link_bps / 2.0));
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn completion_clears_state() {
+        let c = cfg();
+        let mut s = RasScheduler::new(&c, 0, c.link_bps);
+        let t = hp(1, 0, 0, &c);
+        let HpOutcome::Allocated { alloc, .. } = s.schedule_high(0, &t) else {
+            panic!()
+        };
+        assert_eq!(s.state().len(), 1);
+        s.on_complete(alloc.end, 1);
+        assert_eq!(s.state().len(), 0);
+    }
+
+    #[test]
+    fn never_oversubscribes_device_cores() {
+        // Property-style check at unit level: after a storm of requests,
+        // exact peak usage per device never exceeds its cores.
+        let c = cfg();
+        let mut s = RasScheduler::new(&c, 0, c.link_bps);
+        let mut id = 0u64;
+        for round in 0..6u64 {
+            let now = round * 2_000_000;
+            for d in 0..c.n_devices {
+                let _ = s.schedule_high(now, &hp(id, d, now, &c));
+                id += 1;
+            }
+            let batch = lp_batch(id, (round as usize % 4) + 1, (round as usize) % 4, now, &c);
+            id += batch.len() as u64;
+            let _ = s.schedule_low(now, &batch, false);
+        }
+        for d in 0..c.n_devices {
+            for t in (0..40_000_000u64).step_by(250_000) {
+                let (peak, _) = s.state().peak_usage(d, t, t + 250_000);
+                assert!(peak <= c.cores_per_device, "device {d} oversubscribed at {t}: {peak}");
+            }
+        }
+        s.check_invariants().unwrap();
+    }
+}

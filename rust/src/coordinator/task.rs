@@ -1,0 +1,224 @@
+//! Task model: the unit of work the controller schedules.
+//!
+//! The paper's pipeline (Fig. 1) produces two kinds of tasks per frame:
+//! a *high-priority* task (stage 1 object detector + stage 2 binary
+//! classifier, processed locally under a tight deadline) and 0–4
+//! *low-priority* DNN tasks (stage 3 high-complexity classifier) that may
+//! be offloaded. Low-priority tasks run in a two-core (slow) or four-core
+//! (fast) configuration; the scheduler prefers two cores and only widens
+//! to four when two cores would violate the deadline.
+
+
+use crate::config::SystemConfig;
+use crate::time::{SimDuration, SimTime};
+
+/// Globally unique task identifier.
+pub type TaskId = u64;
+/// Index of an edge device (0-based).
+pub type DeviceId = usize;
+/// Identifier of a conveyor frame (one pipeline instance).
+pub type FrameId = u64;
+
+/// Task priority class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Priority {
+    High,
+    Low,
+}
+
+/// Application configuration: each has its own fixed processing time and
+/// core requirement, and each device keeps one resource-availability list
+/// per configuration (Section IV-A1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskConfig {
+    /// Stage 1+2, local, tight deadline.
+    HighPriority,
+    /// Stage 3 on two cores (slower).
+    LowTwoCore,
+    /// Stage 3 on four cores (faster).
+    LowFourCore,
+}
+
+/// All configurations, in the order device state stores their lists.
+pub const ALL_CONFIGS: [TaskConfig; 3] = [
+    TaskConfig::HighPriority,
+    TaskConfig::LowTwoCore,
+    TaskConfig::LowFourCore,
+];
+
+impl TaskConfig {
+    /// Cores the configuration occupies on a device.
+    pub fn cores(self, cfg: &SystemConfig) -> u32 {
+        match self {
+            TaskConfig::HighPriority => cfg.hp_cores,
+            TaskConfig::LowTwoCore => 2,
+            TaskConfig::LowFourCore => 4,
+        }
+    }
+
+    /// Fixed processing duration for the configuration (µs).
+    pub fn proc_time(self, cfg: &SystemConfig) -> SimDuration {
+        match self {
+            TaskConfig::HighPriority => cfg.hp_proc(),
+            TaskConfig::LowTwoCore => cfg.lp2_proc(),
+            TaskConfig::LowFourCore => cfg.lp4_proc(),
+        }
+    }
+
+    /// Index into per-device list arrays.
+    pub fn index(self) -> usize {
+        match self {
+            TaskConfig::HighPriority => 0,
+            TaskConfig::LowTwoCore => 1,
+            TaskConfig::LowFourCore => 2,
+        }
+    }
+
+    pub fn priority(self) -> Priority {
+        match self {
+            TaskConfig::HighPriority => Priority::High,
+            _ => Priority::Low,
+        }
+    }
+}
+
+/// A schedulable task as seen by the controller.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub id: TaskId,
+    pub frame: FrameId,
+    /// Device whose camera produced the frame (tasks prefer to run here).
+    pub source: DeviceId,
+    pub priority: Priority,
+    /// Creation time (frame generation for HP; HP completion for LP).
+    pub created_at: SimTime,
+    /// Absolute completion deadline.
+    pub deadline: SimTime,
+    /// Input size in bytes (what an offload must transfer).
+    pub input_bytes: u64,
+}
+
+impl Task {
+    pub fn high(id: TaskId, frame: FrameId, source: DeviceId, now: SimTime, cfg: &SystemConfig) -> Self {
+        Self {
+            id,
+            frame,
+            source,
+            priority: Priority::High,
+            created_at: now,
+            deadline: now + cfg.hp_deadline(),
+            input_bytes: 0, // HP never offloads, nothing to transfer
+        }
+    }
+
+    pub fn low(
+        id: TaskId,
+        frame: FrameId,
+        source: DeviceId,
+        now: SimTime,
+        frame_deadline: SimTime,
+        cfg: &SystemConfig,
+    ) -> Self {
+        Self {
+            id,
+            frame,
+            source,
+            priority: Priority::Low,
+            created_at: now,
+            deadline: frame_deadline,
+            input_bytes: cfg.image_bytes,
+        }
+    }
+
+    /// Slack between now and the deadline (0 if already past).
+    pub fn slack(&self, now: SimTime) -> SimDuration {
+        self.deadline.saturating_sub(now)
+    }
+}
+
+/// A committed placement: task `id` occupies `cores` on `device` over
+/// `[start, end)`. This is the exact state WPS searches over, and what RAS
+/// replays when reconstructing availability lists after a preemption.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allocation {
+    pub task: TaskId,
+    pub frame: FrameId,
+    pub device: DeviceId,
+    pub config: TaskConfig,
+    pub cores: u32,
+    pub start: SimTime,
+    pub end: SimTime,
+    pub deadline: SimTime,
+    /// Whether the task was offloaded (device != source).
+    pub offloaded: bool,
+    /// Communication window reserved on the link for the input transfer
+    /// (None for local placements).
+    pub comm: Option<(SimTime, SimTime)>,
+}
+
+impl Allocation {
+    /// Does this allocation overlap the half-open interval `[t1, t2)`?
+    pub fn overlaps(&self, t1: SimTime, t2: SimTime) -> bool {
+        self.start < t2 && t1 < self.end
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SystemConfig {
+        SystemConfig::default()
+    }
+
+    #[test]
+    fn config_cores_and_durations() {
+        let c = cfg();
+        assert_eq!(TaskConfig::HighPriority.cores(&c), 4);
+        assert_eq!(TaskConfig::LowTwoCore.cores(&c), 2);
+        assert_eq!(TaskConfig::LowFourCore.cores(&c), 4);
+        // Four-core config is strictly faster than two-core (the paper's
+        // conservative allocation rationale).
+        assert!(TaskConfig::LowFourCore.proc_time(&c) < TaskConfig::LowTwoCore.proc_time(&c));
+    }
+
+    #[test]
+    fn deadlines() {
+        let c = cfg();
+        let hp = Task::high(1, 1, 0, 1000, &c);
+        assert_eq!(hp.deadline, 1000 + c.hp_deadline());
+        let frame_deadline = 1000 + c.frame_period();
+        let lp = Task::low(2, 1, 0, 2000, frame_deadline, &c);
+        assert_eq!(lp.deadline, frame_deadline);
+        assert_eq!(lp.input_bytes, c.image_bytes);
+    }
+
+    #[test]
+    fn allocation_overlap() {
+        let a = Allocation {
+            task: 1,
+            frame: 1,
+            device: 0,
+            config: TaskConfig::LowTwoCore,
+            cores: 2,
+            start: 100,
+            end: 200,
+            deadline: 300,
+            offloaded: false,
+            comm: None,
+        };
+        assert!(a.overlaps(150, 160));
+        assert!(a.overlaps(0, 101));
+        assert!(a.overlaps(199, 500));
+        assert!(!a.overlaps(200, 300)); // half-open: end not included
+        assert!(!a.overlaps(0, 100));
+    }
+
+    #[test]
+    fn slack_saturates() {
+        let c = cfg();
+        let t = Task::high(1, 1, 0, 0, &c);
+        assert_eq!(t.slack(t.deadline + 10), 0);
+        assert_eq!(t.slack(0), c.hp_deadline());
+    }
+}

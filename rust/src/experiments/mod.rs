@@ -1,0 +1,155 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (Section VI). Each function returns the per-scenario
+//! [`Metrics`] rows; `medge <figN>` prints them with the renderers in
+//! [`crate::metrics::report`].
+
+use crate::config::SystemConfig;
+use crate::coordinator::scheduler::multi::MultiScheduler;
+use crate::coordinator::scheduler::ras_sched::RasScheduler;
+use crate::coordinator::scheduler::wps::WpsScheduler;
+use crate::coordinator::scheduler::Scheduler;
+use crate::metrics::Metrics;
+use crate::sim::Engine;
+use crate::workload::trace::{Trace, TraceSpec};
+
+/// Which scheduler a scenario runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedKind {
+    Wps,
+    Ras,
+    /// Future-work contextual multi-scheduler (ablation).
+    Multi,
+}
+
+impl SchedKind {
+    pub fn build(self, cfg: &SystemConfig) -> Box<dyn Scheduler> {
+        match self {
+            SchedKind::Wps => Box::new(WpsScheduler::new(cfg, 0, cfg.link_bps)),
+            SchedKind::Ras => Box::new(RasScheduler::new(cfg, 0, cfg.link_bps)),
+            SchedKind::Multi => Box::new(MultiScheduler::new(cfg, 0, cfg.link_bps, 8)),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            SchedKind::Wps => "WPS",
+            SchedKind::Ras => "RAS",
+            SchedKind::Multi => "MULTI",
+        }
+    }
+}
+
+/// Run one scenario: `frames` trace frames of `spec` under `kind`.
+pub fn run_scenario(cfg: &SystemConfig, kind: SchedKind, spec: TraceSpec, frames: usize, label: &str) -> Metrics {
+    let trace = Trace::generate(spec, cfg.n_devices, frames, cfg.seed);
+    let sched = kind.build(cfg);
+    Engine::new(cfg.clone(), sched, trace, label).run()
+}
+
+/// Number of trace frames in a wall-clock experiment duration.
+pub fn frames_for_minutes(cfg: &SystemConfig, minutes: f64) -> usize {
+    ((minutes * 60.0) / cfg.frame_period_s).ceil() as usize
+}
+
+/// Fig. 4 + Fig. 5 — accuracy vs performance: WPS_N vs RAS_N over the
+/// weighted 1..4 loads (the paper's main experiment; both figures come
+/// from the same runs).
+pub fn fig4_fig5(cfg: &SystemConfig, minutes: f64) -> Vec<Metrics> {
+    let frames = frames_for_minutes(cfg, minutes);
+    let mut out = Vec::new();
+    for n in 1..=4u8 {
+        for kind in [SchedKind::Wps, SchedKind::Ras] {
+            let label = format!("{}_{}", kind.label(), n);
+            out.push(run_scenario(cfg, kind, TraceSpec::Weighted(n), frames, &label));
+        }
+    }
+    out
+}
+
+/// Fig. 6 + Fig. 7 — bandwidth interval rate: the RAS system on a 30-min
+/// slice of the weighted-4 scenario, sweeping the probe interval over
+/// {1.5, 5, 10, 20, 30} s.
+pub fn fig6_fig7(cfg: &SystemConfig, minutes: f64) -> Vec<Metrics> {
+    let frames = frames_for_minutes(cfg, minutes);
+    [1.5f64, 5.0, 10.0, 20.0, 30.0]
+        .iter()
+        .map(|&interval| {
+            let mut c = cfg.clone();
+            c.bandwidth_interval_s = interval;
+            let label = format!("BIT_{}", interval);
+            run_scenario(&c, SchedKind::Ras, TraceSpec::Weighted(4), frames, &label)
+        })
+        .collect()
+}
+
+/// Fig. 8 + Table II — network traffic congestion: RAS on weighted-4 for
+/// 30 min, background bursts at duty cycles {0, 25, 50, 75} % of the 30 s
+/// bandwidth-update interval.
+pub fn fig8_table2(cfg: &SystemConfig, minutes: f64) -> Vec<Metrics> {
+    let frames = frames_for_minutes(cfg, minutes);
+    [0.0f64, 0.25, 0.50, 0.75]
+        .iter()
+        .map(|&duty| {
+            let mut c = cfg.clone();
+            c.duty_cycle = duty;
+            let label = format!("{}%", (duty * 100.0) as u32);
+            run_scenario(&c, SchedKind::Ras, TraceSpec::Weighted(4), frames, &label)
+        })
+        .collect()
+}
+
+/// Ablation (future work, Section VII): the contextual multi-scheduler
+/// against pure WPS and pure RAS across the weighted loads.
+pub fn ablation_multi(cfg: &SystemConfig, minutes: f64) -> Vec<Metrics> {
+    let frames = frames_for_minutes(cfg, minutes);
+    let mut out = Vec::new();
+    for n in 1..=4u8 {
+        for kind in [SchedKind::Wps, SchedKind::Ras, SchedKind::Multi] {
+            let label = format!("{}_{}", kind.label(), n);
+            out.push(run_scenario(cfg, kind, TraceSpec::Weighted(n), frames, &label));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> SystemConfig {
+        SystemConfig { seed: 17, ..Default::default() }
+    }
+
+    #[test]
+    fn frames_for_minutes_rounds_up() {
+        let cfg = small_cfg();
+        assert_eq!(frames_for_minutes(&cfg, 30.0), 96); // 1800 / 18.86 → 95.4
+    }
+
+    #[test]
+    fn fig4_produces_eight_labelled_rows() {
+        let runs = fig4_fig5(&small_cfg(), 3.0);
+        assert_eq!(runs.len(), 8);
+        assert_eq!(runs[0].label, "WPS_1");
+        assert_eq!(runs[7].label, "RAS_4");
+        for m in &runs {
+            assert!(m.frames_total > 0);
+        }
+    }
+
+    #[test]
+    fn fig6_sweeps_five_intervals() {
+        let runs = fig6_fig7(&small_cfg(), 2.0);
+        assert_eq!(runs.len(), 5);
+        // Higher probe frequency ⇒ at least as many bandwidth updates.
+        assert!(runs[0].bandwidth_updates >= runs[4].bandwidth_updates);
+    }
+
+    #[test]
+    fn fig8_sweeps_duty_cycles() {
+        let runs = fig8_table2(&small_cfg(), 2.0);
+        assert_eq!(runs.len(), 4);
+        assert_eq!(runs[0].label, "0%");
+        assert_eq!(runs[3].label, "75%");
+    }
+}

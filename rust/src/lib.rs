@@ -1,0 +1,30 @@
+//! # medge — deadline-constrained DNN offloading at the mobile edge
+//!
+//! A reproduction of *"Accuracy vs Performance: An abstraction model for
+//! deadline constrained offloading at the mobile-edge"* (Cotter,
+//! Castiñeiras, Cionca — CS.DC 2025) as a three-layer rust + JAX + Pallas
+//! system:
+//!
+//! * **Layer 3 (this crate)** — the centralised controller: resource
+//!   availability lists, the discretised network link, dynamic bandwidth
+//!   estimation, the RAS scheduler and the WPS baseline, plus the full
+//!   simulation substrate (devices, shared wireless medium, traffic
+//!   generator, workload traces) and the experiment harness that
+//!   regenerates every figure and table in the paper's evaluation.
+//! * **Layer 2 (python/compile, build time)** — the three-stage waste
+//!   classification pipeline as JAX models, AOT-lowered to HLO text.
+//! * **Layer 1 (python/compile/kernels, build time)** — Pallas kernels for
+//!   the convolution/matmul hot path, verified against pure-jnp oracles.
+//!
+//! The [`runtime`] module loads the AOT artifacts and executes real
+//! inference from rust via PJRT — python never runs on the request path.
+
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod time;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,149 @@
+//! `medge` — CLI for the experiment harness.
+//!
+//! Regenerates every table and figure of the paper's evaluation:
+//! `medge fig4 | fig5 | fig6 | fig7 | fig8 | table2 | all`, plus
+//! `medge ablation` (the future-work contextual multi-scheduler) and
+//! `medge trace` (trace-file tooling). Argument parsing is in-tree (the
+//! offline build has no clap): `--minutes F`, `--seed N`, `--config PATH`.
+
+use medge::config::SystemConfig;
+use medge::experiments;
+use medge::metrics::report;
+use medge::workload::trace::{Trace, TraceSpec};
+
+const USAGE: &str = "\
+medge — deadline-constrained DNN offloading at the mobile edge (paper reproduction)
+
+USAGE: medge <COMMAND> [--minutes F] [--seed N] [--config PATH]
+
+COMMANDS:
+  fig4     Task completion, WPS_N vs RAS_N (weighted 1..4)
+  fig5     Scheduling latency by scenario, both schedulers
+  fig6     LP stage-3 completion by mechanism (bandwidth-interval sweep)
+  fig7     Bandwidth-interval tests: completion across categories
+  fig8     Network traffic congestion tests
+  table2   Core allocation mix under congestion
+  all      Everything above
+  ablation Contextual multi-scheduler vs WPS vs RAS (future work)
+  trace    Generate a trace file: --spec S --frames N --out PATH
+           (S: uniform | weighted1..weighted4)
+
+OPTIONS:
+  --minutes F   simulated experiment duration in minutes (default 30)
+  --seed N      RNG seed (traces, shuffles, probe hosts, bursts)
+  --config P    key-value config file overriding the paper defaults
+";
+
+struct Args {
+    cmd: String,
+    minutes: f64,
+    seed: Option<u64>,
+    config: Option<std::path::PathBuf>,
+    spec: String,
+    frames: usize,
+    out: Option<std::path::PathBuf>,
+}
+
+fn parse_args() -> anyhow::Result<Args> {
+    let mut args = Args {
+        cmd: String::new(),
+        minutes: 30.0,
+        seed: None,
+        config: None,
+        spec: "weighted4".to_string(),
+        frames: 96,
+        out: None,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        let mut value = |name: &str| -> anyhow::Result<String> {
+            it.next().ok_or_else(|| anyhow::anyhow!("{name} needs a value"))
+        };
+        match a.as_str() {
+            "--minutes" => args.minutes = value("--minutes")?.parse()?,
+            "--seed" => args.seed = Some(value("--seed")?.parse()?),
+            "--config" => args.config = Some(value("--config")?.into()),
+            "--spec" => args.spec = value("--spec")?,
+            "--frames" => args.frames = value("--frames")?.parse()?,
+            "--out" => args.out = Some(value("--out")?.into()),
+            "-h" | "--help" => {
+                print!("{USAGE}");
+                std::process::exit(0);
+            }
+            cmd if !cmd.starts_with('-') && args.cmd.is_empty() => args.cmd = cmd.to_string(),
+            other => anyhow::bail!("unknown argument: {other}\n{USAGE}"),
+        }
+    }
+    if args.cmd.is_empty() {
+        anyhow::bail!("missing command\n{USAGE}");
+    }
+    Ok(args)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = parse_args()?;
+    let mut cfg = match &args.config {
+        Some(p) => SystemConfig::from_kv_file(p)?,
+        None => SystemConfig::default(),
+    };
+    if let Some(seed) = args.seed {
+        cfg.seed = seed;
+    }
+    let minutes = args.minutes;
+
+    match args.cmd.as_str() {
+        "fig4" => {
+            let runs = experiments::fig4_fig5(&cfg, minutes);
+            print!("{}", report::fig4(&runs));
+        }
+        "fig5" => {
+            let runs = experiments::fig4_fig5(&cfg, minutes);
+            print!("{}", report::fig5(&runs));
+        }
+        "fig6" => {
+            let runs = experiments::fig6_fig7(&cfg, minutes);
+            print!("{}", report::fig6(&runs));
+        }
+        "fig7" => {
+            let runs = experiments::fig6_fig7(&cfg, minutes);
+            print!("{}", report::fig7(&runs));
+        }
+        "fig8" => {
+            let runs = experiments::fig8_table2(&cfg, minutes);
+            print!("{}", report::fig8(&runs));
+        }
+        "table2" => {
+            let runs = experiments::fig8_table2(&cfg, minutes);
+            print!("{}", report::table2(&runs));
+        }
+        "all" => {
+            let main_runs = experiments::fig4_fig5(&cfg, minutes);
+            print!("{}", report::fig4(&main_runs));
+            print!("{}", report::fig5(&main_runs));
+            let bit_runs = experiments::fig6_fig7(&cfg, minutes);
+            print!("{}", report::fig6(&bit_runs));
+            print!("{}", report::fig7(&bit_runs));
+            let traffic_runs = experiments::fig8_table2(&cfg, minutes);
+            print!("{}", report::fig8(&traffic_runs));
+            print!("{}", report::table2(&traffic_runs));
+        }
+        "ablation" => {
+            let runs = experiments::ablation_multi(&cfg, minutes);
+            print!("{}", report::fig4(&runs));
+            print!("{}", report::fig5(&runs));
+        }
+        "trace" => {
+            let out = args.out.ok_or_else(|| anyhow::anyhow!("trace needs --out PATH"))?;
+            let t = Trace::generate(TraceSpec::parse(&args.spec)?, cfg.n_devices, args.frames, cfg.seed);
+            t.save(&out)?;
+            println!(
+                "wrote {} frames ({:.2} mean DNN load) to {}",
+                args.frames,
+                t.mean_dnn_load(),
+                out.display()
+            );
+        }
+        other => anyhow::bail!("unknown command: {other}\n{USAGE}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,178 @@
+//! Experiment metrics: everything the paper's figures and tables report.
+//!
+//! The evaluation (Section VI) tracks frame completion rate, per-category
+//! task completion (high/low priority, with/without preemption or
+//! reallocation, offloaded), deadline violations, scheduling latencies by
+//! scenario, and the core-allocation mix of Table II.
+
+pub mod report;
+
+
+use crate::time::{as_millis, SimDuration};
+
+/// Streaming latency statistics (count / mean / min / max), in µs.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStat {
+    pub count: u64,
+    pub sum_us: u64,
+    pub min_us: u64,
+    pub max_us: u64,
+}
+
+impl LatencyStat {
+    pub fn record(&mut self, lat: SimDuration) {
+        if self.count == 0 {
+            self.min_us = lat;
+            self.max_us = lat;
+        } else {
+            self.min_us = self.min_us.min(lat);
+            self.max_us = self.max_us.max(lat);
+        }
+        self.count += 1;
+        self.sum_us += lat;
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        as_millis(self.sum_us / self.count)
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        as_millis(self.max_us)
+    }
+}
+
+/// All counters for one experiment run.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    /// Scenario label (Table I: WPS_N / RAS_N / BIT_N ...).
+    pub label: String,
+
+    // ---- frames (Fig. 4 / 7 / 8 headline) ----
+    /// Frames that generated work (trace value ≥ 0).
+    pub frames_total: u64,
+    /// Frames whose HP task and all LP tasks completed in time.
+    pub frames_completed: u64,
+
+    // ---- high-priority tasks ----
+    pub hp_generated: u64,
+    pub hp_allocated_no_preempt: u64,
+    pub hp_allocated_with_preempt: u64,
+    pub hp_rejected: u64,
+    pub hp_completed: u64,
+    pub hp_violations: u64,
+
+    // ---- low-priority tasks ----
+    pub lp_generated: u64,
+    pub lp_allocated_initial: u64,
+    pub lp_alloc_failures: u64,
+    pub lp_completed_initial: u64,
+    pub lp_completed_realloc: u64,
+    pub lp_violations: u64,
+    pub lp_preempted: u64,
+    pub lp_realloc_attempts: u64,
+    pub lp_realloc_success: u64,
+
+    // ---- offloading (Fig. 4/7/8 offloaded-completion series) ----
+    pub offloaded_total: u64,
+    pub offloaded_completed: u64,
+
+    // ---- scheduling latency (Fig. 5) ----
+    pub lat_hp_alloc: LatencyStat,
+    pub lat_hp_preempt: LatencyStat,
+    pub lat_lp_alloc: LatencyStat,
+    pub lat_lp_realloc: LatencyStat,
+
+    // ---- core allocation mix (Table II) ----
+    pub two_core_allocs: u64,
+    pub four_core_allocs: u64,
+
+    // ---- bandwidth mechanism diagnostics (Fig. 6/7) ----
+    pub bandwidth_updates: u64,
+    pub link_rebuild_ops: u64,
+    pub final_bandwidth_estimate_bps: f64,
+    /// Virtual time the controller spent busy (scheduling + rebuilds), µs.
+    pub controller_busy_us: u64,
+    /// LP rejection reasons [no config, link, windows, commit] (RAS only).
+    pub reject_reasons: [u64; 4],
+}
+
+impl Metrics {
+    pub fn new(label: impl Into<String>) -> Self {
+        Self { label: label.into(), ..Default::default() }
+    }
+
+    /// Frame completion rate in [0, 1].
+    pub fn frame_completion_rate(&self) -> f64 {
+        if self.frames_total == 0 {
+            return 0.0;
+        }
+        self.frames_completed as f64 / self.frames_total as f64
+    }
+
+    /// Total low-priority completions (initial + reallocated).
+    pub fn lp_completed_total(&self) -> u64 {
+        self.lp_completed_initial + self.lp_completed_realloc
+    }
+
+    /// Offloaded completion rate in [0, 1].
+    pub fn offloaded_completion_rate(&self) -> f64 {
+        if self.offloaded_total == 0 {
+            return 0.0;
+        }
+        self.offloaded_completed as f64 / self.offloaded_total as f64
+    }
+
+    /// Table II row: fraction of successful LP allocations per core config.
+    pub fn core_mix(&self) -> (f64, f64) {
+        let total = (self.two_core_allocs + self.four_core_allocs) as f64;
+        if total == 0.0 {
+            return (0.0, 0.0);
+        }
+        (
+            self.two_core_allocs as f64 / total * 100.0,
+            self.four_core_allocs as f64 / total * 100.0,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_stat_tracks_extremes_and_mean() {
+        let mut s = LatencyStat::default();
+        s.record(1000);
+        s.record(3000);
+        s.record(2000);
+        assert_eq!(s.count, 3);
+        assert_eq!(s.min_us, 1000);
+        assert_eq!(s.max_us, 3000);
+        assert!((s.mean_ms() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rates() {
+        let mut m = Metrics::new("RAS_4");
+        m.frames_total = 100;
+        m.frames_completed = 80;
+        assert!((m.frame_completion_rate() - 0.8).abs() < 1e-12);
+        m.two_core_allocs = 96;
+        m.four_core_allocs = 4;
+        let (two, four) = m.core_mix();
+        assert!((two - 96.0).abs() < 1e-9);
+        assert!((four - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_metrics_dont_divide_by_zero() {
+        let m = Metrics::new("x");
+        assert_eq!(m.frame_completion_rate(), 0.0);
+        assert_eq!(m.offloaded_completion_rate(), 0.0);
+        assert_eq!(m.core_mix(), (0.0, 0.0));
+        assert_eq!(m.lat_hp_alloc.mean_ms(), 0.0);
+    }
+}

@@ -1,0 +1,185 @@
+//! Renderers that print each paper figure/table as text rows, using the
+//! same series the paper plots (Table I labels: WPS_N, RAS_N, BIT_N).
+
+use super::Metrics;
+
+fn header(title: &str) -> String {
+    format!("\n=== {title} ===\n")
+}
+
+/// Fig. 4 — "Task Completion across various categories": one row per
+/// scenario, the completion/violation series the paper plots.
+pub fn fig4(runs: &[Metrics]) -> String {
+    let mut s = header("Fig. 4 — Task completion across categories");
+    s += &format!(
+        "{:<8} {:>7} {:>7} {:>6} | {:>9} {:>9} {:>6} | {:>8} {:>8} {:>7} {:>6} | {:>9} {:>9}\n",
+        "scenario", "frames", "done", "rate%",
+        "hp_alloc", "hp_preempt", "hp_rej",
+        "lp_init", "lp_reall", "lp_fail", "viol",
+        "off_total", "off_done",
+    );
+    for m in runs {
+        s += &format!(
+            "{:<8} {:>7} {:>7} {:>6.1} | {:>9} {:>9} {:>6} | {:>8} {:>8} {:>7} {:>6} | {:>9} {:>9}\n",
+            m.label,
+            m.frames_total,
+            m.frames_completed,
+            m.frame_completion_rate() * 100.0,
+            m.hp_allocated_no_preempt,
+            m.hp_allocated_with_preempt,
+            m.hp_rejected,
+            m.lp_completed_initial,
+            m.lp_completed_realloc,
+            m.lp_alloc_failures,
+            m.lp_violations,
+            m.offloaded_total,
+            m.offloaded_completed,
+        );
+    }
+    s
+}
+
+/// Fig. 5 — "Scheduling latency by initial allocation and
+/// pre-emption/reallocation scenarios for both schedulers".
+pub fn fig5(runs: &[Metrics]) -> String {
+    let mut s = header("Fig. 5 — Scheduling latency (ms, mean [count])");
+    s += &format!(
+        "{:<8} {:>16} {:>18} {:>16} {:>18}\n",
+        "scenario", "hp_alloc", "hp_preempt", "lp_alloc", "lp_realloc",
+    );
+    for m in runs {
+        s += &format!(
+            "{:<8} {:>9.2} [{:>4}] {:>11.2} [{:>4}] {:>9.2} [{:>4}] {:>11.2} [{:>4}]\n",
+            m.label,
+            m.lat_hp_alloc.mean_ms(),
+            m.lat_hp_alloc.count,
+            m.lat_hp_preempt.mean_ms(),
+            m.lat_hp_preempt.count,
+            m.lat_lp_alloc.mean_ms(),
+            m.lat_lp_alloc.count,
+            m.lat_lp_realloc.mean_ms(),
+            m.lat_lp_realloc.count,
+        );
+    }
+    s
+}
+
+/// Fig. 6 — "Low-priority high-complexity completion by mechanism"
+/// (initial allocation vs reallocation, per bandwidth-interval scenario).
+pub fn fig6(runs: &[Metrics]) -> String {
+    let mut s = header("Fig. 6 — LP (stage-3) completion by mechanism");
+    s += &format!(
+        "{:<8} {:>8} {:>9} {:>9} {:>6} {:>7}\n",
+        "scenario", "lp_init", "lp_reall", "lp_total", "viol", "fail",
+    );
+    for m in runs {
+        s += &format!(
+            "{:<8} {:>8} {:>9} {:>9} {:>6} {:>7}\n",
+            m.label,
+            m.lp_completed_initial,
+            m.lp_completed_realloc,
+            m.lp_completed_total(),
+            m.lp_violations,
+            m.lp_alloc_failures,
+        );
+    }
+    s
+}
+
+/// Fig. 7 — "Bandwidth Interval Tests: Task completion across various
+/// categories" (same columns as Fig. 4, BIT_N scenarios).
+pub fn fig7(runs: &[Metrics]) -> String {
+    let mut s = fig4(runs);
+    s = s.replace(
+        "Fig. 4 — Task completion across categories",
+        "Fig. 7 — Bandwidth interval tests: task completion across categories",
+    );
+    s += &format!(
+        "{:<8} {:>9} {:>14} {:>14}\n",
+        "scenario", "bw_updates", "rebuild_ops", "busy_ms",
+    );
+    for m in runs {
+        s += &format!(
+            "{:<8} {:>9} {:>14} {:>14.1}\n",
+            m.label,
+            m.bandwidth_updates,
+            m.link_rebuild_ops,
+            m.controller_busy_us as f64 / 1000.0,
+        );
+    }
+    s
+}
+
+/// Fig. 8 — "Network Traffic Test: Task completion across various
+/// categories" (duty-cycle scenarios).
+pub fn fig8(runs: &[Metrics]) -> String {
+    let mut s = fig4(runs);
+    s = s.replace(
+        "Fig. 4 — Task completion across categories",
+        "Fig. 8 — Network traffic test: task completion across categories",
+    );
+    s += &format!("{:<8} {:>10} {:>12}\n", "scenario", "off_rate%", "est_Mbps");
+    for m in runs {
+        s += &format!(
+            "{:<8} {:>10.1} {:>12.1}\n",
+            m.label,
+            m.offloaded_completion_rate() * 100.0,
+            m.final_bandwidth_estimate_bps / 1e6,
+        );
+    }
+    s
+}
+
+/// Table II — "Network traffic test: core allocation of successfully
+/// allocated tasks".
+pub fn table2(runs: &[Metrics]) -> String {
+    let mut s = header("Table II — Core allocation of successfully allocated tasks");
+    s += &format!("{:<12}", "Duty Cycle");
+    for m in runs {
+        s += &format!(" {:>9}", m.label);
+    }
+    s += "\n";
+    s += &format!("{:<12}", "Two Core");
+    for m in runs {
+        s += &format!(" {:>8.2}%", m.core_mix().0);
+    }
+    s += "\n";
+    s += &format!("{:<12}", "Four Core");
+    for m in runs {
+        s += &format!(" {:>8.2}%", m.core_mix().1);
+    }
+    s += "\n";
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(label: &str) -> Metrics {
+        let mut m = Metrics::new(label);
+        m.frames_total = 100;
+        m.frames_completed = 73;
+        m.two_core_allocs = 96;
+        m.four_core_allocs = 4;
+        m.lat_hp_alloc.record(1200);
+        m
+    }
+
+    #[test]
+    fn renders_contain_labels_and_rates() {
+        let runs = vec![sample("WPS_1"), sample("RAS_1")];
+        let f4 = fig4(&runs);
+        assert!(f4.contains("WPS_1"));
+        assert!(f4.contains("RAS_1"));
+        assert!(f4.contains("73.0"));
+        let f5 = fig5(&runs);
+        assert!(f5.contains("1.20"));
+        let t2 = table2(&runs);
+        assert!(t2.contains("96.00%"));
+        assert!(t2.contains("Four Core"));
+        assert!(fig6(&runs).contains("lp_total"));
+        assert!(fig7(&runs).contains("bw_updates"));
+        assert!(fig8(&runs).contains("est_Mbps"));
+    }
+}

@@ -1,0 +1,73 @@
+//! Deterministic synthetic frame generation.
+//!
+//! The paper feeds every DNN task the same input image (Section V: "we use
+//! the same input image for each DNN task"); real deployments would crop
+//! and resize the conveyor frame. We generate deterministic synthetic
+//! frames — a textured background with an optional bright "waste item"
+//! blob — so the end-to-end example exercises real inference with varied
+//! but reproducible inputs.
+
+use crate::runtime::{IMAGE_ELEMS, IMAGE_SIDE};
+
+/// Generate a flattened `[IMAGE_SIDE, IMAGE_SIDE, 3]` f32 frame in [0, 1].
+/// `seed` varies the texture; `with_item` stamps a bright blob (the waste
+/// item) in the centre region.
+pub fn synth_frame(seed: u64, with_item: bool) -> Vec<f32> {
+    let mut img = vec![0.0f32; IMAGE_ELEMS];
+    // Cheap deterministic texture: xorshift per pixel.
+    let mut s = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1;
+    for y in 0..IMAGE_SIDE {
+        for x in 0..IMAGE_SIDE {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            let noise = (s % 1000) as f32 / 1000.0;
+            let base = 0.25 + 0.1 * noise; // conveyor-belt grey
+            let idx = (y * IMAGE_SIDE + x) * 3;
+            img[idx] = base;
+            img[idx + 1] = base * 0.95;
+            img[idx + 2] = base * 0.9;
+        }
+    }
+    if with_item {
+        // A bright square blob, position jittered by the seed.
+        let cx = IMAGE_SIDE / 2 + (seed % 9) as usize;
+        let cy = IMAGE_SIDE / 2 + (seed / 9 % 9) as usize;
+        let half = IMAGE_SIDE / 6;
+        for y in cy.saturating_sub(half)..(cy + half).min(IMAGE_SIDE) {
+            for x in cx.saturating_sub(half)..(cx + half).min(IMAGE_SIDE) {
+                let idx = (y * IMAGE_SIDE + x) * 3;
+                img[idx] = 0.9;
+                img[idx + 1] = 0.8 - 0.2 * ((seed % 4) as f32 / 4.0);
+                img[idx + 2] = 0.3 + 0.15 * ((seed % 3) as f32 / 3.0);
+            }
+        }
+    }
+    img
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_shape_and_range() {
+        let f = synth_frame(1, true);
+        assert_eq!(f.len(), IMAGE_ELEMS);
+        assert!(f.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        assert_eq!(synth_frame(7, true), synth_frame(7, true));
+        assert_ne!(synth_frame(7, true), synth_frame(8, true));
+    }
+
+    #[test]
+    fn item_brightens_centre() {
+        let with = synth_frame(3, true);
+        let without = synth_frame(3, false);
+        let centre = (IMAGE_SIDE / 2 * IMAGE_SIDE + IMAGE_SIDE / 2) * 3;
+        assert!(with[centre] > without[centre]);
+    }
+}

@@ -1,0 +1,195 @@
+//! Inference runtime (Layer 3 ↔ Layer 1/2 bridge): loads the AOT-compiled
+//! HLO artifacts produced by `python/compile/aot.py` and executes them on
+//! the PJRT CPU client. Python never runs here — the rust binary is
+//! self-contained once `make artifacts` has produced the `.hlo.txt` files.
+//!
+//! Interchange is HLO *text*, not serialized `HloModuleProto`: jax ≥ 0.5
+//! emits protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids and round-trips cleanly (see
+//! /opt/xla-example/README.md).
+
+pub mod image;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// The three pipeline stages of Fig. 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stage {
+    /// Stage 1: object detector (waste present / absent).
+    Detector,
+    /// Stage 2: binary classifier (recyclable / non-recyclable).
+    Binary,
+    /// Stage 3: high-complexity four-class recyclable classifier.
+    Classifier,
+}
+
+impl Stage {
+    pub fn artifact_name(self) -> &'static str {
+        match self {
+            Stage::Detector => "detector.hlo.txt",
+            Stage::Binary => "binary.hlo.txt",
+            Stage::Classifier => "classifier.hlo.txt",
+        }
+    }
+
+    pub fn n_classes(self) -> usize {
+        match self {
+            Stage::Detector => 2,
+            Stage::Binary => 2,
+            Stage::Classifier => 4,
+        }
+    }
+}
+
+/// Input image side (square RGB frames, see python/compile/model.py).
+pub const IMAGE_SIDE: usize = 64;
+/// Flattened input element count.
+pub const IMAGE_ELEMS: usize = IMAGE_SIDE * IMAGE_SIDE * 3;
+
+/// A compiled pipeline stage.
+pub struct CompiledStage {
+    pub stage: Stage,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// One inference result: per-class logits.
+#[derive(Debug, Clone)]
+pub struct Logits(pub Vec<f32>);
+
+impl Logits {
+    pub fn argmax(&self) -> usize {
+        self.0
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+/// The PJRT inference engine hosting all three stages.
+pub struct InferenceEngine {
+    client: xla::PjRtClient,
+    stages: Vec<CompiledStage>,
+}
+
+impl InferenceEngine {
+    /// Load and compile every stage artifact under `artifacts_dir`.
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let mut stages = Vec::new();
+        for stage in [Stage::Detector, Stage::Binary, Stage::Classifier] {
+            let path = artifacts_dir.join(stage.artifact_name());
+            let exe = Self::compile_one(&client, &path)
+                .with_context(|| format!("compile {}", path.display()))?;
+            stages.push(CompiledStage { stage, exe });
+        }
+        Ok(Self { client, stages })
+    }
+
+    fn compile_one(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not UTF-8")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(client.compile(&comp)?)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compiled(&self, stage: Stage) -> &CompiledStage {
+        self.stages.iter().find(|s| s.stage == stage).expect("stage loaded")
+    }
+
+    /// Run one stage on a flattened `[IMAGE_SIDE, IMAGE_SIDE, 3]` f32
+    /// image in [0, 1]. Returns the per-class logits.
+    pub fn infer(&self, stage: Stage, image: &[f32]) -> Result<Logits> {
+        anyhow::ensure!(
+            image.len() == IMAGE_ELEMS,
+            "expected {IMAGE_ELEMS} elements, got {}",
+            image.len()
+        );
+        let input = xla::Literal::vec1(image).reshape(&[
+            1,
+            IMAGE_SIDE as i64,
+            IMAGE_SIDE as i64,
+            3,
+        ])?;
+        let compiled = self.compiled(stage);
+        let result = compiled.exe.execute::<xla::Literal>(&[input])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → a 1-tuple of logits.
+        let out = result.to_tuple1()?;
+        let logits = out.to_vec::<f32>()?;
+        anyhow::ensure!(
+            logits.len() == stage.n_classes(),
+            "stage {stage:?}: expected {} logits, got {}",
+            stage.n_classes(),
+            logits.len()
+        );
+        Ok(Logits(logits))
+    }
+
+    /// Run the full pipeline of Fig. 1 on one frame: detector, then (if an
+    /// object is present) the binary classifier, then (if recyclable) the
+    /// four-class classifier. Returns what each executed stage decided.
+    pub fn pipeline(&self, image: &[f32]) -> Result<PipelineResult> {
+        let det = self.infer(Stage::Detector, image)?;
+        let object_present = det.argmax() == 1;
+        if !object_present {
+            return Ok(PipelineResult { object_present, recyclable: None, class: None });
+        }
+        let bin = self.infer(Stage::Binary, image)?;
+        let recyclable = bin.argmax() == 1;
+        if !recyclable {
+            return Ok(PipelineResult { object_present, recyclable: Some(false), class: None });
+        }
+        let cls = self.infer(Stage::Classifier, image)?;
+        Ok(PipelineResult {
+            object_present,
+            recyclable: Some(true),
+            class: Some(cls.argmax()),
+        })
+    }
+}
+
+/// Outcome of a full pipeline pass.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PipelineResult {
+    pub object_present: bool,
+    pub recyclable: Option<bool>,
+    /// Recyclable class in 0..4 (paper: four classes of recyclable waste).
+    pub class: Option<usize>,
+}
+
+/// Default artifacts directory: `$MEDGE_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("MEDGE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logits_argmax() {
+        assert_eq!(Logits(vec![0.1, 0.9]).argmax(), 1);
+        assert_eq!(Logits(vec![3.0, -1.0, 2.0, 0.0]).argmax(), 0);
+        assert_eq!(Logits(vec![]).argmax(), 0);
+    }
+
+    #[test]
+    fn stage_metadata() {
+        assert_eq!(Stage::Classifier.n_classes(), 4);
+        assert_eq!(Stage::Detector.artifact_name(), "detector.hlo.txt");
+    }
+
+    // Engine-loading tests live in rust/tests/runtime_inference.rs — they
+    // need `make artifacts` to have run and are skipped when the artifacts
+    // are absent.
+}

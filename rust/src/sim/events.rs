@@ -1,0 +1,121 @@
+//! Discrete-event machinery: the time-ordered event queue.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::coordinator::task::{DeviceId, TaskId};
+use crate::sim::netsim::FlowId;
+use crate::time::SimTime;
+
+/// Everything that can happen in the simulated system.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Event {
+    /// The conveyor produces frame `index` of the trace (all devices).
+    TraceFrame { index: usize },
+    /// A high-priority scheduling request reaches the controller.
+    HpArrive { task: TaskId },
+    /// A high-priority task finishes on its device.
+    HpFinish { task: TaskId },
+    /// A low-priority batch request reaches the controller.
+    LpArrive { tasks: Vec<TaskId>, realloc: bool },
+    /// A low-priority task finishes on its device.
+    LpFinish { task: TaskId },
+    /// An offloaded task's input transfer begins on the medium.
+    TransferStart { task: TaskId },
+    /// The medium predicts flow completion (stale if epoch mismatches).
+    MediumComplete { flow: FlowId, epoch: u64 },
+    /// A bandwidth probe round begins (host device chosen at fire time).
+    ProbeStart,
+    /// Background traffic burst toggles.
+    TrafficToggle { active: bool },
+    /// A device reports readiness at start-up (used by the e2e driver).
+    DeviceUp { device: DeviceId },
+}
+
+/// A scheduled event: ordered by time, then insertion sequence (FIFO among
+/// simultaneous events) for full determinism.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Scheduled {
+    pub at: SimTime,
+    pub seq: u64,
+    pub event: Event,
+}
+
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse: BinaryHeap is a max-heap, we want earliest first.
+        other.at.cmp(&self.at).then(other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Deterministic time-ordered queue.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Scheduled>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, at: SimTime, event: Event) {
+        self.seq += 1;
+        self.heap.push(Scheduled { at, seq: self.seq, event });
+    }
+
+    pub fn pop(&mut self) -> Option<Scheduled> {
+        self.heap.pop()
+    }
+
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|s| s.at)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(300, Event::ProbeStart);
+        q.push(100, Event::TraceFrame { index: 0 });
+        q.push(200, Event::TrafficToggle { active: true });
+        assert_eq!(q.pop().unwrap().at, 100);
+        assert_eq!(q.pop().unwrap().at, 200);
+        assert_eq!(q.pop().unwrap().at, 300);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn simultaneous_events_are_fifo() {
+        let mut q = EventQueue::new();
+        q.push(50, Event::HpArrive { task: 1 });
+        q.push(50, Event::HpArrive { task: 2 });
+        q.push(50, Event::HpArrive { task: 3 });
+        let order: Vec<_> = (0..3)
+            .map(|_| match q.pop().unwrap().event {
+                Event::HpArrive { task } => task,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+}

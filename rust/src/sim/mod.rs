@@ -1,0 +1,10 @@
+//! Simulation substrate: the testbed the paper ran on physical Raspberry
+//! Pis, rebuilt as a deterministic discrete-event simulator (see DESIGN.md
+//! §Substitutions).
+
+pub mod engine;
+pub mod events;
+pub mod netsim;
+
+pub use engine::Engine;
+pub use netsim::Medium;

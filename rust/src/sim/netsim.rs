@@ -1,0 +1,237 @@
+//! Ground-truth shared-medium simulator (substrate for the paper's 802.11n
+//! WiFi link).
+//!
+//! The controller *models* the link with its discretisation; this module is
+//! what the link actually *does*. A fluid processor-sharing model: all
+//! active flows (image transfers + bandwidth probes) share the capacity
+//! left over by background traffic equally. Congestion therefore delays
+//! transfers beyond what the controller planned — the placement-error
+//! mechanism the paper's congestion experiments (Fig. 8) study — and probe
+//! flows measure the *contended* share, reproducing the bandwidth
+//! under-estimation effect of frequent probing (Fig. 6/7).
+
+use std::collections::HashMap;
+
+use crate::time::{SimTime};
+
+/// Identifies a flow on the medium. Task transfers use the task id; probe
+/// flows use ids above [`PROBE_FLOW_BASE`].
+pub type FlowId = u64;
+
+/// Probe flows are namespaced away from task ids.
+pub const PROBE_FLOW_BASE: FlowId = 1 << 60;
+
+#[derive(Debug, Clone)]
+struct Flow {
+    remaining_bits: f64,
+}
+
+/// The shared wireless medium.
+#[derive(Debug, Clone)]
+pub struct Medium {
+    /// Raw link capacity, bits/s.
+    pub link_bps: f64,
+    /// Bandwidth consumed by background traffic while a burst is active.
+    pub bg_bps: f64,
+    bg_active: bool,
+    flows: HashMap<FlowId, Flow>,
+    last_update: SimTime,
+    /// Bumped on every rate-changing mutation; completion events carry the
+    /// epoch they were computed under so stale ones can be discarded.
+    pub epoch: u64,
+}
+
+impl Medium {
+    pub fn new(link_bps: f64, bg_bps: f64) -> Self {
+        Self {
+            link_bps,
+            bg_bps,
+            bg_active: false,
+            flows: HashMap::new(),
+            last_update: 0,
+            epoch: 0,
+        }
+    }
+
+    /// Capacity currently shared by foreground flows, bits/s.
+    pub fn available_bps(&self) -> f64 {
+        let avail = if self.bg_active {
+            self.link_bps - self.bg_bps
+        } else {
+            self.link_bps
+        };
+        avail.max(self.link_bps * 0.02) // the medium never fully starves
+    }
+
+    /// Per-flow share right now, bits/s.
+    pub fn per_flow_bps(&self) -> f64 {
+        if self.flows.is_empty() {
+            return self.available_bps();
+        }
+        self.available_bps() / self.flows.len() as f64
+    }
+
+    /// Advance the fluid model to `now`, draining every flow at the share
+    /// that held since the last update. Must be called (internally) before
+    /// any mutation.
+    fn drain_to(&mut self, now: SimTime) {
+        debug_assert!(now >= self.last_update);
+        if now == self.last_update || self.flows.is_empty() {
+            self.last_update = now;
+            return;
+        }
+        let dt_s = (now - self.last_update) as f64 / 1e6;
+        let share = self.per_flow_bps();
+        for f in self.flows.values_mut() {
+            f.remaining_bits = (f.remaining_bits - share * dt_s).max(0.0);
+        }
+        self.last_update = now;
+    }
+
+    /// Start a transfer of `bytes` at `now`.
+    pub fn add_flow(&mut self, now: SimTime, id: FlowId, bytes: u64) {
+        self.drain_to(now);
+        self.flows.insert(id, Flow { remaining_bits: bytes as f64 * 8.0 });
+        self.epoch += 1;
+    }
+
+    /// Remove a flow (cancelled transfer). Returns whether it existed.
+    pub fn remove_flow(&mut self, now: SimTime, id: FlowId) -> bool {
+        self.drain_to(now);
+        let existed = self.flows.remove(&id).is_some();
+        if existed {
+            self.epoch += 1;
+        }
+        existed
+    }
+
+    /// Toggle background traffic (the duty-cycled burst generator).
+    pub fn set_background(&mut self, now: SimTime, active: bool) {
+        if self.bg_active != active {
+            self.drain_to(now);
+            self.bg_active = active;
+            self.epoch += 1;
+        }
+    }
+
+    pub fn background_active(&self) -> bool {
+        self.bg_active
+    }
+
+    /// Predict the earliest flow completion from `now` under current
+    /// rates. Returns `(finish_time, flow_id)`.
+    pub fn next_completion(&mut self, now: SimTime) -> Option<(SimTime, FlowId)> {
+        self.drain_to(now);
+        if self.flows.is_empty() {
+            return None;
+        }
+        let share = self.per_flow_bps();
+        let (id, f) = self
+            .flows
+            .iter()
+            .min_by(|a, b| {
+                a.1.remaining_bits
+                    .partial_cmp(&b.1.remaining_bits)
+                    .unwrap()
+                    .then(a.0.cmp(b.0)) // deterministic tie-break
+            })?;
+        let dt_us = (f.remaining_bits / share * 1e6).ceil() as u64;
+        Some((now + dt_us, *id))
+    }
+
+    /// Pop a flow that has (within fluid tolerance) finished by `now`.
+    pub fn complete_flow(&mut self, now: SimTime, id: FlowId) -> bool {
+        self.drain_to(now);
+        match self.flows.get(&id) {
+            // One share-microsecond of tolerance for integer rounding.
+            Some(f) if f.remaining_bits <= self.per_flow_bps() / 1e5 + 1.0 => {
+                self.flows.remove(&id);
+                self.epoch += 1;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    pub fn active_flows(&self) -> usize {
+        self.flows.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_flow_gets_full_capacity() {
+        let mut m = Medium::new(40e6, 0.0);
+        m.add_flow(0, 1, 150_000); // 1.2 Mbit at 40 Mb/s = 30 ms
+        let (t, id) = m.next_completion(0).unwrap();
+        assert_eq!(id, 1);
+        assert_eq!(t, 30_000);
+        assert!(m.complete_flow(t, 1));
+        assert_eq!(m.active_flows(), 0);
+    }
+
+    #[test]
+    fn two_flows_share_capacity() {
+        let mut m = Medium::new(40e6, 0.0);
+        m.add_flow(0, 1, 150_000);
+        m.add_flow(0, 2, 150_000);
+        let (t, _) = m.next_completion(0).unwrap();
+        assert_eq!(t, 60_000); // halved share → doubled time
+    }
+
+    #[test]
+    fn background_traffic_slows_transfers() {
+        let mut m = Medium::new(40e6, 20e6);
+        m.add_flow(0, 1, 150_000);
+        m.set_background(0, true);
+        let (t, _) = m.next_completion(0).unwrap();
+        assert_eq!(t, 60_000); // 20 Mb/s left → 60 ms
+        m.set_background(30_000, false);
+        // Half the bits drained in 30 ms at 20 Mb/s; the rest at 40 Mb/s.
+        let (t2, _) = m.next_completion(30_000).unwrap();
+        assert_eq!(t2, 30_000 + 15_000);
+    }
+
+    #[test]
+    fn late_joiner_delays_earlier_flow() {
+        let mut m = Medium::new(40e6, 0.0);
+        m.add_flow(0, 1, 150_000);
+        // At 15 ms, half transferred; a second flow joins.
+        m.add_flow(15_000, 2, 150_000);
+        let (t, id) = m.next_completion(15_000).unwrap();
+        assert_eq!(id, 1);
+        assert_eq!(t, 15_000 + 30_000); // remaining 600 kbit at 20 Mb/s
+    }
+
+    #[test]
+    fn epoch_bumps_invalidate_predictions() {
+        let mut m = Medium::new(40e6, 0.0);
+        m.add_flow(0, 1, 150_000);
+        let e0 = m.epoch;
+        m.add_flow(1_000, 2, 150_000);
+        assert!(m.epoch > e0);
+        // Original completion (30 ms) is now stale: flow 1 isn't done.
+        assert!(!m.complete_flow(30_000, 1));
+    }
+
+    #[test]
+    fn medium_never_starves_completely() {
+        let mut m = Medium::new(40e6, 45e6); // bg demand above capacity
+        m.set_background(0, true);
+        assert!(m.available_bps() > 0.0);
+        m.add_flow(0, 1, 1000);
+        assert!(m.next_completion(0).is_some());
+    }
+
+    #[test]
+    fn remove_flow_cancels() {
+        let mut m = Medium::new(40e6, 0.0);
+        m.add_flow(0, 1, 150_000);
+        assert!(m.remove_flow(10_000, 1));
+        assert!(!m.remove_flow(10_000, 1));
+        assert!(m.next_completion(10_000).is_none());
+    }
+}

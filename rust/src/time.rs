@@ -1,0 +1,77 @@
+//! Virtual time for the discrete-event simulator.
+//!
+//! All simulator and scheduler timestamps are `SimTime`: microseconds since
+//! the start of the experiment. Using integer microseconds keeps the
+//! discrete-event engine deterministic (no float drift) while being fine
+//! enough to express sub-millisecond scheduling latencies (the paper reports
+//! latencies from ~1 ms up to ~250 ms).
+
+/// Microseconds since experiment start.
+pub type SimTime = u64;
+
+/// A span of virtual time, in microseconds.
+pub type SimDuration = u64;
+
+/// A sentinel "far future" used as the open end of availability windows.
+/// Kept well below `u64::MAX` so additions never overflow.
+pub const INFINITY: SimTime = u64::MAX / 4;
+
+/// Convert seconds (f64) to `SimTime` microseconds.
+#[inline]
+pub fn secs(s: f64) -> SimDuration {
+    (s * 1_000_000.0).round() as SimDuration
+}
+
+/// Convert milliseconds (f64) to `SimTime` microseconds.
+#[inline]
+pub fn millis(ms: f64) -> SimDuration {
+    (ms * 1_000.0).round() as SimDuration
+}
+
+/// Convert a `SimTime`/`SimDuration` to fractional seconds (for reports).
+#[inline]
+pub fn as_secs(t: SimTime) -> f64 {
+    t as f64 / 1_000_000.0
+}
+
+/// Convert a `SimTime`/`SimDuration` to fractional milliseconds (for reports).
+#[inline]
+pub fn as_millis(t: SimTime) -> f64 {
+    t as f64 / 1_000.0
+}
+
+/// Round `t` up to the next multiple of `unit` (used by the network link
+/// discretisation to align its origin, t_r in the paper).
+#[inline]
+pub fn round_up(t: SimTime, unit: SimDuration) -> SimTime {
+    debug_assert!(unit > 0);
+    t.div_ceil(unit) * unit
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn secs_roundtrip() {
+        assert_eq!(secs(1.0), 1_000_000);
+        assert_eq!(secs(0.98), 980_000);
+        assert_eq!(secs(16.862), 16_862_000);
+        assert_eq!(millis(1.5), 1_500);
+        assert!((as_secs(secs(18.86)) - 18.86).abs() < 1e-9);
+    }
+
+    #[test]
+    fn round_up_aligns() {
+        assert_eq!(round_up(0, 10), 0);
+        assert_eq!(round_up(1, 10), 10);
+        assert_eq!(round_up(10, 10), 10);
+        assert_eq!(round_up(11, 10), 20);
+    }
+
+    #[test]
+    fn infinity_headroom() {
+        // Arithmetic on INFINITY plus any realistic duration must not wrap.
+        assert!(INFINITY.checked_add(secs(1e9)).is_some());
+    }
+}

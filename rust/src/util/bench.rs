@@ -1,0 +1,125 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Auto-calibrates iteration counts to a target measurement time, reports
+//! median / mean / p95 per-iteration latency, and prints one stable line
+//! per benchmark so `cargo bench` output can be diffed across runs. Used
+//! by every target under `rust/benches/`.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<52} {:>12} iters  median {:>12}  mean {:>12}  p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p95_ns),
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark `f`, auto-scaling iterations to ~`target` of total sampling.
+/// The closure should return a value, which is black-boxed to keep the
+/// optimiser honest.
+pub fn bench<T>(name: &str, target: Duration, mut f: impl FnMut() -> T) -> BenchResult {
+    // Warm-up + calibration: find an iteration count that takes ≥ ~1 ms.
+    let mut calibration_iters = 1u64;
+    let per_iter_ns = loop {
+        let t0 = Instant::now();
+        for _ in 0..calibration_iters {
+            black_box(f());
+        }
+        let el = t0.elapsed();
+        if el >= Duration::from_millis(1) || calibration_iters >= 1 << 24 {
+            break (el.as_nanos() as f64 / calibration_iters as f64).max(0.1);
+        }
+        calibration_iters *= 4;
+    };
+    // Sample in ~20 batches within the target time.
+    let total_iters = ((target.as_nanos() as f64 / per_iter_ns) as u64).clamp(20, 5_000_000);
+    let batches = 20u64;
+    let batch_iters = (total_iters / batches).max(1);
+    let mut samples: Vec<f64> = Vec::with_capacity(batches as usize);
+    for _ in 0..batches {
+        let t0 = Instant::now();
+        for _ in 0..batch_iters {
+            black_box(f());
+        }
+        samples.push(t0.elapsed().as_nanos() as f64 / batch_iters as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median_ns = samples[samples.len() / 2];
+    let mean_ns = samples.iter().sum::<f64>() / samples.len() as f64;
+    let p95_ns = samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)];
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: batch_iters * batches,
+        median_ns,
+        mean_ns,
+        p95_ns,
+    };
+    println!("{}", r.report());
+    r
+}
+
+/// Run a whole-scenario benchmark once (for end-to-end figure harnesses
+/// where one run is seconds long) and report wall time plus a metric line.
+pub fn bench_once<T>(name: &str, f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    let el = t0.elapsed();
+    println!("{:<52} {:>12}  (single run)", name, fmt_ns(el.as_nanos() as f64));
+    (out, el)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_cheap_op() {
+        let r = bench("noop_add", Duration::from_millis(20), || 1u64 + 2);
+        assert!(r.median_ns < 1_000.0, "trivial op should be ns-scale: {}", r.median_ns);
+        assert!(r.iters >= 20);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(2_000_000_000.0).contains(" s"));
+    }
+
+    #[test]
+    fn bench_once_returns_value() {
+        let (v, d) = bench_once("once", || 7);
+        assert_eq!(v, 7);
+        assert!(d.as_nanos() > 0);
+    }
+}

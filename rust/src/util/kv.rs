@@ -1,0 +1,74 @@
+//! Minimal `key value` text format for configs and simple records.
+//!
+//! One entry per line, `#` comments, whitespace-separated. Used by
+//! [`crate::config::SystemConfig`] file loading and the trace file format.
+
+use std::collections::BTreeMap;
+
+/// Parse `key value` lines into an ordered map. Later duplicates win.
+pub fn parse(text: &str) -> BTreeMap<String, String> {
+    let mut map = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some((k, v)) = line.split_once(char::is_whitespace) {
+            map.insert(k.trim().to_string(), v.trim().to_string());
+        }
+    }
+    map
+}
+
+/// Render a map back to the text format (sorted keys, stable output).
+pub fn render(map: &BTreeMap<String, String>) -> String {
+    let mut out = String::new();
+    for (k, v) in map {
+        out.push_str(k);
+        out.push(' ');
+        out.push_str(v);
+        out.push('\n');
+    }
+    out
+}
+
+/// Fetch + parse helper.
+pub fn get<T: std::str::FromStr>(map: &BTreeMap<String, String>, key: &str) -> Option<T> {
+    map.get(key).and_then(|v| v.parse().ok())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_skips_comments_and_blanks() {
+        let m = parse("# header\n\nn_devices 4\nlink_bps 40e6\n  seed   7  \n");
+        assert_eq!(m.get("n_devices").unwrap(), "4");
+        assert_eq!(m.get("seed").unwrap(), "7");
+        assert_eq!(m.len(), 3);
+    }
+
+    #[test]
+    fn typed_get() {
+        let m = parse("x 4\ny 2.5\nz hello");
+        assert_eq!(get::<u32>(&m, "x"), Some(4));
+        assert_eq!(get::<f64>(&m, "y"), Some(2.5));
+        assert_eq!(get::<u32>(&m, "z"), None);
+        assert_eq!(get::<u32>(&m, "missing"), None);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let m = parse("a 1\nb two words here\n");
+        assert_eq!(m.get("b").unwrap(), "two words here");
+        let m2 = parse(&render(&m));
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn duplicate_keys_last_wins() {
+        let m = parse("k 1\nk 2\n");
+        assert_eq!(m.get("k").unwrap(), "2");
+    }
+}

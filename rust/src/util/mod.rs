@@ -1,0 +1,11 @@
+//! In-tree substrates for an offline build: PRNG, key-value config format,
+//! micro-benchmark harness, and a property-test driver. (The build
+//! environment has no crates.io access beyond the `xla` closure, so these
+//! replace `rand`, `serde`, `criterion`, and `proptest`.)
+
+pub mod bench;
+pub mod kv;
+pub mod prop;
+pub mod rng;
+
+pub use rng::Rng;

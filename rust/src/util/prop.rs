@@ -1,0 +1,84 @@
+//! Lightweight property-test driver (proptest is unavailable offline).
+//!
+//! Runs a property over many deterministically-seeded random cases and, on
+//! failure, reports the seed so the case can be replayed exactly:
+//!
+//! ```no_run
+//! use medge::util::prop::forall;
+//! forall("sorted after sort", 200, |rng| {
+//!     let mut v: Vec<u64> = (0..rng.index(50)).map(|_| rng.next_u64()).collect();
+//!     v.sort_unstable();
+//!     if v.windows(2).any(|w| w[0] > w[1]) {
+//!         return Err("not sorted".to_string());
+//!     }
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Run `cases` random cases of `prop`. Panics (with the failing seed) on
+/// the first counterexample. The per-case RNG is seeded as
+/// `base_seed + case_index`, so failures replay with `replay(name, seed)`.
+pub fn forall(name: &str, cases: u64, mut prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    let base_seed = fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case);
+        let mut rng = Rng::seed_from_u64(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at case {case} (seed {seed}): {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay(seed: u64, mut prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    let mut rng = Rng::seed_from_u64(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("replayed case (seed {seed}) failed: {msg}");
+    }
+}
+
+/// Stable name → seed hash (FNV-1a) so each property gets its own stream
+/// but results stay reproducible across runs.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut ran = 0;
+        forall("always true", 50, |_| {
+            ran += 1;
+            Ok(())
+        });
+        assert_eq!(ran, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at case")]
+    fn failing_property_reports_seed() {
+        forall("fails on big", 100, |rng| {
+            if rng.index(10) == 3 {
+                Err("hit 3".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn seeds_are_stable_across_runs() {
+        assert_eq!(fnv1a(b"x"), fnv1a(b"x"));
+        assert_ne!(fnv1a(b"x"), fnv1a(b"y"));
+    }
+}

@@ -1,0 +1,6 @@
+//! Workload model: the conveyor-belt waste-classification traces that
+//! drive the experiments (Section V).
+
+pub mod trace;
+
+pub use trace::{Trace, TraceEntry, TraceSpec};

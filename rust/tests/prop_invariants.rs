@@ -1,0 +1,201 @@
+//! Property-based invariants (in-tree `forall` driver): the data
+//! structures and schedulers hold their guarantees under randomized
+//! workloads.
+
+use medge::config::SystemConfig;
+use medge::coordinator::netlink::{CommTask, DiscretisedLink};
+use medge::coordinator::ras::ResourceAvailabilityList;
+use medge::coordinator::scheduler::ras_sched::RasScheduler;
+use medge::coordinator::scheduler::wps::WpsScheduler;
+use medge::coordinator::scheduler::{LpOutcome, Scheduler};
+use medge::coordinator::task::Task;
+use medge::util::prop::forall;
+use medge::util::Rng;
+
+#[test]
+fn availability_list_invariants_under_random_writes() {
+    forall("ras list random writes", 300, |rng| {
+        let tracks = 1 + rng.index(4);
+        let min_dur = 100 + rng.gen_range(5_000);
+        let mut list = ResourceAvailabilityList::fully_available(2, min_dur, tracks, 0);
+        for _ in 0..rng.index(40) {
+            let s1 = rng.gen_range(1_000_000);
+            let s2 = s1 + 1 + rng.gen_range(200_000);
+            let cores = 1 + rng.gen_range(4) as u32;
+            list.write(s1, s2, cores);
+        }
+        list.check_invariants()
+    });
+}
+
+#[test]
+fn availability_windows_shrink_monotonically() {
+    // A write never *creates* availability: any slot that is containable
+    // after a write was containable before it.
+    forall("writes only remove availability", 200, |rng| {
+        let mut list = ResourceAvailabilityList::fully_available(2, 1_000, 2, 0);
+        for _ in 0..rng.index(20) {
+            let s1 = rng.gen_range(500_000);
+            let s2 = s1 + 1 + rng.gen_range(100_000);
+            let before = list.clone();
+            list.write(s1, s2, 2);
+            for _ in 0..10 {
+                let q1 = rng.gen_range(700_000);
+                let q2 = q1 + 1_000 + rng.gen_range(50_000);
+                if list.query_containment(q1, q2).is_some()
+                    && before.query_containment(q1, q2).is_none()
+                {
+                    return Err(format!("write created availability at [{q1}, {q2})"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn link_index_always_lands_in_covering_bucket() {
+    forall("link index containment", 300, |rng| {
+        let unit = 1 + rng.gen_range(10_000);
+        let base = 1 + rng.index(32);
+        let exp = rng.index(10);
+        let origin = rng.gen_range(1_000_000);
+        let link = DiscretisedLink::build(origin, unit, base, exp);
+        link.check_invariants()?;
+        for _ in 0..50 {
+            let t = link.t_r + rng.gen_range(link.horizon() - link.t_r);
+            match link.index(t) {
+                Some(i) => {
+                    let b = &link.buckets[i];
+                    if !(b.t1 <= t && t < b.t2) {
+                        return Err(format!("t={t} landed in bucket {i} [{}, {})", b.t1, b.t2));
+                    }
+                }
+                None => return Err(format!("t={t} inside horizon had no bucket")),
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn link_capacity_never_exceeded_and_cascade_preserves_future_items() {
+    forall("link placement + cascade", 200, |rng| {
+        let mut link = DiscretisedLink::build(0, 1_000, 8, 4);
+        let mut placed = 0u64;
+        for task in 0..rng.gen_range(40) {
+            let t_p = rng.gen_range(link.horizon());
+            if link
+                .place(t_p, link.horizon(), CommTask { task, from: 0, to: 1, planned_start: t_p })
+                .is_some()
+            {
+                placed += 1;
+            }
+        }
+        link.check_invariants()?;
+        let now = rng.gen_range(8_000);
+        let (fresh, dropped) = link.rebuild(now, 2_000);
+        fresh.check_invariants()?;
+        if fresh.pending() + dropped != placed as usize {
+            return Err(format!(
+                "cascade lost items: pending {} + dropped {dropped} != placed {placed}",
+                fresh.pending()
+            ));
+        }
+        Ok(())
+    });
+}
+
+fn random_requests(rng: &mut Rng, sched: &mut dyn Scheduler, cfg: &SystemConfig) {
+    let mut id = 1u64;
+    for round in 0..rng.index(12) {
+        let now = round as u64 * rng.gen_range(4_000_000);
+        let source = rng.index(cfg.n_devices);
+        if rng.gen_f64() < 0.5 {
+            let t = Task::high(id, id, source, now, cfg);
+            id += 1;
+            let _ = sched.schedule_high(now, &t);
+        } else {
+            let n = 1 + rng.index(4);
+            let deadline = now + cfg.frame_period();
+            let tasks: Vec<Task> = (0..n)
+                .map(|i| Task::low(id + i as u64, id, source, now, deadline, cfg))
+                .collect();
+            id += n as u64;
+            if let LpOutcome::Allocated { allocs, .. } = sched.schedule_low(now, &tasks, false) {
+                // Randomly complete some tasks to exercise removal.
+                for a in allocs {
+                    if rng.gen_f64() < 0.3 {
+                        sched.on_complete(a.end, a.task);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn schedulers_never_oversubscribe_devices() {
+    forall("no oversubscription", 120, |rng| {
+        let cfg = SystemConfig { seed: rng.next_u64(), ..Default::default() };
+        let mut schedulers: Vec<Box<dyn Scheduler>> = vec![
+            Box::new(RasScheduler::new(&cfg, 0, cfg.link_bps)),
+            Box::new(WpsScheduler::new(&cfg, 0, cfg.link_bps)),
+        ];
+        for sched in &mut schedulers {
+            random_requests(rng, sched.as_mut(), &cfg);
+            for d in 0..cfg.n_devices {
+                for t in (0..60_000_000u64).step_by(1_000_000) {
+                    let (peak, _) = sched.state().peak_usage(d, t, t + 1_000_000);
+                    if peak > cfg.cores_per_device {
+                        return Err(format!(
+                            "{} oversubscribed device {d} at t={t}: {peak} cores",
+                            sched.name()
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ras_internal_invariants_hold_under_random_load() {
+    forall("ras invariants", 100, |rng| {
+        let cfg = SystemConfig { seed: rng.next_u64(), ..Default::default() };
+        let mut s = RasScheduler::new(&cfg, 0, cfg.link_bps);
+        random_requests(rng, &mut s, &cfg);
+        let _ = s.on_bandwidth_update(rng.gen_range(60_000_000), cfg.link_bps * (0.5 + rng.gen_f64()));
+        random_requests(rng, &mut s, &cfg);
+        s.check_invariants()
+    });
+}
+
+#[test]
+fn allocations_always_respect_deadlines_at_decision_time() {
+    forall("deadline-respecting allocations", 100, |rng| {
+        let cfg = SystemConfig { seed: rng.next_u64(), ..Default::default() };
+        let mut schedulers: Vec<Box<dyn Scheduler>> = vec![
+            Box::new(RasScheduler::new(&cfg, 0, cfg.link_bps)),
+            Box::new(WpsScheduler::new(&cfg, 0, cfg.link_bps)),
+        ];
+        for sched in &mut schedulers {
+            let now = rng.gen_range(10_000_000);
+            let deadline = now + cfg.frame_period();
+            let tasks: Vec<Task> =
+                (0..3).map(|i| Task::low(i + 1, 1, 0, now, deadline, &cfg)).collect();
+            if let LpOutcome::Allocated { allocs, .. } = sched.schedule_low(now, &tasks, false) {
+                for a in &allocs {
+                    if a.end > a.deadline {
+                        return Err(format!("{}: allocation ends past deadline", sched.name()));
+                    }
+                    if a.start < now {
+                        return Err(format!("{}: allocation starts in the past", sched.name()));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}

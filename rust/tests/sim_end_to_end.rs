@@ -1,0 +1,151 @@
+//! End-to-end simulator integration: whole experiment runs across
+//! schedulers, loads, and mechanisms, checking the paper's qualitative
+//! claims and cross-run identities.
+
+use medge::config::SystemConfig;
+use medge::experiments::{fig6_fig7, fig8_table2, frames_for_minutes, run_scenario, SchedKind};
+use medge::metrics::Metrics;
+use medge::workload::trace::TraceSpec;
+
+fn run(kind: SchedKind, spec: TraceSpec, minutes: f64, seed: u64) -> Metrics {
+    let cfg = SystemConfig { seed, ..Default::default() };
+    let frames = frames_for_minutes(&cfg, minutes);
+    run_scenario(&cfg, kind, spec, frames, "t")
+}
+
+#[test]
+fn both_schedulers_complete_most_frames_under_light_load() {
+    for kind in [SchedKind::Wps, SchedKind::Ras] {
+        let m = run(kind, TraceSpec::Weighted(1), 20.0, 3);
+        assert!(
+            m.frame_completion_rate() > 0.7,
+            "{kind:?} at W1: {:.2}",
+            m.frame_completion_rate()
+        );
+    }
+}
+
+#[test]
+fn completion_degrades_with_load() {
+    for kind in [SchedKind::Wps, SchedKind::Ras] {
+        let w1 = run(kind, TraceSpec::Weighted(1), 20.0, 5).frame_completion_rate();
+        let w4 = run(kind, TraceSpec::Weighted(4), 20.0, 5).frame_completion_rate();
+        assert!(w4 < w1, "{kind:?}: W4 ({w4:.2}) should be below W1 ({w1:.2})");
+    }
+}
+
+#[test]
+fn ras_scheduling_latency_is_far_below_wps_under_load() {
+    let wps = run(SchedKind::Wps, TraceSpec::Weighted(4), 20.0, 7);
+    let ras = run(SchedKind::Ras, TraceSpec::Weighted(4), 20.0, 7);
+    // The paper's headline: the abstraction model trades accuracy for an
+    // order-of-magnitude latency win.
+    assert!(
+        wps.lat_lp_alloc.mean_ms() > 10.0 * ras.lat_lp_alloc.mean_ms(),
+        "WPS {:.2} ms vs RAS {:.2} ms",
+        wps.lat_lp_alloc.mean_ms(),
+        ras.lat_lp_alloc.mean_ms()
+    );
+    assert!(wps.lat_hp_preempt.mean_ms() > ras.lat_hp_preempt.mean_ms());
+}
+
+#[test]
+fn wps_violates_more_deadlines_under_load() {
+    let wps = run(SchedKind::Wps, TraceSpec::Weighted(4), 25.0, 9);
+    let ras = run(SchedKind::Ras, TraceSpec::Weighted(4), 25.0, 9);
+    assert!(
+        wps.lp_violations > ras.lp_violations,
+        "WPS viol {} vs RAS viol {}",
+        wps.lp_violations,
+        ras.lp_violations
+    );
+}
+
+#[test]
+fn ras_reallocates_under_every_load() {
+    for n in 1..=4 {
+        let m = run(SchedKind::Ras, TraceSpec::Weighted(n), 25.0, 11);
+        assert!(
+            m.lp_realloc_success > 0,
+            "RAS W{n} should reallocate preempted tasks (attempts {})",
+            m.lp_realloc_attempts
+        );
+    }
+}
+
+#[test]
+fn frequent_bandwidth_probes_hurt_completion() {
+    // Fig. 6/7: completion improves as the probe interval grows.
+    let cfg = SystemConfig { seed: 13, ..Default::default() };
+    let runs = fig6_fig7(&cfg, 20.0);
+    let fastest = runs.first().unwrap(); // 1.5 s interval
+    let slowest = runs.last().unwrap(); // 30 s interval
+    assert!(fastest.bandwidth_updates > slowest.bandwidth_updates);
+    assert!(
+        slowest.frames_completed >= fastest.frames_completed,
+        "30 s interval ({}) should beat 1.5 s ({})",
+        slowest.frames_completed,
+        fastest.frames_completed
+    );
+}
+
+#[test]
+fn congestion_reduces_completion_and_shifts_core_mix() {
+    // Fig. 8 + Table II.
+    let cfg = SystemConfig { seed: 17, ..Default::default() };
+    let runs = fig8_table2(&cfg, 20.0);
+    let quiet = &runs[0];
+    let heavy = &runs[3];
+    assert!(
+        heavy.frames_completed < quiet.frames_completed,
+        "75% duty ({}) should complete fewer frames than 0% ({})",
+        heavy.frames_completed,
+        quiet.frames_completed
+    );
+    // Core mix: four-core share grows under congestion.
+    assert!(
+        heavy.core_mix().1 >= quiet.core_mix().1,
+        "four-core share should grow: quiet {:?} heavy {:?}",
+        quiet.core_mix(),
+        heavy.core_mix()
+    );
+}
+
+#[test]
+fn accounting_identities_hold_everywhere() {
+    for kind in [SchedKind::Wps, SchedKind::Ras, SchedKind::Multi] {
+        for n in [1, 4] {
+            let m = run(kind, TraceSpec::Weighted(n), 15.0, 23);
+            assert_eq!(
+                m.hp_generated,
+                m.hp_allocated_no_preempt + m.hp_allocated_with_preempt + m.hp_rejected,
+                "{kind:?} W{n}"
+            );
+            assert!(m.frames_completed <= m.frames_total);
+            assert!(m.offloaded_completed <= m.offloaded_total);
+            assert_eq!(
+                m.two_core_allocs + m.four_core_allocs,
+                m.lp_allocated_initial + m.lp_realloc_success,
+                "{kind:?} W{n}: core mix"
+            );
+        }
+    }
+}
+
+#[test]
+fn runs_are_reproducible() {
+    let a = run(SchedKind::Ras, TraceSpec::Weighted(3), 15.0, 31);
+    let b = run(SchedKind::Ras, TraceSpec::Weighted(3), 15.0, 31);
+    assert_eq!(format!("{a:?}"), format!("{b:?}"));
+}
+
+#[test]
+fn multi_scheduler_tracks_the_better_of_both() {
+    // Future-work ablation: the contextual multi-scheduler should not be
+    // catastrophically worse than either pure scheduler at either extreme.
+    let w1_multi = run(SchedKind::Multi, TraceSpec::Weighted(1), 20.0, 37).frame_completion_rate();
+    let w1_best = run(SchedKind::Wps, TraceSpec::Weighted(1), 20.0, 37)
+        .frame_completion_rate()
+        .max(run(SchedKind::Ras, TraceSpec::Weighted(1), 20.0, 37).frame_completion_rate());
+    assert!(w1_multi > w1_best - 0.15, "multi {w1_multi:.2} vs best {w1_best:.2}");
+}
