@@ -1,15 +1,40 @@
-//! Development diagnostic: RAS rejection-reason breakdown per load.
-use medge::config::SystemConfig;
-use medge::experiments::{run_scenario, SchedKind};
+//! Development diagnostic: RAS rejection-reason breakdown per load, plus
+//! the churn stress (device 3 leaving and rejoining) the scenario API adds.
+use medge::scenario::{ScenarioBuilder, SchedKind};
 use medge::workload::trace::TraceSpec;
 
 fn main() {
-    let cfg = SystemConfig::default();
     for n in 1..=4 {
-        let m = run_scenario(&cfg, SchedKind::Ras, TraceSpec::Weighted(n), 95, &format!("RAS_{n}"));
+        let m = ScenarioBuilder::new()
+            .scheduler(SchedKind::Ras)
+            .trace(TraceSpec::Weighted(n))
+            .frames(95)
+            .named(format!("RAS_{n}"))
+            .build()
+            .run();
         println!(
             "RAS_{n}: init={:<4} fail={:<4} realloc_ok={:<3}/{:<3} reasons[cfg,link,win,commit]={:?}",
             m.lp_allocated_initial, m.lp_alloc_failures, m.lp_realloc_success, m.lp_realloc_attempts, m.reject_reasons
         );
     }
+    // Same load, but device 3 drops out for ~5 minutes mid-run.
+    let m = ScenarioBuilder::new()
+        .scheduler(SchedKind::Ras)
+        .trace(TraceSpec::Weighted(3))
+        .frames(95)
+        .leave_at(400.0, 3)
+        .join_at(700.0, 3)
+        .named("RAS_3+churn")
+        .build()
+        .run();
+    println!(
+        "RAS_3+churn: evicted={} joins={} leaves={} init={} fail={} realloc_ok={}/{}",
+        m.churn_evicted,
+        m.churn_joins,
+        m.churn_leaves,
+        m.lp_allocated_initial,
+        m.lp_alloc_failures,
+        m.lp_realloc_success,
+        m.lp_realloc_attempts
+    );
 }

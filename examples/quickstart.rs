@@ -1,10 +1,11 @@
-//! Quickstart: simulate the paper's testbed for a few minutes under the
-//! RAS scheduler and print the headline metrics.
+//! Quickstart: compose the paper's testbed with the ScenarioBuilder, run
+//! a few simulated minutes under both schedulers in parallel, and print
+//! the headline metrics.
 //!
 //!     cargo run --release --example quickstart
 
 use medge::config::SystemConfig;
-use medge::experiments::{frames_for_minutes, run_scenario, SchedKind};
+use medge::scenario::{ScenarioBuilder, SchedKind, Sweep};
 use medge::workload::trace::TraceSpec;
 
 fn main() {
@@ -16,13 +17,19 @@ fn main() {
         cfg.link_bps / 1e6,
         cfg.frame_period_s
     );
-    let frames = frames_for_minutes(&cfg, 10.0);
+    let mut sweep = Sweep::new();
     for kind in [SchedKind::Wps, SchedKind::Ras] {
-        let m = run_scenario(&cfg, kind, TraceSpec::Weighted(3), frames, kind.label());
-        println!(
-            "\n[{}] 10 simulated minutes of weighted-3 load:",
-            kind.label()
+        sweep = sweep.add(
+            ScenarioBuilder::new()
+                .scheduler(kind)
+                .trace(TraceSpec::Weighted(3))
+                .minutes(10.0)
+                .named(kind.label())
+                .build(),
         );
+    }
+    for m in sweep.run() {
+        println!("\n[{}] 10 simulated minutes of weighted-3 load:", m.label);
         println!(
             "  frames {}/{} ({:.1}%)  lp completed {} (+{} reallocated)  violations {}",
             m.frames_completed,
@@ -39,5 +46,5 @@ fn main() {
             m.lat_hp_preempt.mean_ms()
         );
     }
-    println!("\n(see `medge all` for every figure/table of the paper)");
+    println!("\n(see `medge all` for every figure/table, `medge sweep` for custom grids)");
 }

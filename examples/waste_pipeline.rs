@@ -17,7 +17,7 @@ use std::time::Instant;
 
 use medge::config::SystemConfig;
 use medge::coordinator::scheduler::ras_sched::RasScheduler;
-use medge::coordinator::scheduler::{LpOutcome, Scheduler};
+use medge::coordinator::scheduler::{Outcome, SchedEvent, Scheduler};
 use medge::coordinator::task::Task;
 use medge::runtime::{default_artifacts_dir, image::synth_frame, InferenceEngine, Stage};
 use medge::workload::trace::{Trace, TraceSpec};
@@ -66,7 +66,7 @@ fn main() -> anyhow::Result<()> {
             let frame_img = synth_frame(id, load > 0);
             let hp = Task::high(id, id, device, now, &cfg);
             id += 1;
-            let _ = sched.schedule_high(now, &hp);
+            let _ = sched.on_event(now, SchedEvent::HighPriority { task: &hp });
             let t = Instant::now();
             let det = engine.infer(Stage::Detector, &frame_img)?;
             let _bin = engine.infer(Stage::Binary, &frame_img)?;
@@ -81,7 +81,9 @@ fn main() -> anyhow::Result<()> {
                     .map(|i| Task::low(id + i, hp.id, device, now, deadline, &cfg))
                     .collect();
                 id += load as u64;
-                if let LpOutcome::Allocated { allocs, .. } = sched.schedule_low(now, &batch, false) {
+                let decision =
+                    sched.on_event(now, SchedEvent::LowPriorityBatch { tasks: &batch, realloc: false });
+                if let Outcome::LpAllocated { allocs } = decision.outcome {
                     for a in &allocs {
                         let img = synth_frame(a.task, true);
                         let t = Instant::now();
@@ -89,14 +91,14 @@ fn main() -> anyhow::Result<()> {
                         lp_lat.push(t.elapsed().as_secs_f64() * 1e3);
                         inferences += 1;
                         assert!(logits.argmax() < 4);
-                        sched.on_complete(a.end, a.task);
+                        sched.on_event(a.end, SchedEvent::Complete { task: a.task });
                     }
                     frames_done += 1;
                 }
             } else {
                 frames_done += 1;
             }
-            sched.on_complete(hp.created_at + cfg.hp_proc(), hp.id);
+            sched.on_event(hp.created_at + cfg.hp_proc(), SchedEvent::Complete { task: hp.id });
         }
     }
 

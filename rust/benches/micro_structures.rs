@@ -81,6 +81,37 @@ fn main() {
     }
     bench("link_rebuild_cascade_24_items", SAMPLE, || full.rebuild(100_000, 60_000));
 
+    println!("\n== workload-state churn (position-indexed removal) ==");
+    // Steady-state insert+remove at a fixed live-set size: the removal is
+    // O(1) via the slot index (the seed layout paid an O(n) scan per
+    // remove, which preemption/violation/churn hit once per live task).
+    for n in [64usize, 512, 4096] {
+        let cfg = SystemConfig::default();
+        let mut w = WorkloadState::new(cfg.n_devices);
+        let mk = |task: u64| Allocation {
+            task,
+            frame: task,
+            device: (task % cfg.n_devices as u64) as usize,
+            config: TaskConfig::LowTwoCore,
+            cores: 2,
+            start: (task % 97) * 500_000,
+            end: (task % 97) * 500_000 + 17_212_000,
+            deadline: (task % 97) * 500_000 + 18_860_000,
+            offloaded: false,
+            comm: None,
+        };
+        for t in 0..n as u64 {
+            w.insert(mk(t));
+        }
+        let mut next = n as u64;
+        bench(&format!("workload_state_insert_remove/{n}_live"), SAMPLE, || {
+            let _ = w.remove(next - n as u64);
+            w.insert(mk(next));
+            next += 1;
+            w.len()
+        });
+    }
+
     println!("\n== preemption reconstruction ==");
     let cfg = SystemConfig::default();
     for n in [4usize, 16, 64] {

@@ -20,5 +20,5 @@ pub mod ras;
 pub mod scheduler;
 pub mod task;
 
-pub use scheduler::{HpOutcome, LpOutcome, Scheduler};
+pub use scheduler::{Decision, HpOutcome, LpOutcome, Outcome, SchedEvent, Scheduler, SchedulerCompat};
 pub use task::{Allocation, DeviceId, FrameId, Priority, Task, TaskConfig, TaskId};

@@ -1,4 +1,4 @@
-//! Scheduling algorithms (Section IV-B).
+//! Scheduling algorithms (Section IV-B) behind a typed event/decision API.
 //!
 //! Two schedulers implement the common [`Scheduler`] trait:
 //!
@@ -10,15 +10,36 @@
 //!   overlapping-range scans. More accurate placement, more work per
 //!   decision.
 //!
-//! Every scheduling entry point returns the decision *and* an operation
-//! count (`ops`): the number of elementary data-structure steps the call
-//! performed (windows visited, overlap checks, write/bisect operations).
-//! The DES engine converts ops to virtual scheduling latency through the
-//! configured cost model, so the accuracy-vs-performance feedback loop the
-//! paper studies — slow scheduling delays task starts and burns deadline
-//! slack — is driven by the real algorithmic costs of the two
-//! implementations. Criterion benches additionally measure raw wall-clock
-//! for the §Perf pass.
+//! ## The event/decision contract
+//!
+//! The discrete-event engine no longer calls a bag of per-occurrence
+//! callbacks; every scheduler-visible occurrence is a [`SchedEvent`]
+//! dispatched through a single entry point:
+//!
+//! ```text
+//! fn on_event(&mut self, now: SimTime, ev: SchedEvent<'_>) -> Decision
+//! ```
+//!
+//! A [`Decision`] carries the allocation [`Outcome`] *and* the operation
+//! count ([`Ops`]) uniformly: the number of elementary data-structure
+//! steps the dispatch performed (windows visited, overlap checks,
+//! write/bisect operations). The engine converts ops to virtual
+//! scheduling latency through the configured cost model, so the
+//! accuracy-vs-performance feedback loop the paper studies — slow
+//! scheduling delays task starts and burns deadline slack — is driven by
+//! the real algorithmic costs of the two implementations. Criterion-style
+//! benches additionally measure raw wall-clock for the §Perf pass.
+//!
+//! [`SchedEvent::DeviceJoined`] / [`SchedEvent::DeviceLeft`] extend the
+//! paper's fixed four-Pi testbed to churning fleets (scenario API): a
+//! departing device's live allocations come back in
+//! [`Outcome::Ack`]`::evicted` so the engine can cancel and reschedule
+//! them.
+//!
+//! The legacy callback shapes ([`HpOutcome`], [`LpOutcome`], and the
+//! [`SchedulerCompat`] extension trait) remain as a thin compatibility
+//! layer over `on_event`; `rust/tests/sched_event_equivalence.rs` holds a
+//! golden-seed proof that both surfaces decide identically.
 
 pub mod multi;
 pub mod ras_sched;
@@ -26,21 +47,107 @@ pub mod wps;
 
 use std::collections::HashMap;
 
-
 use crate::coordinator::task::{Allocation, DeviceId, Task, TaskId};
 use crate::time::SimTime;
 
 /// Operation count for one scheduling call.
 pub type Ops = u64;
 
-/// Outcome of a high-priority scheduling request.
-#[derive(Debug, Clone)]
+/// A typed occurrence dispatched to the scheduler by the engine.
+#[derive(Debug, Clone, Copy)]
+pub enum SchedEvent<'a> {
+    /// A high-priority task requests placement (always local to source).
+    HighPriority { task: &'a Task },
+    /// A batch of 1–4 low-priority DNN tasks requests placement. The
+    /// request is atomic; `realloc` marks re-entry of preempted tasks
+    /// (tracked separately in the paper's Fig. 4/5).
+    LowPriorityBatch { tasks: &'a [Task], realloc: bool },
+    /// A task finished on its device (free its resources).
+    Complete { task: TaskId },
+    /// A task missed its deadline and was abandoned.
+    Violation { task: TaskId },
+    /// A bandwidth probe round produced a new estimate (bits/s). The RAS
+    /// link rebuild is *not* free — Fig. 6/7 hinge on the returned ops.
+    BandwidthUpdate { bps: f64 },
+    /// A device joined the fleet (scenario churn / fleet growth).
+    DeviceJoined { device: DeviceId },
+    /// A device left the fleet; its live allocations must be evicted and
+    /// surfaced in the decision so the engine can reschedule them.
+    DeviceLeft { device: DeviceId },
+}
+
+/// The allocation outcome of one dispatched event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Outcome {
+    /// High-priority task placed. `victims` are the low-priority tasks
+    /// preempted on the way (empty ⇔ no preemption, Section IV-B3); they
+    /// should re-enter low-priority scheduling once preemption completes.
+    HpAllocated { alloc: Allocation, victims: Vec<Allocation> },
+    /// High-priority task unplaceable. Tasks evicted by a preemption
+    /// attempt that ultimately gave up still surface as `victims` and get
+    /// their reallocation chance.
+    HpRejected { victims: Vec<Allocation> },
+    /// Low-priority batch placed atomically.
+    LpAllocated { allocs: Vec<Allocation> },
+    /// Low-priority batch rejected atomically (the paper: if fewer windows
+    /// are found than tasks, the whole request fails).
+    LpRejected,
+    /// State change absorbed. Topology changes report the allocations they
+    /// evicted (non-empty only for [`SchedEvent::DeviceLeft`]).
+    Ack { evicted: Vec<Allocation> },
+}
+
+/// What one [`Scheduler::on_event`] dispatch decided, with uniform ops
+/// accounting (subsumes the legacy [`HpOutcome`] / [`LpOutcome`] pair).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Decision {
+    pub outcome: Outcome,
+    pub ops: Ops,
+}
+
+impl Decision {
+    /// Plain acknowledgement with no evictions.
+    pub fn ack(ops: Ops) -> Self {
+        Decision { outcome: Outcome::Ack { evicted: Vec::new() }, ops }
+    }
+
+    /// Unwrap a high-priority decision into the legacy outcome shape.
+    /// Panics on non-HP outcomes (contract violation).
+    pub fn into_hp(self) -> HpOutcome {
+        let ops = self.ops;
+        match self.outcome {
+            Outcome::HpAllocated { alloc, victims } if victims.is_empty() => {
+                HpOutcome::Allocated { alloc, ops }
+            }
+            Outcome::HpAllocated { alloc, victims } => HpOutcome::Preempted { alloc, victims, ops },
+            Outcome::HpRejected { victims } => HpOutcome::Rejected { victims, ops },
+            other => panic!("decision is not a high-priority outcome: {other:?}"),
+        }
+    }
+
+    /// Unwrap a low-priority decision into the legacy outcome shape.
+    /// Panics on non-LP outcomes (contract violation).
+    pub fn into_lp(self) -> LpOutcome {
+        let ops = self.ops;
+        match self.outcome {
+            Outcome::LpAllocated { allocs } => LpOutcome::Allocated { allocs, ops },
+            Outcome::LpRejected => LpOutcome::Rejected { ops },
+            other => panic!("decision is not a low-priority outcome: {other:?}"),
+        }
+    }
+}
+
+/// Outcome of a high-priority scheduling request (legacy shape, kept for
+/// the compatibility layer and the schedulers' internal logic).
+#[derive(Debug, Clone, PartialEq)]
 pub enum HpOutcome {
     /// Task fits locally without disturbing anyone.
     Allocated { alloc: Allocation, ops: Ops },
     /// No window on the source device: the scheduler performed preemption
     /// (Section IV-B3). `victims` were evicted and should re-enter
-    /// low-priority scheduling once the preemption completes.
+    /// low-priority scheduling once the preemption completes. Never
+    /// constructed with empty `victims` (that is `Allocated`), which keeps
+    /// the [`Decision`] round-trip exact.
     Preempted {
         alloc: Allocation,
         victims: Vec<Allocation>,
@@ -53,37 +160,49 @@ pub enum HpOutcome {
     Rejected { victims: Vec<Allocation>, ops: Ops },
 }
 
-/// Outcome of a low-priority batch scheduling request. The paper treats
-/// the request atomically: if fewer windows are found than tasks, the
-/// whole request fails.
-#[derive(Debug, Clone)]
+/// Outcome of a low-priority batch scheduling request (legacy shape). The
+/// paper treats the request atomically: if fewer windows are found than
+/// tasks, the whole request fails.
+#[derive(Debug, Clone, PartialEq)]
 pub enum LpOutcome {
     Allocated { allocs: Vec<Allocation>, ops: Ops },
     Rejected { ops: Ops },
+}
+
+impl From<HpOutcome> for Decision {
+    fn from(o: HpOutcome) -> Self {
+        match o {
+            HpOutcome::Allocated { alloc, ops } => {
+                Decision { outcome: Outcome::HpAllocated { alloc, victims: Vec::new() }, ops }
+            }
+            HpOutcome::Preempted { alloc, victims, ops } => {
+                Decision { outcome: Outcome::HpAllocated { alloc, victims }, ops }
+            }
+            HpOutcome::Rejected { victims, ops } => {
+                Decision { outcome: Outcome::HpRejected { victims }, ops }
+            }
+        }
+    }
+}
+
+impl From<LpOutcome> for Decision {
+    fn from(o: LpOutcome) -> Self {
+        match o {
+            LpOutcome::Allocated { allocs, ops } => {
+                Decision { outcome: Outcome::LpAllocated { allocs }, ops }
+            }
+            LpOutcome::Rejected { ops } => Decision { outcome: Outcome::LpRejected, ops },
+        }
+    }
 }
 
 /// The scheduling interface the discrete-event engine drives.
 pub trait Scheduler {
     fn name(&self) -> &'static str;
 
-    /// Schedule a high-priority task (always local to its source device).
-    fn schedule_high(&mut self, now: SimTime, task: &Task) -> HpOutcome;
-
-    /// Schedule a batch of low-priority DNN tasks (1–4 per request).
-    /// `realloc` marks re-entry of preempted tasks (tracked separately in
-    /// the paper's Fig. 4/5).
-    fn schedule_low(&mut self, now: SimTime, tasks: &[Task], realloc: bool) -> LpOutcome;
-
-    /// Task finished (free its resources from the scheduler's state).
-    fn on_complete(&mut self, now: SimTime, task: TaskId);
-
-    /// Task missed its deadline and was abandoned.
-    fn on_violation(&mut self, now: SimTime, task: TaskId);
-
-    /// A bandwidth probe round produced a new estimate (bits/s). Returns
-    /// the ops spent updating internal structures (the RAS link rebuild is
-    /// *not* free — Fig. 6/7 hinge on this).
-    fn on_bandwidth_update(&mut self, now: SimTime, bps: f64) -> Ops;
+    /// Single typed entry point: every scheduler-visible occurrence flows
+    /// through here. See the module docs for the event/decision contract.
+    fn on_event(&mut self, now: SimTime, ev: SchedEvent<'_>) -> Decision;
 
     /// Current bandwidth estimate used for transfer planning (bits/s).
     fn bandwidth_estimate(&self) -> f64;
@@ -98,14 +217,57 @@ pub trait Scheduler {
     }
 }
 
+/// Callback-style compatibility shim over the typed event API: the
+/// pre-redesign `Scheduler` surface, implemented for every
+/// [`Scheduler`] (including trait objects) by routing through
+/// [`Scheduler::on_event`]. Existing drivers and tests keep working; new
+/// code should dispatch events directly.
+pub trait SchedulerCompat {
+    fn schedule_high(&mut self, now: SimTime, task: &Task) -> HpOutcome;
+    fn schedule_low(&mut self, now: SimTime, tasks: &[Task], realloc: bool) -> LpOutcome;
+    fn on_complete(&mut self, now: SimTime, task: TaskId);
+    fn on_violation(&mut self, now: SimTime, task: TaskId);
+    fn on_bandwidth_update(&mut self, now: SimTime, bps: f64) -> Ops;
+}
+
+impl<S: Scheduler + ?Sized> SchedulerCompat for S {
+    fn schedule_high(&mut self, now: SimTime, task: &Task) -> HpOutcome {
+        self.on_event(now, SchedEvent::HighPriority { task }).into_hp()
+    }
+
+    fn schedule_low(&mut self, now: SimTime, tasks: &[Task], realloc: bool) -> LpOutcome {
+        self.on_event(now, SchedEvent::LowPriorityBatch { tasks, realloc }).into_lp()
+    }
+
+    fn on_complete(&mut self, now: SimTime, task: TaskId) {
+        let _ = self.on_event(now, SchedEvent::Complete { task });
+    }
+
+    fn on_violation(&mut self, now: SimTime, task: TaskId) {
+        let _ = self.on_event(now, SchedEvent::Violation { task });
+    }
+
+    fn on_bandwidth_update(&mut self, now: SimTime, bps: f64) -> Ops {
+        self.on_event(now, SchedEvent::BandwidthUpdate { bps }).ops
+    }
+}
+
 /// Exact allocation bookkeeping shared by both schedulers: WPS searches
 /// this directly; RAS keeps it for preemption victim selection and
 /// availability-list reconstruction.
+///
+/// Removal is O(1): `slot` tracks each task's position in its device's
+/// `by_device` entry and is maintained across `swap_remove`. The previous
+/// layout paid an O(n) position scan per removal, which the preemption /
+/// violation / churn paths hit once per live task (see
+/// `rust/benches/micro_structures.rs` for the measured difference).
 #[derive(Debug, Clone, Default)]
 pub struct WorkloadState {
     pub allocations: HashMap<TaskId, Allocation>,
     /// Task ids allocated to each device.
     pub by_device: Vec<Vec<TaskId>>,
+    /// task → index into `by_device[device]` (position-indexed removal).
+    slot: HashMap<TaskId, usize>,
 }
 
 impl WorkloadState {
@@ -113,18 +275,37 @@ impl WorkloadState {
         Self {
             allocations: HashMap::new(),
             by_device: vec![Vec::new(); n_devices],
+            slot: HashMap::new(),
         }
     }
 
+    /// Grow the per-device index to cover `device` (fleet churn).
+    pub fn ensure_device(&mut self, device: DeviceId) {
+        if self.by_device.len() <= device {
+            self.by_device.resize_with(device + 1, Vec::new);
+        }
+    }
+
+    /// Number of device slots tracked (left devices keep their slot).
+    pub fn device_count(&self) -> usize {
+        self.by_device.len()
+    }
+
     pub fn insert(&mut self, a: Allocation) {
+        self.ensure_device(a.device);
+        debug_assert!(!self.allocations.contains_key(&a.task), "duplicate insert");
+        self.slot.insert(a.task, self.by_device[a.device].len());
         self.by_device[a.device].push(a.task);
         self.allocations.insert(a.task, a);
     }
 
     pub fn remove(&mut self, task: TaskId) -> Option<Allocation> {
         let a = self.allocations.remove(&task)?;
-        if let Some(pos) = self.by_device[a.device].iter().position(|&t| t == task) {
-            self.by_device[a.device].swap_remove(pos);
+        let pos = self.slot.remove(&task).expect("slot tracked for live task");
+        let dev = &mut self.by_device[a.device];
+        dev.swap_remove(pos);
+        if let Some(&moved) = dev.get(pos) {
+            self.slot.insert(moved, pos);
         }
         Some(a)
     }
@@ -135,7 +316,12 @@ impl WorkloadState {
 
     /// Allocations on `device`, in arbitrary order.
     pub fn device_allocs(&self, device: DeviceId) -> impl Iterator<Item = &Allocation> {
-        self.by_device[device].iter().filter_map(|t| self.allocations.get(t))
+        self.by_device
+            .get(device)
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|t| self.allocations.get(t))
     }
 
     /// Exact peak core usage on `device` over `[t1, t2)` — the ground
@@ -244,6 +430,41 @@ mod tests {
     }
 
     #[test]
+    fn slot_index_survives_swap_remove_churn() {
+        // Removal in arbitrary order must keep positions consistent: the
+        // swap_remove moves the last task into the removed slot, and the
+        // index must follow it.
+        let mut w = WorkloadState::new(1);
+        for t in 0..20u64 {
+            w.insert(alloc(t, 0, 2, t * 10, t * 10 + 100, 1000, TaskConfig::LowTwoCore));
+        }
+        // Remove from the middle, the front, and the back, interleaved.
+        for &t in &[7u64, 0, 19, 3, 18, 11] {
+            assert_eq!(w.remove(t).unwrap().task, t);
+        }
+        let mut left: Vec<TaskId> = w.device_allocs(0).map(|a| a.task).collect();
+        left.sort_unstable();
+        let mut expect: Vec<TaskId> = (0..20).filter(|t| ![7, 0, 19, 3, 18, 11].contains(t)).collect();
+        expect.sort_unstable();
+        assert_eq!(left, expect);
+        // Remove everything that remains, in insertion order.
+        for t in expect {
+            assert_eq!(w.remove(t).unwrap().task, t);
+        }
+        assert!(w.is_empty());
+        assert!(w.by_device[0].is_empty());
+    }
+
+    #[test]
+    fn ensure_device_grows_fleet() {
+        let mut w = WorkloadState::new(2);
+        w.insert(alloc(1, 5, 2, 0, 100, 100, TaskConfig::LowTwoCore));
+        assert_eq!(w.device_count(), 6);
+        assert_eq!(w.device_allocs(5).count(), 1);
+        assert_eq!(w.device_allocs(9).count(), 0); // out of range: empty
+    }
+
+    #[test]
     fn peak_usage_stacks_concurrent_tasks() {
         let mut w = WorkloadState::new(1);
         w.insert(alloc(1, 0, 2, 0, 100, 100, TaskConfig::LowTwoCore));
@@ -269,5 +490,32 @@ mod tests {
         assert_eq!(v, Some(2));
         let (v, _) = select_victim(&w, 0, 150, 180);
         assert_eq!(v, None);
+    }
+
+    #[test]
+    fn decision_roundtrips_legacy_outcomes() {
+        let a = alloc(1, 0, 4, 0, 100, 200, TaskConfig::HighPriority);
+        let v = alloc(2, 0, 2, 0, 100, 900, TaskConfig::LowTwoCore);
+
+        let hp = HpOutcome::Allocated { alloc: a.clone(), ops: 7 };
+        assert_eq!(Decision::from(hp.clone()).into_hp(), hp);
+
+        let hp = HpOutcome::Preempted { alloc: a.clone(), victims: vec![v.clone()], ops: 9 };
+        assert_eq!(Decision::from(hp.clone()).into_hp(), hp);
+
+        let hp = HpOutcome::Rejected { victims: vec![v.clone()], ops: 3 };
+        assert_eq!(Decision::from(hp.clone()).into_hp(), hp);
+
+        let lp = LpOutcome::Allocated { allocs: vec![v.clone()], ops: 11 };
+        assert_eq!(Decision::from(lp.clone()).into_lp(), lp);
+
+        let lp = LpOutcome::Rejected { ops: 2 };
+        assert_eq!(Decision::from(lp.clone()).into_lp(), lp);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a high-priority outcome")]
+    fn hp_unwrap_rejects_lp_decision() {
+        let _ = Decision::from(LpOutcome::Rejected { ops: 1 }).into_hp();
     }
 }

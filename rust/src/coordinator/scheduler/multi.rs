@@ -13,9 +13,9 @@
 
 use super::ras_sched::RasScheduler;
 use super::wps::WpsScheduler;
-use super::{HpOutcome, LpOutcome, Ops, Scheduler, WorkloadState};
+use super::{Decision, HpOutcome, LpOutcome, Ops, Outcome, SchedEvent, Scheduler, WorkloadState};
 use crate::config::SystemConfig;
-use crate::coordinator::task::{Task, TaskId};
+use crate::coordinator::task::{Allocation, DeviceId, Task, TaskId};
 use crate::time::SimTime;
 
 /// Which inner scheduler handled a task.
@@ -76,14 +76,11 @@ impl MultiScheduler {
         self.wps.on_complete(now, task);
         self.ras.on_complete(now, task);
     }
-}
 
-impl Scheduler for MultiScheduler {
-    fn name(&self) -> &'static str {
-        "MULTI"
-    }
-
-    fn schedule_high(&mut self, now: SimTime, task: &Task) -> HpOutcome {
+    /// Schedule a high-priority task through the load-selected inner
+    /// scheduler. Legacy-shaped entry point; [`Scheduler::on_event`]
+    /// dispatches here.
+    pub fn schedule_high(&mut self, now: SimTime, task: &Task) -> HpOutcome {
         let (owner, out) = if self.use_ras() {
             self.ras_requests += 1;
             (Owner::Ras, self.ras.schedule_high(now, task))
@@ -108,7 +105,10 @@ impl Scheduler for MultiScheduler {
         out
     }
 
-    fn schedule_low(&mut self, now: SimTime, tasks: &[Task], realloc: bool) -> LpOutcome {
+    /// Schedule a low-priority batch through the load-selected inner
+    /// scheduler. Legacy-shaped entry point; [`Scheduler::on_event`]
+    /// dispatches here.
+    pub fn schedule_low(&mut self, now: SimTime, tasks: &[Task], realloc: bool) -> LpOutcome {
         let (owner, out) = if self.use_ras() {
             self.ras_requests += 1;
             (Owner::Ras, self.ras.schedule_low(now, tasks, realloc))
@@ -123,19 +123,70 @@ impl Scheduler for MultiScheduler {
         out
     }
 
-    fn on_complete(&mut self, now: SimTime, task: TaskId) {
+    /// Task finished: both inner schedulers must see the state change.
+    pub fn on_complete(&mut self, now: SimTime, task: TaskId) {
         self.drop_task(now, task);
     }
 
-    fn on_violation(&mut self, now: SimTime, task: TaskId) {
+    /// Task missed its deadline: both inner schedulers must see it.
+    pub fn on_violation(&mut self, now: SimTime, task: TaskId) {
         self.owners.remove(&task);
         self.merged.remove(task);
         self.wps.on_violation(now, task);
         self.ras.on_violation(now, task);
     }
 
-    fn on_bandwidth_update(&mut self, now: SimTime, bps: f64) -> Ops {
+    /// Bandwidth estimate update, fanned to both inner schedulers.
+    pub fn on_bandwidth_update(&mut self, now: SimTime, bps: f64) -> Ops {
         self.wps.on_bandwidth_update(now, bps) + self.ras.on_bandwidth_update(now, bps)
+    }
+
+    /// Fleet join, fanned to both inner schedulers.
+    pub fn on_device_joined(&mut self, now: SimTime, device: DeviceId) -> Ops {
+        self.merged.ensure_device(device);
+        self.wps.on_device_joined(now, device) + self.ras.on_device_joined(now, device)
+    }
+
+    /// Fleet leave: evictions come from the merged (authoritative) state;
+    /// both inner schedulers drop their own view of the departed device.
+    pub fn on_device_left(&mut self, now: SimTime, device: DeviceId) -> (Vec<Allocation>, Ops) {
+        let evicted: Vec<Allocation> = self.merged.device_allocs(device).cloned().collect();
+        let (_, wps_ops) = self.wps.on_device_left(now, device);
+        let (_, ras_ops) = self.ras.on_device_left(now, device);
+        for a in &evicted {
+            self.owners.remove(&a.task);
+            self.merged.remove(a.task);
+        }
+        (evicted, wps_ops + ras_ops)
+    }
+}
+
+impl Scheduler for MultiScheduler {
+    fn name(&self) -> &'static str {
+        "MULTI"
+    }
+
+    fn on_event(&mut self, now: SimTime, ev: SchedEvent<'_>) -> Decision {
+        match ev {
+            SchedEvent::HighPriority { task } => self.schedule_high(now, task).into(),
+            SchedEvent::LowPriorityBatch { tasks, realloc } => {
+                self.schedule_low(now, tasks, realloc).into()
+            }
+            SchedEvent::Complete { task } => {
+                self.on_complete(now, task);
+                Decision::ack(1)
+            }
+            SchedEvent::Violation { task } => {
+                self.on_violation(now, task);
+                Decision::ack(1)
+            }
+            SchedEvent::BandwidthUpdate { bps } => Decision::ack(self.on_bandwidth_update(now, bps)),
+            SchedEvent::DeviceJoined { device } => Decision::ack(self.on_device_joined(now, device)),
+            SchedEvent::DeviceLeft { device } => {
+                let (evicted, ops) = self.on_device_left(now, device);
+                Decision { outcome: Outcome::Ack { evicted }, ops }
+            }
+        }
     }
 
     fn bandwidth_estimate(&self) -> f64 {

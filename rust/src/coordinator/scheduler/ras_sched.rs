@@ -2,7 +2,7 @@
 //! availability lists, a discretised network link, and dynamic bandwidth
 //! estimation (Sections IV-A and IV-B).
 
-use super::{select_victim, HpOutcome, LpOutcome, Ops, Scheduler, WorkloadState};
+use super::{select_victim, Decision, HpOutcome, LpOutcome, Ops, Outcome, SchedEvent, Scheduler, WorkloadState};
 use crate::config::SystemConfig;
 use crate::coordinator::netlink::{CommTask, DiscretisedLink};
 use crate::coordinator::ras::{DeviceAvailability, WindowRef};
@@ -14,6 +14,9 @@ use crate::util::Rng;
 pub struct RasScheduler {
     cfg: SystemConfig,
     devices: Vec<DeviceAvailability>,
+    /// Fleet membership (scenario churn): inactive devices are skipped by
+    /// every placement loop and hold no availability.
+    active: Vec<bool>,
     link: DiscretisedLink,
     state: WorkloadState,
     /// Current bandwidth estimate (bits/s) — updated by probe rounds.
@@ -33,6 +36,7 @@ impl RasScheduler {
         let unit = cfg.transfer_unit(baseline_bps);
         Self {
             devices: (0..cfg.n_devices).map(|_| DeviceAvailability::new(cfg, now)).collect(),
+            active: vec![true; cfg.n_devices],
             link: DiscretisedLink::build(now, unit, cfg.base_buckets, cfg.exp_buckets),
             state: WorkloadState::new(cfg.n_devices),
             bps: baseline_bps,
@@ -42,6 +46,10 @@ impl RasScheduler {
             reject_reasons: [0; 4],
             cfg: cfg.clone(),
         }
+    }
+
+    fn device_active(&self, d: DeviceId) -> bool {
+        d < self.devices.len() && self.active[d]
     }
 
     /// Viable low-priority configurations in preference order
@@ -194,7 +202,10 @@ impl RasScheduler {
         // for one unit transfer before processing starts.
         let unit = self.cfg.transfer_unit(self.bps);
         let mut windows: Vec<(DeviceId, WindowRef, SimTime)> = Vec::new();
-        for d in 0..self.cfg.n_devices {
+        for d in 0..self.devices.len() {
+            if !self.active[d] {
+                continue;
+            }
             self.devices[d].advance(now);
             let earliest = if d == source { now } else { now + unit };
             let list = self.devices[d].list(config);
@@ -212,7 +223,8 @@ impl RasScheduler {
         // devices and round-robin one window at a time (load balancing).
         let mut source_windows: Vec<(DeviceId, WindowRef, SimTime)> =
             windows.iter().copied().filter(|(d, ..)| *d == source).collect();
-        let mut remote_devices: Vec<DeviceId> = (0..self.cfg.n_devices).filter(|&d| d != source).collect();
+        let mut remote_devices: Vec<DeviceId> =
+            (0..self.devices.len()).filter(|&d| d != source && self.active[d]).collect();
         self.rng.shuffle(&mut remote_devices);
         let mut remote_per_dev: Vec<Vec<(DeviceId, WindowRef, SimTime)>> = remote_devices
             .iter()
@@ -285,15 +297,17 @@ impl RasScheduler {
     }
 }
 
-impl Scheduler for RasScheduler {
-    fn name(&self) -> &'static str {
-        "RAS"
-    }
-
-    fn schedule_high(&mut self, now: SimTime, task: &Task) -> HpOutcome {
+impl RasScheduler {
+    /// Schedule a high-priority task (always local to its source device).
+    /// Legacy-shaped entry point; [`Scheduler::on_event`] dispatches here.
+    pub fn schedule_high(&mut self, now: SimTime, task: &Task) -> HpOutcome {
         let mut ops: Ops = 0;
         let (t1, t2) = (now, now + self.cfg.hp_proc());
         if t2 > task.deadline {
+            return HpOutcome::Rejected { victims: vec![], ops: 1 };
+        }
+        if !self.device_active(task.source) {
+            // The source device left the fleet: nowhere to run HP work.
             return HpOutcome::Rejected { victims: vec![], ops: 1 };
         }
         let dev = task.source;
@@ -335,9 +349,15 @@ impl Scheduler for RasScheduler {
         HpOutcome::Rejected { victims, ops }
     }
 
-    fn schedule_low(&mut self, now: SimTime, tasks: &[Task], _realloc: bool) -> LpOutcome {
+    /// Schedule a batch of low-priority DNN tasks (1–4 per request).
+    /// Legacy-shaped entry point; [`Scheduler::on_event`] dispatches here.
+    pub fn schedule_low(&mut self, now: SimTime, tasks: &[Task], _realloc: bool) -> LpOutcome {
         let mut ops: Ops = 0;
         if tasks.is_empty() {
+            return LpOutcome::Rejected { ops: 1 };
+        }
+        if !self.device_active(tasks[0].source) {
+            // The source device (which holds the input images) is gone.
             return LpOutcome::Rejected { ops: 1 };
         }
         let deadline = tasks.iter().map(|t| t.deadline).min().unwrap();
@@ -357,14 +377,16 @@ impl Scheduler for RasScheduler {
     }
 
 
-    fn on_complete(&mut self, _now: SimTime, task: TaskId) {
+    /// Task finished (free its resources from the scheduler's state).
+    pub fn on_complete(&mut self, _now: SimTime, task: TaskId) {
         // Windows are not re-inserted (their true capacity is unknown) —
         // completion only clears the exact-state bookkeeping.
         self.state.remove(task);
         self.link.remove_task(task);
     }
 
-    fn on_violation(&mut self, now: SimTime, task: TaskId) {
+    /// Task missed its deadline and was abandoned.
+    pub fn on_violation(&mut self, now: SimTime, task: TaskId) {
         if let Some(a) = self.state.remove(task) {
             self.link.remove_task(task);
             // Reclaim the abandoned reservation if a meaningful tail
@@ -375,7 +397,9 @@ impl Scheduler for RasScheduler {
         }
     }
 
-    fn on_bandwidth_update(&mut self, now: SimTime, bps: f64) -> Ops {
+    /// A probe round produced a new estimate: rebuild the discretised link
+    /// at the new transfer unit. Returns the (non-trivial) rebuild ops.
+    pub fn on_bandwidth_update(&mut self, now: SimTime, bps: f64) -> Ops {
         self.bps = bps;
         let unit = self.cfg.transfer_unit(bps);
         let (fresh, dropped) = self.link.rebuild(now, unit);
@@ -384,6 +408,70 @@ impl Scheduler for RasScheduler {
         self.link_rebuilds += 1;
         self.cascade_dropped += dropped as u64;
         ops
+    }
+
+    /// A device joined the fleet: give it fresh, fully-available lists.
+    /// Rejoining a departed slot reactivates it; an index past the current
+    /// fleet grows it (intermediate slots stay inactive).
+    pub fn on_device_joined(&mut self, now: SimTime, device: DeviceId) -> Ops {
+        while self.devices.len() <= device {
+            self.devices.push(DeviceAvailability::new(&self.cfg, now));
+            self.active.push(false);
+        }
+        self.state.ensure_device(device);
+        if !self.active[device] {
+            self.active[device] = true;
+            self.devices[device] = DeviceAvailability::new(&self.cfg, now);
+        }
+        // One fresh list per configuration.
+        self.devices[device].lists.len() as Ops
+    }
+
+    /// A device left the fleet: evict its live allocations (returned so the
+    /// controller can reschedule them) and drop its availability.
+    pub fn on_device_left(&mut self, now: SimTime, device: DeviceId) -> (Vec<Allocation>, Ops) {
+        if !self.device_active(device) {
+            return (Vec::new(), 1);
+        }
+        self.active[device] = false;
+        let evicted: Vec<Allocation> = self.state.device_allocs(device).cloned().collect();
+        let mut ops: Ops = 1;
+        for a in &evicted {
+            self.state.remove(a.task);
+            self.link.remove_task(a.task);
+            ops += 2;
+        }
+        self.devices[device] = DeviceAvailability::new(&self.cfg, now);
+        (evicted, ops)
+    }
+}
+
+impl Scheduler for RasScheduler {
+    fn name(&self) -> &'static str {
+        "RAS"
+    }
+
+    fn on_event(&mut self, now: SimTime, ev: SchedEvent<'_>) -> Decision {
+        match ev {
+            SchedEvent::HighPriority { task } => self.schedule_high(now, task).into(),
+            SchedEvent::LowPriorityBatch { tasks, realloc } => {
+                self.schedule_low(now, tasks, realloc).into()
+            }
+            SchedEvent::Complete { task } => {
+                self.on_complete(now, task);
+                Decision::ack(1)
+            }
+            SchedEvent::Violation { task } => {
+                self.on_violation(now, task);
+                Decision::ack(1)
+            }
+            SchedEvent::BandwidthUpdate { bps } => Decision::ack(self.on_bandwidth_update(now, bps)),
+            SchedEvent::DeviceJoined { device } => Decision::ack(self.on_device_joined(now, device)),
+            SchedEvent::DeviceLeft { device } => {
+                let (evicted, ops) = self.on_device_left(now, device);
+                Decision { outcome: Outcome::Ack { evicted }, ops }
+            }
+        }
     }
 
     fn bandwidth_estimate(&self) -> f64 {

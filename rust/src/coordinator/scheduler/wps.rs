@@ -20,7 +20,7 @@
 //! the static baseline estimate and ignores probe updates, which is
 //! exactly what the paper's congestion experiments punish.
 
-use super::{select_victim, HpOutcome, LpOutcome, Ops, Scheduler, WorkloadState};
+use super::{select_victim, Decision, HpOutcome, LpOutcome, Ops, Outcome, SchedEvent, Scheduler, WorkloadState};
 use crate::config::SystemConfig;
 use crate::coordinator::task::{Allocation, DeviceId, Task, TaskConfig, TaskId};
 use crate::time::{SimDuration, SimTime};
@@ -37,6 +37,9 @@ struct CommWindow {
 pub struct WpsScheduler {
     cfg: SystemConfig,
     state: WorkloadState,
+    /// Fleet membership (scenario churn): inactive devices are skipped by
+    /// the exhaustive search.
+    active: Vec<bool>,
     /// Reserved communication windows, kept sorted by start.
     comms: Vec<CommWindow>,
     /// Static bandwidth estimate (bits/s) fixed at startup.
@@ -48,9 +51,14 @@ impl WpsScheduler {
         Self {
             cfg: cfg.clone(),
             state: WorkloadState::new(cfg.n_devices),
+            active: vec![true; cfg.n_devices],
             comms: Vec::new(),
             bps: baseline_bps,
         }
+    }
+
+    fn device_active(&self, d: DeviceId) -> bool {
+        d < self.active.len() && self.active[d]
     }
 
     fn transfer_time(&self) -> SimDuration {
@@ -177,13 +185,15 @@ impl WpsScheduler {
     }
 }
 
-impl Scheduler for WpsScheduler {
-    fn name(&self) -> &'static str {
-        "WPS"
-    }
-
-    fn schedule_high(&mut self, now: SimTime, task: &Task) -> HpOutcome {
+impl WpsScheduler {
+    /// Schedule a high-priority task (always local to its source device).
+    /// Legacy-shaped entry point; [`Scheduler::on_event`] dispatches here.
+    pub fn schedule_high(&mut self, now: SimTime, task: &Task) -> HpOutcome {
         let mut ops: Ops = 0;
+        if !self.device_active(task.source) {
+            // The source device left the fleet: nowhere to run HP work.
+            return HpOutcome::Rejected { victims: vec![], ops: 1 };
+        }
         let dur = self.cfg.hp_proc();
         let cores = TaskConfig::HighPriority.cores(&self.cfg);
         let dev = task.source;
@@ -246,7 +256,10 @@ impl Scheduler for WpsScheduler {
                 victims.last().unwrap().end - victims.last().unwrap().start,
                 victims.last().unwrap().cores,
             );
-            for device in 0..self.cfg.n_devices {
+            for device in 0..self.active.len() {
+                if !self.active[device] {
+                    continue;
+                }
                 let _ = self.earliest_start(device, now, v_deadline.max(now + v_dur), v_dur, v_cores, &mut ops);
                 ops += self.comms.len() as Ops; // transfer-slot rescan per device
             }
@@ -270,9 +283,15 @@ impl Scheduler for WpsScheduler {
         HpOutcome::Rejected { victims, ops }
     }
 
-    fn schedule_low(&mut self, now: SimTime, tasks: &[Task], _realloc: bool) -> LpOutcome {
+    /// Schedule a batch of low-priority DNN tasks (1–4 per request).
+    /// Legacy-shaped entry point; [`Scheduler::on_event`] dispatches here.
+    pub fn schedule_low(&mut self, now: SimTime, tasks: &[Task], _realloc: bool) -> LpOutcome {
         let mut ops: Ops = 0;
         if tasks.is_empty() {
+            return LpOutcome::Rejected { ops: 1 };
+        }
+        if !self.device_active(tasks[0].source) {
+            // The source device (which holds the input images) is gone.
             return LpOutcome::Rejected { ops: 1 };
         }
         let mut committed: Vec<Allocation> = Vec::with_capacity(tasks.len());
@@ -289,7 +308,10 @@ impl Scheduler for WpsScheduler {
                 }
                 let dur = config.proc_time(&self.cfg);
                 let cores = config.cores(&self.cfg);
-                for device in 0..self.cfg.n_devices {
+                for device in 0..self.active.len() {
+                    if !self.active[device] {
+                        continue;
+                    }
                     let local = device == task.source;
                     let (from, comm) = if local {
                         (now, None)
@@ -344,21 +366,79 @@ impl Scheduler for WpsScheduler {
         LpOutcome::Allocated { allocs: committed, ops }
     }
 
-    fn on_complete(&mut self, _now: SimTime, task: TaskId) {
+    /// Task finished (free its resources from the scheduler's state).
+    pub fn on_complete(&mut self, _now: SimTime, task: TaskId) {
         // Exact state: removal is cheap and fully reclaims capacity —
         // the accuracy advantage of the baseline representation.
         self.state.remove(task);
         self.release_comm(task);
     }
 
-    fn on_violation(&mut self, _now: SimTime, task: TaskId) {
+    /// Task missed its deadline and was abandoned.
+    pub fn on_violation(&mut self, _now: SimTime, task: TaskId) {
         self.state.remove(task);
         self.release_comm(task);
     }
 
-    fn on_bandwidth_update(&mut self, _now: SimTime, _bps: f64) -> Ops {
-        // WPS predates the dynamic mechanism: static estimate, no rebuild.
+    /// WPS predates the dynamic mechanism: static estimate, no rebuild.
+    pub fn on_bandwidth_update(&mut self, _now: SimTime, _bps: f64) -> Ops {
         0
+    }
+
+    /// A device joined the fleet (exact state just grows a slot).
+    pub fn on_device_joined(&mut self, _now: SimTime, device: DeviceId) -> Ops {
+        while self.active.len() <= device {
+            self.active.push(false);
+        }
+        self.state.ensure_device(device);
+        self.active[device] = true;
+        1
+    }
+
+    /// A device left the fleet: evict its live allocations (returned so
+    /// the controller can reschedule them) and release their link slots.
+    pub fn on_device_left(&mut self, _now: SimTime, device: DeviceId) -> (Vec<Allocation>, Ops) {
+        if !self.device_active(device) {
+            return (Vec::new(), 1);
+        }
+        self.active[device] = false;
+        let evicted: Vec<Allocation> = self.state.device_allocs(device).cloned().collect();
+        let mut ops: Ops = 1;
+        for a in &evicted {
+            self.state.remove(a.task);
+            self.release_comm(a.task);
+            ops += 2;
+        }
+        (evicted, ops)
+    }
+}
+
+impl Scheduler for WpsScheduler {
+    fn name(&self) -> &'static str {
+        "WPS"
+    }
+
+    fn on_event(&mut self, now: SimTime, ev: SchedEvent<'_>) -> Decision {
+        match ev {
+            SchedEvent::HighPriority { task } => self.schedule_high(now, task).into(),
+            SchedEvent::LowPriorityBatch { tasks, realloc } => {
+                self.schedule_low(now, tasks, realloc).into()
+            }
+            SchedEvent::Complete { task } => {
+                self.on_complete(now, task);
+                Decision::ack(1)
+            }
+            SchedEvent::Violation { task } => {
+                self.on_violation(now, task);
+                Decision::ack(1)
+            }
+            SchedEvent::BandwidthUpdate { bps } => Decision::ack(self.on_bandwidth_update(now, bps)),
+            SchedEvent::DeviceJoined { device } => Decision::ack(self.on_device_joined(now, device)),
+            SchedEvent::DeviceLeft { device } => {
+                let (evicted, ops) = self.on_device_left(now, device);
+                Decision { outcome: Outcome::Ack { evicted }, ops }
+            }
+        }
     }
 
     fn bandwidth_estimate(&self) -> f64 {

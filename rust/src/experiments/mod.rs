@@ -1,69 +1,58 @@
 //! Experiment harness: regenerates every table and figure of the paper's
-//! evaluation (Section VI). Each function returns the per-scenario
-//! [`Metrics`] rows; `medge <figN>` prints them with the renderers in
-//! [`crate::metrics::report`].
+//! evaluation (Section VI). Each function composes its scenarios with the
+//! [`crate::scenario::ScenarioBuilder`] and fans them across worker
+//! threads with [`crate::scenario::Sweep`]; `medge <figN>` prints the
+//! returned [`Metrics`] rows with the renderers in
+//! [`crate::metrics::report`]. Rows are returned in grid order and are
+//! byte-identical to sequential execution (each engine run is
+//! single-threaded and seed-deterministic).
 
 use crate::config::SystemConfig;
-use crate::coordinator::scheduler::multi::MultiScheduler;
-use crate::coordinator::scheduler::ras_sched::RasScheduler;
-use crate::coordinator::scheduler::wps::WpsScheduler;
-use crate::coordinator::scheduler::Scheduler;
 use crate::metrics::Metrics;
-use crate::sim::Engine;
-use crate::workload::trace::{Trace, TraceSpec};
+use crate::scenario::{Scenario, ScenarioBuilder, Sweep};
+use crate::workload::trace::TraceSpec;
 
-/// Which scheduler a scenario runs.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum SchedKind {
-    Wps,
-    Ras,
-    /// Future-work contextual multi-scheduler (ablation).
-    Multi,
-}
-
-impl SchedKind {
-    pub fn build(self, cfg: &SystemConfig) -> Box<dyn Scheduler> {
-        match self {
-            SchedKind::Wps => Box::new(WpsScheduler::new(cfg, 0, cfg.link_bps)),
-            SchedKind::Ras => Box::new(RasScheduler::new(cfg, 0, cfg.link_bps)),
-            SchedKind::Multi => Box::new(MultiScheduler::new(cfg, 0, cfg.link_bps, 8)),
-        }
-    }
-
-    pub fn label(self) -> &'static str {
-        match self {
-            SchedKind::Wps => "WPS",
-            SchedKind::Ras => "RAS",
-            SchedKind::Multi => "MULTI",
-        }
-    }
-}
+pub use crate::scenario::SchedKind;
 
 /// Run one scenario: `frames` trace frames of `spec` under `kind`.
 pub fn run_scenario(cfg: &SystemConfig, kind: SchedKind, spec: TraceSpec, frames: usize, label: &str) -> Metrics {
-    let trace = Trace::generate(spec, cfg.n_devices, frames, cfg.seed);
-    let sched = kind.build(cfg);
-    Engine::new(cfg.clone(), sched, trace, label).run()
+    scenario(cfg, kind, spec, frames, label).run()
+}
+
+/// Build (without running) one labelled scenario on a shared base config.
+pub fn scenario(cfg: &SystemConfig, kind: SchedKind, spec: TraceSpec, frames: usize, label: &str) -> Scenario {
+    ScenarioBuilder::new()
+        .config(cfg.clone())
+        .scheduler(kind)
+        .trace(spec)
+        .frames(frames)
+        .named(label)
+        .build()
 }
 
 /// Number of trace frames in a wall-clock experiment duration.
 pub fn frames_for_minutes(cfg: &SystemConfig, minutes: f64) -> usize {
-    ((minutes * 60.0) / cfg.frame_period_s).ceil() as usize
+    crate::scenario::frames_for_minutes(cfg, minutes)
+}
+
+/// The paper's main grid — `kinds` × weighted 1..4 — as a parallel sweep.
+pub fn weighted_grid(cfg: &SystemConfig, kinds: &[SchedKind], minutes: f64) -> Sweep {
+    let frames = frames_for_minutes(cfg, minutes);
+    let mut sweep = Sweep::new();
+    for n in 1..=4u8 {
+        for &kind in kinds {
+            let label = format!("{}_{}", kind.label(), n);
+            sweep = sweep.add(scenario(cfg, kind, TraceSpec::Weighted(n), frames, &label));
+        }
+    }
+    sweep
 }
 
 /// Fig. 4 + Fig. 5 — accuracy vs performance: WPS_N vs RAS_N over the
 /// weighted 1..4 loads (the paper's main experiment; both figures come
 /// from the same runs).
 pub fn fig4_fig5(cfg: &SystemConfig, minutes: f64) -> Vec<Metrics> {
-    let frames = frames_for_minutes(cfg, minutes);
-    let mut out = Vec::new();
-    for n in 1..=4u8 {
-        for kind in [SchedKind::Wps, SchedKind::Ras] {
-            let label = format!("{}_{}", kind.label(), n);
-            out.push(run_scenario(cfg, kind, TraceSpec::Weighted(n), frames, &label));
-        }
-    }
-    out
+    weighted_grid(cfg, &[SchedKind::Wps, SchedKind::Ras], minutes).run()
 }
 
 /// Fig. 6 + Fig. 7 — bandwidth interval rate: the RAS system on a 30-min
@@ -71,15 +60,20 @@ pub fn fig4_fig5(cfg: &SystemConfig, minutes: f64) -> Vec<Metrics> {
 /// {1.5, 5, 10, 20, 30} s.
 pub fn fig6_fig7(cfg: &SystemConfig, minutes: f64) -> Vec<Metrics> {
     let frames = frames_for_minutes(cfg, minutes);
-    [1.5f64, 5.0, 10.0, 20.0, 30.0]
-        .iter()
-        .map(|&interval| {
-            let mut c = cfg.clone();
-            c.bandwidth_interval_s = interval;
-            let label = format!("BIT_{}", interval);
-            run_scenario(&c, SchedKind::Ras, TraceSpec::Weighted(4), frames, &label)
-        })
-        .collect()
+    let mut sweep = Sweep::new();
+    for &interval in &[1.5f64, 5.0, 10.0, 20.0, 30.0] {
+        sweep = sweep.add(
+            ScenarioBuilder::new()
+                .config(cfg.clone())
+                .scheduler(SchedKind::Ras)
+                .trace(TraceSpec::Weighted(4))
+                .frames(frames)
+                .bandwidth_interval_s(interval)
+                .named(format!("BIT_{}", interval))
+                .build(),
+        );
+    }
+    sweep.run()
 }
 
 /// Fig. 8 + Table II — network traffic congestion: RAS on weighted-4 for
@@ -87,29 +81,26 @@ pub fn fig6_fig7(cfg: &SystemConfig, minutes: f64) -> Vec<Metrics> {
 /// bandwidth-update interval.
 pub fn fig8_table2(cfg: &SystemConfig, minutes: f64) -> Vec<Metrics> {
     let frames = frames_for_minutes(cfg, minutes);
-    [0.0f64, 0.25, 0.50, 0.75]
-        .iter()
-        .map(|&duty| {
-            let mut c = cfg.clone();
-            c.duty_cycle = duty;
-            let label = format!("{}%", (duty * 100.0) as u32);
-            run_scenario(&c, SchedKind::Ras, TraceSpec::Weighted(4), frames, &label)
-        })
-        .collect()
+    let mut sweep = Sweep::new();
+    for &duty in &[0.0f64, 0.25, 0.50, 0.75] {
+        sweep = sweep.add(
+            ScenarioBuilder::new()
+                .config(cfg.clone())
+                .scheduler(SchedKind::Ras)
+                .trace(TraceSpec::Weighted(4))
+                .frames(frames)
+                .duty_cycle(duty)
+                .named(format!("{}%", (duty * 100.0) as u32))
+                .build(),
+        );
+    }
+    sweep.run()
 }
 
 /// Ablation (future work, Section VII): the contextual multi-scheduler
 /// against pure WPS and pure RAS across the weighted loads.
 pub fn ablation_multi(cfg: &SystemConfig, minutes: f64) -> Vec<Metrics> {
-    let frames = frames_for_minutes(cfg, minutes);
-    let mut out = Vec::new();
-    for n in 1..=4u8 {
-        for kind in [SchedKind::Wps, SchedKind::Ras, SchedKind::Multi] {
-            let label = format!("{}_{}", kind.label(), n);
-            out.push(run_scenario(cfg, kind, TraceSpec::Weighted(n), frames, &label));
-        }
-    }
-    out
+    weighted_grid(cfg, &[SchedKind::Wps, SchedKind::Ras, SchedKind::Multi], minutes).run()
 }
 
 #[cfg(test)]
@@ -151,5 +142,18 @@ mod tests {
         assert_eq!(runs.len(), 4);
         assert_eq!(runs[0].label, "0%");
         assert_eq!(runs[3].label, "75%");
+    }
+
+    #[test]
+    fn parallel_grid_equals_sequential_grid() {
+        // The sweep fan-out must not change any row (engines are
+        // independent and deterministic).
+        let grid = weighted_grid(&small_cfg(), &[SchedKind::Wps, SchedKind::Ras], 2.0);
+        let par = grid.run();
+        let seq = grid.clone().threads(1).run();
+        assert_eq!(par.len(), seq.len());
+        for (p, q) in par.iter().zip(&seq) {
+            assert_eq!(format!("{p:?}"), format!("{q:?}"));
+        }
     }
 }

@@ -17,13 +17,28 @@
 //!   the convolution/matmul hot path, verified against pure-jnp oracles.
 //!
 //! The [`runtime`] module loads the AOT artifacts and executes real
-//! inference from rust via PJRT — python never runs on the request path.
+//! inference from rust via PJRT — python never runs on the request path
+//! (gated behind the `pjrt` cargo feature; the scheduler/simulator stack
+//! never needs it).
+//!
+//! ## Architecture of the controller layer
+//!
+//! The scheduler boundary is a typed event/decision API
+//! ([`coordinator::scheduler::SchedEvent`] →
+//! [`coordinator::scheduler::Decision`], dispatched through
+//! `Scheduler::on_event`), and experiments are composed with the
+//! [`scenario`] module: a fluent [`scenario::ScenarioBuilder`] (trace,
+//! fleet size/heterogeneity, churn, congestion regimes, seed, duration)
+//! compiles to an engine run, and [`scenario::Sweep`] fans scenario grids
+//! across worker threads. The [`experiments`] harness and the `medge`
+//! CLI (including `medge sweep`) are thin layers over those two APIs.
 
 pub mod config;
 pub mod coordinator;
 pub mod experiments;
 pub mod metrics;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod time;
 pub mod util;

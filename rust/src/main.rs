@@ -2,13 +2,17 @@
 //!
 //! Regenerates every table and figure of the paper's evaluation:
 //! `medge fig4 | fig5 | fig6 | fig7 | fig8 | table2 | all`, plus
-//! `medge ablation` (the future-work contextual multi-scheduler) and
-//! `medge trace` (trace-file tooling). Argument parsing is in-tree (the
-//! offline build has no clap): `--minutes F`, `--seed N`, `--config PATH`.
+//! `medge ablation` (the future-work contextual multi-scheduler),
+//! `medge trace` (trace-file tooling), and `medge sweep` — a parallel
+//! scheduler×load scenario grid built on the [`medge::scenario`] API with
+//! optional churn/heterogeneity stress and JSON row export. Argument
+//! parsing is in-tree (the offline build has no clap): `--minutes F`,
+//! `--seed N`, `--config PATH`, and the sweep options below.
 
 use medge::config::SystemConfig;
 use medge::experiments;
 use medge::metrics::report;
+use medge::scenario::{ScenarioBuilder, SchedKind, Sweep};
 use medge::workload::trace::{Trace, TraceSpec};
 
 const USAGE: &str = "\
@@ -25,6 +29,9 @@ COMMANDS:
   table2   Core allocation mix under congestion
   all      Everything above
   ablation Contextual multi-scheduler vs WPS vs RAS (future work)
+  sweep    Parallel scenario grid (schedulers × weighted loads):
+           --scheds wps,ras[,multi] --loads 1,2,3,4 --threads N
+           --json PATH (export rows)  --churn (device 3 leaves/rejoins)
   trace    Generate a trace file: --spec S --frames N --out PATH
            (S: uniform | weighted1..weighted4)
 
@@ -32,6 +39,11 @@ OPTIONS:
   --minutes F   simulated experiment duration in minutes (default 30)
   --seed N      RNG seed (traces, shuffles, probe hosts, bursts)
   --config P    key-value config file overriding the paper defaults
+  --scheds L    sweep: comma list of schedulers (default wps,ras)
+  --loads L     sweep: comma list of weighted loads 1..4 (default 1,2,3,4)
+  --threads N   sweep: worker threads (default: available parallelism)
+  --json P      sweep: write the metric rows as a JSON array to P
+  --churn       sweep: device 3 leaves at 25% and rejoins at 60% of the run
 ";
 
 struct Args {
@@ -42,6 +54,11 @@ struct Args {
     spec: String,
     frames: usize,
     out: Option<std::path::PathBuf>,
+    scheds: String,
+    loads: String,
+    threads: Option<usize>,
+    json: Option<std::path::PathBuf>,
+    churn: bool,
 }
 
 fn parse_args() -> anyhow::Result<Args> {
@@ -53,6 +70,11 @@ fn parse_args() -> anyhow::Result<Args> {
         spec: "weighted4".to_string(),
         frames: 96,
         out: None,
+        scheds: "wps,ras".to_string(),
+        loads: "1,2,3,4".to_string(),
+        threads: None,
+        json: None,
+        churn: false,
     };
     let mut it = std::env::args().skip(1);
     while let Some(a) = it.next() {
@@ -66,6 +88,11 @@ fn parse_args() -> anyhow::Result<Args> {
             "--spec" => args.spec = value("--spec")?,
             "--frames" => args.frames = value("--frames")?.parse()?,
             "--out" => args.out = Some(value("--out")?.into()),
+            "--scheds" => args.scheds = value("--scheds")?,
+            "--loads" => args.loads = value("--loads")?,
+            "--threads" => args.threads = Some(value("--threads")?.parse()?),
+            "--json" => args.json = Some(value("--json")?.into()),
+            "--churn" => args.churn = true,
             "-h" | "--help" => {
                 print!("{USAGE}");
                 std::process::exit(0);
@@ -78,6 +105,59 @@ fn parse_args() -> anyhow::Result<Args> {
         anyhow::bail!("missing command\n{USAGE}");
     }
     Ok(args)
+}
+
+/// Build the sweep grid: schedulers × weighted loads, with optional churn
+/// stress, on a shared base config.
+fn build_sweep(cfg: &SystemConfig, args: &Args) -> anyhow::Result<Sweep> {
+    let kinds: Vec<SchedKind> = args
+        .scheds
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(SchedKind::parse)
+        .collect::<anyhow::Result<_>>()?;
+    let loads: Vec<u8> = args
+        .loads
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| {
+            let n: u8 = s.parse().map_err(|_| anyhow::anyhow!("bad load: {s}"))?;
+            anyhow::ensure!((1..=4).contains(&n), "load out of range 1..4: {n}");
+            Ok(n)
+        })
+        .collect::<anyhow::Result<_>>()?;
+    anyhow::ensure!(!kinds.is_empty() && !loads.is_empty(), "empty sweep grid");
+    anyhow::ensure!(
+        !args.churn || cfg.n_devices >= 2,
+        "--churn needs at least 2 devices (fleet has {})",
+        cfg.n_devices
+    );
+    let mut sweep = Sweep::new();
+    if let Some(t) = args.threads {
+        sweep = sweep.threads(t);
+    }
+    // Churn stress targets the last device of the configured fleet, not a
+    // fixed index: a smaller --config fleet must not turn the "leave" into
+    // a no-op and the "join" into a capacity boost.
+    let churn_device = cfg.n_devices.saturating_sub(1);
+    for &n in &loads {
+        for &kind in &kinds {
+            let mut b = ScenarioBuilder::new()
+                .config(cfg.clone())
+                .scheduler(kind)
+                .trace(TraceSpec::Weighted(n))
+                .minutes(args.minutes)
+                .named(format!("{}_{}", kind.label(), n));
+            if args.churn {
+                // Stress regime: the device drops out a quarter of the way
+                // through and rejoins at 60 % of the run.
+                let total_s = args.minutes * 60.0;
+                b = b.leave_at(total_s * 0.25, churn_device).join_at(total_s * 0.60, churn_device);
+            }
+            sweep = sweep.add(b.build());
+        }
+    }
+    Ok(sweep)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -131,6 +211,22 @@ fn main() -> anyhow::Result<()> {
             let runs = experiments::ablation_multi(&cfg, minutes);
             print!("{}", report::fig4(&runs));
             print!("{}", report::fig5(&runs));
+        }
+        "sweep" => {
+            let sweep = build_sweep(&cfg, &args)?;
+            eprintln!(
+                "sweep: {} scenarios × {:.1} simulated minutes{}",
+                sweep.len(),
+                minutes,
+                if args.churn { " (churn stress on)" } else { "" }
+            );
+            let runs = sweep.run();
+            print!("{}", report::fig4(&runs));
+            print!("{}", report::fig5(&runs));
+            if let Some(path) = &args.json {
+                std::fs::write(path, report::json_rows(&runs))?;
+                println!("\nwrote {} JSON rows to {}", runs.len(), path.display());
+            }
         }
         "trace" => {
             let out = args.out.ok_or_else(|| anyhow::anyhow!("trace needs --out PATH"))?;

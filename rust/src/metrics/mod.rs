@@ -89,6 +89,12 @@ pub struct Metrics {
     pub two_core_allocs: u64,
     pub four_core_allocs: u64,
 
+    // ---- fleet churn (scenario API; zero in the paper's fixed testbed) ----
+    pub churn_joins: u64,
+    pub churn_leaves: u64,
+    /// Live allocations evicted because their device left the fleet.
+    pub churn_evicted: u64,
+
     // ---- bandwidth mechanism diagnostics (Fig. 6/7) ----
     pub bandwidth_updates: u64,
     pub link_rebuild_ops: u64,

@@ -1,7 +1,11 @@
 //! Renderers that print each paper figure/table as text rows, using the
-//! same series the paper plots (Table I labels: WPS_N, RAS_N, BIT_N).
+//! same series the paper plots (Table I labels: WPS_N, RAS_N, BIT_N),
+//! plus a machine-readable JSON export ([`json_rows`]) for sweep results
+//! and bench trajectory files (`BENCH_*.json`). JSON is emitted by hand —
+//! the offline build has no serde.
 
 use super::Metrics;
+use crate::metrics::LatencyStat;
 
 fn header(title: &str) -> String {
     format!("\n=== {title} ===\n")
@@ -152,6 +156,103 @@ pub fn table2(runs: &[Metrics]) -> String {
     s
 }
 
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Finite-only f64 rendering (rust's `{}` for finite f64 is valid JSON).
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn json_latency(s: &LatencyStat) -> String {
+    format!(
+        "{{\"count\": {}, \"mean_ms\": {}, \"max_ms\": {}}}",
+        s.count,
+        json_f64(s.mean_ms()),
+        json_f64(s.max_ms())
+    )
+}
+
+/// One metrics row as a JSON object (every counter the figures use).
+pub fn json_row(m: &Metrics) -> String {
+    let mut f = Vec::new();
+    f.push(format!("\"label\": \"{}\"", json_escape(&m.label)));
+    f.push(format!("\"frames_total\": {}", m.frames_total));
+    f.push(format!("\"frames_completed\": {}", m.frames_completed));
+    f.push(format!("\"frame_completion_rate\": {}", json_f64(m.frame_completion_rate())));
+    f.push(format!("\"hp_generated\": {}", m.hp_generated));
+    f.push(format!("\"hp_allocated_no_preempt\": {}", m.hp_allocated_no_preempt));
+    f.push(format!("\"hp_allocated_with_preempt\": {}", m.hp_allocated_with_preempt));
+    f.push(format!("\"hp_rejected\": {}", m.hp_rejected));
+    f.push(format!("\"hp_completed\": {}", m.hp_completed));
+    f.push(format!("\"hp_violations\": {}", m.hp_violations));
+    f.push(format!("\"lp_generated\": {}", m.lp_generated));
+    f.push(format!("\"lp_allocated_initial\": {}", m.lp_allocated_initial));
+    f.push(format!("\"lp_alloc_failures\": {}", m.lp_alloc_failures));
+    f.push(format!("\"lp_completed_initial\": {}", m.lp_completed_initial));
+    f.push(format!("\"lp_completed_realloc\": {}", m.lp_completed_realloc));
+    f.push(format!("\"lp_violations\": {}", m.lp_violations));
+    f.push(format!("\"lp_preempted\": {}", m.lp_preempted));
+    f.push(format!("\"lp_realloc_attempts\": {}", m.lp_realloc_attempts));
+    f.push(format!("\"lp_realloc_success\": {}", m.lp_realloc_success));
+    f.push(format!("\"offloaded_total\": {}", m.offloaded_total));
+    f.push(format!("\"offloaded_completed\": {}", m.offloaded_completed));
+    f.push(format!("\"lat_hp_alloc\": {}", json_latency(&m.lat_hp_alloc)));
+    f.push(format!("\"lat_hp_preempt\": {}", json_latency(&m.lat_hp_preempt)));
+    f.push(format!("\"lat_lp_alloc\": {}", json_latency(&m.lat_lp_alloc)));
+    f.push(format!("\"lat_lp_realloc\": {}", json_latency(&m.lat_lp_realloc)));
+    f.push(format!("\"two_core_allocs\": {}", m.two_core_allocs));
+    f.push(format!("\"four_core_allocs\": {}", m.four_core_allocs));
+    f.push(format!("\"churn_joins\": {}", m.churn_joins));
+    f.push(format!("\"churn_leaves\": {}", m.churn_leaves));
+    f.push(format!("\"churn_evicted\": {}", m.churn_evicted));
+    f.push(format!("\"bandwidth_updates\": {}", m.bandwidth_updates));
+    f.push(format!("\"link_rebuild_ops\": {}", m.link_rebuild_ops));
+    f.push(format!(
+        "\"final_bandwidth_estimate_bps\": {}",
+        json_f64(m.final_bandwidth_estimate_bps)
+    ));
+    f.push(format!("\"controller_busy_us\": {}", m.controller_busy_us));
+    f.push(format!(
+        "\"reject_reasons\": [{}, {}, {}, {}]",
+        m.reject_reasons[0], m.reject_reasons[1], m.reject_reasons[2], m.reject_reasons[3]
+    ));
+    format!("{{{}}}", f.join(", "))
+}
+
+/// A sweep result as a JSON array of row objects (stable field order, one
+/// row per line — diffable and trivially parseable).
+pub fn json_rows(runs: &[Metrics]) -> String {
+    let mut s = String::from("[\n");
+    for (i, m) in runs.iter().enumerate() {
+        s.push_str("  ");
+        s.push_str(&json_row(m));
+        if i + 1 < runs.len() {
+            s.push(',');
+        }
+        s.push('\n');
+    }
+    s.push_str("]\n");
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -181,5 +282,31 @@ mod tests {
         assert!(fig6(&runs).contains("lp_total"));
         assert!(fig7(&runs).contains("bw_updates"));
         assert!(fig8(&runs).contains("est_Mbps"));
+    }
+
+    #[test]
+    fn json_rows_are_wellformed_and_complete() {
+        let runs = vec![sample("WPS_1"), sample("RAS \"odd\"\\label")];
+        let j = json_rows(&runs);
+        // Structure: an array with one object per row.
+        assert!(j.trim_start().starts_with('['));
+        assert!(j.trim_end().ends_with(']'));
+        assert_eq!(j.matches("\"label\"").count(), 2);
+        // Escaping: the quote and backslash survive as JSON escapes.
+        assert!(j.contains("RAS \\\"odd\\\"\\\\label"));
+        // Field spot checks.
+        assert!(j.contains("\"frames_total\": 100"));
+        assert!(j.contains("\"frame_completion_rate\": 0.73"));
+        assert!(j.contains("\"lat_hp_alloc\": {\"count\": 1, \"mean_ms\": 1.2"));
+        assert!(j.contains("\"reject_reasons\": [0, 0, 0, 0]"));
+        // Balanced braces (cheap well-formedness proxy without a parser).
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+    }
+
+    #[test]
+    fn json_f64_handles_non_finite() {
+        assert_eq!(json_f64(f64::NAN), "null");
+        assert_eq!(json_f64(f64::INFINITY), "null");
+        assert_eq!(json_f64(0.5), "0.5");
     }
 }

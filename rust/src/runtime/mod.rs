@@ -7,12 +7,18 @@
 //! emits protos with 64-bit instruction ids that xla_extension 0.5.1
 //! rejects; the text parser reassigns ids and round-trips cleanly (see
 //! /opt/xla-example/README.md).
+//!
+//! The PJRT backend needs the offline `xla` crate closure and is gated
+//! behind the `pjrt` cargo feature. Without it (the default — the crate
+//! is not on crates.io) everything still compiles: [`InferenceEngine`]
+//! becomes a stub whose `load` returns an error, and the whole
+//! scheduling/simulation stack is unaffected.
 
 pub mod image;
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 /// The three pipeline stages of Fig. 1.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -48,12 +54,6 @@ pub const IMAGE_SIDE: usize = 64;
 /// Flattened input element count.
 pub const IMAGE_ELEMS: usize = IMAGE_SIDE * IMAGE_SIDE * 3;
 
-/// A compiled pipeline stage.
-pub struct CompiledStage {
-    pub stage: Stage,
-    exe: xla::PjRtLoadedExecutable,
-}
-
 /// One inference result: per-class logits.
 #[derive(Debug, Clone)]
 pub struct Logits(pub Vec<f32>);
@@ -66,93 +66,6 @@ impl Logits {
             .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
             .map(|(i, _)| i)
             .unwrap_or(0)
-    }
-}
-
-/// The PJRT inference engine hosting all three stages.
-pub struct InferenceEngine {
-    client: xla::PjRtClient,
-    stages: Vec<CompiledStage>,
-}
-
-impl InferenceEngine {
-    /// Load and compile every stage artifact under `artifacts_dir`.
-    pub fn load(artifacts_dir: &Path) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        let mut stages = Vec::new();
-        for stage in [Stage::Detector, Stage::Binary, Stage::Classifier] {
-            let path = artifacts_dir.join(stage.artifact_name());
-            let exe = Self::compile_one(&client, &path)
-                .with_context(|| format!("compile {}", path.display()))?;
-            stages.push(CompiledStage { stage, exe });
-        }
-        Ok(Self { client, stages })
-    }
-
-    fn compile_one(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not UTF-8")?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        Ok(client.compile(&comp)?)
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    fn compiled(&self, stage: Stage) -> &CompiledStage {
-        self.stages.iter().find(|s| s.stage == stage).expect("stage loaded")
-    }
-
-    /// Run one stage on a flattened `[IMAGE_SIDE, IMAGE_SIDE, 3]` f32
-    /// image in [0, 1]. Returns the per-class logits.
-    pub fn infer(&self, stage: Stage, image: &[f32]) -> Result<Logits> {
-        anyhow::ensure!(
-            image.len() == IMAGE_ELEMS,
-            "expected {IMAGE_ELEMS} elements, got {}",
-            image.len()
-        );
-        let input = xla::Literal::vec1(image).reshape(&[
-            1,
-            IMAGE_SIDE as i64,
-            IMAGE_SIDE as i64,
-            3,
-        ])?;
-        let compiled = self.compiled(stage);
-        let result = compiled.exe.execute::<xla::Literal>(&[input])?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True → a 1-tuple of logits.
-        let out = result.to_tuple1()?;
-        let logits = out.to_vec::<f32>()?;
-        anyhow::ensure!(
-            logits.len() == stage.n_classes(),
-            "stage {stage:?}: expected {} logits, got {}",
-            stage.n_classes(),
-            logits.len()
-        );
-        Ok(Logits(logits))
-    }
-
-    /// Run the full pipeline of Fig. 1 on one frame: detector, then (if an
-    /// object is present) the binary classifier, then (if recyclable) the
-    /// four-class classifier. Returns what each executed stage decided.
-    pub fn pipeline(&self, image: &[f32]) -> Result<PipelineResult> {
-        let det = self.infer(Stage::Detector, image)?;
-        let object_present = det.argmax() == 1;
-        if !object_present {
-            return Ok(PipelineResult { object_present, recyclable: None, class: None });
-        }
-        let bin = self.infer(Stage::Binary, image)?;
-        let recyclable = bin.argmax() == 1;
-        if !recyclable {
-            return Ok(PipelineResult { object_present, recyclable: Some(false), class: None });
-        }
-        let cls = self.infer(Stage::Classifier, image)?;
-        Ok(PipelineResult {
-            object_present,
-            recyclable: Some(true),
-            class: Some(cls.argmax()),
-        })
     }
 }
 
@@ -172,6 +85,148 @@ pub fn default_artifacts_dir() -> PathBuf {
         .unwrap_or_else(|| PathBuf::from("artifacts"))
 }
 
+#[cfg(feature = "pjrt")]
+mod pjrt_backend {
+    use super::*;
+    use anyhow::Context;
+
+    /// A compiled pipeline stage.
+    pub struct CompiledStage {
+        pub stage: Stage,
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    /// The PJRT inference engine hosting all three stages.
+    pub struct InferenceEngine {
+        client: xla::PjRtClient,
+        stages: Vec<CompiledStage>,
+    }
+
+    impl InferenceEngine {
+        /// Load and compile every stage artifact under `artifacts_dir`.
+        pub fn load(artifacts_dir: &Path) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+            let mut stages = Vec::new();
+            for stage in [Stage::Detector, Stage::Binary, Stage::Classifier] {
+                let path = artifacts_dir.join(stage.artifact_name());
+                let exe = Self::compile_one(&client, &path)
+                    .with_context(|| format!("compile {}", path.display()))?;
+                stages.push(CompiledStage { stage, exe });
+            }
+            Ok(Self { client, stages })
+        }
+
+        fn compile_one(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not UTF-8")?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(client.compile(&comp)?)
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        fn compiled(&self, stage: Stage) -> &CompiledStage {
+            self.stages.iter().find(|s| s.stage == stage).expect("stage loaded")
+        }
+
+        /// Run one stage on a flattened `[IMAGE_SIDE, IMAGE_SIDE, 3]` f32
+        /// image in [0, 1]. Returns the per-class logits.
+        pub fn infer(&self, stage: Stage, image: &[f32]) -> Result<Logits> {
+            anyhow::ensure!(
+                image.len() == IMAGE_ELEMS,
+                "expected {IMAGE_ELEMS} elements, got {}",
+                image.len()
+            );
+            let input = xla::Literal::vec1(image).reshape(&[
+                1,
+                IMAGE_SIDE as i64,
+                IMAGE_SIDE as i64,
+                3,
+            ])?;
+            let compiled = self.compiled(stage);
+            let result = compiled.exe.execute::<xla::Literal>(&[input])?[0][0].to_literal_sync()?;
+            // aot.py lowers with return_tuple=True → a 1-tuple of logits.
+            let out = result.to_tuple1()?;
+            let logits = out.to_vec::<f32>()?;
+            anyhow::ensure!(
+                logits.len() == stage.n_classes(),
+                "stage {stage:?}: expected {} logits, got {}",
+                stage.n_classes(),
+                logits.len()
+            );
+            Ok(Logits(logits))
+        }
+
+        /// Run the full pipeline of Fig. 1 on one frame: detector, then (if
+        /// an object is present) the binary classifier, then (if recyclable)
+        /// the four-class classifier. Returns what each stage decided.
+        pub fn pipeline(&self, image: &[f32]) -> Result<PipelineResult> {
+            let det = self.infer(Stage::Detector, image)?;
+            let object_present = det.argmax() == 1;
+            if !object_present {
+                return Ok(PipelineResult { object_present, recyclable: None, class: None });
+            }
+            let bin = self.infer(Stage::Binary, image)?;
+            let recyclable = bin.argmax() == 1;
+            if !recyclable {
+                return Ok(PipelineResult { object_present, recyclable: Some(false), class: None });
+            }
+            let cls = self.infer(Stage::Classifier, image)?;
+            Ok(PipelineResult {
+                object_present,
+                recyclable: Some(true),
+                class: Some(cls.argmax()),
+            })
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_backend::{CompiledStage, InferenceEngine};
+
+#[cfg(not(feature = "pjrt"))]
+mod stub_backend {
+    use super::*;
+
+    enum Never {}
+
+    /// Stub engine for builds without the `pjrt` feature: the same API
+    /// surface, but `load` always fails, so no instance can exist (the
+    /// other methods are statically unreachable).
+    pub struct InferenceEngine {
+        never: Never,
+    }
+
+    impl InferenceEngine {
+        pub fn load(artifacts_dir: &Path) -> Result<Self> {
+            anyhow::bail!(
+                "medge was built without the `pjrt` feature; rebuild with \
+                 `--features pjrt` (requires the offline xla crate closure) \
+                 to load artifacts from {}",
+                artifacts_dir.display()
+            )
+        }
+
+        pub fn platform(&self) -> String {
+            match self.never {}
+        }
+
+        pub fn infer(&self, _stage: Stage, _image: &[f32]) -> Result<Logits> {
+            match self.never {}
+        }
+
+        pub fn pipeline(&self, _image: &[f32]) -> Result<PipelineResult> {
+            match self.never {}
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub_backend::InferenceEngine;
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -187,6 +242,13 @@ mod tests {
     fn stage_metadata() {
         assert_eq!(Stage::Classifier.n_classes(), 4);
         assert_eq!(Stage::Detector.artifact_name(), "detector.hlo.txt");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_load_reports_missing_feature() {
+        let err = InferenceEngine::load(Path::new("artifacts")).unwrap_err();
+        assert!(format!("{err}").contains("pjrt"));
     }
 
     // Engine-loading tests live in rust/tests/runtime_inference.rs — they

@@ -1,0 +1,486 @@
+//! Composable scenario construction and parallel sweep execution.
+//!
+//! The paper's evaluation is a handful of fixed figures; validating the
+//! accuracy-vs-performance claim at scale means running *many* schedulers
+//! over *many* scenarios cheaply. This module is the one place that
+//! happens:
+//!
+//! * [`ScenarioBuilder`] — a fluent spec of one experiment: trace
+//!   distribution, device fleet (count, per-device speed heterogeneity),
+//!   congestion/bandwidth regimes, fleet churn schedule, scheduler, seed,
+//!   duration. `build()` freezes it into a [`Scenario`].
+//! * [`Scenario`] — compiles to an [`Engine`] run and produces one
+//!   [`Metrics`] row. Cheap to clone, `Send`, fully deterministic from its
+//!   config seed.
+//! * [`Sweep`] — fans a list of scenarios across `std::thread::scope`
+//!   workers and collects the rows in input order (JSON-exportable via
+//!   [`crate::metrics::report::json_rows`]).
+//!
+//! ```no_run
+//! use medge::scenario::{ScenarioBuilder, SchedKind, Sweep};
+//! use medge::workload::trace::TraceSpec;
+//!
+//! let mut sweep = Sweep::new();
+//! for kind in [SchedKind::Wps, SchedKind::Ras] {
+//!     for n in 1..=4u8 {
+//!         sweep = sweep.add(
+//!             ScenarioBuilder::new()
+//!                 .scheduler(kind)
+//!                 .trace(TraceSpec::Weighted(n))
+//!                 .minutes(30.0)
+//!                 .seed(42)
+//!                 .leave_at(300.0, 3)       // device 3 drops out at 5 min
+//!                 .join_at(600.0, 3)        // ... and returns at 10 min
+//!                 .congestion_at(900.0, 36e6, 0.75) // storm from 15 min
+//!                 .build(),
+//!         );
+//!     }
+//! }
+//! let rows = sweep.run();
+//! ```
+
+use crate::config::SystemConfig;
+use crate::coordinator::scheduler::multi::MultiScheduler;
+use crate::coordinator::scheduler::ras_sched::RasScheduler;
+use crate::coordinator::scheduler::wps::WpsScheduler;
+use crate::coordinator::scheduler::Scheduler;
+use crate::coordinator::task::DeviceId;
+use crate::metrics::Metrics;
+use crate::sim::engine::RunExtras;
+use crate::sim::Engine;
+use crate::time::secs;
+use crate::workload::trace::{Trace, TraceSpec};
+
+/// Number of trace frames in a wall-clock experiment duration (the single
+/// definition — `experiments::frames_for_minutes` delegates here).
+pub fn frames_for_minutes(cfg: &SystemConfig, minutes: f64) -> usize {
+    ((minutes * 60.0) / cfg.frame_period_s).ceil() as usize
+}
+
+/// Which scheduler a scenario runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedKind {
+    Wps,
+    Ras,
+    /// Future-work contextual multi-scheduler (ablation).
+    Multi,
+}
+
+impl SchedKind {
+    pub fn build(self, cfg: &SystemConfig) -> Box<dyn Scheduler> {
+        match self {
+            SchedKind::Wps => Box::new(WpsScheduler::new(cfg, 0, cfg.link_bps)),
+            SchedKind::Ras => Box::new(RasScheduler::new(cfg, 0, cfg.link_bps)),
+            SchedKind::Multi => Box::new(MultiScheduler::new(cfg, 0, cfg.link_bps, 8)),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            SchedKind::Wps => "WPS",
+            SchedKind::Ras => "RAS",
+            SchedKind::Multi => "MULTI",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "wps" => Ok(SchedKind::Wps),
+            "ras" => Ok(SchedKind::Ras),
+            "multi" => Ok(SchedKind::Multi),
+            other => anyhow::bail!("unknown scheduler: {other} (wps | ras | multi)"),
+        }
+    }
+}
+
+/// A frozen experiment specification: everything an [`Engine`] run needs.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub cfg: SystemConfig,
+    pub kind: SchedKind,
+    pub spec: TraceSpec,
+    pub frames: usize,
+    pub extras: RunExtras,
+}
+
+impl Scenario {
+    /// Compile to a ready-to-run engine (trace regenerated from the seed).
+    pub fn engine(&self) -> Engine {
+        let trace = Trace::generate(self.spec, self.cfg.n_devices, self.frames, self.cfg.seed);
+        Engine::with_extras(
+            self.cfg.clone(),
+            self.kind.build(&self.cfg),
+            trace,
+            &self.name,
+            self.extras.clone(),
+        )
+    }
+
+    /// Run to completion and return the metrics row.
+    pub fn run(&self) -> Metrics {
+        self.engine().run()
+    }
+}
+
+/// Fluent scenario construction. All knobs default to the paper's testbed
+/// (Section V): 4 homogeneous Pi 2B devices, weighted-4 load, RAS
+/// scheduler, 30 simulated minutes, no churn, config-static congestion.
+#[derive(Debug, Clone)]
+pub struct ScenarioBuilder {
+    name: Option<String>,
+    cfg: SystemConfig,
+    kind: SchedKind,
+    spec: TraceSpec,
+    frames: Option<usize>,
+    minutes: f64,
+    extras: RunExtras,
+}
+
+impl Default for ScenarioBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ScenarioBuilder {
+    pub fn new() -> Self {
+        Self {
+            name: None,
+            cfg: SystemConfig::default(),
+            kind: SchedKind::Ras,
+            spec: TraceSpec::Weighted(4),
+            frames: None,
+            minutes: 30.0,
+            extras: RunExtras::default(),
+        }
+    }
+
+    /// Replace the whole base config (overrides accumulate on top).
+    pub fn config(mut self, cfg: SystemConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Scenario label used in reports (defaults to `KIND_SPEC`).
+    pub fn named(mut self, name: impl Into<String>) -> Self {
+        self.name = Some(name.into());
+        self
+    }
+
+    pub fn scheduler(mut self, kind: SchedKind) -> Self {
+        self.kind = kind;
+        self
+    }
+
+    pub fn trace(mut self, spec: TraceSpec) -> Self {
+        self.spec = spec;
+        self
+    }
+
+    /// Simulated duration in minutes (converted to trace frames).
+    pub fn minutes(mut self, minutes: f64) -> Self {
+        self.minutes = minutes;
+        self
+    }
+
+    /// Exact trace frame count (overrides `minutes`).
+    pub fn frames(mut self, frames: usize) -> Self {
+        self.frames = Some(frames);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Fleet size at start (the paper uses 4).
+    pub fn devices(mut self, n: usize) -> Self {
+        self.cfg.n_devices = n;
+        self
+    }
+
+    pub fn cores_per_device(mut self, cores: u32) -> Self {
+        self.cfg.cores_per_device = cores;
+        self
+    }
+
+    /// Heterogeneous fleet: `device` runs `slowdown`× the planned
+    /// processing time (1.0 = nominal; 1.3 = 30 % slower than the
+    /// controller's homogeneous plan believes).
+    pub fn device_speed(mut self, device: DeviceId, slowdown: f64) -> Self {
+        if self.extras.device_speed.len() <= device {
+            self.extras.device_speed.resize(device + 1, 1.0);
+        }
+        self.extras.device_speed[device] = slowdown;
+        self
+    }
+
+    /// Static bandwidth probe interval (seconds).
+    pub fn bandwidth_interval_s(mut self, s: f64) -> Self {
+        self.cfg.bandwidth_interval_s = s;
+        self
+    }
+
+    /// Static background burst duty cycle in [0, 1] (the paper's Fig. 8
+    /// knob); for mid-run changes use [`Self::congestion_at`].
+    pub fn duty_cycle(mut self, duty: f64) -> Self {
+        self.cfg.duty_cycle = duty;
+        self
+    }
+
+    /// Mid-run congestion regime change: from `at_s` seconds, background
+    /// bursts consume `bg_bps` bits/s at `duty` duty cycle.
+    pub fn congestion_at(mut self, at_s: f64, bg_bps: f64, duty: f64) -> Self {
+        self.extras.regimes.push((secs(at_s), bg_bps, duty));
+        self
+    }
+
+    /// Device `device` joins (or re-joins) the fleet at `at_s` seconds.
+    pub fn join_at(mut self, at_s: f64, device: DeviceId) -> Self {
+        self.extras.churn.push((secs(at_s), device, true));
+        self
+    }
+
+    /// Device `device` leaves the fleet at `at_s` seconds; its live tasks
+    /// are evicted (guests re-enter scheduling, its own frames fail).
+    pub fn leave_at(mut self, at_s: f64, device: DeviceId) -> Self {
+        self.extras.churn.push((secs(at_s), device, false));
+        self
+    }
+
+    /// Freeze into a runnable [`Scenario`].
+    pub fn build(self) -> Scenario {
+        let frames = self.frames.unwrap_or_else(|| frames_for_minutes(&self.cfg, self.minutes));
+        let name = self
+            .name
+            .unwrap_or_else(|| format!("{}_{}", self.kind.label(), self.spec.label()));
+        Scenario { name, cfg: self.cfg, kind: self.kind, spec: self.spec, frames, extras: self.extras }
+    }
+}
+
+/// A grid of scenarios executed across worker threads. Rows come back in
+/// the order scenarios were added, independent of completion order.
+#[derive(Debug, Clone, Default)]
+pub struct Sweep {
+    scenarios: Vec<Scenario>,
+    threads: Option<usize>,
+}
+
+impl Sweep {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(mut self, scenario: Scenario) -> Self {
+        self.scenarios.push(scenario);
+        self
+    }
+
+    /// Worker-thread cap (defaults to available parallelism).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = Some(n.max(1));
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.scenarios.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.scenarios.is_empty()
+    }
+
+    pub fn scenarios(&self) -> &[Scenario] {
+        &self.scenarios
+    }
+
+    /// Run every scenario, fanning across scoped worker threads. Each
+    /// engine run is single-threaded and deterministic, so the parallel
+    /// rows are byte-identical to sequential execution.
+    pub fn run(&self) -> Vec<Metrics> {
+        let n = self.scenarios.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let workers = self
+            .threads
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+            })
+            .clamp(1, n);
+        if workers == 1 {
+            return self.scenarios.iter().map(|s| s.run()).collect();
+        }
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        let (tx, rx) = std::sync::mpsc::channel::<(usize, Metrics)>();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let tx = tx.clone();
+                let next = &next;
+                let scenarios = &self.scenarios;
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= scenarios.len() {
+                        break;
+                    }
+                    // A worker dying (scenario panic) drops its tx; the
+                    // collector below then reports the missing row.
+                    let _ = tx.send((i, scenarios[i].run()));
+                });
+            }
+            drop(tx);
+            let mut rows: Vec<Option<Metrics>> = (0..n).map(|_| None).collect();
+            for (i, m) in rx {
+                rows[i] = Some(m);
+            }
+            rows.into_iter()
+                .enumerate()
+                .map(|(i, m)| m.unwrap_or_else(|| panic!("scenario {i} worker died")))
+                .collect()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick(kind: SchedKind, seed: u64) -> Scenario {
+        ScenarioBuilder::new()
+            .scheduler(kind)
+            .trace(TraceSpec::Weighted(2))
+            .frames(8)
+            .seed(seed)
+            .build()
+    }
+
+    #[test]
+    fn builder_defaults_match_paper_testbed() {
+        let s = ScenarioBuilder::new().build();
+        assert_eq!(s.cfg.n_devices, 4);
+        assert_eq!(s.kind, SchedKind::Ras);
+        assert_eq!(s.name, "RAS_4");
+        // 30 min at 18.86 s/frame → 96 frames.
+        assert_eq!(s.frames, 96);
+        assert!(s.extras.churn.is_empty() && s.extras.regimes.is_empty());
+    }
+
+    #[test]
+    fn scenario_run_matches_direct_engine_run() {
+        // The builder is sugar, not semantics: compiling through
+        // Scenario must equal hand-building the engine.
+        let s = quick(SchedKind::Ras, 7);
+        let via_scenario = s.run();
+        let trace = Trace::generate(s.spec, s.cfg.n_devices, s.frames, s.cfg.seed);
+        let direct =
+            Engine::new(s.cfg.clone(), s.kind.build(&s.cfg), trace, &s.name).run();
+        assert_eq!(format!("{via_scenario:?}"), format!("{direct:?}"));
+    }
+
+    #[test]
+    fn sweep_preserves_input_order_and_determinism() {
+        let mut sweep = Sweep::new().threads(4);
+        for (i, kind) in [SchedKind::Ras, SchedKind::Wps, SchedKind::Ras, SchedKind::Wps]
+            .into_iter()
+            .enumerate()
+        {
+            let mut s = quick(kind, 11 + i as u64);
+            s.name = format!("row{i}");
+            sweep = sweep.add(s);
+        }
+        let parallel = sweep.run();
+        let sequential = sweep.clone().threads(1).run();
+        assert_eq!(parallel.len(), 4);
+        for (i, (p, q)) in parallel.iter().zip(&sequential).enumerate() {
+            assert_eq!(p.label, format!("row{i}"));
+            assert_eq!(format!("{p:?}"), format!("{q:?}"), "row {i} differs");
+        }
+    }
+
+    #[test]
+    fn churn_evicts_and_rejoins() {
+        // Device 1 leaves mid-run and returns: the run must record the
+        // churn, keep accounting identities, and still complete frames.
+        let s = ScenarioBuilder::new()
+            .scheduler(SchedKind::Ras)
+            .trace(TraceSpec::Weighted(3))
+            .frames(20)
+            .seed(5)
+            .leave_at(60.0, 1)
+            .join_at(200.0, 1)
+            .build();
+        let m = s.run();
+        assert_eq!(m.churn_leaves, 1);
+        assert_eq!(m.churn_joins, 1);
+        assert!(m.frames_completed > 0, "fleet of 3 should still make progress");
+        assert_eq!(
+            m.hp_generated,
+            m.hp_allocated_no_preempt + m.hp_allocated_with_preempt + m.hp_rejected
+        );
+    }
+
+    #[test]
+    fn leave_without_rejoin_drops_the_devices_frames() {
+        let base = ScenarioBuilder::new()
+            .scheduler(SchedKind::Ras)
+            .trace(TraceSpec::Weighted(4))
+            .frames(25)
+            .seed(9);
+        let full = base.clone().build().run();
+        let short = base.leave_at(30.0, 2).build().run();
+        assert_eq!(short.churn_leaves, 1);
+        // The departed device's conveyor stops: its frames never generate.
+        assert!(
+            short.frames_total < full.frames_total,
+            "frames_total should shrink: full={} short={}",
+            full.frames_total,
+            short.frames_total
+        );
+        // Accounting identities survive the eviction path.
+        assert_eq!(
+            short.hp_generated,
+            short.hp_allocated_no_preempt + short.hp_allocated_with_preempt + short.hp_rejected
+        );
+        assert!(short.frames_completed <= short.frames_total);
+    }
+
+    #[test]
+    fn heterogeneous_slow_device_hurts_its_deadlines() {
+        let base = ScenarioBuilder::new()
+            .scheduler(SchedKind::Ras)
+            .trace(TraceSpec::Weighted(3))
+            .frames(25)
+            .seed(13);
+        let nominal = base.clone().build().run();
+        let slow = base.device_speed(0, 1.6).build().run();
+        assert!(
+            slow.lp_violations + slow.hp_violations
+                >= nominal.lp_violations + nominal.hp_violations,
+            "a 60% slower device should not reduce violations: nominal={} slow={}",
+            nominal.lp_violations + nominal.hp_violations,
+            slow.lp_violations + slow.hp_violations
+        );
+    }
+
+    #[test]
+    fn midrun_congestion_regime_kicks_in() {
+        let base = ScenarioBuilder::new()
+            .scheduler(SchedKind::Ras)
+            .trace(TraceSpec::Weighted(4))
+            .frames(25)
+            .seed(17);
+        let quiet = base.clone().build().run();
+        let stormy = base.congestion_at(120.0, 36e6, 0.75).build().run();
+        // From minute 2 the stormy run's probes measure a link that bursts
+        // at 90% background load 75% of the time: the EWMA estimate must
+        // end up below the quiet run's (which only sees task transfers).
+        assert!(
+            stormy.final_bandwidth_estimate_bps < quiet.final_bandwidth_estimate_bps,
+            "storm should depress the bandwidth estimate: quiet={:.1}Mb/s stormy={:.1}Mb/s",
+            quiet.final_bandwidth_estimate_bps / 1e6,
+            stormy.final_bandwidth_estimate_bps / 1e6
+        );
+    }
+}

@@ -24,14 +24,32 @@ use std::collections::HashMap;
 
 use crate::config::SystemConfig;
 use crate::coordinator::bandwidth::{BandwidthEstimator, ProbeRound};
-use crate::coordinator::scheduler::{HpOutcome, LpOutcome, Ops, Scheduler};
-use crate::coordinator::task::{Allocation, FrameId, Task, TaskId};
+use crate::coordinator::scheduler::{Decision, Ops, Outcome, SchedEvent, Scheduler};
+use crate::coordinator::task::{Allocation, DeviceId, FrameId, Task, TaskId};
 use crate::metrics::Metrics;
 use crate::sim::events::{Event, EventQueue};
 use crate::sim::netsim::{Medium, FlowId, PROBE_FLOW_BASE};
 use crate::time::{SimDuration, SimTime};
 use crate::util::Rng;
 use crate::workload::trace::Trace;
+
+/// Scenario-level extras beyond the paper's fixed homogeneous testbed.
+/// `Default` reproduces the paper's setup exactly (and byte-identically:
+/// the default path makes the same RNG draws and event pushes as before
+/// these knobs existed).
+#[derive(Debug, Clone, Default)]
+pub struct RunExtras {
+    /// Per-device processing-time multiplier (1.0 = the paper's Pi 2B;
+    /// 1.3 = 30 % slower than the controller's homogeneous plan). Shorter
+    /// than the fleet ⇒ remaining devices run at 1.0.
+    pub device_speed: Vec<f64>,
+    /// Fleet churn schedule: (time, device, join?). Leaves evict the
+    /// device's live tasks; joins (re-)activate a device slot.
+    pub churn: Vec<(SimTime, DeviceId, bool)>,
+    /// Congestion regime changes: (time, bg_bps, duty_cycle). Overrides
+    /// the config's static burst generator from that point on.
+    pub regimes: Vec<(SimTime, f64, f64)>,
+}
 
 /// Runtime state of a task in flight.
 #[derive(Debug, Clone)]
@@ -82,10 +100,33 @@ pub struct Engine {
     trace: Trace,
     /// No new probe/traffic events after this time (lets the queue drain).
     end_of_input: SimTime,
+    /// Fleet membership as the engine sees it (trace frames for inactive
+    /// devices are dropped; scheduler keeps its own mirror).
+    active_devices: Vec<bool>,
+    /// Per-device processing-time multiplier (scenario heterogeneity).
+    device_speed: Vec<f64>,
+    /// Current burst duty cycle (regime changes override the config's).
+    duty_cycle: f64,
+    /// Whether the traffic-toggle event chain is alive.
+    traffic_on: bool,
 }
 
 impl Engine {
+    /// The paper's fixed testbed: no churn, homogeneous devices, the
+    /// config's static congestion regime.
     pub fn new(cfg: SystemConfig, sched: Box<dyn Scheduler>, trace: Trace, label: &str) -> Self {
+        Self::with_extras(cfg, sched, trace, label, RunExtras::default())
+    }
+
+    /// Full scenario constructor (what [`crate::scenario::Scenario`]
+    /// compiles to).
+    pub fn with_extras(
+        cfg: SystemConfig,
+        sched: Box<dyn Scheduler>,
+        trace: Trace,
+        label: &str,
+        extras: RunExtras,
+    ) -> Self {
         let end_of_input = (trace.entries.len() as u64 + 1) * cfg.frame_period();
         let mut queue = EventQueue::new();
         // Each device samples its own conveyor belt: frame phases are
@@ -108,8 +149,27 @@ impl Engine {
         if cfg.duty_cycle > 0.0 {
             queue.push(0, Event::TrafficToggle { active: true });
         }
+        // Scenario schedules: fleet churn and congestion regime changes.
+        for &(at, device, join) in &extras.churn {
+            let ev = if join { Event::DeviceJoin { device } } else { Event::DeviceLeave { device } };
+            queue.push(at, ev);
+        }
+        for &(at, bg_bps, duty) in &extras.regimes {
+            queue.push(
+                at,
+                Event::RegimeChange { bg_bps_bits: bg_bps.to_bits(), duty_bits: duty.to_bits() },
+            );
+        }
+        let mut device_speed = extras.device_speed;
+        if device_speed.len() < cfg.n_devices {
+            device_speed.resize(cfg.n_devices, 1.0);
+        }
         let estimator = BandwidthEstimator::new(&cfg, cfg.link_bps);
         Self {
+            active_devices: vec![true; cfg.n_devices],
+            device_speed,
+            duty_cycle: cfg.duty_cycle,
+            traffic_on: cfg.duty_cycle > 0.0,
             medium: Medium::new(cfg.link_bps, cfg.bg_bps),
             estimator,
             queue,
@@ -171,8 +231,16 @@ impl Engine {
             Event::MediumComplete { flow, epoch } => self.on_medium_complete(flow, epoch),
             Event::ProbeStart => self.on_probe_start(),
             Event::TrafficToggle { active } => self.on_traffic_toggle(active),
-            Event::DeviceUp { .. } => {}
+            Event::DeviceJoin { device } => self.on_device_join(device),
+            Event::DeviceLeave { device } => self.on_device_leave(device),
+            Event::RegimeChange { bg_bps_bits, duty_bits } => {
+                self.on_regime_change(f64::from_bits(bg_bps_bits), f64::from_bits(duty_bits))
+            }
         }
+    }
+
+    fn device_active(&self, device: DeviceId) -> bool {
+        self.active_devices.get(device).copied().unwrap_or(false)
     }
 
     // ---- workload generation -------------------------------------------
@@ -180,6 +248,9 @@ impl Engine {
     fn on_trace_frame(&mut self, index: usize) {
         // `index` encodes (trace row, device): one event per device frame.
         let (row, device) = (index / self.cfg.n_devices, index % self.cfg.n_devices);
+        if !self.device_active(device) {
+            return; // the device has left the fleet: no camera, no frames
+        }
         let load = self.trace.entries[row].loads[device];
         if load < 0 {
             return; // no object on the belt
@@ -211,48 +282,45 @@ impl Engine {
         let task = self.tasks[&task_id].clone();
         let arrival = self.now;
         let service_start = self.busy_until.max(arrival);
-        let outcome = self.sched.schedule_high(service_start, &task);
+        let Decision { outcome, ops } =
+            self.sched.on_event(service_start, SchedEvent::HighPriority { task: &task });
+        let (decision, lat) = self.charge(arrival, ops);
         match outcome {
-            HpOutcome::Allocated { alloc, ops } => {
-                let (decision, lat) = self.charge(arrival, ops);
-                self.metrics.hp_allocated_no_preempt += 1;
-                self.metrics.lat_hp_alloc.record(lat);
-                self.start_local(alloc, decision, false);
-            }
-            HpOutcome::Preempted { alloc, victims, ops } => {
-                let (decision, lat) = self.charge(arrival, ops);
-                self.metrics.hp_allocated_with_preempt += 1;
-                self.metrics.lat_hp_preempt.record(lat);
-                for v in victims {
-                    self.cancel_task(v.task);
-                    self.metrics.lp_preempted += 1;
-                    // "Reallocation can only begin once the high-priority
-                    // task has completed pre-emption": re-entry after the
-                    // decision, plus the control round.
-                    self.metrics.lp_realloc_attempts += 1;
-                    self.queue.push(
-                        decision + self.cfg.control_latency(),
-                        Event::LpArrive { tasks: vec![v.task], realloc: true },
-                    );
+            Outcome::HpAllocated { alloc, victims } => {
+                if victims.is_empty() {
+                    self.metrics.hp_allocated_no_preempt += 1;
+                    self.metrics.lat_hp_alloc.record(lat);
+                } else {
+                    self.metrics.hp_allocated_with_preempt += 1;
+                    self.metrics.lat_hp_preempt.record(lat);
                 }
+                // "Reallocation can only begin once the high-priority task
+                // has completed pre-emption": victims re-enter after the
+                // decision, plus the control round.
+                self.requeue_preempted(victims, decision);
                 self.start_local(alloc, decision, false);
             }
-            HpOutcome::Rejected { victims, ops } => {
-                let (decision, _lat) = self.charge(arrival, ops);
+            Outcome::HpRejected { victims } => {
                 self.metrics.hp_rejected += 1;
                 self.fail_frame(task.frame);
                 // Tasks evicted by a preemption attempt that ultimately
                 // failed still get their reallocation chance.
-                for v in victims {
-                    self.cancel_task(v.task);
-                    self.metrics.lp_preempted += 1;
-                    self.metrics.lp_realloc_attempts += 1;
-                    self.queue.push(
-                        decision + self.cfg.control_latency(),
-                        Event::LpArrive { tasks: vec![v.task], realloc: true },
-                    );
-                }
+                self.requeue_preempted(victims, decision);
             }
+            other => unreachable!("HP event must yield an HP outcome, got {other:?}"),
+        }
+    }
+
+    /// Cancel preemption victims and queue their low-priority re-entry.
+    fn requeue_preempted(&mut self, victims: Vec<Allocation>, decision: SimTime) {
+        for v in victims {
+            self.cancel_task(v.task);
+            self.metrics.lp_preempted += 1;
+            self.metrics.lp_realloc_attempts += 1;
+            self.queue.push(
+                decision + self.cfg.control_latency(),
+                Event::LpArrive { tasks: vec![v.task], realloc: true },
+            );
         }
     }
 
@@ -261,15 +329,20 @@ impl Engine {
     /// (Section V: the padding is the benchmark standard deviation). The
     /// overshoot beyond the padding is what erodes thin placement margins.
     fn actual_duration(&mut self, alloc: &Allocation) -> SimDuration {
+        // Scenario heterogeneity: the controller plans for the homogeneous
+        // testbed; a slower device (factor > 1) silently overshoots the
+        // plan, eroding placement margins exactly like jitter does.
+        let slow = self.device_speed.get(alloc.device).copied().unwrap_or(1.0);
         let planned = alloc.end - alloc.start;
         if alloc.config == crate::coordinator::task::TaskConfig::HighPriority {
-            return planned; // HP runtimes are not padded in the paper
+            // HP runtimes are not padded in the paper.
+            return (planned as f64 * slow).round() as SimDuration;
         }
         let pad = crate::time::secs(self.cfg.proc_padding_s);
         let mean = planned.saturating_sub(pad);
         let sigma = self.cfg.proc_jitter_s;
         let jitter = (self.rng.gen_gauss().abs() * sigma).min(3.0 * sigma);
-        mean + crate::time::secs(jitter)
+        (mean as f64 * slow).round() as SimDuration + crate::time::secs(jitter)
     }
 
     /// Start a task that needs no transfer: runs on its device from
@@ -297,12 +370,12 @@ impl Engine {
         let deadline = self.tasks[&task_id].deadline;
         if self.now > deadline {
             self.metrics.hp_violations += 1;
-            self.sched.on_violation(self.now, task_id);
+            self.sched.on_event(self.now, SchedEvent::Violation { task: task_id });
             self.fail_frame(frame);
             return;
         }
         self.metrics.hp_completed += 1;
-        self.sched.on_complete(self.now, task_id);
+        self.sched.on_event(self.now, SchedEvent::Complete { task: task_id });
         let (lp_expected, frame_deadline) = {
             let f = self.frames.get_mut(&frame).expect("frame tracked");
             f.hp_done = true;
@@ -330,15 +403,17 @@ impl Engine {
         let tasks: Vec<Task> = task_ids.iter().map(|id| self.tasks[id].clone()).collect();
         let arrival = self.now;
         let service_start = self.busy_until.max(arrival);
-        let outcome = self.sched.schedule_low(service_start, &tasks, realloc);
+        let Decision { outcome, ops } = self
+            .sched
+            .on_event(service_start, SchedEvent::LowPriorityBatch { tasks: &tasks, realloc });
+        let (decision, lat) = self.charge(arrival, ops);
+        if realloc {
+            self.metrics.lat_lp_realloc.record(lat);
+        } else {
+            self.metrics.lat_lp_alloc.record(lat);
+        }
         match outcome {
-            LpOutcome::Allocated { allocs, ops } => {
-                let (decision, lat) = self.charge(arrival, ops);
-                if realloc {
-                    self.metrics.lat_lp_realloc.record(lat);
-                } else {
-                    self.metrics.lat_lp_alloc.record(lat);
-                }
+            Outcome::LpAllocated { allocs } => {
                 for alloc in allocs {
                     match alloc.config {
                         crate::coordinator::task::TaskConfig::LowTwoCore => self.metrics.two_core_allocs += 1,
@@ -364,18 +439,15 @@ impl Engine {
                     }
                 }
             }
-            LpOutcome::Rejected { ops } => {
-                let (_, lat) = self.charge(arrival, ops);
-                if realloc {
-                    self.metrics.lat_lp_realloc.record(lat);
-                } else {
-                    self.metrics.lat_lp_alloc.record(lat);
+            Outcome::LpRejected => {
+                if !realloc {
                     self.metrics.lp_alloc_failures += tasks.len() as u64;
                 }
                 if let Some(frame) = tasks.first().map(|t| t.frame) {
                     self.fail_frame(frame);
                 }
             }
+            other => unreachable!("LP event must yield an LP outcome, got {other:?}"),
         }
     }
 
@@ -398,7 +470,7 @@ impl Engine {
         let deadline = self.tasks[&task_id].deadline;
         if self.now > deadline {
             self.metrics.lp_violations += 1;
-            self.sched.on_violation(self.now, task_id);
+            self.sched.on_event(self.now, SchedEvent::Violation { task: task_id });
             self.fail_frame(frame);
             return;
         }
@@ -410,7 +482,7 @@ impl Engine {
         if offloaded {
             self.metrics.offloaded_completed += 1;
         }
-        self.sched.on_complete(self.now, task_id);
+        self.sched.on_event(self.now, SchedEvent::Complete { task: task_id });
         if let Some(f) = self.frames.get_mut(&frame) {
             f.lp_done += 1;
         }
@@ -454,14 +526,25 @@ impl Engine {
         if self.now > self.end_of_input {
             return; // drain phase: no new probes
         }
+        // Probing runs over the devices that are actually in the fleet:
+        // a departed device neither hosts a round nor answers pings.
+        // (With the full fleet active this draws the exact same RNG value
+        // as indexing 0..n_devices — the default path stays bit-identical.)
+        let active: Vec<DeviceId> =
+            (0..self.active_devices.len()).filter(|&d| self.active_devices[d]).collect();
+        if active.len() < 2 {
+            // Nobody to ping: skip the round but keep the clock running.
+            self.queue.push(self.now + self.estimator.interval, Event::ProbeStart);
+            return;
+        }
         // A random device hosts the round (Section V) and pings every
         // other device: ping_count × (n−1) × 1400 B, out and back.
-        let host = self.rng.index(self.cfg.n_devices);
+        let host = active[self.rng.index(active.len())];
         // Payload of the full round (out + back to every other device),
         // inflated by the small-frame airtime factor — the medium is
         // occupied for much longer than the raw bytes suggest.
         let bytes = (self.cfg.ping_count as u64
-            * (self.cfg.n_devices as u64 - 1)
+            * (active.len() as u64 - 1)
             * self.cfg.ping_bytes
             * 2) as f64
             * self.cfg.probe_airtime_factor;
@@ -492,7 +575,10 @@ impl Engine {
             // The scheduler rebuilds its link representation; the
             // controller is busy for the duration (no allocations can be
             // made while the data structure regenerates).
-            let ops = self.sched.on_bandwidth_update(self.now, new_est);
+            let ops = self
+                .sched
+                .on_event(self.now, SchedEvent::BandwidthUpdate { bps: new_est })
+                .ops;
             self.metrics.link_rebuild_ops += ops;
             let proc = (ops as f64 * self.cfg.op_cost_us).round() as SimDuration;
             self.busy_until = self.busy_until.max(self.now) + proc;
@@ -503,12 +589,19 @@ impl Engine {
     fn on_traffic_toggle(&mut self, active: bool) {
         if self.now > self.end_of_input {
             self.medium.set_background(self.now, false);
+            self.traffic_on = false;
+            return;
+        }
+        if self.duty_cycle <= 0.0 {
+            // A regime change turned the generator off: let the chain die.
+            self.medium.set_background(self.now, false);
+            self.traffic_on = false;
             return;
         }
         self.medium.set_background(self.now, active);
         self.arm_medium();
         let period = self.cfg.bandwidth_interval();
-        let duty = self.cfg.duty_cycle.clamp(0.0, 1.0);
+        let duty = self.duty_cycle.clamp(0.0, 1.0);
         if active {
             // Burst lasts duty × period, then the line goes quiet.
             let on_for = (period as f64 * duty).round() as SimDuration;
@@ -521,6 +614,68 @@ impl Engine {
             let off_base = (period as f64 * (1.0 - duty)).max(1.0);
             let off_for = (off_base * (0.5 + self.rng.gen_f64())).round() as SimDuration;
             self.queue.push(self.now + off_for.max(1), Event::TrafficToggle { active: true });
+        }
+    }
+
+    // ---- scenario schedule: churn + congestion regimes -------------------
+
+    fn on_device_join(&mut self, device: DeviceId) {
+        while self.active_devices.len() <= device {
+            self.active_devices.push(false);
+            self.device_speed.push(1.0);
+        }
+        if self.active_devices[device] {
+            return; // already in the fleet
+        }
+        self.active_devices[device] = true;
+        self.metrics.churn_joins += 1;
+        let _ = self.sched.on_event(self.now, SchedEvent::DeviceJoined { device });
+    }
+
+    fn on_device_leave(&mut self, device: DeviceId) {
+        if !self.device_active(device) {
+            return;
+        }
+        self.active_devices[device] = false;
+        self.metrics.churn_leaves += 1;
+        let decision = self.sched.on_event(self.now, SchedEvent::DeviceLeft { device });
+        let Outcome::Ack { evicted } = decision.outcome else {
+            unreachable!("DeviceLeft must be acknowledged");
+        };
+        for a in evicted {
+            self.cancel_task(a.task);
+            self.metrics.churn_evicted += 1;
+            let source = self.tasks[&a.task].source;
+            let hp = a.config == crate::coordinator::task::TaskConfig::HighPriority;
+            if hp || source == device || !self.device_active(source) {
+                // The task (or the device holding its input image) is
+                // gone: the frame cannot complete.
+                self.fail_frame(a.frame);
+            } else {
+                // Guest task on the departed device: its source still has
+                // the input, so it re-enters low-priority scheduling like a
+                // preemption victim.
+                self.metrics.lp_realloc_attempts += 1;
+                self.queue.push(
+                    self.now + self.cfg.control_latency(),
+                    Event::LpArrive { tasks: vec![a.task], realloc: true },
+                );
+            }
+        }
+    }
+
+    fn on_regime_change(&mut self, bg_bps: f64, duty: f64) {
+        self.medium.set_background_rate(self.now, bg_bps);
+        self.arm_medium();
+        self.duty_cycle = duty;
+        if duty > 0.0 && !self.traffic_on && self.now <= self.end_of_input {
+            // Revive the toggle chain (it dies whenever duty drops to 0).
+            self.traffic_on = true;
+            self.queue.push(self.now, Event::TrafficToggle { active: true });
+        }
+        if duty <= 0.0 {
+            self.medium.set_background(self.now, false);
+            self.arm_medium();
         }
     }
 

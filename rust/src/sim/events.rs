@@ -28,8 +28,13 @@ pub enum Event {
     ProbeStart,
     /// Background traffic burst toggles.
     TrafficToggle { active: bool },
-    /// A device reports readiness at start-up (used by the e2e driver).
-    DeviceUp { device: DeviceId },
+    /// A device joins the fleet mid-run (scenario churn schedule).
+    DeviceJoin { device: DeviceId },
+    /// A device leaves the fleet; its live tasks are evicted.
+    DeviceLeave { device: DeviceId },
+    /// The background-traffic regime changes mid-run (scenario schedule).
+    /// The f64 rate/duty are carried as `to_bits` so the event stays `Eq`.
+    RegimeChange { bg_bps_bits: u64, duty_bits: u64 },
 }
 
 /// A scheduled event: ordered by time, then insertion sequence (FIFO among

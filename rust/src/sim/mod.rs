@@ -6,5 +6,5 @@ pub mod engine;
 pub mod events;
 pub mod netsim;
 
-pub use engine::Engine;
+pub use engine::{Engine, RunExtras};
 pub use netsim::Medium;

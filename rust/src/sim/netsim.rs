@@ -114,6 +114,17 @@ impl Medium {
         }
     }
 
+    /// Change the background burst rate mid-run (congestion regime change).
+    /// Drains the fluid model first so in-flight transfers keep the share
+    /// they actually had until `now`.
+    pub fn set_background_rate(&mut self, now: SimTime, bg_bps: f64) {
+        if (self.bg_bps - bg_bps).abs() > f64::EPSILON {
+            self.drain_to(now);
+            self.bg_bps = bg_bps;
+            self.epoch += 1;
+        }
+    }
+
     pub fn background_active(&self) -> bool {
         self.bg_active
     }

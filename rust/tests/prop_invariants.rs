@@ -7,7 +7,7 @@ use medge::coordinator::netlink::{CommTask, DiscretisedLink};
 use medge::coordinator::ras::ResourceAvailabilityList;
 use medge::coordinator::scheduler::ras_sched::RasScheduler;
 use medge::coordinator::scheduler::wps::WpsScheduler;
-use medge::coordinator::scheduler::{LpOutcome, Scheduler};
+use medge::coordinator::scheduler::{LpOutcome, Scheduler, SchedulerCompat};
 use medge::coordinator::task::Task;
 use medge::util::prop::forall;
 use medge::util::Rng;

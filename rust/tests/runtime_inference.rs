@@ -1,10 +1,15 @@
 //! Integration: the rust PJRT runtime loads the AOT artifacts produced by
 //! `make artifacts` and runs real inference — the full L1→L2→L3 bridge.
-//! Skipped (with a message) when artifacts are absent.
+//! Skipped (with a message) when artifacts are absent or the binary was
+//! built without the `pjrt` feature (the default offline configuration).
 
 use medge::runtime::{default_artifacts_dir, image::synth_frame, InferenceEngine, Stage, IMAGE_ELEMS};
 
 fn engine() -> Option<InferenceEngine> {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("skipping: built without the `pjrt` feature");
+        return None;
+    }
     let dir = default_artifacts_dir();
     if !dir.join("detector.hlo.txt").exists() {
         eprintln!("skipping: artifacts not built (run `make artifacts`)");

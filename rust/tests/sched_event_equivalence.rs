@@ -1,0 +1,269 @@
+//! Golden-seed equivalence for the trait migration: the typed
+//! `on_event` API must decide *identically* to the pre-redesign
+//! `schedule_high` / `schedule_low` callback surface — same outcomes,
+//! same ops, same internal RNG evolution — for both RAS and WPS, over
+//! long random event streams. Also proves low-priority batch atomicity
+//! survived the `Decision` migration.
+
+use medge::config::SystemConfig;
+use medge::coordinator::scheduler::ras_sched::RasScheduler;
+use medge::coordinator::scheduler::wps::WpsScheduler;
+use medge::coordinator::scheduler::{
+    Decision, HpOutcome, LpOutcome, Ops, Outcome, SchedEvent, Scheduler,
+};
+use medge::coordinator::task::{Task, TaskId};
+use medge::time::SimTime;
+use medge::util::prop::forall;
+use medge::util::Rng;
+
+/// An owned random event, replayable against either API surface.
+#[derive(Debug, Clone)]
+enum Ev {
+    Hp(Task),
+    Lp(Vec<Task>, bool),
+    Complete(TaskId),
+    Violation(TaskId),
+    Bw(f64),
+}
+
+/// Deterministic random event stream. Complete/Violation targets are
+/// drawn from previously issued ids regardless of allocation outcomes, so
+/// the stream is identical for both replays by construction.
+fn gen_events(rng: &mut Rng, cfg: &SystemConfig, count: usize) -> Vec<(SimTime, Ev)> {
+    let mut evs = Vec::with_capacity(count);
+    let mut now: SimTime = 0;
+    let mut id: TaskId = 1;
+    let mut issued: Vec<TaskId> = Vec::new();
+    while evs.len() < count {
+        now += 1 + rng.gen_range(2_000_000);
+        let source = rng.index(cfg.n_devices);
+        match rng.index(10) {
+            0..=2 => {
+                let t = Task::high(id, id, source, now, cfg);
+                issued.push(id);
+                id += 1;
+                evs.push((now, Ev::Hp(t)));
+            }
+            3..=5 => {
+                let n = 1 + rng.index(4) as u64;
+                let deadline = now + cfg.frame_period();
+                let tasks: Vec<Task> = (0..n)
+                    .map(|i| Task::low(id + i, id, source, now, deadline, cfg))
+                    .collect();
+                for t in &tasks {
+                    issued.push(t.id);
+                }
+                id += n;
+                let realloc = rng.gen_f64() < 0.2;
+                evs.push((now, Ev::Lp(tasks, realloc)));
+            }
+            6 | 7 => {
+                if !issued.is_empty() {
+                    let t = issued[rng.index(issued.len())];
+                    evs.push((now, Ev::Complete(t)));
+                }
+            }
+            8 => {
+                if !issued.is_empty() {
+                    let t = issued[rng.index(issued.len())];
+                    evs.push((now, Ev::Violation(t)));
+                }
+            }
+            _ => {
+                let bps = cfg.link_bps * (0.4 + rng.gen_f64());
+                evs.push((now, Ev::Bw(bps)));
+            }
+        }
+    }
+    evs
+}
+
+/// The pre-redesign callback surface, bound to the schedulers' inherent
+/// (legacy-shaped) methods — NOT to the `on_event`-backed compat shim, so
+/// the two replays exercise genuinely different dispatch paths.
+trait LegacyDrive {
+    fn leg_high(&mut self, now: SimTime, task: &Task) -> HpOutcome;
+    fn leg_low(&mut self, now: SimTime, tasks: &[Task], realloc: bool) -> LpOutcome;
+    fn leg_complete(&mut self, now: SimTime, task: TaskId);
+    fn leg_violation(&mut self, now: SimTime, task: TaskId);
+    fn leg_bw(&mut self, now: SimTime, bps: f64) -> Ops;
+}
+
+impl LegacyDrive for RasScheduler {
+    fn leg_high(&mut self, now: SimTime, task: &Task) -> HpOutcome {
+        self.schedule_high(now, task)
+    }
+    fn leg_low(&mut self, now: SimTime, tasks: &[Task], realloc: bool) -> LpOutcome {
+        self.schedule_low(now, tasks, realloc)
+    }
+    fn leg_complete(&mut self, now: SimTime, task: TaskId) {
+        self.on_complete(now, task)
+    }
+    fn leg_violation(&mut self, now: SimTime, task: TaskId) {
+        self.on_violation(now, task)
+    }
+    fn leg_bw(&mut self, now: SimTime, bps: f64) -> Ops {
+        self.on_bandwidth_update(now, bps)
+    }
+}
+
+impl LegacyDrive for WpsScheduler {
+    fn leg_high(&mut self, now: SimTime, task: &Task) -> HpOutcome {
+        self.schedule_high(now, task)
+    }
+    fn leg_low(&mut self, now: SimTime, tasks: &[Task], realloc: bool) -> LpOutcome {
+        self.schedule_low(now, tasks, realloc)
+    }
+    fn leg_complete(&mut self, now: SimTime, task: TaskId) {
+        self.on_complete(now, task)
+    }
+    fn leg_violation(&mut self, now: SimTime, task: TaskId) {
+        self.on_violation(now, task)
+    }
+    fn leg_bw(&mut self, now: SimTime, bps: f64) -> Ops {
+        self.on_bandwidth_update(now, bps)
+    }
+}
+
+fn replay_legacy<S: LegacyDrive>(s: &mut S, evs: &[(SimTime, Ev)]) -> Vec<Decision> {
+    evs.iter()
+        .map(|(now, ev)| match ev {
+            Ev::Hp(t) => Decision::from(s.leg_high(*now, t)),
+            Ev::Lp(ts, r) => Decision::from(s.leg_low(*now, ts, *r)),
+            Ev::Complete(t) => {
+                s.leg_complete(*now, *t);
+                Decision::ack(1)
+            }
+            Ev::Violation(t) => {
+                s.leg_violation(*now, *t);
+                Decision::ack(1)
+            }
+            Ev::Bw(b) => Decision::ack(s.leg_bw(*now, *b)),
+        })
+        .collect()
+}
+
+fn replay_typed(s: &mut dyn Scheduler, evs: &[(SimTime, Ev)]) -> Vec<Decision> {
+    evs.iter()
+        .map(|(now, ev)| {
+            let ev = match ev {
+                Ev::Hp(t) => SchedEvent::HighPriority { task: t },
+                Ev::Lp(ts, r) => SchedEvent::LowPriorityBatch { tasks: ts, realloc: *r },
+                Ev::Complete(t) => SchedEvent::Complete { task: *t },
+                Ev::Violation(t) => SchedEvent::Violation { task: *t },
+                Ev::Bw(b) => SchedEvent::BandwidthUpdate { bps: *b },
+            };
+            s.on_event(*now, ev)
+        })
+        .collect()
+}
+
+fn assert_streams_equal(legacy: &[Decision], typed: &[Decision], who: &str) {
+    assert_eq!(legacy.len(), typed.len());
+    for (i, (a, b)) in legacy.iter().zip(typed).enumerate() {
+        assert_eq!(a, b, "{who}: decision {i} diverged between API surfaces");
+    }
+}
+
+#[test]
+fn ras_on_event_equals_legacy_over_1k_events() {
+    let cfg = SystemConfig { seed: 42, ..Default::default() };
+    let evs = gen_events(&mut Rng::seed_from_u64(0xE0E0_42), &cfg, 1000);
+    // Two independent, identically-seeded instances: same internal RNG
+    // stream ⇒ any divergence is the adapter's fault.
+    let mut legacy = RasScheduler::new(&cfg, 0, cfg.link_bps);
+    let mut typed = RasScheduler::new(&cfg, 0, cfg.link_bps);
+    let a = replay_legacy(&mut legacy, &evs);
+    let b = replay_typed(&mut typed, &evs);
+    assert_streams_equal(&a, &b, "RAS");
+    assert!(
+        a.iter().any(|d| matches!(d.outcome, Outcome::LpAllocated { .. })),
+        "stream should exercise allocations"
+    );
+    assert_eq!(legacy.state().len(), typed.state().len());
+}
+
+#[test]
+fn wps_on_event_equals_legacy_over_1k_events() {
+    let cfg = SystemConfig { seed: 42, ..Default::default() };
+    let evs = gen_events(&mut Rng::seed_from_u64(0xE0E0_57), &cfg, 1000);
+    let mut legacy = WpsScheduler::new(&cfg, 0, cfg.link_bps);
+    let mut typed = WpsScheduler::new(&cfg, 0, cfg.link_bps);
+    let a = replay_legacy(&mut legacy, &evs);
+    let b = replay_typed(&mut typed, &evs);
+    assert_streams_equal(&a, &b, "WPS");
+    assert_eq!(legacy.state().len(), typed.state().len());
+}
+
+#[test]
+fn equivalence_holds_across_random_seeds() {
+    forall("on_event ≡ legacy (both schedulers)", 12, |rng| {
+        let cfg = SystemConfig { seed: rng.next_u64(), ..Default::default() };
+        let evs = gen_events(rng, &cfg, 120);
+        {
+            let mut legacy = RasScheduler::new(&cfg, 0, cfg.link_bps);
+            let mut typed = RasScheduler::new(&cfg, 0, cfg.link_bps);
+            let a = replay_legacy(&mut legacy, &evs);
+            let b = replay_typed(&mut typed, &evs);
+            if a != b {
+                return Err("RAS decisions diverged".to_string());
+            }
+        }
+        {
+            let mut legacy = WpsScheduler::new(&cfg, 0, cfg.link_bps);
+            let mut typed = WpsScheduler::new(&cfg, 0, cfg.link_bps);
+            let a = replay_legacy(&mut legacy, &evs);
+            let b = replay_typed(&mut typed, &evs);
+            if a != b {
+                return Err("WPS decisions diverged".to_string());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The paper treats a low-priority batch atomically: a rejection must
+/// leave the committed state exactly as it was (partial placements rolled
+/// back), and that guarantee must survive the `Decision` migration on
+/// both schedulers.
+#[test]
+fn lp_batch_atomicity_survives_decision_migration() {
+    let cfg = SystemConfig::default();
+    let mut scheds: Vec<Box<dyn Scheduler>> = vec![
+        Box::new(RasScheduler::new(&cfg, 0, cfg.link_bps)),
+        Box::new(WpsScheduler::new(&cfg, 0, cfg.link_bps)),
+    ];
+    for sched in &mut scheds {
+        let now = 0;
+        let deadline = now + cfg.frame_period();
+        let mut id: TaskId = 1;
+        let mut saw_rejection = false;
+        // Keep throwing 4-task batches at the same window until capacity
+        // runs out; the rejecting call must not leak partial placements.
+        for _ in 0..10 {
+            let batch: Vec<Task> =
+                (0..4).map(|i| Task::low(id + i, id, 0, now, deadline, &cfg)).collect();
+            id += 4;
+            let live_before = sched.state().len();
+            let d = sched.on_event(now, SchedEvent::LowPriorityBatch { tasks: &batch, realloc: false });
+            match d.outcome {
+                Outcome::LpAllocated { allocs } => {
+                    assert_eq!(allocs.len(), 4, "{}: batch is all-or-nothing", sched.name());
+                    assert_eq!(sched.state().len(), live_before + 4, "{}", sched.name());
+                }
+                Outcome::LpRejected => {
+                    saw_rejection = true;
+                    assert_eq!(
+                        sched.state().len(),
+                        live_before,
+                        "{}: rejected batch leaked partial placements",
+                        sched.name()
+                    );
+                    break;
+                }
+                other => panic!("{}: unexpected outcome {other:?}", sched.name()),
+            }
+        }
+        assert!(saw_rejection, "{}: capacity never ran out in 10 batches", sched.name());
+    }
+}

@@ -1,0 +1,195 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored crate
+//! implements exactly the subset medge uses: [`Error`], [`Result`], the
+//! [`Context`] extension trait, and the `anyhow!` / `bail!` / `ensure!`
+//! macros. Semantics match upstream for that subset: any
+//! `std::error::Error` converts into [`Error`] via `?`, context wraps the
+//! message, and `Debug` prints the cause chain (what `fn main() ->
+//! anyhow::Result<()>` shows on exit).
+
+use std::fmt;
+
+/// A dynamic error with an optional source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Wrap with higher-level context (outermost first, as upstream).
+    pub fn context<C: fmt::Display>(self, c: C) -> Self {
+        Error { msg: format!("{c}: {}", self.msg), source: self.source }
+    }
+
+    /// The root cause chain, outermost message first.
+    pub fn chain(&self) -> impl Iterator<Item = &(dyn std::error::Error + 'static)> + '_ {
+        let mut next = self.source.as_deref().map(|e| e as &(dyn std::error::Error + 'static));
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source();
+            Some(cur)
+        })
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if let Some(src) = &self.source {
+            write!(f, "\n\nCaused by:\n    {src}")?;
+        }
+        Ok(())
+    }
+}
+
+// `Error` deliberately does not implement `std::error::Error` (same as
+// upstream), which is what makes this blanket conversion coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+/// `anyhow::Result<T>`: `std::result::Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (and to `None`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string or a displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Early-return with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond))
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*)
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<u32> {
+            let n: u32 = "12".parse()?;
+            Ok(n)
+        }
+        assert_eq!(inner().unwrap(), 12);
+        fn bad() -> Result<u32> {
+            let n: u32 = "nope".parse()?;
+            Ok(n)
+        }
+        assert!(bad().is_err());
+    }
+
+    #[test]
+    fn context_wraps_outermost_first() {
+        let e: Result<()> = Err(Error::from(io_err())).context("loading config");
+        let msg = format!("{}", e.unwrap_err());
+        assert!(msg.starts_with("loading config: "), "{msg}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert!(v.context("missing").is_err());
+        assert_eq!(Some(3u32).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let name = "x";
+        let e = anyhow!("bad {name}");
+        assert_eq!(format!("{e}"), "bad x");
+        let e = anyhow!(String::from("owned"));
+        assert_eq!(format!("{e}"), "owned");
+        let e = anyhow!("{} + {}", 1, 2);
+        assert_eq!(format!("{e}"), "1 + 2");
+        fn f() -> Result<()> {
+            ensure!(1 + 1 == 3, "math broke: {}", 2);
+            Ok(())
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "math broke: 2");
+        fn g() -> Result<()> {
+            bail!("stop")
+        }
+        assert!(g().is_err());
+    }
+
+    #[test]
+    fn debug_shows_cause() {
+        let e = Error::from(io_err()).context("top");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("top"));
+        assert!(dbg.contains("Caused by"));
+        assert!(dbg.contains("gone"));
+    }
+}
