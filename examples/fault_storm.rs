@@ -1,0 +1,64 @@
+//! Fault-injection walkthrough: the same weighted-4 workload on a clean
+//! testbed, on a lossy link, and through a crash/recover storm — the
+//! regimes the paper's shared-802.11n motivation describes but its fixed
+//! figures cannot express. Shows the `FaultPlan` builder API, the crash
+//! re-offer pipeline (lost → re-offered → placed → recovered-in-deadline)
+//! and the fault counters in the report.
+//!
+//!     cargo run --release --example fault_storm
+
+use medge::fault::FaultPlan;
+use medge::metrics::report;
+use medge::scenario::{ScenarioBuilder, SchedKind, Sweep};
+use medge::workload::trace::TraceSpec;
+
+fn main() {
+    let base = || {
+        ScenarioBuilder::new()
+            .scheduler(SchedKind::Ras)
+            .trace(TraceSpec::Weighted(4))
+            .minutes(15.0)
+            .seed(42)
+    };
+
+    let mut sweep = Sweep::new();
+    // 1. The paper's ideal medium.
+    sweep = sweep.add(base().named("clean").build());
+    // 2. A lossy link: 10% of packets are lost and retransmitted, a
+    //    quarter of probe pings never return (rounds shrink or vanish).
+    sweep = sweep.add(base().named("lossy").loss_rate(0.10).probe_loss(0.25).build());
+    // 3. A crash storm: device 3 dies at minute 4 with work in flight
+    //    and returns empty at minute 9; everything it was running is
+    //    lost, surviving guests are re-offered to the scheduler.
+    sweep = sweep.add(base().named("crash").crash_at(240.0, 3).recover_at(540.0, 3).build());
+    // 4. All of it at once, plus a random background fault process
+    //    (MTBF 6 min, MTTR 1 min) — attached as a composed FaultPlan.
+    let storm = FaultPlan::new()
+        .loss_rate(0.10)
+        .probe_loss(0.25)
+        .crash_at(240.0, 3)
+        .recover_at(540.0, 3)
+        .random_faults(360.0, 60.0);
+    sweep = sweep.add(base().named("storm").faults(storm).build());
+
+    let runs = sweep.run();
+    print!("{}", report::fig4(&runs));
+    print!("{}", report::faults(&runs));
+
+    let clean = &runs[0];
+    let storm = &runs[3];
+    println!(
+        "\nframe completion: clean {:.1}% -> storm {:.1}%  (crashes: {}, tasks lost: {}, \
+         re-offered: {}, recovered in deadline: {})",
+        clean.frame_completion_rate() * 100.0,
+        storm.frame_completion_rate() * 100.0,
+        storm.device_crashes,
+        storm.crash_tasks_lost,
+        storm.crash_tasks_reoffered,
+        storm.crash_recovered_in_deadline,
+    );
+    println!(
+        "lossy link: {:.1} Mbit retransmitted, {} probe pings lost, {} whole rounds lost",
+        runs[1].retransmitted_mbits, runs[1].probe_pings_lost, runs[1].probe_rounds_lost,
+    );
+}

@@ -35,8 +35,17 @@ pub struct BandwidthEstimator {
     pub interval: SimDuration,
     /// Time of the last completed update.
     pub last_update: SimTime,
+    /// Time of the last *attempted* round, successful or not. A failed
+    /// round (no samples — e.g. every ping lost) must still consume its
+    /// slot: scheduling the next round off `last_update` alone would
+    /// leave `next_due` in the past after a failure, and any driver that
+    /// polls `next_due` would re-probe in a hot loop until a round
+    /// finally succeeded.
+    pub last_attempt: SimTime,
     /// Number of updates applied (diagnostics; Fig. 6/7 sweeps this rate).
     pub updates: u64,
+    /// Rounds that carried no samples (probe failure; no update applied).
+    pub failures: u64,
 }
 
 impl BandwidthEstimator {
@@ -46,7 +55,9 @@ impl BandwidthEstimator {
             ewma: Ewma::with_initial(cfg.ewma_alpha, baseline_bps),
             interval: cfg.bandwidth_interval(),
             last_update: 0,
+            last_attempt: 0,
             updates: 0,
+            failures: 0,
         }
     }
 
@@ -57,17 +68,25 @@ impl BandwidthEstimator {
 
     /// Fold a probe round into the estimate. Returns the new estimate, or
     /// `None` if the round carried no samples (probe failure — estimate
-    /// unchanged, no link rebuild needed).
+    /// unchanged, no link rebuild needed, but the attempt still counts
+    /// towards the probe cadence).
     pub fn apply(&mut self, now: SimTime, round: &ProbeRound) -> Option<f64> {
-        let mean = round.mean_bps()?;
+        self.last_attempt = now;
+        let Some(mean) = round.mean_bps() else {
+            self.failures += 1;
+            return None;
+        };
         self.last_update = now;
         self.updates += 1;
         Some(self.ewma.update(mean))
     }
 
-    /// When the next probe is due.
+    /// When the next probe is due: one interval after the last *attempt*
+    /// (the discrete-event engine schedules probes on its own fixed
+    /// clock, so it never hot-loops — but external drivers poll this, and
+    /// before the `last_attempt` fix a failed round left it in the past).
     pub fn next_due(&self) -> SimTime {
-        self.last_update + self.interval
+        self.last_attempt + self.interval
     }
 
     /// Convert ping RTT (µs) for `bytes` payload into a bits/s sample, the
@@ -113,6 +132,24 @@ mod tests {
         assert!(e.apply(5, &ProbeRound { host: 1, samples_bps: vec![] }).is_none());
         assert_eq!(e.estimate_bps(), 40e6);
         assert_eq!(e.updates, 0);
+        assert_eq!(e.failures, 1);
+    }
+
+    #[test]
+    fn failed_round_still_advances_next_due() {
+        // Regression: `apply` returning `None` used to leave `last_update`
+        // (and therefore `next_due`) untouched, so after a failed round
+        // `next_due` sat in the past forever and a next_due-driven probe
+        // loop would re-probe immediately in a hot loop.
+        let mut e = BandwidthEstimator::new(&cfg(), 40e6);
+        assert!(e.apply(30_000_000, &ProbeRound { host: 0, samples_bps: vec![] }).is_none());
+        assert_eq!(e.next_due(), 60_000_000, "failed round must consume its slot");
+        // A later successful round keeps the cadence from its own time.
+        let round = ProbeRound { host: 0, samples_bps: vec![20e6] };
+        assert!(e.apply(60_000_000, &round).is_some());
+        assert_eq!(e.next_due(), 90_000_000);
+        assert_eq!(e.failures, 1);
+        assert_eq!(e.updates, 1);
     }
 
     #[test]

@@ -34,7 +34,11 @@
 //! paper's fixed four-Pi testbed to churning fleets (scenario API): a
 //! departing device's live allocations come back in
 //! [`Outcome::Ack`]`::evicted` so the engine can cancel and reschedule
-//! them.
+//! them. The fault-injection layer adds [`SchedEvent::DeviceCrashed`] /
+//! [`SchedEvent::DeviceRecovered`] (crash-invalidated placements: the
+//! evicted work is lost, not drained) and [`SchedEvent::Reoffer`]
+//! (crash-lost tasks re-entering placement on their remaining deadline
+//! budget).
 //!
 //! The legacy callback shapes ([`HpOutcome`], [`LpOutcome`], and the
 //! [`SchedulerCompat`] extension trait) remain as a thin compatibility
@@ -74,6 +78,18 @@ pub enum SchedEvent<'a> {
     /// A device left the fleet; its live allocations must be evicted and
     /// surfaced in the decision so the engine can reschedule them.
     DeviceLeft { device: DeviceId },
+    /// A device crashed (fault injection). Mechanically like
+    /// [`SchedEvent::DeviceLeft`] — evict and surface its allocations —
+    /// but the engine treats the evicted work as *lost*, not drained:
+    /// flows are aborted and survivors come back as
+    /// [`SchedEvent::Reoffer`], never as completions.
+    DeviceCrashed { device: DeviceId },
+    /// A crashed device came back with fresh, empty availability.
+    DeviceRecovered { device: DeviceId },
+    /// Crash-lost low-priority tasks re-offered for placement with
+    /// whatever deadline budget remains (the crash already burned part of
+    /// it). LP-shaped outcome: re-place, or reject to drop-by-deadline.
+    Reoffer { tasks: &'a [Task] },
 }
 
 /// The allocation outcome of one dispatched event.

@@ -182,9 +182,19 @@ impl Scheduler for MultiScheduler {
             }
             SchedEvent::BandwidthUpdate { bps } => Decision::ack(self.on_bandwidth_update(now, bps)),
             SchedEvent::DeviceJoined { device } => Decision::ack(self.on_device_joined(now, device)),
-            SchedEvent::DeviceLeft { device } => {
+            SchedEvent::DeviceLeft { device } | SchedEvent::DeviceCrashed { device } => {
+                // Both inner schedulers drop the device either way; the
+                // engine decides whether the work drains or is lost.
                 let (evicted, ops) = self.on_device_left(now, device);
                 Decision { outcome: Outcome::Ack { evicted }, ops }
+            }
+            SchedEvent::DeviceRecovered { device } => {
+                Decision::ack(self.on_device_joined(now, device))
+            }
+            SchedEvent::Reoffer { tasks } => {
+                // Load-routed like any placement request; `record` keeps
+                // both inner views consistent with the re-placement.
+                self.schedule_low(now, tasks, true).into()
             }
         }
     }

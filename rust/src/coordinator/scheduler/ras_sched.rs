@@ -467,9 +467,21 @@ impl Scheduler for RasScheduler {
             }
             SchedEvent::BandwidthUpdate { bps } => Decision::ack(self.on_bandwidth_update(now, bps)),
             SchedEvent::DeviceJoined { device } => Decision::ack(self.on_device_joined(now, device)),
-            SchedEvent::DeviceLeft { device } => {
+            SchedEvent::DeviceLeft { device } | SchedEvent::DeviceCrashed { device } => {
+                // Crash or graceful leave: either way the device's
+                // placements are invalid and must be surfaced; what
+                // becomes of the work is the engine's call.
                 let (evicted, ops) = self.on_device_left(now, device);
                 Decision { outcome: Outcome::Ack { evicted }, ops }
+            }
+            SchedEvent::DeviceRecovered { device } => {
+                Decision::ack(self.on_device_joined(now, device))
+            }
+            SchedEvent::Reoffer { tasks } => {
+                // Crash-lost work re-enters placement on its remaining
+                // deadline budget; `viable_configs` drops tasks whose
+                // budget no longer fits any configuration.
+                self.schedule_low(now, tasks, true).into()
             }
         }
     }

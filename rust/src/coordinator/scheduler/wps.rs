@@ -434,9 +434,20 @@ impl Scheduler for WpsScheduler {
             }
             SchedEvent::BandwidthUpdate { bps } => Decision::ack(self.on_bandwidth_update(now, bps)),
             SchedEvent::DeviceJoined { device } => Decision::ack(self.on_device_joined(now, device)),
-            SchedEvent::DeviceLeft { device } => {
+            SchedEvent::DeviceLeft { device } | SchedEvent::DeviceCrashed { device } => {
+                // Exact state makes no distinction between a drained and
+                // a crashed device: evict and surface the allocations.
                 let (evicted, ops) = self.on_device_left(now, device);
                 Decision { outcome: Outcome::Ack { evicted }, ops }
+            }
+            SchedEvent::DeviceRecovered { device } => {
+                Decision::ack(self.on_device_joined(now, device))
+            }
+            SchedEvent::Reoffer { tasks } => {
+                // Re-place on the remaining deadline budget; the
+                // exhaustive search rejects (drop-by-deadline) when no
+                // start fits before the original deadline.
+                self.schedule_low(now, tasks, true).into()
             }
         }
     }

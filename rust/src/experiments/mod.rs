@@ -103,6 +103,35 @@ pub fn ablation_multi(cfg: &SystemConfig, minutes: f64) -> Vec<Metrics> {
     weighted_grid(cfg, &[SchedKind::Wps, SchedKind::Ras, SchedKind::Multi], minutes).run()
 }
 
+/// Fault-stress grid (beyond the paper): each scheduler on the weighted-4
+/// load, clean vs faulted (5% packet loss, 25% probe loss, the last
+/// device crashing at 30% and recovering at 55% of the run) — the
+/// robustness counterpart of the fig. 4 comparison. Labels carry an `F`
+/// suffix on the faulted twin, matching `medge sweep --faults`.
+pub fn fault_stress(cfg: &SystemConfig, kinds: &[SchedKind], minutes: f64) -> Vec<Metrics> {
+    let frames = frames_for_minutes(cfg, minutes);
+    let total_s = minutes * 60.0;
+    let crash_device = cfg.n_devices.saturating_sub(1);
+    let mut sweep = Sweep::new();
+    for &kind in kinds {
+        let base = ScenarioBuilder::new()
+            .config(cfg.clone())
+            .scheduler(kind)
+            .trace(TraceSpec::Weighted(4))
+            .frames(frames);
+        sweep = sweep.add(base.clone().named(format!("{}_4", kind.label())).build());
+        sweep = sweep.add(
+            base.named(format!("{}_4F", kind.label()))
+                .loss_rate(0.05)
+                .probe_loss(0.25)
+                .crash_at(total_s * 0.30, crash_device)
+                .recover_at(total_s * 0.55, crash_device)
+                .build(),
+        );
+    }
+    sweep.run()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -142,6 +171,19 @@ mod tests {
         assert_eq!(runs.len(), 4);
         assert_eq!(runs[0].label, "0%");
         assert_eq!(runs[3].label, "75%");
+    }
+
+    #[test]
+    fn fault_stress_pairs_clean_and_faulted_rows() {
+        let runs = fault_stress(&small_cfg(), &[SchedKind::Ras], 3.0);
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].label, "RAS_4");
+        assert_eq!(runs[1].label, "RAS_4F");
+        // The clean row must be fault-free; the twin must inject.
+        assert_eq!(runs[0].device_crashes, 0);
+        assert_eq!(runs[0].retransmitted_mbits, 0.0);
+        assert_eq!(runs[1].device_crashes, 1);
+        assert!(runs[1].retransmitted_mbits > 0.0);
     }
 
     #[test]

@@ -1,0 +1,221 @@
+//! Fault injection: lossy links, device crashes, and probe failure.
+//!
+//! The paper's testbed is unreliable by nature — a contended 802.11n
+//! medium, probe-based bandwidth estimates that degrade under congestion
+//! (Figs. 6–8) — yet the baseline simulator only models *graceful* churn
+//! and background traffic. This module expresses the harsher regimes the
+//! related work evaluates (preemption-aware offloading under node loss,
+//! adaptive serving over lossy links): devices that crash with work in
+//! flight, links that lose packets rather than merely slowing, and probe
+//! rounds that come back partial or empty.
+//!
+//! A [`FaultPlan`] is the scenario-level specification. It compiles into
+//! the engine-level knobs on [`RunExtras`]:
+//!
+//! * a crash/recover schedule — [`crate::sim::events::Event::DeviceCrash`]
+//!   loses in-flight tasks (flows aborted on the medium, survivors
+//!   re-offered to the scheduler as
+//!   [`crate::coordinator::scheduler::SchedEvent::Reoffer`]), unlike the
+//!   graceful `DeviceLeave`;
+//! * a per-packet loss rate — [`crate::sim::netsim::LossyMedium`] re-queues
+//!   the lost fraction of every transfer as retransmitted bits;
+//! * a per-ping probe-loss rate — probe rounds shrink or vanish, which the
+//!   bandwidth estimator must survive (see
+//!   [`crate::coordinator::bandwidth::BandwidthEstimator::next_due`]).
+//!
+//! Everything is seed-deterministic: the random-fault generator and the
+//! loss sampling draw from RNG streams derived from the scenario seed,
+//! never from ambient randomness — the same scenario produces the same
+//! fault trace, run after run and thread count after thread count.
+
+use crate::coordinator::task::DeviceId;
+use crate::sim::engine::RunExtras;
+use crate::time::{secs, SimTime};
+use crate::util::Rng;
+
+/// Highest injectable loss probability. Retransmission inflation diverges
+/// as p → 1 (every packet re-queued forever); capping keeps expected
+/// inflation ≤ 20× and the sampling loop trivially terminating.
+pub const MAX_LOSS_RATE: f64 = 0.95;
+
+/// RNG domain tag for the random-fault generator ("FLT").
+const FAULT_SEED_TAG: u64 = 0x46_4c54;
+
+/// A fluent fault specification for one scenario run.
+///
+/// Compose with the builder methods and attach via
+/// [`crate::scenario::ScenarioBuilder::faults`] (or the builder's
+/// per-knob shorthands), or compile directly into [`RunExtras`] with
+/// [`FaultPlan::compile_into`] when driving the engine by hand.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Explicit fault schedule: (time, device, recover?). `false` is a
+    /// crash, `true` a recovery.
+    pub crashes: Vec<(SimTime, DeviceId, bool)>,
+    /// Per-packet loss probability on task transfers, in
+    /// `[0, MAX_LOSS_RATE]`.
+    pub loss_rate: f64,
+    /// Per-ping loss probability on bandwidth-probe rounds, in
+    /// `[0, MAX_LOSS_RATE]`.
+    pub probe_loss: f64,
+    /// Random crash/recover generator: (mean time between failures,
+    /// mean time to recovery), seconds. Expanded at compile time from the
+    /// scenario seed.
+    pub random: Option<(f64, f64)>,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// No faults of any kind (the default plan compiles to a no-op).
+    pub fn is_empty(&self) -> bool {
+        self.crashes.is_empty()
+            && self.random.is_none()
+            && self.loss_rate == 0.0
+            && self.probe_loss == 0.0
+    }
+
+    /// Device `device` crashes at `at_s` seconds: its in-flight tasks are
+    /// lost (not completed) and its flows aborted on the medium.
+    pub fn crash_at(mut self, at_s: f64, device: DeviceId) -> Self {
+        self.crashes.push((secs(at_s), device, false));
+        self
+    }
+
+    /// Device `device` comes back at `at_s` seconds with fresh, empty
+    /// availability (everything it was running died with the crash).
+    pub fn recover_at(mut self, at_s: f64, device: DeviceId) -> Self {
+        self.crashes.push((secs(at_s), device, true));
+        self
+    }
+
+    /// Per-packet loss probability on task transfers. The lost fraction
+    /// is re-queued as retransmitted bits, inflating transfer times.
+    pub fn loss_rate(mut self, p: f64) -> Self {
+        self.loss_rate = p.clamp(0.0, MAX_LOSS_RATE);
+        self
+    }
+
+    /// Per-ping loss probability on probe rounds: rounds come back
+    /// partial, or empty (a failed round — no estimator update).
+    pub fn probe_loss(mut self, p: f64) -> Self {
+        self.probe_loss = p.clamp(0.0, MAX_LOSS_RATE);
+        self
+    }
+
+    /// Seed-deterministic random crash/recover process: every device
+    /// independently alternates exponential up-times (mean `mtbf_s`) and
+    /// down-times (mean `mttr_s`). Expanded over the run horizon when the
+    /// plan compiles.
+    pub fn random_faults(mut self, mtbf_s: f64, mttr_s: f64) -> Self {
+        self.random = Some((mtbf_s.max(1.0), mttr_s.max(0.1)));
+        self
+    }
+
+    /// Concrete crash/recover schedule for a fleet of `n_devices` over
+    /// `horizon_s` seconds: explicit entries plus the expanded random
+    /// process (seeded from `seed` — same seed, same fault trace).
+    pub fn schedule(&self, seed: u64, n_devices: usize, horizon_s: f64) -> Vec<(SimTime, DeviceId, bool)> {
+        let mut out = self.crashes.clone();
+        if let Some((mtbf_s, mttr_s)) = self.random {
+            let mut rng = Rng::seed_from_u64(seed ^ FAULT_SEED_TAG);
+            for device in 0..n_devices {
+                let mut t = exp_sample(&mut rng, mtbf_s);
+                while t < horizon_s {
+                    out.push((secs(t), device, false));
+                    let down = exp_sample(&mut rng, mttr_s);
+                    if t + down >= horizon_s {
+                        break; // stays down past the end of input
+                    }
+                    t += down;
+                    out.push((secs(t), device, true));
+                    t += exp_sample(&mut rng, mtbf_s);
+                }
+            }
+        }
+        // Stable order: time, then device, crashes before recoveries.
+        out.sort_unstable();
+        out
+    }
+
+    /// Compile into the engine-level knobs: the concrete fault schedule
+    /// plus the medium loss rates.
+    pub fn compile_into(&self, extras: &mut RunExtras, seed: u64, n_devices: usize, horizon_s: f64) {
+        extras.faults = self.schedule(seed, n_devices, horizon_s);
+        extras.loss_rate = self.loss_rate;
+        extras.probe_loss = self.probe_loss;
+    }
+}
+
+/// Inverse-CDF exponential sample with mean `mean_s` (1 − u avoids ln 0).
+fn exp_sample(rng: &mut Rng, mean_s: f64) -> f64 {
+    -(1.0 - rng.gen_f64()).ln() * mean_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_compiles_to_noop_extras() {
+        let mut extras = RunExtras::default();
+        let plan = FaultPlan::new();
+        assert!(plan.is_empty());
+        plan.compile_into(&mut extras, 42, 4, 600.0);
+        assert!(extras.faults.is_empty());
+        assert_eq!(extras.loss_rate, 0.0);
+        assert_eq!(extras.probe_loss, 0.0);
+    }
+
+    #[test]
+    fn explicit_schedule_is_time_ordered() {
+        let plan = FaultPlan::new()
+            .recover_at(200.0, 1)
+            .crash_at(50.0, 1)
+            .crash_at(50.0, 0);
+        let s = plan.schedule(7, 4, 600.0);
+        assert_eq!(
+            s,
+            vec![
+                (secs(50.0), 0, false),
+                (secs(50.0), 1, false),
+                (secs(200.0), 1, true),
+            ]
+        );
+    }
+
+    #[test]
+    fn loss_rates_are_clamped() {
+        let plan = FaultPlan::new().loss_rate(2.0).probe_loss(-0.5);
+        assert_eq!(plan.loss_rate, MAX_LOSS_RATE);
+        assert_eq!(plan.probe_loss, 0.0);
+    }
+
+    #[test]
+    fn random_faults_are_seed_deterministic() {
+        let plan = FaultPlan::new().random_faults(120.0, 30.0);
+        let a = plan.schedule(42, 4, 1800.0);
+        let b = plan.schedule(42, 4, 1800.0);
+        assert_eq!(a, b, "same seed must give the same fault trace");
+        let c = plan.schedule(43, 4, 1800.0);
+        assert_ne!(a, c, "different seeds should give different traces");
+        assert!(!a.is_empty(), "30 min at 2 min MTBF should produce faults");
+    }
+
+    #[test]
+    fn random_faults_alternate_crash_then_recover_per_device() {
+        let plan = FaultPlan::new().random_faults(100.0, 20.0);
+        let s = plan.schedule(11, 3, 2000.0);
+        for d in 0..3usize {
+            let mine: Vec<bool> =
+                s.iter().filter(|&&(_, dev, _)| dev == d).map(|&(_, _, r)| r).collect();
+            for (i, &recover) in mine.iter().enumerate() {
+                assert_eq!(recover, i % 2 == 1, "device {d} sequence must alternate: {mine:?}");
+            }
+        }
+        // Time-ordered overall.
+        assert!(s.windows(2).all(|w| w[0].0 <= w[1].0));
+    }
+}

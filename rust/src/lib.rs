@@ -32,10 +32,15 @@
 //! compiles to an engine run, and [`scenario::Sweep`] fans scenario grids
 //! across worker threads. The [`experiments`] harness and the `medge`
 //! CLI (including `medge sweep`) are thin layers over those two APIs.
+//! The [`fault`] module adds fault injection on top — lossy links with
+//! retransmission inflation, device crashes that lose in-flight work
+//! (re-offered to the scheduler), and probe failure — turning the
+//! happy-path reproduction into a robustness testbed.
 
 pub mod config;
 pub mod coordinator;
 pub mod experiments;
+pub mod fault;
 pub mod metrics;
 pub mod runtime;
 pub mod scenario;

@@ -32,6 +32,7 @@ COMMANDS:
   sweep    Parallel scenario grid (schedulers × weighted loads):
            --scheds wps,ras[,multi] --loads 1,2,3,4 --threads N
            --json PATH (export rows)  --churn (device 3 leaves/rejoins)
+           --faults (add a faulted twin of every scenario)
   trace    Generate a trace file: --spec S --frames N --out PATH
            (S: uniform | weighted1..weighted4)
 
@@ -44,6 +45,9 @@ OPTIONS:
   --threads N   sweep: worker threads (default: available parallelism)
   --json P      sweep: write the metric rows as a JSON array to P
   --churn       sweep: device 3 leaves at 25% and rejoins at 60% of the run
+  --faults      sweep: add a faulted twin of every scenario (suffix F):
+                5% packet loss, 25% probe loss, and device 0 crashing
+                at 30% / recovering at 55% of the run
 ";
 
 struct Args {
@@ -59,6 +63,7 @@ struct Args {
     threads: Option<usize>,
     json: Option<std::path::PathBuf>,
     churn: bool,
+    faults: bool,
 }
 
 fn parse_args() -> anyhow::Result<Args> {
@@ -75,6 +80,7 @@ fn parse_args() -> anyhow::Result<Args> {
         threads: None,
         json: None,
         churn: false,
+        faults: false,
     };
     let mut it = std::env::args().skip(1);
     while let Some(a) = it.next() {
@@ -93,6 +99,7 @@ fn parse_args() -> anyhow::Result<Args> {
             "--threads" => args.threads = Some(value("--threads")?.parse()?),
             "--json" => args.json = Some(value("--json")?.into()),
             "--churn" => args.churn = true,
+            "--faults" => args.faults = true,
             "-h" | "--help" => {
                 print!("{USAGE}");
                 std::process::exit(0);
@@ -154,7 +161,24 @@ fn build_sweep(cfg: &SystemConfig, args: &Args) -> anyhow::Result<Sweep> {
                 let total_s = args.minutes * 60.0;
                 b = b.leave_at(total_s * 0.25, churn_device).join_at(total_s * 0.60, churn_device);
             }
-            sweep = sweep.add(b.build());
+            sweep = sweep.add(b.clone().build());
+            if args.faults {
+                // Fault axis: a faulted twin of the same scenario — a
+                // lossy link, a quarter of probe pings dropped, and
+                // device 0 crashing mid-run with work in flight. Device 0
+                // (not the churn device) so that --churn --faults
+                // composes: the graceful leave and the crash must not
+                // collapse onto the same device and no-op each other.
+                let total_s = args.minutes * 60.0;
+                sweep = sweep.add(
+                    b.named(format!("{}_{}F", kind.label(), n))
+                        .loss_rate(0.05)
+                        .probe_loss(0.25)
+                        .crash_at(total_s * 0.30, 0)
+                        .recover_at(total_s * 0.55, 0)
+                        .build(),
+                );
+            }
         }
     }
     Ok(sweep)
@@ -215,14 +239,18 @@ fn main() -> anyhow::Result<()> {
         "sweep" => {
             let sweep = build_sweep(&cfg, &args)?;
             eprintln!(
-                "sweep: {} scenarios × {:.1} simulated minutes{}",
+                "sweep: {} scenarios × {:.1} simulated minutes{}{}",
                 sweep.len(),
                 minutes,
-                if args.churn { " (churn stress on)" } else { "" }
+                if args.churn { " (churn stress on)" } else { "" },
+                if args.faults { " (fault axis on)" } else { "" }
             );
             let runs = sweep.run();
             print!("{}", report::fig4(&runs));
             print!("{}", report::fig5(&runs));
+            if args.faults {
+                print!("{}", report::faults(&runs));
+            }
             if let Some(path) = &args.json {
                 std::fs::write(path, report::json_rows(&runs))?;
                 println!("\nwrote {} JSON rows to {}", runs.len(), path.display());

@@ -95,6 +95,37 @@ pub struct Metrics {
     /// Live allocations evicted because their device left the fleet.
     pub churn_evicted: u64,
 
+    // ---- fault injection (all zero without a FaultPlan) ----
+    /// Devices that crashed (fault schedule).
+    pub device_crashes: u64,
+    /// Crashed devices that recovered.
+    pub device_recoveries: u64,
+    /// In-flight tasks lost to a crash (work discarded, not completed).
+    pub crash_tasks_lost: u64,
+    /// Lost tasks whose input survived elsewhere and were re-offered to
+    /// the scheduler ([`crate::coordinator::scheduler::SchedEvent::Reoffer`]).
+    pub crash_tasks_reoffered: u64,
+    /// Re-offered tasks the scheduler placed again. Also counted in
+    /// `lp_realloc_success` (a re-offer *is* an involuntary reallocation)
+    /// so the core-mix identity `two+four == initial + realloc_success`
+    /// keeps holding under faults.
+    pub crash_reoffer_placed: u64,
+    /// Re-offered tasks dropped (no placement in the remaining budget, or
+    /// their frame had already failed by re-offer time).
+    pub crash_reoffer_dropped: u64,
+    /// Re-offered tasks that still completed within their original
+    /// deadline (the "recovered in deadline" series).
+    pub crash_recovered_in_deadline: u64,
+    /// Device downtime, crash → recovery.
+    pub lat_crash_recovery: LatencyStat,
+    /// Probe rounds that came back completely empty under probe loss
+    /// (failed rounds: no estimator update).
+    pub probe_rounds_lost: u64,
+    /// Individual probe pings lost (partial rounds).
+    pub probe_pings_lost: u64,
+    /// Extra megabits re-queued on the medium by loss retransmission.
+    pub retransmitted_mbits: f64,
+
     // ---- bandwidth mechanism diagnostics (Fig. 6/7) ----
     pub bandwidth_updates: u64,
     pub link_rebuild_ops: u64,

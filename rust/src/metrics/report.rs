@@ -156,6 +156,35 @@ pub fn table2(runs: &[Metrics]) -> String {
     s
 }
 
+/// Fault-injection summary — one row per scenario with the crash/loss
+/// counters (all zero for runs without a `FaultPlan`).
+pub fn faults(runs: &[Metrics]) -> String {
+    let mut s = header("Faults — crash / loss injection summary");
+    s += &format!(
+        "{:<10} {:>7} {:>6} {:>6} {:>6} {:>7} {:>8} {:>6} {:>9} | {:>10} {:>10} {:>8}\n",
+        "scenario", "crashes", "recov", "lost", "reoff", "placed", "dropped", "in_dl", "mttr_s",
+        "probe_lost", "pings_lost", "retx_Mb",
+    );
+    for m in runs {
+        s += &format!(
+            "{:<10} {:>7} {:>6} {:>6} {:>6} {:>7} {:>8} {:>6} {:>9.1} | {:>10} {:>10} {:>8.1}\n",
+            m.label,
+            m.device_crashes,
+            m.device_recoveries,
+            m.crash_tasks_lost,
+            m.crash_tasks_reoffered,
+            m.crash_reoffer_placed,
+            m.crash_reoffer_dropped,
+            m.crash_recovered_in_deadline,
+            m.lat_crash_recovery.mean_ms() / 1000.0,
+            m.probe_rounds_lost,
+            m.probe_pings_lost,
+            m.retransmitted_mbits,
+        );
+    }
+    s
+}
+
 fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     for c in s.chars() {
@@ -223,6 +252,17 @@ pub fn json_row(m: &Metrics) -> String {
     f.push(format!("\"churn_joins\": {}", m.churn_joins));
     f.push(format!("\"churn_leaves\": {}", m.churn_leaves));
     f.push(format!("\"churn_evicted\": {}", m.churn_evicted));
+    f.push(format!("\"device_crashes\": {}", m.device_crashes));
+    f.push(format!("\"device_recoveries\": {}", m.device_recoveries));
+    f.push(format!("\"crash_tasks_lost\": {}", m.crash_tasks_lost));
+    f.push(format!("\"crash_tasks_reoffered\": {}", m.crash_tasks_reoffered));
+    f.push(format!("\"crash_reoffer_placed\": {}", m.crash_reoffer_placed));
+    f.push(format!("\"crash_reoffer_dropped\": {}", m.crash_reoffer_dropped));
+    f.push(format!("\"crash_recovered_in_deadline\": {}", m.crash_recovered_in_deadline));
+    f.push(format!("\"lat_crash_recovery\": {}", json_latency(&m.lat_crash_recovery)));
+    f.push(format!("\"probe_rounds_lost\": {}", m.probe_rounds_lost));
+    f.push(format!("\"probe_pings_lost\": {}", m.probe_pings_lost));
+    f.push(format!("\"retransmitted_mbits\": {}", json_f64(m.retransmitted_mbits)));
     f.push(format!("\"bandwidth_updates\": {}", m.bandwidth_updates));
     f.push(format!("\"link_rebuild_ops\": {}", m.link_rebuild_ops));
     f.push(format!(
@@ -285,6 +325,19 @@ mod tests {
     }
 
     #[test]
+    fn faults_table_renders_counters() {
+        let mut m = sample("RAS_4F");
+        m.device_crashes = 2;
+        m.crash_tasks_lost = 5;
+        m.crash_tasks_reoffered = 3;
+        m.probe_rounds_lost = 1;
+        let f = faults(&[m]);
+        assert!(f.contains("RAS_4F"));
+        assert!(f.contains("crash / loss injection"));
+        assert!(f.contains("in_dl"));
+    }
+
+    #[test]
     fn json_rows_are_wellformed_and_complete() {
         let runs = vec![sample("WPS_1"), sample("RAS \"odd\"\\label")];
         let j = json_rows(&runs);
@@ -299,6 +352,9 @@ mod tests {
         assert!(j.contains("\"frame_completion_rate\": 0.73"));
         assert!(j.contains("\"lat_hp_alloc\": {\"count\": 1, \"mean_ms\": 1.2"));
         assert!(j.contains("\"reject_reasons\": [0, 0, 0, 0]"));
+        assert!(j.contains("\"device_crashes\": 0"));
+        assert!(j.contains("\"crash_recovered_in_deadline\": 0"));
+        assert!(j.contains("\"retransmitted_mbits\": 0"));
         // Balanced braces (cheap well-formedness proxy without a parser).
         assert_eq!(j.matches('{').count(), j.matches('}').count());
     }

@@ -7,8 +7,9 @@
 //!
 //! * [`ScenarioBuilder`] — a fluent spec of one experiment: trace
 //!   distribution, device fleet (count, per-device speed heterogeneity),
-//!   congestion/bandwidth regimes, fleet churn schedule, scheduler, seed,
-//!   duration. `build()` freezes it into a [`Scenario`].
+//!   congestion/bandwidth regimes, fleet churn schedule, fault plan
+//!   (crashes, lossy links, probe loss — see [`crate::fault`]), scheduler,
+//!   seed, duration. `build()` freezes it into a [`Scenario`].
 //! * [`Scenario`] — compiles to an [`Engine`] run and produces one
 //!   [`Metrics`] row. Cheap to clone, `Send`, fully deterministic from its
 //!   config seed.
@@ -41,6 +42,7 @@
 
 use crate::config::SystemConfig;
 use crate::coordinator::scheduler::multi::MultiScheduler;
+use crate::fault::FaultPlan;
 use crate::coordinator::scheduler::ras_sched::RasScheduler;
 use crate::coordinator::scheduler::wps::WpsScheduler;
 use crate::coordinator::scheduler::Scheduler;
@@ -135,6 +137,7 @@ pub struct ScenarioBuilder {
     frames: Option<usize>,
     minutes: f64,
     extras: RunExtras,
+    plan: FaultPlan,
 }
 
 impl Default for ScenarioBuilder {
@@ -153,6 +156,7 @@ impl ScenarioBuilder {
             frames: None,
             minutes: 30.0,
             extras: RunExtras::default(),
+            plan: FaultPlan::new(),
         }
     }
 
@@ -250,13 +254,61 @@ impl ScenarioBuilder {
         self
     }
 
-    /// Freeze into a runnable [`Scenario`].
+    // ---- fault injection ------------------------------------------------
+
+    /// Attach a full [`FaultPlan`] (replaces any fault knobs set so far).
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        self.plan = plan;
+        self
+    }
+
+    /// Device `device` crashes at `at_s` seconds: its in-flight tasks are
+    /// lost (flows aborted), survivors re-offered — unlike the graceful
+    /// [`Self::leave_at`].
+    pub fn crash_at(mut self, at_s: f64, device: DeviceId) -> Self {
+        self.plan = self.plan.crash_at(at_s, device);
+        self
+    }
+
+    /// A crashed `device` comes back at `at_s` seconds, empty.
+    pub fn recover_at(mut self, at_s: f64, device: DeviceId) -> Self {
+        self.plan = self.plan.recover_at(at_s, device);
+        self
+    }
+
+    /// Per-packet loss probability on task transfers (retransmission
+    /// inflation on the medium).
+    pub fn loss_rate(mut self, p: f64) -> Self {
+        self.plan = self.plan.loss_rate(p);
+        self
+    }
+
+    /// Per-ping loss probability on probe rounds (partial/empty rounds).
+    pub fn probe_loss(mut self, p: f64) -> Self {
+        self.plan = self.plan.probe_loss(p);
+        self
+    }
+
+    /// Seed-deterministic random crash/recover process over the whole
+    /// run (exponential up/down times with the given means).
+    pub fn random_faults(mut self, mtbf_s: f64, mttr_s: f64) -> Self {
+        self.plan = self.plan.random_faults(mtbf_s, mttr_s);
+        self
+    }
+
+    /// Freeze into a runnable [`Scenario`]. The fault plan compiles here:
+    /// the random-fault process expands over the run horizon from the
+    /// scenario seed (never ambient randomness), so the frozen scenario
+    /// is fully deterministic.
     pub fn build(self) -> Scenario {
         let frames = self.frames.unwrap_or_else(|| frames_for_minutes(&self.cfg, self.minutes));
         let name = self
             .name
             .unwrap_or_else(|| format!("{}_{}", self.kind.label(), self.spec.label()));
-        Scenario { name, cfg: self.cfg, kind: self.kind, spec: self.spec, frames, extras: self.extras }
+        let mut extras = self.extras;
+        let horizon_s = frames as f64 * self.cfg.frame_period_s;
+        self.plan.compile_into(&mut extras, self.cfg.seed, self.cfg.n_devices, horizon_s);
+        Scenario { name, cfg: self.cfg, kind: self.kind, spec: self.spec, frames, extras }
     }
 }
 
@@ -462,6 +514,116 @@ mod tests {
             nominal.lp_violations + nominal.hp_violations,
             slow.lp_violations + slow.hp_violations
         );
+    }
+
+    #[test]
+    fn crash_loses_work_and_reoffers_survivors() {
+        // A mid-run crash under heavy load: the run must record the
+        // crash, lose in-flight work, keep the re-offer accounting
+        // closed, and preserve the global identities. The "lost work"
+        // assertion aggregates over a few seeds (a single instant could
+        // in principle catch an idle device).
+        let mut any_lost = false;
+        let mut any_reoffered = false;
+        for seed in [23u64, 24, 25, 26] {
+            let m = ScenarioBuilder::new()
+                .scheduler(SchedKind::Ras)
+                .trace(TraceSpec::Weighted(4))
+                .frames(20)
+                .seed(seed)
+                .crash_at(45.0, 0)
+                .recover_at(165.0, 0)
+                .build()
+                .run();
+            assert_eq!(m.device_crashes, 1);
+            assert_eq!(m.device_recoveries, 1);
+            assert_eq!(m.lat_crash_recovery.count, 1);
+            assert_eq!(m.lat_crash_recovery.max_us, 120_000_000); // 120 s down
+            // Re-offer accounting closes once the queue drains: every
+            // re-offered task was either placed again or dropped.
+            assert_eq!(
+                m.crash_tasks_reoffered,
+                m.crash_reoffer_placed + m.crash_reoffer_dropped
+            );
+            assert!(m.crash_tasks_reoffered <= m.crash_tasks_lost);
+            assert!(m.crash_recovered_in_deadline <= m.crash_reoffer_placed);
+            // Global identities survive the crash path.
+            assert_eq!(
+                m.hp_generated,
+                m.hp_allocated_no_preempt + m.hp_allocated_with_preempt + m.hp_rejected
+            );
+            assert_eq!(
+                m.two_core_allocs + m.four_core_allocs,
+                m.lp_allocated_initial + m.lp_realloc_success
+            );
+            any_lost |= m.crash_tasks_lost > 0;
+            any_reoffered |= m.crash_tasks_reoffered > 0;
+        }
+        assert!(any_lost, "crashing a loaded device should lose in-flight work");
+        assert!(any_reoffered, "some lost guests should get re-offered");
+    }
+
+    #[test]
+    fn crash_and_graceful_leave_use_distinct_mechanisms() {
+        // Same departure time, same device — but a graceful leave drains
+        // through the churn counters (evicted guests re-enter via
+        // LpArrive) while a crash goes through the fault counters (work
+        // lost, survivors re-offered). Neither path leaks into the other.
+        let base = ScenarioBuilder::new()
+            .scheduler(SchedKind::Ras)
+            .trace(TraceSpec::Weighted(3))
+            .frames(20)
+            .seed(31);
+        let graceful = base.clone().leave_at(50.0, 1).join_at(170.0, 1).build().run();
+        let crashed = base.crash_at(50.0, 1).recover_at(170.0, 1).build().run();
+        assert_eq!(graceful.churn_leaves, 1);
+        assert_eq!(graceful.device_crashes, 0);
+        assert_eq!(graceful.crash_tasks_lost, 0);
+        assert_eq!(crashed.device_crashes, 1);
+        assert_eq!(crashed.churn_leaves, 0);
+        assert_eq!(crashed.churn_evicted, 0);
+        // Up to the fault instant the two runs are identical, so the
+        // crash loses at least the allocations the leave evicted (plus
+        // any in-flight transfers sourced from the dead device).
+        assert!(crashed.crash_tasks_lost >= graceful.churn_evicted);
+    }
+
+    #[test]
+    fn lossy_link_retransmits_and_drops_pings() {
+        let base = ScenarioBuilder::new()
+            .scheduler(SchedKind::Ras)
+            .trace(TraceSpec::Weighted(4))
+            .frames(20)
+            .seed(37);
+        let clean = base.clone().build().run();
+        let lossy = base.loss_rate(0.25).probe_loss(0.25).build().run();
+        assert_eq!(clean.retransmitted_mbits, 0.0);
+        assert_eq!(clean.probe_pings_lost, 0);
+        assert!(lossy.retransmitted_mbits > 0.0, "25% loss must retransmit");
+        assert!(lossy.probe_pings_lost > 0, "25% probe loss must drop pings");
+        // Both runs still drain to completion with intact identities.
+        assert_eq!(
+            lossy.hp_generated,
+            lossy.hp_allocated_no_preempt + lossy.hp_allocated_with_preempt + lossy.hp_rejected
+        );
+    }
+
+    #[test]
+    fn fault_plan_scenarios_are_deterministic() {
+        let build = || {
+            ScenarioBuilder::new()
+                .scheduler(SchedKind::Multi)
+                .trace(TraceSpec::Weighted(3))
+                .frames(15)
+                .seed(41)
+                .loss_rate(0.1)
+                .probe_loss(0.3)
+                .random_faults(90.0, 25.0)
+                .build()
+        };
+        let (a, b) = (build(), build());
+        assert_eq!(a.extras.faults, b.extras.faults, "fault schedule must be seed-derived");
+        assert_eq!(format!("{:?}", a.run()), format!("{:?}", b.run()));
     }
 
     #[test]

@@ -28,7 +28,7 @@ use crate::coordinator::scheduler::{Decision, Ops, Outcome, SchedEvent, Schedule
 use crate::coordinator::task::{Allocation, DeviceId, FrameId, Task, TaskId};
 use crate::metrics::Metrics;
 use crate::sim::events::{Event, EventQueue};
-use crate::sim::netsim::{Medium, FlowId, PROBE_FLOW_BASE};
+use crate::sim::netsim::{FlowId, LossyMedium, Medium, PROBE_FLOW_BASE};
 use crate::time::{SimDuration, SimTime};
 use crate::util::Rng;
 use crate::workload::trace::Trace;
@@ -49,6 +49,15 @@ pub struct RunExtras {
     /// Congestion regime changes: (time, bg_bps, duty_cycle). Overrides
     /// the config's static burst generator from that point on.
     pub regimes: Vec<(SimTime, f64, f64)>,
+    /// Fault schedule: (time, device, recover?). Crashes lose in-flight
+    /// work (flows aborted, survivors re-offered), unlike graceful churn.
+    /// Compile a [`crate::fault::FaultPlan`] to fill this.
+    pub faults: Vec<(SimTime, DeviceId, bool)>,
+    /// Per-packet loss probability on task transfers (retransmission
+    /// inflation on the medium; 0 = the paper's ideal link).
+    pub loss_rate: f64,
+    /// Per-ping loss probability on probe rounds (partial/empty rounds).
+    pub probe_loss: f64,
 }
 
 /// Runtime state of a task in flight.
@@ -56,7 +65,13 @@ pub struct RunExtras {
 struct TaskRuntime {
     alloc: Allocation,
     realloc: bool,
+    /// Placed through a crash re-offer (fault accounting).
+    reoffered: bool,
     cancelled: bool,
+    /// Placement generation: finish/transfer events scheduled under an
+    /// older (cancelled) placement of the same task are stale and must
+    /// not act on this one.
+    gen: u64,
 }
 
 /// Per-frame pipeline bookkeeping (Fig. 1's three stages).
@@ -71,7 +86,8 @@ struct FrameState {
     deadline: SimTime,
 }
 
-/// An in-flight probe round.
+/// An in-flight probe round (under probe loss, `bytes` reflects only the
+/// surviving pings; lost-ping counts live in the metrics).
 #[derive(Debug, Clone)]
 struct ProbeFlight {
     started: SimTime,
@@ -83,7 +99,7 @@ struct ProbeFlight {
 pub struct Engine {
     pub cfg: SystemConfig,
     sched: Box<dyn Scheduler>,
-    medium: Medium,
+    medium: LossyMedium,
     estimator: BandwidthEstimator,
     queue: EventQueue,
     now: SimTime,
@@ -109,6 +125,10 @@ pub struct Engine {
     duty_cycle: f64,
     /// Whether the traffic-toggle event chain is alive.
     traffic_on: bool,
+    /// Crash time per currently-down device (recovery latency metric).
+    crashed_at: HashMap<DeviceId, SimTime>,
+    /// Monotone placement-generation counter (stale-event guard).
+    next_gen: u64,
 }
 
 impl Engine {
@@ -160,6 +180,15 @@ impl Engine {
                 Event::RegimeChange { bg_bps_bits: bg_bps.to_bits(), duty_bits: duty.to_bits() },
             );
         }
+        // Fault schedule: crashes lose work, recoveries restore capacity.
+        for &(at, device, recover) in &extras.faults {
+            let ev = if recover {
+                Event::DeviceRecover { device }
+            } else {
+                Event::DeviceCrash { device }
+            };
+            queue.push(at, ev);
+        }
         let mut device_speed = extras.device_speed;
         if device_speed.len() < cfg.n_devices {
             device_speed.resize(cfg.n_devices, 1.0);
@@ -170,7 +199,12 @@ impl Engine {
             device_speed,
             duty_cycle: cfg.duty_cycle,
             traffic_on: cfg.duty_cycle > 0.0,
-            medium: Medium::new(cfg.link_bps, cfg.bg_bps),
+            medium: LossyMedium::new(
+                Medium::new(cfg.link_bps, cfg.bg_bps),
+                extras.loss_rate,
+                extras.probe_loss,
+                cfg.seed ^ 0x4c4f_5353, // "LOSS"
+            ),
             estimator,
             queue,
             now: 0,
@@ -187,6 +221,8 @@ impl Engine {
             end_of_input,
             cfg,
             sched,
+            crashed_at: HashMap::new(),
+            next_gen: 0,
         }
     }
 
@@ -199,7 +235,13 @@ impl Engine {
         }
         self.metrics.final_bandwidth_estimate_bps = self.sched.bandwidth_estimate();
         self.metrics.reject_reasons = self.sched.reject_diag();
+        self.metrics.retransmitted_mbits = self.medium.retransmitted_bits / 1e6;
         self.metrics
+    }
+
+    fn fresh_gen(&mut self) -> u64 {
+        self.next_gen += 1;
+        self.next_gen
     }
 
     fn fresh_task_id(&mut self) -> TaskId {
@@ -224,15 +266,18 @@ impl Engine {
         match ev {
             Event::TraceFrame { index } => self.on_trace_frame(index),
             Event::HpArrive { task } => self.on_hp_arrive(task),
-            Event::HpFinish { task } => self.on_hp_finish(task),
+            Event::HpFinish { task, gen } => self.on_hp_finish(task, gen),
             Event::LpArrive { tasks, realloc } => self.on_lp_arrive(tasks, realloc),
-            Event::LpFinish { task } => self.on_lp_finish(task),
-            Event::TransferStart { task } => self.on_transfer_start(task),
+            Event::LpFinish { task, gen } => self.on_lp_finish(task, gen),
+            Event::TransferStart { task, gen } => self.on_transfer_start(task, gen),
             Event::MediumComplete { flow, epoch } => self.on_medium_complete(flow, epoch),
             Event::ProbeStart => self.on_probe_start(),
             Event::TrafficToggle { active } => self.on_traffic_toggle(active),
             Event::DeviceJoin { device } => self.on_device_join(device),
             Event::DeviceLeave { device } => self.on_device_leave(device),
+            Event::DeviceCrash { device } => self.on_device_crash(device),
+            Event::DeviceRecover { device } => self.on_device_recover(device),
+            Event::Reoffer { tasks } => self.on_reoffer(tasks),
             Event::RegimeChange { bg_bps_bits, duty_bits } => {
                 self.on_regime_change(f64::from_bits(bg_bps_bits), f64::from_bits(duty_bits))
             }
@@ -298,7 +343,7 @@ impl Engine {
                 // has completed pre-emption": victims re-enter after the
                 // decision, plus the control round.
                 self.requeue_preempted(victims, decision);
-                self.start_local(alloc, decision, false);
+                self.start_local(alloc, decision, false, false);
             }
             Outcome::HpRejected { victims } => {
                 self.metrics.hp_rejected += 1;
@@ -347,23 +392,24 @@ impl Engine {
 
     /// Start a task that needs no transfer: runs on its device from
     /// max(allocated start, decision + control latency).
-    fn start_local(&mut self, alloc: Allocation, decision: SimTime, realloc: bool) {
+    fn start_local(&mut self, alloc: Allocation, decision: SimTime, realloc: bool, reoffered: bool) {
         let eff_start = alloc.start.max(decision + self.cfg.control_latency());
         let proc = self.actual_duration(&alloc);
         let finish = eff_start + proc;
         let task = alloc.task;
         let is_hp = alloc.config == crate::coordinator::task::TaskConfig::HighPriority;
-        self.runtime.insert(task, TaskRuntime { alloc, realloc, cancelled: false });
+        let gen = self.fresh_gen();
+        self.runtime.insert(task, TaskRuntime { alloc, realloc, reoffered, cancelled: false, gen });
         if is_hp {
-            self.queue.push(finish, Event::HpFinish { task });
+            self.queue.push(finish, Event::HpFinish { task, gen });
         } else {
-            self.queue.push(finish, Event::LpFinish { task });
+            self.queue.push(finish, Event::LpFinish { task, gen });
         }
     }
 
-    fn on_hp_finish(&mut self, task_id: TaskId) {
+    fn on_hp_finish(&mut self, task_id: TaskId, gen: u64) {
         let Some(rt) = self.runtime.get(&task_id) else { return };
-        if rt.cancelled {
+        if rt.cancelled || rt.gen != gen {
             return;
         }
         let frame = rt.alloc.frame;
@@ -413,32 +459,7 @@ impl Engine {
             self.metrics.lat_lp_alloc.record(lat);
         }
         match outcome {
-            Outcome::LpAllocated { allocs } => {
-                for alloc in allocs {
-                    match alloc.config {
-                        crate::coordinator::task::TaskConfig::LowTwoCore => self.metrics.two_core_allocs += 1,
-                        crate::coordinator::task::TaskConfig::LowFourCore => self.metrics.four_core_allocs += 1,
-                        _ => {}
-                    }
-                    if realloc {
-                        self.metrics.lp_realloc_success += 1;
-                    } else {
-                        self.metrics.lp_allocated_initial += 1;
-                    }
-                    if alloc.offloaded {
-                        self.metrics.offloaded_total += 1;
-                        // The device ships the input image when the
-                        // reserved communication window opens.
-                        let comm_start = alloc.comm.map(|(c1, _)| c1).unwrap_or(decision);
-                        let at = comm_start.max(decision + self.cfg.control_latency());
-                        let task = alloc.task;
-                        self.runtime.insert(task, TaskRuntime { alloc, realloc, cancelled: false });
-                        self.queue.push(at, Event::TransferStart { task });
-                    } else {
-                        self.start_local(alloc, decision, realloc);
-                    }
-                }
-            }
+            Outcome::LpAllocated { allocs } => self.place_lp_allocs(allocs, decision, realloc, false),
             Outcome::LpRejected => {
                 if !realloc {
                     self.metrics.lp_alloc_failures += tasks.len() as u64;
@@ -451,9 +472,44 @@ impl Engine {
         }
     }
 
-    fn on_transfer_start(&mut self, task_id: TaskId) {
+    /// Commit a batch of low-priority allocations decided at `decision`:
+    /// counters, then either the transfer kick-off (offloads) or the
+    /// local start. Shared by initial/realloc placement and crash
+    /// re-offers.
+    fn place_lp_allocs(&mut self, allocs: Vec<Allocation>, decision: SimTime, realloc: bool, reoffered: bool) {
+        for alloc in allocs {
+            match alloc.config {
+                crate::coordinator::task::TaskConfig::LowTwoCore => self.metrics.two_core_allocs += 1,
+                crate::coordinator::task::TaskConfig::LowFourCore => self.metrics.four_core_allocs += 1,
+                _ => {}
+            }
+            if realloc {
+                self.metrics.lp_realloc_success += 1;
+            } else {
+                self.metrics.lp_allocated_initial += 1;
+            }
+            if reoffered {
+                self.metrics.crash_reoffer_placed += 1;
+            }
+            if alloc.offloaded {
+                self.metrics.offloaded_total += 1;
+                // The device ships the input image when the
+                // reserved communication window opens.
+                let comm_start = alloc.comm.map(|(c1, _)| c1).unwrap_or(decision);
+                let at = comm_start.max(decision + self.cfg.control_latency());
+                let task = alloc.task;
+                let gen = self.fresh_gen();
+                self.runtime.insert(task, TaskRuntime { alloc, realloc, reoffered, cancelled: false, gen });
+                self.queue.push(at, Event::TransferStart { task, gen });
+            } else {
+                self.start_local(alloc, decision, realloc, reoffered);
+            }
+        }
+    }
+
+    fn on_transfer_start(&mut self, task_id: TaskId, gen: u64) {
         let Some(rt) = self.runtime.get(&task_id) else { return };
-        if rt.cancelled {
+        if rt.cancelled || rt.gen != gen {
             return;
         }
         let bytes = self.tasks[&task_id].input_bytes;
@@ -461,12 +517,13 @@ impl Engine {
         self.arm_medium();
     }
 
-    fn on_lp_finish(&mut self, task_id: TaskId) {
+    fn on_lp_finish(&mut self, task_id: TaskId, gen: u64) {
         let Some(rt) = self.runtime.get(&task_id) else { return };
-        if rt.cancelled {
+        if rt.cancelled || rt.gen != gen {
             return;
         }
-        let (frame, offloaded, realloc) = (rt.alloc.frame, rt.alloc.offloaded, rt.realloc);
+        let (frame, offloaded, realloc, reoffered) =
+            (rt.alloc.frame, rt.alloc.offloaded, rt.realloc, rt.reoffered);
         let deadline = self.tasks[&task_id].deadline;
         if self.now > deadline {
             self.metrics.lp_violations += 1;
@@ -481,6 +538,10 @@ impl Engine {
         }
         if offloaded {
             self.metrics.offloaded_completed += 1;
+        }
+        if reoffered {
+            // A crash-lost task made it back inside its original deadline.
+            self.metrics.crash_recovered_in_deadline += 1;
         }
         self.sched.on_event(self.now, SchedEvent::Complete { task: task_id });
         if let Some(f) = self.frames.get_mut(&frame) {
@@ -512,10 +573,10 @@ impl Engine {
             // Transfer done: the offloaded task may start processing.
             if let Some(rt) = self.runtime.get(&flow) {
                 if !rt.cancelled {
-                    let alloc = rt.alloc.clone();
+                    let (alloc, gen) = (rt.alloc.clone(), rt.gen);
                     let eff_start = alloc.start.max(self.now);
                     let proc = self.actual_duration(&alloc);
-                    self.queue.push(eff_start + proc, Event::LpFinish { task: flow });
+                    self.queue.push(eff_start + proc, Event::LpFinish { task: flow, gen });
                 }
             }
         }
@@ -540,14 +601,24 @@ impl Engine {
         // A random device hosts the round (Section V) and pings every
         // other device: ping_count × (n−1) × 1400 B, out and back.
         let host = active[self.rng.index(active.len())];
-        // Payload of the full round (out + back to every other device),
-        // inflated by the small-frame airtime factor — the medium is
-        // occupied for much longer than the raw bytes suggest.
-        let bytes = (self.cfg.ping_count as u64
-            * (active.len() as u64 - 1)
-            * self.cfg.ping_bytes
-            * 2) as f64
-            * self.cfg.probe_airtime_factor;
+        // Under probe loss some pings never make it back; the round's
+        // airtime (and sample count) shrinks with them. A fully lost
+        // round is a probe failure: no traffic, no estimator update — but
+        // the attempt still consumes its slot in the probe cadence.
+        let pings = self.cfg.ping_count as u64 * (active.len() as u64 - 1);
+        let survivors = self.medium.probe_survivors(pings);
+        self.metrics.probe_pings_lost += pings - survivors;
+        if survivors == 0 {
+            self.metrics.probe_rounds_lost += 1;
+            let _ = self.estimator.apply(self.now, &ProbeRound { host, samples_bps: vec![] });
+            self.queue.push(self.now + self.estimator.interval, Event::ProbeStart);
+            return;
+        }
+        // Payload of the surviving round (out + back per ping), inflated
+        // by the small-frame airtime factor — the medium is occupied for
+        // much longer than the raw bytes suggest.
+        let bytes =
+            (survivors * self.cfg.ping_bytes * 2) as f64 * self.cfg.probe_airtime_factor;
         let bytes = bytes as u64;
         let id = self.next_probe_id;
         self.next_probe_id += 1;
@@ -567,7 +638,11 @@ impl Engine {
         // The airtime the probe flow achieved per second of wall time *is*
         // the share a bulk transfer would get — exactly what the devices'
         // RTT→b/s conversion estimates (an idle link reads as the full
-        // link rate; a congested one as the contended share).
+        // link rate; a congested one as the contended share). The
+        // estimator folds the round *mean*, so per-ping multiplicity is
+        // immaterial — one sample carries it; a partial round under probe
+        // loss differs only through its shrunken airtime (and the
+        // survivor counts already tracked in the metrics).
         let achieved_bps = p.bytes as f64 * 8.0 / (dur_us as f64 / 1e6);
         let round = ProbeRound { host: p.host, samples_bps: vec![achieved_bps] };
         if let Some(new_est) = self.estimator.apply(self.now, &round) {
@@ -661,6 +736,133 @@ impl Engine {
                     Event::LpArrive { tasks: vec![a.task], realloc: true },
                 );
             }
+        }
+    }
+
+    // ---- fault injection: crashes, recoveries, re-offers -----------------
+
+    /// A device crashes: unlike a graceful leave, everything it was
+    /// running is *lost* — flows aborted on the medium, no completions.
+    /// Lost guest tasks whose source (and its input image) survive are
+    /// re-offered to the scheduler on their remaining deadline budget.
+    fn on_device_crash(&mut self, device: DeviceId) {
+        if !self.device_active(device) {
+            return; // already down (or never joined): nothing to lose
+        }
+        self.active_devices[device] = false;
+        self.metrics.device_crashes += 1;
+        self.crashed_at.insert(device, self.now);
+        let decision = self.sched.on_event(self.now, SchedEvent::DeviceCrashed { device });
+        let Outcome::Ack { evicted } = decision.outcome else {
+            unreachable!("DeviceCrashed must be acknowledged");
+        };
+        for a in evicted {
+            self.cancel_task(a.task); // aborts the medium flow too
+            self.metrics.crash_tasks_lost += 1;
+            let source = self.tasks[&a.task].source;
+            let hp = a.config == crate::coordinator::task::TaskConfig::HighPriority;
+            if hp || source == device || !self.device_active(source) {
+                // The work (or the device holding its input image) died
+                // with the crash: the frame cannot complete.
+                self.fail_frame(a.frame);
+            } else {
+                // The source still holds the input: re-offer the lost
+                // task. Its deadline is unchanged — the time burned
+                // before the crash is gone for good.
+                self.metrics.crash_tasks_reoffered += 1;
+                self.metrics.lp_realloc_attempts += 1;
+                self.queue.push(
+                    self.now + self.cfg.control_latency(),
+                    Event::Reoffer { tasks: vec![a.task] },
+                );
+            }
+        }
+        // In-flight input transfers *from* the crashed device die with
+        // it: a guest task placed elsewhere whose image was still
+        // crossing the medium can never start.
+        let mut orphaned: Vec<(TaskId, FrameId)> = self
+            .runtime
+            .iter()
+            .filter(|(id, rt)| {
+                !rt.cancelled
+                    && rt.alloc.offloaded
+                    && rt.alloc.device != device
+                    && self.tasks[*id].source == device
+                    && self.medium.has_flow(**id)
+            })
+            .map(|(id, rt)| (*id, rt.alloc.frame))
+            .collect();
+        // `runtime` is a HashMap: sort so the scheduler sees the aborts
+        // in a run-independent order (determinism guarantee).
+        orphaned.sort_unstable();
+        for (id, frame) in orphaned {
+            self.cancel_task(id);
+            // Free the placement the scheduler still holds for it.
+            let _ = self.sched.on_event(self.now, SchedEvent::Violation { task: id });
+            self.metrics.crash_tasks_lost += 1;
+            self.fail_frame(frame);
+        }
+    }
+
+    /// A crashed device comes back with fresh, empty availability. Only
+    /// devices that actually crashed recover: a `recover_at` with no
+    /// preceding crash (e.g. the crash no-oped because the device had
+    /// already gracefully left) is a no-op, never a spurious revival —
+    /// graceful returns go through `join_at`.
+    fn on_device_recover(&mut self, device: DeviceId) {
+        let Some(crashed) = self.crashed_at.remove(&device) else {
+            return; // no crash on record: nothing to recover from
+        };
+        if self.device_active(device) {
+            return; // already revived (a graceful join beat the recovery)
+        }
+        self.active_devices[device] = true;
+        self.metrics.device_recoveries += 1;
+        self.metrics.lat_crash_recovery.record(self.now - crashed);
+        let _ = self.sched.on_event(self.now, SchedEvent::DeviceRecovered { device });
+    }
+
+    /// Crash-lost tasks re-enter scheduling. The scheduler re-places them
+    /// on whatever deadline budget remains or rejects (drop-by-deadline);
+    /// tasks whose frame already failed are dropped without a dispatch.
+    fn on_reoffer(&mut self, task_ids: Vec<TaskId>) {
+        let mut live: Vec<TaskId> = Vec::with_capacity(task_ids.len());
+        for id in task_ids {
+            let (frame, source) = {
+                let t = &self.tasks[&id];
+                (t.frame, t.source)
+            };
+            let frame_alive = self.frames.get(&frame).map(|f| !f.failed).unwrap_or(false);
+            if frame_alive && self.device_active(source) {
+                live.push(id);
+            } else {
+                self.metrics.crash_reoffer_dropped += 1;
+                if frame_alive {
+                    // The source (and its input image) died between the
+                    // crash and the re-offer: the frame can never finish.
+                    self.fail_frame(frame);
+                }
+            }
+        }
+        if live.is_empty() {
+            return;
+        }
+        let tasks: Vec<Task> = live.iter().map(|id| self.tasks[id].clone()).collect();
+        let arrival = self.now;
+        let service_start = self.busy_until.max(arrival);
+        let Decision { outcome, ops } =
+            self.sched.on_event(service_start, SchedEvent::Reoffer { tasks: &tasks });
+        let (decision, lat) = self.charge(arrival, ops);
+        self.metrics.lat_lp_realloc.record(lat);
+        match outcome {
+            Outcome::LpAllocated { allocs } => self.place_lp_allocs(allocs, decision, true, true),
+            Outcome::LpRejected => {
+                self.metrics.crash_reoffer_dropped += tasks.len() as u64;
+                if let Some(frame) = tasks.first().map(|t| t.frame) {
+                    self.fail_frame(frame);
+                }
+            }
+            other => unreachable!("Reoffer must yield an LP outcome, got {other:?}"),
         }
     }
 

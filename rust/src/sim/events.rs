@@ -8,6 +8,13 @@ use crate::sim::netsim::FlowId;
 use crate::time::SimTime;
 
 /// Everything that can happen in the simulated system.
+///
+/// `HpFinish` / `LpFinish` / `TransferStart` carry the placement
+/// generation (`gen`) they were scheduled under: a task that is cancelled
+/// and later re-placed (preemption victim, churn eviction, crash
+/// re-offer) gets a fresh generation, so events queued against the dead
+/// placement are recognised as stale and dropped instead of finishing or
+/// transferring the new placement at the old placement's times.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Event {
     /// The conveyor produces frame `index` of the trace (all devices).
@@ -15,13 +22,13 @@ pub enum Event {
     /// A high-priority scheduling request reaches the controller.
     HpArrive { task: TaskId },
     /// A high-priority task finishes on its device.
-    HpFinish { task: TaskId },
+    HpFinish { task: TaskId, gen: u64 },
     /// A low-priority batch request reaches the controller.
     LpArrive { tasks: Vec<TaskId>, realloc: bool },
     /// A low-priority task finishes on its device.
-    LpFinish { task: TaskId },
+    LpFinish { task: TaskId, gen: u64 },
     /// An offloaded task's input transfer begins on the medium.
-    TransferStart { task: TaskId },
+    TransferStart { task: TaskId, gen: u64 },
     /// The medium predicts flow completion (stale if epoch mismatches).
     MediumComplete { flow: FlowId, epoch: u64 },
     /// A bandwidth probe round begins (host device chosen at fire time).
@@ -32,6 +39,14 @@ pub enum Event {
     DeviceJoin { device: DeviceId },
     /// A device leaves the fleet; its live tasks are evicted.
     DeviceLeave { device: DeviceId },
+    /// A device crashes (fault plan): unlike a graceful leave, its
+    /// in-flight tasks are *lost* and their medium flows aborted.
+    DeviceCrash { device: DeviceId },
+    /// A crashed device recovers with fresh, empty availability.
+    DeviceRecover { device: DeviceId },
+    /// Crash-lost low-priority tasks re-enter scheduling via
+    /// [`crate::coordinator::scheduler::SchedEvent::Reoffer`].
+    Reoffer { tasks: Vec<TaskId> },
     /// The background-traffic regime changes mid-run (scenario schedule).
     /// The f64 rate/duty are carried as `to_bits` so the event stays `Eq`.
     RegimeChange { bg_bps_bits: u64, duty_bits: u64 },

@@ -7,4 +7,4 @@ pub mod events;
 pub mod netsim;
 
 pub use engine::{Engine, RunExtras};
-pub use netsim::Medium;
+pub use netsim::{LossyMedium, Medium};

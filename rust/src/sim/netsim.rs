@@ -12,7 +12,8 @@
 
 use std::collections::HashMap;
 
-use crate::time::{SimTime};
+use crate::time::SimTime;
+use crate::util::Rng;
 
 /// Identifies a flow on the medium. Task transfers use the task id; probe
 /// flows use ids above [`PROBE_FLOW_BASE`].
@@ -167,6 +168,122 @@ impl Medium {
     pub fn active_flows(&self) -> usize {
         self.flows.len()
     }
+
+    /// Whether `id` is still transferring (no time advance).
+    pub fn has_flow(&self, id: FlowId) -> bool {
+        self.flows.contains_key(&id)
+    }
+
+    /// Remaining bits of flow `id` after draining the fluid model to
+    /// `now`. Diagnostic/test hook.
+    pub fn remaining_bits(&mut self, now: SimTime, id: FlowId) -> Option<f64> {
+        self.drain_to(now);
+        self.flows.get(&id).map(|f| f.remaining_bits)
+    }
+
+    /// Total remaining bits across all flows after draining to `now`.
+    pub fn total_remaining_bits(&mut self, now: SimTime) -> f64 {
+        self.drain_to(now);
+        self.flows.values().map(|f| f.remaining_bits).sum()
+    }
+}
+
+/// MTU-sized packet the loss model samples over (1500 B Ethernet-class
+/// frames, matching the paper's Packet_MMAP traffic generator).
+pub const PACKET_BYTES: u64 = 1500;
+
+/// A [`Medium`] with per-packet loss and retransmission inflation: the
+/// lost fraction of every transfer is re-queued as extra bits, so a lossy
+/// link doesn't just *slow* transfers the way congestion does — it makes
+/// their airtime demand grow, which is what erodes the controller's
+/// communication-window plans. Probe pings are *not* retransmitted (a
+/// lost ping is a lost sample), so under `probe_loss` a
+/// [`crate::coordinator::bandwidth::ProbeRound`] comes back partial or
+/// empty — see [`LossyMedium::probe_survivors`].
+///
+/// All loss draws come from the embedded seed-deterministic RNG, never
+/// ambient randomness, and with both rates at zero the RNG is untouched:
+/// an ideal `LossyMedium` is bit-identical to the bare [`Medium`].
+///
+/// Derefs to [`Medium`] for everything that isn't loss-aware.
+#[derive(Debug, Clone)]
+pub struct LossyMedium {
+    inner: Medium,
+    /// Per-packet loss probability on task transfers.
+    pub loss_rate: f64,
+    /// Per-ping loss probability on probe rounds.
+    pub probe_loss: f64,
+    rng: Rng,
+    /// Extra bits re-queued by retransmission (diagnostics).
+    pub retransmitted_bits: f64,
+}
+
+impl std::ops::Deref for LossyMedium {
+    type Target = Medium;
+    fn deref(&self) -> &Medium {
+        &self.inner
+    }
+}
+
+impl std::ops::DerefMut for LossyMedium {
+    fn deref_mut(&mut self) -> &mut Medium {
+        &mut self.inner
+    }
+}
+
+impl LossyMedium {
+    pub fn new(inner: Medium, loss_rate: f64, probe_loss: f64, seed: u64) -> Self {
+        Self {
+            inner,
+            loss_rate: loss_rate.clamp(0.0, crate::fault::MAX_LOSS_RATE),
+            probe_loss: probe_loss.clamp(0.0, crate::fault::MAX_LOSS_RATE),
+            rng: Rng::seed_from_u64(seed),
+            retransmitted_bits: 0.0,
+        }
+    }
+
+    /// An ideal (lossless) medium — behaves exactly like the inner one.
+    pub fn ideal(inner: Medium) -> Self {
+        Self::new(inner, 0.0, 0.0, 0)
+    }
+
+    /// Start a transfer of `bytes` at `now`. On a lossy link the lost
+    /// packets are re-queued (and can be lost again), inflating the flow;
+    /// probe flows are exempt — ping loss drops samples, not airtime.
+    pub fn add_flow(&mut self, now: SimTime, id: FlowId, bytes: u64) {
+        let bytes = if self.loss_rate > 0.0 && id < PROBE_FLOW_BASE {
+            let extra = self.retransmit_packets(bytes.div_ceil(PACKET_BYTES));
+            self.retransmitted_bits += (extra * PACKET_BYTES * 8) as f64;
+            bytes + extra * PACKET_BYTES
+        } else {
+            bytes
+        };
+        self.inner.add_flow(now, id, bytes);
+    }
+
+    /// Rounds of re-queued packets until everything got through. Expected
+    /// total inflation is p/(1−p) of the original packet count; the cap
+    /// on `loss_rate` bounds it.
+    fn retransmit_packets(&mut self, packets: u64) -> u64 {
+        let mut extra = 0u64;
+        let mut pending = packets;
+        while pending > 0 {
+            let lost = self.rng.gen_binomial(pending, self.loss_rate);
+            extra += lost;
+            pending = lost;
+        }
+        extra
+    }
+
+    /// How many of a probe round's `pings` survive the lossy link. With
+    /// `probe_loss` at zero this returns `pings` without touching the
+    /// RNG (the ideal path stays bit-identical).
+    pub fn probe_survivors(&mut self, pings: u64) -> u64 {
+        if self.probe_loss <= 0.0 {
+            return pings;
+        }
+        pings - self.rng.gen_binomial(pings, self.probe_loss)
+    }
 }
 
 #[cfg(test)]
@@ -244,5 +361,51 @@ mod tests {
         assert!(m.remove_flow(10_000, 1));
         assert!(!m.remove_flow(10_000, 1));
         assert!(m.next_completion(10_000).is_none());
+    }
+
+    #[test]
+    fn ideal_lossy_medium_is_bit_identical_to_bare() {
+        let mut bare = Medium::new(40e6, 0.0);
+        let mut lossy = LossyMedium::ideal(Medium::new(40e6, 0.0));
+        for (t, id, bytes) in [(0, 1, 150_000u64), (5_000, 2, 90_000), (20_000, 3, 10_000)] {
+            bare.add_flow(t, id, bytes);
+            lossy.add_flow(t, id, bytes);
+        }
+        assert_eq!(bare.next_completion(25_000), lossy.next_completion(25_000));
+        assert_eq!(lossy.retransmitted_bits, 0.0);
+    }
+
+    #[test]
+    fn lossy_link_inflates_transfers() {
+        let mut lossy = LossyMedium::new(Medium::new(40e6, 0.0), 0.2, 0.0, 1234);
+        lossy.add_flow(0, 1, 1_100_000);
+        let inflated = lossy.remaining_bits(0, 1).unwrap();
+        // 20% loss re-queues roughly p/(1−p) = 25% extra bits.
+        assert!(inflated > 1_100_000.0 * 8.0 * 1.10, "too little inflation: {inflated}");
+        assert!(inflated < 1_100_000.0 * 8.0 * 1.60, "implausible inflation: {inflated}");
+        assert!(lossy.retransmitted_bits > 0.0);
+        // Probe flows are exempt from retransmission inflation.
+        let before = lossy.retransmitted_bits;
+        lossy.add_flow(0, PROBE_FLOW_BASE, 84_000);
+        assert_eq!(lossy.retransmitted_bits, before);
+        assert_eq!(lossy.remaining_bits(0, PROBE_FLOW_BASE), Some(84_000.0 * 8.0));
+    }
+
+    #[test]
+    fn probe_survivors_shrink_under_loss_and_are_deterministic() {
+        let mut a = LossyMedium::new(Medium::new(40e6, 0.0), 0.0, 0.5, 7);
+        let mut b = LossyMedium::new(Medium::new(40e6, 0.0), 0.0, 0.5, 7);
+        let mut total = 0u64;
+        for _ in 0..50 {
+            let s = a.probe_survivors(30);
+            assert_eq!(s, b.probe_survivors(30), "same seed, same survivors");
+            assert!(s <= 30);
+            total += s;
+        }
+        // 50 rounds × 30 pings at 50% loss ≈ 750 survivors.
+        assert!((500..1000).contains(&total), "survivor mass off: {total}");
+        // Lossless probes never touch the RNG.
+        let mut ideal = LossyMedium::ideal(Medium::new(40e6, 0.0));
+        assert_eq!(ideal.probe_survivors(30), 30);
     }
 }

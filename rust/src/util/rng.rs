@@ -94,6 +94,26 @@ impl Rng {
         acc - 6.0
     }
 
+    /// Binomial(n, p) sample: exact Bernoulli sum for small `n`, clamped
+    /// normal approximation beyond (the loss-sampling hot path hands in
+    /// packet counts in the hundreds, where the approximation error is
+    /// far below the fluid model's own tolerance).
+    pub fn gen_binomial(&mut self, n: u64, p: f64) -> u64 {
+        if n == 0 || p <= 0.0 {
+            return 0;
+        }
+        if p >= 1.0 {
+            return n;
+        }
+        if n <= 64 {
+            return (0..n).filter(|_| self.gen_f64() < p).count() as u64;
+        }
+        let nf = n as f64;
+        let mean = nf * p;
+        let sd = (nf * p * (1.0 - p)).sqrt();
+        (mean + self.gen_gauss() * sd).round().clamp(0.0, nf) as u64
+    }
+
     /// Sample an index from unnormalised non-negative weights.
     pub fn weighted_index(&mut self, weights: &[f64]) -> usize {
         let total: f64 = weights.iter().sum();
@@ -183,6 +203,32 @@ mod tests {
         let var = sq / n as f64 - mean * mean;
         assert!(mean.abs() < 0.05, "mean {mean}");
         assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn binomial_moments_and_bounds() {
+        let mut r = Rng::seed_from_u64(9);
+        // Small-n exact path.
+        for _ in 0..500 {
+            let v = r.gen_binomial(10, 0.3);
+            assert!(v <= 10);
+        }
+        // Large-n approximate path: mean within a few SDs over many draws.
+        let n = 1000u64;
+        let p = 0.2;
+        let draws = 400;
+        let mut sum = 0u64;
+        for _ in 0..draws {
+            let v = r.gen_binomial(n, p);
+            assert!(v <= n);
+            sum += v;
+        }
+        let mean = sum as f64 / draws as f64;
+        assert!((mean - 200.0).abs() < 10.0, "binomial mean drifted: {mean}");
+        // Degenerate probabilities.
+        assert_eq!(r.gen_binomial(100, 0.0), 0);
+        assert_eq!(r.gen_binomial(100, 1.0), 100);
+        assert_eq!(r.gen_binomial(0, 0.5), 0);
     }
 
     #[test]

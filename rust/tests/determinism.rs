@@ -1,0 +1,99 @@
+//! Determinism property suite: the same `Sweep` grid with the same seeds
+//! must produce identical rows at any worker-thread count — **including
+//! under a `FaultPlan`**. Faults draw only from RNG streams derived from
+//! the scenario seed (the fault-schedule generator, the lossy medium's
+//! loss sampler), never from ambient randomness, so a crashing, lossy,
+//! probe-dropping run replays bit for bit.
+
+use medge::fault::FaultPlan;
+use medge::scenario::{Scenario, ScenarioBuilder, SchedKind, Sweep};
+use medge::workload::trace::TraceSpec;
+
+/// A scenario exercising every nondeterminism-prone path: random faults,
+/// packet loss, probe loss, churn, and a congestion regime change.
+fn faulted(kind: SchedKind, load: u8, seed: u64) -> Scenario {
+    ScenarioBuilder::new()
+        .scheduler(kind)
+        .trace(TraceSpec::Weighted(load))
+        .frames(12)
+        .seed(seed)
+        .leave_at(80.0, 1)
+        .join_at(150.0, 1)
+        .congestion_at(60.0, 36e6, 0.5)
+        .crash_at(40.0, 0)
+        .recover_at(120.0, 0)
+        .loss_rate(0.1)
+        .probe_loss(0.3)
+        .random_faults(200.0, 40.0)
+        .named(format!("{}_{}_s{}", kind.label(), load, seed))
+        .build()
+}
+
+fn grid() -> Sweep {
+    let mut sweep = Sweep::new();
+    for (i, kind) in [SchedKind::Wps, SchedKind::Ras, SchedKind::Multi].into_iter().enumerate() {
+        for load in [2u8, 4] {
+            sweep = sweep.add(faulted(kind, load, 100 + i as u64));
+        }
+    }
+    sweep
+}
+
+fn rows_debug(sweep: &Sweep) -> Vec<String> {
+    sweep.run().iter().map(|m| format!("{m:?}")).collect()
+}
+
+#[test]
+fn fault_grid_identical_across_thread_counts() {
+    let g = grid();
+    let seq = rows_debug(&g.clone().threads(1));
+    let par4 = rows_debug(&g.clone().threads(4));
+    let par2 = rows_debug(&g.threads(2));
+    assert_eq!(seq.len(), 6);
+    for (i, row) in seq.iter().enumerate() {
+        assert_eq!(row, &par4[i], "row {i} differs between --threads 1 and --threads 4");
+        assert_eq!(row, &par2[i], "row {i} differs between --threads 1 and --threads 2");
+    }
+}
+
+#[test]
+fn fault_grid_identical_across_repeated_runs() {
+    let g = grid().threads(4);
+    assert_eq!(rows_debug(&g), rows_debug(&g), "re-running the same sweep must not drift");
+}
+
+#[test]
+fn fault_runs_actually_inject_faults() {
+    // Guard against the suite silently testing a no-op plan: the grid's
+    // scenarios must exhibit crashes, loss, and probe loss somewhere.
+    let rows = grid().threads(2).run();
+    assert!(rows.iter().any(|m| m.device_crashes > 0), "no crashes injected");
+    assert!(rows.iter().any(|m| m.retransmitted_mbits > 0.0), "no loss injected");
+    assert!(rows.iter().any(|m| m.probe_pings_lost > 0), "no probe loss injected");
+}
+
+#[test]
+fn random_fault_schedule_depends_only_on_seed() {
+    let plan = FaultPlan::new().random_faults(150.0, 30.0);
+    let a = plan.schedule(7, 4, 900.0);
+    let b = plan.schedule(7, 4, 900.0);
+    assert_eq!(a, b);
+    assert_ne!(
+        a,
+        plan.schedule(8, 4, 900.0),
+        "different seeds should produce different random fault traces"
+    );
+    // The expansion is part of `build()`: two identically-seeded builds
+    // freeze the same concrete schedule into their extras.
+    let s1 = faulted(SchedKind::Ras, 3, 55);
+    let s2 = faulted(SchedKind::Ras, 3, 55);
+    assert_eq!(s1.extras.faults, s2.extras.faults);
+}
+
+#[test]
+fn single_faulted_scenario_replays_identically() {
+    let s = faulted(SchedKind::Multi, 4, 77);
+    let a = s.run();
+    let b = s.run();
+    assert_eq!(format!("{a:?}"), format!("{b:?}"));
+}

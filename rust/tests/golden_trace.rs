@@ -1,0 +1,112 @@
+//! Golden-trace regression suite: one fixed-seed scenario per scheduler
+//! (WPS, RAS, MULTI) — with churn, heterogeneity, a mid-run congestion
+//! regime, and a full fault plan (crash/recover, lossy link, probe loss)
+//! so that every engine path PR 1 rewired and PR 2 added is locked down —
+//! serialized through `report::json_rows` and compared **byte for byte**
+//! against checked-in snapshots in `rust/tests/golden/`.
+//!
+//! A drifting snapshot means an intended semantic change or an accidental
+//! one; either way it must be looked at. To regenerate after an intended
+//! change:
+//!
+//! ```sh
+//! UPDATE_GOLDEN=1 cargo test --test golden_trace
+//! git diff rust/tests/golden/   # review, then commit
+//! ```
+//!
+//! The actual rows are always written to `rust/target/golden_actual/`
+//! (CI uploads that directory as an artifact when the suite fails, so
+//! the diff is inspectable without re-running locally). A missing
+//! snapshot bootstraps locally (written + loud warning — commit it to
+//! arm the comparison) but FAILS under CI (`CI` env set): a fresh CI
+//! checkout must never let the suite pass vacuously.
+
+use std::path::PathBuf;
+
+use medge::metrics::report;
+use medge::scenario::{ScenarioBuilder, SchedKind};
+use medge::workload::trace::TraceSpec;
+
+/// The pinned scenario: fixed seed, every scenario feature exercised.
+/// Changing ANY knob here invalidates the snapshots — regenerate.
+fn golden_scenario(kind: SchedKind) -> medge::metrics::Metrics {
+    ScenarioBuilder::new()
+        .scheduler(kind)
+        .trace(TraceSpec::Weighted(3))
+        .frames(16)
+        .seed(2024)
+        .device_speed(1, 1.25)
+        .leave_at(90.0, 2)
+        .join_at(200.0, 2)
+        .congestion_at(120.0, 36e6, 0.5)
+        .crash_at(60.0, 3)
+        .recover_at(150.0, 3)
+        .loss_rate(0.05)
+        .probe_loss(0.25)
+        .named(format!("G_{}", kind.label()))
+        .build()
+        .run()
+}
+
+fn check(name: &str, kind: SchedKind) {
+    let rows = report::json_rows(&[golden_scenario(kind)]);
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let golden = manifest.join("tests/golden").join(format!("{name}.json"));
+    // Always drop the actual rows where CI can pick them up as a diff
+    // artifact on failure.
+    let actual_dir = manifest.join("target/golden_actual");
+    std::fs::create_dir_all(&actual_dir).expect("create golden_actual dir");
+    std::fs::write(actual_dir.join(format!("{name}.json")), &rows).expect("write actual rows");
+
+    if std::env::var_os("UPDATE_GOLDEN").is_some() || !golden.exists() {
+        // A missing snapshot must not silently pass forever on CI (every
+        // checkout is fresh there — the byte-compare would never arm):
+        // bootstrap locally, fail loudly under CI until the generated
+        // files are committed.
+        assert!(
+            std::env::var_os("UPDATE_GOLDEN").is_some() || std::env::var_os("CI").is_none(),
+            "golden snapshot {} is missing on CI: generate it locally \
+             (UPDATE_GOLDEN=1 cargo test --test golden_trace) and commit rust/tests/golden/",
+            golden.display()
+        );
+        std::fs::create_dir_all(golden.parent().unwrap()).expect("create golden dir");
+        std::fs::write(&golden, &rows).expect("write golden snapshot");
+        eprintln!(
+            "golden_trace: wrote snapshot {} — review and commit it",
+            golden.display()
+        );
+        return;
+    }
+    let expected = std::fs::read_to_string(&golden).expect("read golden snapshot");
+    assert_eq!(
+        expected, rows,
+        "golden trace drifted for {name}: inspect rust/target/golden_actual/{name}.json \
+         against rust/tests/golden/{name}.json; if the change is intended, regenerate with \
+         `UPDATE_GOLDEN=1 cargo test --test golden_trace` and commit the diff"
+    );
+}
+
+#[test]
+fn golden_wps() {
+    check("wps", SchedKind::Wps);
+}
+
+#[test]
+fn golden_ras() {
+    check("ras", SchedKind::Ras);
+}
+
+#[test]
+fn golden_multi() {
+    check("multi", SchedKind::Multi);
+}
+
+/// The snapshot pipeline itself must be deterministic: serializing the
+/// same scenario twice gives identical bytes (if this fails, no snapshot
+/// can be trusted).
+#[test]
+fn golden_serialization_is_stable() {
+    let a = report::json_rows(&[golden_scenario(SchedKind::Ras)]);
+    let b = report::json_rows(&[golden_scenario(SchedKind::Ras)]);
+    assert_eq!(a, b);
+}
