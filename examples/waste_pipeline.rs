@@ -17,7 +17,7 @@ use std::time::Instant;
 
 use medge::config::SystemConfig;
 use medge::coordinator::scheduler::ras_sched::RasScheduler;
-use medge::coordinator::scheduler::{Outcome, SchedEvent, Scheduler};
+use medge::coordinator::scheduler::{task_refs, Outcome, SchedEvent, Scheduler};
 use medge::coordinator::task::Task;
 use medge::runtime::{default_artifacts_dir, image::synth_frame, InferenceEngine, Stage};
 use medge::workload::trace::{Trace, TraceSpec};
@@ -81,8 +81,10 @@ fn main() -> anyhow::Result<()> {
                     .map(|i| Task::low(id + i, hp.id, device, now, deadline, &cfg))
                     .collect();
                 id += load as u64;
-                let decision =
-                    sched.on_event(now, SchedEvent::LowPriorityBatch { tasks: &batch, realloc: false });
+                let decision = sched.on_event(
+                    now,
+                    SchedEvent::LowPriorityBatch { tasks: &task_refs(&batch), realloc: false },
+                );
                 if let Outcome::LpAllocated { allocs } = decision.outcome {
                     for a in &allocs {
                         let img = synth_frame(a.task, true);

@@ -1,0 +1,22 @@
+//! Hot-path suite as a `cargo bench` target (`--bench hot_path`).
+//! Installs the counting allocator so the steady-state `allocs/event`
+//! gauge is measured; pass `quick` as an argument for the short CI
+//! variant. `medge bench --json` runs the same suite and writes the
+//! `BENCH_hotpath.json` trajectory file.
+
+use medge::experiments::hotpath::{run_suite, SuiteOptions};
+use medge::util::bench::CountingAlloc;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+fn alloc_count() -> u64 {
+    ALLOC.allocations()
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "quick" || a == "--quick");
+    println!("== hot_path bench suite (quick = {quick}) ==\n");
+    let rows = run_suite(&SuiteOptions { quick, alloc_count: Some(alloc_count) });
+    println!("\n{} rows; write the JSON trajectory with `medge bench --json`", rows.len());
+}

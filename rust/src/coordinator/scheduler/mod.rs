@@ -58,6 +58,12 @@ use crate::time::SimTime;
 pub type Ops = u64;
 
 /// A typed occurrence dispatched to the scheduler by the engine.
+///
+/// Batch events carry `&[&Task]` rather than `&[Task]`: the engine's
+/// tasks live in a generational slab, and the dispatch borrows them in
+/// place (a stack array of references, no clones, no allocation). Owned
+/// task buffers — tests, examples, the compat shim — adapt through
+/// [`task_refs`].
 #[derive(Debug, Clone, Copy)]
 pub enum SchedEvent<'a> {
     /// A high-priority task requests placement (always local to source).
@@ -65,7 +71,7 @@ pub enum SchedEvent<'a> {
     /// A batch of 1–4 low-priority DNN tasks requests placement. The
     /// request is atomic; `realloc` marks re-entry of preempted tasks
     /// (tracked separately in the paper's Fig. 4/5).
-    LowPriorityBatch { tasks: &'a [Task], realloc: bool },
+    LowPriorityBatch { tasks: &'a [&'a Task], realloc: bool },
     /// A task finished on its device (free its resources).
     Complete { task: TaskId },
     /// A task missed its deadline and was abandoned.
@@ -89,7 +95,15 @@ pub enum SchedEvent<'a> {
     /// Crash-lost low-priority tasks re-offered for placement with
     /// whatever deadline budget remains (the crash already burned part of
     /// it). LP-shaped outcome: re-place, or reject to drop-by-deadline.
-    Reoffer { tasks: &'a [Task] },
+    Reoffer { tasks: &'a [&'a Task] },
+}
+
+/// Adapt an owned/contiguous task buffer to the reference-slice shape
+/// [`SchedEvent`] batch events carry. The engine never needs this (it
+/// borrows straight out of its slab); tests, examples, and the
+/// [`SchedulerCompat`] shim do.
+pub fn task_refs(tasks: &[Task]) -> Vec<&Task> {
+    tasks.iter().collect()
 }
 
 /// The allocation outcome of one dispatched event.
@@ -252,7 +266,8 @@ impl<S: Scheduler + ?Sized> SchedulerCompat for S {
     }
 
     fn schedule_low(&mut self, now: SimTime, tasks: &[Task], realloc: bool) -> LpOutcome {
-        self.on_event(now, SchedEvent::LowPriorityBatch { tasks, realloc }).into_lp()
+        let refs = task_refs(tasks);
+        self.on_event(now, SchedEvent::LowPriorityBatch { tasks: &refs, realloc }).into_lp()
     }
 
     fn on_complete(&mut self, now: SimTime, task: TaskId) {
@@ -324,6 +339,18 @@ impl WorkloadState {
             self.slot.insert(moved, pos);
         }
         Some(a)
+    }
+
+    /// Remove and return every allocation on `device`, in the same order
+    /// [`WorkloadState::device_allocs`] would have yielded them (the
+    /// eviction paths depend on that order for determinism). Moves the
+    /// allocations out instead of cloning them first.
+    pub fn evict_device(&mut self, device: DeviceId) -> Vec<Allocation> {
+        let ids: Vec<TaskId> = match self.by_device.get(device) {
+            Some(v) if !v.is_empty() => v.clone(),
+            _ => return Vec::new(),
+        };
+        ids.into_iter().filter_map(|t| self.remove(t)).collect()
     }
 
     pub fn get(&self, task: TaskId) -> Option<&Allocation> {
@@ -472,6 +499,21 @@ mod tests {
     }
 
     #[test]
+    fn evict_device_moves_allocations_out_in_index_order() {
+        let mut w = WorkloadState::new(2);
+        for t in 0..6u64 {
+            w.insert(alloc(t, (t % 2) as usize, 2, 0, 100, 100, TaskConfig::LowTwoCore));
+        }
+        let order_before: Vec<TaskId> = w.device_allocs(0).map(|a| a.task).collect();
+        let evicted = w.evict_device(0);
+        assert_eq!(evicted.iter().map(|a| a.task).collect::<Vec<_>>(), order_before);
+        assert_eq!(w.device_allocs(0).count(), 0);
+        assert_eq!(w.device_allocs(1).count(), 3, "other devices untouched");
+        assert!(w.evict_device(0).is_empty());
+        assert!(w.evict_device(7).is_empty(), "unknown device is a no-op");
+    }
+
+    #[test]
     fn ensure_device_grows_fleet() {
         let mut w = WorkloadState::new(2);
         w.insert(alloc(1, 5, 2, 0, 100, 100, TaskConfig::LowTwoCore));
@@ -513,16 +555,16 @@ mod tests {
         let a = alloc(1, 0, 4, 0, 100, 200, TaskConfig::HighPriority);
         let v = alloc(2, 0, 2, 0, 100, 900, TaskConfig::LowTwoCore);
 
-        let hp = HpOutcome::Allocated { alloc: a.clone(), ops: 7 };
+        let hp = HpOutcome::Allocated { alloc: a, ops: 7 };
         assert_eq!(Decision::from(hp.clone()).into_hp(), hp);
 
-        let hp = HpOutcome::Preempted { alloc: a.clone(), victims: vec![v.clone()], ops: 9 };
+        let hp = HpOutcome::Preempted { alloc: a, victims: vec![v], ops: 9 };
         assert_eq!(Decision::from(hp.clone()).into_hp(), hp);
 
-        let hp = HpOutcome::Rejected { victims: vec![v.clone()], ops: 3 };
+        let hp = HpOutcome::Rejected { victims: vec![v], ops: 3 };
         assert_eq!(Decision::from(hp.clone()).into_hp(), hp);
 
-        let lp = LpOutcome::Allocated { allocs: vec![v.clone()], ops: 11 };
+        let lp = LpOutcome::Allocated { allocs: vec![v], ops: 11 };
         assert_eq!(Decision::from(lp.clone()).into_lp(), lp);
 
         let lp = LpOutcome::Rejected { ops: 2 };

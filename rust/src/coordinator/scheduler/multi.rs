@@ -60,7 +60,7 @@ impl MultiScheduler {
     fn record(&mut self, owner: Owner, allocs: &[crate::coordinator::task::Allocation]) {
         for a in allocs {
             self.owners.insert(a.task, owner);
-            self.merged.insert(a.clone());
+            self.merged.insert(*a);
             // The passive scheduler must also see the occupancy, or its
             // next activation would double-book the device.
             match owner {
@@ -108,7 +108,7 @@ impl MultiScheduler {
     /// Schedule a low-priority batch through the load-selected inner
     /// scheduler. Legacy-shaped entry point; [`Scheduler::on_event`]
     /// dispatches here.
-    pub fn schedule_low(&mut self, now: SimTime, tasks: &[Task], realloc: bool) -> LpOutcome {
+    pub fn schedule_low(&mut self, now: SimTime, tasks: &[&Task], realloc: bool) -> LpOutcome {
         let (owner, out) = if self.use_ras() {
             self.ras_requests += 1;
             (Owner::Ras, self.ras.schedule_low(now, tasks, realloc))
@@ -150,7 +150,7 @@ impl MultiScheduler {
     /// Fleet leave: evictions come from the merged (authoritative) state;
     /// both inner schedulers drop their own view of the departed device.
     pub fn on_device_left(&mut self, now: SimTime, device: DeviceId) -> (Vec<Allocation>, Ops) {
-        let evicted: Vec<Allocation> = self.merged.device_allocs(device).cloned().collect();
+        let evicted: Vec<Allocation> = self.merged.device_allocs(device).copied().collect();
         let (_, wps_ops) = self.wps.on_device_left(now, device);
         let (_, ras_ops) = self.ras.on_device_left(now, device);
         for a in &evicted {
@@ -215,6 +215,7 @@ impl Scheduler for MultiScheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::scheduler::task_refs;
     use crate::coordinator::task::DeviceId;
 
     fn cfg() -> SystemConfig {
@@ -234,12 +235,12 @@ mod tests {
         let mut s = MultiScheduler::new(&c, 0, c.link_bps, 3);
         // First batch (empty state) goes to WPS.
         let b1 = lp_batch(1, 3, 0, 0, &c);
-        assert!(matches!(s.schedule_low(0, &b1, false), LpOutcome::Allocated { .. }));
+        assert!(matches!(s.schedule_low(0, &task_refs(&b1), false), LpOutcome::Allocated { .. }));
         assert_eq!(s.wps_requests, 1);
         assert_eq!(s.ras_requests, 0);
         // State now ≥ threshold: next request goes to RAS.
         let b2 = lp_batch(11, 2, 1, 0, &c);
-        let _ = s.schedule_low(0, &b2, false);
+        let _ = s.schedule_low(0, &task_refs(&b2), false);
         assert_eq!(s.ras_requests, 1);
     }
 
@@ -248,7 +249,7 @@ mod tests {
         let c = cfg();
         let mut s = MultiScheduler::new(&c, 0, c.link_bps, 2);
         let b = lp_batch(1, 2, 0, 0, &c);
-        assert!(matches!(s.schedule_low(0, &b, false), LpOutcome::Allocated { .. }));
+        assert!(matches!(s.schedule_low(0, &task_refs(&b), false), LpOutcome::Allocated { .. }));
         assert!(s.use_ras());
         s.on_complete(1_000, 1);
         s.on_complete(1_000, 2);
@@ -264,7 +265,7 @@ mod tests {
             let now = round * 3_000_000;
             let batch = lp_batch(id, 3, (round % 4) as usize, now, &c);
             id += 3;
-            let _ = s.schedule_low(now, &batch, false);
+            let _ = s.schedule_low(now, &task_refs(&batch), false);
         }
         for d in 0..c.n_devices {
             for t in (0..40_000_000u64).step_by(500_000) {

@@ -102,7 +102,7 @@ impl RasScheduler {
             offloaded: device != task.source,
             comm,
         };
-        self.state.insert(alloc.clone());
+        self.state.insert(alloc);
         (alloc, ops)
     }
 
@@ -126,7 +126,7 @@ impl RasScheduler {
     }
 
     fn reconstruct_device(&mut self, device: DeviceId, now: SimTime) -> Ops {
-        let allocs: Vec<Allocation> = self.state.device_allocs(device).cloned().collect();
+        let allocs: Vec<Allocation> = self.state.device_allocs(device).copied().collect();
         let n = allocs.len() as Ops;
         self.devices[device].reconstruct(&self.cfg, now, allocs.iter());
         // Cost: one fresh list set + one cross-list write per live task.
@@ -139,7 +139,7 @@ impl RasScheduler {
     /// through this scheduler's own placement logic.
     pub fn mirror_external(&mut self, a: &Allocation) {
         self.devices[a.device].write_all(a.start, a.end, a.cores);
-        self.state.insert(a.clone());
+        self.state.insert(*a);
     }
 
     /// Expose internals for white-box tests/benches.
@@ -164,7 +164,7 @@ impl RasScheduler {
     fn try_config(
         &mut self,
         now: SimTime,
-        tasks: &[Task],
+        tasks: &[&Task],
         deadline: SimTime,
         config: TaskConfig,
         ops: &mut Ops,
@@ -255,7 +255,7 @@ impl RasScheduler {
         // Step 5: commit task-by-task; offloads reserve a link slot that
         // must complete before the processing slot opens.
         let mut committed: Vec<Allocation> = Vec::with_capacity(tasks.len());
-        for (task, (device, r, fit_start)) in tasks.iter().zip(picks) {
+        for (&task, (device, r, fit_start)) in tasks.iter().zip(picks) {
             let (start, comm) = if device == task.source {
                 (fit_start, None)
             } else {
@@ -349,9 +349,10 @@ impl RasScheduler {
         HpOutcome::Rejected { victims, ops }
     }
 
-    /// Schedule a batch of low-priority DNN tasks (1–4 per request).
+    /// Schedule a batch of low-priority DNN tasks (1–4 per request),
+    /// borrowed in place from the caller's storage (no clones).
     /// Legacy-shaped entry point; [`Scheduler::on_event`] dispatches here.
-    pub fn schedule_low(&mut self, now: SimTime, tasks: &[Task], _realloc: bool) -> LpOutcome {
+    pub fn schedule_low(&mut self, now: SimTime, tasks: &[&Task], _realloc: bool) -> LpOutcome {
         let mut ops: Ops = 0;
         if tasks.is_empty() {
             return LpOutcome::Rejected { ops: 1 };
@@ -434,10 +435,9 @@ impl RasScheduler {
             return (Vec::new(), 1);
         }
         self.active[device] = false;
-        let evicted: Vec<Allocation> = self.state.device_allocs(device).cloned().collect();
+        let evicted = self.state.evict_device(device);
         let mut ops: Ops = 1;
         for a in &evicted {
-            self.state.remove(a.task);
             self.link.remove_task(a.task);
             ops += 2;
         }
@@ -502,6 +502,7 @@ impl Scheduler for RasScheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::scheduler::task_refs;
     use crate::coordinator::task::Priority;
 
     fn cfg() -> SystemConfig {
@@ -540,7 +541,7 @@ mod tests {
         let c = cfg();
         let mut s = RasScheduler::new(&c, 0, c.link_bps);
         let tasks = lp_batch(10, 4, 1, 0, &c);
-        match s.schedule_low(0, &tasks, false) {
+        match s.schedule_low(0, &task_refs(&tasks), false) {
             LpOutcome::Allocated { allocs, .. } => {
                 assert_eq!(allocs.len(), 4);
                 // Source device hosts its two-core capacity (2 tracks).
@@ -567,7 +568,7 @@ mod tests {
         // Deadline leaves room for the 4-core config only.
         let deadline = now + c.lp4_proc() + 100_000;
         let tasks = vec![Task::low(1, 1, 0, now, deadline, &c)];
-        match s.schedule_low(now, &tasks, false) {
+        match s.schedule_low(now, &task_refs(&tasks), false) {
             LpOutcome::Allocated { allocs, .. } => {
                 assert_eq!(allocs[0].config, TaskConfig::LowFourCore);
             }
@@ -580,7 +581,7 @@ mod tests {
         let c = cfg();
         let mut s = RasScheduler::new(&c, 0, c.link_bps);
         let tasks = vec![Task::low(1, 1, 0, 0, c.lp4_proc() - 1, &c)];
-        assert!(matches!(s.schedule_low(0, &tasks, false), LpOutcome::Rejected { .. }));
+        assert!(matches!(s.schedule_low(0, &task_refs(&tasks), false), LpOutcome::Rejected { .. }));
     }
 
     #[test]
@@ -590,7 +591,7 @@ mod tests {
         // The HP stage needs the whole device: a resident 2-core LP task
         // forces a preemption request.
         let tasks = lp_batch(10, 1, 0, 0, &c);
-        assert!(matches!(s.schedule_low(0, &tasks, false), LpOutcome::Allocated { .. }));
+        assert!(matches!(s.schedule_low(0, &task_refs(&tasks), false), LpOutcome::Allocated { .. }));
         match s.schedule_high(0, &hp(30, 0, 0, &c)) {
             HpOutcome::Preempted { alloc, victims, .. } => {
                 assert_eq!(victims.len(), 1);
@@ -610,7 +611,7 @@ mod tests {
         // Two co-resident 2-core LP tasks: freeing the whole device takes
         // two preemption rounds.
         let tasks = lp_batch(10, 2, 0, 0, &c);
-        assert!(matches!(s.schedule_low(0, &tasks, false), LpOutcome::Allocated { .. }));
+        assert!(matches!(s.schedule_low(0, &task_refs(&tasks), false), LpOutcome::Allocated { .. }));
         match s.schedule_high(0, &hp(30, 0, 0, &c)) {
             HpOutcome::Preempted { victims, .. } => {
                 assert_eq!(victims.len(), 2);
@@ -637,7 +638,7 @@ mod tests {
         let c = cfg();
         let mut s = RasScheduler::new(&c, 0, c.link_bps);
         let tasks = lp_batch(1, 4, 0, 0, &c);
-        assert!(matches!(s.schedule_low(0, &tasks, false), LpOutcome::Allocated { .. }));
+        assert!(matches!(s.schedule_low(0, &task_refs(&tasks), false), LpOutcome::Allocated { .. }));
         let pending_before = s.link().pending();
         assert!(pending_before > 0, "offloads should reserve link slots");
         let ops = s.on_bandwidth_update(1_000, c.link_bps / 2.0);
@@ -676,7 +677,7 @@ mod tests {
             }
             let batch = lp_batch(id, (round as usize % 4) + 1, (round as usize) % 4, now, &c);
             id += batch.len() as u64;
-            let _ = s.schedule_low(now, &batch, false);
+            let _ = s.schedule_low(now, &task_refs(&batch), false);
         }
         for d in 0..c.n_devices {
             for t in (0..40_000_000u64).step_by(250_000) {

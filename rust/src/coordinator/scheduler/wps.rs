@@ -175,7 +175,7 @@ impl WpsScheduler {
         if let Some((c1, c2)) = a.comm {
             self.reserve_comm(a.task, c1, c2);
         }
-        self.state.insert(a.clone());
+        self.state.insert(*a);
     }
 
     /// Expose comm reservations for white-box tests.
@@ -211,7 +211,7 @@ impl WpsScheduler {
                 offloaded: false,
                 comm: None,
             };
-            self.state.insert(alloc.clone());
+            self.state.insert(alloc);
             return HpOutcome::Allocated { alloc, ops };
         }
         // Preemption at the desired window [now, now + dur): evict the
@@ -276,16 +276,17 @@ impl WpsScheduler {
                     offloaded: false,
                     comm: None,
                 };
-                self.state.insert(alloc.clone());
+                self.state.insert(alloc);
                 return HpOutcome::Preempted { alloc, victims, ops };
             }
         }
         HpOutcome::Rejected { victims, ops }
     }
 
-    /// Schedule a batch of low-priority DNN tasks (1–4 per request).
+    /// Schedule a batch of low-priority DNN tasks (1–4 per request),
+    /// borrowed in place from the caller's storage (no clones).
     /// Legacy-shaped entry point; [`Scheduler::on_event`] dispatches here.
-    pub fn schedule_low(&mut self, now: SimTime, tasks: &[Task], _realloc: bool) -> LpOutcome {
+    pub fn schedule_low(&mut self, now: SimTime, tasks: &[&Task], _realloc: bool) -> LpOutcome {
         let mut ops: Ops = 0;
         if tasks.is_empty() {
             return LpOutcome::Rejected { ops: 1 };
@@ -295,7 +296,7 @@ impl WpsScheduler {
             return LpOutcome::Rejected { ops: 1 };
         }
         let mut committed: Vec<Allocation> = Vec::with_capacity(tasks.len());
-        for task in tasks {
+        for &task in tasks {
             // Exhaustive search: every device × event-point starts; keep
             // the best-scoring placement. Configurations are tried in the
             // system's conservative order (Section IV-B2): two cores
@@ -349,7 +350,7 @@ impl WpsScheduler {
                     if let Some((c1, c2)) = alloc.comm {
                         self.reserve_comm(alloc.task, c1, c2);
                     }
-                    self.state.insert(alloc.clone());
+                    self.state.insert(alloc);
                     committed.push(alloc);
                 }
                 None => {
@@ -402,10 +403,9 @@ impl WpsScheduler {
             return (Vec::new(), 1);
         }
         self.active[device] = false;
-        let evicted: Vec<Allocation> = self.state.device_allocs(device).cloned().collect();
+        let evicted = self.state.evict_device(device);
         let mut ops: Ops = 1;
         for a in &evicted {
-            self.state.remove(a.task);
             self.release_comm(a.task);
             ops += 2;
         }
@@ -464,6 +464,7 @@ impl Scheduler for WpsScheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::scheduler::task_refs;
 
     fn cfg() -> SystemConfig {
         SystemConfig::default()
@@ -517,7 +518,7 @@ mod tests {
         let c = cfg();
         let mut s = WpsScheduler::new(&c, 0, c.link_bps);
         let tasks = lp_batch(1, 3, 2, 0, &c);
-        match s.schedule_low(0, &tasks, false) {
+        match s.schedule_low(0, &task_refs(&tasks), false) {
             LpOutcome::Allocated { allocs, .. } => {
                 let local = allocs.iter().filter(|a| a.device == 2).count();
                 assert_eq!(local, 2);
@@ -536,9 +537,9 @@ mod tests {
         let mut s = WpsScheduler::new(&c, 0, c.link_bps);
         // Force many offloads: source device 0 saturated with 4+ tasks.
         let t1 = lp_batch(1, 4, 0, 0, &c);
-        assert!(matches!(s.schedule_low(0, &t1, false), LpOutcome::Allocated { .. }));
+        assert!(matches!(s.schedule_low(0, &task_refs(&t1), false), LpOutcome::Allocated { .. }));
         let t2 = lp_batch(11, 4, 0, 0, &c);
-        let _ = s.schedule_low(0, &t2, false);
+        let _ = s.schedule_low(0, &task_refs(&t2), false);
         for w in s.comms.windows(2) {
             assert!(w[0].t2 <= w[1].t1, "comm windows overlap: {w:?}");
         }
@@ -549,7 +550,7 @@ mod tests {
         let c = cfg();
         let mut s = WpsScheduler::new(&c, 0, c.link_bps);
         let tasks = lp_batch(1, 2, 0, 0, &c);
-        assert!(matches!(s.schedule_low(0, &tasks, false), LpOutcome::Allocated { .. }));
+        assert!(matches!(s.schedule_low(0, &task_refs(&tasks), false), LpOutcome::Allocated { .. }));
         let (peak, _) = s.state().peak_usage(0, 0, 1_000_000);
         assert_eq!(peak, 4);
         s.on_complete(100, 1);
@@ -579,7 +580,7 @@ mod tests {
             }
             let batch = lp_batch(id, (round as usize % 4) + 1, (round as usize) % 4, now, &c);
             id += batch.len() as u64;
-            let _ = s.schedule_low(now, &batch, false);
+            let _ = s.schedule_low(now, &task_refs(&batch), false);
         }
         for d in 0..c.n_devices {
             for t in (0..40_000_000u64).step_by(250_000) {

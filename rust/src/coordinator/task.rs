@@ -82,8 +82,10 @@ impl TaskConfig {
     }
 }
 
-/// A schedulable task as seen by the controller.
-#[derive(Debug, Clone)]
+/// A schedulable task as seen by the controller. Plain-old-data and
+/// `Copy`: the simulation hot path passes `&Task` through the scheduler
+/// API and never clones task state per event.
+#[derive(Debug, Clone, Copy)]
 pub struct Task {
     pub id: TaskId,
     pub frame: FrameId,
@@ -139,7 +141,7 @@ impl Task {
 /// A committed placement: task `id` occupies `cores` on `device` over
 /// `[start, end)`. This is the exact state WPS searches over, and what RAS
 /// replays when reconstructing availability lists after a preemption.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Allocation {
     pub task: TaskId,
     pub frame: FrameId,

@@ -1,0 +1,271 @@
+//! Hot-path benchmark suite: the measured counterpart of the slab /
+//! incremental-medium rewrite, runnable as `medge bench [--quick]
+//! [--json [PATH]]` or `cargo bench --bench hot_path`.
+//!
+//! Two kinds of rows feed the `BENCH_hotpath.json` trajectory:
+//!
+//! * **Head-to-head micro rows** — the optimised structure next to an
+//!   in-binary replica of the structure it replaced (`*_baseline`
+//!   rows: `HashMap` task lookup, the rescanning fluid medium). These
+//!   keep the before/after comparison measurable from a single binary
+//!   forever, not just across the PR that made the change.
+//! * **Trajectory rows** — absolute numbers for the steady-state engine
+//!   event rate, medium mutation churn, and the end-to-end sweep macro
+//!   bench, tracked release over release by committing the JSON.
+//!
+//! The steady-state allocation gauge (`allocs/event`) is only emitted
+//! when the calling binary installed
+//! [`crate::util::bench::CountingAlloc`] as its global allocator and
+//! passed a counter reader in [`SuiteOptions::alloc_count`].
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::scenario::{ScenarioBuilder, SchedKind, Sweep};
+use crate::sim::netsim::Medium;
+use crate::time::SimTime;
+use crate::util::bench::{bench, BenchRow};
+use crate::util::slab::Slab;
+use crate::workload::trace::TraceSpec;
+
+/// Suite knobs.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SuiteOptions {
+    /// Short sampling targets + small scenario sizes (CI smoke job).
+    pub quick: bool,
+    /// Reader for the process-wide allocation counter, when the binary
+    /// installed a counting global allocator.
+    pub alloc_count: Option<fn() -> u64>,
+}
+
+/// The pre-rewrite fluid medium, reduced to the parts the comparison
+/// needs: `HashMap` flow table, per-flow drain loop, full rescan in
+/// `next_completion`. Semantics match the old `sim::netsim::Medium`.
+struct RescanMedium {
+    link_bps: f64,
+    flows: HashMap<u64, f64>,
+    last_update: SimTime,
+}
+
+impl RescanMedium {
+    fn new(link_bps: f64) -> Self {
+        Self { link_bps, flows: HashMap::new(), last_update: 0 }
+    }
+
+    fn per_flow_bps(&self) -> f64 {
+        if self.flows.is_empty() {
+            return self.link_bps;
+        }
+        self.link_bps / self.flows.len() as f64
+    }
+
+    fn drain_to(&mut self, now: SimTime) {
+        if now == self.last_update || self.flows.is_empty() {
+            self.last_update = now;
+            return;
+        }
+        let dt_s = (now - self.last_update) as f64 / 1e6;
+        let share = self.per_flow_bps();
+        for r in self.flows.values_mut() {
+            *r = (*r - share * dt_s).max(0.0);
+        }
+        self.last_update = now;
+    }
+
+    fn add_flow(&mut self, now: SimTime, id: u64, bytes: u64) {
+        self.drain_to(now);
+        self.flows.insert(id, bytes as f64 * 8.0);
+    }
+
+    fn remove_flow(&mut self, now: SimTime, id: u64) {
+        self.drain_to(now);
+        self.flows.remove(&id);
+    }
+
+    fn next_completion(&mut self, now: SimTime) -> Option<(SimTime, u64)> {
+        self.drain_to(now);
+        let share = self.per_flow_bps();
+        let (id, rem) = self
+            .flows
+            .iter()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(a.0.cmp(b.0)))?;
+        Some((now + (rem / share * 1e6).ceil() as u64, *id))
+    }
+}
+
+fn sample(quick: bool) -> Duration {
+    if quick {
+        Duration::from_millis(40)
+    } else {
+        Duration::from_millis(250)
+    }
+}
+
+/// Run every suite row, printing each as it completes.
+pub fn run_suite(opts: &SuiteOptions) -> Vec<BenchRow> {
+    let target = sample(opts.quick);
+    let mut rows: Vec<BenchRow> = Vec::new();
+    let mut push = |rows: &mut Vec<BenchRow>, r: &crate::util::bench::BenchResult| {
+        rows.push(BenchRow::from(r));
+    };
+
+    println!("== hot_path micro: task lookup (N = 4096 live tasks) ==");
+    const N: usize = 4096;
+    {
+        let mut map: HashMap<u64, u64> = HashMap::with_capacity(N);
+        for id in 0..N as u64 {
+            map.insert(id, id * 3);
+        }
+        let mut i = 0u64;
+        let r = bench("task_lookup/hashmap_baseline", target, || {
+            i = (i.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407)) % N as u64;
+            map[&i]
+        });
+        push(&mut rows, &r);
+    }
+    {
+        let mut slab: Slab<u64> = Slab::with_capacity(N);
+        let handles: Vec<_> = (0..N as u64).map(|id| slab.insert(id * 3)).collect();
+        let mut i = 0u64;
+        let r = bench("task_lookup/slab", target, || {
+            i = (i.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407)) % N as u64;
+            *slab.get(handles[i as usize]).unwrap()
+        });
+        push(&mut rows, &r);
+    }
+
+    println!("\n== hot_path micro: medium next_completion (24 live flows) ==");
+    // Identical op pattern on both media: advance time, predict, and
+    // occasionally churn a flow — the engine's arm_medium cadence.
+    {
+        let mut m = RescanMedium::new(40e6);
+        for id in 0..24u64 {
+            m.add_flow(0, id, 150_000 + id * 10_000);
+        }
+        let mut t: SimTime = 0;
+        let mut churn = 24u64;
+        let r = bench("medium_next_completion/rescan_baseline", target, || {
+            t += 100;
+            if t % 5_000 == 0 {
+                m.remove_flow(t, churn - 24);
+                m.add_flow(t, churn, 150_000);
+                churn += 1;
+            }
+            m.next_completion(t)
+        });
+        push(&mut rows, &r);
+    }
+    {
+        let mut m = Medium::new(40e6, 0.0);
+        for id in 0..24u64 {
+            m.add_flow(0, id, 150_000 + id * 10_000);
+        }
+        let mut t: SimTime = 0;
+        let mut churn = 24u64;
+        let r = bench("medium_next_completion/incremental", target, || {
+            t += 100;
+            if t % 5_000 == 0 {
+                m.remove_flow(t, churn - 24);
+                m.add_flow(t, churn, 150_000);
+                churn += 1;
+            }
+            m.next_completion(t)
+        });
+        push(&mut rows, &r);
+    }
+
+    println!("\n== hot_path macro: steady-state engine event rate ==");
+    let frames = if opts.quick { 8 } else { 24 };
+    let scenario = |kind: SchedKind| {
+        ScenarioBuilder::new()
+            .scheduler(kind)
+            .trace(TraceSpec::Weighted(3))
+            .frames(frames)
+            .seed(42)
+            .build()
+    };
+    {
+        let mut eng = scenario(SchedKind::Ras).engine();
+        let t0 = Instant::now();
+        let mut events = 0u64;
+        while eng.step() {
+            events += 1;
+        }
+        let el = t0.elapsed();
+        let ns_per_event = el.as_nanos() as f64 / events.max(1) as f64;
+        let row = BenchRow {
+            name: "engine_event/steady_state".to_string(),
+            unit: "ns/op".to_string(),
+            iters: events,
+            value: ns_per_event,
+            mean_ns: ns_per_event,
+            p95_ns: ns_per_event,
+            throughput_per_s: 1e9 / ns_per_event.max(0.1),
+        };
+        println!("{}", row.report());
+        rows.push(row);
+    }
+
+    // Steady-state allocation gauge: warm the run up, then count
+    // allocations per event over the tail. The engine's own event
+    // handling targets zero; residual allocations come from scheduler
+    // decision vectors (outside this PR's scope) and amortised queue
+    // growth.
+    if let Some(counter) = opts.alloc_count {
+        let mut eng = scenario(SchedKind::Ras).engine();
+        let warmup = 500u64;
+        let mut events = 0u64;
+        let mut tail_events = 0u64;
+        let mut snap = 0u64;
+        while eng.step() {
+            events += 1;
+            if events == warmup {
+                snap = counter();
+            }
+            if events > warmup {
+                tail_events += 1;
+            }
+        }
+        let allocs = if tail_events > 0 { counter().saturating_sub(snap) } else { 0 };
+        let per_event = allocs as f64 / tail_events.max(1) as f64;
+        let row =
+            BenchRow::gauge("engine_event/steady_state_allocs", "allocs/event", tail_events, per_event);
+        println!("{}", row.report());
+        rows.push(row);
+    }
+
+    println!("\n== hot_path macro: end-to-end sweep ==");
+    {
+        let sweep_frames = if opts.quick { 4 } else { 12 };
+        let mut sweep = Sweep::new().threads(2);
+        for kind in [SchedKind::Wps, SchedKind::Ras] {
+            for load in [2u8, 3] {
+                sweep = sweep.add(
+                    ScenarioBuilder::new()
+                        .scheduler(kind)
+                        .trace(TraceSpec::Weighted(load))
+                        .frames(sweep_frames)
+                        .seed(7)
+                        .build(),
+                );
+            }
+        }
+        let t0 = Instant::now();
+        let out = sweep.run();
+        let el = t0.elapsed();
+        let ns = el.as_nanos() as f64;
+        let row = BenchRow {
+            name: "sweep_macro/end_to_end".to_string(),
+            unit: "ns/op".to_string(),
+            iters: out.len() as u64,
+            value: ns / out.len().max(1) as f64,
+            mean_ns: ns / out.len().max(1) as f64,
+            p95_ns: ns / out.len().max(1) as f64,
+            throughput_per_s: out.len() as f64 / el.as_secs_f64().max(1e-9),
+        };
+        println!("{}  ({} rows)", row.report(), out.len());
+        rows.push(row);
+    }
+
+    rows
+}

@@ -7,6 +7,8 @@
 //! byte-identical to sequential execution (each engine run is
 //! single-threaded and seed-deterministic).
 
+pub mod hotpath;
+
 use crate::config::SystemConfig;
 use crate::metrics::Metrics;
 use crate::scenario::{Scenario, ScenarioBuilder, Sweep};

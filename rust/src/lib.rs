@@ -36,6 +36,14 @@
 //! retransmission inflation, device crashes that lose in-flight work
 //! (re-offered to the scheduler), and probe failure — turning the
 //! happy-path reproduction into a robustness testbed.
+//!
+//! The simulation hot path is allocation-free and index-based in steady
+//! state: engine tasks live in a generational slab ([`util::slab`],
+//! placement staleness folded into the slot generation), the shared
+//! medium advances with an O(1) drain accumulator and cached earliest
+//! completion, and sweep grids share one immutable `Arc<Trace>` per
+//! workload point. `medge bench --json` tracks it all in the
+//! `BENCH_hotpath.json` trajectory (see README §Performance).
 
 pub mod config;
 pub mod coordinator;

@@ -13,7 +13,18 @@ use medge::config::SystemConfig;
 use medge::experiments;
 use medge::metrics::report;
 use medge::scenario::{ScenarioBuilder, SchedKind, Sweep};
+use medge::util::bench::CountingAlloc;
 use medge::workload::trace::{Trace, TraceSpec};
+
+/// Counting wrapper over the system allocator: one relaxed atomic per
+/// allocation. It feeds `medge bench`'s steady-state `allocs/event`
+/// gauge and is unobservable everywhere else.
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+fn alloc_count() -> u64 {
+    ALLOC.allocations()
+}
 
 const USAGE: &str = "\
 medge — deadline-constrained DNN offloading at the mobile edge (paper reproduction)
@@ -33,6 +44,12 @@ COMMANDS:
            --scheds wps,ras[,multi] --loads 1,2,3,4 --threads N
            --json PATH (export rows)  --churn (device 3 leaves/rejoins)
            --faults (add a faulted twin of every scenario)
+  bench    Hot-path micro/macro benchmark suite (slab vs hashmap,
+           incremental vs rescanning medium, engine event rate,
+           steady-state allocs/event, end-to-end sweep):
+           --quick (short CI smoke sampling)
+           --json [PATH] (write the trajectory file;
+           default BENCH_hotpath.json at the repo root)
   trace    Generate a trace file: --spec S --frames N --out PATH
            (S: uniform | weighted1..weighted4)
 
@@ -62,8 +79,12 @@ struct Args {
     loads: String,
     threads: Option<usize>,
     json: Option<std::path::PathBuf>,
+    /// `--json` was passed (with or without a path) — `bench` writes its
+    /// default trajectory file when the path is omitted.
+    json_flag: bool,
     churn: bool,
     faults: bool,
+    quick: bool,
 }
 
 fn parse_args() -> anyhow::Result<Args> {
@@ -79,27 +100,43 @@ fn parse_args() -> anyhow::Result<Args> {
         loads: "1,2,3,4".to_string(),
         threads: None,
         json: None,
+        json_flag: false,
         churn: false,
         faults: false,
+        quick: false,
     };
-    let mut it = std::env::args().skip(1);
+    fn value(
+        it: &mut std::iter::Peekable<impl Iterator<Item = String>>,
+        name: &str,
+    ) -> anyhow::Result<String> {
+        it.next().ok_or_else(|| anyhow::anyhow!("{name} needs a value"))
+    }
+    let mut it = std::env::args().skip(1).peekable();
     while let Some(a) = it.next() {
-        let mut value = |name: &str| -> anyhow::Result<String> {
-            it.next().ok_or_else(|| anyhow::anyhow!("{name} needs a value"))
-        };
         match a.as_str() {
-            "--minutes" => args.minutes = value("--minutes")?.parse()?,
-            "--seed" => args.seed = Some(value("--seed")?.parse()?),
-            "--config" => args.config = Some(value("--config")?.into()),
-            "--spec" => args.spec = value("--spec")?,
-            "--frames" => args.frames = value("--frames")?.parse()?,
-            "--out" => args.out = Some(value("--out")?.into()),
-            "--scheds" => args.scheds = value("--scheds")?,
-            "--loads" => args.loads = value("--loads")?,
-            "--threads" => args.threads = Some(value("--threads")?.parse()?),
-            "--json" => args.json = Some(value("--json")?.into()),
+            "--minutes" => args.minutes = value(&mut it, "--minutes")?.parse()?,
+            "--seed" => args.seed = Some(value(&mut it, "--seed")?.parse()?),
+            "--config" => args.config = Some(value(&mut it, "--config")?.into()),
+            "--spec" => args.spec = value(&mut it, "--spec")?,
+            "--frames" => args.frames = value(&mut it, "--frames")?.parse()?,
+            "--out" => args.out = Some(value(&mut it, "--out")?.into()),
+            "--scheds" => args.scheds = value(&mut it, "--scheds")?,
+            "--loads" => args.loads = value(&mut it, "--loads")?,
+            "--threads" => args.threads = Some(value(&mut it, "--threads")?.parse()?),
+            "--json" => {
+                // Path is optional for `bench` (defaults to the repo-root
+                // trajectory file); `sweep` validates it got one.
+                args.json_flag = true;
+                args.json = match it.peek() {
+                    Some(v) if !v.starts_with('-') => {
+                        Some(value(&mut it, "--json")?.into())
+                    }
+                    _ => None,
+                };
+            }
             "--churn" => args.churn = true,
             "--faults" => args.faults = true,
+            "--quick" => args.quick = true,
             "-h" | "--help" => {
                 print!("{USAGE}");
                 std::process::exit(0);
@@ -236,7 +273,31 @@ fn main() -> anyhow::Result<()> {
             print!("{}", report::fig4(&runs));
             print!("{}", report::fig5(&runs));
         }
+        "bench" => {
+            let rows = experiments::hotpath::run_suite(&experiments::hotpath::SuiteOptions {
+                quick: args.quick,
+                alloc_count: Some(alloc_count),
+            });
+            if args.json_flag {
+                // Default lands in the invoker's working directory (the
+                // repo root in CI and the documented workflow) — resolved
+                // at runtime, never a path baked in at build time.
+                let path = args
+                    .json
+                    .unwrap_or_else(|| std::path::PathBuf::from("BENCH_hotpath.json"));
+                let provenance = format!(
+                    "medge bench --json{} (commit the refreshed file to extend the trajectory)",
+                    if args.quick { " --quick" } else { "" }
+                );
+                std::fs::write(&path, medge::util::bench::json_report("hot_path", &provenance, &rows))?;
+                println!("\nwrote {} bench rows to {}", rows.len(), path.display());
+            }
+        }
         "sweep" => {
+            anyhow::ensure!(
+                !(args.json_flag && args.json.is_none()),
+                "sweep --json needs a PATH"
+            );
             let sweep = build_sweep(&cfg, &args)?;
             eprintln!(
                 "sweep: {} scenarios × {:.1} simulated minutes{}{}",

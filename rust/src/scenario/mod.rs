@@ -96,6 +96,11 @@ impl SchedKind {
 }
 
 /// A frozen experiment specification: everything an [`Engine`] run needs.
+/// The trace is materialised once at [`ScenarioBuilder::build`] time and
+/// shared (`Arc`, deduplicated process-wide via [`Trace::shared`]): a
+/// sweep grid that varies scheduler or fault axes over the same workload
+/// holds one trace allocation per workload point, and repeated
+/// `run()`s / clones of one scenario never regenerate it.
 #[derive(Debug, Clone)]
 pub struct Scenario {
     pub name: String,
@@ -104,16 +109,17 @@ pub struct Scenario {
     pub spec: TraceSpec,
     pub frames: usize,
     pub extras: RunExtras,
+    pub trace: std::sync::Arc<Trace>,
 }
 
 impl Scenario {
-    /// Compile to a ready-to-run engine (trace regenerated from the seed).
+    /// Compile to a ready-to-run engine (the shared trace is borrowed,
+    /// not regenerated or cloned).
     pub fn engine(&self) -> Engine {
-        let trace = Trace::generate(self.spec, self.cfg.n_devices, self.frames, self.cfg.seed);
         Engine::with_extras(
             self.cfg.clone(),
             self.kind.build(&self.cfg),
-            trace,
+            std::sync::Arc::clone(&self.trace),
             &self.name,
             self.extras.clone(),
         )
@@ -308,7 +314,8 @@ impl ScenarioBuilder {
         let mut extras = self.extras;
         let horizon_s = frames as f64 * self.cfg.frame_period_s;
         self.plan.compile_into(&mut extras, self.cfg.seed, self.cfg.n_devices, horizon_s);
-        Scenario { name, cfg: self.cfg, kind: self.kind, spec: self.spec, frames, extras }
+        let trace = Trace::shared(self.spec, self.cfg.n_devices, frames, self.cfg.seed);
+        Scenario { name, cfg: self.cfg, kind: self.kind, spec: self.spec, frames, extras, trace }
     }
 }
 
@@ -429,6 +436,19 @@ mod tests {
         let direct =
             Engine::new(s.cfg.clone(), s.kind.build(&s.cfg), trace, &s.name).run();
         assert_eq!(format!("{via_scenario:?}"), format!("{direct:?}"));
+    }
+
+    #[test]
+    fn grid_cells_share_one_trace_allocation() {
+        // Scheduler and fault axes vary; the workload point does not — so
+        // every cell must hold the *same* Arc'd trace, not a copy.
+        let a = quick(SchedKind::Ras, 7);
+        let b = quick(SchedKind::Wps, 7);
+        assert!(std::sync::Arc::ptr_eq(&a.trace, &b.trace));
+        let c = a.clone();
+        assert!(std::sync::Arc::ptr_eq(&a.trace, &c.trace));
+        let other_seed = quick(SchedKind::Ras, 8);
+        assert!(!std::sync::Arc::ptr_eq(&a.trace, &other_seed.trace));
     }
 
     #[test]

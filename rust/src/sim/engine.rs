@@ -19,17 +19,40 @@
 //! shared medium, which congestion can delay beyond the reserved window),
 //! whichever is later, and runs for its fixed processing time. A task that
 //! finishes past its deadline is a violation and invalidates its frame.
+//!
+//! ## Hot-path storage
+//!
+//! Steady-state event handling is allocation-free and index-based:
+//!
+//! * Tasks live in a generational [`Slab`] ([`crate::util::slab`]); a dense
+//!   `TaskId → SlotRef` vector (ids are monotone from 1) replaces the old
+//!   `HashMap`s, so per-event lookup is two array indexes and no hashing.
+//! * The old explicit placement-generation counter is folded into the
+//!   slab's generation word: cancelling a placement re-slots the task
+//!   (same index, next generation, thanks to the LIFO free list), and
+//!   every finish/transfer event queued under the dead placement carries
+//!   a [`SlotRef`] that simply stops resolving.
+//! * Frame state is a dense vector indexed by `FrameId` (frame ids are
+//!   `row × n_devices + device` by construction).
+//! * Batch events carry ids inline ([`IdBatch`]), scheduler dispatch
+//!   borrows `&Task` straight out of the slab (stack array of refs), and
+//!   the probe/orphan scans reuse scratch buffers held on the engine.
+//!
+//! Terminal tasks (completed, violated, rejected, dropped) release their
+//! slot for reuse, so live slab size tracks in-flight work rather than
+//! the whole run history.
 
-use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::config::SystemConfig;
 use crate::coordinator::bandwidth::{BandwidthEstimator, ProbeRound};
 use crate::coordinator::scheduler::{Decision, Ops, Outcome, SchedEvent, Scheduler};
 use crate::coordinator::task::{Allocation, DeviceId, FrameId, Task, TaskId};
 use crate::metrics::Metrics;
-use crate::sim::events::{Event, EventQueue};
+use crate::sim::events::{Event, EventQueue, IdBatch};
 use crate::sim::netsim::{FlowId, LossyMedium, Medium, PROBE_FLOW_BASE};
 use crate::time::{SimDuration, SimTime};
+use crate::util::slab::{Slab, SlotRef};
 use crate::util::Rng;
 use crate::workload::trace::Trace;
 
@@ -60,23 +83,32 @@ pub struct RunExtras {
     pub probe_loss: f64,
 }
 
-/// Runtime state of a task in flight.
+/// Runtime state of a placed task. Staleness is carried by the slab
+/// generation (a cancelled placement re-slots the task), so no explicit
+/// `cancelled`/`gen` fields remain.
 #[derive(Debug, Clone)]
 struct TaskRuntime {
     alloc: Allocation,
     realloc: bool,
     /// Placed through a crash re-offer (fault accounting).
     reoffered: bool,
-    cancelled: bool,
-    /// Placement generation: finish/transfer events scheduled under an
-    /// older (cancelled) placement of the same task are stale and must
-    /// not act on this one.
-    gen: u64,
 }
 
-/// Per-frame pipeline bookkeeping (Fig. 1's three stages).
+/// One live task in the engine's slab: identity plus (optional)
+/// placement. `rt` is `None` until the scheduler places the task, and
+/// again between a cancellation and its re-placement.
 #[derive(Debug, Clone)]
+struct TaskSlot {
+    task: Task,
+    rt: Option<TaskRuntime>,
+}
+
+/// Per-frame pipeline bookkeeping (Fig. 1's three stages), stored densely
+/// by `FrameId`. `tracked` is false for frame slots whose trace cell was
+/// empty (no object on the belt) or whose device was out of the fleet.
+#[derive(Debug, Clone, Default)]
 struct FrameState {
+    tracked: bool,
     /// DNN tasks this frame will generate after its HP task (trace value).
     lp_expected: u32,
     lp_done: u32,
@@ -105,15 +137,20 @@ pub struct Engine {
     now: SimTime,
     /// Controller single-server queue.
     busy_until: SimTime,
-    tasks: HashMap<TaskId, Task>,
-    runtime: HashMap<TaskId, TaskRuntime>,
-    frames: HashMap<FrameId, FrameState>,
-    probes: HashMap<FlowId, ProbeFlight>,
+    /// Live tasks (identity + placement), slot-recycled.
+    tasks: Slab<TaskSlot>,
+    /// `TaskId → SlotRef` (dense: ids are monotone from 1). NULL entries
+    /// are tasks that reached a terminal state and released their slot.
+    task_index: Vec<SlotRef>,
+    /// Frame pipeline state, dense by `FrameId`.
+    frames: Vec<FrameState>,
+    /// In-flight probe rounds (at most a couple at a time — linear scan).
+    probes: Vec<(FlowId, ProbeFlight)>,
     pub metrics: Metrics,
     rng: Rng,
     next_task_id: TaskId,
     next_probe_id: FlowId,
-    trace: Trace,
+    trace: Arc<Trace>,
     /// No new probe/traffic events after this time (lets the queue drain).
     end_of_input: SimTime,
     /// Fleet membership as the engine sees it (trace frames for inactive
@@ -125,16 +162,24 @@ pub struct Engine {
     duty_cycle: f64,
     /// Whether the traffic-toggle event chain is alive.
     traffic_on: bool,
-    /// Crash time per currently-down device (recovery latency metric).
-    crashed_at: HashMap<DeviceId, SimTime>,
-    /// Monotone placement-generation counter (stale-event guard).
-    next_gen: u64,
+    /// Crash time per device (`Some` while down; recovery latency metric).
+    crashed_at: Vec<Option<SimTime>>,
+    /// Scratch: active-device list for probe rounds (reused per round).
+    scratch_devices: Vec<DeviceId>,
+    /// Scratch: crash orphan collection (reused per crash).
+    scratch_orphans: Vec<(TaskId, FrameId)>,
 }
 
 impl Engine {
     /// The paper's fixed testbed: no churn, homogeneous devices, the
-    /// config's static congestion regime.
-    pub fn new(cfg: SystemConfig, sched: Box<dyn Scheduler>, trace: Trace, label: &str) -> Self {
+    /// config's static congestion regime. `trace` may be owned or an
+    /// [`Arc`] shared across runs (twin runs, sweep grids).
+    pub fn new(
+        cfg: SystemConfig,
+        sched: Box<dyn Scheduler>,
+        trace: impl Into<Arc<Trace>>,
+        label: &str,
+    ) -> Self {
         Self::with_extras(cfg, sched, trace, label, RunExtras::default())
     }
 
@@ -143,10 +188,11 @@ impl Engine {
     pub fn with_extras(
         cfg: SystemConfig,
         sched: Box<dyn Scheduler>,
-        trace: Trace,
+        trace: impl Into<Arc<Trace>>,
         label: &str,
         extras: RunExtras,
     ) -> Self {
+        let trace: Arc<Trace> = trace.into();
         let end_of_input = (trace.entries.len() as u64 + 1) * cfg.frame_period();
         let mut queue = EventQueue::new();
         // Each device samples its own conveyor belt: frame phases are
@@ -194,6 +240,7 @@ impl Engine {
             device_speed.resize(cfg.n_devices, 1.0);
         }
         let estimator = BandwidthEstimator::new(&cfg, cfg.link_bps);
+        let n_cells = trace.entries.len() * cfg.n_devices;
         Self {
             active_devices: vec![true; cfg.n_devices],
             device_speed,
@@ -209,45 +256,105 @@ impl Engine {
             queue,
             now: 0,
             busy_until: 0,
-            tasks: HashMap::new(),
-            runtime: HashMap::new(),
-            frames: HashMap::new(),
-            probes: HashMap::new(),
+            tasks: Slab::with_capacity(64),
+            // ≤ 1 HP + ≤ IdBatch::CAP LP tasks per frame cell: reserving
+            // up front keeps arrival-path growth out of steady state.
+            task_index: Vec::with_capacity(n_cells * (1 + IdBatch::CAP) + 8),
+            frames: vec![FrameState::default(); n_cells],
+            probes: Vec::with_capacity(4),
             metrics: Metrics::new(label),
             rng: Rng::seed_from_u64(cfg.seed ^ 0x454e47), // "ENG"
             next_task_id: 1,
             next_probe_id: PROBE_FLOW_BASE,
             trace,
             end_of_input,
+            crashed_at: vec![None; cfg.n_devices],
+            scratch_devices: Vec::with_capacity(cfg.n_devices),
+            scratch_orphans: Vec::with_capacity(16),
             cfg,
             sched,
-            crashed_at: HashMap::new(),
-            next_gen: 0,
         }
+    }
+
+    /// Process the next queued event. Returns `false` once the queue has
+    /// drained (benches use this to meter per-event cost; normal drivers
+    /// call [`Engine::run`]).
+    pub fn step(&mut self) -> bool {
+        let Some(s) = self.queue.pop() else { return false };
+        debug_assert!(s.at >= self.now, "time went backwards");
+        self.now = s.at;
+        self.handle(s.event);
+        true
     }
 
     /// Run to completion and return the collected metrics.
     pub fn run(mut self) -> Metrics {
-        while let Some(s) = self.queue.pop() {
-            debug_assert!(s.at >= self.now, "time went backwards");
-            self.now = s.at;
-            self.handle(s.event);
-        }
+        while self.step() {}
         self.metrics.final_bandwidth_estimate_bps = self.sched.bandwidth_estimate();
         self.metrics.reject_reasons = self.sched.reject_diag();
         self.metrics.retransmitted_mbits = self.medium.retransmitted_bits / 1e6;
         self.metrics
     }
 
-    fn fresh_gen(&mut self) -> u64 {
-        self.next_gen += 1;
-        self.next_gen
-    }
-
     fn fresh_task_id(&mut self) -> TaskId {
         let id = self.next_task_id;
         self.next_task_id += 1;
         id
+    }
+
+    // ---- slab plumbing ---------------------------------------------------
+
+    /// Current slab handle for `id` (NULL for terminal/unknown tasks).
+    fn slot_of(&self, id: TaskId) -> SlotRef {
+        self.task_index.get(id as usize).copied().unwrap_or(SlotRef::NULL)
+    }
+
+    /// Borrow a task that the caller knows is live (arrival/requeue paths
+    /// guarantee liveness by construction; a panic here is an engine bug,
+    /// not a recoverable state).
+    fn task(&self, id: TaskId) -> &Task {
+        &self.tasks.get(self.slot_of(id)).expect("task must be live").task
+    }
+
+    fn insert_task(&mut self, task: Task) -> SlotRef {
+        let id = task.id as usize;
+        let h = self.tasks.insert(TaskSlot { task, rt: None });
+        if self.task_index.len() <= id {
+            self.task_index.resize(id + 1, SlotRef::NULL);
+        }
+        self.task_index[id] = h;
+        h
+    }
+
+    /// Release a terminal task's slot (completed, violated, rejected, or
+    /// dropped — nothing will reference it again; any event still in the
+    /// queue carries a handle that no longer resolves).
+    fn free_task(&mut self, id: TaskId) {
+        let h = self.slot_of(id);
+        if self.tasks.remove(h).is_some() {
+            self.task_index[id as usize] = SlotRef::NULL;
+        }
+    }
+
+    /// Kill a task's current placement: abort its medium flow and re-slot
+    /// it (same index, next slab generation via the LIFO free list), so
+    /// every finish/transfer event queued under the dead placement goes
+    /// stale. The task itself stays live for requeue/re-offer.
+    fn cancel_placement(&mut self, task: TaskId) {
+        let h = self.slot_of(task);
+        if let Some(mut slot) = self.tasks.remove(h) {
+            slot.rt = None;
+            let nh = self.tasks.insert(slot);
+            self.task_index[task as usize] = nh;
+        }
+        self.medium.remove_flow(self.now, task);
+        self.arm_medium();
+    }
+
+    // ---- frame plumbing --------------------------------------------------
+
+    fn frame_mut(&mut self, frame: FrameId) -> Option<&mut FrameState> {
+        self.frames.get_mut(frame as usize).filter(|f| f.tracked)
     }
 
     /// Charge a scheduling call: queueing behind `busy_until`, then
@@ -266,10 +373,10 @@ impl Engine {
         match ev {
             Event::TraceFrame { index } => self.on_trace_frame(index),
             Event::HpArrive { task } => self.on_hp_arrive(task),
-            Event::HpFinish { task, gen } => self.on_hp_finish(task, gen),
+            Event::HpFinish { task } => self.on_hp_finish(task),
             Event::LpArrive { tasks, realloc } => self.on_lp_arrive(tasks, realloc),
-            Event::LpFinish { task, gen } => self.on_lp_finish(task, gen),
-            Event::TransferStart { task, gen } => self.on_transfer_start(task, gen),
+            Event::LpFinish { task } => self.on_lp_finish(task),
+            Event::TransferStart { task } => self.on_transfer_start(task),
             Event::MediumComplete { flow, epoch } => self.on_medium_complete(flow, epoch),
             Event::ProbeStart => self.on_probe_start(),
             Event::TrafficToggle { active } => self.on_traffic_toggle(active),
@@ -303,20 +410,18 @@ impl Engine {
         let frame_id = index as FrameId;
         self.metrics.frames_total += 1;
         self.metrics.hp_generated += 1;
-        self.frames.insert(
-            frame_id,
-            FrameState {
-                lp_expected: load as u32,
-                lp_done: 0,
-                hp_done: false,
-                failed: false,
-                counted: false,
-                deadline: self.now + self.cfg.frame_period(),
-            },
-        );
+        self.frames[index] = FrameState {
+            tracked: true,
+            lp_expected: load as u32,
+            lp_done: 0,
+            hp_done: false,
+            failed: false,
+            counted: false,
+            deadline: self.now + self.cfg.frame_period(),
+        };
         let id = self.fresh_task_id();
         let task = Task::high(id, frame_id, device, self.now, &self.cfg);
-        self.tasks.insert(id, task);
+        self.insert_task(task);
         // Request travels to the controller.
         self.queue.push(self.now + self.cfg.control_latency(), Event::HpArrive { task: id });
     }
@@ -324,11 +429,16 @@ impl Engine {
     // ---- high-priority path --------------------------------------------
 
     fn on_hp_arrive(&mut self, task_id: TaskId) {
-        let task = self.tasks[&task_id].clone();
         let arrival = self.now;
         let service_start = self.busy_until.max(arrival);
-        let Decision { outcome, ops } =
-            self.sched.on_event(service_start, SchedEvent::HighPriority { task: &task });
+        let h = self.slot_of(task_id);
+        let frame = self.tasks.get(h).expect("hp task live at arrival").task.frame;
+        // Borrow the task straight out of the slab for the dispatch — the
+        // scheduler sees `&Task`, nothing is cloned.
+        let Decision { outcome, ops } = {
+            let task = &self.tasks.get(h).expect("hp task live at arrival").task;
+            self.sched.on_event(service_start, SchedEvent::HighPriority { task })
+        };
         let (decision, lat) = self.charge(arrival, ops);
         match outcome {
             Outcome::HpAllocated { alloc, victims } => {
@@ -347,10 +457,11 @@ impl Engine {
             }
             Outcome::HpRejected { victims } => {
                 self.metrics.hp_rejected += 1;
-                self.fail_frame(task.frame);
+                self.fail_frame(frame);
                 // Tasks evicted by a preemption attempt that ultimately
                 // failed still get their reallocation chance.
                 self.requeue_preempted(victims, decision);
+                self.free_task(task_id);
             }
             other => unreachable!("HP event must yield an HP outcome, got {other:?}"),
         }
@@ -359,12 +470,12 @@ impl Engine {
     /// Cancel preemption victims and queue their low-priority re-entry.
     fn requeue_preempted(&mut self, victims: Vec<Allocation>, decision: SimTime) {
         for v in victims {
-            self.cancel_task(v.task);
+            self.cancel_placement(v.task);
             self.metrics.lp_preempted += 1;
             self.metrics.lp_realloc_attempts += 1;
             self.queue.push(
                 decision + self.cfg.control_latency(),
-                Event::LpArrive { tasks: vec![v.task], realloc: true },
+                Event::LpArrive { tasks: IdBatch::one(v.task), realloc: true },
             );
         }
     }
@@ -398,60 +509,88 @@ impl Engine {
         let finish = eff_start + proc;
         let task = alloc.task;
         let is_hp = alloc.config == crate::coordinator::task::TaskConfig::HighPriority;
-        let gen = self.fresh_gen();
-        self.runtime.insert(task, TaskRuntime { alloc, realloc, reoffered, cancelled: false, gen });
+        let h = self.slot_of(task);
+        self.tasks.get_mut(h).expect("placing a live task").rt =
+            Some(TaskRuntime { alloc, realloc, reoffered });
         if is_hp {
-            self.queue.push(finish, Event::HpFinish { task, gen });
+            self.queue.push(finish, Event::HpFinish { task: h });
         } else {
-            self.queue.push(finish, Event::LpFinish { task, gen });
+            self.queue.push(finish, Event::LpFinish { task: h });
         }
     }
 
-    fn on_hp_finish(&mut self, task_id: TaskId, gen: u64) {
-        let Some(rt) = self.runtime.get(&task_id) else { return };
-        if rt.cancelled || rt.gen != gen {
-            return;
-        }
+    fn on_hp_finish(&mut self, h: SlotRef) {
+        // A non-resolving handle is an event from a dead placement.
+        let Some(slot) = self.tasks.get(h) else { return };
+        let Some(rt) = slot.rt.as_ref() else { return };
         let frame = rt.alloc.frame;
-        let deadline = self.tasks[&task_id].deadline;
+        let task_id = slot.task.id;
+        let deadline = slot.task.deadline;
+        let source = slot.task.source;
         if self.now > deadline {
             self.metrics.hp_violations += 1;
             self.sched.on_event(self.now, SchedEvent::Violation { task: task_id });
             self.fail_frame(frame);
+            self.free_task(task_id);
             return;
         }
         self.metrics.hp_completed += 1;
         self.sched.on_event(self.now, SchedEvent::Complete { task: task_id });
         let (lp_expected, frame_deadline) = {
-            let f = self.frames.get_mut(&frame).expect("frame tracked");
+            let f = self.frame_mut(frame).expect("frame tracked");
             f.hp_done = true;
             (f.lp_expected, f.deadline)
         };
         // Stage 2 found recyclable waste: spawn the low-priority request.
         if lp_expected > 0 {
-            let source = self.tasks[&task_id].source;
-            let mut ids = Vec::with_capacity(lp_expected as usize);
+            let mut ids = IdBatch::new();
             for _ in 0..lp_expected {
                 let id = self.fresh_task_id();
                 let t = Task::low(id, frame, source, self.now, frame_deadline, &self.cfg);
-                self.tasks.insert(id, t);
+                self.insert_task(t);
                 ids.push(id);
             }
             self.metrics.lp_generated += lp_expected as u64;
-            self.queue.push(self.now + self.cfg.control_latency(), Event::LpArrive { tasks: ids, realloc: false });
+            self.queue
+                .push(self.now + self.cfg.control_latency(), Event::LpArrive { tasks: ids, realloc: false });
         }
         self.check_frame(frame);
+        self.free_task(task_id);
     }
 
     // ---- low-priority path ---------------------------------------------
 
-    fn on_lp_arrive(&mut self, task_ids: Vec<TaskId>, realloc: bool) {
-        let tasks: Vec<Task> = task_ids.iter().map(|id| self.tasks[id].clone()).collect();
+    /// Dispatch a batch-shaped event with a stack array of slab borrows —
+    /// no clones, no allocation (batches are ≤ [`IdBatch::CAP`] by
+    /// construction, and every id must be live: arrival/requeue/re-offer
+    /// paths guarantee it). `realloc: Some(r)` dispatches
+    /// [`SchedEvent::LowPriorityBatch`]; `None` dispatches
+    /// [`SchedEvent::Reoffer`].
+    fn dispatch_batch(
+        &mut self,
+        service_start: SimTime,
+        ids: &[TaskId],
+        realloc: Option<bool>,
+    ) -> Decision {
+        let first = &self.tasks.get(self.slot_of(ids[0])).expect("batch task live").task;
+        let mut refs: [&Task; IdBatch::CAP] = [first; IdBatch::CAP];
+        for (i, &id) in ids.iter().enumerate() {
+            refs[i] = &self.tasks.get(self.slot_of(id)).expect("batch task live").task;
+        }
+        let tasks = &refs[..ids.len()];
+        let ev = match realloc {
+            Some(realloc) => SchedEvent::LowPriorityBatch { tasks, realloc },
+            None => SchedEvent::Reoffer { tasks },
+        };
+        self.sched.on_event(service_start, ev)
+    }
+
+    fn on_lp_arrive(&mut self, batch: IdBatch, realloc: bool) {
+        let ids = batch.as_slice();
+        debug_assert!(!ids.is_empty(), "LpArrive batches are never empty");
         let arrival = self.now;
         let service_start = self.busy_until.max(arrival);
-        let Decision { outcome, ops } = self
-            .sched
-            .on_event(service_start, SchedEvent::LowPriorityBatch { tasks: &tasks, realloc });
+        let Decision { outcome, ops } = self.dispatch_batch(service_start, ids, Some(realloc));
         let (decision, lat) = self.charge(arrival, ops);
         if realloc {
             self.metrics.lat_lp_realloc.record(lat);
@@ -462,10 +601,12 @@ impl Engine {
             Outcome::LpAllocated { allocs } => self.place_lp_allocs(allocs, decision, realloc, false),
             Outcome::LpRejected => {
                 if !realloc {
-                    self.metrics.lp_alloc_failures += tasks.len() as u64;
+                    self.metrics.lp_alloc_failures += batch.len() as u64;
                 }
-                if let Some(frame) = tasks.first().map(|t| t.frame) {
-                    self.fail_frame(frame);
+                let frame = self.task(ids[0]).frame;
+                self.fail_frame(frame);
+                for &id in ids {
+                    self.free_task(id);
                 }
             }
             other => unreachable!("LP event must yield an LP outcome, got {other:?}"),
@@ -498,37 +639,38 @@ impl Engine {
                 let comm_start = alloc.comm.map(|(c1, _)| c1).unwrap_or(decision);
                 let at = comm_start.max(decision + self.cfg.control_latency());
                 let task = alloc.task;
-                let gen = self.fresh_gen();
-                self.runtime.insert(task, TaskRuntime { alloc, realloc, reoffered, cancelled: false, gen });
-                self.queue.push(at, Event::TransferStart { task, gen });
+                let h = self.slot_of(task);
+                self.tasks.get_mut(h).expect("placing a live task").rt =
+                    Some(TaskRuntime { alloc, realloc, reoffered });
+                self.queue.push(at, Event::TransferStart { task: h });
             } else {
                 self.start_local(alloc, decision, realloc, reoffered);
             }
         }
     }
 
-    fn on_transfer_start(&mut self, task_id: TaskId, gen: u64) {
-        let Some(rt) = self.runtime.get(&task_id) else { return };
-        if rt.cancelled || rt.gen != gen {
+    fn on_transfer_start(&mut self, h: SlotRef) {
+        let Some(slot) = self.tasks.get(h) else { return };
+        if slot.rt.is_none() {
             return;
         }
-        let bytes = self.tasks[&task_id].input_bytes;
-        self.medium.add_flow(self.now, task_id, bytes);
+        let (id, bytes) = (slot.task.id, slot.task.input_bytes);
+        self.medium.add_flow(self.now, id, bytes);
         self.arm_medium();
     }
 
-    fn on_lp_finish(&mut self, task_id: TaskId, gen: u64) {
-        let Some(rt) = self.runtime.get(&task_id) else { return };
-        if rt.cancelled || rt.gen != gen {
-            return;
-        }
+    fn on_lp_finish(&mut self, h: SlotRef) {
+        let Some(slot) = self.tasks.get(h) else { return };
+        let Some(rt) = slot.rt.as_ref() else { return };
         let (frame, offloaded, realloc, reoffered) =
             (rt.alloc.frame, rt.alloc.offloaded, rt.realloc, rt.reoffered);
-        let deadline = self.tasks[&task_id].deadline;
+        let task_id = slot.task.id;
+        let deadline = slot.task.deadline;
         if self.now > deadline {
             self.metrics.lp_violations += 1;
             self.sched.on_event(self.now, SchedEvent::Violation { task: task_id });
             self.fail_frame(frame);
+            self.free_task(task_id);
             return;
         }
         if realloc {
@@ -544,10 +686,11 @@ impl Engine {
             self.metrics.crash_recovered_in_deadline += 1;
         }
         self.sched.on_event(self.now, SchedEvent::Complete { task: task_id });
-        if let Some(f) = self.frames.get_mut(&frame) {
+        if let Some(f) = self.frame_mut(frame) {
             f.lp_done += 1;
         }
         self.check_frame(frame);
+        self.free_task(task_id);
     }
 
     // ---- medium / probes / traffic --------------------------------------
@@ -571,13 +714,12 @@ impl Engine {
             self.on_probe_end(flow);
         } else {
             // Transfer done: the offloaded task may start processing.
-            if let Some(rt) = self.runtime.get(&flow) {
-                if !rt.cancelled {
-                    let (alloc, gen) = (rt.alloc.clone(), rt.gen);
-                    let eff_start = alloc.start.max(self.now);
-                    let proc = self.actual_duration(&alloc);
-                    self.queue.push(eff_start + proc, Event::LpFinish { task: flow, gen });
-                }
+            let h = self.slot_of(flow);
+            let placed = self.tasks.get(h).and_then(|s| s.rt.as_ref().map(|rt| rt.alloc));
+            if let Some(alloc) = placed {
+                let eff_start = alloc.start.max(self.now);
+                let proc = self.actual_duration(&alloc);
+                self.queue.push(eff_start + proc, Event::LpFinish { task: h });
             }
         }
         self.arm_medium();
@@ -591,21 +733,28 @@ impl Engine {
         // a departed device neither hosts a round nor answers pings.
         // (With the full fleet active this draws the exact same RNG value
         // as indexing 0..n_devices — the default path stays bit-identical.)
-        let active: Vec<DeviceId> =
-            (0..self.active_devices.len()).filter(|&d| self.active_devices[d]).collect();
-        if active.len() < 2 {
+        // The device list is a scratch buffer reused across rounds.
+        let mut active = std::mem::take(&mut self.scratch_devices);
+        active.clear();
+        active.extend((0..self.active_devices.len()).filter(|&d| self.active_devices[d]));
+        let host = if active.len() >= 2 {
+            Some((active[self.rng.index(active.len())], active.len()))
+        } else {
+            None
+        };
+        self.scratch_devices = active;
+        let Some((host, n_active)) = host else {
             // Nobody to ping: skip the round but keep the clock running.
             self.queue.push(self.now + self.estimator.interval, Event::ProbeStart);
             return;
-        }
+        };
         // A random device hosts the round (Section V) and pings every
         // other device: ping_count × (n−1) × 1400 B, out and back.
-        let host = active[self.rng.index(active.len())];
         // Under probe loss some pings never make it back; the round's
         // airtime (and sample count) shrinks with them. A fully lost
         // round is a probe failure: no traffic, no estimator update — but
         // the attempt still consumes its slot in the probe cadence.
-        let pings = self.cfg.ping_count as u64 * (active.len() as u64 - 1);
+        let pings = self.cfg.ping_count as u64 * (n_active as u64 - 1);
         let survivors = self.medium.probe_survivors(pings);
         self.metrics.probe_pings_lost += pings - survivors;
         if survivors == 0 {
@@ -622,7 +771,7 @@ impl Engine {
         let bytes = bytes as u64;
         let id = self.next_probe_id;
         self.next_probe_id += 1;
-        self.probes.insert(id, ProbeFlight { started: self.now, bytes, host });
+        self.probes.push((id, ProbeFlight { started: self.now, bytes, host }));
         self.medium.add_flow(self.now, id, bytes);
         self.arm_medium();
         // Next round is interval-periodic regardless of this round's
@@ -631,7 +780,8 @@ impl Engine {
     }
 
     fn on_probe_end(&mut self, flow: FlowId) {
-        let Some(p) = self.probes.remove(&flow) else { return };
+        let Some(pos) = self.probes.iter().position(|(f, _)| *f == flow) else { return };
+        let (_, p) = self.probes.swap_remove(pos);
         let dur_us = (self.now - p.started).max(1);
         // Achieved throughput of the probe flow — pings measured the
         // *contended* share, exactly like the paper's RTT-derived samples.
@@ -718,14 +868,15 @@ impl Engine {
             unreachable!("DeviceLeft must be acknowledged");
         };
         for a in evicted {
-            self.cancel_task(a.task);
+            self.cancel_placement(a.task);
             self.metrics.churn_evicted += 1;
-            let source = self.tasks[&a.task].source;
+            let source = self.task(a.task).source;
             let hp = a.config == crate::coordinator::task::TaskConfig::HighPriority;
             if hp || source == device || !self.device_active(source) {
                 // The task (or the device holding its input image) is
                 // gone: the frame cannot complete.
                 self.fail_frame(a.frame);
+                self.free_task(a.task);
             } else {
                 // Guest task on the departed device: its source still has
                 // the input, so it re-enters low-priority scheduling like a
@@ -733,7 +884,7 @@ impl Engine {
                 self.metrics.lp_realloc_attempts += 1;
                 self.queue.push(
                     self.now + self.cfg.control_latency(),
-                    Event::LpArrive { tasks: vec![a.task], realloc: true },
+                    Event::LpArrive { tasks: IdBatch::one(a.task), realloc: true },
                 );
             }
         }
@@ -751,20 +902,24 @@ impl Engine {
         }
         self.active_devices[device] = false;
         self.metrics.device_crashes += 1;
-        self.crashed_at.insert(device, self.now);
+        if self.crashed_at.len() <= device {
+            self.crashed_at.resize(device + 1, None);
+        }
+        self.crashed_at[device] = Some(self.now);
         let decision = self.sched.on_event(self.now, SchedEvent::DeviceCrashed { device });
         let Outcome::Ack { evicted } = decision.outcome else {
             unreachable!("DeviceCrashed must be acknowledged");
         };
         for a in evicted {
-            self.cancel_task(a.task); // aborts the medium flow too
+            self.cancel_placement(a.task); // aborts the medium flow too
             self.metrics.crash_tasks_lost += 1;
-            let source = self.tasks[&a.task].source;
+            let source = self.task(a.task).source;
             let hp = a.config == crate::coordinator::task::TaskConfig::HighPriority;
             if hp || source == device || !self.device_active(source) {
                 // The work (or the device holding its input image) died
                 // with the crash: the frame cannot complete.
                 self.fail_frame(a.frame);
+                self.free_task(a.task);
             } else {
                 // The source still holds the input: re-offer the lost
                 // task. Its deadline is unchanged — the time burned
@@ -773,35 +928,41 @@ impl Engine {
                 self.metrics.lp_realloc_attempts += 1;
                 self.queue.push(
                     self.now + self.cfg.control_latency(),
-                    Event::Reoffer { tasks: vec![a.task] },
+                    Event::Reoffer { tasks: IdBatch::one(a.task) },
                 );
             }
         }
         // In-flight input transfers *from* the crashed device die with
         // it: a guest task placed elsewhere whose image was still
-        // crossing the medium can never start.
-        let mut orphaned: Vec<(TaskId, FrameId)> = self
-            .runtime
-            .iter()
-            .filter(|(id, rt)| {
-                !rt.cancelled
-                    && rt.alloc.offloaded
-                    && rt.alloc.device != device
-                    && self.tasks[*id].source == device
-                    && self.medium.has_flow(**id)
-            })
-            .map(|(id, rt)| (*id, rt.alloc.frame))
-            .collect();
-        // `runtime` is a HashMap: sort so the scheduler sees the aborts
-        // in a run-independent order (determinism guarantee).
-        orphaned.sort_unstable();
-        for (id, frame) in orphaned {
-            self.cancel_task(id);
+        // crossing the medium can never start. The medium's flow table is
+        // id-sorted, so iterating it visits orphans in ascending TaskId
+        // order — no sort needed (determinism assertion below).
+        let mut orphans = std::mem::take(&mut self.scratch_orphans);
+        orphans.clear();
+        for id in self.medium.flow_ids() {
+            if id >= PROBE_FLOW_BASE {
+                break; // probe flows are namespaced above all task ids
+            }
+            let Some(slot) = self.tasks.get(self.slot_of(id)) else { continue };
+            let Some(rt) = slot.rt.as_ref() else { continue };
+            if rt.alloc.offloaded && rt.alloc.device != device && slot.task.source == device {
+                orphans.push((id, rt.alloc.frame));
+            }
+        }
+        debug_assert!(
+            orphans.windows(2).all(|w| w[0].0 < w[1].0),
+            "crash orphan scan must visit tasks in ascending id order (determinism)"
+        );
+        for &(id, frame) in orphans.iter() {
+            self.cancel_placement(id);
             // Free the placement the scheduler still holds for it.
             let _ = self.sched.on_event(self.now, SchedEvent::Violation { task: id });
             self.metrics.crash_tasks_lost += 1;
             self.fail_frame(frame);
+            self.free_task(id);
         }
+        orphans.clear();
+        self.scratch_orphans = orphans;
     }
 
     /// A crashed device comes back with fresh, empty availability. Only
@@ -810,7 +971,7 @@ impl Engine {
     /// already gracefully left) is a no-op, never a spurious revival —
     /// graceful returns go through `join_at`.
     fn on_device_recover(&mut self, device: DeviceId) {
-        let Some(crashed) = self.crashed_at.remove(&device) else {
+        let Some(crashed) = self.crashed_at.get_mut(device).and_then(Option::take) else {
             return; // no crash on record: nothing to recover from
         };
         if self.device_active(device) {
@@ -825,14 +986,18 @@ impl Engine {
     /// Crash-lost tasks re-enter scheduling. The scheduler re-places them
     /// on whatever deadline budget remains or rejects (drop-by-deadline);
     /// tasks whose frame already failed are dropped without a dispatch.
-    fn on_reoffer(&mut self, task_ids: Vec<TaskId>) {
-        let mut live: Vec<TaskId> = Vec::with_capacity(task_ids.len());
-        for id in task_ids {
+    fn on_reoffer(&mut self, batch: IdBatch) {
+        let mut live = IdBatch::new();
+        for &id in batch.as_slice() {
             let (frame, source) = {
-                let t = &self.tasks[&id];
+                let t = self.task(id);
                 (t.frame, t.source)
             };
-            let frame_alive = self.frames.get(&frame).map(|f| !f.failed).unwrap_or(false);
+            let frame_alive = self
+                .frames
+                .get(frame as usize)
+                .map(|f| f.tracked && !f.failed)
+                .unwrap_or(false);
             if frame_alive && self.device_active(source) {
                 live.push(id);
             } else {
@@ -842,24 +1007,26 @@ impl Engine {
                     // crash and the re-offer: the frame can never finish.
                     self.fail_frame(frame);
                 }
+                self.free_task(id);
             }
         }
         if live.is_empty() {
             return;
         }
-        let tasks: Vec<Task> = live.iter().map(|id| self.tasks[id].clone()).collect();
+        let ids = live.as_slice();
         let arrival = self.now;
         let service_start = self.busy_until.max(arrival);
-        let Decision { outcome, ops } =
-            self.sched.on_event(service_start, SchedEvent::Reoffer { tasks: &tasks });
+        let Decision { outcome, ops } = self.dispatch_batch(service_start, ids, None);
         let (decision, lat) = self.charge(arrival, ops);
         self.metrics.lat_lp_realloc.record(lat);
         match outcome {
             Outcome::LpAllocated { allocs } => self.place_lp_allocs(allocs, decision, true, true),
             Outcome::LpRejected => {
-                self.metrics.crash_reoffer_dropped += tasks.len() as u64;
-                if let Some(frame) = tasks.first().map(|t| t.frame) {
-                    self.fail_frame(frame);
+                self.metrics.crash_reoffer_dropped += live.len() as u64;
+                let frame = self.task(ids[0]).frame;
+                self.fail_frame(frame);
+                for &id in ids {
+                    self.free_task(id);
                 }
             }
             other => unreachable!("Reoffer must yield an LP outcome, got {other:?}"),
@@ -883,27 +1050,25 @@ impl Engine {
 
     // ---- frame bookkeeping ----------------------------------------------
 
-    fn cancel_task(&mut self, task: TaskId) {
-        if let Some(rt) = self.runtime.get_mut(&task) {
-            rt.cancelled = true;
-        }
-        self.medium.remove_flow(self.now, task);
-        self.arm_medium();
-    }
-
     fn fail_frame(&mut self, frame: FrameId) {
-        if let Some(f) = self.frames.get_mut(&frame) {
+        if let Some(f) = self.frame_mut(frame) {
             f.failed = true;
         }
     }
 
     fn check_frame(&mut self, frame: FrameId) {
-        if let Some(f) = self.frames.get_mut(&frame) {
+        if let Some(f) = self.frame_mut(frame) {
             if !f.counted && !f.failed && f.hp_done && f.lp_done >= f.lp_expected {
                 f.counted = true;
                 self.metrics.frames_completed += 1;
             }
         }
+    }
+
+    /// Live tasks currently tracked (diagnostic/bench hook: with slot
+    /// recycling this tracks in-flight work, not run history).
+    pub fn live_tasks(&self) -> usize {
+        self.tasks.len()
     }
 }
 
@@ -980,14 +1145,37 @@ mod tests {
     }
 
     #[test]
+    fn slab_frees_terminal_tasks() {
+        // The engine's slab recycles slots: after a drained run every
+        // task reached a terminal state, so nothing may stay live.
+        let mut cfg = SystemConfig::default();
+        cfg.seed = 21;
+        let trace = Trace::generate(TraceSpec::Weighted(3), cfg.n_devices, 10, 21);
+        let sched: Box<dyn Scheduler> = Box::new(RasScheduler::new(&cfg, 0, cfg.link_bps));
+        let mut eng = Engine::new(cfg, sched, trace, "slab");
+        let mut peak = 0usize;
+        while eng.step() {
+            peak = peak.max(eng.live_tasks());
+        }
+        assert_eq!(eng.live_tasks(), 0, "drained run must free every task slot");
+        assert!(peak > 0, "run should have had in-flight tasks");
+        assert!(
+            peak < eng.metrics.hp_generated as usize + eng.metrics.lp_generated as usize,
+            "peak live tasks ({peak}) should stay below the whole run history"
+        );
+    }
+
+    #[test]
     fn congestion_hurts_completion() {
         let mut cfg = SystemConfig::default();
         cfg.seed = 13;
-        let trace = Trace::generate(TraceSpec::Weighted(4), cfg.n_devices, 20, 13);
+        // One immutable trace allocation shared by both twin runs (the
+        // old construction cloned it per engine).
+        let trace = Arc::new(Trace::generate(TraceSpec::Weighted(4), cfg.n_devices, 20, 13));
         let quiet = Engine::new(
             cfg.clone(),
             Box::new(RasScheduler::new(&cfg, 0, cfg.link_bps)),
-            trace.clone(),
+            Arc::clone(&trace),
             "quiet",
         )
         .run();

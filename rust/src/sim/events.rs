@@ -6,15 +6,62 @@ use std::collections::BinaryHeap;
 use crate::coordinator::task::{DeviceId, TaskId};
 use crate::sim::netsim::FlowId;
 use crate::time::SimTime;
+use crate::util::slab::SlotRef;
+
+/// A fixed-capacity, inline batch of task ids. Low-priority requests are
+/// at most [`IdBatch::CAP`] tasks (the trace alphabet is −1..=4, enforced
+/// at generation and at trace load), so carrying the ids inline keeps
+/// event construction allocation-free on the requeue/re-offer hot paths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct IdBatch {
+    len: u8,
+    ids: [TaskId; Self::CAP],
+}
+
+impl IdBatch {
+    /// Maximum low-priority tasks per frame (paper, Fig. 1).
+    pub const CAP: usize = 4;
+
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A single-id batch (requeue / re-offer events).
+    pub fn one(id: TaskId) -> Self {
+        let mut b = Self::new();
+        b.push(id);
+        b
+    }
+
+    pub fn push(&mut self, id: TaskId) {
+        assert!((self.len as usize) < Self::CAP, "IdBatch overflow (> {} tasks)", Self::CAP);
+        self.ids[self.len as usize] = id;
+        self.len += 1;
+    }
+
+    pub fn as_slice(&self) -> &[TaskId] {
+        &self.ids[..self.len as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
 
 /// Everything that can happen in the simulated system.
 ///
-/// `HpFinish` / `LpFinish` / `TransferStart` carry the placement
-/// generation (`gen`) they were scheduled under: a task that is cancelled
-/// and later re-placed (preemption victim, churn eviction, crash
-/// re-offer) gets a fresh generation, so events queued against the dead
-/// placement are recognised as stale and dropped instead of finishing or
-/// transferring the new placement at the old placement's times.
+/// `HpFinish` / `LpFinish` / `TransferStart` carry the [`SlotRef`] of the
+/// placement they were scheduled under: a task that is cancelled and
+/// later re-placed (preemption victim, churn eviction, crash re-offer)
+/// is re-slotted with a fresh slab generation, so events queued against
+/// the dead placement stop resolving and are dropped instead of
+/// finishing or transferring the new placement at the old placement's
+/// times. (This folds the old explicit `gen: u64` placement counter into
+/// the slab's generation word.)
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Event {
     /// The conveyor produces frame `index` of the trace (all devices).
@@ -22,13 +69,13 @@ pub enum Event {
     /// A high-priority scheduling request reaches the controller.
     HpArrive { task: TaskId },
     /// A high-priority task finishes on its device.
-    HpFinish { task: TaskId, gen: u64 },
+    HpFinish { task: SlotRef },
     /// A low-priority batch request reaches the controller.
-    LpArrive { tasks: Vec<TaskId>, realloc: bool },
+    LpArrive { tasks: IdBatch, realloc: bool },
     /// A low-priority task finishes on its device.
-    LpFinish { task: TaskId, gen: u64 },
+    LpFinish { task: SlotRef },
     /// An offloaded task's input transfer begins on the medium.
-    TransferStart { task: TaskId, gen: u64 },
+    TransferStart { task: SlotRef },
     /// The medium predicts flow completion (stale if epoch mismatches).
     MediumComplete { flow: FlowId, epoch: u64 },
     /// A bandwidth probe round begins (host device chosen at fire time).
@@ -46,7 +93,7 @@ pub enum Event {
     DeviceRecover { device: DeviceId },
     /// Crash-lost low-priority tasks re-enter scheduling via
     /// [`crate::coordinator::scheduler::SchedEvent::Reoffer`].
-    Reoffer { tasks: Vec<TaskId> },
+    Reoffer { tasks: IdBatch },
     /// The background-traffic regime changes mid-run (scenario schedule).
     /// The f64 rate/duty are carried as `to_bits` so the event stays `Eq`.
     RegimeChange { bg_bps_bits: u64, duty_bits: u64 },
@@ -122,6 +169,27 @@ mod tests {
         assert_eq!(q.pop().unwrap().at, 200);
         assert_eq!(q.pop().unwrap().at, 300);
         assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn id_batch_holds_up_to_cap_inline() {
+        let mut b = IdBatch::new();
+        assert!(b.is_empty());
+        for id in 1..=IdBatch::CAP as u64 {
+            b.push(id);
+        }
+        assert_eq!(b.len(), IdBatch::CAP);
+        assert_eq!(b.as_slice(), &[1, 2, 3, 4]);
+        assert_eq!(IdBatch::one(9).as_slice(), &[9]);
+    }
+
+    #[test]
+    #[should_panic(expected = "IdBatch overflow")]
+    fn id_batch_rejects_overflow() {
+        let mut b = IdBatch::new();
+        for id in 0..=IdBatch::CAP as u64 {
+            b.push(id);
+        }
     }
 
     #[test]

@@ -9,8 +9,17 @@
 //! mechanism the paper's congestion experiments (Fig. 8) study — and probe
 //! flows measure the *contended* share, reproducing the bandwidth
 //! under-estimation effect of frequent probing (Fig. 6/7).
-
-use std::collections::HashMap;
+//!
+//! ## Incremental accounting
+//!
+//! Because every flow drains at the *same* share, one accumulator
+//! (`drained`: bits removed from each flow since the medium last became
+//! busy) advances the whole fluid model in O(1); a flow's remaining bits
+//! are `deficit - drained`, where `deficit` was fixed at admission. The
+//! earliest-completing flow and the total remaining bits are cached and
+//! invalidated only on add/remove/rate-change epochs, so
+//! [`Medium::next_completion`] — called by the engine after *every*
+//! medium mutation — no longer rescans the flow table per event.
 
 use crate::time::SimTime;
 use crate::util::Rng;
@@ -22,9 +31,14 @@ pub type FlowId = u64;
 /// Probe flows are namespaced away from task ids.
 pub const PROBE_FLOW_BASE: FlowId = 1 << 60;
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 struct Flow {
-    remaining_bits: f64,
+    id: FlowId,
+    /// Bits this flow still owed when admitted, *plus* the accumulator
+    /// value at admission: true remaining = `deficit - drained`, clamped
+    /// at zero (the clamp only matters in the ≤1 µs rounding window
+    /// between a flow hitting zero and its completion event firing).
+    deficit: f64,
 }
 
 /// The shared wireless medium.
@@ -35,11 +49,26 @@ pub struct Medium {
     /// Bandwidth consumed by background traffic while a burst is active.
     pub bg_bps: f64,
     bg_active: bool,
-    flows: HashMap<FlowId, Flow>,
+    /// Active flows, sorted by id: deterministic ascending iteration
+    /// (the engine's crash orphan scan relies on it) and binary-search
+    /// lookup. Flow counts are small — a handful of transfers plus at
+    /// most one probe — so sorted-insert beats hashing.
+    flows: Vec<Flow>,
     last_update: SimTime,
     /// Bumped on every rate-changing mutation; completion events carry the
     /// epoch they were computed under so stale ones can be discarded.
     pub epoch: u64,
+    /// Per-flow bits drained since `flows` last became non-empty.
+    drained: f64,
+    /// Σ deficit over active flows (cached total, see
+    /// [`Medium::total_remaining_bits`]).
+    sum_deficit: f64,
+    /// Earliest-completing flow as `(deficit, id)` — the same flow a full
+    /// rescan over live (unclamped) flows would pick: minimum remaining
+    /// bits, ties to the lower id, since `remaining = deficit - drained`
+    /// is order-preserving until the clamp. Maintained on
+    /// add/remove/complete; `Some` iff flows is non-empty.
+    min_flow: Option<(f64, FlowId)>,
 }
 
 impl Medium {
@@ -48,10 +77,51 @@ impl Medium {
             link_bps,
             bg_bps,
             bg_active: false,
-            flows: HashMap::new(),
+            flows: Vec::new(),
             last_update: 0,
             epoch: 0,
+            drained: 0.0,
+            sum_deficit: 0.0,
+            min_flow: None,
         }
+    }
+
+    fn find(&self, id: FlowId) -> Result<usize, usize> {
+        self.flows.binary_search_by(|f| f.id.cmp(&id))
+    }
+
+    /// Recompute the cached minimum (only needed when the current
+    /// minimum leaves or is overwritten).
+    fn rescan_min(&mut self) {
+        self.min_flow = self
+            .flows
+            .iter()
+            .map(|f| (f.deficit, f.id))
+            .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    }
+
+    /// Offer a candidate for the cached minimum.
+    fn offer_min(&mut self, deficit: f64, id: FlowId) {
+        match self.min_flow {
+            Some((d, mid)) if d < deficit || (d == deficit && mid < id) => {}
+            _ => self.min_flow = Some((deficit, id)),
+        }
+    }
+
+    /// Drop a flow by position, maintaining every cache. Returns its id.
+    fn remove_at(&mut self, pos: usize) -> FlowId {
+        let f = self.flows.remove(pos);
+        self.sum_deficit -= f.deficit;
+        if self.flows.is_empty() {
+            // Idle medium: reset the accumulator so it cannot grow (and
+            // lose float precision) over a long run.
+            self.drained = 0.0;
+            self.sum_deficit = 0.0;
+            self.min_flow = None;
+        } else if self.min_flow.map(|(_, mid)| mid == f.id).unwrap_or(false) {
+            self.rescan_min();
+        }
+        f.id
     }
 
     /// Capacity currently shared by foreground flows, bits/s.
@@ -72,9 +142,9 @@ impl Medium {
         self.available_bps() / self.flows.len() as f64
     }
 
-    /// Advance the fluid model to `now`, draining every flow at the share
-    /// that held since the last update. Must be called (internally) before
-    /// any mutation.
+    /// Advance the fluid model to `now`. All flows share equally, so one
+    /// accumulator bump advances every flow — O(1), no rescan. Must be
+    /// called (internally) before any mutation.
     fn drain_to(&mut self, now: SimTime) {
         debug_assert!(now >= self.last_update);
         if now == self.last_update || self.flows.is_empty() {
@@ -82,28 +152,42 @@ impl Medium {
             return;
         }
         let dt_s = (now - self.last_update) as f64 / 1e6;
-        let share = self.per_flow_bps();
-        for f in self.flows.values_mut() {
-            f.remaining_bits = (f.remaining_bits - share * dt_s).max(0.0);
-        }
+        self.drained += self.per_flow_bps() * dt_s;
         self.last_update = now;
     }
 
     /// Start a transfer of `bytes` at `now`.
     pub fn add_flow(&mut self, now: SimTime, id: FlowId, bytes: u64) {
         self.drain_to(now);
-        self.flows.insert(id, Flow { remaining_bits: bytes as f64 * 8.0 });
+        let deficit = bytes as f64 * 8.0 + self.drained;
+        match self.find(id) {
+            Ok(pos) => {
+                // Same replace-on-collision semantics the old map had
+                // (never hit by the engine: task and probe ids are unique).
+                self.sum_deficit += deficit - self.flows[pos].deficit;
+                self.flows[pos].deficit = deficit;
+                self.rescan_min();
+            }
+            Err(pos) => {
+                self.flows.insert(pos, Flow { id, deficit });
+                self.sum_deficit += deficit;
+                self.offer_min(deficit, id);
+            }
+        }
         self.epoch += 1;
     }
 
     /// Remove a flow (cancelled transfer). Returns whether it existed.
     pub fn remove_flow(&mut self, now: SimTime, id: FlowId) -> bool {
         self.drain_to(now);
-        let existed = self.flows.remove(&id).is_some();
-        if existed {
-            self.epoch += 1;
+        match self.find(id) {
+            Ok(pos) => {
+                self.remove_at(pos);
+                self.epoch += 1;
+                true
+            }
+            Err(_) => false,
         }
-        existed
     }
 
     /// Toggle background traffic (the duty-cycled burst generator).
@@ -131,33 +215,27 @@ impl Medium {
     }
 
     /// Predict the earliest flow completion from `now` under current
-    /// rates. Returns `(finish_time, flow_id)`.
+    /// rates. Returns `(finish_time, flow_id)`. O(1): the minimum is
+    /// cached across calls and only invalidated by mutation epochs.
     pub fn next_completion(&mut self, now: SimTime) -> Option<(SimTime, FlowId)> {
         self.drain_to(now);
-        if self.flows.is_empty() {
-            return None;
-        }
+        let (deficit, id) = self.min_flow?;
         let share = self.per_flow_bps();
-        let (id, f) = self
-            .flows
-            .iter()
-            .min_by(|a, b| {
-                a.1.remaining_bits
-                    .partial_cmp(&b.1.remaining_bits)
-                    .unwrap()
-                    .then(a.0.cmp(b.0)) // deterministic tie-break
-            })?;
-        let dt_us = (f.remaining_bits / share * 1e6).ceil() as u64;
-        Some((now + dt_us, *id))
+        let remaining = (deficit - self.drained).max(0.0);
+        let dt_us = (remaining / share * 1e6).ceil() as u64;
+        Some((now + dt_us, id))
     }
 
     /// Pop a flow that has (within fluid tolerance) finished by `now`.
     pub fn complete_flow(&mut self, now: SimTime, id: FlowId) -> bool {
         self.drain_to(now);
-        match self.flows.get(&id) {
+        match self.find(id) {
             // One share-microsecond of tolerance for integer rounding.
-            Some(f) if f.remaining_bits <= self.per_flow_bps() / 1e5 + 1.0 => {
-                self.flows.remove(&id);
+            Ok(pos)
+                if (self.flows[pos].deficit - self.drained).max(0.0)
+                    <= self.per_flow_bps() / 1e5 + 1.0 =>
+            {
+                self.remove_at(pos);
                 self.epoch += 1;
                 true
             }
@@ -171,20 +249,37 @@ impl Medium {
 
     /// Whether `id` is still transferring (no time advance).
     pub fn has_flow(&self, id: FlowId) -> bool {
-        self.flows.contains_key(&id)
+        self.find(id).is_ok()
+    }
+
+    /// Active flow ids in ascending order (task flows before probe
+    /// flows). The engine's crash orphan scan iterates this instead of
+    /// sorting a scratch copy of its runtime table.
+    pub fn flow_ids(&self) -> impl Iterator<Item = FlowId> + '_ {
+        self.flows.iter().map(|f| f.id)
     }
 
     /// Remaining bits of flow `id` after draining the fluid model to
     /// `now`. Diagnostic/test hook.
     pub fn remaining_bits(&mut self, now: SimTime, id: FlowId) -> Option<f64> {
         self.drain_to(now);
-        self.flows.get(&id).map(|f| f.remaining_bits)
+        self.find(id).ok().map(|pos| (self.flows[pos].deficit - self.drained).max(0.0))
     }
 
     /// Total remaining bits across all flows after draining to `now`.
+    /// O(1) via the cached deficit sum while no flow sits at zero; falls
+    /// back to a scan only inside a completion's rounding window.
     pub fn total_remaining_bits(&mut self, now: SimTime) -> f64 {
         self.drain_to(now);
-        self.flows.values().map(|f| f.remaining_bits).sum()
+        if self.flows.is_empty() {
+            return 0.0;
+        }
+        if let Some((d, _)) = self.min_flow {
+            if d - self.drained > 0.0 {
+                return (self.sum_deficit - self.flows.len() as f64 * self.drained).max(0.0);
+            }
+        }
+        self.flows.iter().map(|f| (f.deficit - self.drained).max(0.0)).sum()
     }
 }
 

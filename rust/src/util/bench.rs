@@ -5,7 +5,9 @@
 //! per benchmark so `cargo bench` output can be diffed across runs. Used
 //! by every target under `rust/benches/`.
 
+use std::alloc::{GlobalAlloc, Layout, System};
 use std::hint::black_box;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 /// Result of one benchmark case.
@@ -16,6 +18,135 @@ pub struct BenchResult {
     pub median_ns: f64,
     pub mean_ns: f64,
     pub p95_ns: f64,
+}
+
+/// One row of a `BENCH_*.json` trajectory file: either a timing row
+/// (`unit == "ns/op"`, `value` = median ns, `throughput_per_s` derived)
+/// or a gauge row (e.g. `unit == "allocs/event"`, timing fields zero).
+#[derive(Debug, Clone)]
+pub struct BenchRow {
+    pub name: String,
+    pub unit: String,
+    pub iters: u64,
+    pub value: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+    pub throughput_per_s: f64,
+}
+
+impl BenchRow {
+    pub fn gauge(name: impl Into<String>, unit: impl Into<String>, iters: u64, value: f64) -> Self {
+        Self {
+            name: name.into(),
+            unit: unit.into(),
+            iters,
+            value,
+            mean_ns: 0.0,
+            p95_ns: 0.0,
+            throughput_per_s: 0.0,
+        }
+    }
+
+    pub fn report(&self) -> String {
+        if self.unit == "ns/op" {
+            format!(
+                "{:<52} {:>12} iters  {:>12}  ({:.0}/s)",
+                self.name,
+                self.iters,
+                fmt_ns(self.value),
+                self.throughput_per_s
+            )
+        } else {
+            format!("{:<52} {:>12} iters  {:>12.4} {}", self.name, self.iters, self.value, self.unit)
+        }
+    }
+}
+
+impl From<&BenchResult> for BenchRow {
+    fn from(r: &BenchResult) -> Self {
+        Self {
+            name: r.name.clone(),
+            unit: "ns/op".to_string(),
+            iters: r.iters,
+            value: r.median_ns,
+            mean_ns: r.mean_ns,
+            p95_ns: r.p95_ns,
+            throughput_per_s: if r.median_ns > 0.0 { 1e9 / r.median_ns } else { 0.0 },
+        }
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Serialise bench rows to the `BENCH_*.json` schema (hand-rolled: the
+/// offline build has no serde). Stable field order so files diff cleanly
+/// across runs — that is the whole point of the trajectory.
+pub fn json_report(suite: &str, provenance: &str, rows: &[BenchRow]) -> String {
+    let mut s = String::from("{\n");
+    s.push_str(&format!("  \"suite\": \"{}\",\n", json_escape(suite)));
+    s.push_str(&format!("  \"provenance\": \"{}\",\n", json_escape(provenance)));
+    s.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"unit\": \"{}\", \"iters\": {}, \"value\": {:.3}, \
+             \"mean_ns\": {:.3}, \"p95_ns\": {:.3}, \"throughput_per_s\": {:.3}}}{}\n",
+            json_escape(&r.name),
+            json_escape(&r.unit),
+            r.iters,
+            r.value,
+            r.mean_ns,
+            r.p95_ns,
+            r.throughput_per_s,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Allocation-counting wrapper around the system allocator. Bench
+/// binaries install it as `#[global_allocator]` to measure steady-state
+/// allocations per simulated event (the hot-path target is zero); one
+/// relaxed atomic increment per allocation, negligible otherwise.
+pub struct CountingAlloc {
+    count: AtomicU64,
+}
+
+impl CountingAlloc {
+    pub const fn new() -> Self {
+        Self { count: AtomicU64::new(0) }
+    }
+
+    /// Allocations observed since process start.
+    pub fn allocations(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for CountingAlloc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// SAFETY: delegates verbatim to `System`; the counter is a relaxed
+// atomic with no allocation inside the allocator itself.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
 }
 
 impl BenchResult {
@@ -121,5 +252,41 @@ mod tests {
         let (v, d) = bench_once("once", || 7);
         assert_eq!(v, 7);
         assert!(d.as_nanos() > 0);
+    }
+
+    #[test]
+    fn json_report_is_wellformed_and_stable() {
+        let r = BenchResult {
+            name: "x/\"quoted\"".into(),
+            iters: 100,
+            median_ns: 12.5,
+            mean_ns: 13.0,
+            p95_ns: 20.0,
+        };
+        let rows = vec![BenchRow::from(&r), BenchRow::gauge("allocs", "allocs/event", 5000, 0.0)];
+        let a = json_report("hot_path", "test", &rows);
+        let b = json_report("hot_path", "test", &rows);
+        assert_eq!(a, b, "serialisation must be byte-stable");
+        assert!(a.contains("\"suite\": \"hot_path\""));
+        assert!(a.contains("\\\"quoted\\\""));
+        assert!(a.contains("\"unit\": \"allocs/event\""));
+        assert!(a.ends_with("]\n}\n"));
+        // Throughput derives from the median.
+        assert!((rows[0].throughput_per_s - 8e7).abs() < 1e3);
+    }
+
+    #[test]
+    fn counting_alloc_counts() {
+        // Not installed as the global allocator here — exercise the raw
+        // interface through a manual alloc/dealloc round-trip.
+        let a = CountingAlloc::new();
+        assert_eq!(a.allocations(), 0);
+        unsafe {
+            let layout = std::alloc::Layout::from_size_align(64, 8).unwrap();
+            let p = a.alloc(layout);
+            assert!(!p.is_null());
+            a.dealloc(p, layout);
+        }
+        assert_eq!(a.allocations(), 1);
     }
 }

@@ -7,5 +7,6 @@ pub mod bench;
 pub mod kv;
 pub mod prop;
 pub mod rng;
+pub mod slab;
 
 pub use rng::Rng;

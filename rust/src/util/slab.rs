@@ -1,0 +1,272 @@
+//! Generational slab: index-based storage for the simulation hot path.
+//!
+//! The discrete-event engine keys every in-flight task by a [`SlotRef`]
+//! — a slot index plus the slot's *generation* word. Lookup is an array
+//! index (no hashing on the per-event path), removal recycles the slot
+//! through a LIFO free list, and every removal bumps the slot's
+//! generation, so a handle taken before the removal can never resolve to
+//! whatever reuses the slot later.
+//!
+//! That last property is what lets the engine fold its placement
+//! generations into the slab: a cancelled placement is expressed by
+//! re-slotting the task (remove + insert, which the LIFO free list turns
+//! into "same index, next generation"), and every finish/transfer event
+//! queued under the dead placement carries a handle that no longer
+//! resolves. See `sim::engine` for the event-side contract and
+//! `stale_handles_never_resolve_after_reuse` below for the randomized
+//! proof.
+
+/// A generational handle into a [`Slab`]. `Copy`, 8 bytes, and safe to
+/// hold across arbitrary slab mutations: a stale handle simply stops
+/// resolving.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SlotRef {
+    idx: u32,
+    gen: u32,
+}
+
+impl SlotRef {
+    /// The never-resolving handle (generation 0 is never issued).
+    pub const NULL: SlotRef = SlotRef { idx: u32::MAX, gen: 0 };
+
+    pub fn is_null(self) -> bool {
+        self.gen == 0
+    }
+
+    /// Slot index (stable for the lifetime of one insertion).
+    pub fn index(self) -> usize {
+        self.idx as usize
+    }
+
+    /// Generation word the handle was issued under.
+    pub fn generation(self) -> u32 {
+        self.gen
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Slot<T> {
+    /// Current generation of this slot. Live generations are odd-or-even
+    /// indifferent but always ≥ 1; a handle resolves iff its generation
+    /// equals the slot's *and* the slot is occupied.
+    gen: u32,
+    val: Option<T>,
+}
+
+/// Generational slab with LIFO slot reuse. All operations are O(1)
+/// except iteration (O(capacity)).
+#[derive(Debug, Clone)]
+pub struct Slab<T> {
+    slots: Vec<Slot<T>>,
+    free: Vec<u32>,
+    live: usize,
+}
+
+impl<T> Default for Slab<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Slab<T> {
+    pub fn new() -> Self {
+        Self { slots: Vec::new(), free: Vec::new(), live: 0 }
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { slots: Vec::with_capacity(cap), free: Vec::new(), live: 0 }
+    }
+
+    /// Insert a value, reusing the most recently freed slot if any.
+    /// Reuse keeps the slot's bumped generation, so handles issued
+    /// before the free cannot alias the new occupant.
+    pub fn insert(&mut self, val: T) -> SlotRef {
+        self.live += 1;
+        if let Some(idx) = self.free.pop() {
+            let s = &mut self.slots[idx as usize];
+            debug_assert!(s.val.is_none(), "free-listed slot still occupied");
+            s.val = Some(val);
+            SlotRef { idx, gen: s.gen }
+        } else {
+            let idx = u32::try_from(self.slots.len()).expect("slab capacity exceeds u32 indices");
+            self.slots.push(Slot { gen: 1, val: Some(val) });
+            SlotRef { idx, gen: 1 }
+        }
+    }
+
+    /// Resolve a handle. `None` for stale (removed / reused) handles.
+    pub fn get(&self, r: SlotRef) -> Option<&T> {
+        match self.slots.get(r.idx as usize) {
+            Some(s) if s.gen == r.gen => s.val.as_ref(),
+            _ => None,
+        }
+    }
+
+    pub fn get_mut(&mut self, r: SlotRef) -> Option<&mut T> {
+        match self.slots.get_mut(r.idx as usize) {
+            Some(s) if s.gen == r.gen => s.val.as_mut(),
+            _ => None,
+        }
+    }
+
+    pub fn contains(&self, r: SlotRef) -> bool {
+        self.get(r).is_some()
+    }
+
+    /// Remove the value behind `r` (if the handle is still live), bumping
+    /// the slot's generation so `r` — and every copy of it — goes stale
+    /// before the slot can be reused.
+    pub fn remove(&mut self, r: SlotRef) -> Option<T> {
+        let s = self.slots.get_mut(r.idx as usize)?;
+        if s.gen != r.gen || s.val.is_none() {
+            return None;
+        }
+        let v = s.val.take();
+        // Generation 0 is reserved for NULL; skipping it on wrap keeps
+        // the invariant at the cost of one theoretical ABA per 2^32 - 1
+        // reuses of a single slot.
+        s.gen = if s.gen == u32::MAX { 1 } else { s.gen + 1 };
+        self.free.push(r.idx);
+        self.live -= 1;
+        v
+    }
+
+    /// Live value count.
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Dense iteration in slot-index order. Deterministic (the order is
+    /// a pure function of the operation history), but *not* insertion
+    /// order once slots recycle — callers that need a semantic order
+    /// must impose it themselves.
+    pub fn iter(&self) -> impl Iterator<Item = (SlotRef, &T)> {
+        self.slots.iter().enumerate().filter_map(|(i, s)| {
+            s.val.as_ref().map(|v| (SlotRef { idx: i as u32, gen: s.gen }, v))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use std::collections::HashMap;
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut s: Slab<&'static str> = Slab::new();
+        let a = s.insert("a");
+        let b = s.insert("b");
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(a), Some(&"a"));
+        assert_eq!(s.get(b), Some(&"b"));
+        assert_eq!(s.remove(a), Some("a"));
+        assert_eq!(s.get(a), None);
+        assert_eq!(s.remove(a), None, "double remove is a no-op");
+        assert_eq!(s.len(), 1);
+        *s.get_mut(b).unwrap() = "b2";
+        assert_eq!(s.get(b), Some(&"b2"));
+    }
+
+    #[test]
+    fn lifo_reuse_recycles_index_with_fresh_generation() {
+        let mut s: Slab<u64> = Slab::new();
+        let h0 = s.insert(10);
+        s.insert(11);
+        let old = h0;
+        assert_eq!(s.remove(h0), Some(10));
+        let h1 = s.insert(20);
+        // LIFO free list: same physical slot, new generation — this is
+        // exactly the engine's placement-generation semantics.
+        assert_eq!(h1.index(), old.index());
+        assert_ne!(h1.generation(), old.generation());
+        assert_eq!(s.get(old), None, "stale handle must not see the new occupant");
+        assert_eq!(s.get(h1), Some(&20));
+    }
+
+    #[test]
+    fn null_handle_never_resolves() {
+        let mut s: Slab<u64> = Slab::new();
+        assert!(SlotRef::NULL.is_null());
+        assert_eq!(s.get(SlotRef::NULL), None);
+        assert_eq!(s.remove(SlotRef::NULL), None);
+        let h = s.insert(1);
+        assert!(!h.is_null());
+        assert_eq!(s.get(SlotRef::NULL), None);
+    }
+
+    #[test]
+    fn iteration_is_dense_and_skips_freed_slots() {
+        let mut s: Slab<u64> = Slab::new();
+        let hs: Vec<SlotRef> = (0..6).map(|v| s.insert(v)).collect();
+        s.remove(hs[1]);
+        s.remove(hs[4]);
+        let seen: Vec<u64> = s.iter().map(|(_, &v)| v).collect();
+        assert_eq!(seen, vec![0, 2, 3, 5]);
+        for (h, &v) in s.iter() {
+            assert_eq!(s.get(h), Some(&v), "iterated handles must resolve");
+        }
+    }
+
+    /// Satellite requirement: a randomized schedule of ≥ 1k
+    /// insert/remove/reuse operations during which **no retired handle
+    /// ever resolves again**, checked against a mirror model.
+    #[test]
+    fn stale_handles_never_resolve_after_reuse() {
+        prop::forall("slab stale-handle soundness", 8, |rng| {
+            let mut slab: Slab<u64> = Slab::new();
+            let mut mirror: HashMap<u64, (SlotRef, u64)> = HashMap::new(); // key → (handle, value)
+            let mut live_keys: Vec<u64> = Vec::new();
+            let mut retired: Vec<SlotRef> = Vec::new();
+            let mut next_key = 0u64;
+            for step in 0..1500u64 {
+                if live_keys.is_empty() || rng.index(3) > 0 {
+                    let key = next_key;
+                    next_key += 1;
+                    let h = slab.insert(key);
+                    if retired.contains(&h) {
+                        return Err(format!("step {step}: fresh handle {h:?} equals a retired one"));
+                    }
+                    mirror.insert(key, (h, key));
+                    live_keys.push(key);
+                } else {
+                    let key = live_keys.swap_remove(rng.index(live_keys.len()));
+                    let (h, v) = mirror.remove(&key).expect("mirror tracks live keys");
+                    if slab.remove(h) != Some(v) {
+                        return Err(format!("step {step}: live handle {h:?} failed to remove"));
+                    }
+                    if slab.remove(h).is_some() || slab.get(h).is_some() {
+                        return Err(format!("step {step}: handle {h:?} survived its removal"));
+                    }
+                    retired.push(h);
+                }
+                // Every live handle resolves to its value.
+                for key in &live_keys {
+                    let (h, v) = mirror[key];
+                    if slab.get(h) != Some(&v) {
+                        return Err(format!("step {step}: live handle {h:?} lost value {v}"));
+                    }
+                }
+                // Periodically (and at the end) audit every handle ever
+                // retired: none may resolve, however many times its slot
+                // has been recycled since.
+                if step % 25 == 0 || step == 1499 {
+                    for h in &retired {
+                        if slab.get(*h).is_some() {
+                            return Err(format!("step {step}: retired handle {h:?} resolved"));
+                        }
+                    }
+                }
+                if slab.len() != live_keys.len() {
+                    return Err(format!("step {step}: len {} != model {}", slab.len(), live_keys.len()));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -7,6 +7,9 @@
 //! equally likely) and *weighted X* for X in 1..4 (predominantly X tasks,
 //! load increasing with X).
 
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock, Weak};
+
 use crate::util::Rng;
 
 /// Per-device value for one frame.
@@ -19,7 +22,7 @@ pub struct TraceEntry {
 }
 
 /// The workload distributions from the paper's experiments.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum TraceSpec {
     /// 1..4 DNN tasks with equal probability.
     Uniform,
@@ -98,6 +101,28 @@ impl Trace {
             })
             .collect();
         Self { spec, n_devices, entries }
+    }
+
+    /// Like [`Trace::generate`], but deduplicated through a process-wide
+    /// registry: every scenario with the same `(spec, devices, frames,
+    /// seed)` shares **one** immutable allocation (generation is
+    /// deterministic, so sharing is transparent). A 1000-cell sweep grid
+    /// that varies only the scheduler or fault axis holds one trace per
+    /// workload point instead of one per cell. Dropped traces are evicted
+    /// lazily (the registry keeps `Weak` references only).
+    pub fn shared(spec: TraceSpec, n_devices: usize, n_frames: usize, seed: u64) -> Arc<Trace> {
+        type Key = (TraceSpec, usize, usize, u64);
+        static REGISTRY: OnceLock<Mutex<HashMap<Key, Weak<Trace>>>> = OnceLock::new();
+        let registry = REGISTRY.get_or_init(|| Mutex::new(HashMap::new()));
+        let key = (spec, n_devices, n_frames, seed);
+        let mut map = registry.lock().expect("trace registry poisoned");
+        if let Some(t) = map.get(&key).and_then(Weak::upgrade) {
+            return t;
+        }
+        map.retain(|_, w| w.strong_count() > 0);
+        let t = Arc::new(Trace::generate(spec, n_devices, n_frames, seed));
+        map.insert(key, Arc::downgrade(&t));
+        t
     }
 
     /// Serialise to the trace text format: a header, then one
@@ -197,6 +222,22 @@ mod tests {
         assert_eq!(a.entries, b.entries);
         let c = Trace::generate(TraceSpec::Weighted(3), 4, 100, 8);
         assert_ne!(a.entries, c.entries);
+    }
+
+    #[test]
+    fn shared_traces_deduplicate_identical_parameters() {
+        let a = Trace::shared(TraceSpec::Weighted(2), 4, 40, 99);
+        let b = Trace::shared(TraceSpec::Weighted(2), 4, 40, 99);
+        assert!(Arc::ptr_eq(&a, &b), "same parameters must share one allocation");
+        assert_eq!(a.entries, Trace::generate(TraceSpec::Weighted(2), 4, 40, 99).entries);
+        let c = Trace::shared(TraceSpec::Weighted(2), 4, 40, 100);
+        assert!(!Arc::ptr_eq(&a, &c), "different seeds must not alias");
+        // Dropping every strong reference lets the registry forget the
+        // entry; the next request regenerates (content-identical).
+        let key_entries = a.entries.clone();
+        drop((a, b));
+        let d = Trace::shared(TraceSpec::Weighted(2), 4, 40, 99);
+        assert_eq!(d.entries, key_entries);
     }
 
     #[test]

@@ -110,3 +110,17 @@ fn golden_serialization_is_stable() {
     let b = report::json_rows(&[golden_scenario(SchedKind::Ras)]);
     assert_eq!(a, b);
 }
+
+/// Determinism assertion for the fault path specifically: the golden
+/// scenario crashes device 3 with work in flight, so every replay
+/// exercises the crash orphan scan. That scan now iterates the medium's
+/// id-sorted flow table (no sort — the engine debug-asserts the order),
+/// and the replays must stay byte-identical for every scheduler.
+#[test]
+fn fault_paths_replay_identically() {
+    for kind in [SchedKind::Wps, SchedKind::Ras, SchedKind::Multi] {
+        let a = report::json_rows(&[golden_scenario(kind)]);
+        let b = report::json_rows(&[golden_scenario(kind)]);
+        assert_eq!(a, b, "{}: faulted golden scenario drifted across replays", kind.label());
+    }
+}

@@ -9,7 +9,7 @@ use medge::config::SystemConfig;
 use medge::coordinator::scheduler::ras_sched::RasScheduler;
 use medge::coordinator::scheduler::wps::WpsScheduler;
 use medge::coordinator::scheduler::{
-    Decision, HpOutcome, LpOutcome, Ops, Outcome, SchedEvent, Scheduler,
+    task_refs, Decision, HpOutcome, LpOutcome, Ops, Outcome, SchedEvent, Scheduler,
 };
 use medge::coordinator::task::{Task, TaskId};
 use medge::time::SimTime;
@@ -83,7 +83,7 @@ fn gen_events(rng: &mut Rng, cfg: &SystemConfig, count: usize) -> Vec<(SimTime, 
 /// the two replays exercise genuinely different dispatch paths.
 trait LegacyDrive {
     fn leg_high(&mut self, now: SimTime, task: &Task) -> HpOutcome;
-    fn leg_low(&mut self, now: SimTime, tasks: &[Task], realloc: bool) -> LpOutcome;
+    fn leg_low(&mut self, now: SimTime, tasks: &[&Task], realloc: bool) -> LpOutcome;
     fn leg_complete(&mut self, now: SimTime, task: TaskId);
     fn leg_violation(&mut self, now: SimTime, task: TaskId);
     fn leg_bw(&mut self, now: SimTime, bps: f64) -> Ops;
@@ -93,7 +93,7 @@ impl LegacyDrive for RasScheduler {
     fn leg_high(&mut self, now: SimTime, task: &Task) -> HpOutcome {
         self.schedule_high(now, task)
     }
-    fn leg_low(&mut self, now: SimTime, tasks: &[Task], realloc: bool) -> LpOutcome {
+    fn leg_low(&mut self, now: SimTime, tasks: &[&Task], realloc: bool) -> LpOutcome {
         self.schedule_low(now, tasks, realloc)
     }
     fn leg_complete(&mut self, now: SimTime, task: TaskId) {
@@ -111,7 +111,7 @@ impl LegacyDrive for WpsScheduler {
     fn leg_high(&mut self, now: SimTime, task: &Task) -> HpOutcome {
         self.schedule_high(now, task)
     }
-    fn leg_low(&mut self, now: SimTime, tasks: &[Task], realloc: bool) -> LpOutcome {
+    fn leg_low(&mut self, now: SimTime, tasks: &[&Task], realloc: bool) -> LpOutcome {
         self.schedule_low(now, tasks, realloc)
     }
     fn leg_complete(&mut self, now: SimTime, task: TaskId) {
@@ -129,7 +129,7 @@ fn replay_legacy<S: LegacyDrive>(s: &mut S, evs: &[(SimTime, Ev)]) -> Vec<Decisi
     evs.iter()
         .map(|(now, ev)| match ev {
             Ev::Hp(t) => Decision::from(s.leg_high(*now, t)),
-            Ev::Lp(ts, r) => Decision::from(s.leg_low(*now, ts, *r)),
+            Ev::Lp(ts, r) => Decision::from(s.leg_low(*now, &task_refs(ts), *r)),
             Ev::Complete(t) => {
                 s.leg_complete(*now, *t);
                 Decision::ack(1)
@@ -148,7 +148,10 @@ fn replay_typed(s: &mut dyn Scheduler, evs: &[(SimTime, Ev)]) -> Vec<Decision> {
         .map(|(now, ev)| {
             let ev = match ev {
                 Ev::Hp(t) => SchedEvent::HighPriority { task: t },
-                Ev::Lp(ts, r) => SchedEvent::LowPriorityBatch { tasks: ts, realloc: *r },
+                Ev::Lp(ts, r) => {
+                    let refs = task_refs(ts);
+                    return s.on_event(*now, SchedEvent::LowPriorityBatch { tasks: &refs, realloc: *r });
+                }
                 Ev::Complete(t) => SchedEvent::Complete { task: *t },
                 Ev::Violation(t) => SchedEvent::Violation { task: *t },
                 Ev::Bw(b) => SchedEvent::BandwidthUpdate { bps: *b },
@@ -245,7 +248,8 @@ fn lp_batch_atomicity_survives_decision_migration() {
                 (0..4).map(|i| Task::low(id + i, id, 0, now, deadline, &cfg)).collect();
             id += 4;
             let live_before = sched.state().len();
-            let d = sched.on_event(now, SchedEvent::LowPriorityBatch { tasks: &batch, realloc: false });
+            let d =
+                sched.on_event(now, SchedEvent::LowPriorityBatch { tasks: &task_refs(&batch), realloc: false });
             match d.outcome {
                 Outcome::LpAllocated { allocs } => {
                     assert_eq!(allocs.len(), 4, "{}: batch is all-or-nothing", sched.name());
