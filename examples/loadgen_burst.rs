@@ -1,0 +1,53 @@
+//! Bursty-overload cookbook run: a Markov-modulated on-off arrival storm
+//! over the heterogeneous edge-serving catalog, with and without an
+//! admission cap, contrasting all three schedulers. The percentile table
+//! is the point — mean latency barely moves under burst, the p99 tail
+//! explodes.
+//!
+//! ```sh
+//! cargo run --release --example loadgen_burst
+//! ```
+
+use medge::config::SystemConfig;
+use medge::metrics::report;
+use medge::scenario::{ScenarioBuilder, SchedKind, Sweep};
+use medge::workload::gen::{ArrivalProcess, Catalog, GenSpec, Workload};
+
+fn main() {
+    let cfg = SystemConfig::default();
+    // ON bursts of ~45 s at 24 arrivals/min — several times the fleet's
+    // stage-3 service capacity — separated by ~90 s of near-silence.
+    let burst = ArrivalProcess::Mmpp {
+        on_rate_per_min: 24.0,
+        off_rate_per_min: 1.0,
+        mean_on_s: 45.0,
+        mean_off_s: 90.0,
+    };
+    let mut sweep = Sweep::new();
+    for kind in [SchedKind::Wps, SchedKind::Ras, SchedKind::Multi] {
+        for (suffix, cap) in [("", 0usize), ("_cap", 24)] {
+            sweep = sweep.add(
+                ScenarioBuilder::new()
+                    .config(cfg.clone())
+                    .scheduler(kind)
+                    .workload(Workload::Generative(GenSpec {
+                        arrivals: burst.clone(),
+                        catalog: Catalog::edge_serving(&cfg),
+                        admission_cap: cap,
+                    }))
+                    .minutes(20.0)
+                    .seed(42)
+                    .named(format!("{}{}", kind.label(), suffix))
+                    .build(),
+            );
+        }
+    }
+    let runs = sweep.run();
+    print!("{}", report::loadgen(&runs));
+    print!("{}", report::percentiles(&runs));
+    println!(
+        "\nReading: 'drops' trades rejected-at-the-door work for a bounded \
+         p99 on what was admitted; the open rows queue everything and pay \
+         for it in the tail."
+    );
+}

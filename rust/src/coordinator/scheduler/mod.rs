@@ -68,9 +68,11 @@ pub type Ops = u64;
 pub enum SchedEvent<'a> {
     /// A high-priority task requests placement (always local to source).
     HighPriority { task: &'a Task },
-    /// A batch of 1–4 low-priority DNN tasks requests placement. The
-    /// request is atomic; `realloc` marks re-entry of preempted tasks
-    /// (tracked separately in the paper's Fig. 4/5).
+    /// A batch of low-priority tasks requests placement atomically (the
+    /// conveyor emits 1–4 per frame; generative workloads emit arbitrary
+    /// class-defined batch sizes). Batch members share one task class —
+    /// same deadline, same per-configuration durations. `realloc` marks
+    /// re-entry of preempted tasks (tracked separately in Fig. 4/5).
     LowPriorityBatch { tasks: &'a [&'a Task], realloc: bool },
     /// A task finished on its device (free its resources).
     Complete { task: TaskId },

@@ -61,8 +61,14 @@ impl WpsScheduler {
         d < self.active.len() && self.active[d]
     }
 
-    fn transfer_time(&self) -> SimDuration {
-        self.cfg.transfer_unit(self.bps)
+    /// Transfer duration for `task`'s actual input at the static
+    /// estimate. The exact baseline is exact about sizes too: a
+    /// half-size class reserves half the window, a double-size class
+    /// double — conveyor tasks carry exactly `image_bytes`, reproducing
+    /// the old fixed unit bit for bit.
+    fn transfer_time_for(&self, task: &Task) -> SimDuration {
+        let s = (task.input_bytes as f64 * 8.0) / self.bps.max(1.0);
+        crate::time::secs(s).max(1)
     }
 
     /// Exact feasibility: does `cores` fit on `device` over `[t1, t2)`?
@@ -158,12 +164,13 @@ impl WpsScheduler {
     }
 
     /// Weighted placement score (lower = better): completion time dominates,
-    /// with a bonus for local placement (no transfer risk) and a penalty
-    /// per core used (keep capacity free) — the "weighted" in WPS.
-    fn score(&self, end: SimTime, local: bool, cores: u32) -> f64 {
+    /// with a bonus for local placement (no transfer risk, sized by the
+    /// transfer this task would otherwise pay) and a penalty per core
+    /// used (keep capacity free) — the "weighted" in WPS.
+    fn score(&self, end: SimTime, local: bool, cores: u32, transfer: SimDuration) -> f64 {
         let mut s = end as f64;
         if local {
-            s -= self.cfg.transfer_unit(self.bps) as f64;
+            s -= transfer as f64;
         }
         s += cores as f64 * 50_000.0;
         s
@@ -194,7 +201,7 @@ impl WpsScheduler {
             // The source device left the fleet: nowhere to run HP work.
             return HpOutcome::Rejected { victims: vec![], ops: 1 };
         }
-        let dur = self.cfg.hp_proc();
+        let dur = task.proc_for(TaskConfig::HighPriority);
         let cores = TaskConfig::HighPriority.cores(&self.cfg);
         let dev = task.source;
         // Exhaustive: earliest exact start within the deadline.
@@ -283,7 +290,7 @@ impl WpsScheduler {
         HpOutcome::Rejected { victims, ops }
     }
 
-    /// Schedule a batch of low-priority DNN tasks (1–4 per request),
+    /// Schedule a batch of low-priority tasks (one shared class per request),
     /// borrowed in place from the caller's storage (no clones).
     /// Legacy-shaped entry point; [`Scheduler::on_event`] dispatches here.
     pub fn schedule_low(&mut self, now: SimTime, tasks: &[&Task], _realloc: bool) -> LpOutcome {
@@ -307,7 +314,10 @@ impl WpsScheduler {
                 if best.is_some() {
                     break; // two-core placement found: stay conservative
                 }
-                let dur = config.proc_time(&self.cfg);
+                // Class-aware stage cost: the task carries its own
+                // per-configuration duration (conveyor tasks carry the
+                // paper's benchmark times — identical arithmetic).
+                let dur = task.proc_for(config);
                 let cores = config.cores(&self.cfg);
                 for device in 0..self.active.len() {
                     if !self.active[device] {
@@ -318,7 +328,7 @@ impl WpsScheduler {
                         (now, None)
                     } else {
                         // Transfer must complete before processing starts.
-                        let t = self.transfer_time();
+                        let t = self.transfer_time_for(task);
                         match self.earliest_comm(now, task.deadline.saturating_sub(dur), t, &mut ops) {
                             Some((c1, c2)) => (c2, Some((c1, c2))),
                             None => continue,
@@ -337,7 +347,7 @@ impl WpsScheduler {
                             offloaded: !local,
                             comm,
                         };
-                        let sc = self.score(alloc.end, local, cores);
+                        let sc = self.score(alloc.end, local, cores, self.transfer_time_for(task));
                         match &best {
                             Some((_, b)) if *b <= sc => {}
                             _ => best = Some((alloc, sc)),

@@ -85,6 +85,13 @@ impl TaskConfig {
 /// A schedulable task as seen by the controller. Plain-old-data and
 /// `Copy`: the simulation hot path passes `&Task` through the scheduler
 /// API and never clones task state per event.
+///
+/// Tasks carry their own per-configuration processing durations
+/// (`proc_us`): the schedulers plan with what the *task* says it costs,
+/// not with a fixed per-system constant. The conveyor workload fills
+/// these from the paper's benchmark times ([`SystemConfig`]), so its
+/// behaviour is unchanged; the generative workload subsystem
+/// ([`crate::workload::gen`]) fills them per [`crate::workload::gen::TaskClass`].
 #[derive(Debug, Clone, Copy)]
 pub struct Task {
     pub id: TaskId,
@@ -98,6 +105,10 @@ pub struct Task {
     pub deadline: SimTime,
     /// Input size in bytes (what an offload must transfer).
     pub input_bytes: u64,
+    /// Per-configuration processing durations in µs:
+    /// `[two-core, four-core]` for low-priority tasks; high-priority
+    /// tasks hold their (single) stage duration in both entries.
+    pub proc_us: [SimDuration; 2],
 }
 
 impl Task {
@@ -110,6 +121,7 @@ impl Task {
             created_at: now,
             deadline: now + cfg.hp_deadline(),
             input_bytes: 0, // HP never offloads, nothing to transfer
+            proc_us: [cfg.hp_proc(); 2],
         }
     }
 
@@ -129,6 +141,41 @@ impl Task {
             created_at: now,
             deadline: frame_deadline,
             input_bytes: cfg.image_bytes,
+            proc_us: [cfg.lp2_proc(), cfg.lp4_proc()],
+        }
+    }
+
+    /// A task of an arbitrary class (generative workloads): explicit
+    /// priority, relative deadline, input size, and per-configuration
+    /// processing durations.
+    #[allow(clippy::too_many_arguments)]
+    pub fn of_class(
+        id: TaskId,
+        frame: FrameId,
+        source: DeviceId,
+        now: SimTime,
+        priority: Priority,
+        deadline_us: SimDuration,
+        input_bytes: u64,
+        proc_us: [SimDuration; 2],
+    ) -> Self {
+        Self {
+            id,
+            frame,
+            source,
+            priority,
+            created_at: now,
+            deadline: now + deadline_us,
+            input_bytes: if priority == Priority::High { 0 } else { input_bytes },
+            proc_us,
+        }
+    }
+
+    /// Planned processing duration under `config` (µs).
+    pub fn proc_for(&self, config: TaskConfig) -> SimDuration {
+        match config {
+            TaskConfig::HighPriority | TaskConfig::LowTwoCore => self.proc_us[0],
+            TaskConfig::LowFourCore => self.proc_us[1],
         }
     }
 
@@ -214,6 +261,25 @@ mod tests {
         assert!(a.overlaps(199, 500));
         assert!(!a.overlaps(200, 300)); // half-open: end not included
         assert!(!a.overlaps(0, 100));
+    }
+
+    #[test]
+    fn tasks_carry_class_processing_times() {
+        let c = cfg();
+        let hp = Task::high(1, 1, 0, 0, &c);
+        assert_eq!(hp.proc_for(TaskConfig::HighPriority), c.hp_proc());
+        let lp = Task::low(2, 1, 0, 0, c.frame_period(), &c);
+        assert_eq!(lp.proc_for(TaskConfig::LowTwoCore), c.lp2_proc());
+        assert_eq!(lp.proc_for(TaskConfig::LowFourCore), c.lp4_proc());
+        // A custom class overrides every per-system constant.
+        let t = Task::of_class(3, 1, 2, 1000, Priority::Low, 5_000_000, 42_000, [400_000, 250_000]);
+        assert_eq!(t.deadline, 1000 + 5_000_000);
+        assert_eq!(t.input_bytes, 42_000);
+        assert_eq!(t.proc_for(TaskConfig::LowTwoCore), 400_000);
+        assert_eq!(t.proc_for(TaskConfig::LowFourCore), 250_000);
+        // HP classes never offload: input is forced to zero.
+        let h = Task::of_class(4, 1, 2, 0, Priority::High, 1_000_000, 9_999, [300_000; 2]);
+        assert_eq!(h.input_bytes, 0);
     }
 
     #[test]

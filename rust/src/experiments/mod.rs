@@ -12,6 +12,7 @@ pub mod hotpath;
 use crate::config::SystemConfig;
 use crate::metrics::Metrics;
 use crate::scenario::{Scenario, ScenarioBuilder, Sweep};
+use crate::workload::gen::{ArrivalProcess, Catalog, GenSpec, Workload};
 use crate::workload::trace::TraceSpec;
 
 pub use crate::scenario::SchedKind;
@@ -105,6 +106,54 @@ pub fn ablation_multi(cfg: &SystemConfig, minutes: f64) -> Vec<Metrics> {
     weighted_grid(cfg, &[SchedKind::Wps, SchedKind::Ras, SchedKind::Multi], minutes).run()
 }
 
+/// The default open-loop processes `medge loadgen` sweeps: a steady
+/// Poisson stream and a bursty MMPP whose ON-state rate is well past the
+/// fleet's service capacity (the "high-volume workload" regime).
+pub fn default_loadgen_processes() -> Vec<ArrivalProcess> {
+    vec![
+        ArrivalProcess::Poisson { rate_per_min: 6.0 },
+        ArrivalProcess::Mmpp {
+            on_rate_per_min: 24.0,
+            off_rate_per_min: 1.0,
+            mean_on_s: 45.0,
+            mean_off_s: 90.0,
+        },
+    ]
+}
+
+/// Generative-workload grid: schedulers × arrival processes over the
+/// heterogeneous edge-serving catalog, as a parallel sweep. `cap` is the
+/// admission control bound (0 = open admission). Rows are labelled
+/// `KIND_process` (`RAS_poisson6`, `WPS_mmpp24`, …).
+pub fn loadgen_grid(
+    cfg: &SystemConfig,
+    kinds: &[SchedKind],
+    procs: &[ArrivalProcess],
+    minutes: f64,
+    cap: usize,
+) -> Sweep {
+    let catalog = Catalog::edge_serving(cfg);
+    let mut sweep = Sweep::new();
+    for proc in procs {
+        for &kind in kinds {
+            sweep = sweep.add(
+                ScenarioBuilder::new()
+                    .config(cfg.clone())
+                    .scheduler(kind)
+                    .workload(Workload::Generative(GenSpec {
+                        arrivals: proc.clone(),
+                        catalog: catalog.clone(),
+                        admission_cap: cap,
+                    }))
+                    .minutes(minutes)
+                    .named(format!("{}_{}", kind.label(), proc.label()))
+                    .build(),
+            );
+        }
+    }
+    sweep
+}
+
 /// Fault-stress grid (beyond the paper): each scheduler on the weighted-4
 /// load, clean vs faulted (5% packet loss, 25% probe loss, the last
 /// device crashing at 30% and recovering at 55% of the run) — the
@@ -186,6 +235,21 @@ mod tests {
         assert_eq!(runs[0].retransmitted_mbits, 0.0);
         assert_eq!(runs[1].device_crashes, 1);
         assert!(runs[1].retransmitted_mbits > 0.0);
+    }
+
+    #[test]
+    fn loadgen_grid_labels_and_offers_load() {
+        let kinds = [SchedKind::Wps, SchedKind::Ras];
+        let procs = default_loadgen_processes();
+        let rows = loadgen_grid(&small_cfg(), &kinds, &procs, 4.0, 0).run();
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0].label, "WPS_poisson6");
+        assert_eq!(rows[3].label, "RAS_mmpp24");
+        for m in &rows {
+            assert!(m.gen_arrivals > 0, "{}: no arrivals fired", m.label);
+            assert!(m.offered_tasks > 0);
+            assert_eq!(m.admission_dropped, 0, "{}: open admission must not drop", m.label);
+        }
     }
 
     #[test]

@@ -37,6 +37,15 @@
 //! (re-offered to the scheduler), and probe failure — turning the
 //! happy-path reproduction into a robustness testbed.
 //!
+//! The [`workload::gen`] subsystem decouples load from the conveyor frame
+//! clock: seeded arrival processes (Poisson, bursty MMPP, diurnal,
+//! closed-loop) × a task-class catalog (per-class priority, deadline,
+//! input size, per-stage cost, mix weights) compile into an open-loop
+//! arrival plan the engine executes with offered-load and admission-drop
+//! accounting — `ScenarioBuilder::workload(...)` and `medge loadgen` are
+//! the entry points, and the conveyor trace is just the axis's default
+//! value ([`workload::gen::Workload::Conveyor`], byte-identical replay).
+//!
 //! The simulation hot path is allocation-free and index-based in steady
 //! state: engine tasks live in a generational slab ([`util::slab`],
 //! placement staleness folded into the slot generation), the shared

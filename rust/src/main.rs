@@ -44,6 +44,15 @@ COMMANDS:
            --scheds wps,ras[,multi] --loads 1,2,3,4 --threads N
            --json PATH (export rows)  --churn (device 3 leaves/rejoins)
            --faults (add a faulted twin of every scenario)
+  loadgen  Generative-workload sweep (schedulers × arrival processes over
+           the heterogeneous edge-serving task catalog): offered load,
+           admission drops, latency percentiles per priority class.
+           --scheds wps,ras,multi  --procs SPEC[,SPEC...]  --cap N
+           --threads N  --json PATH
+           SPEC: poisson:RATE | mmpp:ON:OFF:MEAN_ON_S:MEAN_OFF_S
+                 | diurnal:BASE:AMPLITUDE:PERIOD_S | closed:USERS:THINK_S
+           (rates are arrivals/minute; default procs: poisson:6 and a
+           bursty mmpp:24:1:45:90)
   bench    Hot-path micro/macro benchmark suite (slab vs hashmap,
            incremental vs rescanning medium, engine event rate,
            steady-state allocs/event, end-to-end sweep):
@@ -57,10 +66,13 @@ OPTIONS:
   --minutes F   simulated experiment duration in minutes (default 30)
   --seed N      RNG seed (traces, shuffles, probe hosts, bursts)
   --config P    key-value config file overriding the paper defaults
-  --scheds L    sweep: comma list of schedulers (default wps,ras)
+  --scheds L    sweep/loadgen: comma list of schedulers (default wps,ras;
+                loadgen defaults to wps,ras,multi)
   --loads L     sweep: comma list of weighted loads 1..4 (default 1,2,3,4)
-  --threads N   sweep: worker threads (default: available parallelism)
-  --json P      sweep: write the metric rows as a JSON array to P
+  --procs L     loadgen: comma list of arrival-process specs
+  --cap N       loadgen: admission cap on in-flight tasks (default 0 = open)
+  --threads N   sweep/loadgen: worker threads (default: available parallelism)
+  --json P      sweep/loadgen: write the metric rows as a JSON array to P
   --churn       sweep: device 3 leaves at 25% and rejoins at 60% of the run
   --faults      sweep: add a faulted twin of every scenario (suffix F):
                 5% packet loss, 25% probe loss, and device 0 crashing
@@ -75,8 +87,12 @@ struct Args {
     spec: String,
     frames: usize,
     out: Option<std::path::PathBuf>,
-    scheds: String,
+    /// None = the subcommand's own default (sweep: wps,ras;
+    /// loadgen: wps,ras,multi) — an explicit flag is never overridden.
+    scheds: Option<String>,
     loads: String,
+    procs: Option<String>,
+    cap: usize,
     threads: Option<usize>,
     json: Option<std::path::PathBuf>,
     /// `--json` was passed (with or without a path) — `bench` writes its
@@ -96,8 +112,10 @@ fn parse_args() -> anyhow::Result<Args> {
         spec: "weighted4".to_string(),
         frames: 96,
         out: None,
-        scheds: "wps,ras".to_string(),
+        scheds: None,
         loads: "1,2,3,4".to_string(),
+        procs: None,
+        cap: 0,
         threads: None,
         json: None,
         json_flag: false,
@@ -120,8 +138,10 @@ fn parse_args() -> anyhow::Result<Args> {
             "--spec" => args.spec = value(&mut it, "--spec")?,
             "--frames" => args.frames = value(&mut it, "--frames")?.parse()?,
             "--out" => args.out = Some(value(&mut it, "--out")?.into()),
-            "--scheds" => args.scheds = value(&mut it, "--scheds")?,
+            "--scheds" => args.scheds = Some(value(&mut it, "--scheds")?),
             "--loads" => args.loads = value(&mut it, "--loads")?,
+            "--procs" => args.procs = Some(value(&mut it, "--procs")?),
+            "--cap" => args.cap = value(&mut it, "--cap")?.parse()?,
             "--threads" => args.threads = Some(value(&mut it, "--threads")?.parse()?),
             "--json" => {
                 // Path is optional for `bench` (defaults to the repo-root
@@ -156,6 +176,8 @@ fn parse_args() -> anyhow::Result<Args> {
 fn build_sweep(cfg: &SystemConfig, args: &Args) -> anyhow::Result<Sweep> {
     let kinds: Vec<SchedKind> = args
         .scheds
+        .as_deref()
+        .unwrap_or("wps,ras")
         .split(',')
         .filter(|s| !s.is_empty())
         .map(SchedKind::parse)
@@ -312,6 +334,50 @@ fn main() -> anyhow::Result<()> {
             if args.faults {
                 print!("{}", report::faults(&runs));
             }
+            if let Some(path) = &args.json {
+                std::fs::write(path, report::json_rows(&runs))?;
+                println!("\nwrote {} JSON rows to {}", runs.len(), path.display());
+            }
+        }
+        "loadgen" => {
+            anyhow::ensure!(
+                !(args.json_flag && args.json.is_none()),
+                "loadgen --json needs a PATH"
+            );
+            // All three schedulers by default: the acceptance sweep
+            // contrasts the abstraction models under open-loop load. An
+            // explicit --scheds always wins.
+            let kinds: Vec<SchedKind> = args
+                .scheds
+                .as_deref()
+                .unwrap_or("wps,ras,multi")
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(SchedKind::parse)
+                .collect::<anyhow::Result<_>>()?;
+            let procs: Vec<medge::workload::gen::ArrivalProcess> = match &args.procs {
+                Some(list) => list
+                    .split(',')
+                    .filter(|s| !s.is_empty())
+                    .map(medge::workload::gen::ArrivalProcess::parse)
+                    .collect::<anyhow::Result<_>>()?,
+                None => experiments::default_loadgen_processes(),
+            };
+            anyhow::ensure!(!kinds.is_empty() && !procs.is_empty(), "empty loadgen grid");
+            let mut sweep = experiments::loadgen_grid(&cfg, &kinds, &procs, minutes, args.cap);
+            if let Some(t) = args.threads {
+                sweep = sweep.threads(t);
+            }
+            eprintln!(
+                "loadgen: {} scenarios × {:.1} simulated minutes (cap {})",
+                sweep.len(),
+                minutes,
+                if args.cap == 0 { "open".to_string() } else { args.cap.to_string() }
+            );
+            let runs = sweep.run();
+            print!("{}", report::loadgen(&runs));
+            print!("{}", report::fig4(&runs));
+            print!("{}", report::percentiles(&runs));
             if let Some(path) = &args.json {
                 std::fs::write(path, report::json_rows(&runs))?;
                 println!("\nwrote {} JSON rows to {}", runs.len(), path.display());

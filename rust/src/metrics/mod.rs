@@ -8,15 +8,51 @@
 pub mod report;
 
 
+use std::collections::BTreeMap;
+
 use crate::time::{as_millis, SimDuration};
 
-/// Streaming latency statistics (count / mean / min / max), in µs.
+/// Log-linear sub-bucket bits: each power-of-two octave splits into
+/// 2^SUB = 16 sub-buckets, bounding the relative quantile error at
+/// 1/16 ≈ 6 % (values below 2^(SUB+1) are exact).
+const SUB: u32 = 4;
+
+/// Bucket index for a µs value (HDR-style log-linear).
+fn bucket_of(v: u64) -> u32 {
+    let linear_max = 1u64 << (SUB + 1); // 32: exact region
+    if v < linear_max {
+        return v as u32;
+    }
+    let msb = 63 - v.leading_zeros(); // ≥ SUB + 1
+    let sub = ((v >> (msb - SUB)) & ((1 << SUB) - 1)) as u32;
+    linear_max as u32 + (msb - SUB - 1) * (1 << SUB) + sub
+}
+
+/// Representative (midpoint) µs value of a bucket.
+fn bucket_value(b: u32) -> u64 {
+    let linear_max = 1u32 << (SUB + 1);
+    if b < linear_max {
+        return b as u64;
+    }
+    let rel = b - linear_max;
+    let octave = rel / (1 << SUB) + SUB + 1;
+    let sub = (rel % (1 << SUB)) as u64;
+    let width = 1u64 << (octave - SUB);
+    (1u64 << octave) + sub * width + width / 2
+}
+
+/// Streaming latency statistics, in µs: count / mean / min / max plus a
+/// sparse log-linear histogram for tail quantiles (p50/p95/p99 within
+/// ≈6 % relative error) — means alone hide tail behaviour under bursty
+/// arrivals.
 #[derive(Debug, Clone, Default)]
 pub struct LatencyStat {
     pub count: u64,
     pub sum_us: u64,
     pub min_us: u64,
     pub max_us: u64,
+    /// bucket index → count (sparse; deterministic iteration order).
+    hist: BTreeMap<u32, u64>,
 }
 
 impl LatencyStat {
@@ -30,6 +66,7 @@ impl LatencyStat {
         }
         self.count += 1;
         self.sum_us += lat;
+        *self.hist.entry(bucket_of(lat)).or_insert(0) += 1;
     }
 
     pub fn mean_ms(&self) -> f64 {
@@ -41,6 +78,36 @@ impl LatencyStat {
 
     pub fn max_ms(&self) -> f64 {
         as_millis(self.max_us)
+    }
+
+    /// Nearest-rank quantile in µs, `q` in [0, 1]. Exact below 32 µs,
+    /// within ≈6 % relative error above; clamped to the observed
+    /// min/max so p0/p100 are exact.
+    pub fn percentile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (&b, &c) in &self.hist {
+            seen += c;
+            if seen >= rank {
+                return bucket_value(b).clamp(self.min_us, self.max_us);
+            }
+        }
+        self.max_us
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        as_millis(self.percentile_us(0.50))
+    }
+
+    pub fn p95_ms(&self) -> f64 {
+        as_millis(self.percentile_us(0.95))
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        as_millis(self.percentile_us(0.99))
     }
 }
 
@@ -84,6 +151,24 @@ pub struct Metrics {
     pub lat_hp_preempt: LatencyStat,
     pub lat_lp_alloc: LatencyStat,
     pub lat_lp_realloc: LatencyStat,
+
+    // ---- end-to-end latency per priority class (arrival → completion;
+    // percentiles expose the tail under bursty arrivals) ----
+    pub lat_hp_e2e: LatencyStat,
+    pub lat_lp_e2e: LatencyStat,
+
+    // ---- generative workload (zero for trace-only runs) ----
+    /// Arrival events fired from a compiled generative plan.
+    pub gen_arrivals: u64,
+    /// Tasks the generator offered (before admission control).
+    pub offered_tasks: u64,
+    /// Input megabits the offered tasks would transfer on offload.
+    pub offered_mbits: f64,
+    /// Offered tasks dropped at admission (in-flight cap exceeded).
+    pub admission_dropped: u64,
+    /// Offered tasks dropped because their source device was out of the
+    /// fleet at arrival (churn/crash outage) — distinct from cap drops.
+    pub offline_dropped: u64,
 
     // ---- core allocation mix (Table II) ----
     pub two_core_allocs: u64,
@@ -162,6 +247,14 @@ impl Metrics {
         self.offloaded_completed as f64 / self.offloaded_total as f64
     }
 
+    /// Fraction of offered tasks dropped at admission, in [0, 1].
+    pub fn admission_drop_rate(&self) -> f64 {
+        if self.offered_tasks == 0 {
+            return 0.0;
+        }
+        self.admission_dropped as f64 / self.offered_tasks as f64
+    }
+
     /// Table II row: fraction of successful LP allocations per core config.
     pub fn core_mix(&self) -> (f64, f64) {
         let total = (self.two_core_allocs + self.four_core_allocs) as f64;
@@ -189,6 +282,52 @@ mod tests {
         assert_eq!(s.min_us, 1000);
         assert_eq!(s.max_us, 3000);
         assert!((s.mean_ms() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles_are_ordered_and_accurate() {
+        let mut s = LatencyStat::default();
+        // 1..=1000 ms in µs: exact quantiles are 500/950/990 ms.
+        for v in 1..=1000u64 {
+            s.record(v * 1000);
+        }
+        let (p50, p95, p99) = (s.p50_ms(), s.p95_ms(), s.p99_ms());
+        assert!(p50 <= p95 && p95 <= p99 && p99 <= s.max_ms());
+        assert!((p50 - 500.0).abs() / 500.0 < 0.07, "p50 {p50}");
+        assert!((p95 - 950.0).abs() / 950.0 < 0.07, "p95 {p95}");
+        assert!((p99 - 990.0).abs() / 990.0 < 0.07, "p99 {p99}");
+        // Small exact region: values < 32 µs come back exactly.
+        let mut t = LatencyStat::default();
+        for v in [3u64, 7, 9, 31] {
+            t.record(v);
+        }
+        assert_eq!(t.percentile_us(0.5), 7);
+        assert_eq!(t.percentile_us(1.0), 31);
+        assert_eq!(t.percentile_us(0.0), 3);
+        // Empty stat: everything is zero, nothing panics.
+        assert_eq!(LatencyStat::default().percentile_us(0.99), 0);
+    }
+
+    #[test]
+    fn percentiles_expose_a_tail_the_mean_hides() {
+        // 99 fast samples + 1 slow one: the mean barely moves, p99 jumps.
+        let mut s = LatencyStat::default();
+        for _ in 0..99 {
+            s.record(10_000); // 10 ms
+        }
+        s.record(2_000_000); // one 2 s straggler
+        assert!(s.mean_ms() < 40.0);
+        assert!(s.p50_ms() < 12.0);
+        assert!(s.p99_ms() > 1500.0, "p99 {} must surface the straggler", s.p99_ms());
+    }
+
+    #[test]
+    fn admission_drop_rate_guards_zero() {
+        let mut m = Metrics::new("g");
+        assert_eq!(m.admission_drop_rate(), 0.0);
+        m.offered_tasks = 200;
+        m.admission_dropped = 50;
+        assert!((m.admission_drop_rate() - 0.25).abs() < 1e-12);
     }
 
     #[test]

@@ -185,6 +185,56 @@ pub fn faults(runs: &[Metrics]) -> String {
     s
 }
 
+/// Latency percentiles per priority class — scheduling and end-to-end,
+/// p50/p95/p99 in ms. Means alone hide the tail under bursty arrivals;
+/// this is the table that shows it.
+pub fn percentiles(runs: &[Metrics]) -> String {
+    let mut s = header("Latency percentiles (ms) — p50 / p95 / p99 per priority class");
+    s += &format!(
+        "{:<12} {:>24} {:>24} {:>26} {:>26}\n",
+        "scenario", "hp_sched", "lp_sched", "hp_e2e", "lp_e2e",
+    );
+    let trio = |l: &LatencyStat| format!("{:.1}/{:.1}/{:.1}", l.p50_ms(), l.p95_ms(), l.p99_ms());
+    for m in runs {
+        s += &format!(
+            "{:<12} {:>24} {:>24} {:>26} {:>26}\n",
+            m.label,
+            trio(&m.lat_hp_alloc),
+            trio(&m.lat_lp_alloc),
+            trio(&m.lat_hp_e2e),
+            trio(&m.lat_lp_e2e),
+        );
+    }
+    s
+}
+
+/// Generative-workload summary — offered load, admission drops, and the
+/// completion headline (all zero on trace-only runs).
+pub fn loadgen(runs: &[Metrics]) -> String {
+    let mut s = header("Loadgen — offered load and admission accounting");
+    s += &format!(
+        "{:<12} {:>8} {:>9} {:>11} {:>7} {:>7} | {:>7} {:>6} {:>6} {:>8}\n",
+        "scenario", "arrivals", "offered", "offered_Mb", "drops", "drop%",
+        "units", "done", "rate%", "lp_viol",
+    );
+    for m in runs {
+        s += &format!(
+            "{:<12} {:>8} {:>9} {:>11.1} {:>7} {:>7.1} | {:>7} {:>6} {:>6.1} {:>8}\n",
+            m.label,
+            m.gen_arrivals,
+            m.offered_tasks,
+            m.offered_mbits,
+            m.admission_dropped,
+            m.admission_drop_rate() * 100.0,
+            m.frames_total,
+            m.frames_completed,
+            m.frame_completion_rate() * 100.0,
+            m.lp_violations,
+        );
+    }
+    s
+}
+
 fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     for c in s.chars() {
@@ -212,9 +262,13 @@ fn json_f64(v: f64) -> String {
 
 fn json_latency(s: &LatencyStat) -> String {
     format!(
-        "{{\"count\": {}, \"mean_ms\": {}, \"max_ms\": {}}}",
+        "{{\"count\": {}, \"mean_ms\": {}, \"p50_ms\": {}, \"p95_ms\": {}, \
+         \"p99_ms\": {}, \"max_ms\": {}}}",
         s.count,
         json_f64(s.mean_ms()),
+        json_f64(s.p50_ms()),
+        json_f64(s.p95_ms()),
+        json_f64(s.p99_ms()),
         json_f64(s.max_ms())
     )
 }
@@ -247,6 +301,13 @@ pub fn json_row(m: &Metrics) -> String {
     f.push(format!("\"lat_hp_preempt\": {}", json_latency(&m.lat_hp_preempt)));
     f.push(format!("\"lat_lp_alloc\": {}", json_latency(&m.lat_lp_alloc)));
     f.push(format!("\"lat_lp_realloc\": {}", json_latency(&m.lat_lp_realloc)));
+    f.push(format!("\"lat_hp_e2e\": {}", json_latency(&m.lat_hp_e2e)));
+    f.push(format!("\"lat_lp_e2e\": {}", json_latency(&m.lat_lp_e2e)));
+    f.push(format!("\"gen_arrivals\": {}", m.gen_arrivals));
+    f.push(format!("\"offered_tasks\": {}", m.offered_tasks));
+    f.push(format!("\"offered_mbits\": {}", json_f64(m.offered_mbits)));
+    f.push(format!("\"admission_dropped\": {}", m.admission_dropped));
+    f.push(format!("\"offline_dropped\": {}", m.offline_dropped));
     f.push(format!("\"two_core_allocs\": {}", m.two_core_allocs));
     f.push(format!("\"four_core_allocs\": {}", m.four_core_allocs));
     f.push(format!("\"churn_joins\": {}", m.churn_joins));
@@ -325,6 +386,25 @@ mod tests {
     }
 
     #[test]
+    fn percentile_and_loadgen_tables_render() {
+        let mut m = sample("RAS_poisson6");
+        for v in [5_000u64, 50_000, 900_000] {
+            m.lat_lp_e2e.record(v);
+        }
+        m.gen_arrivals = 40;
+        m.offered_tasks = 120;
+        m.offered_mbits = 880.0;
+        m.admission_dropped = 30;
+        let p = percentiles(&[m.clone()]);
+        assert!(p.contains("RAS_poisson6"));
+        assert!(p.contains("p50 / p95 / p99"));
+        let l = loadgen(&[m]);
+        assert!(l.contains("offered_Mb"));
+        assert!(l.contains("120"));
+        assert!(l.contains("25.0"), "drop rate column: {l}");
+    }
+
+    #[test]
     fn faults_table_renders_counters() {
         let mut m = sample("RAS_4F");
         m.device_crashes = 2;
@@ -351,6 +431,11 @@ mod tests {
         assert!(j.contains("\"frames_total\": 100"));
         assert!(j.contains("\"frame_completion_rate\": 0.73"));
         assert!(j.contains("\"lat_hp_alloc\": {\"count\": 1, \"mean_ms\": 1.2"));
+        assert!(j.contains("\"p95_ms\":"));
+        assert!(j.contains("\"lat_lp_e2e\":"));
+        assert!(j.contains("\"offered_tasks\": 0"));
+        assert!(j.contains("\"admission_dropped\": 0"));
+        assert!(j.contains("\"offline_dropped\": 0"));
         assert!(j.contains("\"reject_reasons\": [0, 0, 0, 0]"));
         assert!(j.contains("\"device_crashes\": 0"));
         assert!(j.contains("\"crash_recovered_in_deadline\": 0"));

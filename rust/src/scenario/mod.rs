@@ -51,6 +51,7 @@ use crate::metrics::Metrics;
 use crate::sim::engine::RunExtras;
 use crate::sim::Engine;
 use crate::time::secs;
+use crate::workload::gen::Workload;
 use crate::workload::trace::{Trace, TraceSpec};
 
 /// Number of trace frames in a wall-clock experiment duration (the single
@@ -106,7 +107,11 @@ pub struct Scenario {
     pub name: String,
     pub cfg: SystemConfig,
     pub kind: SchedKind,
+    /// Conveyor trace distribution (the default [`Workload::Conveyor`]
+    /// axis value; retained for generative scenarios but unused there).
     pub spec: TraceSpec,
+    /// The workload axis this scenario was built from.
+    pub workload: Workload,
     pub frames: usize,
     pub extras: RunExtras,
     pub trace: std::sync::Arc<Trace>,
@@ -140,6 +145,7 @@ pub struct ScenarioBuilder {
     cfg: SystemConfig,
     kind: SchedKind,
     spec: TraceSpec,
+    workload: Workload,
     frames: Option<usize>,
     minutes: f64,
     extras: RunExtras,
@@ -159,6 +165,7 @@ impl ScenarioBuilder {
             cfg: SystemConfig::default(),
             kind: SchedKind::Ras,
             spec: TraceSpec::Weighted(4),
+            workload: Workload::Conveyor(TraceSpec::Weighted(4)),
             frames: None,
             minutes: 30.0,
             extras: RunExtras::default(),
@@ -183,8 +190,22 @@ impl ScenarioBuilder {
         self
     }
 
+    /// The conveyor-belt trace workload (shorthand for
+    /// `.workload(Workload::Conveyor(spec))` — the two are one axis).
     pub fn trace(mut self, spec: TraceSpec) -> Self {
         self.spec = spec;
+        self.workload = Workload::Conveyor(spec);
+        self
+    }
+
+    /// The workload axis: the conveyor trace or a generative
+    /// (arrival-process × task-class-catalog) spec. See
+    /// [`crate::workload::gen`].
+    pub fn workload(mut self, w: Workload) -> Self {
+        if let Workload::Conveyor(spec) = &w {
+            self.spec = *spec;
+        }
+        self.workload = w;
         self
     }
 
@@ -302,20 +323,57 @@ impl ScenarioBuilder {
         self
     }
 
-    /// Freeze into a runnable [`Scenario`]. The fault plan compiles here:
-    /// the random-fault process expands over the run horizon from the
-    /// scenario seed (never ambient randomness), so the frozen scenario
-    /// is fully deterministic.
+    /// Freeze into a runnable [`Scenario`]. Everything time-varying
+    /// compiles here — the fault plan *and* the generative arrival plan
+    /// both expand over the run horizon from the scenario seed (never
+    /// ambient randomness), so the frozen scenario is fully
+    /// deterministic. A conveyor workload compiles to exactly the
+    /// pre-generative construction: same trace allocation, same events,
+    /// byte-identical runs.
+    ///
+    /// # Panics
+    ///
+    /// On a generative workload whose catalog fails validation (empty,
+    /// zero weights, inverted stage times) — a programming error in the
+    /// scenario definition, not a runtime condition.
     pub fn build(self) -> Scenario {
-        let frames = self.frames.unwrap_or_else(|| frames_for_minutes(&self.cfg, self.minutes));
+        let (frames, horizon_s, gen) = match &self.workload {
+            Workload::Conveyor(_) => {
+                let frames =
+                    self.frames.unwrap_or_else(|| frames_for_minutes(&self.cfg, self.minutes));
+                (frames, frames as f64 * self.cfg.frame_period_s, None)
+            }
+            Workload::Generative(g) => {
+                // Horizon: explicit frame count (frame-period equivalents)
+                // or wall-clock minutes; the trace stays empty — arrivals
+                // are the only load source.
+                let horizon_s = match self.frames {
+                    Some(f) => f as f64 * self.cfg.frame_period_s,
+                    None => self.minutes * 60.0,
+                };
+                let gen = g
+                    .compile(&self.cfg, secs(horizon_s))
+                    .expect("generative workload failed to compile");
+                (0, horizon_s, Some(gen))
+            }
+        };
         let name = self
             .name
-            .unwrap_or_else(|| format!("{}_{}", self.kind.label(), self.spec.label()));
+            .unwrap_or_else(|| format!("{}_{}", self.kind.label(), self.workload.label()));
         let mut extras = self.extras;
-        let horizon_s = frames as f64 * self.cfg.frame_period_s;
+        extras.gen = gen;
         self.plan.compile_into(&mut extras, self.cfg.seed, self.cfg.n_devices, horizon_s);
         let trace = Trace::shared(self.spec, self.cfg.n_devices, frames, self.cfg.seed);
-        Scenario { name, cfg: self.cfg, kind: self.kind, spec: self.spec, frames, extras, trace }
+        Scenario {
+            name,
+            cfg: self.cfg,
+            kind: self.kind,
+            spec: self.spec,
+            workload: self.workload,
+            frames,
+            extras,
+            trace,
+        }
     }
 }
 
@@ -469,6 +527,94 @@ mod tests {
             assert_eq!(p.label, format!("row{i}"));
             assert_eq!(format!("{p:?}"), format!("{q:?}"), "row {i} differs");
         }
+    }
+
+    #[test]
+    fn trace_and_conveyor_workload_are_one_axis() {
+        // `.trace(spec)` is sugar for `.workload(Workload::Conveyor(spec))`:
+        // both must freeze to identical scenarios (same trace allocation)
+        // and identical runs.
+        let via_trace = ScenarioBuilder::new()
+            .scheduler(SchedKind::Wps)
+            .trace(TraceSpec::Weighted(3))
+            .frames(10)
+            .seed(19)
+            .build();
+        let via_workload = ScenarioBuilder::new()
+            .scheduler(SchedKind::Wps)
+            .workload(Workload::conveyor(TraceSpec::Weighted(3)))
+            .frames(10)
+            .seed(19)
+            .build();
+        assert_eq!(via_trace.name, via_workload.name);
+        assert_eq!(via_trace.spec, via_workload.spec);
+        assert!(std::sync::Arc::ptr_eq(&via_trace.trace, &via_workload.trace));
+        assert!(via_workload.extras.gen.is_none());
+        assert_eq!(format!("{:?}", via_trace.run()), format!("{:?}", via_workload.run()));
+    }
+
+    #[test]
+    fn generative_scenario_compiles_and_runs_deterministically() {
+        use crate::workload::gen::{ArrivalProcess, Catalog};
+        let build = || {
+            ScenarioBuilder::new()
+                .scheduler(SchedKind::Ras)
+                .workload(Workload::generative(
+                    ArrivalProcess::Poisson { rate_per_min: 10.0 },
+                    Catalog::edge_serving(&SystemConfig::default()),
+                ))
+                .minutes(6.0)
+                .seed(77)
+                .build()
+        };
+        let s = build();
+        assert_eq!(s.frames, 0, "generative scenarios carry no conveyor frames");
+        assert_eq!(s.name, "RAS_poisson10");
+        let gen = s.extras.gen.as_ref().expect("compiled plan");
+        assert!(!gen.arrivals.is_empty());
+        let (a, b) = (s.run(), build().run());
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        assert!(a.gen_arrivals > 0);
+        assert_eq!(a.offered_tasks, gen.offered_tasks());
+        assert!(a.frames_total > 0, "arrivals must open pipeline units");
+        // The conveyor counters stay closed over the generative path.
+        assert_eq!(
+            a.two_core_allocs + a.four_core_allocs,
+            a.lp_allocated_initial + a.lp_realloc_success
+        );
+    }
+
+    #[test]
+    fn admission_cap_drops_offered_load() {
+        use crate::workload::gen::{ArrivalProcess, Catalog};
+        let cfg = SystemConfig::default();
+        let burst = ArrivalProcess::Mmpp {
+            on_rate_per_min: 120.0,
+            off_rate_per_min: 0.0,
+            mean_on_s: 30.0,
+            mean_off_s: 30.0,
+        };
+        let run = |cap: usize| {
+            ScenarioBuilder::new()
+                .scheduler(SchedKind::Ras)
+                .workload(Workload::Generative(
+                    crate::workload::gen::GenSpec {
+                        arrivals: burst.clone(),
+                        catalog: Catalog::edge_serving(&cfg),
+                        admission_cap: cap,
+                    },
+                ))
+                .minutes(5.0)
+                .seed(23)
+                .build()
+                .run()
+        };
+        let open = run(0);
+        let capped = run(6);
+        assert_eq!(open.admission_dropped, 0, "no cap ⇒ no admission drops");
+        assert!(capped.admission_dropped > 0, "a tight cap under burst must drop");
+        assert_eq!(open.offered_tasks, capped.offered_tasks, "offered load is pre-admission");
+        assert!(capped.frames_total < open.frames_total);
     }
 
     #[test]

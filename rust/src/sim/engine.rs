@@ -34,7 +34,8 @@
 //!   a [`SlotRef`] that simply stops resolving.
 //! * Frame state is a dense vector indexed by `FrameId` (frame ids are
 //!   `row × n_devices + device` by construction).
-//! * Batch events carry ids inline ([`IdBatch`]), scheduler dispatch
+//! * Batch events carry ids inline up to [`IdBatch::INLINE`] (spilling to
+//!   the heap only for larger generative batches), scheduler dispatch
 //!   borrows `&Task` straight out of the slab (stack array of refs), and
 //!   the probe/orphan scans reuse scratch buffers held on the engine.
 //!
@@ -54,6 +55,7 @@ use crate::sim::netsim::{FlowId, LossyMedium, Medium, PROBE_FLOW_BASE};
 use crate::time::{SimDuration, SimTime};
 use crate::util::slab::{Slab, SlotRef};
 use crate::util::Rng;
+use crate::workload::gen::GenWorkload;
 use crate::workload::trace::Trace;
 
 /// Scenario-level extras beyond the paper's fixed homogeneous testbed.
@@ -81,6 +83,11 @@ pub struct RunExtras {
     pub loss_rate: f64,
     /// Per-ping loss probability on probe rounds (partial/empty rounds).
     pub probe_loss: f64,
+    /// Compiled generative workload ([`crate::workload::gen`]): arrival
+    /// events independent of the conveyor frame clock. Composes with a
+    /// trace (both feed the same queue); `None` leaves the paper's
+    /// trace-only path untouched.
+    pub gen: Option<GenWorkload>,
 }
 
 /// Runtime state of a placed task. Staleness is carried by the slab
@@ -168,6 +175,8 @@ pub struct Engine {
     scratch_devices: Vec<DeviceId>,
     /// Scratch: crash orphan collection (reused per crash).
     scratch_orphans: Vec<(TaskId, FrameId)>,
+    /// Compiled generative workload (None for trace-only runs).
+    gen: Option<GenWorkload>,
 }
 
 impl Engine {
@@ -235,6 +244,19 @@ impl Engine {
             };
             queue.push(at, ev);
         }
+        // Generative workload: only the plan's head enters the queue —
+        // each fired arrival chains the next (the plan is time-sorted),
+        // so the queue stays O(live events) instead of holding millions
+        // of pending arrivals up front. The input horizon stretches to
+        // cover the plan so probes/traffic keep running until the last
+        // arrival.
+        let mut end_of_input = end_of_input;
+        if let Some(gen) = &extras.gen {
+            if let Some(first) = gen.arrivals.first() {
+                queue.push(first.at, Event::GenArrive { index: 0 });
+            }
+            end_of_input = end_of_input.max(gen.last_arrival() + cfg.frame_period());
+        }
         let mut device_speed = extras.device_speed;
         if device_speed.len() < cfg.n_devices {
             device_speed.resize(cfg.n_devices, 1.0);
@@ -257,9 +279,10 @@ impl Engine {
             now: 0,
             busy_until: 0,
             tasks: Slab::with_capacity(64),
-            // ≤ 1 HP + ≤ IdBatch::CAP LP tasks per frame cell: reserving
-            // up front keeps arrival-path growth out of steady state.
-            task_index: Vec::with_capacity(n_cells * (1 + IdBatch::CAP) + 8),
+            // ≤ 1 HP + ≤ IdBatch::INLINE LP tasks per conveyor frame cell:
+            // reserving up front keeps arrival-path growth out of steady
+            // state (generative ids grow the index lazily).
+            task_index: Vec::with_capacity(n_cells * (1 + IdBatch::INLINE) + 8),
             frames: vec![FrameState::default(); n_cells],
             probes: Vec::with_capacity(4),
             metrics: Metrics::new(label),
@@ -271,6 +294,7 @@ impl Engine {
             crashed_at: vec![None; cfg.n_devices],
             scratch_devices: Vec::with_capacity(cfg.n_devices),
             scratch_orphans: Vec::with_capacity(16),
+            gen: extras.gen,
             cfg,
             sched,
         }
@@ -372,6 +396,7 @@ impl Engine {
     fn handle(&mut self, ev: Event) {
         match ev {
             Event::TraceFrame { index } => self.on_trace_frame(index),
+            Event::GenArrive { index } => self.on_gen_arrive(index),
             Event::HpArrive { task } => self.on_hp_arrive(task),
             Event::HpFinish { task } => self.on_hp_finish(task),
             Event::LpArrive { tasks, realloc } => self.on_lp_arrive(tasks, realloc),
@@ -424,6 +449,94 @@ impl Engine {
         self.insert_task(task);
         // Request travels to the controller.
         self.queue.push(self.now + self.cfg.control_latency(), Event::HpArrive { task: id });
+    }
+
+    /// A generative arrival fires: admit (or drop) one batch of one task
+    /// class from the compiled plan. Each admitted arrival is its own
+    /// pipeline unit — a fresh frame slot appended past the conveyor's
+    /// dense region — so frame-completion accounting covers generative
+    /// work with no special cases downstream.
+    fn on_gen_arrive(&mut self, index: usize) {
+        let Some(gen) = &self.gen else { return };
+        let arrival = gen.arrivals[index];
+        let class = gen.classes[arrival.class as usize].clone();
+        let cap = gen.admission_cap;
+        // Chain the next planned arrival first, unconditionally — the
+        // plan must keep unrolling even when this arrival is dropped.
+        if let Some(next) = gen.arrivals.get(index + 1) {
+            let at = next.at;
+            self.queue.push(at, Event::GenArrive { index: index + 1 });
+        }
+        let count = if class.priority == crate::coordinator::task::Priority::High {
+            1
+        } else {
+            class.batch.max(1)
+        };
+        // Offered-load accounting happens before any drop: the
+        // denominator of every drop/completion rate is what the
+        // generator *asked* for, outages included.
+        self.metrics.gen_arrivals += 1;
+        self.metrics.offered_tasks += count as u64;
+        self.metrics.offered_mbits += count as f64 * class.input_bytes as f64 * 8.0 / 1e6;
+        if !self.device_active(arrival.source) {
+            // The client's device is out of the fleet (churn/crash
+            // outage): the work is offered but has nowhere to originate.
+            self.metrics.offline_dropped += count as u64;
+            return;
+        }
+        if cap > 0 && self.tasks.len() + count as usize > cap {
+            self.metrics.admission_dropped += count as u64;
+            return;
+        }
+        let frame_id = self.frames.len() as FrameId;
+        let is_hp = class.priority == crate::coordinator::task::Priority::High;
+        self.frames.push(FrameState {
+            tracked: true,
+            lp_expected: if is_hp { 0 } else { count },
+            lp_done: 0,
+            // LP-only units have no detector stage to wait for.
+            hp_done: !is_hp,
+            failed: false,
+            counted: false,
+            deadline: self.now + class.deadline_us,
+        });
+        self.metrics.frames_total += 1;
+        if is_hp {
+            self.metrics.hp_generated += 1;
+            let id = self.fresh_task_id();
+            let task = Task::of_class(
+                id,
+                frame_id,
+                arrival.source,
+                self.now,
+                class.priority,
+                class.deadline_us,
+                class.input_bytes,
+                class.proc_us,
+            );
+            self.insert_task(task);
+            self.queue.push(self.now + self.cfg.control_latency(), Event::HpArrive { task: id });
+        } else {
+            self.metrics.lp_generated += count as u64;
+            let mut ids = IdBatch::new();
+            for _ in 0..count {
+                let id = self.fresh_task_id();
+                let task = Task::of_class(
+                    id,
+                    frame_id,
+                    arrival.source,
+                    self.now,
+                    class.priority,
+                    class.deadline_us,
+                    class.input_bytes,
+                    class.proc_us,
+                );
+                self.insert_task(task);
+                ids.push(id);
+            }
+            let at = self.now + self.cfg.control_latency();
+            self.queue.push(at, Event::LpArrive { tasks: ids, realloc: false });
+        }
     }
 
     // ---- high-priority path --------------------------------------------
@@ -527,6 +640,7 @@ impl Engine {
         let task_id = slot.task.id;
         let deadline = slot.task.deadline;
         let source = slot.task.source;
+        let created_at = slot.task.created_at;
         if self.now > deadline {
             self.metrics.hp_violations += 1;
             self.sched.on_event(self.now, SchedEvent::Violation { task: task_id });
@@ -535,6 +649,7 @@ impl Engine {
             return;
         }
         self.metrics.hp_completed += 1;
+        self.metrics.lat_hp_e2e.record(self.now - created_at);
         self.sched.on_event(self.now, SchedEvent::Complete { task: task_id });
         let (lp_expected, frame_deadline) = {
             let f = self.frame_mut(frame).expect("frame tracked");
@@ -560,10 +675,11 @@ impl Engine {
 
     // ---- low-priority path ---------------------------------------------
 
-    /// Dispatch a batch-shaped event with a stack array of slab borrows —
-    /// no clones, no allocation (batches are ≤ [`IdBatch::CAP`] by
-    /// construction, and every id must be live: arrival/requeue/re-offer
-    /// paths guarantee it). `realloc: Some(r)` dispatches
+    /// Dispatch a batch-shaped event with slab borrows — no clones, and
+    /// no allocation for batches up to twice the conveyor's inline cap
+    /// (a stack array; larger generative batches borrow through one
+    /// temporary `Vec`). Every id must be live: arrival/requeue/re-offer
+    /// paths guarantee it. `realloc: Some(r)` dispatches
     /// [`SchedEvent::LowPriorityBatch`]; `None` dispatches
     /// [`SchedEvent::Reoffer`].
     fn dispatch_batch(
@@ -572,12 +688,22 @@ impl Engine {
         ids: &[TaskId],
         realloc: Option<bool>,
     ) -> Decision {
+        const STACK: usize = 2 * IdBatch::INLINE;
         let first = &self.tasks.get(self.slot_of(ids[0])).expect("batch task live").task;
-        let mut refs: [&Task; IdBatch::CAP] = [first; IdBatch::CAP];
-        for (i, &id) in ids.iter().enumerate() {
-            refs[i] = &self.tasks.get(self.slot_of(id)).expect("batch task live").task;
-        }
-        let tasks = &refs[..ids.len()];
+        let mut stack: [&Task; STACK] = [first; STACK];
+        let mut heap: Vec<&Task> = Vec::new();
+        let tasks: &[&Task] = if ids.len() <= STACK {
+            for (i, &id) in ids.iter().enumerate() {
+                stack[i] = &self.tasks.get(self.slot_of(id)).expect("batch task live").task;
+            }
+            &stack[..ids.len()]
+        } else {
+            heap.reserve_exact(ids.len());
+            for &id in ids {
+                heap.push(&self.tasks.get(self.slot_of(id)).expect("batch task live").task);
+            }
+            &heap
+        };
         let ev = match realloc {
             Some(realloc) => SchedEvent::LowPriorityBatch { tasks, realloc },
             None => SchedEvent::Reoffer { tasks },
@@ -666,6 +792,7 @@ impl Engine {
             (rt.alloc.frame, rt.alloc.offloaded, rt.realloc, rt.reoffered);
         let task_id = slot.task.id;
         let deadline = slot.task.deadline;
+        let created_at = slot.task.created_at;
         if self.now > deadline {
             self.metrics.lp_violations += 1;
             self.sched.on_event(self.now, SchedEvent::Violation { task: task_id });
@@ -673,6 +800,7 @@ impl Engine {
             self.free_task(task_id);
             return;
         }
+        self.metrics.lat_lp_e2e.record(self.now - created_at);
         if realloc {
             self.metrics.lp_completed_realloc += 1;
         } else {

@@ -8,19 +8,32 @@ use crate::sim::netsim::FlowId;
 use crate::time::SimTime;
 use crate::util::slab::SlotRef;
 
-/// A fixed-capacity, inline batch of task ids. Low-priority requests are
-/// at most [`IdBatch::CAP`] tasks (the trace alphabet is −1..=4, enforced
-/// at generation and at trace load), so carrying the ids inline keeps
-/// event construction allocation-free on the requeue/re-offer hot paths.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
-pub struct IdBatch {
-    len: u8,
-    ids: [TaskId; Self::CAP],
+/// An inline-plus-spill batch of task ids (a small-vector). Conveyor
+/// low-priority requests are at most [`IdBatch::INLINE`] tasks (the trace
+/// alphabet is −1..=4, enforced at generation and at trace load), so the
+/// common case stays allocation-free on the requeue/re-offer hot paths —
+/// but generative workloads ([`crate::workload::gen`]) emit arbitrary
+/// batch sizes, which spill to the heap instead of truncating or
+/// panicking.
+#[derive(Debug, Clone)]
+enum IdBatchRepr {
+    Inline { len: u8, ids: [TaskId; IdBatch::INLINE] },
+    Spilled(Vec<TaskId>),
+}
+
+#[derive(Debug, Clone)]
+pub struct IdBatch(IdBatchRepr);
+
+impl Default for IdBatch {
+    fn default() -> Self {
+        Self(IdBatchRepr::Inline { len: 0, ids: [0; Self::INLINE] })
+    }
 }
 
 impl IdBatch {
-    /// Maximum low-priority tasks per frame (paper, Fig. 1).
-    pub const CAP: usize = 4;
+    /// Ids stored inline before spilling to the heap (the conveyor
+    /// workload's maximum low-priority tasks per frame, paper Fig. 1).
+    pub const INLINE: usize = 4;
 
     pub fn new() -> Self {
         Self::default()
@@ -34,23 +47,53 @@ impl IdBatch {
     }
 
     pub fn push(&mut self, id: TaskId) {
-        assert!((self.len as usize) < Self::CAP, "IdBatch overflow (> {} tasks)", Self::CAP);
-        self.ids[self.len as usize] = id;
-        self.len += 1;
+        match &mut self.0 {
+            IdBatchRepr::Inline { len, ids } => {
+                if (*len as usize) < Self::INLINE {
+                    ids[*len as usize] = id;
+                    *len += 1;
+                } else {
+                    // Boundary crossing: move the inline ids to the heap
+                    // and append — larger batches grow like a Vec.
+                    let mut v = Vec::with_capacity(Self::INLINE * 2);
+                    v.extend_from_slice(&ids[..]);
+                    v.push(id);
+                    self.0 = IdBatchRepr::Spilled(v);
+                }
+            }
+            IdBatchRepr::Spilled(v) => v.push(id),
+        }
     }
 
     pub fn as_slice(&self) -> &[TaskId] {
-        &self.ids[..self.len as usize]
+        match &self.0 {
+            IdBatchRepr::Inline { len, ids } => &ids[..*len as usize],
+            IdBatchRepr::Spilled(v) => v,
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.len as usize
+        self.as_slice().len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len == 0
+        self.len() == 0
+    }
+
+    /// Whether the ids spilled to the heap (diagnostics/tests).
+    pub fn is_spilled(&self) -> bool {
+        matches!(self.0, IdBatchRepr::Spilled(_))
     }
 }
+
+/// Content equality: representation (inline vs spilled) is invisible.
+impl PartialEq for IdBatch {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for IdBatch {}
 
 /// Everything that can happen in the simulated system.
 ///
@@ -66,6 +109,11 @@ impl IdBatch {
 pub enum Event {
     /// The conveyor produces frame `index` of the trace (all devices).
     TraceFrame { index: usize },
+    /// A generative-workload arrival fires: `index` into the compiled
+    /// arrival plan ([`crate::workload::gen::GenWorkload`]). Independent
+    /// of the conveyor frame clock — this is how open-loop load reaches
+    /// the engine.
+    GenArrive { index: usize },
     /// A high-priority scheduling request reaches the controller.
     HpArrive { task: TaskId },
     /// A high-priority task finishes on its device.
@@ -172,24 +220,53 @@ mod tests {
     }
 
     #[test]
-    fn id_batch_holds_up_to_cap_inline() {
+    fn id_batch_holds_up_to_inline_without_allocating() {
         let mut b = IdBatch::new();
         assert!(b.is_empty());
-        for id in 1..=IdBatch::CAP as u64 {
+        for id in 1..=IdBatch::INLINE as u64 {
             b.push(id);
         }
-        assert_eq!(b.len(), IdBatch::CAP);
+        assert_eq!(b.len(), IdBatch::INLINE);
         assert_eq!(b.as_slice(), &[1, 2, 3, 4]);
+        assert!(!b.is_spilled(), "at the inline capacity the batch must stay inline");
         assert_eq!(IdBatch::one(9).as_slice(), &[9]);
     }
 
     #[test]
-    #[should_panic(expected = "IdBatch overflow")]
-    fn id_batch_rejects_overflow() {
+    fn id_batch_spills_at_the_boundary_instead_of_panicking() {
+        // The boundary: INLINE ids stay inline, the (INLINE+1)-th spills —
+        // contents and order are preserved exactly across the crossing.
         let mut b = IdBatch::new();
-        for id in 0..=IdBatch::CAP as u64 {
+        for id in 1..=IdBatch::INLINE as u64 {
             b.push(id);
         }
+        b.push(5);
+        assert!(b.is_spilled());
+        assert_eq!(b.as_slice(), &[1, 2, 3, 4, 5]);
+        // Keep growing well past the old cap (generative batch sizes).
+        for id in 6..=100u64 {
+            b.push(id);
+        }
+        assert_eq!(b.len(), 100);
+        assert_eq!(b.as_slice()[99], 100);
+        assert!(b.as_slice().windows(2).all(|w| w[0] + 1 == w[1]));
+    }
+
+    #[test]
+    fn id_batch_equality_ignores_representation() {
+        let mut inline = IdBatch::new();
+        let mut spilled = IdBatch::new();
+        for id in 1..=3u64 {
+            inline.push(id);
+        }
+        for id in 1..=6u64 {
+            spilled.push(id);
+        }
+        // Same content compares equal regardless of storage...
+        assert_eq!(inline.clone(), inline);
+        assert_eq!(spilled.clone(), spilled);
+        // ...and different content does not.
+        assert_ne!(inline, spilled);
     }
 
     #[test]

@@ -1,0 +1,402 @@
+//! Seeded arrival processes: *when* generated work reaches the system.
+//!
+//! Every process expands to a concrete, time-sorted arrival stream with
+//! [`ArrivalProcess::stream`] — a pure function of (spec, seed, horizon),
+//! so a compiled workload is bit-identical across runs, worker-thread
+//! counts, and machines. Four families cover the regimes the related
+//! serving/offloading work evaluates under:
+//!
+//! * [`ArrivalProcess::Poisson`] — memoryless open-loop arrivals at a
+//!   fixed mean rate (the classic serving benchmark).
+//! * [`ArrivalProcess::Mmpp`] — a two-state Markov-modulated Poisson
+//!   process (bursty on-off): quiet spells punctuated by arrival storms,
+//!   the "high-volume workload" regime the abstraction model targets.
+//! * [`ArrivalProcess::Diurnal`] — a sinusoidal rate curve over a
+//!   configurable period (day-scale load swing), realised by thinning.
+//! * [`ArrivalProcess::ClosedLoop`] — a fixed user population with
+//!   exponential think times. Compiled open-loop using the catalog's
+//!   nominal service time as the per-cycle estimate (the driver is
+//!   open-loop by design; the population bound still shapes the stream).
+
+use crate::time::{SimDuration, SimTime};
+use crate::util::Rng;
+
+/// Seed-domain tag for arrival streams (hex "ARRV").
+const SEED_TAG: u64 = 0x4152_5256;
+
+/// An arrival process specification. Rates are per *minute* (the natural
+/// scale for the paper's 18.86 s frame period).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals at `rate_per_min`.
+    Poisson { rate_per_min: f64 },
+    /// Two-state bursty on-off process: arrivals at `on_rate_per_min`
+    /// during bursts of mean length `mean_on_s`, at `off_rate_per_min`
+    /// (often ~0) during quiet spells of mean length `mean_off_s`. Dwell
+    /// times are exponential; the process starts in the ON state.
+    Mmpp {
+        on_rate_per_min: f64,
+        off_rate_per_min: f64,
+        mean_on_s: f64,
+        mean_off_s: f64,
+    },
+    /// Sinusoidal rate curve: `rate(t) = base · (1 + amplitude·sin(2πt/period))`,
+    /// clamped at zero, realised by thinning a peak-rate Poisson stream.
+    Diurnal {
+        base_rate_per_min: f64,
+        /// Relative swing in [0, 1]: 0 = flat, 1 = rate touches zero.
+        amplitude: f64,
+        period_s: f64,
+    },
+    /// `users` independent clients, each cycling submit → (nominal
+    /// service) → exponential think of mean `think_s` → submit …
+    ClosedLoop { users: u32, think_s: f64 },
+}
+
+impl ArrivalProcess {
+    /// Expand to concrete arrival instants over `[0, horizon_us)`,
+    /// deterministically from `seed`. `nominal_service_us` is the
+    /// catalog's mean service estimate (closed-loop cycle time only).
+    pub fn stream(
+        &self,
+        seed: u64,
+        horizon_us: SimDuration,
+        nominal_service_us: SimDuration,
+    ) -> Vec<SimTime> {
+        let mut rng = Rng::seed_from_u64(seed ^ SEED_TAG);
+        match *self {
+            ArrivalProcess::Poisson { rate_per_min } => {
+                let rate = per_us(rate_per_min);
+                let mut out = Vec::new();
+                let mut t = 0.0f64;
+                loop {
+                    t += exp_gap(&mut rng, rate);
+                    if t >= horizon_us as f64 {
+                        break;
+                    }
+                    out.push(t as SimTime);
+                }
+                out
+            }
+            ArrivalProcess::Mmpp { on_rate_per_min, off_rate_per_min, mean_on_s, mean_off_s } => {
+                let rates = [per_us(on_rate_per_min), per_us(off_rate_per_min)];
+                let dwell_us = [(mean_on_s * 1e6).max(1.0), (mean_off_s * 1e6).max(1.0)];
+                let mut out = Vec::new();
+                let mut state = 0usize; // start bursting
+                let mut seg_start = 0.0f64;
+                while seg_start < horizon_us as f64 {
+                    let dwell = exp_gap(&mut rng, 1.0 / dwell_us[state]);
+                    let seg_end = (seg_start + dwell).min(horizon_us as f64);
+                    // Arrivals within the segment: exponential gaps are
+                    // memoryless, so restarting the clock at the segment
+                    // boundary is exact, not an approximation.
+                    if rates[state] > 0.0 {
+                        let mut t = seg_start;
+                        loop {
+                            t += exp_gap(&mut rng, rates[state]);
+                            if t >= seg_end {
+                                break;
+                            }
+                            out.push(t as SimTime);
+                        }
+                    }
+                    seg_start = seg_end;
+                    state = 1 - state;
+                }
+                out
+            }
+            ArrivalProcess::Diurnal { base_rate_per_min, amplitude, period_s } => {
+                let amp = amplitude.clamp(0.0, 1.0);
+                let base = per_us(base_rate_per_min);
+                let peak = base * (1.0 + amp);
+                let period_us = (period_s * 1e6).max(1.0);
+                let mut out = Vec::new();
+                let mut t = 0.0f64;
+                if peak <= 0.0 {
+                    return out;
+                }
+                loop {
+                    // Thinning: candidates at the peak rate, accepted with
+                    // probability rate(t)/peak.
+                    t += exp_gap(&mut rng, peak);
+                    if t >= horizon_us as f64 {
+                        break;
+                    }
+                    let phase = (t / period_us) * std::f64::consts::TAU;
+                    let rate = (base * (1.0 + amp * phase.sin())).max(0.0);
+                    if rng.gen_f64() < rate / peak {
+                        out.push(t as SimTime);
+                    }
+                }
+                out
+            }
+            ArrivalProcess::ClosedLoop { users, think_s } => {
+                let mut tagged: Vec<(SimTime, u32)> = Vec::new();
+                let think_mean_us = (think_s * 1e6).max(1.0);
+                for u in 0..users {
+                    // Per-user stream from a user-derived seed: adding a
+                    // user never perturbs the others' cycles.
+                    let user_tag = 0x55_5345_5200 + u as u64; // "USER" + index
+                    let mut urng = Rng::seed_from_u64(seed ^ SEED_TAG ^ user_tag);
+                    // Stagger the first submission by one think draw.
+                    let mut t = exp_gap(&mut urng, 1.0 / think_mean_us);
+                    while (t as SimDuration) < horizon_us {
+                        tagged.push((t as SimTime, u));
+                        t += nominal_service_us as f64 + exp_gap(&mut urng, 1.0 / think_mean_us);
+                    }
+                }
+                // Deterministic merge: time, ties broken by user index.
+                tagged.sort_unstable();
+                tagged.into_iter().map(|(t, _)| t).collect()
+            }
+        }
+    }
+
+    /// Compact label used in scenario names (`RAS_poisson6`).
+    pub fn label(&self) -> String {
+        match self {
+            ArrivalProcess::Poisson { rate_per_min } => format!("poisson{}", trim(*rate_per_min)),
+            ArrivalProcess::Mmpp { on_rate_per_min, .. } => {
+                format!("mmpp{}", trim(*on_rate_per_min))
+            }
+            ArrivalProcess::Diurnal { base_rate_per_min, .. } => {
+                format!("diurnal{}", trim(*base_rate_per_min))
+            }
+            ArrivalProcess::ClosedLoop { users, .. } => format!("closed{users}"),
+        }
+    }
+
+    /// Parse a CLI spec:
+    ///
+    /// * `poisson:RATE`
+    /// * `mmpp:ON_RATE:OFF_RATE:MEAN_ON_S:MEAN_OFF_S`
+    /// * `diurnal:BASE_RATE:AMPLITUDE:PERIOD_S`
+    /// * `closed:USERS:THINK_S`
+    ///
+    /// Rates are arrivals per minute.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let num = |i: usize, what: &str| -> anyhow::Result<f64> {
+            parts
+                .get(i)
+                .ok_or_else(|| anyhow::anyhow!("arrival spec '{s}' is missing {what}"))?
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("arrival spec '{s}': bad {what}"))
+        };
+        let p = match parts[0] {
+            "poisson" => ArrivalProcess::Poisson { rate_per_min: num(1, "rate")? },
+            "mmpp" => ArrivalProcess::Mmpp {
+                on_rate_per_min: num(1, "on rate")?,
+                off_rate_per_min: num(2, "off rate")?,
+                mean_on_s: num(3, "mean on seconds")?,
+                mean_off_s: num(4, "mean off seconds")?,
+            },
+            "diurnal" => ArrivalProcess::Diurnal {
+                base_rate_per_min: num(1, "base rate")?,
+                amplitude: num(2, "amplitude")?,
+                period_s: num(3, "period seconds")?,
+            },
+            "closed" => ArrivalProcess::ClosedLoop {
+                users: num(1, "users")? as u32,
+                think_s: num(2, "think seconds")?,
+            },
+            other => anyhow::bail!(
+                "unknown arrival process: {other} (poisson | mmpp | diurnal | closed)"
+            ),
+        };
+        Ok(p)
+    }
+}
+
+fn per_us(rate_per_min: f64) -> f64 {
+    (rate_per_min / 60e6).max(0.0)
+}
+
+/// Integer-looking floats render without the trailing `.0` (labels).
+fn trim(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Exponential inter-arrival gap at `rate` (events per µs).
+fn exp_gap(rng: &mut Rng, rate: f64) -> f64 {
+    if rate <= 0.0 {
+        return f64::INFINITY;
+    }
+    // 1 − u avoids ln(0); u ∈ [0, 1).
+    -(1.0 - rng.gen_f64()).ln() / rate
+}
+
+// ---- stream statistics (property tests + diagnostics) -------------------
+
+/// Mean arrivals per minute over the horizon.
+pub fn empirical_rate_per_min(stream: &[SimTime], horizon_us: SimDuration) -> f64 {
+    if horizon_us == 0 {
+        return 0.0;
+    }
+    stream.len() as f64 / (horizon_us as f64 / 60e6)
+}
+
+/// Index of dispersion of window counts (variance / mean): ≈1 for a
+/// Poisson stream, >1 for bursty streams. `window_us` buckets the
+/// horizon; partial trailing windows are dropped.
+pub fn index_of_dispersion(
+    stream: &[SimTime],
+    horizon_us: SimDuration,
+    window_us: SimDuration,
+) -> f64 {
+    let n_windows = (horizon_us / window_us.max(1)) as usize;
+    if n_windows < 2 {
+        return 0.0;
+    }
+    let mut counts = vec![0f64; n_windows];
+    for &t in stream {
+        let w = (t / window_us) as usize;
+        if w < n_windows {
+            counts[w] += 1.0;
+        }
+    }
+    let mean = counts.iter().sum::<f64>() / n_windows as f64;
+    if mean == 0.0 {
+        return 0.0;
+    }
+    let var = counts.iter().map(|c| (c - mean).powi(2)).sum::<f64>() / n_windows as f64;
+    var / mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::time::secs;
+
+    #[test]
+    fn streams_are_sorted_seeded_and_distinct_across_seeds() {
+        for p in [
+            ArrivalProcess::Poisson { rate_per_min: 12.0 },
+            ArrivalProcess::Mmpp {
+                on_rate_per_min: 40.0,
+                off_rate_per_min: 1.0,
+                mean_on_s: 20.0,
+                mean_off_s: 60.0,
+            },
+            ArrivalProcess::Diurnal { base_rate_per_min: 10.0, amplitude: 0.8, period_s: 300.0 },
+            ArrivalProcess::ClosedLoop { users: 6, think_s: 20.0 },
+        ] {
+            let h = secs(1800.0);
+            let a = p.stream(7, h, secs(10.0));
+            let b = p.stream(7, h, secs(10.0));
+            assert_eq!(a, b, "{p:?} must replay bit-identically");
+            assert!(a.windows(2).all(|w| w[0] <= w[1]), "{p:?} must be time-sorted");
+            assert!(a.iter().all(|&t| t < h), "{p:?} must respect the horizon");
+            assert!(!a.is_empty(), "{p:?} should produce arrivals over 30 min");
+            let c = p.stream(8, h, secs(10.0));
+            assert_ne!(a, c, "{p:?} must vary with the seed");
+        }
+    }
+
+    #[test]
+    fn poisson_hits_its_mean_rate() {
+        let p = ArrivalProcess::Poisson { rate_per_min: 30.0 };
+        let h = secs(4.0 * 3600.0);
+        let s = p.stream(3, h, 0);
+        let rate = empirical_rate_per_min(&s, h);
+        assert!((rate - 30.0).abs() < 2.0, "empirical rate {rate} vs spec 30");
+        // Poisson window counts are ~unit-dispersed.
+        let d = index_of_dispersion(&s, h, secs(60.0));
+        assert!((0.6..1.6).contains(&d), "poisson dispersion {d} should be ≈1");
+    }
+
+    #[test]
+    fn mmpp_is_overdispersed_and_rate_sits_between_states() {
+        let p = ArrivalProcess::Mmpp {
+            on_rate_per_min: 60.0,
+            off_rate_per_min: 1.0,
+            mean_on_s: 30.0,
+            mean_off_s: 90.0,
+        };
+        let h = secs(4.0 * 3600.0);
+        let s = p.stream(11, h, 0);
+        let rate = empirical_rate_per_min(&s, h);
+        assert!((1.0..60.0).contains(&rate), "mean rate {rate} must sit between the states");
+        // Duty-weighted expectation: (60·30 + 1·90) / 120 ≈ 15.75/min.
+        assert!((rate - 15.75).abs() < 4.0, "mean rate {rate} vs expectation 15.75");
+        let d = index_of_dispersion(&s, h, secs(60.0));
+        assert!(d > 2.0, "bursty on-off stream must be overdispersed, got {d}");
+    }
+
+    #[test]
+    fn diurnal_peaks_and_troughs_follow_the_curve() {
+        let period = 1200.0;
+        let p =
+            ArrivalProcess::Diurnal { base_rate_per_min: 20.0, amplitude: 0.9, period_s: period };
+        let h = secs(4.0 * period);
+        let s = p.stream(5, h, 0);
+        // First vs third quarter of each period: sin > 0 vs sin < 0.
+        let (mut peak, mut trough) = (0usize, 0usize);
+        for &t in &s {
+            let phase = (t as f64 / secs(period) as f64).fract();
+            if phase < 0.5 {
+                peak += 1;
+            } else {
+                trough += 1;
+            }
+        }
+        assert!(
+            peak as f64 > trough as f64 * 1.5,
+            "rising half-periods should dominate: peak={peak} trough={trough}"
+        );
+    }
+
+    #[test]
+    fn closed_loop_scales_with_population_and_respects_cycle_time() {
+        let h = secs(3600.0);
+        let service = secs(15.0);
+        let few = ArrivalProcess::ClosedLoop { users: 4, think_s: 30.0 }.stream(9, h, service);
+        let many = ArrivalProcess::ClosedLoop { users: 8, think_s: 30.0 }.stream(9, h, service);
+        assert!(
+            (many.len() as f64 / few.len() as f64 - 2.0).abs() < 0.35,
+            "doubling users should ≈double throughput: {} vs {}",
+            few.len(),
+            many.len()
+        );
+        // Per-user cycle = service + think ⇒ ≈ users · horizon / cycle.
+        let expect = 4.0 * 3600.0 / 45.0;
+        assert!(
+            (few.len() as f64 - expect).abs() < expect * 0.25,
+            "closed-loop count {} vs expectation {expect}",
+            few.len()
+        );
+    }
+
+    #[test]
+    fn parse_roundtrips_and_rejects_garbage() {
+        assert_eq!(
+            ArrivalProcess::parse("poisson:12").unwrap(),
+            ArrivalProcess::Poisson { rate_per_min: 12.0 }
+        );
+        assert_eq!(
+            ArrivalProcess::parse("mmpp:40:1:20:60").unwrap(),
+            ArrivalProcess::Mmpp {
+                on_rate_per_min: 40.0,
+                off_rate_per_min: 1.0,
+                mean_on_s: 20.0,
+                mean_off_s: 60.0
+            }
+        );
+        assert_eq!(
+            ArrivalProcess::parse("diurnal:10:0.8:600").unwrap(),
+            ArrivalProcess::Diurnal { base_rate_per_min: 10.0, amplitude: 0.8, period_s: 600.0 }
+        );
+        assert_eq!(
+            ArrivalProcess::parse("closed:8:30").unwrap(),
+            ArrivalProcess::ClosedLoop { users: 8, think_s: 30.0 }
+        );
+        assert!(ArrivalProcess::parse("poisson").is_err());
+        assert!(ArrivalProcess::parse("mmpp:40:1").is_err());
+        assert!(ArrivalProcess::parse("sawtooth:1").is_err());
+        assert_eq!(ArrivalProcess::parse("poisson:6").unwrap().label(), "poisson6");
+    }
+}

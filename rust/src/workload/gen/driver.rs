@@ -1,0 +1,213 @@
+//! The open-loop load driver: compiles an arrival process + task-class
+//! catalog into the concrete arrival plan the engine's event queue
+//! executes.
+//!
+//! A [`Workload`] is the scenario-level axis: either the paper's
+//! [`Workload::Conveyor`] trace (replayed exactly — byte-identical to the
+//! pre-generative engine) or a [`Workload::Generative`] spec. Compilation
+//! ([`GenSpec::compile`]) is a pure function of (spec, seed, fleet,
+//! horizon): every arrival instant, class draw, and source-device draw is
+//! fixed before the run starts, so generative runs are as deterministic
+//! as trace replays — across repeated runs *and* sweep worker threads.
+
+use crate::config::SystemConfig;
+use crate::coordinator::task::{DeviceId, Priority};
+use crate::time::{SimDuration, SimTime};
+use crate::util::Rng;
+use crate::workload::trace::TraceSpec;
+
+use super::arrival::ArrivalProcess;
+use super::catalog::Catalog;
+
+/// Seed-domain tag for class/source draws (hex "MIX").
+const MIX_SEED_TAG: u64 = 0x4d49_58;
+
+/// The scenario workload axis.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Workload {
+    /// The paper's conveyor-belt trace (Section V), replayed exactly.
+    Conveyor(TraceSpec),
+    /// Arrival process × task-class catalog, compiled open-loop.
+    Generative(GenSpec),
+}
+
+impl Workload {
+    /// The conveyor trace as a workload (the default axis value).
+    pub fn conveyor(spec: TraceSpec) -> Self {
+        Workload::Conveyor(spec)
+    }
+
+    /// A generative workload with no admission cap.
+    pub fn generative(arrivals: ArrivalProcess, catalog: Catalog) -> Self {
+        Workload::Generative(GenSpec { arrivals, catalog, admission_cap: 0 })
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Workload::Conveyor(spec) => spec.label(),
+            Workload::Generative(g) => g.arrivals.label(),
+        }
+    }
+}
+
+/// A generative workload specification.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenSpec {
+    pub arrivals: ArrivalProcess,
+    pub catalog: Catalog,
+    /// Admission control: maximum tasks in flight (0 = unlimited). An
+    /// arrival batch that would push the live count past the cap is
+    /// dropped whole at admission and counted, not queued.
+    pub admission_cap: usize,
+}
+
+impl GenSpec {
+    pub fn admission_cap(mut self, cap: usize) -> Self {
+        self.admission_cap = cap;
+        self
+    }
+
+    /// Expand to the concrete plan the engine executes. Pure in
+    /// (self, cfg.seed, n_devices, horizon_us).
+    pub fn compile(
+        &self,
+        cfg: &SystemConfig,
+        horizon_us: SimDuration,
+    ) -> anyhow::Result<GenWorkload> {
+        self.catalog.validate()?;
+        let instants =
+            self.arrivals.stream(cfg.seed, horizon_us, self.catalog.mean_service_us());
+        let weights = self.catalog.weights();
+        let mut rng = Rng::seed_from_u64(cfg.seed ^ MIX_SEED_TAG);
+        let arrivals = instants
+            .into_iter()
+            .map(|at| {
+                // One class draw + one source draw per arrival, in stream
+                // order: the plan is a fixed function of the seed.
+                let class = rng.weighted_index(&weights) as u16;
+                let source = rng.index(cfg.n_devices);
+                GenArrival { at, class, source }
+            })
+            .collect();
+        Ok(GenWorkload {
+            classes: self.catalog.classes.iter().map(|c| c.compile(cfg)).collect(),
+            arrivals,
+            admission_cap: self.admission_cap,
+        })
+    }
+}
+
+/// A compiled task class (integer µs/bytes — what the engine consumes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenClass {
+    pub priority: Priority,
+    pub deadline_us: SimDuration,
+    pub input_bytes: u64,
+    /// `[two-core, four-core]` stage durations (HP: the stage duration in
+    /// both entries).
+    pub proc_us: [SimDuration; 2],
+    pub batch: u32,
+}
+
+/// One planned arrival: `batch` tasks of `class` from `source` at `at`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GenArrival {
+    pub at: SimTime,
+    pub class: u16,
+    pub source: DeviceId,
+}
+
+/// The fully-compiled plan handed to the engine via
+/// [`crate::sim::engine::RunExtras::gen`].
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct GenWorkload {
+    pub classes: Vec<GenClass>,
+    /// Time-sorted arrival plan.
+    pub arrivals: Vec<GenArrival>,
+    /// 0 = unlimited.
+    pub admission_cap: usize,
+}
+
+impl GenWorkload {
+    /// Total tasks the plan offers (admission sees them; drops subtract).
+    pub fn offered_tasks(&self) -> u64 {
+        self.arrivals
+            .iter()
+            .map(|a| self.classes[a.class as usize].batch as u64)
+            .sum()
+    }
+
+    /// Last planned arrival instant (engine input horizon).
+    pub fn last_arrival(&self) -> SimTime {
+        self.arrivals.last().map(|a| a.at).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::time::secs;
+
+    fn spec() -> GenSpec {
+        GenSpec {
+            arrivals: ArrivalProcess::Poisson { rate_per_min: 20.0 },
+            catalog: Catalog::edge_serving(&SystemConfig::default()),
+            admission_cap: 0,
+        }
+    }
+
+    #[test]
+    fn compile_is_deterministic_and_time_sorted() {
+        let cfg = SystemConfig::default();
+        let a = spec().compile(&cfg, secs(1800.0)).unwrap();
+        let b = spec().compile(&cfg, secs(1800.0)).unwrap();
+        assert_eq!(a, b);
+        assert!(a.arrivals.windows(2).all(|w| w[0].at <= w[1].at));
+        assert!(!a.arrivals.is_empty());
+        assert!(a.arrivals.iter().all(|x| x.source < cfg.n_devices));
+        assert!(a.arrivals.iter().all(|x| (x.class as usize) < a.classes.len()));
+        let mut cfg2 = cfg;
+        cfg2.seed ^= 1;
+        let c = spec().compile(&cfg2, secs(1800.0)).unwrap();
+        assert_ne!(a, c, "plan must vary with the scenario seed");
+    }
+
+    #[test]
+    fn class_mix_follows_catalog_weights() {
+        let cfg = SystemConfig::default();
+        let plan = spec().compile(&cfg, secs(6.0 * 3600.0)).unwrap();
+        let mut counts = vec![0f64; plan.classes.len()];
+        for a in &plan.arrivals {
+            counts[a.class as usize] += 1.0;
+        }
+        // edge_serving weights 3:2:1 — the dominant class dominates.
+        assert!(counts[0] > counts[1] && counts[1] > counts[2], "mix skew lost: {counts:?}");
+        let total: f64 = counts.iter().sum();
+        assert!((counts[0] / total - 0.5).abs() < 0.06, "interactive share: {counts:?}");
+    }
+
+    #[test]
+    fn offered_tasks_accounts_for_batch_sizes() {
+        let cfg = SystemConfig::default();
+        let plan = spec().compile(&cfg, secs(3600.0)).unwrap();
+        let by_hand: u64 = plan
+            .arrivals
+            .iter()
+            .map(|a| plan.classes[a.class as usize].batch as u64)
+            .sum();
+        assert_eq!(plan.offered_tasks(), by_hand);
+        assert!(plan.offered_tasks() >= plan.arrivals.len() as u64);
+        assert!(plan.last_arrival() > 0);
+    }
+
+    #[test]
+    fn compile_rejects_invalid_catalogs() {
+        let cfg = SystemConfig::default();
+        let bad = GenSpec {
+            arrivals: ArrivalProcess::Poisson { rate_per_min: 5.0 },
+            catalog: Catalog::new(vec![]),
+            admission_cap: 0,
+        };
+        assert!(bad.compile(&cfg, secs(60.0)).is_err());
+    }
+}

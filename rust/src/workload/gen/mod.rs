@@ -1,0 +1,31 @@
+//! Generative workload subsystem: arrival processes, a task-class
+//! catalog, and the open-loop load driver.
+//!
+//! The conveyor-belt trace ([`crate::workload::trace`]) couples task
+//! arrivals to a fixed frame clock and to exactly two task shapes. This
+//! module decouples both:
+//!
+//! * [`arrival::ArrivalProcess`] — *when* work arrives: Poisson, bursty
+//!   MMPP on-off, diurnal rate curves, and a closed-loop (think-time)
+//!   population, all expanding to seed-deterministic arrival streams.
+//! * [`catalog::TaskClass`] / [`catalog::Catalog`] — *what* arrives:
+//!   per-class priority, deadline, input megabits, per-stage cost
+//!   (seconds or FLOPs), batch size, mix weight.
+//! * [`driver::GenSpec`] → [`driver::GenWorkload`] — the open-loop
+//!   driver: compiles (process × catalog) into the concrete arrival plan
+//!   the engine's event queue executes, with offered-load and
+//!   admission-drop accounting.
+//!
+//! [`driver::Workload`] is the scenario axis that unifies the two worlds:
+//! `Workload::Conveyor(spec)` replays the paper's trace byte-identically,
+//! `Workload::Generative(spec)` drives the same engine, schedulers, and
+//! metrics through open-loop load. See `ScenarioBuilder::workload` and
+//! the `medge loadgen` subcommand.
+
+pub mod arrival;
+pub mod catalog;
+pub mod driver;
+
+pub use arrival::{empirical_rate_per_min, index_of_dispersion, ArrivalProcess};
+pub use catalog::{Catalog, TaskClass, FOUR_CORE_EFFICIENCY};
+pub use driver::{GenArrival, GenClass, GenSpec, GenWorkload, Workload};

@@ -1,6 +1,11 @@
 //! Workload model: the conveyor-belt waste-classification traces that
-//! drive the experiments (Section V).
+//! drive the paper's experiments (Section V), plus the generative
+//! workload subsystem ([`gen`]) — seeded arrival processes, a task-class
+//! catalog, and the open-loop driver that scales the evaluation beyond
+//! the conveyor.
 
+pub mod gen;
 pub mod trace;
 
+pub use gen::{ArrivalProcess, Catalog, GenSpec, GenWorkload, TaskClass, Workload};
 pub use trace::{Trace, TraceEntry, TraceSpec};

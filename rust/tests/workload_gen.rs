@@ -1,0 +1,214 @@
+//! Generative-workload integration suite: arrival-process statistics at
+//! the compiled-plan level, the conveyor-as-generator equivalence the
+//! golden snapshots depend on, the IdBatch spill path end to end, and
+//! offered-load/admission accounting identities.
+
+use medge::config::SystemConfig;
+use medge::metrics::report;
+use medge::scenario::{ScenarioBuilder, SchedKind};
+use medge::time::secs;
+use medge::workload::gen::{
+    empirical_rate_per_min, index_of_dispersion, ArrivalProcess, Catalog, GenSpec, TaskClass,
+    Workload,
+};
+use medge::workload::trace::TraceSpec;
+
+/// The golden-trace scenario shape (rust/tests/golden_trace.rs), built
+/// through the given workload entry point.
+fn golden_shape(kind: SchedKind, via_workload: bool) -> medge::metrics::Metrics {
+    let mut b = ScenarioBuilder::new()
+        .scheduler(kind)
+        .frames(16)
+        .seed(2024)
+        .device_speed(1, 1.25)
+        .leave_at(90.0, 2)
+        .join_at(200.0, 2)
+        .congestion_at(120.0, 36e6, 0.5)
+        .crash_at(60.0, 3)
+        .recover_at(150.0, 3)
+        .loss_rate(0.05)
+        .probe_loss(0.25)
+        .named(format!("G_{}", kind.label()));
+    b = if via_workload {
+        b.workload(Workload::conveyor(TraceSpec::Weighted(3)))
+    } else {
+        b.trace(TraceSpec::Weighted(3))
+    };
+    b.build().run()
+}
+
+/// Acceptance criterion: the conveyor trace re-expressed as a workload
+/// reproduces the golden-trace rows byte for byte — for every scheduler,
+/// through the full fault/churn/congestion path the snapshots pin.
+#[test]
+fn conveyor_as_workload_reproduces_golden_rows_byte_for_byte() {
+    for kind in [SchedKind::Wps, SchedKind::Ras, SchedKind::Multi] {
+        let via_trace = report::json_rows(&[golden_shape(kind, false)]);
+        let via_workload = report::json_rows(&[golden_shape(kind, true)]);
+        assert_eq!(
+            via_trace,
+            via_workload,
+            "{}: Workload::Conveyor must replay the trace path byte-identically",
+            kind.label()
+        );
+    }
+}
+
+#[test]
+fn compiled_poisson_plan_matches_its_rate_spec() {
+    let cfg = SystemConfig { seed: 5, ..Default::default() };
+    let spec = GenSpec {
+        arrivals: ArrivalProcess::Poisson { rate_per_min: 24.0 },
+        catalog: Catalog::edge_serving(&cfg),
+        admission_cap: 0,
+    };
+    let horizon = secs(3.0 * 3600.0);
+    let plan = spec.compile(&cfg, horizon).unwrap();
+    let times: Vec<u64> = plan.arrivals.iter().map(|a| a.at).collect();
+    let rate = empirical_rate_per_min(&times, horizon);
+    assert!((rate - 24.0).abs() < 2.0, "empirical plan rate {rate} vs spec 24/min");
+    let d = index_of_dispersion(&times, horizon, secs(60.0));
+    assert!((0.6..1.6).contains(&d), "poisson plan dispersion {d} should be ≈1");
+}
+
+#[test]
+fn compiled_mmpp_plan_is_bursty() {
+    let cfg = SystemConfig { seed: 9, ..Default::default() };
+    let spec = GenSpec {
+        arrivals: ArrivalProcess::Mmpp {
+            on_rate_per_min: 60.0,
+            off_rate_per_min: 1.0,
+            mean_on_s: 30.0,
+            mean_off_s: 120.0,
+        },
+        catalog: Catalog::edge_serving(&cfg),
+        admission_cap: 0,
+    };
+    let horizon = secs(3.0 * 3600.0);
+    let plan = spec.compile(&cfg, horizon).unwrap();
+    let times: Vec<u64> = plan.arrivals.iter().map(|a| a.at).collect();
+    let d = index_of_dispersion(&times, horizon, secs(60.0));
+    assert!(d > 2.0, "MMPP plan must be overdispersed vs Poisson, got {d}");
+    // Duty-weighted mean: (60·30 + 1·120) / 150 = 12.8/min.
+    let rate = empirical_rate_per_min(&times, horizon);
+    assert!((rate - 12.8).abs() < 4.0, "MMPP mean rate {rate} vs expectation 12.8");
+}
+
+/// A class whose batch size exceeds the old IdBatch cap of 4: the whole
+/// arrival → dispatch → placement/rejection pipeline must flow through
+/// the spill path without truncation or panic, atomically per batch.
+#[test]
+fn oversized_batches_flow_through_the_engine() {
+    let cfg = SystemConfig { seed: 31, ..Default::default() };
+    let image_mbits = cfg.image_bytes as f64 * 8.0 / 1e6;
+    let catalog = Catalog::new(vec![TaskClass::low(
+        "wide",
+        2.5 * cfg.frame_period_s,
+        image_mbits,
+        cfg.lp2_proc_s,
+        cfg.lp4_proc_s,
+    )
+    .batch(7)]);
+    for kind in [SchedKind::Wps, SchedKind::Ras, SchedKind::Multi] {
+        let m = ScenarioBuilder::new()
+            .scheduler(kind)
+            .workload(Workload::generative(
+                ArrivalProcess::Poisson { rate_per_min: 3.0 },
+                catalog.clone(),
+            ))
+            .minutes(10.0)
+            .seed(31)
+            .build()
+            .run();
+        assert!(m.gen_arrivals > 0, "{}: no arrivals", m.label);
+        // Every offered task is a multiple of the batch width, and the
+        // batch is atomic: placements come in multiples of 7 too.
+        assert_eq!(m.offered_tasks % 7, 0, "{}: offered {}", m.label, m.offered_tasks);
+        assert_eq!(m.offered_tasks, m.lp_generated + m.admission_dropped + m.offline_dropped);
+        assert_eq!(
+            m.lp_generated,
+            m.lp_allocated_initial + m.lp_alloc_failures,
+            "{}: batch atomicity lost",
+            m.label
+        );
+        assert_eq!(m.lp_allocated_initial % 7, 0, "{}: partial batch placed", m.label);
+        assert_eq!(
+            m.two_core_allocs + m.four_core_allocs,
+            m.lp_allocated_initial + m.lp_realloc_success,
+            "{}: core-mix identity",
+            m.label
+        );
+    }
+}
+
+/// Generative accounting identities: offered = generated + dropped,
+/// every completion carries an end-to-end latency sample, and the
+/// percentile chain is monotone.
+#[test]
+fn offered_load_and_latency_accounting_close() {
+    let cfg = SystemConfig { seed: 47, ..Default::default() };
+    let m = ScenarioBuilder::new()
+        .scheduler(SchedKind::Ras)
+        .workload(Workload::Generative(GenSpec {
+            arrivals: ArrivalProcess::Mmpp {
+                on_rate_per_min: 30.0,
+                off_rate_per_min: 2.0,
+                mean_on_s: 40.0,
+                mean_off_s: 80.0,
+            },
+            catalog: Catalog::edge_serving(&cfg),
+            admission_cap: 24,
+        }))
+        .minutes(15.0)
+        .seed(47)
+        .build()
+        .run();
+    assert!(m.offered_tasks > 0);
+    assert_eq!(
+        m.offered_tasks,
+        m.hp_generated + m.lp_generated + m.admission_dropped + m.offline_dropped
+    );
+    assert_eq!(
+        m.lat_lp_e2e.count,
+        m.lp_completed_initial + m.lp_completed_realloc,
+        "every LP completion records one e2e sample"
+    );
+    assert!(m.lat_lp_e2e.p50_ms() <= m.lat_lp_e2e.p95_ms());
+    assert!(m.lat_lp_e2e.p95_ms() <= m.lat_lp_e2e.p99_ms());
+    assert!(m.lat_lp_e2e.p99_ms() <= m.lat_lp_e2e.max_ms() + 1e-9);
+    if m.lat_lp_e2e.count > 0 {
+        // Completions beat their (class) deadline by construction: the
+        // loosest class bound caps the e2e tail.
+        assert!(m.lat_lp_e2e.max_ms() <= 3.0 * cfg.frame_period_s * 1000.0 + 1.0);
+    }
+}
+
+/// A closed-loop population bounds its own offered load: doubling the
+/// user count roughly doubles arrivals, and the stream stays within the
+/// population's cycle-time budget.
+#[test]
+fn closed_loop_population_shapes_offered_load() {
+    let cfg = SystemConfig { seed: 53, ..Default::default() };
+    let run = |users: u32| {
+        ScenarioBuilder::new()
+            .scheduler(SchedKind::Ras)
+            .workload(Workload::generative(
+                ArrivalProcess::ClosedLoop { users, think_s: 25.0 },
+                Catalog::edge_serving(&cfg),
+            ))
+            .minutes(20.0)
+            .seed(53)
+            .build()
+            .run()
+    };
+    let small = run(3);
+    let big = run(6);
+    assert!(small.gen_arrivals > 0);
+    let ratio = big.gen_arrivals as f64 / small.gen_arrivals as f64;
+    assert!(
+        (1.4..2.6).contains(&ratio),
+        "doubling the population should ≈double arrivals: {} vs {} (ratio {ratio:.2})",
+        small.gen_arrivals,
+        big.gen_arrivals
+    );
+}
