@@ -83,7 +83,11 @@ fn main() -> anyhow::Result<()> {
                 id += load as u64;
                 let decision = sched.on_event(
                     now,
-                    SchedEvent::LowPriorityBatch { tasks: &task_refs(&batch), realloc: false },
+                    SchedEvent::LowPriorityBatch {
+                        tasks: &task_refs(&batch),
+                        realloc: false,
+                        ladder: &[],
+                    },
                 );
                 if let Outcome::LpAllocated { allocs } = decision.outcome {
                     for a in &allocs {

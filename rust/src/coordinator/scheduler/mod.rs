@@ -40,6 +40,13 @@
 //! (crash-lost tasks re-entering placement on their remaining deadline
 //! budget).
 //!
+//! [`SchedEvent::LowPriorityBatch`] / [`SchedEvent::Reoffer`] carry the
+//! batch's model-variant ladder; all three schedulers route placement
+//! through the shared [`place_degrading`] policy, stepping down to a
+//! cheaper DNN variant when their own state deems the current rung
+//! infeasible. [`Decision::variant`] reports the rung the batch was
+//! placed at, and the engine accounts the delivered accuracy.
+//!
 //! The legacy callback shapes ([`HpOutcome`], [`LpOutcome`], and the
 //! [`SchedulerCompat`] extension trait) remain as a thin compatibility
 //! layer over `on_event`; `rust/tests/sched_event_equivalence.rs` holds a
@@ -51,7 +58,7 @@ pub mod wps;
 
 use std::collections::HashMap;
 
-use crate::coordinator::task::{Allocation, DeviceId, Task, TaskId};
+use crate::coordinator::task::{Allocation, DeviceId, Task, TaskId, VariantRung};
 use crate::time::SimTime;
 
 /// Operation count for one scheduling call.
@@ -73,7 +80,13 @@ pub enum SchedEvent<'a> {
     /// class-defined batch sizes). Batch members share one task class —
     /// same deadline, same per-configuration durations. `realloc` marks
     /// re-entry of preempted tasks (tracked separately in Fig. 4/5).
-    LowPriorityBatch { tasks: &'a [&'a Task], realloc: bool },
+    ///
+    /// `ladder` is the batch's remaining model-variant ladder (rung 0 =
+    /// the tasks' current spec). Empty or one-rung ladders never degrade
+    /// and decide bit-identically to the pre-ladder API; deeper ladders
+    /// let the scheduler step down to a cheaper variant instead of
+    /// rejecting ([`place_degrading`]).
+    LowPriorityBatch { tasks: &'a [&'a Task], realloc: bool, ladder: &'a [VariantRung] },
     /// A task finished on its device (free its resources).
     Complete { task: TaskId },
     /// A task missed its deadline and was abandoned.
@@ -97,7 +110,9 @@ pub enum SchedEvent<'a> {
     /// Crash-lost low-priority tasks re-offered for placement with
     /// whatever deadline budget remains (the crash already burned part of
     /// it). LP-shaped outcome: re-place, or reject to drop-by-deadline.
-    Reoffer { tasks: &'a [&'a Task] },
+    /// `ladder` as on [`SchedEvent::LowPriorityBatch`]: a re-offer may
+    /// degrade further down the tasks' remaining rungs before dropping.
+    Reoffer { tasks: &'a [&'a Task], ladder: &'a [VariantRung] },
 }
 
 /// Adapt an owned/contiguous task buffer to the reference-slice shape
@@ -135,12 +150,19 @@ pub enum Outcome {
 pub struct Decision {
     pub outcome: Outcome,
     pub ops: Ops,
+    /// Model-variant selection for ladder-aware low-priority placements:
+    /// the rung index (into the event's `ladder` slice) the allocations
+    /// were made at — `Some(0)` = placed at full accuracy, `Some(k > 0)`
+    /// = explicitly degraded k rungs. `None` everywhere a ladder was not
+    /// consulted (non-LP outcomes, empty/one-rung ladders, rejections),
+    /// which keeps ladder-free decisions identical to the pre-ladder API.
+    pub variant: Option<u8>,
 }
 
 impl Decision {
     /// Plain acknowledgement with no evictions.
     pub fn ack(ops: Ops) -> Self {
-        Decision { outcome: Outcome::Ack { evicted: Vec::new() }, ops }
+        Decision { outcome: Outcome::Ack { evicted: Vec::new() }, ops, variant: None }
     }
 
     /// Unwrap a high-priority decision into the legacy outcome shape.
@@ -204,14 +226,16 @@ pub enum LpOutcome {
 impl From<HpOutcome> for Decision {
     fn from(o: HpOutcome) -> Self {
         match o {
-            HpOutcome::Allocated { alloc, ops } => {
-                Decision { outcome: Outcome::HpAllocated { alloc, victims: Vec::new() }, ops }
-            }
+            HpOutcome::Allocated { alloc, ops } => Decision {
+                outcome: Outcome::HpAllocated { alloc, victims: Vec::new() },
+                ops,
+                variant: None,
+            },
             HpOutcome::Preempted { alloc, victims, ops } => {
-                Decision { outcome: Outcome::HpAllocated { alloc, victims }, ops }
+                Decision { outcome: Outcome::HpAllocated { alloc, victims }, ops, variant: None }
             }
             HpOutcome::Rejected { victims, ops } => {
-                Decision { outcome: Outcome::HpRejected { victims }, ops }
+                Decision { outcome: Outcome::HpRejected { victims }, ops, variant: None }
             }
         }
     }
@@ -221,11 +245,66 @@ impl From<LpOutcome> for Decision {
     fn from(o: LpOutcome) -> Self {
         match o {
             LpOutcome::Allocated { allocs, ops } => {
-                Decision { outcome: Outcome::LpAllocated { allocs }, ops }
+                Decision { outcome: Outcome::LpAllocated { allocs }, ops, variant: None }
             }
-            LpOutcome::Rejected { ops } => Decision { outcome: Outcome::LpRejected, ops },
+            LpOutcome::Rejected { ops } => {
+                Decision { outcome: Outcome::LpRejected, ops, variant: None }
+            }
         }
     }
+}
+
+/// The shared degradation policy all three schedulers route low-priority
+/// placement through (Fresa & Champati's model-selection idea mounted on
+/// the paper's schedulers): try the full-accuracy rung; only when the
+/// scheduler's own state deems it infeasible, step down the ladder to a
+/// cheaper variant before rejecting. The *policy* is shared, but the
+/// infeasibility verdict is each scheduler's own — RAS decides against
+/// its conservative availability windows and discretised link, WPS
+/// against exact state — so the two abstractions disagree about when
+/// degradation is necessary, which is the accuracy-vs-performance
+/// trade-off of the paper's title made literal.
+///
+/// Ops from failed rungs accumulate into the final decision: degradation
+/// is not free, and the controller's virtual latency model charges every
+/// attempted rung. With an empty or one-rung `ladder` the single attempt
+/// is returned unchanged (`variant: None`) — bit-identical decisions,
+/// ops, and internal RNG evolution vs the pre-ladder API.
+///
+/// Rung 0 is always attempted with the tasks exactly as given (their
+/// current spec *is* rung 0 by construction); deeper rungs re-spec the
+/// batch through [`Task::at_rung`].
+pub fn place_degrading(
+    now: SimTime,
+    tasks: &[&Task],
+    ladder: &[VariantRung],
+    realloc: bool,
+    mut attempt: impl FnMut(SimTime, &[&Task], bool) -> LpOutcome,
+) -> Decision {
+    if ladder.len() <= 1 {
+        return attempt(now, tasks, realloc).into();
+    }
+    let mut spent: Ops = 0;
+    for (k, rung) in ladder.iter().enumerate() {
+        let out = if k == 0 {
+            attempt(now, tasks, realloc)
+        } else {
+            let degraded: Vec<Task> = tasks.iter().map(|t| t.at_rung(rung)).collect();
+            let refs = task_refs(&degraded);
+            attempt(now, &refs, realloc)
+        };
+        match out {
+            LpOutcome::Allocated { allocs, ops } => {
+                return Decision {
+                    outcome: Outcome::LpAllocated { allocs },
+                    ops: spent + ops,
+                    variant: Some(k as u8),
+                };
+            }
+            LpOutcome::Rejected { ops } => spent += ops,
+        }
+    }
+    Decision { outcome: Outcome::LpRejected, ops: spent, variant: None }
 }
 
 /// The scheduling interface the discrete-event engine drives.
@@ -242,8 +321,13 @@ pub trait Scheduler {
     /// Access the committed allocation table (engine reads placements).
     fn state(&self) -> &WorkloadState;
 
-    /// Diagnostic counters: low-priority rejection reasons
-    /// `[no viable config, link capacity, insufficient windows, commit]`.
+    /// Diagnostic counters: low-priority placement-attempt failure
+    /// reasons `[no viable config, link capacity, insufficient windows,
+    /// commit]`. These count failed *attempts*, not rejected batches: a
+    /// two-core failure that falls back to four cores successfully still
+    /// counts, and on a multi-rung ladder every failed rung probe counts
+    /// — so deeper ladders legitimately record more failures even as
+    /// batch rejections fall.
     fn reject_diag(&self) -> [u64; 4] {
         [0; 4]
     }
@@ -269,7 +353,8 @@ impl<S: Scheduler + ?Sized> SchedulerCompat for S {
 
     fn schedule_low(&mut self, now: SimTime, tasks: &[Task], realloc: bool) -> LpOutcome {
         let refs = task_refs(tasks);
-        self.on_event(now, SchedEvent::LowPriorityBatch { tasks: &refs, realloc }).into_lp()
+        self.on_event(now, SchedEvent::LowPriorityBatch { tasks: &refs, realloc, ladder: &[] })
+            .into_lp()
     }
 
     fn on_complete(&mut self, now: SimTime, task: TaskId) {
@@ -577,5 +662,74 @@ mod tests {
     #[should_panic(expected = "not a high-priority outcome")]
     fn hp_unwrap_rejects_lp_decision() {
         let _ = Decision::from(LpOutcome::Rejected { ops: 1 }).into_hp();
+    }
+
+    fn rung(acc: f64, bytes: u64, p2: crate::time::SimDuration) -> crate::coordinator::task::VariantRung {
+        crate::coordinator::task::VariantRung { accuracy: acc, input_bytes: bytes, proc_us: [p2, p2 / 2] }
+    }
+
+    fn lp_task(id: TaskId) -> Task {
+        let cfg = crate::config::SystemConfig::default();
+        Task::low(id, 1, 0, 0, 10_000_000, &cfg)
+    }
+
+    #[test]
+    fn degrading_with_short_ladder_is_a_single_untouched_attempt() {
+        // Empty and one-rung ladders must not even inspect the rung: one
+        // attempt, tasks passed through as-is, variant None.
+        for ladder in [vec![], vec![rung(0.5, 1, 1)]] {
+            let t = lp_task(1);
+            let mut calls = 0;
+            let d = place_degrading(0, &[&t], &ladder, false, |_, ts, _| {
+                calls += 1;
+                assert_eq!(ts[0].input_bytes, t.input_bytes, "tasks must pass through untouched");
+                LpOutcome::Rejected { ops: 7 }
+            });
+            assert_eq!(calls, 1);
+            assert_eq!(d, Decision { outcome: Outcome::LpRejected, ops: 7, variant: None });
+        }
+    }
+
+    #[test]
+    fn degrading_steps_down_and_accumulates_ops() {
+        let t = lp_task(1);
+        let ladder = [
+            rung(0.95, t.input_bytes, t.proc_us[0]),
+            rung(0.85, 400_000, 8_000_000),
+            rung(0.70, 100_000, 2_000_000),
+        ];
+        let mut seen: Vec<(u64, crate::time::SimDuration)> = Vec::new();
+        let d = place_degrading(0, &[&t], &ladder, false, |_, ts, _| {
+            seen.push((ts[0].input_bytes, ts[0].proc_us[0]));
+            if seen.len() < 3 {
+                LpOutcome::Rejected { ops: 10 }
+            } else {
+                let a = alloc(1, 0, 2, 0, 100, 100, TaskConfig::LowTwoCore);
+                LpOutcome::Allocated { allocs: vec![a], ops: 5 }
+            }
+        });
+        // Rung 0 saw the task as-is; deeper rungs saw the degraded spec.
+        assert_eq!(seen, vec![
+            (t.input_bytes, t.proc_us[0]),
+            (400_000, 8_000_000),
+            (100_000, 2_000_000),
+        ]);
+        assert_eq!(d.variant, Some(2));
+        assert_eq!(d.ops, 25, "failed rungs' ops must be charged");
+        assert!(matches!(d.outcome, Outcome::LpAllocated { .. }));
+    }
+
+    #[test]
+    fn degrading_rejects_only_after_the_whole_ladder() {
+        let t = lp_task(1);
+        let ladder = [rung(0.9, 1_000, 1_000), rung(0.8, 500, 500)];
+        let mut calls = 0;
+        let d = place_degrading(0, &[&t], &ladder, true, |_, _, realloc| {
+            calls += 1;
+            assert!(realloc, "realloc flag must pass through every attempt");
+            LpOutcome::Rejected { ops: 3 }
+        });
+        assert_eq!(calls, 2);
+        assert_eq!(d, Decision { outcome: Outcome::LpRejected, ops: 6, variant: None });
     }
 }

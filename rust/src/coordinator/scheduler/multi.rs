@@ -13,7 +13,10 @@
 
 use super::ras_sched::RasScheduler;
 use super::wps::WpsScheduler;
-use super::{Decision, HpOutcome, LpOutcome, Ops, Outcome, SchedEvent, Scheduler, WorkloadState};
+use super::{
+    place_degrading, Decision, HpOutcome, LpOutcome, Ops, Outcome, SchedEvent, Scheduler,
+    WorkloadState,
+};
 use crate::config::SystemConfig;
 use crate::coordinator::task::{Allocation, DeviceId, Task, TaskId};
 use crate::time::SimTime;
@@ -169,8 +172,14 @@ impl Scheduler for MultiScheduler {
     fn on_event(&mut self, now: SimTime, ev: SchedEvent<'_>) -> Decision {
         match ev {
             SchedEvent::HighPriority { task } => self.schedule_high(now, task).into(),
-            SchedEvent::LowPriorityBatch { tasks, realloc } => {
-                self.schedule_low(now, tasks, realloc).into()
+            SchedEvent::LowPriorityBatch { tasks, realloc, ladder } => {
+                // The shared policy wraps the load-routed placement:
+                // every rung is routed afresh, so a batch whose rung 0
+                // failed under RAS can still land its degraded rung
+                // under RAS (or WPS, if completions dropped the load
+                // below the switch threshold mid-ladder). `record` keeps
+                // both inner views consistent with whichever rung stuck.
+                place_degrading(now, tasks, ladder, realloc, |n, ts, r| self.schedule_low(n, ts, r))
             }
             SchedEvent::Complete { task } => {
                 self.on_complete(now, task);
@@ -186,15 +195,16 @@ impl Scheduler for MultiScheduler {
                 // Both inner schedulers drop the device either way; the
                 // engine decides whether the work drains or is lost.
                 let (evicted, ops) = self.on_device_left(now, device);
-                Decision { outcome: Outcome::Ack { evicted }, ops }
+                Decision { outcome: Outcome::Ack { evicted }, ops, variant: None }
             }
             SchedEvent::DeviceRecovered { device } => {
                 Decision::ack(self.on_device_joined(now, device))
             }
-            SchedEvent::Reoffer { tasks } => {
+            SchedEvent::Reoffer { tasks, ladder } => {
                 // Load-routed like any placement request; `record` keeps
-                // both inner views consistent with the re-placement.
-                self.schedule_low(now, tasks, true).into()
+                // both inner views consistent with the re-placement, and
+                // the remaining ladder tail may degrade it further.
+                place_degrading(now, tasks, ladder, true, |n, ts, r| self.schedule_low(n, ts, r))
             }
         }
     }

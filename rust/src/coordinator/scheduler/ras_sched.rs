@@ -2,7 +2,10 @@
 //! availability lists, a discretised network link, and dynamic bandwidth
 //! estimation (Sections IV-A and IV-B).
 
-use super::{select_victim, Decision, HpOutcome, LpOutcome, Ops, Outcome, SchedEvent, Scheduler, WorkloadState};
+use super::{
+    place_degrading, select_victim, Decision, HpOutcome, LpOutcome, Ops, Outcome, SchedEvent,
+    Scheduler, WorkloadState,
+};
 use crate::config::SystemConfig;
 use crate::coordinator::netlink::{CommTask, DiscretisedLink};
 use crate::coordinator::ras::{DeviceAvailability, WindowRef};
@@ -26,8 +29,11 @@ pub struct RasScheduler {
     pub link_rebuilds: u64,
     /// Items dropped during cascades.
     pub cascade_dropped: u64,
-    /// Rejection diagnostics: [no viable config, link capacity,
-    /// insufficient windows, commit-time failure].
+    /// Placement-attempt failure diagnostics: [no viable config, link
+    /// capacity, insufficient windows, commit-time failure]. Counted per
+    /// failed *attempt* (a config fallback or a ladder-rung probe that
+    /// later succeeds still leaves its mark), not per rejected batch —
+    /// see [`Scheduler::reject_diag`].
     pub reject_reasons: [u64; 4],
 }
 
@@ -466,8 +472,13 @@ impl Scheduler for RasScheduler {
     fn on_event(&mut self, now: SimTime, ev: SchedEvent<'_>) -> Decision {
         match ev {
             SchedEvent::HighPriority { task } => self.schedule_high(now, task).into(),
-            SchedEvent::LowPriorityBatch { tasks, realloc } => {
-                self.schedule_low(now, tasks, realloc).into()
+            SchedEvent::LowPriorityBatch { tasks, realloc, ladder } => {
+                // Shared degradation policy over this scheduler's own
+                // feasibility verdict: RAS steps down when its
+                // *conservative windows* and discretised link say the
+                // rung cannot be placed — which can be earlier than the
+                // exact state would require (abstraction inaccuracy).
+                place_degrading(now, tasks, ladder, realloc, |n, ts, r| self.schedule_low(n, ts, r))
             }
             SchedEvent::Complete { task } => {
                 self.on_complete(now, task);
@@ -484,16 +495,18 @@ impl Scheduler for RasScheduler {
                 // placements are invalid and must be surfaced; what
                 // becomes of the work is the engine's call.
                 let (evicted, ops) = self.on_device_left(now, device);
-                Decision { outcome: Outcome::Ack { evicted }, ops }
+                Decision { outcome: Outcome::Ack { evicted }, ops, variant: None }
             }
             SchedEvent::DeviceRecovered { device } => {
                 Decision::ack(self.on_device_joined(now, device))
             }
-            SchedEvent::Reoffer { tasks } => {
+            SchedEvent::Reoffer { tasks, ladder } => {
                 // Crash-lost work re-enters placement on its remaining
                 // deadline budget; `viable_configs` drops tasks whose
-                // budget no longer fits any configuration.
-                self.schedule_low(now, tasks, true).into()
+                // budget no longer fits any configuration. The remaining
+                // ladder tail still applies — a re-offer may degrade
+                // further before dropping.
+                place_degrading(now, tasks, ladder, true, |n, ts, r| self.schedule_low(n, ts, r))
             }
         }
     }
@@ -594,6 +607,40 @@ mod tests {
         let mut s = RasScheduler::new(&c, 0, c.link_bps);
         let tasks = vec![Task::low(1, 1, 0, 0, c.lp4_proc() - 1, &c)];
         assert!(matches!(s.schedule_low(0, &task_refs(&tasks), false), LpOutcome::Rejected { .. }));
+    }
+
+    #[test]
+    fn infeasible_rung_degrades_through_the_ladder() {
+        use crate::coordinator::scheduler::Outcome;
+        use crate::coordinator::task::VariantRung;
+        let c = cfg();
+        let mut s = RasScheduler::new(&c, 0, c.link_bps);
+        // Deadline too tight for either paper configuration: rung 0 has
+        // no viable config, but a tiny variant fits comfortably.
+        let deadline = c.lp4_proc() - 1;
+        let task = Task::low(1, 1, 0, 0, deadline, &c);
+        let ladder = [
+            VariantRung { accuracy: 0.97, input_bytes: c.image_bytes, proc_us: [c.lp2_proc(), c.lp4_proc()] },
+            VariantRung { accuracy: 0.80, input_bytes: c.image_bytes / 4, proc_us: [2_000_000, 1_500_000] },
+        ];
+        let refs = crate::coordinator::scheduler::task_refs(std::slice::from_ref(&task));
+        let d = s.on_event(
+            0,
+            crate::coordinator::scheduler::SchedEvent::LowPriorityBatch {
+                tasks: &refs,
+                realloc: false,
+                ladder: &ladder,
+            },
+        );
+        assert_eq!(d.variant, Some(1), "rung 0 is infeasible, rung 1 must place");
+        let Outcome::LpAllocated { allocs } = d.outcome else {
+            panic!("degraded rung should have been placed: {:?}", d.outcome)
+        };
+        assert_eq!(allocs.len(), 1);
+        // The allocation was planned with the degraded rung's duration.
+        assert_eq!(allocs[0].end - allocs[0].start, 2_000_000);
+        assert!(allocs[0].end <= deadline);
+        s.check_invariants().unwrap();
     }
 
     #[test]

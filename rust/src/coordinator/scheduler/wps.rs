@@ -20,7 +20,10 @@
 //! the static baseline estimate and ignores probe updates, which is
 //! exactly what the paper's congestion experiments punish.
 
-use super::{select_victim, Decision, HpOutcome, LpOutcome, Ops, Outcome, SchedEvent, Scheduler, WorkloadState};
+use super::{
+    place_degrading, select_victim, Decision, HpOutcome, LpOutcome, Ops, Outcome, SchedEvent,
+    Scheduler, WorkloadState,
+};
 use crate::config::SystemConfig;
 use crate::coordinator::task::{Allocation, DeviceId, Task, TaskConfig, TaskId};
 use crate::time::{SimDuration, SimTime};
@@ -431,8 +434,13 @@ impl Scheduler for WpsScheduler {
     fn on_event(&mut self, now: SimTime, ev: SchedEvent<'_>) -> Decision {
         match ev {
             SchedEvent::HighPriority { task } => self.schedule_high(now, task).into(),
-            SchedEvent::LowPriorityBatch { tasks, realloc } => {
-                self.schedule_low(now, tasks, realloc).into()
+            SchedEvent::LowPriorityBatch { tasks, realloc, ladder } => {
+                // Shared degradation policy over the *exact* state: WPS
+                // only steps down when no placement truly exists, so it
+                // degrades strictly less often than RAS's conservative
+                // windows require — the two abstractions disagree about
+                // when degradation is necessary.
+                place_degrading(now, tasks, ladder, realloc, |n, ts, r| self.schedule_low(n, ts, r))
             }
             SchedEvent::Complete { task } => {
                 self.on_complete(now, task);
@@ -448,16 +456,17 @@ impl Scheduler for WpsScheduler {
                 // Exact state makes no distinction between a drained and
                 // a crashed device: evict and surface the allocations.
                 let (evicted, ops) = self.on_device_left(now, device);
-                Decision { outcome: Outcome::Ack { evicted }, ops }
+                Decision { outcome: Outcome::Ack { evicted }, ops, variant: None }
             }
             SchedEvent::DeviceRecovered { device } => {
                 Decision::ack(self.on_device_joined(now, device))
             }
-            SchedEvent::Reoffer { tasks } => {
+            SchedEvent::Reoffer { tasks, ladder } => {
                 // Re-place on the remaining deadline budget; the
                 // exhaustive search rejects (drop-by-deadline) when no
-                // start fits before the original deadline.
-                self.schedule_low(now, tasks, true).into()
+                // start fits before the original deadline — after the
+                // remaining ladder tail has been exhausted.
+                place_degrading(now, tasks, ladder, true, |n, ts, r| self.schedule_low(n, ts, r))
             }
         }
     }
@@ -539,6 +548,34 @@ mod tests {
             LpOutcome::Rejected { .. } => panic!("should fit"),
         }
         assert_eq!(s.comm_count(), 1);
+    }
+
+    #[test]
+    fn degradation_only_fires_when_the_exact_state_is_full() {
+        use crate::coordinator::scheduler::{task_refs, Outcome, SchedEvent};
+        use crate::coordinator::task::VariantRung;
+        let c = cfg();
+        let mut s = WpsScheduler::new(&c, 0, c.link_bps);
+        let deadline = c.frame_period();
+        let ladder = [
+            VariantRung { accuracy: 0.97, input_bytes: c.image_bytes, proc_us: [c.lp2_proc(), c.lp4_proc()] },
+            VariantRung { accuracy: 0.80, input_bytes: c.image_bytes / 4, proc_us: [2_000_000, 1_500_000] },
+        ];
+        // An idle fleet: the full-accuracy rung fits, so the ladder must
+        // NOT degrade (exact state says rung 0 is feasible).
+        let t1 = Task::low(1, 1, 0, 0, deadline, &c);
+        let refs = task_refs(std::slice::from_ref(&t1));
+        let d = s.on_event(0, SchedEvent::LowPriorityBatch { tasks: &refs, realloc: false, ladder: &ladder });
+        assert_eq!(d.variant, Some(0), "idle fleet: full accuracy must win");
+        assert!(matches!(d.outcome, Outcome::LpAllocated { .. }));
+        // A deadline no full-model configuration can meet anywhere: the
+        // exhaustive search fails rung 0 and the ladder steps down.
+        let t2 = Task::low(2, 2, 1, 0, c.lp4_proc() - 1, &c);
+        let refs = task_refs(std::slice::from_ref(&t2));
+        let d = s.on_event(0, SchedEvent::LowPriorityBatch { tasks: &refs, realloc: false, ladder: &ladder });
+        assert_eq!(d.variant, Some(1));
+        let Outcome::LpAllocated { allocs } = d.outcome else { panic!("{:?}", d.outcome) };
+        assert_eq!(allocs[0].end - allocs[0].start, 2_000_000);
     }
 
     #[test]

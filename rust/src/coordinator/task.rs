@@ -26,6 +26,29 @@ pub enum Priority {
     Low,
 }
 
+/// Maximum model-variant ladder depth the system tracks (per-rung
+/// completion counters in [`crate::metrics::Metrics`] are sized by it;
+/// ladder validation enforces it).
+pub const MAX_RUNGS: usize = 8;
+
+/// One rung of a compiled model-variant ladder, as the schedulers and
+/// the engine consume it: the delivered inference accuracy of running
+/// this variant, the input it ships on offload, and its planned
+/// per-configuration stage durations (low-priority padding already
+/// applied, like [`Task::proc_us`]). Rung 0 is the full-accuracy model —
+/// by construction it equals the task's own compiled spec — and lower
+/// rungs are cheaper on every axis (validated at the spec level, see
+/// [`crate::workload::gen::variants::Ladder`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VariantRung {
+    /// Delivered inference accuracy in (0, 1].
+    pub accuracy: f64,
+    /// Input transferred on offload, bytes.
+    pub input_bytes: u64,
+    /// `[two-core, four-core]` planned stage durations, µs.
+    pub proc_us: [SimDuration; 2],
+}
+
 /// Application configuration: each has its own fixed processing time and
 /// core requirement, and each device keeps one resource-availability list
 /// per configuration (Section IV-A1).
@@ -183,6 +206,19 @@ impl Task {
     pub fn slack(&self, now: SimTime) -> SimDuration {
         self.deadline.saturating_sub(now)
     }
+
+    /// The same task re-specced at a degraded model-variant rung: a
+    /// smaller input and cheaper stage durations, with identity,
+    /// deadline, and source untouched. The shared degradation policy
+    /// ([`crate::coordinator::scheduler::place_degrading`]) builds these
+    /// copies when the full-accuracy rung is infeasible.
+    pub fn at_rung(&self, rung: &VariantRung) -> Task {
+        Task {
+            input_bytes: if self.priority == Priority::High { 0 } else { rung.input_bytes },
+            proc_us: rung.proc_us,
+            ..*self
+        }
+    }
 }
 
 /// A committed placement: task `id` occupies `cores` on `device` over
@@ -280,6 +316,29 @@ mod tests {
         // HP classes never offload: input is forced to zero.
         let h = Task::of_class(4, 1, 2, 0, Priority::High, 1_000_000, 9_999, [300_000; 2]);
         assert_eq!(h.input_bytes, 0);
+    }
+
+    #[test]
+    fn at_rung_respecs_cost_but_not_identity() {
+        let c = cfg();
+        let t = Task::low(7, 3, 1, 500, 500 + c.frame_period(), &c);
+        let rung = VariantRung {
+            accuracy: 0.8,
+            input_bytes: c.image_bytes / 4,
+            proc_us: [4_000_000, 3_000_000],
+        };
+        let d = t.at_rung(&rung);
+        assert_eq!(d.id, t.id);
+        assert_eq!(d.frame, t.frame);
+        assert_eq!(d.source, t.source);
+        assert_eq!(d.deadline, t.deadline);
+        assert_eq!(d.created_at, t.created_at);
+        assert_eq!(d.input_bytes, c.image_bytes / 4);
+        assert_eq!(d.proc_us, [4_000_000, 3_000_000]);
+        // HP tasks never ship input, whatever the rung says.
+        let h = Task::high(9, 3, 1, 0, &c);
+        assert_eq!(h.at_rung(&rung).input_bytes, 0);
+        assert_eq!(h.at_rung(&rung).proc_us, rung.proc_us);
     }
 
     #[test]

@@ -176,32 +176,47 @@ pub fn run_suite(opts: &SuiteOptions) -> Vec<BenchRow> {
 
     println!("\n== hot_path macro: steady-state engine event rate ==");
     let frames = if opts.quick { 8 } else { 24 };
-    let scenario = |kind: SchedKind| {
-        ScenarioBuilder::new()
+    // `ladder` attaches the three-rung stage-3 model family: the delta
+    // between the laddered row and the baseline is the whole per-event
+    // cost of the degradation machinery (ladder dispatch, rung
+    // accounting, and any step-down retries the scheduler performs).
+    let scenario = |kind: SchedKind, ladder: Option<crate::workload::gen::Ladder>| {
+        let mut b = ScenarioBuilder::new()
             .scheduler(kind)
             .trace(TraceSpec::Weighted(3))
             .frames(frames)
-            .seed(42)
-            .build()
+            .seed(42);
+        if let Some(l) = ladder {
+            b = b.lp_ladder(l);
+        }
+        b.build()
     };
-    {
-        let mut eng = scenario(SchedKind::Ras).engine();
+    let steady_row = |name: &str, ladder: Option<crate::workload::gen::Ladder>| {
+        let mut eng = scenario(SchedKind::Ras, ladder).engine();
         let t0 = Instant::now();
         let mut events = 0u64;
         while eng.step() {
             events += 1;
         }
-        let el = t0.elapsed();
-        let ns_per_event = el.as_nanos() as f64 / events.max(1) as f64;
-        let row = BenchRow {
-            name: "engine_event/steady_state".to_string(),
+        let ns_per_event = t0.elapsed().as_nanos() as f64 / events.max(1) as f64;
+        BenchRow {
+            name: name.to_string(),
             unit: "ns/op".to_string(),
             iters: events,
             value: ns_per_event,
             mean_ns: ns_per_event,
             p95_ns: ns_per_event,
             throughput_per_s: 1e9 / ns_per_event.max(0.1),
-        };
+        }
+    };
+    for (name, ladder) in [
+        ("engine_event/steady_state", None),
+        (
+            "engine_event/steady_state_laddered",
+            Some(crate::workload::gen::Ladder::stage3_family(&crate::config::SystemConfig::default())),
+        ),
+    ] {
+        let row = steady_row(name, ladder);
         println!("{}", row.report());
         rows.push(row);
     }
@@ -212,7 +227,7 @@ pub fn run_suite(opts: &SuiteOptions) -> Vec<BenchRow> {
     // decision vectors (outside this PR's scope) and amortised queue
     // growth.
     if let Some(counter) = opts.alloc_count {
-        let mut eng = scenario(SchedKind::Ras).engine();
+        let mut eng = scenario(SchedKind::Ras, None).engine();
         let warmup = 500u64;
         let mut events = 0u64;
         let mut tail_events = 0u64;

@@ -12,7 +12,7 @@ pub mod hotpath;
 use crate::config::SystemConfig;
 use crate::metrics::Metrics;
 use crate::scenario::{Scenario, ScenarioBuilder, Sweep};
-use crate::workload::gen::{ArrivalProcess, Catalog, GenSpec, Workload};
+use crate::workload::gen::{ArrivalProcess, Catalog, GenSpec, Ladder, TaskClass, Workload};
 use crate::workload::trace::TraceSpec;
 
 pub use crate::scenario::SchedKind;
@@ -154,6 +154,83 @@ pub fn loadgen_grid(
     sweep
 }
 
+/// The single-class catalog the accuracy frontier sweeps: the paper's
+/// stage-3 DNN with the model family truncated to `depth` rungs
+/// (depth 1 = the full model only, i.e. the no-degradation twin).
+pub fn frontier_catalog(cfg: &SystemConfig, depth: usize) -> Catalog {
+    let family = Ladder::stage3_family(cfg).truncated(depth);
+    Catalog::new(vec![TaskClass::low("stage3", cfg.frame_period_s, 0.0, 1.0, 0.8)
+        .batch(2)
+        .ladder(family)])
+}
+
+/// MMPP burst arrivals whose ON-state rate is `on_rate_per_min` — the
+/// deadline-pressure knob of the accuracy frontier.
+pub fn frontier_arrivals(on_rate_per_min: f64) -> ArrivalProcess {
+    ArrivalProcess::Mmpp {
+        on_rate_per_min,
+        off_rate_per_min: 1.0,
+        mean_on_s: 45.0,
+        mean_off_s: 45.0,
+    }
+}
+
+/// The accuracy-frontier grid: offered load × ladder depth × scheduler
+/// on the stage-3 class under bursty MMPP pressure. Each depth-1 row is
+/// the no-degradation twin of its deeper siblings (same seed, same
+/// arrival plan), so adjacent rows trace the deadline-met ↑ /
+/// mean-accuracy ↓ frontier directly. Labels: `KIND_rRATEdDEPTH`.
+pub fn accuracy_frontier(
+    cfg: &SystemConfig,
+    kinds: &[SchedKind],
+    depths: &[usize],
+    minutes: f64,
+) -> Sweep {
+    let rates = [12.0f64, 24.0];
+    let mut sweep = Sweep::new();
+    for &rate in &rates {
+        for &depth in depths {
+            for &kind in kinds {
+                sweep = sweep.add(
+                    ScenarioBuilder::new()
+                        .config(cfg.clone())
+                        .scheduler(kind)
+                        .workload(Workload::generative(
+                            frontier_arrivals(rate),
+                            frontier_catalog(cfg, depth),
+                        ))
+                        .minutes(minutes)
+                        .named(format!("{}_r{}d{}", kind.label(), rate as u32, depth))
+                        .build(),
+                );
+            }
+        }
+    }
+    sweep
+}
+
+/// Parse a comma list of ladder depths for `medge accuracy` — strict:
+/// a malformed or out-of-range entry is an error, never a panic or a
+/// silent clamp.
+pub fn parse_depths(s: &str) -> anyhow::Result<Vec<usize>> {
+    let max = Ladder::stage3_family(&SystemConfig::default()).depth();
+    let depths: Vec<usize> = s
+        .split(',')
+        .filter(|t| !t.is_empty())
+        .map(|t| {
+            let d: usize =
+                t.parse().map_err(|_| anyhow::anyhow!("bad ladder depth: {t}"))?;
+            anyhow::ensure!(
+                (1..=max).contains(&d),
+                "ladder depth out of range 1..={max}: {d}"
+            );
+            Ok(d)
+        })
+        .collect::<anyhow::Result<_>>()?;
+    anyhow::ensure!(!depths.is_empty(), "empty ladder-depth list");
+    Ok(depths)
+}
+
 /// Fault-stress grid (beyond the paper): each scheduler on the weighted-4
 /// load, clean vs faulted (5% packet loss, 25% probe loss, the last
 /// device crashing at 30% and recovering at 55% of the run) — the
@@ -250,6 +327,40 @@ mod tests {
             assert!(m.offered_tasks > 0);
             assert_eq!(m.admission_dropped, 0, "{}: open admission must not drop", m.label);
         }
+    }
+
+    #[test]
+    fn accuracy_frontier_labels_and_twins() {
+        let cfg = small_cfg();
+        let rows =
+            accuracy_frontier(&cfg, &[SchedKind::Ras], &[1, 3], 4.0).run();
+        // 2 rates × 2 depths × 1 scheduler.
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0].label, "RAS_r12d1");
+        assert_eq!(rows[3].label, "RAS_r24d3");
+        for m in &rows {
+            assert!(m.gen_arrivals > 0, "{}: plan fired no arrivals", m.label);
+            assert_eq!(
+                m.rung_completions.iter().sum::<u64>(),
+                m.lp_deadline_met(),
+                "{}: per-rung identity",
+                m.label
+            );
+        }
+        // Depth-1 twins never degrade.
+        assert_eq!(rows[0].degraded_completions, 0);
+        assert_eq!(rows[2].degraded_completions, 0);
+    }
+
+    #[test]
+    fn parse_depths_is_strict() {
+        assert_eq!(parse_depths("1,2,3").unwrap(), vec![1, 2, 3]);
+        assert_eq!(parse_depths("2").unwrap(), vec![2]);
+        assert!(parse_depths("0").is_err(), "below range");
+        assert!(parse_depths("4").is_err(), "past the family depth");
+        assert!(parse_depths("two").is_err(), "not a number");
+        assert!(parse_depths("").is_err(), "empty list");
+        assert!(parse_depths("1,-2").is_err(), "negative");
     }
 
     #[test]

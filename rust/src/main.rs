@@ -53,6 +53,11 @@ COMMANDS:
                  | diurnal:BASE:AMPLITUDE:PERIOD_S | closed:USERS:THINK_S
            (rates are arrivals/minute; default procs: poisson:6 and a
            bursty mmpp:24:1:45:90)
+  accuracy Accuracy-frontier sweep (offered load × model-variant ladder
+           depth × scheduler, stage-3 class under MMPP bursts): delivered
+           accuracy vs deadlines met; depth-1 rows are the no-degradation
+           twins. --scheds wps,ras,multi  --depths 1,2,3  --threads N
+           --json PATH
   bench    Hot-path micro/macro benchmark suite (slab vs hashmap,
            incremental vs rescanning medium, engine event rate,
            steady-state allocs/event, end-to-end sweep):
@@ -70,6 +75,7 @@ OPTIONS:
                 loadgen defaults to wps,ras,multi)
   --loads L     sweep: comma list of weighted loads 1..4 (default 1,2,3,4)
   --procs L     loadgen: comma list of arrival-process specs
+  --depths L    accuracy: comma list of ladder depths 1..3 (default 1,2,3)
   --cap N       loadgen: admission cap on in-flight tasks (default 0 = open)
   --threads N   sweep/loadgen: worker threads (default: available parallelism)
   --json P      sweep/loadgen: write the metric rows as a JSON array to P
@@ -92,6 +98,7 @@ struct Args {
     scheds: Option<String>,
     loads: String,
     procs: Option<String>,
+    depths: Option<String>,
     cap: usize,
     threads: Option<usize>,
     json: Option<std::path::PathBuf>,
@@ -115,6 +122,7 @@ fn parse_args() -> anyhow::Result<Args> {
         scheds: None,
         loads: "1,2,3,4".to_string(),
         procs: None,
+        depths: None,
         cap: 0,
         threads: None,
         json: None,
@@ -141,6 +149,7 @@ fn parse_args() -> anyhow::Result<Args> {
             "--scheds" => args.scheds = Some(value(&mut it, "--scheds")?),
             "--loads" => args.loads = value(&mut it, "--loads")?,
             "--procs" => args.procs = Some(value(&mut it, "--procs")?),
+            "--depths" => args.depths = Some(value(&mut it, "--depths")?),
             "--cap" => args.cap = value(&mut it, "--cap")?.parse()?,
             "--threads" => args.threads = Some(value(&mut it, "--threads")?.parse()?),
             "--json" => {
@@ -378,6 +387,39 @@ fn main() -> anyhow::Result<()> {
             print!("{}", report::loadgen(&runs));
             print!("{}", report::fig4(&runs));
             print!("{}", report::percentiles(&runs));
+            if let Some(path) = &args.json {
+                std::fs::write(path, report::json_rows(&runs))?;
+                println!("\nwrote {} JSON rows to {}", runs.len(), path.display());
+            }
+        }
+        "accuracy" => {
+            anyhow::ensure!(
+                !(args.json_flag && args.json.is_none()),
+                "accuracy --json needs a PATH"
+            );
+            let kinds: Vec<SchedKind> = args
+                .scheds
+                .as_deref()
+                .unwrap_or("wps,ras,multi")
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(SchedKind::parse)
+                .collect::<anyhow::Result<_>>()?;
+            let depths = experiments::parse_depths(args.depths.as_deref().unwrap_or("1,2,3"))?;
+            anyhow::ensure!(!kinds.is_empty(), "empty accuracy grid");
+            let mut sweep = experiments::accuracy_frontier(&cfg, &kinds, &depths, minutes);
+            if let Some(t) = args.threads {
+                sweep = sweep.threads(t);
+            }
+            eprintln!(
+                "accuracy: {} scenarios × {:.1} simulated minutes (depths {:?})",
+                sweep.len(),
+                minutes,
+                depths
+            );
+            let runs = sweep.run();
+            print!("{}", report::accuracy(&runs));
+            print!("{}", report::loadgen(&runs));
             if let Some(path) = &args.json {
                 std::fs::write(path, report::json_rows(&runs))?;
                 println!("\nwrote {} JSON rows to {}", runs.len(), path.display());

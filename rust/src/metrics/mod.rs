@@ -10,6 +10,7 @@ pub mod report;
 
 use std::collections::BTreeMap;
 
+use crate::coordinator::task::MAX_RUNGS;
 use crate::time::{as_millis, SimDuration};
 
 /// Log-linear sub-bucket bits: each power-of-two octave splits into
@@ -170,6 +171,25 @@ pub struct Metrics {
     /// fleet at arrival (churn/crash outage) — distinct from cap drops.
     pub offline_dropped: u64,
 
+    // ---- delivered inference accuracy (model-variant ladders; on a
+    // ladder-free run these reduce to: accuracy_sum == LP completions,
+    // rung_completions[0] == LP completions, degraded_* == 0) ----
+    /// Sum of delivered accuracy over completed low-priority inferences
+    /// (each completion credits its model-variant rung's accuracy;
+    /// ladder-less tasks credit 1.0). Violations and drops credit 0 and
+    /// are not counted.
+    pub accuracy_sum: f64,
+    /// Completions by ladder rung (0 = full accuracy; ladder-less
+    /// completions count as rung 0). `Σ rung_completions ==
+    /// lp_completed_total` — asserted by `rust/tests/accuracy_props.rs`.
+    pub rung_completions: [u64; MAX_RUNGS],
+    /// Completions that ran a degraded rung (> 0).
+    pub degraded_completions: u64,
+    /// Low-priority placements that stepped down at least one rung
+    /// (counted per task at placement; a task re-placed and degraded
+    /// twice counts twice).
+    pub degraded_placements: u64,
+
     // ---- core allocation mix (Table II) ----
     pub two_core_allocs: u64,
     pub four_core_allocs: u64,
@@ -217,7 +237,11 @@ pub struct Metrics {
     pub final_bandwidth_estimate_bps: f64,
     /// Virtual time the controller spent busy (scheduling + rebuilds), µs.
     pub controller_busy_us: u64,
-    /// LP rejection reasons [no config, link, windows, commit] (RAS only).
+    /// LP placement-attempt failure reasons [no config, link, windows,
+    /// commit] (RAS only). Per failed attempt, not per rejected batch:
+    /// config fallbacks and failed ladder-rung probes count even when
+    /// the batch ultimately places, so laddered runs report more
+    /// attempt failures as degradation probes deeper rungs.
     pub reject_reasons: [u64; 4],
 }
 
@@ -253,6 +277,36 @@ impl Metrics {
             return 0.0;
         }
         self.admission_dropped as f64 / self.offered_tasks as f64
+    }
+
+    /// Low-priority deadline-met count (completions are deadline-met by
+    /// construction — a late finish is a violation, not a completion).
+    pub fn lp_deadline_met(&self) -> u64 {
+        self.lp_completed_total()
+    }
+
+    /// Mean delivered inference accuracy per deadline met, in [0, 1]:
+    /// `accuracy_sum / lp_deadline_met`. Bounded by the ladder's
+    /// min/max rung accuracies; exactly 1.0 on a ladder-free run with
+    /// any completions. The "accuracy" half of the frontier —
+    /// degradation raises `lp_deadline_met` and lowers this.
+    pub fn accuracy_per_deadline_met(&self) -> f64 {
+        let met = self.lp_deadline_met();
+        if met == 0 {
+            return 0.0;
+        }
+        self.accuracy_sum / met as f64
+    }
+
+    /// Delivered accuracy mass per *generated* low-priority inference,
+    /// in [0, 1]: rejected/violated/dropped work delivers 0, so this is
+    /// the accuracy goodput the frontier actually optimises (a ladder
+    /// can raise it even while the per-completion mean falls).
+    pub fn delivered_accuracy_rate(&self) -> f64 {
+        if self.lp_generated == 0 {
+            return 0.0;
+        }
+        self.accuracy_sum / self.lp_generated as f64
     }
 
     /// Table II row: fraction of successful LP allocations per core config.
@@ -319,6 +373,71 @@ mod tests {
         assert!(s.mean_ms() < 40.0);
         assert!(s.p50_ms() < 12.0);
         assert!(s.p99_ms() > 1500.0, "p99 {} must surface the straggler", s.p99_ms());
+    }
+
+    #[test]
+    fn percentile_octave_boundaries_are_tight() {
+        // The exact region: every value below 32 µs must come back
+        // exactly at every rank (one bucket per integer value).
+        let mut s = LatencyStat::default();
+        for v in 0..32u64 {
+            s.record(v);
+        }
+        for v in 0..32u64 {
+            let q = (v + 1) as f64 / 32.0;
+            assert_eq!(s.percentile_us(q), v, "exact region drifted at {v}");
+        }
+        // Octave boundaries: 32 is the first approximated value; its
+        // bucket midpoint (33) may be reported, but never outside the
+        // ≈6 % log-linear error bound — and the min/max clamp keeps
+        // p0/p100 exact. Check the first sub-bucket of several octaves.
+        for base in [32u64, 64, 128, 1 << 20, 1 << 40] {
+            let mut t = LatencyStat::default();
+            t.record(base);
+            t.record(base * 10); // second sample so the clamp can't hide errors
+            let p = t.percentile_us(0.5);
+            let err = (p as f64 - base as f64).abs() / base as f64;
+            assert!(err <= 1.0 / 16.0 + 1e-9, "octave {base}: p50 {p} off by {err}");
+            // p0 reports the min's bucket midpoint: never below the
+            // observed min, never past the error bound above it.
+            let p0 = t.percentile_us(0.0);
+            assert!(p0 >= base, "octave {base}: p0 {p0} fell below the observed min");
+            assert!((p0 - base) as f64 / base as f64 <= 1.0 / 16.0 + 1e-9);
+            // p100's bucket midpoint overshoots the max, so the clamp
+            // makes it exact.
+            assert_eq!(t.percentile_us(1.0), base * 10, "p100 must clamp to the observed max");
+        }
+        // Single sample: every quantile is that sample, exactly — even
+        // at an approximated magnitude.
+        let mut one = LatencyStat::default();
+        one.record(1_048_577); // 2^20 + 1: mid-octave, non-representable
+        for q in [0.0, 0.25, 0.5, 0.99, 1.0] {
+            assert_eq!(one.percentile_us(q), 1_048_577);
+        }
+        // Empty stat: zero everywhere, no panic, at any quantile.
+        let empty = LatencyStat::default();
+        for q in [-1.0, 0.0, 0.5, 1.0, 2.0] {
+            assert_eq!(empty.percentile_us(q), 0);
+        }
+        assert_eq!(empty.p99_ms(), 0.0);
+    }
+
+    #[test]
+    fn accuracy_accessors_guard_zero_and_average() {
+        let mut m = Metrics::new("acc");
+        assert_eq!(m.accuracy_per_deadline_met(), 0.0);
+        assert_eq!(m.delivered_accuracy_rate(), 0.0);
+        m.lp_generated = 10;
+        m.lp_completed_initial = 3;
+        m.lp_completed_realloc = 1;
+        m.accuracy_sum = 0.97 * 2.0 + 0.78 * 2.0;
+        m.rung_completions[0] = 2;
+        m.rung_completions[2] = 2;
+        m.degraded_completions = 2;
+        assert_eq!(m.lp_deadline_met(), 4);
+        assert_eq!(m.rung_completions.iter().sum::<u64>(), m.lp_deadline_met());
+        assert!((m.accuracy_per_deadline_met() - 0.875).abs() < 1e-12);
+        assert!((m.delivered_accuracy_rate() - 0.35).abs() < 1e-12);
     }
 
     #[test]

@@ -208,6 +208,45 @@ pub fn percentiles(runs: &[Metrics]) -> String {
     s
 }
 
+/// Delivered-accuracy summary — the degraded-inference axis: deadline-met
+/// counts, degradation traffic, per-rung completions, and the two
+/// accuracy ratios the frontier trades against each other. On ladder-free
+/// runs every completion sits on rung 0 at accuracy 1.0.
+pub fn accuracy(runs: &[Metrics]) -> String {
+    let mut s = header("Accuracy — delivered inference accuracy under deadline pressure");
+    s += &format!(
+        "{:<14} {:>7} {:>7} {:>9} {:>9} {:>20} {:>9} {:>9}\n",
+        "scenario", "lp_gen", "dl_met", "degr_pl", "degr_done", "per-rung", "mean_acc", "acc_rate",
+    );
+    for m in runs {
+        // Compact per-rung completion counts: trailing zero rungs are
+        // dropped, rung 0 always shown.
+        let depth = m
+            .rung_completions
+            .iter()
+            .rposition(|&c| c > 0)
+            .map(|i| i + 1)
+            .unwrap_or(1);
+        let rungs = m.rung_completions[..depth]
+            .iter()
+            .map(|c| c.to_string())
+            .collect::<Vec<_>>()
+            .join("/");
+        s += &format!(
+            "{:<14} {:>7} {:>7} {:>9} {:>9} {:>20} {:>9.3} {:>9.3}\n",
+            m.label,
+            m.lp_generated,
+            m.lp_deadline_met(),
+            m.degraded_placements,
+            m.degraded_completions,
+            rungs,
+            m.accuracy_per_deadline_met(),
+            m.delivered_accuracy_rate(),
+        );
+    }
+    s
+}
+
 /// Generative-workload summary — offered load, admission drops, and the
 /// completion headline (all zero on trace-only runs).
 pub fn loadgen(runs: &[Metrics]) -> String {
@@ -308,6 +347,21 @@ pub fn json_row(m: &Metrics) -> String {
     f.push(format!("\"offered_mbits\": {}", json_f64(m.offered_mbits)));
     f.push(format!("\"admission_dropped\": {}", m.admission_dropped));
     f.push(format!("\"offline_dropped\": {}", m.offline_dropped));
+    f.push(format!("\"accuracy_sum\": {}", json_f64(m.accuracy_sum)));
+    f.push(format!(
+        "\"accuracy_per_deadline_met\": {}",
+        json_f64(m.accuracy_per_deadline_met())
+    ));
+    f.push(format!(
+        "\"delivered_accuracy_rate\": {}",
+        json_f64(m.delivered_accuracy_rate())
+    ));
+    f.push(format!("\"degraded_placements\": {}", m.degraded_placements));
+    f.push(format!("\"degraded_completions\": {}", m.degraded_completions));
+    f.push(format!(
+        "\"rung_completions\": [{}]",
+        m.rung_completions.iter().map(|c| c.to_string()).collect::<Vec<_>>().join(", ")
+    ));
     f.push(format!("\"two_core_allocs\": {}", m.two_core_allocs));
     f.push(format!("\"four_core_allocs\": {}", m.four_core_allocs));
     f.push(format!("\"churn_joins\": {}", m.churn_joins));
@@ -405,6 +459,27 @@ mod tests {
     }
 
     #[test]
+    fn accuracy_table_renders_rungs_and_ratios() {
+        let mut m = sample("RAS_r24d3");
+        m.lp_generated = 40;
+        m.lp_completed_initial = 8;
+        m.lp_completed_realloc = 2;
+        m.accuracy_sum = 0.97 * 6.0 + 0.78 * 4.0;
+        m.rung_completions[0] = 6;
+        m.rung_completions[2] = 4;
+        m.degraded_completions = 4;
+        m.degraded_placements = 5;
+        let a = accuracy(&[m.clone()]);
+        assert!(a.contains("RAS_r24d3"));
+        assert!(a.contains("6/0/4"), "per-rung column lost: {a}");
+        assert!(a.contains("mean_acc"));
+        // Ladder-free rows render a single rung-0 count.
+        let plain = sample("WPS_1");
+        let a = accuracy(&[plain]);
+        assert!(a.contains(" 0 "), "{a}");
+    }
+
+    #[test]
     fn faults_table_renders_counters() {
         let mut m = sample("RAS_4F");
         m.device_crashes = 2;
@@ -436,6 +511,11 @@ mod tests {
         assert!(j.contains("\"offered_tasks\": 0"));
         assert!(j.contains("\"admission_dropped\": 0"));
         assert!(j.contains("\"offline_dropped\": 0"));
+        assert!(j.contains("\"accuracy_sum\": 0"));
+        assert!(j.contains("\"accuracy_per_deadline_met\": 0"));
+        assert!(j.contains("\"delivered_accuracy_rate\": 0"));
+        assert!(j.contains("\"degraded_completions\": 0"));
+        assert!(j.contains("\"rung_completions\": [0, 0, 0, 0, 0, 0, 0, 0]"));
         assert!(j.contains("\"reject_reasons\": [0, 0, 0, 0]"));
         assert!(j.contains("\"device_crashes\": 0"));
         assert!(j.contains("\"crash_recovered_in_deadline\": 0"));

@@ -51,7 +51,7 @@ use crate::metrics::Metrics;
 use crate::sim::engine::RunExtras;
 use crate::sim::Engine;
 use crate::time::secs;
-use crate::workload::gen::Workload;
+use crate::workload::gen::{Ladder, Workload};
 use crate::workload::trace::{Trace, TraceSpec};
 
 /// Number of trace frames in a wall-clock experiment duration (the single
@@ -150,6 +150,7 @@ pub struct ScenarioBuilder {
     minutes: f64,
     extras: RunExtras,
     plan: FaultPlan,
+    lp_ladder: Option<Ladder>,
 }
 
 impl Default for ScenarioBuilder {
@@ -170,6 +171,7 @@ impl ScenarioBuilder {
             minutes: 30.0,
             extras: RunExtras::default(),
             plan: FaultPlan::new(),
+            lp_ladder: None,
         }
     }
 
@@ -206,6 +208,18 @@ impl ScenarioBuilder {
             self.spec = *spec;
         }
         self.workload = w;
+        self
+    }
+
+    /// The model-variant axis: attach a ladder to the conveyor's
+    /// low-priority (stage-3) class, letting the scheduler degrade to a
+    /// cheaper DNN variant when the full model cannot meet its deadline
+    /// (see [`crate::workload::gen::variants`]). A one-rung ladder never
+    /// degrades — at accuracy 1.0 it is byte-identical to no ladder at
+    /// all, which `rust/tests/golden_trace.rs` pins. Generative classes
+    /// carry their ladders in the catalog ([`crate::workload::gen::TaskClass::ladder`]).
+    pub fn lp_ladder(mut self, ladder: Ladder) -> Self {
+        self.lp_ladder = Some(ladder);
         self
     }
 
@@ -334,7 +348,8 @@ impl ScenarioBuilder {
     /// # Panics
     ///
     /// On a generative workload whose catalog fails validation (empty,
-    /// zero weights, inverted stage times) — a programming error in the
+    /// zero weights, inverted stage times) or an invalid
+    /// [`ScenarioBuilder::lp_ladder`] — a programming error in the
     /// scenario definition, not a runtime condition.
     pub fn build(self) -> Scenario {
         let (frames, horizon_s, gen) = match &self.workload {
@@ -362,6 +377,27 @@ impl ScenarioBuilder {
             .unwrap_or_else(|| format!("{}_{}", self.kind.label(), self.workload.label()));
         let mut extras = self.extras;
         extras.gen = gen;
+        if let Some(ladder) = &self.lp_ladder {
+            ladder.validate().expect("invalid model-variant ladder");
+            let compiled = ladder.compile(&self.cfg);
+            // Same sync rule Catalog::validate enforces for generative
+            // classes: rung 0 IS the model the tasks actually run, so a
+            // conveyor ladder whose rung 0 differs from the stage-3 spec
+            // would claim accuracy for (and step down relative to) a
+            // model the engine never executes.
+            let r0 = &compiled[0];
+            assert!(
+                r0.input_bytes == self.cfg.image_bytes
+                    && r0.proc_us == [self.cfg.lp2_proc(), self.cfg.lp4_proc()],
+                "invalid model-variant ladder: rung 0 must equal the conveyor stage-3 spec \
+                 ({} input bytes, {:?} µs) — got {} bytes, {:?} µs",
+                self.cfg.image_bytes,
+                [self.cfg.lp2_proc(), self.cfg.lp4_proc()],
+                r0.input_bytes,
+                r0.proc_us,
+            );
+            extras.lp_ladder = compiled;
+        }
         self.plan.compile_into(&mut extras, self.cfg.seed, self.cfg.n_devices, horizon_s);
         let trace = Trace::shared(self.spec, self.cfg.n_devices, frames, self.cfg.seed);
         Scenario {
@@ -615,6 +651,53 @@ mod tests {
         assert!(capped.admission_dropped > 0, "a tight cap under burst must drop");
         assert_eq!(open.offered_tasks, capped.offered_tasks, "offered load is pre-admission");
         assert!(capped.frames_total < open.frames_total);
+    }
+
+    #[test]
+    fn lp_ladder_axis_compiles_into_extras() {
+        use crate::workload::gen::Ladder;
+        let cfg = SystemConfig::default();
+        let plain = quick(SchedKind::Ras, 7);
+        assert!(plain.extras.lp_ladder.is_empty(), "no ladder by default");
+        let s = ScenarioBuilder::new()
+            .scheduler(SchedKind::Ras)
+            .trace(TraceSpec::Weighted(2))
+            .frames(8)
+            .seed(7)
+            .lp_ladder(Ladder::stage3_family(&cfg))
+            .build();
+        assert_eq!(s.extras.lp_ladder.len(), 3);
+        assert_eq!(s.extras.lp_ladder[0].proc_us, [cfg.lp2_proc(), cfg.lp4_proc()]);
+        // Same workload point: the ladder axis shares the trace Arc.
+        assert!(std::sync::Arc::ptr_eq(&s.trace, &plain.trace));
+        // The laddered scenario still runs deterministically.
+        assert_eq!(format!("{:?}", s.run()), format!("{:?}", s.run()));
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid model-variant ladder")]
+    fn invalid_ladder_panics_at_build() {
+        use crate::workload::gen::{Ladder, ModelVariant};
+        // Lower rung more expensive than the one above: rejected.
+        let bad = Ladder::new(vec![
+            ModelVariant::new("a", 0.9, 1.0, 2.0, 1.5),
+            ModelVariant::new("b", 0.8, 1.0, 3.0, 2.0),
+        ]);
+        let _ = ScenarioBuilder::new().lp_ladder(bad).frames(4).build();
+    }
+
+    #[test]
+    #[should_panic(expected = "rung 0 must equal the conveyor stage-3 spec")]
+    fn desynced_conveyor_ladder_rung_zero_panics_at_build() {
+        use crate::workload::gen::{Ladder, ModelVariant};
+        // Structurally valid ladder whose rung 0 claims a cheaper model
+        // than the stage-3 spec the conveyor tasks actually run: the
+        // accuracy credit (and the step-down baseline) would be a lie.
+        let desynced = Ladder::new(vec![
+            ModelVariant::new("not-stage3", 0.97, 2.0, 4.0, 3.0),
+            ModelVariant::new("tiny", 0.8, 1.0, 2.0, 1.5),
+        ]);
+        let _ = ScenarioBuilder::new().lp_ladder(desynced).frames(4).build();
     }
 
     #[test]

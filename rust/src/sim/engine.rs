@@ -42,13 +42,24 @@
 //! Terminal tasks (completed, violated, rejected, dropped) release their
 //! slot for reuse, so live slab size tracks in-flight work rather than
 //! the whole run history.
+//!
+//! ## Degraded inference
+//!
+//! Task classes may carry model-variant ladders
+//! ([`crate::workload::gen::variants`]): batch dispatches expose the
+//! tasks' remaining ladder, the schedulers may step down to a cheaper
+//! DNN variant instead of rejecting, and the engine commits the choice —
+//! rewriting the slab tasks' input/stage costs to the chosen rung
+//! ([`Engine::apply_variant`]) and crediting the rung's accuracy to the
+//! delivered-accuracy metrics at completion. Ladder-free runs take none
+//! of these paths and stay byte-identical to the pre-ladder engine.
 
 use std::sync::Arc;
 
 use crate::config::SystemConfig;
 use crate::coordinator::bandwidth::{BandwidthEstimator, ProbeRound};
 use crate::coordinator::scheduler::{Decision, Ops, Outcome, SchedEvent, Scheduler};
-use crate::coordinator::task::{Allocation, DeviceId, FrameId, Task, TaskId};
+use crate::coordinator::task::{Allocation, DeviceId, FrameId, Task, TaskId, VariantRung, MAX_RUNGS};
 use crate::metrics::Metrics;
 use crate::sim::events::{Event, EventQueue, IdBatch};
 use crate::sim::netsim::{FlowId, LossyMedium, Medium, PROBE_FLOW_BASE};
@@ -88,6 +99,13 @@ pub struct RunExtras {
     /// trace (both feed the same queue); `None` leaves the paper's
     /// trace-only path untouched.
     pub gen: Option<GenWorkload>,
+    /// Compiled model-variant ladder for the conveyor's low-priority
+    /// (stage-3) class. Empty = no ladder: the paper's single-model path,
+    /// bit-identical to the pre-ladder engine. A one-rung ladder never
+    /// degrades either (and at accuracy 1.0 is byte-identical too);
+    /// deeper ladders let the schedulers trade accuracy for deadlines.
+    /// Generative classes carry their own ladders in the compiled plan.
+    pub lp_ladder: Vec<VariantRung>,
 }
 
 /// Runtime state of a placed task. Staleness is carried by the slab
@@ -108,6 +126,14 @@ struct TaskRuntime {
 struct TaskSlot {
     task: Task,
     rt: Option<TaskRuntime>,
+    /// Index into the engine's ladder table (0 = no ladder: the task's
+    /// single model at implicit accuracy 1.0).
+    ladder: u16,
+    /// Current ladder rung the task runs at (0 = full accuracy). Bumped
+    /// when a placement degrades; `task.input_bytes` / `task.proc_us`
+    /// are rewritten to the rung at the same moment, so re-placements
+    /// and transfers always see the spec that was actually scheduled.
+    rung: u8,
 }
 
 /// Per-frame pipeline bookkeeping (Fig. 1's three stages), stored densely
@@ -177,6 +203,14 @@ pub struct Engine {
     scratch_orphans: Vec<(TaskId, FrameId)>,
     /// Compiled generative workload (None for trace-only runs).
     gen: Option<GenWorkload>,
+    /// Model-variant ladder table. Index 0 is the empty "no ladder"
+    /// sentinel; the conveyor LP ladder and every laddered generative
+    /// class register their rungs here once at construction.
+    ladders: Vec<Vec<VariantRung>>,
+    /// Ladder index for conveyor low-priority tasks (0 = none).
+    conveyor_ladder: u16,
+    /// Ladder index per generative class (parallel to `gen.classes`).
+    gen_ladders: Vec<u16>,
 }
 
 impl Engine {
@@ -261,6 +295,34 @@ impl Engine {
         if device_speed.len() < cfg.n_devices {
             device_speed.resize(cfg.n_devices, 1.0);
         }
+        // Ladder table: index 0 is the "no ladder" sentinel. The conveyor
+        // LP ladder and every laddered generative class register once
+        // here; tasks carry only the u16 index, so the hot path never
+        // clones rung vectors.
+        let mut ladders: Vec<Vec<VariantRung>> = vec![Vec::new()];
+        let conveyor_ladder = if extras.lp_ladder.is_empty() {
+            0u16
+        } else {
+            ladders.push(extras.lp_ladder.clone());
+            (ladders.len() - 1) as u16
+        };
+        let gen_ladders: Vec<u16> = extras
+            .gen
+            .as_ref()
+            .map(|g| {
+                g.classes
+                    .iter()
+                    .map(|c| {
+                        if c.rungs.is_empty() {
+                            0
+                        } else {
+                            ladders.push(c.rungs.clone());
+                            (ladders.len() - 1) as u16
+                        }
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
         let estimator = BandwidthEstimator::new(&cfg, cfg.link_bps);
         let n_cells = trace.entries.len() * cfg.n_devices;
         Self {
@@ -295,6 +357,9 @@ impl Engine {
             scratch_devices: Vec::with_capacity(cfg.n_devices),
             scratch_orphans: Vec::with_capacity(16),
             gen: extras.gen,
+            ladders,
+            conveyor_ladder,
+            gen_ladders,
             cfg,
             sched,
         }
@@ -340,14 +405,37 @@ impl Engine {
         &self.tasks.get(self.slot_of(id)).expect("task must be live").task
     }
 
-    fn insert_task(&mut self, task: Task) -> SlotRef {
+    /// Insert a fresh task (rung 0 of `ladder`; 0 = no ladder).
+    fn insert_task(&mut self, task: Task, ladder: u16) -> SlotRef {
         let id = task.id as usize;
-        let h = self.tasks.insert(TaskSlot { task, rt: None });
+        let h = self.tasks.insert(TaskSlot { task, rt: None, ladder, rung: 0 });
         if self.task_index.len() <= id {
             self.task_index.resize(id + 1, SlotRef::NULL);
         }
         self.task_index[id] = h;
         h
+    }
+
+    /// Commit a degradation decision: bump each task's rung and rewrite
+    /// its spec to the chosen variant, so the transfer (input bytes) and
+    /// any future re-placement (remaining ladder tail) see the model
+    /// that was actually scheduled. `variant` is relative to the ladder
+    /// tail the dispatch exposed, i.e. to the tasks' current rung.
+    fn apply_variant(&mut self, ids: &[TaskId], variant: Option<u8>) {
+        let Some(k) = variant else { return };
+        if k == 0 {
+            return;
+        }
+        for &id in ids {
+            let h = self.slot_of(id);
+            let slot = self.tasks.get_mut(h).expect("degraded task live");
+            slot.rung += k;
+            let rung = &self.ladders[slot.ladder as usize][slot.rung as usize];
+            // Same respec the degradation policy planned the allocation
+            // with — never a hand-rolled copy that could drift from it.
+            slot.task = slot.task.at_rung(rung);
+            self.metrics.degraded_placements += 1;
+        }
     }
 
     /// Release a terminal task's slot (completed, violated, rejected, or
@@ -446,7 +534,7 @@ impl Engine {
         };
         let id = self.fresh_task_id();
         let task = Task::high(id, frame_id, device, self.now, &self.cfg);
-        self.insert_task(task);
+        self.insert_task(task, 0);
         // Request travels to the controller.
         self.queue.push(self.now + self.cfg.control_latency(), Event::HpArrive { task: id });
     }
@@ -459,7 +547,15 @@ impl Engine {
     fn on_gen_arrive(&mut self, index: usize) {
         let Some(gen) = &self.gen else { return };
         let arrival = gen.arrivals[index];
-        let class = gen.classes[arrival.class as usize].clone();
+        // Copy the flat class fields only — never clone the class: its
+        // ladder Vec lives once in the engine's ladder table, and this
+        // path fires once per arrival of a potentially million-arrival
+        // plan.
+        let (priority, deadline_us, input_bytes, proc_us, batch) = {
+            let c = &gen.classes[arrival.class as usize];
+            (c.priority, c.deadline_us, c.input_bytes, c.proc_us, c.batch)
+        };
+        let ladder = self.gen_ladders.get(arrival.class as usize).copied().unwrap_or(0);
         let cap = gen.admission_cap;
         // Chain the next planned arrival first, unconditionally — the
         // plan must keep unrolling even when this arrival is dropped.
@@ -467,17 +563,17 @@ impl Engine {
             let at = next.at;
             self.queue.push(at, Event::GenArrive { index: index + 1 });
         }
-        let count = if class.priority == crate::coordinator::task::Priority::High {
+        let count = if priority == crate::coordinator::task::Priority::High {
             1
         } else {
-            class.batch.max(1)
+            batch.max(1)
         };
         // Offered-load accounting happens before any drop: the
         // denominator of every drop/completion rate is what the
         // generator *asked* for, outages included.
         self.metrics.gen_arrivals += 1;
         self.metrics.offered_tasks += count as u64;
-        self.metrics.offered_mbits += count as f64 * class.input_bytes as f64 * 8.0 / 1e6;
+        self.metrics.offered_mbits += count as f64 * input_bytes as f64 * 8.0 / 1e6;
         if !self.device_active(arrival.source) {
             // The client's device is out of the fleet (churn/crash
             // outage): the work is offered but has nowhere to originate.
@@ -489,7 +585,7 @@ impl Engine {
             return;
         }
         let frame_id = self.frames.len() as FrameId;
-        let is_hp = class.priority == crate::coordinator::task::Priority::High;
+        let is_hp = priority == crate::coordinator::task::Priority::High;
         self.frames.push(FrameState {
             tracked: true,
             lp_expected: if is_hp { 0 } else { count },
@@ -498,7 +594,7 @@ impl Engine {
             hp_done: !is_hp,
             failed: false,
             counted: false,
-            deadline: self.now + class.deadline_us,
+            deadline: self.now + deadline_us,
         });
         self.metrics.frames_total += 1;
         if is_hp {
@@ -509,12 +605,12 @@ impl Engine {
                 frame_id,
                 arrival.source,
                 self.now,
-                class.priority,
-                class.deadline_us,
-                class.input_bytes,
-                class.proc_us,
+                priority,
+                deadline_us,
+                input_bytes,
+                proc_us,
             );
-            self.insert_task(task);
+            self.insert_task(task, 0);
             self.queue.push(self.now + self.cfg.control_latency(), Event::HpArrive { task: id });
         } else {
             self.metrics.lp_generated += count as u64;
@@ -526,12 +622,12 @@ impl Engine {
                     frame_id,
                     arrival.source,
                     self.now,
-                    class.priority,
-                    class.deadline_us,
-                    class.input_bytes,
-                    class.proc_us,
+                    priority,
+                    deadline_us,
+                    input_bytes,
+                    proc_us,
                 );
-                self.insert_task(task);
+                self.insert_task(task, ladder);
                 ids.push(id);
             }
             let at = self.now + self.cfg.control_latency();
@@ -548,7 +644,7 @@ impl Engine {
         let frame = self.tasks.get(h).expect("hp task live at arrival").task.frame;
         // Borrow the task straight out of the slab for the dispatch — the
         // scheduler sees `&Task`, nothing is cloned.
-        let Decision { outcome, ops } = {
+        let Decision { outcome, ops, .. } = {
             let task = &self.tasks.get(h).expect("hp task live at arrival").task;
             self.sched.on_event(service_start, SchedEvent::HighPriority { task })
         };
@@ -659,10 +755,11 @@ impl Engine {
         // Stage 2 found recyclable waste: spawn the low-priority request.
         if lp_expected > 0 {
             let mut ids = IdBatch::new();
+            let ladder = self.conveyor_ladder;
             for _ in 0..lp_expected {
                 let id = self.fresh_task_id();
                 let t = Task::low(id, frame, source, self.now, frame_deadline, &self.cfg);
-                self.insert_task(t);
+                self.insert_task(t, ladder);
                 ids.push(id);
             }
             self.metrics.lp_generated += lp_expected as u64;
@@ -681,7 +778,11 @@ impl Engine {
     /// temporary `Vec`). Every id must be live: arrival/requeue/re-offer
     /// paths guarantee it. `realloc: Some(r)` dispatches
     /// [`SchedEvent::LowPriorityBatch`]; `None` dispatches
-    /// [`SchedEvent::Reoffer`].
+    /// [`SchedEvent::Reoffer`]. The event exposes the batch's remaining
+    /// model-variant ladder (the tail from the tasks' current rung), so
+    /// the scheduler's shared degradation policy can step down instead
+    /// of rejecting; a returned `Decision::variant` is relative to that
+    /// tail and applied through [`Engine::apply_variant`].
     fn dispatch_batch(
         &mut self,
         service_start: SimTime,
@@ -689,7 +790,18 @@ impl Engine {
         realloc: Option<bool>,
     ) -> Decision {
         const STACK: usize = 2 * IdBatch::INLINE;
-        let first = &self.tasks.get(self.slot_of(ids[0])).expect("batch task live").task;
+        let first_slot = self.tasks.get(self.slot_of(ids[0])).expect("batch task live");
+        let (lidx, cur_rung) = (first_slot.ladder as usize, first_slot.rung as usize);
+        debug_assert!(
+            ids.iter().all(|&id| {
+                let s = self.tasks.get(self.slot_of(id)).expect("batch task live");
+                (s.ladder as usize, s.rung as usize) == (lidx, cur_rung)
+            }),
+            "batch members must share one ladder and rung (one arrival = one class)"
+        );
+        let ladder: &[VariantRung] =
+            if lidx == 0 { &[] } else { &self.ladders[lidx][cur_rung..] };
+        let first = &first_slot.task;
         let mut stack: [&Task; STACK] = [first; STACK];
         let mut heap: Vec<&Task> = Vec::new();
         let tasks: &[&Task] = if ids.len() <= STACK {
@@ -705,8 +817,8 @@ impl Engine {
             &heap
         };
         let ev = match realloc {
-            Some(realloc) => SchedEvent::LowPriorityBatch { tasks, realloc },
-            None => SchedEvent::Reoffer { tasks },
+            Some(realloc) => SchedEvent::LowPriorityBatch { tasks, realloc, ladder },
+            None => SchedEvent::Reoffer { tasks, ladder },
         };
         self.sched.on_event(service_start, ev)
     }
@@ -716,7 +828,7 @@ impl Engine {
         debug_assert!(!ids.is_empty(), "LpArrive batches are never empty");
         let arrival = self.now;
         let service_start = self.busy_until.max(arrival);
-        let Decision { outcome, ops } = self.dispatch_batch(service_start, ids, Some(realloc));
+        let Decision { outcome, ops, variant } = self.dispatch_batch(service_start, ids, Some(realloc));
         let (decision, lat) = self.charge(arrival, ops);
         if realloc {
             self.metrics.lat_lp_realloc.record(lat);
@@ -724,7 +836,12 @@ impl Engine {
             self.metrics.lat_lp_alloc.record(lat);
         }
         match outcome {
-            Outcome::LpAllocated { allocs } => self.place_lp_allocs(allocs, decision, realloc, false),
+            Outcome::LpAllocated { allocs } => {
+                // A degraded placement re-specs the tasks before the
+                // transfer/start machinery reads them.
+                self.apply_variant(ids, variant);
+                self.place_lp_allocs(allocs, decision, realloc, false)
+            }
             Outcome::LpRejected => {
                 if !realloc {
                     self.metrics.lp_alloc_failures += batch.len() as u64;
@@ -793,6 +910,7 @@ impl Engine {
         let task_id = slot.task.id;
         let deadline = slot.task.deadline;
         let created_at = slot.task.created_at;
+        let (lidx, rung) = (slot.ladder as usize, slot.rung as usize);
         if self.now > deadline {
             self.metrics.lp_violations += 1;
             self.sched.on_event(self.now, SchedEvent::Violation { task: task_id });
@@ -808,6 +926,17 @@ impl Engine {
         }
         if offloaded {
             self.metrics.offloaded_completed += 1;
+        }
+        // Delivered-accuracy accounting: a completion delivers its
+        // rung's inference accuracy (1.0 for ladder-less tasks —
+        // identical to an explicit one-rung ladder at accuracy 1.0, so
+        // the no-degradation path stays byte-identical). Violations and
+        // drops deliver nothing and are never counted here.
+        let accuracy = if lidx == 0 { 1.0 } else { self.ladders[lidx][rung].accuracy };
+        self.metrics.accuracy_sum += accuracy;
+        self.metrics.rung_completions[rung.min(MAX_RUNGS - 1)] += 1;
+        if rung > 0 {
+            self.metrics.degraded_completions += 1;
         }
         if reoffered {
             // A crash-lost task made it back inside its original deadline.
@@ -1144,11 +1273,14 @@ impl Engine {
         let ids = live.as_slice();
         let arrival = self.now;
         let service_start = self.busy_until.max(arrival);
-        let Decision { outcome, ops } = self.dispatch_batch(service_start, ids, None);
+        let Decision { outcome, ops, variant } = self.dispatch_batch(service_start, ids, None);
         let (decision, lat) = self.charge(arrival, ops);
         self.metrics.lat_lp_realloc.record(lat);
         match outcome {
-            Outcome::LpAllocated { allocs } => self.place_lp_allocs(allocs, decision, true, true),
+            Outcome::LpAllocated { allocs } => {
+                self.apply_variant(ids, variant);
+                self.place_lp_allocs(allocs, decision, true, true)
+            }
             Outcome::LpRejected => {
                 self.metrics.crash_reoffer_dropped += live.len() as u64;
                 let frame = self.task(ids[0]).frame;
@@ -1290,6 +1422,49 @@ mod tests {
         assert!(
             peak < eng.metrics.hp_generated as usize + eng.metrics.lp_generated as usize,
             "peak live tasks ({peak}) should stay below the whole run history"
+        );
+    }
+
+    #[test]
+    fn conveyor_ladder_trades_accuracy_for_completions() {
+        use crate::workload::gen::variants::Ladder;
+        // A frame period no full-model configuration can meet (the
+        // four-core stage alone takes ~11.96 s padded): without a ladder
+        // every stage-3 task is rejected outright; with the stage-3
+        // family attached the schedulers step down and deliver degraded
+        // inferences instead of nothing.
+        let mut cfg = SystemConfig::default();
+        cfg.seed = 33;
+        cfg.frame_period_s = 12.0;
+        let trace = Arc::new(Trace::generate(TraceSpec::Weighted(3), cfg.n_devices, 10, 33));
+        let rungs = Ladder::stage3_family(&cfg).compile(&cfg);
+        let run = |lp_ladder: Vec<VariantRung>| {
+            let extras = RunExtras { lp_ladder, ..Default::default() };
+            Engine::with_extras(
+                cfg.clone(),
+                Box::new(RasScheduler::new(&cfg, 0, cfg.link_bps)),
+                Arc::clone(&trace),
+                "ladder",
+                extras,
+            )
+            .run()
+        };
+        let plain = run(Vec::new());
+        assert_eq!(plain.lp_completed_total(), 0, "12 s period fits no full-model config");
+        assert_eq!(plain.accuracy_sum, 0.0);
+        let laddered = run(rungs);
+        let done = laddered.lp_completed_total();
+        assert!(done > 0, "degradation should rescue stage-3 work");
+        // Every completion ran a degraded rung, and the accounting
+        // identities close.
+        assert_eq!(laddered.rung_completions[0], 0);
+        assert_eq!(laddered.degraded_completions, done);
+        assert_eq!(laddered.rung_completions.iter().sum::<u64>(), done);
+        assert!(laddered.degraded_placements >= laddered.degraded_completions);
+        let mean = laddered.accuracy_per_deadline_met();
+        assert!(
+            (0.78 - 1e-9..=0.92 + 1e-9).contains(&mean),
+            "mean delivered accuracy {mean} must sit within the degraded rungs"
         );
     }
 

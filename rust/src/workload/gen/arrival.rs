@@ -173,33 +173,80 @@ impl ArrivalProcess {
     /// * `diurnal:BASE_RATE:AMPLITUDE:PERIOD_S`
     /// * `closed:USERS:THINK_S`
     ///
-    /// Rates are arrivals per minute.
+    /// Rates are arrivals per minute. Parsing is strict: wrong field
+    /// counts, non-numeric or non-finite fields, and values outside each
+    /// process's domain (negative rates, zero periods, amplitude outside
+    /// [0, 1], a zero-user population) are errors — never a panic and
+    /// never a silently-degenerate process.
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         let parts: Vec<&str> = s.split(':').collect();
         let num = |i: usize, what: &str| -> anyhow::Result<f64> {
-            parts
+            let v = parts
                 .get(i)
                 .ok_or_else(|| anyhow::anyhow!("arrival spec '{s}' is missing {what}"))?
                 .parse::<f64>()
-                .map_err(|_| anyhow::anyhow!("arrival spec '{s}': bad {what}"))
+                .map_err(|_| anyhow::anyhow!("arrival spec '{s}': bad {what}"))?;
+            anyhow::ensure!(v.is_finite(), "arrival spec '{s}': {what} must be finite");
+            Ok(v)
+        };
+        let arity = |n: usize| -> anyhow::Result<()> {
+            anyhow::ensure!(
+                parts.len() == n,
+                "arrival spec '{s}' has {} fields, expected {n}",
+                parts.len()
+            );
+            Ok(())
         };
         let p = match parts[0] {
-            "poisson" => ArrivalProcess::Poisson { rate_per_min: num(1, "rate")? },
-            "mmpp" => ArrivalProcess::Mmpp {
-                on_rate_per_min: num(1, "on rate")?,
-                off_rate_per_min: num(2, "off rate")?,
-                mean_on_s: num(3, "mean on seconds")?,
-                mean_off_s: num(4, "mean off seconds")?,
-            },
-            "diurnal" => ArrivalProcess::Diurnal {
-                base_rate_per_min: num(1, "base rate")?,
-                amplitude: num(2, "amplitude")?,
-                period_s: num(3, "period seconds")?,
-            },
-            "closed" => ArrivalProcess::ClosedLoop {
-                users: num(1, "users")? as u32,
-                think_s: num(2, "think seconds")?,
-            },
+            "poisson" => {
+                arity(2)?;
+                let rate_per_min = num(1, "rate")?;
+                anyhow::ensure!(rate_per_min > 0.0, "arrival spec '{s}': rate must be > 0");
+                ArrivalProcess::Poisson { rate_per_min }
+            }
+            "mmpp" => {
+                arity(5)?;
+                let on = num(1, "on rate")?;
+                let off = num(2, "off rate")?;
+                let mean_on_s = num(3, "mean on seconds")?;
+                let mean_off_s = num(4, "mean off seconds")?;
+                anyhow::ensure!(on >= 0.0 && off >= 0.0, "arrival spec '{s}': negative rate");
+                anyhow::ensure!(on + off > 0.0, "arrival spec '{s}': both rates are zero");
+                anyhow::ensure!(
+                    mean_on_s > 0.0 && mean_off_s > 0.0,
+                    "arrival spec '{s}': segment means must be > 0"
+                );
+                ArrivalProcess::Mmpp {
+                    on_rate_per_min: on,
+                    off_rate_per_min: off,
+                    mean_on_s,
+                    mean_off_s,
+                }
+            }
+            "diurnal" => {
+                arity(4)?;
+                let base_rate_per_min = num(1, "base rate")?;
+                let amplitude = num(2, "amplitude")?;
+                let period_s = num(3, "period seconds")?;
+                anyhow::ensure!(base_rate_per_min > 0.0, "arrival spec '{s}': base rate must be > 0");
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&amplitude),
+                    "arrival spec '{s}': amplitude must be in [0, 1]"
+                );
+                anyhow::ensure!(period_s > 0.0, "arrival spec '{s}': period must be > 0");
+                ArrivalProcess::Diurnal { base_rate_per_min, amplitude, period_s }
+            }
+            "closed" => {
+                arity(3)?;
+                let users = num(1, "users")?;
+                let think_s = num(2, "think seconds")?;
+                anyhow::ensure!(
+                    users >= 1.0 && users.fract() == 0.0 && users <= u32::MAX as f64,
+                    "arrival spec '{s}': users must be a positive integer"
+                );
+                anyhow::ensure!(think_s >= 0.0, "arrival spec '{s}': negative think time");
+                ArrivalProcess::ClosedLoop { users: users as u32, think_s }
+            }
             other => anyhow::bail!(
                 "unknown arrival process: {other} (poisson | mmpp | diurnal | closed)"
             ),
@@ -398,5 +445,40 @@ mod tests {
         assert!(ArrivalProcess::parse("mmpp:40:1").is_err());
         assert!(ArrivalProcess::parse("sawtooth:1").is_err());
         assert_eq!(ArrivalProcess::parse("poisson:6").unwrap().label(), "poisson6");
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs_with_errors_not_panics() {
+        // Every rejection is an Err — `medge loadgen --procs` surfaces
+        // it as a CLI error instead of a panic or a silent no-op plan.
+        for bad in [
+            "",                    // no process name
+            "poisson:",            // empty rate
+            "poisson:abc",         // non-numeric
+            "poisson:0",           // zero rate → empty plan
+            "poisson:-4",          // negative rate
+            "poisson:inf",         // non-finite
+            "poisson:nan",         // non-finite
+            "poisson:6:9",         // extra field
+            "mmpp:-1:1:20:60",     // negative on rate
+            "mmpp:0:0:20:60",      // both rates zero
+            "mmpp:40:1:0:60",      // zero segment mean
+            "mmpp:40:1:20:60:9",   // extra field
+            "diurnal:0:0.5:600",   // zero base rate
+            "diurnal:10:1.5:600",  // amplitude out of [0,1]
+            "diurnal:10:-0.1:600", // negative amplitude
+            "diurnal:10:0.5:0",    // zero period
+            "closed:0:30",         // empty population
+            "closed:2.5:30",       // fractional users
+            "closed:-3:30",        // negative users
+            "closed:3:-1",         // negative think time
+        ] {
+            assert!(ArrivalProcess::parse(bad).is_err(), "spec '{bad}' should be rejected");
+        }
+        // Boundary values that are valid stay valid.
+        assert!(ArrivalProcess::parse("diurnal:10:0:600").is_ok(), "amplitude 0 is flat");
+        assert!(ArrivalProcess::parse("diurnal:10:1:600").is_ok(), "amplitude 1 is full swing");
+        assert!(ArrivalProcess::parse("closed:1:0").is_ok(), "one user, zero think");
+        assert!(ArrivalProcess::parse("mmpp:40:0:20:60").is_ok(), "silent OFF state is fine");
     }
 }

@@ -13,6 +13,8 @@ use crate::config::SystemConfig;
 use crate::coordinator::task::Priority;
 use crate::time::{secs, SimDuration};
 
+use super::variants::Ladder;
+
 /// Four-core parallel efficiency implied by the paper's benchmarks:
 /// 16.862 s on two cores vs 11.611 s on four is a 1.45× speed-up for a
 /// 2× core increase, i.e. ≈0.726 efficiency. [`TaskClass::from_flops`]
@@ -43,6 +45,12 @@ pub struct TaskClass {
     pub batch: u32,
     /// Unnormalised mix weight (chance this class is drawn per arrival).
     pub weight: f64,
+    /// Model-variant ladder (ordered, rung 0 = full accuracy). Empty =
+    /// the class's single spec compiles to an implicit one-rung ladder
+    /// at accuracy 1.0, bit-identical to the pre-ladder behaviour. Set
+    /// through [`TaskClass::ladder`], which keeps the class spec synced
+    /// to rung 0. Low-priority classes only — HP work never degrades.
+    pub variants: Vec<super::variants::ModelVariant>,
 }
 
 impl TaskClass {
@@ -57,6 +65,7 @@ impl TaskClass {
             proc4_s,
             batch: 1,
             weight: 1.0,
+            variants: Vec::new(),
         }
     }
 
@@ -71,6 +80,7 @@ impl TaskClass {
             proc4_s: proc_s,
             batch: 1,
             weight: 1.0,
+            variants: Vec::new(),
         }
     }
 
@@ -99,6 +109,20 @@ impl TaskClass {
         self
     }
 
+    /// Attach a model-variant ladder. Rung 0 becomes the class's own
+    /// spec (input/stage times are synced to it), so an attached ladder
+    /// *replaces* the single-model cost — the class never runs a model
+    /// its ladder doesn't name. Validated by [`Catalog::validate`].
+    pub fn ladder(mut self, ladder: Ladder) -> Self {
+        if let Some(r0) = ladder.rungs.first() {
+            self.input_mbits = r0.input_mbits;
+            self.proc2_s = r0.proc2_s;
+            self.proc4_s = r0.proc4_s;
+        }
+        self.variants = ladder.rungs;
+        self
+    }
+
     /// Compiled integer form the engine consumes. Low-priority plan
     /// durations are mean + the system padding (the engine subtracts the
     /// padding back out and jitters around the mean); high-priority
@@ -111,6 +135,7 @@ impl TaskClass {
             input_bytes: (self.input_mbits * 1e6 / 8.0).round() as u64,
             proc_us: [secs(self.proc2_s + pad), secs(self.proc4_s + pad)],
             batch: self.batch.max(1),
+            rungs: self.variants.iter().map(|v| v.compile(pad)).collect(),
         }
     }
 
@@ -192,6 +217,25 @@ impl Catalog {
                 "class {}: high-priority classes are placed per-task (batch must be 1)",
                 c.name
             );
+            if !c.variants.is_empty() {
+                anyhow::ensure!(
+                    c.priority == Priority::Low,
+                    "class {}: high-priority classes cannot carry a variant ladder",
+                    c.name
+                );
+                Ladder::new(c.variants.clone())
+                    .validate()
+                    .map_err(|e| anyhow::anyhow!("class {}: {e}", c.name))?;
+                let r0 = &c.variants[0];
+                anyhow::ensure!(
+                    r0.input_mbits == c.input_mbits
+                        && r0.proc2_s == c.proc2_s
+                        && r0.proc4_s == c.proc4_s,
+                    "class {}: ladder rung 0 must equal the class spec \
+                     (attach ladders through TaskClass::ladder, which syncs them)",
+                    c.name
+                );
+            }
         }
         Ok(())
     }
@@ -261,6 +305,36 @@ mod tests {
         let hp_batch = Catalog::new(vec![TaskClass::high("h", 2.0, 1.0).batch(3)]);
         assert!(hp_batch.validate().is_err());
         assert!(Catalog::edge_serving(&cfg).validate().is_ok());
+    }
+
+    #[test]
+    fn ladder_attaches_and_syncs_rung_zero() {
+        let cfg = SystemConfig::default();
+        let fam = Ladder::stage3_family(&cfg);
+        let class = TaskClass::low("stage3", cfg.frame_period_s, 0.0, 1.0, 0.8)
+            .batch(2)
+            .ladder(fam.clone());
+        // Rung 0 overwrote the placeholder spec.
+        assert_eq!(class.input_mbits, fam.rungs[0].input_mbits);
+        assert_eq!(class.proc2_s, fam.rungs[0].proc2_s);
+        assert_eq!(class.proc4_s, fam.rungs[0].proc4_s);
+        let cat = Catalog::new(vec![class.clone()]);
+        cat.validate().unwrap();
+        // Compiled class carries compiled rungs; rung 0 equals the
+        // class's own compiled spec (bit-identical by construction).
+        let g = class.compile(&cfg);
+        assert_eq!(g.rungs.len(), 3);
+        assert_eq!(g.rungs[0].input_bytes, g.input_bytes);
+        assert_eq!(g.rungs[0].proc_us, g.proc_us);
+        assert!(g.rungs[2].proc_us[0] < g.rungs[0].proc_us[0]);
+        // HP classes must not carry ladders.
+        let mut hp = TaskClass::high("h", 2.0, 1.0);
+        hp.variants = fam.rungs.clone();
+        assert!(Catalog::new(vec![hp]).validate().is_err());
+        // A desynced rung 0 (hand-set variants) is rejected.
+        let mut desync = TaskClass::low("x", 20.0, 4.0, 8.0, 6.0);
+        desync.variants = fam.rungs;
+        assert!(Catalog::new(vec![desync]).validate().is_err());
     }
 
     #[test]

@@ -107,6 +107,10 @@ pub struct GenClass {
     /// both entries).
     pub proc_us: [SimDuration; 2],
     pub batch: u32,
+    /// Compiled model-variant ladder (rung 0 equals this class's own
+    /// spec by construction). Empty = no explicit ladder: the class runs
+    /// its single model at implicit accuracy 1.0 and never degrades.
+    pub rungs: Vec<crate::coordinator::task::VariantRung>,
 }
 
 /// One planned arrival: `batch` tasks of `class` from `source` at `at`.

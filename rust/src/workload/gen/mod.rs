@@ -11,6 +11,10 @@
 //! * [`catalog::TaskClass`] / [`catalog::Catalog`] — *what* arrives:
 //!   per-class priority, deadline, input megabits, per-stage cost
 //!   (seconds or FLOPs), batch size, mix weight.
+//! * [`variants::Ladder`] / [`variants::ModelVariant`] — *how well* it
+//!   runs: per-class model-variant ladders (full / distilled / tiny)
+//!   that let the schedulers trade inference accuracy for deadline
+//!   compliance under pressure.
 //! * [`driver::GenSpec`] → [`driver::GenWorkload`] — the open-loop
 //!   driver: compiles (process × catalog) into the concrete arrival plan
 //!   the engine's event queue executes, with offered-load and
@@ -25,7 +29,9 @@
 pub mod arrival;
 pub mod catalog;
 pub mod driver;
+pub mod variants;
 
 pub use arrival::{empirical_rate_per_min, index_of_dispersion, ArrivalProcess};
 pub use catalog::{Catalog, TaskClass, FOUR_CORE_EFFICIENCY};
 pub use driver::{GenArrival, GenClass, GenSpec, GenWorkload, Workload};
+pub use variants::{Ladder, ModelVariant};

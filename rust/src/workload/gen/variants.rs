@@ -1,0 +1,234 @@
+//! Model-variant ladders: the degraded-inference accuracy axis.
+//!
+//! Real edge serving does not run one DNN per task class — it keeps a
+//! *family* of model variants (full / distilled / quantised / tiny) and
+//! trades inference accuracy for latency when the deadline is at risk
+//! (Fresa & Champati; Yao et al.'s imprecise-computation scheduling). A
+//! [`Ladder`] is that family as an ordered list of [`ModelVariant`]s:
+//! rung 0 is the full-accuracy model, every lower rung is cheaper on
+//! every axis (accuracy, input size, both stage times — validated).
+//!
+//! The compiled form ([`VariantRung`]) flows to the schedulers through
+//! [`crate::coordinator::scheduler::SchedEvent::LowPriorityBatch`]; the
+//! shared degradation policy
+//! ([`crate::coordinator::scheduler::place_degrading`]) tries the
+//! full-accuracy rung first and steps down only when the scheduler's own
+//! state says the rung is infeasible — so RAS (conservative windows) and
+//! WPS (exact state) genuinely *disagree about when degradation is
+//! necessary*, which is the paper's accuracy-vs-performance trade-off
+//! made literal. A one-rung ladder never degrades and decides
+//! bit-identically to having no ladder at all.
+
+use crate::config::SystemConfig;
+use crate::coordinator::task::{VariantRung, MAX_RUNGS};
+use crate::time::secs;
+
+/// One model variant of a task class: the accuracy it delivers and what
+/// it costs. Stage times are *benchmark means* like
+/// [`crate::workload::gen::TaskClass`]'s — compilation adds the system's
+/// low-priority `proc_padding_s`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelVariant {
+    pub name: String,
+    /// Delivered inference accuracy in (0, 1].
+    pub accuracy: f64,
+    /// Input transferred on offload, megabits.
+    pub input_mbits: f64,
+    /// Two-core stage time (benchmark mean), seconds.
+    pub proc2_s: f64,
+    /// Four-core stage time (benchmark mean), seconds.
+    pub proc4_s: f64,
+}
+
+impl ModelVariant {
+    pub fn new(name: &str, accuracy: f64, input_mbits: f64, proc2_s: f64, proc4_s: f64) -> Self {
+        Self { name: name.to_string(), accuracy, input_mbits, proc2_s, proc4_s }
+    }
+
+    /// Compiled integer form (padding in seconds, added to both stage
+    /// times exactly like `TaskClass::compile` pads low-priority plans).
+    pub(crate) fn compile(&self, pad_s: f64) -> VariantRung {
+        VariantRung {
+            accuracy: self.accuracy,
+            input_bytes: (self.input_mbits * 1e6 / 8.0).round() as u64,
+            proc_us: [secs(self.proc2_s + pad_s), secs(self.proc4_s + pad_s)],
+        }
+    }
+}
+
+/// An ordered model-variant family: rung 0 = full accuracy, descending.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Ladder {
+    pub rungs: Vec<ModelVariant>,
+}
+
+impl Ladder {
+    pub fn new(rungs: Vec<ModelVariant>) -> Self {
+        Self { rungs }
+    }
+
+    /// A one-rung ladder (degradation disabled; decisions and runs are
+    /// bit-identical to having no ladder when `accuracy` is 1.0).
+    pub fn single(v: ModelVariant) -> Self {
+        Self { rungs: vec![v] }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.rungs.len()
+    }
+
+    /// The top `depth` rungs (at least one) — the frontier grids sweep
+    /// ladder depth with this.
+    pub fn truncated(&self, depth: usize) -> Ladder {
+        let depth = depth.clamp(1, self.rungs.len().max(1));
+        Ladder { rungs: self.rungs.iter().take(depth).cloned().collect() }
+    }
+
+    /// Structural validity: non-empty, bounded depth, accuracies in
+    /// (0, 1], positive stage times with `proc4 ≤ proc2` per rung, and
+    /// monotone descent — a lower rung is never more expensive (or more
+    /// accurate) than the rung above it on *any* axis, which is what
+    /// makes "step down on infeasibility" a sound policy.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.rungs.is_empty(), "ladder has no rungs");
+        anyhow::ensure!(
+            self.rungs.len() <= MAX_RUNGS,
+            "ladder depth {} exceeds the supported maximum {MAX_RUNGS}",
+            self.rungs.len()
+        );
+        for (i, r) in self.rungs.iter().enumerate() {
+            anyhow::ensure!(
+                r.accuracy > 0.0 && r.accuracy <= 1.0,
+                "rung {} ({}): accuracy must be in (0, 1], got {}",
+                i,
+                r.name,
+                r.accuracy
+            );
+            anyhow::ensure!(
+                r.proc2_s > 0.0 && r.proc4_s > 0.0,
+                "rung {} ({}): non-positive stage time",
+                i,
+                r.name
+            );
+            anyhow::ensure!(
+                r.proc4_s <= r.proc2_s,
+                "rung {} ({}): four-core time must not exceed two-core time",
+                i,
+                r.name
+            );
+            anyhow::ensure!(r.input_mbits >= 0.0, "rung {} ({}): negative input", i, r.name);
+            if i > 0 {
+                let up = &self.rungs[i - 1];
+                anyhow::ensure!(
+                    r.accuracy <= up.accuracy
+                        && r.proc2_s <= up.proc2_s
+                        && r.proc4_s <= up.proc4_s
+                        && r.input_mbits <= up.input_mbits,
+                    "rung {} ({}) must be no more accurate and no more expensive than rung {} ({})",
+                    i,
+                    r.name,
+                    i - 1,
+                    up.name
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Compile to the integer rungs the engine and schedulers consume
+    /// (low-priority padding applied to every rung's stage times).
+    pub fn compile(&self, cfg: &SystemConfig) -> Vec<VariantRung> {
+        self.rungs.iter().map(|v| v.compile(cfg.proc_padding_s)).collect()
+    }
+
+    /// A three-rung family built from the paper's stage-3 benchmark
+    /// model: the full model, a distilled variant (~55 % of the compute
+    /// and half the input for ~5 points of accuracy), and a tiny variant
+    /// (~25 % compute, quarter input, ~19 points down). The accuracy
+    /// numbers follow the usual full/distilled/tiny spread of DNN model
+    /// families; the costs scale the paper's measured stage times.
+    pub fn stage3_family(cfg: &SystemConfig) -> Ladder {
+        let image_mbits = cfg.image_bytes as f64 * 8.0 / 1e6;
+        Ladder::new(vec![
+            ModelVariant::new("stage3-full", 0.97, image_mbits, cfg.lp2_proc_s, cfg.lp4_proc_s),
+            ModelVariant::new(
+                "stage3-distilled",
+                0.92,
+                image_mbits * 0.5,
+                cfg.lp2_proc_s * 0.55,
+                cfg.lp4_proc_s * 0.55,
+            ),
+            ModelVariant::new(
+                "stage3-tiny",
+                0.78,
+                image_mbits * 0.25,
+                cfg.lp2_proc_s * 0.25,
+                cfg.lp4_proc_s * 0.25,
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage3_family_is_valid_and_descending() {
+        let cfg = SystemConfig::default();
+        let fam = Ladder::stage3_family(&cfg);
+        fam.validate().unwrap();
+        assert_eq!(fam.depth(), 3);
+        assert!(fam.rungs.windows(2).all(|w| w[1].accuracy < w[0].accuracy));
+        assert!(fam.rungs.windows(2).all(|w| w[1].proc2_s < w[0].proc2_s));
+        // Rung 0 is exactly the paper's stage-3 spec.
+        let compiled = fam.compile(&cfg);
+        assert_eq!(compiled[0].proc_us, [cfg.lp2_proc(), cfg.lp4_proc()]);
+        assert_eq!(compiled[0].input_bytes, cfg.image_bytes);
+        assert!((compiled[0].accuracy - 0.97).abs() < 1e-12);
+    }
+
+    #[test]
+    fn truncation_keeps_the_top_rungs() {
+        let cfg = SystemConfig::default();
+        let fam = Ladder::stage3_family(&cfg);
+        assert_eq!(fam.truncated(1).depth(), 1);
+        assert_eq!(fam.truncated(2).rungs[1], fam.rungs[1]);
+        assert_eq!(fam.truncated(99).depth(), 3, "truncation clamps to the family depth");
+        assert_eq!(fam.truncated(0).depth(), 1, "at least one rung always remains");
+    }
+
+    #[test]
+    fn validate_rejects_malformed_ladders() {
+        let mk = |acc: f64, in_mb: f64, p2: f64, p4: f64| ModelVariant::new("v", acc, in_mb, p2, p4);
+        assert!(Ladder::new(vec![]).validate().is_err(), "empty");
+        assert!(Ladder::single(mk(1.5, 1.0, 2.0, 1.5)).validate().is_err(), "accuracy > 1");
+        assert!(Ladder::single(mk(0.9, 1.0, 2.0, 2.5)).validate().is_err(), "proc4 > proc2");
+        assert!(Ladder::single(mk(0.9, 1.0, 0.0, 0.0)).validate().is_err(), "zero stage time");
+        // Non-monotone descent: the lower rung is MORE accurate.
+        let inverted = Ladder::new(vec![mk(0.8, 1.0, 2.0, 1.5), mk(0.9, 0.5, 1.0, 0.8)]);
+        assert!(inverted.validate().is_err());
+        // Non-monotone cost: the lower rung is MORE expensive.
+        let pricier = Ladder::new(vec![mk(0.9, 1.0, 2.0, 1.5), mk(0.8, 1.0, 3.0, 2.0)]);
+        assert!(pricier.validate().is_err());
+        // Depth cap.
+        let deep = Ladder::new(
+            (0..MAX_RUNGS + 1)
+                .map(|i| mk(0.9 - i as f64 * 0.05, 1.0, 2.0, 1.5))
+                .collect(),
+        );
+        assert!(deep.validate().is_err());
+    }
+
+    #[test]
+    fn compile_pads_every_rung() {
+        let cfg = SystemConfig::default();
+        let fam = Ladder::stage3_family(&cfg);
+        let compiled = fam.compile(&cfg);
+        for (v, r) in fam.rungs.iter().zip(&compiled) {
+            assert_eq!(r.proc_us[0], secs(v.proc2_s + cfg.proc_padding_s));
+            assert_eq!(r.proc_us[1], secs(v.proc4_s + cfg.proc_padding_s));
+            assert_eq!(r.input_bytes, (v.input_mbits * 1e6 / 8.0).round() as u64);
+        }
+    }
+}

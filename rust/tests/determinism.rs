@@ -85,6 +85,89 @@ fn gen_grid() -> Sweep {
     sweep
 }
 
+/// The degradation axis: 3 schedulers × 2 ladder depths (1 = the
+/// no-degradation twin, 3 = the full stage-3 family) under bursty MMPP
+/// pressure with a mid-run crash and a lossy link. Degraded placements
+/// re-spec tasks and re-enter the requeue/re-offer machinery, so this
+/// grid exercises every ladder path the engine has — and must still be
+/// identical across worker-thread counts and repeated runs.
+fn accuracy_grid() -> Sweep {
+    let cfg = medge::config::SystemConfig::default();
+    let mut sweep = Sweep::new();
+    for (i, kind) in [SchedKind::Wps, SchedKind::Ras, SchedKind::Multi].into_iter().enumerate() {
+        for (j, depth) in [1usize, 3].into_iter().enumerate() {
+            sweep = sweep.add(
+                ScenarioBuilder::new()
+                    .scheduler(kind)
+                    .workload(Workload::generative(
+                        medge::experiments::frontier_arrivals(30.0),
+                        medge::experiments::frontier_catalog(&cfg, depth),
+                    ))
+                    .minutes(8.0)
+                    .seed(500 + (i * 2 + j) as u64)
+                    .crash_at(120.0, 1)
+                    .recover_at(240.0, 1)
+                    .loss_rate(0.05)
+                    .probe_loss(0.2)
+                    .named(format!("{}_d{}", kind.label(), depth))
+                    .build(),
+            );
+        }
+    }
+    sweep
+}
+
+#[test]
+fn accuracy_grid_identical_across_thread_counts() {
+    let g = accuracy_grid();
+    let seq = rows_debug(&g.clone().threads(1));
+    let par4 = rows_debug(&g.clone().threads(4));
+    let par2 = rows_debug(&g.threads(2));
+    assert_eq!(seq.len(), 6);
+    for (i, row) in seq.iter().enumerate() {
+        assert_eq!(row, &par4[i], "accuracy row {i} differs between --threads 1 and --threads 4");
+        assert_eq!(row, &par2[i], "accuracy row {i} differs between --threads 1 and --threads 2");
+    }
+}
+
+#[test]
+fn accuracy_grid_identical_across_repeated_runs() {
+    let g = accuracy_grid().threads(4);
+    assert_eq!(rows_debug(&g), rows_debug(&g), "re-running the accuracy sweep must not drift");
+}
+
+#[test]
+fn accuracy_grid_actually_degrades_and_keeps_identities() {
+    // Guard against a silently inert ladder: somewhere in the deep rows
+    // degradation must actually fire, depth-1 twins must never degrade,
+    // and the accounting identities must close through the crash window.
+    let rows = accuracy_grid().threads(2).run();
+    let mut any_degraded = false;
+    for m in &rows {
+        let deep = m.label.ends_with("_d3");
+        if deep {
+            any_degraded |= m.degraded_completions > 0;
+        } else {
+            assert_eq!(m.degraded_completions, 0, "{}: depth-1 twin degraded", m.label);
+            assert_eq!(m.degraded_placements, 0, "{}: depth-1 twin degraded", m.label);
+        }
+        assert_eq!(
+            m.rung_completions.iter().sum::<u64>(),
+            m.lp_deadline_met(),
+            "{}: per-rung completion identity",
+            m.label
+        );
+        // Offered load still closes through degradation + the crash.
+        assert_eq!(
+            m.offered_tasks,
+            m.hp_generated + m.lp_generated + m.admission_dropped + m.offline_dropped,
+            "{}: offered-load identity",
+            m.label
+        );
+    }
+    assert!(any_degraded, "the deep rows should degrade under MMPP pressure");
+}
+
 #[test]
 fn loadgen_grid_identical_across_thread_counts() {
     let g = gen_grid();

@@ -27,9 +27,10 @@ use medge::metrics::report;
 use medge::scenario::{ScenarioBuilder, SchedKind};
 use medge::workload::trace::TraceSpec;
 
-/// The pinned scenario: fixed seed, every scenario feature exercised.
-/// Changing ANY knob here invalidates the snapshots — regenerate.
-fn golden_scenario(kind: SchedKind) -> medge::metrics::Metrics {
+/// The pinned scenario builder: fixed seed, every scenario feature
+/// exercised. Changing ANY knob here invalidates the snapshots —
+/// regenerate.
+fn golden_builder(kind: SchedKind) -> ScenarioBuilder {
     ScenarioBuilder::new()
         .scheduler(kind)
         .trace(TraceSpec::Weighted(3))
@@ -44,8 +45,10 @@ fn golden_scenario(kind: SchedKind) -> medge::metrics::Metrics {
         .loss_rate(0.05)
         .probe_loss(0.25)
         .named(format!("G_{}", kind.label()))
-        .build()
-        .run()
+}
+
+fn golden_scenario(kind: SchedKind) -> medge::metrics::Metrics {
+    golden_builder(kind).build().run()
 }
 
 fn check(name: &str, kind: SchedKind) {
@@ -109,6 +112,38 @@ fn golden_serialization_is_stable() {
     let a = report::json_rows(&[golden_scenario(SchedKind::Ras)]);
     let b = report::json_rows(&[golden_scenario(SchedKind::Ras)]);
     assert_eq!(a, b);
+}
+
+/// Degradation must be provably zero-cost when disabled: the golden
+/// scenario with an explicit ONE-RUNG model-variant ladder (mirroring
+/// the conveyor stage-3 class at accuracy 1.0) replays `json_rows`
+/// **byte-identically** to the ladder-free run, for every scheduler —
+/// through the full churn/fault/congestion path the snapshots pin. This
+/// is also what keeps the checked-in goldens valid across the ladder
+/// PR: the pre-ladder rows and the one-rung rows are the same bytes.
+#[test]
+fn one_rung_ladder_replays_golden_rows_byte_for_byte() {
+    use medge::config::SystemConfig;
+    use medge::workload::gen::{Ladder, ModelVariant};
+    let cfg = SystemConfig::default();
+    let one_rung = Ladder::single(ModelVariant::new(
+        "stage3-full",
+        1.0,
+        cfg.image_bytes as f64 * 8.0 / 1e6,
+        cfg.lp2_proc_s,
+        cfg.lp4_proc_s,
+    ));
+    for kind in [SchedKind::Wps, SchedKind::Ras, SchedKind::Multi] {
+        let plain = report::json_rows(&[golden_scenario(kind)]);
+        let laddered =
+            report::json_rows(&[golden_builder(kind).lp_ladder(one_rung.clone()).build().run()]);
+        assert_eq!(
+            plain,
+            laddered,
+            "{}: a one-rung ladder must be byte-identical to no ladder",
+            kind.label()
+        );
+    }
 }
 
 /// Determinism assertion for the fault path specifically: the golden

@@ -144,21 +144,7 @@ fn replay_legacy<S: LegacyDrive>(s: &mut S, evs: &[(SimTime, Ev)]) -> Vec<Decisi
 }
 
 fn replay_typed(s: &mut dyn Scheduler, evs: &[(SimTime, Ev)]) -> Vec<Decision> {
-    evs.iter()
-        .map(|(now, ev)| {
-            let ev = match ev {
-                Ev::Hp(t) => SchedEvent::HighPriority { task: t },
-                Ev::Lp(ts, r) => {
-                    let refs = task_refs(ts);
-                    return s.on_event(*now, SchedEvent::LowPriorityBatch { tasks: &refs, realloc: *r });
-                }
-                Ev::Complete(t) => SchedEvent::Complete { task: *t },
-                Ev::Violation(t) => SchedEvent::Violation { task: *t },
-                Ev::Bw(b) => SchedEvent::BandwidthUpdate { bps: *b },
-            };
-            s.on_event(*now, ev)
-        })
-        .collect()
+    replay_laddered(s, evs, &[])
 }
 
 fn assert_streams_equal(legacy: &[Decision], typed: &[Decision], who: &str) {
@@ -225,6 +211,115 @@ fn equivalence_holds_across_random_seeds() {
     });
 }
 
+/// Replay the typed stream with every LP batch carrying `ladder` (the
+/// Ev stream only generates conveyor-shaped LP tasks, so one rung spec
+/// fits every batch).
+fn replay_laddered(
+    s: &mut dyn Scheduler,
+    evs: &[(SimTime, Ev)],
+    ladder: &[medge::coordinator::task::VariantRung],
+) -> Vec<Decision> {
+    evs.iter()
+        .map(|(now, ev)| {
+            let ev = match ev {
+                Ev::Hp(t) => SchedEvent::HighPriority { task: t },
+                Ev::Lp(ts, r) => {
+                    let refs = task_refs(ts);
+                    return s.on_event(
+                        *now,
+                        SchedEvent::LowPriorityBatch { tasks: &refs, realloc: *r, ladder },
+                    );
+                }
+                Ev::Complete(t) => SchedEvent::Complete { task: *t },
+                Ev::Violation(t) => SchedEvent::Violation { task: *t },
+                Ev::Bw(b) => SchedEvent::BandwidthUpdate { bps: *b },
+            };
+            s.on_event(*now, ev)
+        })
+        .collect()
+}
+
+/// Degradation must be provably zero-cost when disabled: a one-rung
+/// ladder (mirroring the conveyor class at accuracy 1.0) produces the
+/// *same `Decision` stream* — outcomes, ops, variant, and internal RNG
+/// evolution — as dispatching with no ladder at all, for both
+/// schedulers, over a long random event stream. Combined with the
+/// legacy-equivalence tests above, this chains one-rung-ladder ≡
+/// no-ladder ≡ the pre-redesign callback surface.
+#[test]
+fn one_rung_ladder_decides_identically_to_no_ladder() {
+    use medge::coordinator::task::VariantRung;
+    let cfg = SystemConfig { seed: 42, ..Default::default() };
+    let one_rung = [VariantRung {
+        accuracy: 1.0,
+        input_bytes: cfg.image_bytes,
+        proc_us: [cfg.lp2_proc(), cfg.lp4_proc()],
+    }];
+    for (tag, seed) in [("RAS", 0xACC_01u64), ("WPS", 0xACC_02)] {
+        let evs = gen_events(&mut Rng::seed_from_u64(seed), &cfg, 800);
+        let (bare, laddered) = if tag == "RAS" {
+            let mut a = RasScheduler::new(&cfg, 0, cfg.link_bps);
+            let mut b = RasScheduler::new(&cfg, 0, cfg.link_bps);
+            (replay_typed(&mut a, &evs), replay_laddered(&mut b, &evs, &one_rung))
+        } else {
+            let mut a = WpsScheduler::new(&cfg, 0, cfg.link_bps);
+            let mut b = WpsScheduler::new(&cfg, 0, cfg.link_bps);
+            (replay_typed(&mut a, &evs), replay_laddered(&mut b, &evs, &one_rung))
+        };
+        assert_streams_equal(&bare, &laddered, tag);
+        assert!(
+            bare.iter().any(|d| matches!(d.outcome, Outcome::LpAllocated { .. })),
+            "{tag}: stream should exercise allocations"
+        );
+        assert!(
+            laddered.iter().all(|d| d.variant.is_none()),
+            "{tag}: a one-rung ladder must never report a variant selection"
+        );
+    }
+}
+
+/// A deep ladder over the same stream: decisions may legitimately
+/// differ from the bare replay (that is the feature), but every variant
+/// selection must be a valid rung index and only appear on allocated
+/// low-priority outcomes.
+#[test]
+fn deep_ladder_variant_selections_are_well_formed() {
+    use medge::coordinator::task::VariantRung;
+    let cfg = SystemConfig { seed: 42, ..Default::default() };
+    let ladder = [
+        VariantRung {
+            accuracy: 0.97,
+            input_bytes: cfg.image_bytes,
+            proc_us: [cfg.lp2_proc(), cfg.lp4_proc()],
+        },
+        VariantRung {
+            accuracy: 0.85,
+            input_bytes: cfg.image_bytes / 2,
+            proc_us: [cfg.lp2_proc() / 2, cfg.lp4_proc() / 2],
+        },
+        VariantRung {
+            accuracy: 0.70,
+            input_bytes: cfg.image_bytes / 4,
+            proc_us: [cfg.lp2_proc() / 4, cfg.lp4_proc() / 4],
+        },
+    ];
+    let evs = gen_events(&mut Rng::seed_from_u64(0xACC_03), &cfg, 800);
+    let mut s = RasScheduler::new(&cfg, 0, cfg.link_bps);
+    let decisions = replay_laddered(&mut s, &evs, &ladder);
+    for d in &decisions {
+        match (&d.outcome, d.variant) {
+            (Outcome::LpAllocated { .. }, Some(k)) => {
+                assert!((k as usize) < ladder.len(), "variant {k} out of ladder range")
+            }
+            (Outcome::LpAllocated { .. }, None) => {
+                panic!("laddered LP allocation must report its rung")
+            }
+            (_, Some(k)) => panic!("variant {k} on a non-allocated outcome: {:?}", d.outcome),
+            (_, None) => {}
+        }
+    }
+}
+
 /// The paper treats a low-priority batch atomically: a rejection must
 /// leave the committed state exactly as it was (partial placements rolled
 /// back), and that guarantee must survive the `Decision` migration on
@@ -248,8 +343,10 @@ fn lp_batch_atomicity_survives_decision_migration() {
                 (0..4).map(|i| Task::low(id + i, id, 0, now, deadline, &cfg)).collect();
             id += 4;
             let live_before = sched.state().len();
-            let d =
-                sched.on_event(now, SchedEvent::LowPriorityBatch { tasks: &task_refs(&batch), realloc: false });
+            let d = sched.on_event(
+                now,
+                SchedEvent::LowPriorityBatch { tasks: &task_refs(&batch), realloc: false, ladder: &[] },
+            );
             match d.outcome {
                 Outcome::LpAllocated { allocs } => {
                     assert_eq!(allocs.len(), 4, "{}: batch is all-or-nothing", sched.name());
