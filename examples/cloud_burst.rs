@@ -1,0 +1,42 @@
+//! Three-tier cookbook run: the cloud-burst and battery-drain story in
+//! one sweep. An MMPP arrival storm swamps the 4-device edge fleet; each
+//! scheduler runs an edge-only twin and a three-tier twin (cloud behind
+//! a 20 Mb/s / 40 ms WAN), and the battery grid contrasts the
+//! deadline-only schedulers with the energy-aware one on a tight
+//! per-device joule budget. The energy table is the point: the cloud
+//! twin buys strictly more deadlines under overload, and ENERGY buys
+//! more deadlines per kilojoule when batteries are scarce.
+//!
+//! ```sh
+//! cargo run --release --example cloud_burst
+//! ```
+
+use medge::config::SystemConfig;
+use medge::energy::EnergyModel;
+use medge::experiments;
+use medge::metrics::report;
+use medge::scenario::SchedKind;
+
+fn main() {
+    let cfg = SystemConfig { seed: 42, ..SystemConfig::default() };
+    let kinds = [SchedKind::Wps, SchedKind::Ras, SchedKind::Energy];
+
+    // Cloud burst: edge-only vs three-tier twins under MMPP overload.
+    let burst = experiments::cloud_burst_grid(&cfg, &kinds, 12.0).run();
+    print!("{}", report::energy(&burst));
+    print!("{}", report::fig4(&burst));
+
+    // Battery-constrained fleet: every device on a 1.5 kJ budget with
+    // the Pi 2B power model; the comparison axis is deadlines per kJ.
+    let battery =
+        experiments::energy_battery_grid(&cfg, &kinds, 12.0, 1_500.0, &EnergyModel::pi2b())
+            .run();
+    print!("{}", report::energy(&battery));
+
+    println!(
+        "\nReading: every `_cloud` row beats its `_edge` twin on deadlines \
+         met — the WAN tier is a spill valve, not a relocation. In the \
+         battery grid, ENERGY's joule-scored placements and low-battery \
+         steering stretch the same budget over more deadlines (met/kJ)."
+    );
+}

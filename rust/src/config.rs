@@ -102,6 +102,19 @@ pub struct SystemConfig {
     /// (the paper sweeps 0 / 0.25 / 0.50 / 0.75).
     pub duty_cycle: f64,
 
+    /// Cloud-tier WAN bandwidth, bits/s. `0.0` (the default) disables the
+    /// cloud tier entirely: no WAN medium, no extra placement target, no
+    /// change to any event stream — edge-only runs stay byte-identical.
+    pub cloud_wan_bps: f64,
+    /// Cloud-tier round-trip propagation delay, ms (request up + result
+    /// back, excluding the bandwidth-limited upload itself).
+    pub cloud_rtt_ms: f64,
+    /// Cloud service-time speedup over a four-core edge device: the
+    /// default per-class cloud service time is `lp4_proc_s / speedup`
+    /// (unpadded — the server tier has no Pi jitter to defend against).
+    /// Classes can override with an explicit `TaskClass::cloud`.
+    pub cloud_speedup: f64,
+
     /// RNG seed for trace generation, device shuffling, probe host
     /// selection and traffic bursts. Same seed ⇒ identical run.
     pub seed: u64,
@@ -134,6 +147,9 @@ impl Default for SystemConfig {
             op_cost_us: 200.0,
             bg_bps: 36e6,
             duty_cycle: 0.0,
+            cloud_wan_bps: 0.0,
+            cloud_rtt_ms: 40.0,
+            cloud_speedup: 8.0,
             seed: 42,
         }
     }
@@ -201,7 +217,8 @@ impl SystemConfig {
                 proc_padding_s, proc_jitter_s, hp_cores, frame_period_s, hp_deadline_s,
                 image_bytes, link_bps, control_latency_ms, base_buckets,
                 exp_buckets, bandwidth_interval_s, ewma_alpha, ping_count,
-                ping_bytes, probe_airtime_factor, cost_scale, op_cost_us, bg_bps, duty_cycle, seed
+                ping_bytes, probe_airtime_factor, cost_scale, op_cost_us, bg_bps, duty_cycle,
+                cloud_wan_bps, cloud_rtt_ms, cloud_speedup, seed
             );
         }
         Ok(cfg)
@@ -210,13 +227,14 @@ impl SystemConfig {
     /// Render to the `key value` text format (stable, diffable).
     pub fn to_kv(&self) -> String {
         format!(
-            "n_devices {}\ncores_per_device {}\nhp_proc_s {}\nlp2_proc_s {}\nlp4_proc_s {}\nproc_padding_s {}\nproc_jitter_s {}\nhp_cores {}\nframe_period_s {}\nhp_deadline_s {}\nimage_bytes {}\nlink_bps {}\ncontrol_latency_ms {}\nbase_buckets {}\nexp_buckets {}\nbandwidth_interval_s {}\newma_alpha {}\nping_count {}\nping_bytes {}\nprobe_airtime_factor {}\ncost_scale {}\nop_cost_us {}\nbg_bps {}\nduty_cycle {}\nseed {}\n",
+            "n_devices {}\ncores_per_device {}\nhp_proc_s {}\nlp2_proc_s {}\nlp4_proc_s {}\nproc_padding_s {}\nproc_jitter_s {}\nhp_cores {}\nframe_period_s {}\nhp_deadline_s {}\nimage_bytes {}\nlink_bps {}\ncontrol_latency_ms {}\nbase_buckets {}\nexp_buckets {}\nbandwidth_interval_s {}\newma_alpha {}\nping_count {}\nping_bytes {}\nprobe_airtime_factor {}\ncost_scale {}\nop_cost_us {}\nbg_bps {}\nduty_cycle {}\ncloud_wan_bps {}\ncloud_rtt_ms {}\ncloud_speedup {}\nseed {}\n",
             self.n_devices, self.cores_per_device, self.hp_proc_s, self.lp2_proc_s,
             self.lp4_proc_s, self.proc_padding_s, self.proc_jitter_s, self.hp_cores, self.frame_period_s,
             self.hp_deadline_s, self.image_bytes, self.link_bps, self.control_latency_ms,
             self.base_buckets, self.exp_buckets, self.bandwidth_interval_s, self.ewma_alpha,
             self.ping_count, self.ping_bytes, self.probe_airtime_factor, self.cost_scale, self.op_cost_us,
-            self.bg_bps, self.duty_cycle, self.seed
+            self.bg_bps, self.duty_cycle, self.cloud_wan_bps, self.cloud_rtt_ms, self.cloud_speedup,
+            self.seed
         )
     }
 }
@@ -264,6 +282,17 @@ mod tests {
         assert_eq!(c.seed, 7);
         assert!((c.bandwidth_interval_s - 1.5).abs() < 1e-12);
         assert_eq!(c.n_devices, 4); // default kept
+    }
+
+    #[test]
+    fn cloud_tier_is_disabled_by_default_and_roundtrips() {
+        let c = SystemConfig::default();
+        assert_eq!(c.cloud_wan_bps, 0.0, "cloud tier must default OFF");
+        let c = SystemConfig { cloud_wan_bps: 20e6, cloud_rtt_ms: 60.0, ..Default::default() };
+        let c2 = SystemConfig::from_kv(&c.to_kv()).unwrap();
+        assert_eq!(c2.cloud_wan_bps, 20e6);
+        assert!((c2.cloud_rtt_ms - 60.0).abs() < 1e-12);
+        assert!((c2.cloud_speedup - 8.0).abs() < 1e-12);
     }
 
     #[test]

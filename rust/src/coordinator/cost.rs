@@ -13,6 +13,19 @@ use std::time::Instant;
 
 use crate::time::SimDuration;
 
+/// Elementary operations charged per task for a cloud-tier feasibility
+/// check ([`crate::coordinator::scheduler::CloudPlan::attempt`]): one
+/// transfer-time computation against the WAN estimate, one deadline
+/// comparison, and the allocation write — far cheaper than an edge
+/// placement's window search, which is the point: the cloud tier adds
+/// capacity without adding controller latency.
+pub const CLOUD_CHECK_OPS: crate::coordinator::scheduler::Ops = 4;
+
+/// Elementary operations charged per candidate for the energy-aware
+/// score term (`EnergyModel::placement_joules` + the battery lookup) on
+/// top of the WPS base score.
+pub const ENERGY_SCORE_OPS: crate::coordinator::scheduler::Ops = 2;
+
 /// Converts measured wall-clock scheduler time into virtual latency.
 #[derive(Debug, Clone)]
 pub struct CostModel {

@@ -1,0 +1,220 @@
+//! The energy-aware scheduler variant: deadline feasibility first,
+//! joules second.
+//!
+//! Structurally this is WPS's exact-state machinery with the placement
+//! score swapped ([`ScoreMode::Energy`]): among *feasible* placements the
+//! cheapest-joules candidate wins, with a scarcity multiplier steering
+//! work away from low-battery devices (reported by the engine via
+//! [`SchedEvent::BatteryLevels`]). What changes beyond the score is the
+//! tier order. The tiered wrapper used by WPS/RAS/MULTI spends the cloud
+//! *before* degrading (full accuracy on the cloud beats a degraded edge
+//! placement); this scheduler inverts that: it walks the whole
+//! model-variant ladder on the edge first — so the rung degrades
+//! precisely when only the cloud (or a device the scarcity penalty is
+//! protecting) could hold full accuracy — and touches the cloud only as
+//! the last resort, at the deepest rung, where the upload (and therefore
+//! the device's radio energy) is smallest. Edge compute dwarfs radio
+//! transmit in the power model, so once the ladder is exhausted the
+//! cheapest joules for the fleet is to ship the smallest variant out.
+
+use super::wps::{ScoreMode, WpsScheduler};
+use super::{
+    place_degrading, task_refs, CloudPlan, Decision, LpOutcome, Outcome, SchedEvent, Scheduler,
+    WorkloadState,
+};
+use crate::config::SystemConfig;
+use crate::coordinator::task::{Task, VariantRung};
+use crate::energy::EnergyModel;
+use crate::time::SimTime;
+
+/// Battery-aware three-tier scheduler (see module docs).
+pub struct EnergyScheduler {
+    inner: WpsScheduler,
+    /// Cloud tier (None when `cloud_wan_bps` is 0) — consulted only
+    /// after the full edge ladder rejects.
+    cloud: Option<CloudPlan>,
+}
+
+impl EnergyScheduler {
+    /// `model` should be the run's own power model so the score ranks
+    /// placements by the joules the engine will actually integrate.
+    pub fn new(cfg: &SystemConfig, now: SimTime, baseline_bps: f64, model: EnergyModel) -> Self {
+        Self {
+            inner: WpsScheduler::with_score_mode(
+                cfg,
+                now,
+                baseline_bps,
+                ScoreMode::Energy { model },
+            ),
+            cloud: CloudPlan::from_config(cfg),
+        }
+    }
+
+    /// Edge ladder first (shared [`place_degrading`] policy over the
+    /// energy-scored exact search), cloud last, at the deepest rung.
+    fn place_low(
+        &mut self,
+        now: SimTime,
+        tasks: &[&Task],
+        ladder: &[VariantRung],
+        realloc: bool,
+    ) -> Decision {
+        let inner = &mut self.inner;
+        let d = place_degrading(now, tasks, ladder, realloc, |n, ts, r| {
+            inner.schedule_low(n, ts, r)
+        });
+        if !matches!(d.outcome, Outcome::LpRejected) {
+            return d;
+        }
+        let Some(cloud) = self.cloud else { return d };
+        let spent = d.ops;
+        if ladder.len() > 1 {
+            // Deepest rung: smallest upload, fewest radio joules. The
+            // class's cloud service time is rung-invariant (the cloud
+            // runs the full model), so depth only buys transfer slack.
+            let k = ladder.len() - 1;
+            let degraded: Vec<Task> =
+                tasks.iter().map(|t| t.at_rung(&ladder[k])).collect();
+            let refs = task_refs(&degraded);
+            match cloud.attempt(now, &refs) {
+                LpOutcome::Allocated { allocs, ops } => Decision {
+                    outcome: Outcome::LpAllocated { allocs },
+                    ops: spent + ops,
+                    variant: Some(k as u8),
+                },
+                LpOutcome::Rejected { ops } => {
+                    Decision { outcome: Outcome::LpRejected, ops: spent + ops, variant: None }
+                }
+            }
+        } else {
+            let mut cd: Decision = cloud.attempt(now, tasks).into();
+            cd.ops += spent;
+            cd
+        }
+    }
+}
+
+impl Scheduler for EnergyScheduler {
+    fn name(&self) -> &'static str {
+        "ENERGY"
+    }
+
+    fn on_event(&mut self, now: SimTime, ev: SchedEvent<'_>) -> Decision {
+        match ev {
+            SchedEvent::LowPriorityBatch { tasks, realloc, ladder } => {
+                self.place_low(now, tasks, ladder, realloc)
+            }
+            SchedEvent::Reoffer { tasks, ladder } => self.place_low(now, tasks, ladder, true),
+            SchedEvent::CloudBandwidthUpdate { bps } => {
+                if let Some(c) = &mut self.cloud {
+                    c.update(bps);
+                }
+                Decision::ack(0)
+            }
+            // Everything else — HP placement, completions, churn, battery
+            // levels — is the inner exact-state scheduler's business.
+            other => self.inner.on_event(now, other),
+        }
+    }
+
+    fn bandwidth_estimate(&self) -> f64 {
+        self.inner.bandwidth_estimate()
+    }
+
+    fn state(&self) -> &WorkloadState {
+        self.inner.state()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::task::TaskConfig;
+
+    fn cloud_cfg() -> SystemConfig {
+        SystemConfig { cloud_wan_bps: 20e6, cloud_rtt_ms: 40.0, ..SystemConfig::default() }
+    }
+
+    fn sched(c: &SystemConfig) -> EnergyScheduler {
+        EnergyScheduler::new(c, 0, c.link_bps, EnergyModel::pi2b())
+    }
+
+    fn ladder(c: &SystemConfig) -> [VariantRung; 2] {
+        [
+            VariantRung {
+                accuracy: 0.97,
+                input_bytes: c.image_bytes,
+                proc_us: [c.lp2_proc(), c.lp4_proc()],
+            },
+            VariantRung {
+                accuracy: 0.80,
+                input_bytes: c.image_bytes / 4,
+                proc_us: [2_000_000, 1_500_000],
+            },
+        ]
+    }
+
+    #[test]
+    fn idle_fleet_keeps_work_on_the_edge_at_full_accuracy() {
+        let c = cloud_cfg();
+        let mut s = sched(&c);
+        let t = Task::low(1, 1, 0, 0, c.frame_period(), &c);
+        let refs = task_refs(std::slice::from_ref(&t));
+        let lad = ladder(&c);
+        let d = s.on_event(
+            0,
+            SchedEvent::LowPriorityBatch { tasks: &refs, realloc: false, ladder: &lad },
+        );
+        assert_eq!(d.variant, Some(0));
+        let Outcome::LpAllocated { allocs } = d.outcome else { panic!("{:?}", d.outcome) };
+        assert!(allocs[0].device < c.n_devices, "idle edge must host the work");
+    }
+
+    #[test]
+    fn degrades_on_the_edge_before_touching_the_cloud() {
+        // Same setup where the WPS-tiered policy goes to the cloud at
+        // full accuracy: no edge config meets the deadline at rung 0, but
+        // rung 1 fits locally. The energy policy prefers the degraded
+        // edge placement (compute joules on a full battery beat shipping
+        // the input over the WAN only in accuracy terms — this scheduler
+        // spends accuracy to keep latitude, per its tier order).
+        let c = cloud_cfg();
+        let mut s = sched(&c);
+        let t = Task::low(1, 1, 0, 0, c.lp4_proc() - 1, &c);
+        let refs = task_refs(std::slice::from_ref(&t));
+        let lad = ladder(&c);
+        let d = s.on_event(
+            0,
+            SchedEvent::LowPriorityBatch { tasks: &refs, realloc: false, ladder: &lad },
+        );
+        assert_eq!(d.variant, Some(1), "ladder must be exhausted before the cloud");
+        let Outcome::LpAllocated { allocs } = d.outcome else { panic!("{:?}", d.outcome) };
+        assert!(allocs[0].device < c.n_devices);
+        assert_eq!(allocs[0].end - allocs[0].start, 2_000_000);
+    }
+
+    #[test]
+    fn saturated_fleet_spills_to_the_cloud_last() {
+        let c = cloud_cfg();
+        let mut s = sched(&c);
+        // 4 devices × two concurrent 2-core stages = 8 edge slots within
+        // one frame period; the 9th task finds no edge placement in any
+        // configuration and must land on the cloud.
+        let deadline = c.frame_period();
+        let mut last = None;
+        for id in 1..=9u64 {
+            let t = Task::low(id, id, (id as usize - 1) % c.n_devices, 0, deadline, &c);
+            let refs = task_refs(std::slice::from_ref(&t));
+            last = Some(s.on_event(
+                0,
+                SchedEvent::LowPriorityBatch { tasks: &refs, realloc: false, ladder: &[] },
+            ));
+        }
+        let d = last.unwrap();
+        let Outcome::LpAllocated { allocs } = d.outcome else { panic!("{:?}", d.outcome) };
+        assert_eq!(allocs[0].device, c.n_devices, "overflow work belongs to the cloud");
+        assert_eq!(allocs[0].cores, 0);
+        assert_eq!(allocs[0].config, TaskConfig::LowFourCore);
+        assert_eq!(d.variant, None, "empty ladder places without a rung");
+    }
+}

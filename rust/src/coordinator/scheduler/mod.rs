@@ -52,13 +52,14 @@
 //! layer over `on_event`; `rust/tests/sched_event_equivalence.rs` holds a
 //! golden-seed proof that both surfaces decide identically.
 
+pub mod energy_sched;
 pub mod multi;
 pub mod ras_sched;
 pub mod wps;
 
 use std::collections::HashMap;
 
-use crate::coordinator::task::{Allocation, DeviceId, Task, TaskId, VariantRung};
+use crate::coordinator::task::{Allocation, DeviceId, Task, TaskConfig, TaskId, VariantRung};
 use crate::time::SimTime;
 
 /// Operation count for one scheduling call.
@@ -113,6 +114,17 @@ pub enum SchedEvent<'a> {
     /// `ladder` as on [`SchedEvent::LowPriorityBatch`]: a re-offer may
     /// degrade further down the tasks' remaining rungs before dropping.
     Reoffer { tasks: &'a [&'a Task], ladder: &'a [VariantRung] },
+    /// The cloud tier's WAN bandwidth estimator produced a new estimate
+    /// (bits/s) — fed passively from completed uploads, not probe
+    /// rounds. Only dispatched when the cloud tier is enabled;
+    /// schedulers fold it into their [`CloudPlan`] and acknowledge.
+    CloudBandwidthUpdate { bps: f64 },
+    /// Fresh per-device battery levels as a fraction of capacity
+    /// (1.0 = full or mains powered), indexed by device id. Only
+    /// dispatched when a battery is configured, immediately before
+    /// low-priority placement dispatches — the energy-aware scheduler
+    /// penalises low-battery candidates; others acknowledge for free.
+    BatteryLevels { levels: &'a [f64] },
 }
 
 /// Adapt an owned/contiguous task buffer to the reference-slice shape
@@ -294,6 +306,155 @@ pub fn place_degrading(
             attempt(now, &refs, realloc)
         };
         match out {
+            LpOutcome::Allocated { allocs, ops } => {
+                return Decision {
+                    outcome: Outcome::LpAllocated { allocs },
+                    ops: spent + ops,
+                    variant: Some(k as u8),
+                };
+            }
+            LpOutcome::Rejected { ops } => spent += ops,
+        }
+    }
+    Decision { outcome: Outcome::LpRejected, ops: spent, variant: None }
+}
+
+/// The cloud tier as the schedulers plan over it: the pseudo device id,
+/// the current WAN bandwidth estimate, and the fixed propagation delay.
+/// `None` while the tier is disabled — every cloud code path below is
+/// then never taken, keeping edge-only decisions bit-identical to the
+/// pre-cloud API.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CloudPlan {
+    /// Pseudo device id ([`crate::coordinator::task::cloud_device`]).
+    pub device: DeviceId,
+    /// Current WAN bandwidth estimate, bits/s (engine-fed EWMA).
+    pub est_bps: f64,
+    /// Fixed round-trip propagation delay, µs.
+    pub rtt_us: SimTime,
+}
+
+impl CloudPlan {
+    pub fn from_config(cfg: &crate::config::SystemConfig) -> Option<Self> {
+        if cfg.cloud_wan_bps <= 0.0 {
+            return None;
+        }
+        Some(Self {
+            device: crate::coordinator::task::cloud_device(cfg),
+            est_bps: cfg.cloud_wan_bps,
+            rtt_us: crate::time::millis(cfg.cloud_rtt_ms.max(0.0)),
+        })
+    }
+
+    /// Fold in a fresh WAN estimate ([`SchedEvent::CloudBandwidthUpdate`]).
+    pub fn update(&mut self, bps: f64) {
+        if bps > 0.0 {
+            self.est_bps = bps;
+        }
+    }
+
+    /// Try to place `tasks` on the cloud tier: every batch member must
+    /// make its deadline through upload + propagation + its
+    /// deterministic `cloud_us` service time, with the planned upload
+    /// share splitting the WAN estimate across the batch (concurrent
+    /// uploads contend — planning with the full link would be the kind
+    /// of optimism the paper's abstractions are measured against). The
+    /// executor itself is high-capacity: no windows, no victim search —
+    /// which is why the attempt is so much cheaper (in ops) than an edge
+    /// placement.
+    ///
+    /// Cloud allocations carry `cores: 0` and are **not** entered into
+    /// [`WorkloadState`]: they occupy no edge resources, and the engine
+    /// tracks their lifecycle against the WAN medium instead.
+    pub fn attempt(&self, now: SimTime, tasks: &[&Task]) -> LpOutcome {
+        let mut ops: Ops = 0;
+        let mut allocs = Vec::with_capacity(tasks.len());
+        let share = self.est_bps / tasks.len().max(1) as f64;
+        for t in tasks {
+            ops += crate::coordinator::cost::CLOUD_CHECK_OPS;
+            if t.cloud_us == 0 {
+                return LpOutcome::Rejected { ops }; // class never runs there
+            }
+            let transfer_us = if t.input_bytes > 0 && share > 0.0 {
+                (t.input_bytes as f64 * 8.0 / share * 1e6).ceil() as SimTime
+            } else {
+                0
+            };
+            let upload_end = now + transfer_us;
+            let end = upload_end + self.rtt_us + t.cloud_us;
+            if end > t.deadline {
+                return LpOutcome::Rejected { ops }; // batch is atomic
+            }
+            allocs.push(Allocation {
+                task: t.id,
+                frame: t.frame,
+                device: self.device,
+                config: TaskConfig::LowFourCore,
+                cores: 0,
+                start: upload_end + self.rtt_us / 2,
+                end,
+                deadline: t.deadline,
+                offloaded: true,
+                comm: Some((now, upload_end)),
+            });
+        }
+        LpOutcome::Allocated { allocs, ops }
+    }
+}
+
+/// [`place_degrading`] with the cloud tier interleaved: at every rung,
+/// the edge attempt runs first (the scheduler's own verdict, exactly as
+/// in `place_degrading`), and only when the edge rejects is the cloud
+/// tried *at the same rung* — full accuracy on the cloud beats a
+/// degraded edge placement, so the ladder steps down only when neither
+/// tier can hold the current rung. With `cloud: None` this is
+/// bit-identical to [`place_degrading`] (same attempts, same ops, same
+/// variant), which is what keeps edge-only runs on the golden rows.
+pub fn place_degrading_tiered(
+    now: SimTime,
+    tasks: &[&Task],
+    ladder: &[VariantRung],
+    realloc: bool,
+    cloud: Option<&CloudPlan>,
+    mut attempt: impl FnMut(SimTime, &[&Task], bool) -> LpOutcome,
+) -> Decision {
+    let Some(cloud) = cloud else {
+        return place_degrading(now, tasks, ladder, realloc, attempt);
+    };
+    if ladder.len() <= 1 {
+        // Short-ladder fast path mirrors `place_degrading`: one untouched
+        // edge attempt (variant stays None), cloud as the fallback.
+        return match attempt(now, tasks, realloc) {
+            LpOutcome::Rejected { ops } => {
+                let mut d: Decision = cloud.attempt(now, tasks).into();
+                d.ops += ops;
+                d
+            }
+            placed => placed.into(),
+        };
+    }
+    let mut spent: Ops = 0;
+    for (k, rung) in ladder.iter().enumerate() {
+        let degraded: Vec<Task>;
+        let refs: Vec<&Task>;
+        let batch: &[&Task] = if k == 0 {
+            tasks
+        } else {
+            degraded = tasks.iter().map(|t| t.at_rung(rung)).collect();
+            refs = task_refs(&degraded);
+            &refs
+        };
+        match attempt(now, batch, realloc) {
+            LpOutcome::Allocated { allocs, ops } => {
+                return Decision {
+                    outcome: Outcome::LpAllocated { allocs },
+                    ops: spent + ops,
+                    variant: Some(k as u8),
+                };
+            }
+            LpOutcome::Rejected { ops } => spent += ops,
+        }
+        match cloud.attempt(now, batch) {
             LpOutcome::Allocated { allocs, ops } => {
                 return Decision {
                     outcome: Outcome::LpAllocated { allocs },
@@ -731,5 +892,121 @@ mod tests {
         });
         assert_eq!(calls, 2);
         assert_eq!(d, Decision { outcome: Outcome::LpRejected, ops: 6, variant: None });
+    }
+
+    fn cloud_plan() -> CloudPlan {
+        let cfg = crate::config::SystemConfig {
+            cloud_wan_bps: 20e6,
+            cloud_rtt_ms: 40.0,
+            ..Default::default()
+        };
+        CloudPlan::from_config(&cfg).unwrap()
+    }
+
+    #[test]
+    fn cloud_plan_gates_on_config_and_checks_deadlines() {
+        assert!(CloudPlan::from_config(&crate::config::SystemConfig::default()).is_none());
+        let plan = cloud_plan();
+        // The conveyor LP task has ~18.8 s of slack: upload (~440 ms at
+        // 20 Mb/s) + 40 ms RTT + ~1.45 s cloud service fits easily.
+        let t = lp_task(1);
+        match plan.attempt(0, &[&t]) {
+            LpOutcome::Allocated { allocs, ops } => {
+                assert_eq!(allocs.len(), 1);
+                let a = &allocs[0];
+                assert_eq!(a.device, plan.device);
+                assert_eq!(a.cores, 0, "cloud placements hold no edge cores");
+                assert!(a.offloaded);
+                let (c0, c1) = a.comm.unwrap();
+                assert_eq!(c0, 0);
+                assert_eq!(a.end, c1 + plan.rtt_us + t.cloud_us);
+                assert!(a.end <= t.deadline);
+                assert_eq!(ops, crate::coordinator::cost::CLOUD_CHECK_OPS);
+            }
+            other => panic!("expected cloud allocation, got {other:?}"),
+        }
+        // No slack left → atomic rejection; cloud-less classes reject too.
+        let mut tight = t;
+        tight.deadline = 100_000;
+        assert!(matches!(plan.attempt(0, &[&tight]), LpOutcome::Rejected { .. }));
+        let mut never = t;
+        never.cloud_us = 0;
+        assert!(matches!(plan.attempt(0, &[&never]), LpOutcome::Rejected { .. }));
+        // Batch uploads split the WAN share: a batch that fits solo can
+        // miss together (atomic batch semantics).
+        let slack = t.cloud_us + plan.rtt_us + 500_000; // solo upload ≈ 440 ms
+        let mut batch_task = t;
+        batch_task.deadline = slack;
+        assert!(matches!(plan.attempt(0, &[&batch_task]), LpOutcome::Allocated { .. }));
+        let twin = Task { id: 2, ..batch_task };
+        assert!(matches!(
+            plan.attempt(0, &[&batch_task, &twin]),
+            LpOutcome::Rejected { .. },
+        ));
+    }
+
+    #[test]
+    fn tiered_without_cloud_is_plain_place_degrading() {
+        let t = lp_task(1);
+        let ladder = [rung(0.9, 1_000, 1_000), rung(0.8, 500, 500)];
+        let tiered = place_degrading_tiered(0, &[&t], &ladder, false, None, |_, _, _| {
+            LpOutcome::Rejected { ops: 3 }
+        });
+        let plain =
+            place_degrading(0, &[&t], &ladder, false, |_, _, _| LpOutcome::Rejected { ops: 3 });
+        assert_eq!(tiered, plain);
+    }
+
+    #[test]
+    fn tiered_prefers_cloud_over_degradation() {
+        // Edge always rejects; the cloud is feasible: the batch must land
+        // on the cloud at rung 0 — NOT degrade first.
+        let t = lp_task(1);
+        let ladder = [
+            rung(1.0, t.input_bytes, t.proc_us[0]),
+            rung(0.8, 500, 500_000),
+        ];
+        let plan = cloud_plan();
+        let d = place_degrading_tiered(0, &[&t], &ladder, false, Some(&plan), |_, _, _| {
+            LpOutcome::Rejected { ops: 5 }
+        });
+        assert_eq!(d.variant, Some(0), "cloud holds the rung: no degradation");
+        match &d.outcome {
+            Outcome::LpAllocated { allocs } => assert_eq!(allocs[0].device, plan.device),
+            other => panic!("expected cloud allocation, got {other:?}"),
+        }
+        assert_eq!(d.ops, 5 + crate::coordinator::cost::CLOUD_CHECK_OPS);
+    }
+
+    #[test]
+    fn tiered_degrades_when_neither_tier_holds_the_rung() {
+        // Edge always rejects; the cloud can only make the deadline once
+        // the rung shrinks the upload: degradation fires, then cloud.
+        let plan = cloud_plan();
+        let mut t = lp_task(1);
+        // Deadline leaves room for a 100 kB upload but not the 1.1 MB one.
+        t.deadline = t.cloud_us + plan.rtt_us + 120_000;
+        let ladder = [
+            rung(1.0, t.input_bytes, t.proc_us[0]),
+            rung(0.8, 100_000, 500_000),
+        ];
+        let d = place_degrading_tiered(0, &[&t], &ladder, false, Some(&plan), |_, _, _| {
+            LpOutcome::Rejected { ops: 5 }
+        });
+        assert_eq!(d.variant, Some(1), "rung 1 lands on the cloud");
+        match &d.outcome {
+            Outcome::LpAllocated { allocs } => {
+                assert_eq!(allocs[0].device, plan.device);
+            }
+            other => panic!("expected cloud allocation, got {other:?}"),
+        }
+        // Fully infeasible: rejected after edge+cloud at every rung.
+        let mut hopeless = t;
+        hopeless.deadline = 1_000;
+        let d = place_degrading_tiered(0, &[&hopeless], &ladder, false, Some(&plan), |_, _, _| {
+            LpOutcome::Rejected { ops: 5 }
+        });
+        assert_eq!(d.outcome, Outcome::LpRejected);
+        assert_eq!(d.ops, 2 * 5 + 2 * crate::coordinator::cost::CLOUD_CHECK_OPS);
     }
 }

@@ -14,8 +14,8 @@
 use super::ras_sched::RasScheduler;
 use super::wps::WpsScheduler;
 use super::{
-    place_degrading, Decision, HpOutcome, LpOutcome, Ops, Outcome, SchedEvent, Scheduler,
-    WorkloadState,
+    place_degrading_tiered, CloudPlan, Decision, HpOutcome, LpOutcome, Ops, Outcome, SchedEvent,
+    Scheduler, WorkloadState,
 };
 use crate::config::SystemConfig;
 use crate::coordinator::task::{Allocation, DeviceId, Task, TaskId};
@@ -39,6 +39,9 @@ pub struct MultiScheduler {
     /// Diagnostics: requests served by each inner scheduler.
     pub wps_requests: u64,
     pub ras_requests: u64,
+    /// Cloud tier (None when `cloud_wan_bps` is 0): owned here so the
+    /// fallback applies regardless of which inner scheduler is active.
+    cloud: Option<CloudPlan>,
 }
 
 impl MultiScheduler {
@@ -51,6 +54,7 @@ impl MultiScheduler {
             switch_threshold,
             wps_requests: 0,
             ras_requests: 0,
+            cloud: CloudPlan::from_config(cfg),
         }
     }
 
@@ -178,8 +182,13 @@ impl Scheduler for MultiScheduler {
                 // failed under RAS can still land its degraded rung
                 // under RAS (or WPS, if completions dropped the load
                 // below the switch threshold mid-ladder). `record` keeps
-                // both inner views consistent with whichever rung stuck.
-                place_degrading(now, tasks, ladder, realloc, |n, ts, r| self.schedule_low(n, ts, r))
+                // both inner views consistent with whichever rung stuck;
+                // cloud placements bypass `record` entirely (they hold no
+                // edge resources).
+                let cloud = self.cloud;
+                place_degrading_tiered(now, tasks, ladder, realloc, cloud.as_ref(), |n, ts, r| {
+                    self.schedule_low(n, ts, r)
+                })
             }
             SchedEvent::Complete { task } => {
                 self.on_complete(now, task);
@@ -204,7 +213,25 @@ impl Scheduler for MultiScheduler {
                 // Load-routed like any placement request; `record` keeps
                 // both inner views consistent with the re-placement, and
                 // the remaining ladder tail may degrade it further.
-                place_degrading(now, tasks, ladder, true, |n, ts, r| self.schedule_low(n, ts, r))
+                let cloud = self.cloud;
+                place_degrading_tiered(now, tasks, ladder, true, cloud.as_ref(), |n, ts, r| {
+                    self.schedule_low(n, ts, r)
+                })
+            }
+            SchedEvent::CloudBandwidthUpdate { bps } => {
+                if let Some(c) = &mut self.cloud {
+                    c.update(bps);
+                }
+                // Fan to both inner schedulers so their (dormant) plans
+                // stay current if the routing policy ever consults them.
+                let a = self.wps.on_event(now, SchedEvent::CloudBandwidthUpdate { bps });
+                let b = self.ras.on_event(now, SchedEvent::CloudBandwidthUpdate { bps });
+                Decision::ack(a.ops + b.ops)
+            }
+            SchedEvent::BatteryLevels { levels } => {
+                let a = self.wps.on_event(now, SchedEvent::BatteryLevels { levels });
+                let b = self.ras.on_event(now, SchedEvent::BatteryLevels { levels });
+                Decision::ack(a.ops + b.ops)
             }
         }
     }

@@ -3,8 +3,8 @@
 //! estimation (Sections IV-A and IV-B).
 
 use super::{
-    place_degrading, select_victim, Decision, HpOutcome, LpOutcome, Ops, Outcome, SchedEvent,
-    Scheduler, WorkloadState,
+    place_degrading_tiered, select_victim, CloudPlan, Decision, HpOutcome, LpOutcome, Ops,
+    Outcome, SchedEvent, Scheduler, WorkloadState,
 };
 use crate::config::SystemConfig;
 use crate::coordinator::netlink::{CommTask, DiscretisedLink};
@@ -35,6 +35,10 @@ pub struct RasScheduler {
     /// later succeeds still leaves its mark), not per rejected batch —
     /// see [`Scheduler::reject_diag`].
     pub reject_reasons: [u64; 4],
+    /// Cloud tier (None when `cloud_wan_bps` is 0 — the default): an
+    /// extra placement target checked after the availability lists and
+    /// the discretised link reject a rung.
+    cloud: Option<CloudPlan>,
 }
 
 impl RasScheduler {
@@ -50,6 +54,7 @@ impl RasScheduler {
             link_rebuilds: 0,
             cascade_dropped: 0,
             reject_reasons: [0; 4],
+            cloud: CloudPlan::from_config(cfg),
             cfg: cfg.clone(),
         }
     }
@@ -477,8 +482,14 @@ impl Scheduler for RasScheduler {
                 // feasibility verdict: RAS steps down when its
                 // *conservative windows* and discretised link say the
                 // rung cannot be placed — which can be earlier than the
-                // exact state would require (abstraction inaccuracy).
-                place_degrading(now, tasks, ladder, realloc, |n, ts, r| self.schedule_low(n, ts, r))
+                // exact state would require (abstraction inaccuracy). The
+                // cloud tier backstops each rung before the step-down, so
+                // RAS's conservatism shows up as cloud traffic, not as
+                // extra degradation.
+                let cloud = self.cloud;
+                place_degrading_tiered(now, tasks, ladder, realloc, cloud.as_ref(), |n, ts, r| {
+                    self.schedule_low(n, ts, r)
+                })
             }
             SchedEvent::Complete { task } => {
                 self.on_complete(now, task);
@@ -505,8 +516,24 @@ impl Scheduler for RasScheduler {
                 // deadline budget; `viable_configs` drops tasks whose
                 // budget no longer fits any configuration. The remaining
                 // ladder tail still applies — a re-offer may degrade
-                // further before dropping.
-                place_degrading(now, tasks, ladder, true, |n, ts, r| self.schedule_low(n, ts, r))
+                // further (or spill to the cloud) before dropping.
+                let cloud = self.cloud;
+                place_degrading_tiered(now, tasks, ladder, true, cloud.as_ref(), |n, ts, r| {
+                    self.schedule_low(n, ts, r)
+                })
+            }
+            SchedEvent::CloudBandwidthUpdate { bps } => {
+                // Passive WAN estimate refresh — no discretised-link
+                // rebuild (the WAN is not the probed LAN medium).
+                if let Some(c) = &mut self.cloud {
+                    c.update(bps);
+                }
+                Decision::ack(0)
+            }
+            SchedEvent::BatteryLevels { .. } => {
+                // The paper's scheduler is energy-oblivious: levels are
+                // acknowledged and ignored.
+                Decision::ack(0)
             }
         }
     }
@@ -640,6 +667,32 @@ mod tests {
         // The allocation was planned with the degraded rung's duration.
         assert_eq!(allocs[0].end - allocs[0].start, 2_000_000);
         assert!(allocs[0].end <= deadline);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cloud_tier_backstops_an_infeasible_rung() {
+        use crate::coordinator::scheduler::Outcome;
+        use crate::coordinator::task::VariantRung;
+        let c = SystemConfig { cloud_wan_bps: 20e6, cloud_rtt_ms: 40.0, ..cfg() };
+        let mut s = RasScheduler::new(&c, 0, c.link_bps);
+        // No viable edge config for this deadline, but the cloud absorbs
+        // the full-accuracy rung: RAS reports no degradation.
+        let deadline = c.lp4_proc() - 1;
+        let task = Task::low(1, 1, 0, 0, deadline, &c);
+        let ladder = [
+            VariantRung { accuracy: 0.97, input_bytes: c.image_bytes, proc_us: [c.lp2_proc(), c.lp4_proc()] },
+            VariantRung { accuracy: 0.80, input_bytes: c.image_bytes / 4, proc_us: [2_000_000, 1_500_000] },
+        ];
+        let refs = task_refs(std::slice::from_ref(&task));
+        let d = s.on_event(
+            0,
+            SchedEvent::LowPriorityBatch { tasks: &refs, realloc: false, ladder: &ladder },
+        );
+        assert_eq!(d.variant, Some(0), "cloud tier must hold the rung");
+        let Outcome::LpAllocated { allocs } = d.outcome else { panic!("{:?}", d.outcome) };
+        assert_eq!(allocs[0].device, c.n_devices);
+        assert_eq!(s.state().len(), 0, "cloud placements stay out of edge state");
         s.check_invariants().unwrap();
     }
 

@@ -21,12 +21,28 @@
 //! exactly what the paper's congestion experiments punish.
 
 use super::{
-    place_degrading, select_victim, Decision, HpOutcome, LpOutcome, Ops, Outcome, SchedEvent,
-    Scheduler, WorkloadState,
+    place_degrading_tiered, select_victim, CloudPlan, Decision, HpOutcome, LpOutcome, Ops,
+    Outcome, SchedEvent, Scheduler, WorkloadState,
 };
 use crate::config::SystemConfig;
+use crate::coordinator::cost::ENERGY_SCORE_OPS;
 use crate::coordinator::task::{Allocation, DeviceId, Task, TaskConfig, TaskId};
+use crate::energy::EnergyModel;
 use crate::time::{SimDuration, SimTime};
+
+/// Placement scoring policy. Deadline feasibility is identical in both
+/// modes — the mode only decides which *feasible* placement wins, so the
+/// energy variant never trades a deadline for joules.
+#[derive(Debug, Clone, Default)]
+pub enum ScoreMode {
+    /// The published WPS weighting: completion time dominates.
+    #[default]
+    Latency,
+    /// Joules dominate: the cheapest feasible placement wins, with a
+    /// scarcity multiplier that steers work away from low-battery
+    /// devices. Completion time survives only as a tie-break.
+    Energy { model: EnergyModel },
+}
 
 /// A reserved transfer window on the link (exact representation).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -47,6 +63,15 @@ pub struct WpsScheduler {
     comms: Vec<CommWindow>,
     /// Static bandwidth estimate (bits/s) fixed at startup.
     bps: f64,
+    /// Cloud tier (None when `cloud_wan_bps` is 0 — the default), holding
+    /// its own passively-updated WAN estimate.
+    cloud: Option<CloudPlan>,
+    /// Which feasible placement wins ([`ScoreMode::Latency`] by default —
+    /// byte-identical to the pre-energy scheduler).
+    mode: ScoreMode,
+    /// Battery fractions by device (empty until the engine reports them;
+    /// missing entries read as 1.0 = mains-powered).
+    levels: Vec<f64>,
 }
 
 impl WpsScheduler {
@@ -57,7 +82,21 @@ impl WpsScheduler {
             active: vec![true; cfg.n_devices],
             comms: Vec::new(),
             bps: baseline_bps,
+            cloud: CloudPlan::from_config(cfg),
+            mode: ScoreMode::Latency,
+            levels: Vec::new(),
         }
+    }
+
+    /// Same exact-state machinery, different placement score (used by the
+    /// energy-aware scheduler variant).
+    pub fn with_score_mode(
+        cfg: &SystemConfig,
+        now: SimTime,
+        baseline_bps: f64,
+        mode: ScoreMode,
+    ) -> Self {
+        Self { mode, ..Self::new(cfg, now, baseline_bps) }
     }
 
     fn device_active(&self, d: DeviceId) -> bool {
@@ -177,6 +216,29 @@ impl WpsScheduler {
         }
         s += cores as f64 * 50_000.0;
         s
+    }
+
+    /// Dispatch on [`ScoreMode`]. Latency mode charges nothing extra and
+    /// reproduces [`Self::score`] exactly; energy mode charges
+    /// [`ENERGY_SCORE_OPS`] per candidate for the joules estimate and the
+    /// battery lookup.
+    fn score_placement(&self, task: &Task, a: &Allocation, local: bool, ops: &mut Ops) -> f64 {
+        let transfer = self.transfer_time_for(task);
+        match &self.mode {
+            ScoreMode::Latency => self.score(a.end, local, a.cores, transfer),
+            ScoreMode::Energy { model } => {
+                *ops += ENERGY_SCORE_OPS;
+                let bytes = if local { 0 } else { task.input_bytes };
+                let joules =
+                    model.placement_joules(a.config.index(), a.end - a.start, bytes, self.bps);
+                // Scarcity: the same joules cost more on a device that is
+                // running out of them. A full (or mains) device multiplies
+                // by 1; an empty one by 11.
+                let level = self.levels.get(a.device).copied().unwrap_or(1.0);
+                let scarcity = 1.0 + 10.0 * (1.0 - level.clamp(0.0, 1.0));
+                joules * scarcity * 1e9 + a.end as f64
+            }
+        }
     }
 
     /// Record an allocation decided by another scheduler (used by the
@@ -350,7 +412,7 @@ impl WpsScheduler {
                             offloaded: !local,
                             comm,
                         };
-                        let sc = self.score(alloc.end, local, cores, self.transfer_time_for(task));
+                        let sc = self.score_placement(task, &alloc, local, &mut ops);
                         match &best {
                             Some((_, b)) if *b <= sc => {}
                             _ => best = Some((alloc, sc)),
@@ -439,8 +501,13 @@ impl Scheduler for WpsScheduler {
                 // only steps down when no placement truly exists, so it
                 // degrades strictly less often than RAS's conservative
                 // windows require — the two abstractions disagree about
-                // when degradation is necessary.
-                place_degrading(now, tasks, ladder, realloc, |n, ts, r| self.schedule_low(n, ts, r))
+                // when degradation is necessary. With a cloud tier
+                // configured, each rung falls through to a WAN
+                // feasibility check before the ladder steps down.
+                let cloud = self.cloud;
+                place_degrading_tiered(now, tasks, ladder, realloc, cloud.as_ref(), |n, ts, r| {
+                    self.schedule_low(n, ts, r)
+                })
             }
             SchedEvent::Complete { task } => {
                 self.on_complete(now, task);
@@ -465,8 +532,27 @@ impl Scheduler for WpsScheduler {
                 // Re-place on the remaining deadline budget; the
                 // exhaustive search rejects (drop-by-deadline) when no
                 // start fits before the original deadline — after the
-                // remaining ladder tail has been exhausted.
-                place_degrading(now, tasks, ladder, true, |n, ts, r| self.schedule_low(n, ts, r))
+                // remaining ladder tail (and the cloud tier, if any) has
+                // been exhausted.
+                let cloud = self.cloud;
+                place_degrading_tiered(now, tasks, ladder, true, cloud.as_ref(), |n, ts, r| {
+                    self.schedule_low(n, ts, r)
+                })
+            }
+            SchedEvent::CloudBandwidthUpdate { bps } => {
+                // Passive WAN estimate refresh from the engine — free: no
+                // link-state rebuild, just a stored scalar.
+                if let Some(c) = &mut self.cloud {
+                    c.update(bps);
+                }
+                Decision::ack(0)
+            }
+            SchedEvent::BatteryLevels { levels } => {
+                // Stored for the energy score; the latency score ignores
+                // them. Only dispatched when a battery is configured.
+                self.levels.clear();
+                self.levels.extend_from_slice(levels);
+                Decision::ack(0)
             }
         }
     }
@@ -576,6 +662,76 @@ mod tests {
         assert_eq!(d.variant, Some(1));
         let Outcome::LpAllocated { allocs } = d.outcome else { panic!("{:?}", d.outcome) };
         assert_eq!(allocs[0].end - allocs[0].start, 2_000_000);
+    }
+
+    #[test]
+    fn cloud_tier_catches_rejections_before_degradation() {
+        use crate::coordinator::scheduler::{task_refs, Outcome, SchedEvent};
+        use crate::coordinator::task::VariantRung;
+        let c = SystemConfig { cloud_wan_bps: 20e6, cloud_rtt_ms: 40.0, ..cfg() };
+        let mut s = WpsScheduler::new(&c, 0, c.link_bps);
+        let ladder = [
+            VariantRung { accuracy: 0.97, input_bytes: c.image_bytes, proc_us: [c.lp2_proc(), c.lp4_proc()] },
+            VariantRung { accuracy: 0.80, input_bytes: c.image_bytes / 4, proc_us: [2_000_000, 1_500_000] },
+        ];
+        // A deadline no edge configuration can meet (tighter than the
+        // four-core stage), but with ~12 s of slack the cloud absorbs it
+        // at full accuracy: the rung must NOT step down.
+        let t = Task::low(1, 1, 0, 0, c.lp4_proc() - 1, &c);
+        let refs = task_refs(std::slice::from_ref(&t));
+        let d = s.on_event(0, SchedEvent::LowPriorityBatch { tasks: &refs, realloc: false, ladder: &ladder });
+        assert_eq!(d.variant, Some(0), "cloud tier should hold the rung");
+        let Outcome::LpAllocated { allocs } = d.outcome else { panic!("{:?}", d.outcome) };
+        assert_eq!(allocs[0].device, c.n_devices, "placed on the cloud pseudo-device");
+        assert_eq!(allocs[0].cores, 0);
+        // Cloud allocations never enter the edge workload state.
+        let (peak, _) = s.state().peak_usage(0, 0, 30_000_000);
+        assert_eq!(peak, 0);
+    }
+
+    #[test]
+    fn energy_score_steers_work_off_low_battery_devices() {
+        let c = cfg();
+        let mut lat = WpsScheduler::new(&c, 0, c.link_bps);
+        let mut en = WpsScheduler::with_score_mode(
+            &c,
+            0,
+            c.link_bps,
+            ScoreMode::Energy { model: EnergyModel::pi2b() },
+        );
+        let batch = lp_batch(1, 1, 2, 0, &c);
+        // Full batteries: the frugal choice is local two-core (no radio
+        // joules) — same placement the latency score picks on an idle
+        // fleet, but the energy score pays extra ops for knowing it.
+        let lo = match lat.schedule_low(0, &task_refs(&batch), false) {
+            LpOutcome::Allocated { allocs, ops } => (allocs[0].device, ops),
+            other => panic!("{other:?}"),
+        };
+        let eo = match en.schedule_low(0, &task_refs(&batch), false) {
+            LpOutcome::Allocated { allocs, ops } => (allocs[0].device, ops),
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(lo.0, 2);
+        assert_eq!(eo.0, 2);
+        assert!(eo.1 > lo.1, "energy scoring must charge extra ops: {} vs {}", eo.1, lo.1);
+        // Nearly-drained source: the scarcity multiplier makes the local
+        // placement dearer than paying the transfer to a full device.
+        let mut en2 = WpsScheduler::with_score_mode(
+            &c,
+            0,
+            c.link_bps,
+            ScoreMode::Energy { model: EnergyModel::pi2b() },
+        );
+        let levels = [1.0, 1.0, 0.02, 1.0];
+        let d = en2.on_event(0, SchedEvent::BatteryLevels { levels: &levels });
+        assert_eq!(d.ops, 0);
+        match en2.schedule_low(0, &task_refs(&batch), false) {
+            LpOutcome::Allocated { allocs, .. } => {
+                assert_ne!(allocs[0].device, 2, "drained device must lose the placement");
+                assert!(allocs[0].offloaded);
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

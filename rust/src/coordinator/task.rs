@@ -19,6 +19,15 @@ pub type DeviceId = usize;
 /// Identifier of a conveyor frame (one pipeline instance).
 pub type FrameId = u64;
 
+/// The pseudo device id of the cloud tier: one past the edge fleet.
+/// Allocations carrying this id run on [`crate::sim::netsim::CloudTier`]
+/// (WAN transfer + fixed propagation + the task's `cloud_us` service
+/// time) instead of an edge device; the engine branches on
+/// `device >= cfg.n_devices` before touching any per-device state.
+pub fn cloud_device(cfg: &SystemConfig) -> DeviceId {
+    cfg.n_devices
+}
+
 /// Task priority class.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Priority {
@@ -132,6 +141,13 @@ pub struct Task {
     /// `[two-core, four-core]` for low-priority tasks; high-priority
     /// tasks hold their (single) stage duration in both entries.
     pub proc_us: [SimDuration; 2],
+    /// Deterministic service time on the cloud tier, µs (`0` = the task
+    /// never runs there — all high-priority tasks, and every task when
+    /// the cloud tier is disabled). The server tier is provisioned, so
+    /// cloud executions take exactly this long: no Pi load jitter, and
+    /// degraded rungs keep the class's cloud time (degradation is an
+    /// edge-side compute lever; the transfer still shrinks with the rung).
+    pub cloud_us: SimDuration,
 }
 
 impl Task {
@@ -145,6 +161,7 @@ impl Task {
             deadline: now + cfg.hp_deadline(),
             input_bytes: 0, // HP never offloads, nothing to transfer
             proc_us: [cfg.hp_proc(); 2],
+            cloud_us: 0, // HP stays at the edge: the WAN RTT alone blows its budget
         }
     }
 
@@ -165,12 +182,13 @@ impl Task {
             deadline: frame_deadline,
             input_bytes: cfg.image_bytes,
             proc_us: [cfg.lp2_proc(), cfg.lp4_proc()],
+            cloud_us: default_cloud_us(cfg.lp4_proc_s, cfg),
         }
     }
 
     /// A task of an arbitrary class (generative workloads): explicit
-    /// priority, relative deadline, input size, and per-configuration
-    /// processing durations.
+    /// priority, relative deadline, input size, per-configuration
+    /// processing durations, and cloud-tier service time.
     #[allow(clippy::too_many_arguments)]
     pub fn of_class(
         id: TaskId,
@@ -181,6 +199,7 @@ impl Task {
         deadline_us: SimDuration,
         input_bytes: u64,
         proc_us: [SimDuration; 2],
+        cloud_us: SimDuration,
     ) -> Self {
         Self {
             id,
@@ -191,6 +210,7 @@ impl Task {
             deadline: now + deadline_us,
             input_bytes: if priority == Priority::High { 0 } else { input_bytes },
             proc_us,
+            cloud_us: if priority == Priority::High { 0 } else { cloud_us },
         }
     }
 
@@ -219,6 +239,18 @@ impl Task {
             ..*self
         }
     }
+}
+
+/// The default cloud service time for a class whose four-core edge time
+/// is `proc4_s` seconds: `proc4_s / cloud_speedup`, unpadded (the server
+/// tier is deterministic, there is no benchmark deviation to pad
+/// against). `0` when the speedup is degenerate or the result would
+/// round below a microsecond.
+pub fn default_cloud_us(proc4_s: f64, cfg: &SystemConfig) -> SimDuration {
+    if !(cfg.cloud_speedup > 0.0) || !(proc4_s > 0.0) {
+        return 0;
+    }
+    crate::time::secs(proc4_s / cfg.cloud_speedup).max(1)
 }
 
 /// A committed placement: task `id` occupies `cores` on `device` over
@@ -308,14 +340,31 @@ mod tests {
         assert_eq!(lp.proc_for(TaskConfig::LowTwoCore), c.lp2_proc());
         assert_eq!(lp.proc_for(TaskConfig::LowFourCore), c.lp4_proc());
         // A custom class overrides every per-system constant.
-        let t = Task::of_class(3, 1, 2, 1000, Priority::Low, 5_000_000, 42_000, [400_000, 250_000]);
+        let t =
+            Task::of_class(3, 1, 2, 1000, Priority::Low, 5_000_000, 42_000, [400_000, 250_000], 50_000);
         assert_eq!(t.deadline, 1000 + 5_000_000);
         assert_eq!(t.input_bytes, 42_000);
         assert_eq!(t.proc_for(TaskConfig::LowTwoCore), 400_000);
         assert_eq!(t.proc_for(TaskConfig::LowFourCore), 250_000);
-        // HP classes never offload: input is forced to zero.
-        let h = Task::of_class(4, 1, 2, 0, Priority::High, 1_000_000, 9_999, [300_000; 2]);
+        assert_eq!(t.cloud_us, 50_000);
+        // HP classes never offload: input and cloud time are forced to zero.
+        let h = Task::of_class(4, 1, 2, 0, Priority::High, 1_000_000, 9_999, [300_000; 2], 50_000);
         assert_eq!(h.input_bytes, 0);
+        assert_eq!(h.cloud_us, 0);
+    }
+
+    #[test]
+    fn cloud_service_time_defaults_from_four_core_speedup() {
+        let c = cfg();
+        // 11.611 s / 8 ≈ 1.451 s, unpadded.
+        assert_eq!(default_cloud_us(c.lp4_proc_s, &c), crate::time::secs(c.lp4_proc_s / 8.0));
+        let lp = Task::low(2, 1, 0, 0, c.frame_period(), &c);
+        assert_eq!(lp.cloud_us, default_cloud_us(c.lp4_proc_s, &c));
+        assert!(lp.cloud_us < lp.proc_us[1], "the cloud tier must beat four edge cores");
+        // HP never runs on the cloud; degenerate speedups disable it.
+        assert_eq!(Task::high(1, 1, 0, 0, &c).cloud_us, 0);
+        let no_cloud = SystemConfig { cloud_speedup: 0.0, ..cfg() };
+        assert_eq!(default_cloud_us(11.6, &no_cloud), 0);
     }
 
     #[test]
@@ -335,6 +384,7 @@ mod tests {
         assert_eq!(d.created_at, t.created_at);
         assert_eq!(d.input_bytes, c.image_bytes / 4);
         assert_eq!(d.proc_us, [4_000_000, 3_000_000]);
+        assert_eq!(d.cloud_us, t.cloud_us, "rungs keep the class cloud service time");
         // HP tasks never ship input, whatever the rung says.
         let h = Task::high(9, 3, 1, 0, &c);
         assert_eq!(h.at_rung(&rung).input_bytes, 0);

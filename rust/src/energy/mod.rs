@@ -1,0 +1,553 @@
+//! Per-device energy accounting and battery budgets.
+//!
+//! The paper's fleet is battery-powered Raspberry Pis, but its evaluation
+//! never accounts for what a placement decision *costs* in joules. This
+//! module adds that axis (ROADMAP item 2, modeled on EdgeCloudSim's
+//! per-device idle/active/transmit power):
+//!
+//! * [`EnergyModel`] — per-device power draw: an `idle_w` baseline while
+//!   online plus an *additional* `active_w[config]` per running task
+//!   (indexed by [`crate::coordinator::task::TaskConfig::index`]) and
+//!   `tx_w`/`rx_w` per active transfer endpoint.
+//! * [`FleetEnergy`] — the engine-side integrator: piecewise-constant
+//!   power settled at every state transition the engine observes (task
+//!   commit/finish/cancel, transfer start/end, churn/crash/recover, and
+//!   the idle gaps in between). Components accumulate separately
+//!   (`idle_j + active_j + tx_j + rx_j ≈ total_j`, the conservation
+//!   identity the property suite pins).
+//! * An optional battery: every device starts with `capacity_j` joules
+//!   and drains at its current power. Depletion is *predicted* from the
+//!   piecewise-constant power (the engine schedules a `BatteryDeplete`
+//!   event, invalidated by an epoch counter whenever the power changes)
+//!   and routes through the existing crash machinery: a drained device
+//!   goes offline like a crash — in-flight work lost or re-offered — and
+//!   never recovers.
+//!
+//! Accounting semantics: a committed allocation powers its device from
+//! the commitment event to its finish/cancel event (the engine has no
+//! "task actually started" event; the reserved window is treated as
+//! active). Probe traffic is controller overhead and draws nothing.
+//! A run with *no* [`EnergyModel`] configured takes none of these paths:
+//! no extra events, no RNG draws, byte-identical output — and a
+//! zero-watt model is numerically inert (all accumulators stay 0.0).
+
+use crate::time::SimTime;
+
+/// Number of task power configs (mirrors `TaskConfig`: high-priority,
+/// two-core, four-core — in `TaskConfig::index()` order).
+pub const N_CONFIGS: usize = 3;
+
+/// Per-device power draw, watts (joules per second).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyModel {
+    /// Baseline draw while the device is online (even when idle).
+    pub idle_w: f64,
+    /// Additional draw per running task, by `TaskConfig::index()`:
+    /// `[high-priority, two-core, four-core]`.
+    pub active_w: [f64; N_CONFIGS],
+    /// Additional draw per outbound transfer in flight (source side).
+    pub tx_w: f64,
+    /// Additional draw per inbound transfer in flight (destination side).
+    pub rx_w: f64,
+}
+
+impl EnergyModel {
+    /// A Raspberry Pi 2B-class profile: ~1.1 W idle, 2.0–3.6 W under the
+    /// detector / stage-3 loads, sub-watt WiFi deltas. Values follow the
+    /// published Pi power envelopes, not a new measurement.
+    pub fn pi2b() -> Self {
+        Self { idle_w: 1.1, active_w: [0.9, 1.5, 2.5], tx_w: 0.45, rx_w: 0.35 }
+    }
+
+    /// The zero-watt model: energy accounting runs but every accumulator
+    /// stays 0.0 — the equivalence suites use it to prove the hooks are
+    /// free when they measure nothing.
+    pub fn zero() -> Self {
+        Self { idle_w: 0.0, active_w: [0.0; N_CONFIGS], tx_w: 0.0, rx_w: 0.0 }
+    }
+
+    /// Parse a CLI power profile:
+    ///
+    /// * `pi2b` | `zero` — named profiles
+    /// * `IDLE:HP:TWO:FOUR:TX:RX` — explicit watts
+    ///
+    /// Strict, mirroring [`crate::workload::gen::ArrivalProcess::parse`]:
+    /// wrong field counts, non-numeric, non-finite, or negative fields
+    /// are errors — never a panic and never a silently-degenerate model.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "pi2b" => return Ok(Self::pi2b()),
+            "zero" => return Ok(Self::zero()),
+            _ => {}
+        }
+        let parts: Vec<&str> = s.split(':').collect();
+        anyhow::ensure!(
+            parts.len() == 6,
+            "power profile '{s}' has {} fields, expected 6 (IDLE:HP:TWO:FOUR:TX:RX) \
+             or a named profile (pi2b | zero)",
+            parts.len()
+        );
+        let num = |i: usize, what: &str| -> anyhow::Result<f64> {
+            let v = parts[i]
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("power profile '{s}': bad {what}"))?;
+            anyhow::ensure!(v.is_finite(), "power profile '{s}': {what} must be finite");
+            anyhow::ensure!(v >= 0.0, "power profile '{s}': {what} must be >= 0");
+            Ok(v)
+        };
+        let m = Self {
+            idle_w: num(0, "idle watts")?,
+            active_w: [num(1, "hp watts")?, num(2, "two-core watts")?, num(3, "four-core watts")?],
+            tx_w: num(4, "tx watts")?,
+            rx_w: num(5, "rx watts")?,
+        };
+        Ok(m)
+    }
+
+    /// Structural validity (programmatic construction path).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let all = [self.idle_w, self.tx_w, self.rx_w]
+            .into_iter()
+            .chain(self.active_w);
+        for v in all {
+            anyhow::ensure!(v.is_finite() && v >= 0.0, "power values must be finite and >= 0");
+        }
+        Ok(())
+    }
+
+    /// Estimated joules a placement will burn on its device: compute at
+    /// `active_w[config]` for `proc_us`, plus the tx airtime at `tx_w`
+    /// when `transfer_bytes` move at `bps` (0 bytes = local, no tx).
+    /// The energy-aware scheduler ranks feasible candidates with this.
+    pub fn placement_joules(
+        &self,
+        config_index: usize,
+        proc_us: u64,
+        transfer_bytes: u64,
+        bps: f64,
+    ) -> f64 {
+        let compute = self.active_w[config_index.min(N_CONFIGS - 1)] * proc_us as f64 / 1e6;
+        let tx = if transfer_bytes > 0 && bps > 0.0 {
+            self.tx_w * (transfer_bytes as f64 * 8.0 / bps)
+        } else {
+            0.0
+        };
+        compute + tx
+    }
+}
+
+/// Parse a battery capacity flag (joules): strictly positive and finite.
+pub fn parse_battery_j(s: &str) -> anyhow::Result<f64> {
+    let v = s
+        .parse::<f64>()
+        .map_err(|_| anyhow::anyhow!("battery capacity '{s}' is not a number"))?;
+    anyhow::ensure!(v.is_finite() && v > 0.0, "battery capacity must be a finite positive joule count, got '{s}'");
+    Ok(v)
+}
+
+/// One device's power state and integrated energy.
+#[derive(Debug, Clone)]
+struct DevEnergy {
+    last_t: SimTime,
+    online: bool,
+    /// Running (committed) tasks per `TaskConfig::index()`.
+    active: [u32; N_CONFIGS],
+    /// Active transfer endpoints on this device.
+    tx: u32,
+    rx: u32,
+    idle_j: f64,
+    active_j: f64,
+    tx_j: f64,
+    rx_j: f64,
+    total_j: f64,
+    /// Remaining battery joules (`f64::INFINITY` = mains powered).
+    remaining_j: f64,
+    depleted: bool,
+    /// Bumped on every power change; outstanding depletion predictions
+    /// carry the epoch they were computed under and die on mismatch.
+    epoch: u64,
+}
+
+/// The fleet-wide energy integrator the engine drives.
+#[derive(Debug, Clone)]
+pub struct FleetEnergy {
+    model: EnergyModel,
+    capacity_j: Option<f64>,
+    devs: Vec<DevEnergy>,
+}
+
+impl FleetEnergy {
+    pub fn new(model: EnergyModel, capacity_j: Option<f64>, n_devices: usize) -> Self {
+        let remaining = capacity_j.unwrap_or(f64::INFINITY);
+        Self {
+            model,
+            capacity_j,
+            devs: vec![
+                DevEnergy {
+                    last_t: 0,
+                    online: true,
+                    active: [0; N_CONFIGS],
+                    tx: 0,
+                    rx: 0,
+                    idle_j: 0.0,
+                    active_j: 0.0,
+                    tx_j: 0.0,
+                    rx_j: 0.0,
+                    total_j: 0.0,
+                    remaining_j: remaining,
+                    depleted: false,
+                    epoch: 0,
+                };
+                n_devices
+            ],
+        }
+    }
+
+    pub fn model(&self) -> &EnergyModel {
+        &self.model
+    }
+
+    pub fn has_battery(&self) -> bool {
+        self.capacity_j.is_some()
+    }
+
+    fn in_fleet(&self, device: usize) -> bool {
+        device < self.devs.len()
+    }
+
+    /// Current draw of `device`, watts.
+    fn power_w(&self, device: usize) -> f64 {
+        let d = &self.devs[device];
+        if !d.online {
+            return 0.0;
+        }
+        let mut p = self.model.idle_w + self.model.tx_w * d.tx as f64 + self.model.rx_w * d.rx as f64;
+        for (i, &n) in d.active.iter().enumerate() {
+            p += self.model.active_w[i] * n as f64;
+        }
+        p
+    }
+
+    /// Integrate `device` forward to `now` under its current power.
+    fn settle(&mut self, device: usize, now: SimTime) {
+        let idle_w = self.model.idle_w;
+        let (act_w, tx_w, rx_w) = (self.model.active_w, self.model.tx_w, self.model.rx_w);
+        let d = &mut self.devs[device];
+        let dt_s = now.saturating_sub(d.last_t) as f64 / 1e6;
+        d.last_t = now;
+        if dt_s <= 0.0 || !d.online {
+            return;
+        }
+        let i = idle_w * dt_s;
+        let a = d.active.iter().enumerate().map(|(k, &n)| act_w[k] * n as f64).sum::<f64>() * dt_s;
+        let t = tx_w * d.tx as f64 * dt_s;
+        let r = rx_w * d.rx as f64 * dt_s;
+        d.idle_j += i;
+        d.active_j += a;
+        d.tx_j += t;
+        d.rx_j += r;
+        let drawn = i + a + t + r;
+        d.total_j += drawn;
+        // Battery level is monotone non-increasing (no recharge model);
+        // the clamp absorbs the sub-µs rounding of the depletion event.
+        d.remaining_j = (d.remaining_j - drawn).max(0.0);
+    }
+
+    /// A power change happened on `device` at `now`: settle the old
+    /// regime, apply `mutate`, and return a fresh depletion prediction
+    /// `(epoch, delta_us)` for the engine to schedule — `None` when no
+    /// battery is configured, the device is off/depleted, or it draws
+    /// nothing. Any previously returned epoch is invalidated.
+    fn transition(
+        &mut self,
+        device: usize,
+        now: SimTime,
+        mutate: impl FnOnce(&mut DevEnergy),
+    ) -> Option<(u64, u64)> {
+        if !self.in_fleet(device) {
+            return None; // cloud tier: mains powered, not accounted
+        }
+        self.settle(device, now);
+        mutate(&mut self.devs[device]);
+        self.devs[device].epoch += 1;
+        self.predict(device)
+    }
+
+    /// Depletion prediction under the *current* power (post-mutation).
+    fn predict(&self, device: usize) -> Option<(u64, u64)> {
+        self.capacity_j?;
+        let d = &self.devs[device];
+        if d.depleted || !d.online {
+            return None;
+        }
+        let p = self.power_w(device);
+        if p <= 0.0 {
+            return None;
+        }
+        let dt_us = (d.remaining_j / p * 1e6).ceil().min(u64::MAX as f64 / 2.0) as u64;
+        Some((d.epoch, dt_us.max(1)))
+    }
+
+    // ---- engine hooks (each returns a depletion (epoch, delta_us)) ------
+
+    pub fn task_start(&mut self, now: SimTime, device: usize, cfg: usize) -> Option<(u64, u64)> {
+        self.transition(device, now, |d| d.active[cfg.min(N_CONFIGS - 1)] += 1)
+    }
+
+    pub fn task_end(&mut self, now: SimTime, device: usize, cfg: usize) -> Option<(u64, u64)> {
+        self.transition(device, now, |d| {
+            let c = &mut d.active[cfg.min(N_CONFIGS - 1)];
+            *c = c.saturating_sub(1);
+        })
+    }
+
+    pub fn transfer_start(&mut self, now: SimTime, src: usize, dst: usize) -> [Option<(u64, u64)>; 2] {
+        [
+            self.transition(src, now, |d| d.tx += 1),
+            self.transition(dst, now, |d| d.rx += 1),
+        ]
+    }
+
+    pub fn transfer_end(&mut self, now: SimTime, src: usize, dst: usize) -> [Option<(u64, u64)>; 2] {
+        [
+            self.transition(src, now, |d| d.tx = d.tx.saturating_sub(1)),
+            self.transition(dst, now, |d| d.rx = d.rx.saturating_sub(1)),
+        ]
+    }
+
+    /// Join/leave/crash/recover: offline devices draw nothing (their
+    /// run counters are force-cleared — the engine cancels the work).
+    pub fn set_online(&mut self, now: SimTime, device: usize, online: bool) -> Option<(u64, u64)> {
+        self.transition(device, now, |d| {
+            d.online = online;
+            if !online {
+                d.active = [0; N_CONFIGS];
+                d.tx = 0;
+                d.rx = 0;
+            }
+        })
+    }
+
+    /// A scheduled depletion event fired. Returns `true` when it is
+    /// still valid (matching epoch, battery actually exhausted): the
+    /// caller must then take the device down through the crash path.
+    pub fn on_deplete(&mut self, now: SimTime, device: usize, epoch: u64) -> bool {
+        if !self.in_fleet(device) {
+            return false;
+        }
+        if self.devs[device].epoch != epoch || self.devs[device].depleted {
+            return false;
+        }
+        self.settle(device, now);
+        let d = &mut self.devs[device];
+        if !d.online {
+            return false;
+        }
+        d.remaining_j = 0.0;
+        d.depleted = true;
+        true
+    }
+
+    pub fn depleted(&self, device: usize) -> bool {
+        self.in_fleet(device) && self.devs[device].depleted
+    }
+
+    /// Settle every device (end of run — fold trailing idle draw).
+    pub fn settle_all(&mut self, now: SimTime) {
+        for d in 0..self.devs.len() {
+            self.settle(d, now);
+        }
+    }
+
+    /// Fleet totals `(idle_j, active_j, tx_j, rx_j, total_j)`.
+    pub fn totals(&self) -> (f64, f64, f64, f64, f64) {
+        let mut t = (0.0, 0.0, 0.0, 0.0, 0.0);
+        for d in &self.devs {
+            t.0 += d.idle_j;
+            t.1 += d.active_j;
+            t.2 += d.tx_j;
+            t.3 += d.rx_j;
+            t.4 += d.total_j;
+        }
+        t
+    }
+
+    /// Remaining battery joules per device (empty when mains powered).
+    pub fn battery_final_j(&self) -> Vec<f64> {
+        if self.capacity_j.is_none() {
+            return Vec::new();
+        }
+        self.devs.iter().map(|d| d.remaining_j).collect()
+    }
+
+    /// Remaining battery as a fraction of capacity per device (1.0 when
+    /// mains powered) — what `SchedEvent::BatteryLevels` carries.
+    pub fn levels(&self, out: &mut Vec<f64>) {
+        out.clear();
+        match self.capacity_j {
+            Some(cap) if cap > 0.0 => {
+                out.extend(self.devs.iter().map(|d| (d.remaining_j / cap).clamp(0.0, 1.0)))
+            }
+            _ => out.extend(std::iter::repeat(1.0).take(self.devs.len())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_named_and_explicit_profiles() {
+        assert_eq!(EnergyModel::parse("pi2b").unwrap(), EnergyModel::pi2b());
+        assert_eq!(EnergyModel::parse("zero").unwrap(), EnergyModel::zero());
+        let m = EnergyModel::parse("1.5:1:2:3:0.5:0.25").unwrap();
+        assert_eq!(m.idle_w, 1.5);
+        assert_eq!(m.active_w, [1.0, 2.0, 3.0]);
+        assert_eq!(m.tx_w, 0.5);
+        assert_eq!(m.rx_w, 0.25);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn parse_rejects_malformed_profiles_with_errors_not_panics() {
+        for bad in [
+            "",                   // nothing
+            "pi3",                // unknown name
+            "1:2:3:4:5",          // missing field
+            "1:2:3:4:5:6:7",      // extra field
+            "1:2:x:4:5:6",        // non-numeric
+            "1:2:inf:4:5:6",      // non-finite
+            "1:2:nan:4:5:6",      // non-finite
+            "-1:2:3:4:5:6",       // negative idle
+            "1:2:3:4:-0.5:6",     // negative tx
+        ] {
+            assert!(EnergyModel::parse(bad).is_err(), "profile '{bad}' should be rejected");
+        }
+        // Zero watts everywhere is valid (the inert model).
+        assert!(EnergyModel::parse("0:0:0:0:0:0").is_ok());
+    }
+
+    #[test]
+    fn parse_battery_is_strict() {
+        assert_eq!(parse_battery_j("1500").unwrap(), 1500.0);
+        for bad in ["", "abc", "0", "-10", "inf", "nan"] {
+            assert!(parse_battery_j(bad).is_err(), "battery '{bad}' should be rejected");
+        }
+    }
+
+    #[test]
+    fn settle_integrates_each_component_and_conserves() {
+        let m = EnergyModel { idle_w: 1.0, active_w: [2.0, 3.0, 5.0], tx_w: 0.5, rx_w: 0.25 };
+        let mut f = FleetEnergy::new(m, None, 2);
+        // 10 s idle, then 10 s with a four-core task + one tx flow.
+        f.task_start(10_000_000, 0, 2);
+        f.transfer_start(10_000_000, 0, 1);
+        f.task_end(20_000_000, 0, 2);
+        f.transfer_end(20_000_000, 0, 1);
+        f.settle_all(20_000_000);
+        let (idle, active, tx, rx, total) = f.totals();
+        // Device 0: 20 s idle + 10 s four-core + 10 s tx.
+        // Device 1: 20 s idle + 10 s rx.
+        assert!((idle - 40.0).abs() < 1e-9, "idle {idle}");
+        assert!((active - 50.0).abs() < 1e-9, "active {active}");
+        assert!((tx - 5.0).abs() < 1e-9, "tx {tx}");
+        assert!((rx - 2.5).abs() < 1e-9, "rx {rx}");
+        assert!((total - (idle + active + tx + rx)).abs() < 1e-6 * total.max(1.0));
+    }
+
+    #[test]
+    fn offline_devices_draw_nothing() {
+        let mut f = FleetEnergy::new(EnergyModel::pi2b(), None, 1);
+        f.set_online(5_000_000, 0, false); // 5 s online, then off
+        f.settle_all(60_000_000);
+        let (idle, active, tx, rx, total) = f.totals();
+        assert!((idle - 1.1 * 5.0).abs() < 1e-9);
+        assert_eq!((active, tx, rx), (0.0, 0.0, 0.0));
+        assert!((total - idle).abs() < 1e-9);
+    }
+
+    #[test]
+    fn battery_is_monotone_under_random_schedules() {
+        let mut rng = crate::util::Rng::seed_from_u64(11);
+        let mut f = FleetEnergy::new(EnergyModel::pi2b(), Some(500.0), 3);
+        let mut t: SimTime = 0;
+        let mut last = vec![500.0f64; 3];
+        for _ in 0..500 {
+            t += 1 + rng.gen_range(2_000_000);
+            let d = rng.index(3);
+            match rng.index(5) {
+                0 => drop(f.task_start(t, d, rng.index(3))),
+                1 => drop(f.task_end(t, d, rng.index(3))),
+                2 => drop(f.transfer_start(t, d, (d + 1) % 3)),
+                3 => drop(f.transfer_end(t, d, (d + 1) % 3)),
+                _ => drop(f.set_online(t, d, rng.gen_f64() < 0.8)),
+            }
+            let now = f.battery_final_j();
+            for (i, (&a, &b)) in now.iter().zip(&last).enumerate() {
+                assert!(a <= b + 1e-12, "device {i} battery rose: {b} -> {a}");
+                assert!(a >= 0.0);
+            }
+            last = now;
+        }
+        // Conservation still holds through the churned schedule.
+        let (i, a, tx, rx, total) = f.totals();
+        assert!((i + a + tx + rx - total).abs() <= 1e-6 * total.max(1.0));
+    }
+
+    #[test]
+    fn depletion_predictions_die_on_epoch_mismatch_and_fire_once() {
+        let m = EnergyModel { idle_w: 1.0, active_w: [0.0; 3], tx_w: 0.0, rx_w: 0.0 };
+        let mut f = FleetEnergy::new(m, Some(10.0), 1);
+        // Pure idle at 1 W: 10 J lasts 10 s.
+        let (e1, dt1) = f.predict(0).unwrap();
+        assert_eq!(dt1, 10_000_000);
+        // A transition bumps the epoch: the old prediction is dead.
+        let (e2, _) = f.task_start(1_000_000, 0, 0).unwrap();
+        assert_ne!(e1, e2);
+        assert!(!f.on_deplete(10_000_000, 0, e1), "stale epoch must not deplete");
+        // Clear the task again and let the fresh prediction fire.
+        let (e3, dt3) = f.task_end(2_000_000, 0, 0).unwrap();
+        let at = 2_000_000 + dt3;
+        assert!(f.on_deplete(at, 0, e3), "matching epoch must deplete");
+        assert!(f.depleted(0));
+        assert_eq!(f.battery_final_j(), vec![0.0]);
+        assert!(!f.on_deplete(at, 0, e3), "a battery depletes once");
+    }
+
+    #[test]
+    fn zero_model_accumulates_nothing() {
+        let mut f = FleetEnergy::new(EnergyModel::zero(), None, 4);
+        f.task_start(0, 1, 2);
+        f.transfer_start(0, 1, 0);
+        f.settle_all(3_600_000_000);
+        assert_eq!(f.totals(), (0.0, 0.0, 0.0, 0.0, 0.0));
+        assert!(f.battery_final_j().is_empty());
+    }
+
+    #[test]
+    fn placement_joules_ranks_cheaper_work_lower() {
+        let m = EnergyModel::pi2b();
+        let local = m.placement_joules(1, 16_862_000, 0, 40e6);
+        let offload4 = m.placement_joules(2, 11_611_000, 1_100_000, 40e6);
+        assert!(local > 0.0 && offload4 > 0.0);
+        // Shorter compute on more cores can still win on joules here.
+        assert!(m.placement_joules(2, 1_000_000, 0, 40e6) < local);
+        // Transfers cost tx airtime.
+        assert!(offload4 > m.placement_joules(2, 11_611_000, 0, 40e6));
+    }
+
+    #[test]
+    fn levels_report_fractions_or_mains() {
+        let mut f = FleetEnergy::new(EnergyModel::pi2b(), Some(100.0), 2);
+        let mut out = Vec::new();
+        f.levels(&mut out);
+        assert_eq!(out, vec![1.0, 1.0]);
+        f.settle_all(10_000_000); // 10 s idle at 1.1 W
+        f.levels(&mut out);
+        assert!((out[0] - 0.89).abs() < 1e-9);
+        let mains = FleetEnergy::new(EnergyModel::pi2b(), None, 2);
+        mains.levels(&mut out);
+        assert_eq!(out, vec![1.0, 1.0]);
+    }
+}

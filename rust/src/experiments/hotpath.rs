@@ -191,8 +191,8 @@ pub fn run_suite(opts: &SuiteOptions) -> Vec<BenchRow> {
         }
         b.build()
     };
-    let steady_row = |name: &str, ladder: Option<crate::workload::gen::Ladder>| {
-        let mut eng = scenario(SchedKind::Ras, ladder).engine();
+    let steady_row = |name: &str, s: crate::scenario::Scenario| {
+        let mut eng = s.engine();
         let t0 = Instant::now();
         let mut events = 0u64;
         while eng.step() {
@@ -209,14 +209,32 @@ pub fn run_suite(opts: &SuiteOptions) -> Vec<BenchRow> {
             throughput_per_s: 1e9 / ns_per_event.max(0.1),
         }
     };
-    for (name, ladder) in [
-        ("engine_event/steady_state", None),
+    // Cloud-tier steady state rides the same conveyor load with the WAN
+    // tier and the Pi 2B power model on: the delta against the plain row
+    // is the whole per-event cost of the energy integrator plus the
+    // cloud placement/upload machinery.
+    let cloud_scenario = ScenarioBuilder::new()
+        .scheduler(SchedKind::Energy)
+        .trace(TraceSpec::Weighted(3))
+        .frames(frames)
+        .seed(42)
+        .cloud(20e6, 40.0)
+        .energy(crate::energy::EnergyModel::pi2b())
+        .build();
+    for (name, s) in [
+        ("engine_event/steady_state", scenario(SchedKind::Ras, None)),
         (
             "engine_event/steady_state_laddered",
-            Some(crate::workload::gen::Ladder::stage3_family(&crate::config::SystemConfig::default())),
+            scenario(
+                SchedKind::Ras,
+                Some(crate::workload::gen::Ladder::stage3_family(
+                    &crate::config::SystemConfig::default(),
+                )),
+            ),
         ),
+        ("engine_event/steady_state_cloud", cloud_scenario),
     ] {
-        let row = steady_row(name, ladder);
+        let row = steady_row(name, s);
         println!("{}", row.report());
         rows.push(row);
     }

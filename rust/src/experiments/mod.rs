@@ -10,6 +10,7 @@
 pub mod hotpath;
 
 use crate::config::SystemConfig;
+use crate::energy::EnergyModel;
 use crate::metrics::Metrics;
 use crate::scenario::{Scenario, ScenarioBuilder, Sweep};
 use crate::workload::gen::{ArrivalProcess, Catalog, GenSpec, Ladder, TaskClass, Workload};
@@ -260,6 +261,128 @@ pub fn fault_stress(cfg: &SystemConfig, kinds: &[SchedKind], minutes: f64) -> Ve
     sweep.run()
 }
 
+// ---- energy & cloud-tier grids (beyond the paper) -----------------------
+
+/// Default WAN for the cloud-tier grids: 20 Mb/s, 40 ms RTT — a cable
+/// uplink an order of magnitude thinner than the 40 Mb/s LAN, so the
+/// cloud is a spill valve, not a free lunch. A config that already
+/// enables the cloud keeps its own numbers.
+fn with_cloud(b: ScenarioBuilder, cfg: &SystemConfig) -> ScenarioBuilder {
+    if cfg.cloud_wan_bps > 0.0 {
+        b
+    } else {
+        b.cloud(20e6, 40.0)
+    }
+}
+
+/// Battery-constrained fleet: `kinds` × the weighted-4 conveyor load with
+/// every device on a `battery_j`-joule battery (Pi 2B power model) and
+/// the cloud tier reachable. The comparison axis is
+/// [`Metrics::deadline_met_per_kj`] — deadlines bought per kilojoule of
+/// fleet energy — where the energy-aware scheduler must beat the
+/// deadline-only ones. Labels: `KIND_bat<J>`.
+pub fn energy_battery_grid(
+    cfg: &SystemConfig,
+    kinds: &[SchedKind],
+    minutes: f64,
+    battery_j: f64,
+    model: &EnergyModel,
+) -> Sweep {
+    let frames = frames_for_minutes(cfg, minutes);
+    let mut sweep = Sweep::new();
+    for &kind in kinds {
+        let b = ScenarioBuilder::new()
+            .config(cfg.clone())
+            .scheduler(kind)
+            .trace(TraceSpec::Weighted(4))
+            .frames(frames)
+            .energy(model.clone())
+            .battery_j(battery_j)
+            .named(format!("{}_bat{}", kind.label(), battery_j as u64));
+        sweep = sweep.add(with_cloud(b, cfg).build());
+    }
+    sweep
+}
+
+/// Cloud-burst-under-overload: `kinds` × {edge-only, +cloud} twins on an
+/// MMPP arrival stream whose ON-state rate swamps the 4-device fleet.
+/// Same seed and arrival plan per pair, so any deadline-met gap is the
+/// cloud tier's doing — the acceptance claim is that the cloud twin wins
+/// it on every scheduler. Labels: `KIND_edge` / `KIND_cloud`.
+pub fn cloud_burst_grid(cfg: &SystemConfig, kinds: &[SchedKind], minutes: f64) -> Sweep {
+    let burst = ArrivalProcess::Mmpp {
+        on_rate_per_min: 36.0,
+        off_rate_per_min: 1.0,
+        mean_on_s: 60.0,
+        mean_off_s: 60.0,
+    };
+    let catalog = Catalog::edge_serving(cfg);
+    let mut sweep = Sweep::new();
+    for &kind in kinds {
+        for cloud in [false, true] {
+            let mut b = ScenarioBuilder::new()
+                .config(cfg.clone())
+                .scheduler(kind)
+                .workload(Workload::Generative(GenSpec {
+                    arrivals: burst.clone(),
+                    catalog: catalog.clone(),
+                    admission_cap: 0,
+                }))
+                .minutes(minutes)
+                .named(format!(
+                    "{}_{}",
+                    kind.label(),
+                    if cloud { "cloud" } else { "edge" }
+                ));
+            if cloud {
+                b = with_cloud(b, cfg);
+            }
+            sweep = sweep.add(b.build());
+        }
+    }
+    sweep
+}
+
+/// Diurnal drain: a day-shaped run — quiet start, a congestion storm
+/// through the middle third, quiet again — over a battery ladder
+/// {mains, generous, tight} for each scheduler. The battery timelines
+/// ([`Metrics::battery_final_j`]) and depletion counts trace how far
+/// each budget carries the fleet through the storm. Labels:
+/// `KIND_mains` / `KIND_bat<J>`.
+pub fn diurnal_drain_grid(
+    cfg: &SystemConfig,
+    kinds: &[SchedKind],
+    minutes: f64,
+    batteries_j: &[f64],
+    model: &EnergyModel,
+) -> Sweep {
+    let frames = frames_for_minutes(cfg, minutes);
+    let total_s = minutes * 60.0;
+    let mut sweep = Sweep::new();
+    for &kind in kinds {
+        for bat in std::iter::once(None).chain(batteries_j.iter().copied().map(Some)) {
+            let label = match bat {
+                None => format!("{}_mains", kind.label()),
+                Some(j) => format!("{}_bat{}", kind.label(), j as u64),
+            };
+            let mut b = ScenarioBuilder::new()
+                .config(cfg.clone())
+                .scheduler(kind)
+                .trace(TraceSpec::Weighted(4))
+                .frames(frames)
+                .energy(model.clone())
+                .congestion_at(total_s / 3.0, 36e6, 0.75)
+                .congestion_at(total_s * 2.0 / 3.0, 0.0, 0.0)
+                .named(label);
+            if let Some(j) = bat {
+                b = b.battery_j(j);
+            }
+            sweep = sweep.add(with_cloud(b, cfg).build());
+        }
+    }
+    sweep
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -361,6 +484,61 @@ mod tests {
         assert!(parse_depths("two").is_err(), "not a number");
         assert!(parse_depths("").is_err(), "empty list");
         assert!(parse_depths("1,-2").is_err(), "negative");
+    }
+
+    #[test]
+    fn energy_battery_grid_drains_and_labels() {
+        let rows = energy_battery_grid(
+            &small_cfg(),
+            &[SchedKind::Ras, SchedKind::Energy],
+            3.0,
+            200.0,
+            &EnergyModel::pi2b(),
+        )
+        .run();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].label, "RAS_bat200");
+        assert_eq!(rows[1].label, "ENERGY_bat200");
+        for m in &rows {
+            assert!(m.energy_total_j > 0.0, "{}: power model must integrate", m.label);
+            assert_eq!(m.battery_final_j.len(), 4, "{}: per-device timeline", m.label);
+            assert!(
+                m.battery_depletions > 0,
+                "{}: a 200 J budget cannot survive 3 minutes",
+                m.label
+            );
+        }
+    }
+
+    #[test]
+    fn cloud_burst_grid_pairs_edge_and_cloud_twins() {
+        let rows = cloud_burst_grid(&small_cfg(), &[SchedKind::Ras], 3.0).run();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].label, "RAS_edge");
+        assert_eq!(rows[1].label, "RAS_cloud");
+        assert_eq!(rows[0].cloud_offloads, 0, "edge twin has no cloud tier");
+        // Same seed ⇒ identical offered load; only placement differs.
+        assert_eq!(rows[0].offered_tasks, rows[1].offered_tasks);
+    }
+
+    #[test]
+    fn diurnal_drain_grid_spans_the_battery_ladder() {
+        let rows = diurnal_drain_grid(
+            &small_cfg(),
+            &[SchedKind::Energy],
+            3.0,
+            &[400.0, 5000.0],
+            &EnergyModel::pi2b(),
+        )
+        .run();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].label, "ENERGY_mains");
+        assert_eq!(rows[1].label, "ENERGY_bat400");
+        assert_eq!(rows[2].label, "ENERGY_bat5000");
+        assert!(rows[0].battery_final_j.is_empty(), "mains row has no timeline");
+        assert_eq!(rows[0].battery_depletions, 0);
+        // The generous budget outlives (or at least matches) the tight one.
+        assert!(rows[2].battery_depletions <= rows[1].battery_depletions);
     }
 
     #[test]

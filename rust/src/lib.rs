@@ -46,6 +46,16 @@
 //! the entry points, and the conveyor trace is just the axis's default
 //! value ([`workload::gen::Workload::Conveyor`], byte-identical replay).
 //!
+//! The [`energy`] subsystem adds the joules axis on top of all of it:
+//! an optional per-device power model integrated by the engine at every
+//! state transition, optional batteries whose depletion routes through
+//! the crash/re-offer machinery, a WAN-attached cloud tier
+//! ([`sim::netsim::CloudTier`]) as a third placement target, and an
+//! energy-aware scheduler variant ([`scenario::SchedKind::Energy`]) that
+//! ranks deadline-feasible placements by estimated joules — `medge
+//! energy` drives the battery-constrained / cloud-burst / diurnal-drain
+//! grids (see README §Energy).
+//!
 //! The simulation hot path is allocation-free and index-based in steady
 //! state: engine tasks live in a generational slab ([`util::slab`],
 //! placement staleness folded into the slot generation), the shared
@@ -56,6 +66,7 @@
 
 pub mod config;
 pub mod coordinator;
+pub mod energy;
 pub mod experiments;
 pub mod fault;
 pub mod metrics;

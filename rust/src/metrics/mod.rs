@@ -243,6 +243,32 @@ pub struct Metrics {
     /// the batch ultimately places, so laddered runs report more
     /// attempt failures as degradation probes deeper rungs.
     pub reject_reasons: [u64; 4],
+
+    // ---- energy & battery (all zero without an EnergyModel; see
+    // `crate::energy` — idle + active + tx + rx ≈ total is the
+    // conservation identity `rust/tests/energy_props.rs` pins) ----
+    /// Fleet idle-baseline joules (online time × idle watts).
+    pub energy_idle_j: f64,
+    /// Joules burned by committed task execution windows.
+    pub energy_active_j: f64,
+    /// Radio transmit joules (source side of transfers).
+    pub energy_tx_j: f64,
+    /// Radio receive joules (destination side of transfers).
+    pub energy_rx_j: f64,
+    /// Total fleet joules (sum of the four components).
+    pub energy_total_j: f64,
+    /// Devices whose battery hit zero (each routes through the crash
+    /// path and stays down for the rest of the run).
+    pub battery_depletions: u64,
+    /// Remaining battery joules per device at end of run (empty when
+    /// mains powered — i.e. no battery capacity configured).
+    pub battery_final_j: Vec<f64>,
+
+    // ---- cloud tier (all zero without `cloud_wan_bps`) ----
+    /// Low-priority placements sent to the cloud tier.
+    pub cloud_offloads: u64,
+    /// Cloud placements that delivered within their deadline.
+    pub cloud_completions: u64,
 }
 
 impl Metrics {
@@ -307,6 +333,35 @@ impl Metrics {
             return 0.0;
         }
         self.accuracy_sum / self.lp_generated as f64
+    }
+
+    /// Mean joules per completed task (HP + LP); 0.0 when nothing
+    /// completed or energy accounting is off.
+    pub fn joules_per_task(&self) -> f64 {
+        let done = self.hp_completed + self.lp_completed_total();
+        if done == 0 || self.energy_total_j <= 0.0 {
+            return 0.0;
+        }
+        self.energy_total_j / done as f64
+    }
+
+    /// Low-priority deadlines met per kilojoule of fleet energy — the
+    /// figure of merit the energy-aware scheduler optimises (0.0 when
+    /// energy accounting is off, so it never divides by zero).
+    pub fn deadline_met_per_kj(&self) -> f64 {
+        if self.energy_total_j <= 0.0 {
+            return 0.0;
+        }
+        self.lp_deadline_met() as f64 / (self.energy_total_j / 1e3)
+    }
+
+    /// Fraction of LP placements that went to the cloud tier, in [0, 1].
+    pub fn cloud_offload_rate(&self) -> f64 {
+        let placed = self.lp_allocated_initial + self.lp_realloc_success;
+        if placed == 0 {
+            return 0.0;
+        }
+        self.cloud_offloads as f64 / placed as f64
     }
 
     /// Table II row: fraction of successful LP allocations per core config.
@@ -438,6 +493,23 @@ mod tests {
         assert_eq!(m.rung_completions.iter().sum::<u64>(), m.lp_deadline_met());
         assert!((m.accuracy_per_deadline_met() - 0.875).abs() < 1e-12);
         assert!((m.delivered_accuracy_rate() - 0.35).abs() < 1e-12);
+    }
+
+    #[test]
+    fn energy_accessors_guard_zero_and_average() {
+        let mut m = Metrics::new("e");
+        assert_eq!(m.joules_per_task(), 0.0);
+        assert_eq!(m.deadline_met_per_kj(), 0.0);
+        assert_eq!(m.cloud_offload_rate(), 0.0);
+        m.hp_completed = 6;
+        m.lp_completed_initial = 4;
+        m.energy_total_j = 500.0;
+        assert!((m.joules_per_task() - 50.0).abs() < 1e-12);
+        assert!((m.deadline_met_per_kj() - 8.0).abs() < 1e-12);
+        m.lp_allocated_initial = 8;
+        m.lp_realloc_success = 2;
+        m.cloud_offloads = 5;
+        assert!((m.cloud_offload_rate() - 0.5).abs() < 1e-12);
     }
 
     #[test]

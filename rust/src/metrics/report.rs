@@ -247,6 +247,48 @@ pub fn accuracy(runs: &[Metrics]) -> String {
     s
 }
 
+/// Energy & cloud-tier summary — fleet joules by component, the
+/// efficiency ratios the energy-aware scheduler optimises, battery
+/// depletions, and cloud offload traffic. All zero on runs without an
+/// [`crate::energy::EnergyModel`] / cloud tier.
+pub fn energy(runs: &[Metrics]) -> String {
+    let mut s = header("Energy — fleet joules, battery budgets, cloud tier");
+    s += &format!(
+        "{:<14} {:>9} {:>9} {:>7} {:>7} {:>9} {:>7} {:>9} | {:>6} {:>8} | {:>7} {:>7} {:>6}\n",
+        "scenario", "idle_J", "active_J", "tx_J", "rx_J", "total_J", "J/task", "met/kJ",
+        "drain", "min_batJ",
+        "cl_off", "cl_done", "cl%",
+    );
+    for m in runs {
+        // Lowest remaining battery in the fleet ("mains" when no
+        // capacity was configured).
+        let min_bat = m
+            .battery_final_j
+            .iter()
+            .copied()
+            .reduce(f64::min)
+            .map(|j| format!("{j:.0}J"))
+            .unwrap_or_else(|| "mains".into());
+        s += &format!(
+            "{:<14} {:>9.1} {:>9.1} {:>7.1} {:>7.1} {:>9.1} {:>7.2} {:>9.3} | {:>6} {:>8} | {:>7} {:>7} {:>6.1}\n",
+            m.label,
+            m.energy_idle_j,
+            m.energy_active_j,
+            m.energy_tx_j,
+            m.energy_rx_j,
+            m.energy_total_j,
+            m.joules_per_task(),
+            m.deadline_met_per_kj(),
+            m.battery_depletions,
+            min_bat,
+            m.cloud_offloads,
+            m.cloud_completions,
+            m.cloud_offload_rate() * 100.0,
+        );
+    }
+    s
+}
+
 /// Generative-workload summary — offered load, admission drops, and the
 /// completion headline (all zero on trace-only runs).
 pub fn loadgen(runs: &[Metrics]) -> String {
@@ -389,6 +431,20 @@ pub fn json_row(m: &Metrics) -> String {
         "\"reject_reasons\": [{}, {}, {}, {}]",
         m.reject_reasons[0], m.reject_reasons[1], m.reject_reasons[2], m.reject_reasons[3]
     ));
+    f.push(format!("\"energy_idle_j\": {}", json_f64(m.energy_idle_j)));
+    f.push(format!("\"energy_active_j\": {}", json_f64(m.energy_active_j)));
+    f.push(format!("\"energy_tx_j\": {}", json_f64(m.energy_tx_j)));
+    f.push(format!("\"energy_rx_j\": {}", json_f64(m.energy_rx_j)));
+    f.push(format!("\"energy_total_j\": {}", json_f64(m.energy_total_j)));
+    f.push(format!("\"joules_per_task\": {}", json_f64(m.joules_per_task())));
+    f.push(format!("\"deadline_met_per_kj\": {}", json_f64(m.deadline_met_per_kj())));
+    f.push(format!("\"battery_depletions\": {}", m.battery_depletions));
+    f.push(format!(
+        "\"battery_final_j\": [{}]",
+        m.battery_final_j.iter().map(|j| json_f64(*j)).collect::<Vec<_>>().join(", ")
+    ));
+    f.push(format!("\"cloud_offloads\": {}", m.cloud_offloads));
+    f.push(format!("\"cloud_completions\": {}", m.cloud_completions));
     format!("{{{}}}", f.join(", "))
 }
 
@@ -520,8 +576,40 @@ mod tests {
         assert!(j.contains("\"device_crashes\": 0"));
         assert!(j.contains("\"crash_recovered_in_deadline\": 0"));
         assert!(j.contains("\"retransmitted_mbits\": 0"));
+        // Energy/cloud fields render as zeros/empty on energy-less runs
+        // (the zero-model byte-identity contract).
+        assert!(j.contains("\"energy_total_j\": 0"));
+        assert!(j.contains("\"joules_per_task\": 0"));
+        assert!(j.contains("\"deadline_met_per_kj\": 0"));
+        assert!(j.contains("\"battery_depletions\": 0"));
+        assert!(j.contains("\"battery_final_j\": []"));
+        assert!(j.contains("\"cloud_offloads\": 0"));
+        assert!(j.contains("\"cloud_completions\": 0"));
         // Balanced braces (cheap well-formedness proxy without a parser).
         assert_eq!(j.matches('{').count(), j.matches('}').count());
+    }
+
+    #[test]
+    fn energy_table_renders_components_and_battery() {
+        let mut m = sample("ENERGY_b1500");
+        m.energy_idle_j = 400.0;
+        m.energy_active_j = 90.0;
+        m.energy_tx_j = 7.5;
+        m.energy_rx_j = 5.0;
+        m.energy_total_j = 502.5;
+        m.battery_depletions = 1;
+        m.battery_final_j = vec![0.0, 812.0, 640.5, 990.0];
+        m.cloud_offloads = 12;
+        m.cloud_completions = 10;
+        m.lp_allocated_initial = 24;
+        let e = energy(&[m.clone()]);
+        assert!(e.contains("ENERGY_b1500"));
+        assert!(e.contains("502.5"));
+        assert!(e.contains("0J"), "min battery column: {e}");
+        assert!(e.contains("met/kJ"));
+        // Mains-powered rows say so instead of faking a level.
+        m.battery_final_j.clear();
+        assert!(energy(&[m]).contains("mains"));
     }
 
     #[test]

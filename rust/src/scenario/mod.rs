@@ -41,12 +41,14 @@
 //! ```
 
 use crate::config::SystemConfig;
+use crate::coordinator::scheduler::energy_sched::EnergyScheduler;
 use crate::coordinator::scheduler::multi::MultiScheduler;
 use crate::fault::FaultPlan;
 use crate::coordinator::scheduler::ras_sched::RasScheduler;
 use crate::coordinator::scheduler::wps::WpsScheduler;
 use crate::coordinator::scheduler::Scheduler;
 use crate::coordinator::task::DeviceId;
+use crate::energy::EnergyModel;
 use crate::metrics::Metrics;
 use crate::sim::engine::RunExtras;
 use crate::sim::Engine;
@@ -67,14 +69,33 @@ pub enum SchedKind {
     Ras,
     /// Future-work contextual multi-scheduler (ablation).
     Multi,
+    /// Battery-aware variant: deadline feasibility first, joules second
+    /// (see [`crate::coordinator::scheduler::energy_sched`]).
+    Energy,
 }
 
 impl SchedKind {
     pub fn build(self, cfg: &SystemConfig) -> Box<dyn Scheduler> {
+        self.build_with(cfg, None)
+    }
+
+    /// Like [`Self::build`], but lets the caller pass the run's own power
+    /// model so the energy-aware score ranks placements by the joules the
+    /// engine will actually integrate. Only [`SchedKind::Energy`] consumes
+    /// it (falling back to [`EnergyModel::pi2b`] when absent).
+    pub fn build_with(
+        self,
+        cfg: &SystemConfig,
+        energy: Option<&EnergyModel>,
+    ) -> Box<dyn Scheduler> {
         match self {
             SchedKind::Wps => Box::new(WpsScheduler::new(cfg, 0, cfg.link_bps)),
             SchedKind::Ras => Box::new(RasScheduler::new(cfg, 0, cfg.link_bps)),
             SchedKind::Multi => Box::new(MultiScheduler::new(cfg, 0, cfg.link_bps, 8)),
+            SchedKind::Energy => {
+                let model = energy.cloned().unwrap_or_else(EnergyModel::pi2b);
+                Box::new(EnergyScheduler::new(cfg, 0, cfg.link_bps, model))
+            }
         }
     }
 
@@ -83,6 +104,7 @@ impl SchedKind {
             SchedKind::Wps => "WPS",
             SchedKind::Ras => "RAS",
             SchedKind::Multi => "MULTI",
+            SchedKind::Energy => "ENERGY",
         }
     }
 
@@ -91,7 +113,8 @@ impl SchedKind {
             "wps" => Ok(SchedKind::Wps),
             "ras" => Ok(SchedKind::Ras),
             "multi" => Ok(SchedKind::Multi),
-            other => anyhow::bail!("unknown scheduler: {other} (wps | ras | multi)"),
+            "energy" => Ok(SchedKind::Energy),
+            other => anyhow::bail!("unknown scheduler: {other} (wps | ras | multi | energy)"),
         }
     }
 }
@@ -123,7 +146,7 @@ impl Scenario {
     pub fn engine(&self) -> Engine {
         Engine::with_extras(
             self.cfg.clone(),
-            self.kind.build(&self.cfg),
+            self.kind.build_with(&self.cfg, self.extras.energy.as_ref()),
             std::sync::Arc::clone(&self.trace),
             &self.name,
             self.extras.clone(),
@@ -272,6 +295,37 @@ impl ScenarioBuilder {
     /// knob); for mid-run changes use [`Self::congestion_at`].
     pub fn duty_cycle(mut self, duty: f64) -> Self {
         self.cfg.duty_cycle = duty;
+        self
+    }
+
+    // ---- energy & cloud tier --------------------------------------------
+
+    /// Attach a per-device power model: the engine integrates idle /
+    /// active / radio joules at every state transition (see
+    /// [`crate::energy`]). Without this the run makes no energy
+    /// accounting and is byte-identical to the pre-energy engine.
+    pub fn energy(mut self, model: EnergyModel) -> Self {
+        self.extras.energy = Some(model);
+        self
+    }
+
+    /// Give every device a finite battery of `capacity_j` joules.
+    /// Depletion routes through the crash path (in-flight work lost,
+    /// survivors re-offered) and the device never recovers. Requires
+    /// [`Self::energy`] — a battery without a power model never drains.
+    pub fn battery_j(mut self, capacity_j: f64) -> Self {
+        self.extras.battery_j = Some(capacity_j);
+        self
+    }
+
+    /// Enable the cloud tier: a high-capacity executor behind a WAN
+    /// medium of `wan_bps` bits/s with a fixed `rtt_ms` round trip.
+    /// Schedulers gain one extra placement target (device id
+    /// `n_devices`); per-class cloud service times come from the
+    /// workload ([`crate::coordinator::task::Task::cloud_us`]).
+    pub fn cloud(mut self, wan_bps: f64, rtt_ms: f64) -> Self {
+        self.cfg.cloud_wan_bps = wan_bps;
+        self.cfg.cloud_rtt_ms = rtt_ms;
         self
     }
 
@@ -873,6 +927,69 @@ mod tests {
         let (a, b) = (build(), build());
         assert_eq!(a.extras.faults, b.extras.faults, "fault schedule must be seed-derived");
         assert_eq!(format!("{:?}", a.run()), format!("{:?}", b.run()));
+    }
+
+    #[test]
+    fn energy_scenario_integrates_joules_and_batteries_drain() {
+        let base = ScenarioBuilder::new()
+            .scheduler(SchedKind::Ras)
+            .trace(TraceSpec::Weighted(3))
+            .frames(12)
+            .seed(53);
+        let plain = base.clone().build().run();
+        assert_eq!(plain.energy_total_j, 0.0, "no model ⇒ no accounting");
+        assert!(plain.battery_final_j.is_empty());
+        let powered = base.clone().energy(EnergyModel::pi2b()).build().run();
+        assert!(powered.energy_total_j > 0.0);
+        assert!(powered.energy_idle_j > 0.0, "idle floor always draws");
+        assert_eq!(powered.battery_depletions, 0, "mains-powered fleet never depletes");
+        assert!(powered.battery_final_j.is_empty(), "mains ⇒ no battery timeline");
+        // Energy accounting must not perturb the simulation itself.
+        assert_eq!(powered.frames_completed, plain.frames_completed);
+        assert_eq!(powered.lp_deadline_met(), plain.lp_deadline_met());
+        // A battery too small for the run drains and crashes devices.
+        let drained =
+            base.energy(EnergyModel::pi2b()).battery_j(150.0).build().run();
+        assert!(drained.battery_depletions > 0, "150 J cannot survive 12 frames");
+        assert_eq!(drained.battery_final_j.len(), 4);
+        assert!(drained.battery_final_j.iter().all(|&j| j >= 0.0));
+    }
+
+    #[test]
+    fn cloud_tier_is_reachable_and_deterministic() {
+        let build = || {
+            ScenarioBuilder::new()
+                .scheduler(SchedKind::Energy)
+                .trace(TraceSpec::Weighted(4))
+                .frames(15)
+                .seed(59)
+                .cloud(20e6, 40.0)
+                .energy(EnergyModel::pi2b())
+                .build()
+        };
+        let (a, b) = (build().run(), build().run());
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        // cloud_completions counts only within-deadline deliveries.
+        assert!(a.cloud_completions <= a.cloud_offloads);
+        // The generalized identity covers the cloud placements.
+        assert_eq!(
+            a.two_core_allocs + a.four_core_allocs + a.cloud_offloads,
+            a.lp_allocated_initial + a.lp_realloc_success
+        );
+    }
+
+    #[test]
+    fn energy_kind_parses_and_labels() {
+        assert_eq!(SchedKind::parse("energy").unwrap(), SchedKind::Energy);
+        assert_eq!(SchedKind::Energy.label(), "ENERGY");
+        let s = ScenarioBuilder::new()
+            .scheduler(SchedKind::Energy)
+            .trace(TraceSpec::Weighted(2))
+            .frames(4)
+            .seed(61)
+            .build();
+        assert_eq!(s.name, "ENERGY_2");
+        assert_eq!(s.kind.build(&s.cfg).name(), "ENERGY");
     }
 
     #[test]

@@ -60,9 +60,10 @@ use crate::config::SystemConfig;
 use crate::coordinator::bandwidth::{BandwidthEstimator, ProbeRound};
 use crate::coordinator::scheduler::{Decision, Ops, Outcome, SchedEvent, Scheduler};
 use crate::coordinator::task::{Allocation, DeviceId, FrameId, Task, TaskId, VariantRung, MAX_RUNGS};
+use crate::energy::{EnergyModel, FleetEnergy};
 use crate::metrics::Metrics;
 use crate::sim::events::{Event, EventQueue, IdBatch};
-use crate::sim::netsim::{FlowId, LossyMedium, Medium, PROBE_FLOW_BASE};
+use crate::sim::netsim::{CloudTier, FlowId, LossyMedium, Medium, PROBE_FLOW_BASE};
 use crate::time::{SimDuration, SimTime};
 use crate::util::slab::{Slab, SlotRef};
 use crate::util::Rng;
@@ -106,6 +107,14 @@ pub struct RunExtras {
     /// deeper ladders let the schedulers trade accuracy for deadlines.
     /// Generative classes carry their own ladders in the compiled plan.
     pub lp_ladder: Vec<VariantRung>,
+    /// Per-device power model ([`crate::energy`]): integrated at every
+    /// state transition the engine observes. `None` = energy accounting
+    /// off — no extra events, no extra RNG draws, byte-identical output.
+    pub energy: Option<EnergyModel>,
+    /// Per-device battery capacity, joules (needs `energy`). Depletion
+    /// routes through the crash path — in-flight work lost or
+    /// re-offered — and a drained device never recovers.
+    pub battery_j: Option<f64>,
 }
 
 /// Runtime state of a placed task. Staleness is carried by the slab
@@ -211,6 +220,13 @@ pub struct Engine {
     conveyor_ladder: u16,
     /// Ladder index per generative class (parallel to `gen.classes`).
     gen_ladders: Vec<u16>,
+    /// Per-device energy integrator (`None` = accounting off: every
+    /// hook site is behind an `Option` check and pushes no events).
+    fleet: Option<FleetEnergy>,
+    /// Cloud tier behind the WAN (`None` unless `cloud_wan_bps > 0`).
+    cloud: Option<CloudTier>,
+    /// Scratch: battery levels relayed to the scheduler.
+    scratch_levels: Vec<f64>,
 }
 
 impl Engine {
@@ -325,6 +341,9 @@ impl Engine {
             .unwrap_or_default();
         let estimator = BandwidthEstimator::new(&cfg, cfg.link_bps);
         let n_cells = trace.entries.len() * cfg.n_devices;
+        let fleet =
+            extras.energy.map(|m| FleetEnergy::new(m, extras.battery_j, cfg.n_devices));
+        let cloud = CloudTier::from_config(&cfg);
         Self {
             active_devices: vec![true; cfg.n_devices],
             device_speed,
@@ -360,6 +379,9 @@ impl Engine {
             ladders,
             conveyor_ladder,
             gen_ladders,
+            fleet,
+            cloud,
+            scratch_levels: Vec::new(),
             cfg,
             sched,
         }
@@ -382,6 +404,17 @@ impl Engine {
         self.metrics.final_bandwidth_estimate_bps = self.sched.bandwidth_estimate();
         self.metrics.reject_reasons = self.sched.reject_diag();
         self.metrics.retransmitted_mbits = self.medium.retransmitted_bits / 1e6;
+        if let Some(f) = self.fleet.as_mut() {
+            // Fold the trailing idle draw, then bank the fleet totals.
+            f.settle_all(self.now);
+            let (idle, active, tx, rx, total) = f.totals();
+            self.metrics.energy_idle_j = idle;
+            self.metrics.energy_active_j = active;
+            self.metrics.energy_tx_j = tx;
+            self.metrics.energy_rx_j = rx;
+            self.metrics.energy_total_j = total;
+            self.metrics.battery_final_j = f.battery_final_j();
+        }
         self.metrics
     }
 
@@ -454,13 +487,30 @@ impl Engine {
     /// stale. The task itself stays live for requeue/re-offer.
     fn cancel_placement(&mut self, task: TaskId) {
         let h = self.slot_of(task);
+        // (device, power-config index, source) of the dead placement —
+        // the energy integrator must stop charging what was cancelled.
+        let mut ended: Option<(DeviceId, usize, DeviceId)> = None;
         if let Some(mut slot) = self.tasks.remove(h) {
-            slot.rt = None;
+            if let Some(rt) = slot.rt.take() {
+                ended = Some((rt.alloc.device, rt.alloc.config.index(), slot.task.source));
+            }
             let nh = self.tasks.insert(slot);
             self.task_index[task as usize] = nh;
         }
-        self.medium.remove_flow(self.now, task);
+        let lan_flow = self.medium.remove_flow(self.now, task);
         self.arm_medium();
+        if let Some((device, cfg_idx, source)) = ended {
+            // A cloud placement's upload rides the WAN, not the LAN.
+            let wan_flow = device >= self.cfg.n_devices
+                && self.cloud.as_mut().map_or(false, |c| c.abort_upload(self.now, task));
+            if wan_flow {
+                self.arm_wan();
+            }
+            self.energy_task_end(device, cfg_idx);
+            if lan_flow || wan_flow {
+                self.energy_transfer_end(source, device);
+            }
+        }
     }
 
     // ---- frame plumbing --------------------------------------------------
@@ -501,11 +551,82 @@ impl Engine {
             Event::RegimeChange { bg_bps_bits, duty_bits } => {
                 self.on_regime_change(f64::from_bits(bg_bps_bits), f64::from_bits(duty_bits))
             }
+            Event::WanComplete { flow, epoch } => self.on_wan_complete(flow, epoch),
+            Event::BatteryDeplete { device, epoch } => self.on_battery_deplete(device, epoch),
         }
     }
 
     fn device_active(&self, device: DeviceId) -> bool {
         self.active_devices.get(device).copied().unwrap_or(false)
+    }
+
+    // ---- energy accounting ----------------------------------------------
+    //
+    // Every hook below no-ops (no event pushes, no arithmetic) when the
+    // run carries no [`EnergyModel`] — the default path stays
+    // byte-identical. Each fleet transition returns a fresh battery
+    // depletion prediction (`None` on mains) that replaces the previous
+    // one via the epoch guard.
+
+    /// Arm the battery-depletion prediction a fleet hook returned.
+    fn arm_battery(&mut self, device: DeviceId, pred: Option<(u64, u64)>) {
+        if let Some((epoch, delta_us)) = pred {
+            self.queue.push(self.now + delta_us, Event::BatteryDeplete { device, epoch });
+        }
+    }
+
+    /// A committed allocation starts powering its device (commitment =
+    /// active: the engine has no "actually started" event, see
+    /// [`crate::energy`]). Cloud placements no-op (mains powered).
+    fn energy_task_start(&mut self, device: DeviceId, cfg_idx: usize) {
+        let now = self.now;
+        let pred = self.fleet.as_mut().and_then(|f| f.task_start(now, device, cfg_idx));
+        self.arm_battery(device, pred);
+    }
+
+    fn energy_task_end(&mut self, device: DeviceId, cfg_idx: usize) {
+        let now = self.now;
+        let pred = self.fleet.as_mut().and_then(|f| f.task_end(now, device, cfg_idx));
+        self.arm_battery(device, pred);
+    }
+
+    fn energy_transfer_start(&mut self, src: DeviceId, dst: DeviceId) {
+        let now = self.now;
+        let Some(preds) = self.fleet.as_mut().map(|f| f.transfer_start(now, src, dst)) else {
+            return;
+        };
+        self.arm_battery(src, preds[0]);
+        self.arm_battery(dst, preds[1]);
+    }
+
+    fn energy_transfer_end(&mut self, src: DeviceId, dst: DeviceId) {
+        let now = self.now;
+        let Some(preds) = self.fleet.as_mut().map(|f| f.transfer_end(now, src, dst)) else {
+            return;
+        };
+        self.arm_battery(src, preds[0]);
+        self.arm_battery(dst, preds[1]);
+    }
+
+    fn energy_set_online(&mut self, device: DeviceId, online: bool) {
+        let now = self.now;
+        let pred = self.fleet.as_mut().and_then(|f| f.set_online(now, device, online));
+        self.arm_battery(device, pred);
+    }
+
+    /// A predicted battery depletion fired. Stale epochs (the device's
+    /// power changed since, which re-armed a fresh prediction) are
+    /// ignored; a genuine depletion routes through the crash path —
+    /// in-flight work is lost or re-offered — and the recover guard
+    /// keeps the device down for the rest of the run.
+    fn on_battery_deplete(&mut self, device: DeviceId, epoch: u64) {
+        let now = self.now;
+        let drained = self.fleet.as_mut().map_or(false, |f| f.on_deplete(now, device, epoch));
+        if !drained {
+            return;
+        }
+        self.metrics.battery_depletions += 1;
+        self.on_device_crash(device);
     }
 
     // ---- workload generation -------------------------------------------
@@ -551,9 +672,9 @@ impl Engine {
         // ladder Vec lives once in the engine's ladder table, and this
         // path fires once per arrival of a potentially million-arrival
         // plan.
-        let (priority, deadline_us, input_bytes, proc_us, batch) = {
+        let (priority, deadline_us, input_bytes, proc_us, cloud_us, batch) = {
             let c = &gen.classes[arrival.class as usize];
-            (c.priority, c.deadline_us, c.input_bytes, c.proc_us, c.batch)
+            (c.priority, c.deadline_us, c.input_bytes, c.proc_us, c.cloud_us, c.batch)
         };
         let ladder = self.gen_ladders.get(arrival.class as usize).copied().unwrap_or(0);
         let cap = gen.admission_cap;
@@ -609,6 +730,7 @@ impl Engine {
                 deadline_us,
                 input_bytes,
                 proc_us,
+                cloud_us,
             );
             self.insert_task(task, 0);
             self.queue.push(self.now + self.cfg.control_latency(), Event::HpArrive { task: id });
@@ -626,6 +748,7 @@ impl Engine {
                     deadline_us,
                     input_bytes,
                     proc_us,
+                    cloud_us,
                 );
                 self.insert_task(task, ladder);
                 ids.push(id);
@@ -718,9 +841,11 @@ impl Engine {
         let finish = eff_start + proc;
         let task = alloc.task;
         let is_hp = alloc.config == crate::coordinator::task::TaskConfig::HighPriority;
+        let (device, cfg_idx) = (alloc.device, alloc.config.index());
         let h = self.slot_of(task);
         self.tasks.get_mut(h).expect("placing a live task").rt =
             Some(TaskRuntime { alloc, realloc, reoffered });
+        self.energy_task_start(device, cfg_idx);
         if is_hp {
             self.queue.push(finish, Event::HpFinish { task: h });
         } else {
@@ -733,10 +858,12 @@ impl Engine {
         let Some(slot) = self.tasks.get(h) else { return };
         let Some(rt) = slot.rt.as_ref() else { return };
         let frame = rt.alloc.frame;
+        let (device, cfg_idx) = (rt.alloc.device, rt.alloc.config.index());
         let task_id = slot.task.id;
         let deadline = slot.task.deadline;
         let source = slot.task.source;
         let created_at = slot.task.created_at;
+        self.energy_task_end(device, cfg_idx);
         if self.now > deadline {
             self.metrics.hp_violations += 1;
             self.sched.on_event(self.now, SchedEvent::Violation { task: task_id });
@@ -790,6 +917,21 @@ impl Engine {
         realloc: Option<bool>,
     ) -> Decision {
         const STACK: usize = 2 * IdBatch::INLINE;
+        // Battery-aware planning: refresh the scheduler's battery-level
+        // snapshot before the batch lands. Free dispatch (the arms ack 0
+        // ops, so it never touches `busy_until` or latency accounting),
+        // and only battery-backed fleets take the path at all.
+        if self.fleet.as_ref().map_or(false, |f| f.has_battery()) {
+            let now = self.now;
+            let mut levels = std::mem::take(&mut self.scratch_levels);
+            if let Some(f) = self.fleet.as_mut() {
+                f.settle_all(now);
+                f.levels(&mut levels);
+            }
+            let _ =
+                self.sched.on_event(service_start, SchedEvent::BatteryLevels { levels: &levels });
+            self.scratch_levels = levels;
+        }
         let first_slot = self.tasks.get(self.slot_of(ids[0])).expect("batch task live");
         let (lidx, cur_rung) = (first_slot.ladder as usize, first_slot.rung as usize);
         debug_assert!(
@@ -862,10 +1004,17 @@ impl Engine {
     /// re-offers.
     fn place_lp_allocs(&mut self, allocs: Vec<Allocation>, decision: SimTime, realloc: bool, reoffered: bool) {
         for alloc in allocs {
-            match alloc.config {
-                crate::coordinator::task::TaskConfig::LowTwoCore => self.metrics.two_core_allocs += 1,
-                crate::coordinator::task::TaskConfig::LowFourCore => self.metrics.four_core_allocs += 1,
-                _ => {}
+            if alloc.device >= self.cfg.n_devices {
+                // Cloud placement: counted on its own axis — the core-mix
+                // counters describe the edge fleet only, so the identity
+                // becomes two + four + cloud = initial + realloc.
+                self.metrics.cloud_offloads += 1;
+            } else {
+                match alloc.config {
+                    crate::coordinator::task::TaskConfig::LowTwoCore => self.metrics.two_core_allocs += 1,
+                    crate::coordinator::task::TaskConfig::LowFourCore => self.metrics.four_core_allocs += 1,
+                    _ => {}
+                }
             }
             if realloc {
                 self.metrics.lp_realloc_success += 1;
@@ -882,10 +1031,14 @@ impl Engine {
                 let comm_start = alloc.comm.map(|(c1, _)| c1).unwrap_or(decision);
                 let at = comm_start.max(decision + self.cfg.control_latency());
                 let task = alloc.task;
+                let (device, cfg_idx) = (alloc.device, alloc.config.index());
                 let h = self.slot_of(task);
                 self.tasks.get_mut(h).expect("placing a live task").rt =
                     Some(TaskRuntime { alloc, realloc, reoffered });
                 self.queue.push(at, Event::TransferStart { task: h });
+                // Commitment powers the destination (a cloud destination
+                // is mains powered and no-ops inside the integrator).
+                self.energy_task_start(device, cfg_idx);
             } else {
                 self.start_local(alloc, decision, realloc, reoffered);
             }
@@ -894,12 +1047,23 @@ impl Engine {
 
     fn on_transfer_start(&mut self, h: SlotRef) {
         let Some(slot) = self.tasks.get(h) else { return };
-        if slot.rt.is_none() {
-            return;
-        }
+        let Some(rt) = slot.rt.as_ref() else { return };
         let (id, bytes) = (slot.task.id, slot.task.input_bytes);
-        self.medium.add_flow(self.now, id, bytes);
-        self.arm_medium();
+        let (src, dst) = (slot.task.source, rt.alloc.device);
+        if dst >= self.cfg.n_devices {
+            // Cloud placement: the input rides the WAN uplink, not the
+            // fleet's shared 802.11 medium.
+            if let Some(c) = self.cloud.as_mut() {
+                c.begin_upload(self.now, id, bytes);
+            }
+            self.arm_wan();
+        } else {
+            self.medium.add_flow(self.now, id, bytes);
+            self.arm_medium();
+        }
+        // Radio power: tx on the source, rx on the destination (the
+        // cloud side no-ops — it is not in the fleet).
+        self.energy_transfer_start(src, dst);
     }
 
     fn on_lp_finish(&mut self, h: SlotRef) {
@@ -907,10 +1071,12 @@ impl Engine {
         let Some(rt) = slot.rt.as_ref() else { return };
         let (frame, offloaded, realloc, reoffered) =
             (rt.alloc.frame, rt.alloc.offloaded, rt.realloc, rt.reoffered);
+        let (device, cfg_idx) = (rt.alloc.device, rt.alloc.config.index());
         let task_id = slot.task.id;
         let deadline = slot.task.deadline;
         let created_at = slot.task.created_at;
         let (lidx, rung) = (slot.ladder as usize, slot.rung as usize);
+        self.energy_task_end(device, cfg_idx);
         if self.now > deadline {
             self.metrics.lp_violations += 1;
             self.sched.on_event(self.now, SchedEvent::Violation { task: task_id });
@@ -926,6 +1092,11 @@ impl Engine {
         }
         if offloaded {
             self.metrics.offloaded_completed += 1;
+            if device >= self.cfg.n_devices {
+                // The three-tier acceptance metric: cloud placements
+                // that actually delivered within deadline.
+                self.metrics.cloud_completions += 1;
+            }
         }
         // Delivered-accuracy accounting: a completion delivers its
         // rung's inference accuracy (1.0 for ladder-less tasks —
@@ -972,14 +1143,63 @@ impl Engine {
         } else {
             // Transfer done: the offloaded task may start processing.
             let h = self.slot_of(flow);
-            let placed = self.tasks.get(h).and_then(|s| s.rt.as_ref().map(|rt| rt.alloc));
-            if let Some(alloc) = placed {
+            let placed = self
+                .tasks
+                .get(h)
+                .and_then(|s| s.rt.as_ref().map(|rt| (rt.alloc, s.task.source)));
+            if let Some((alloc, source)) = placed {
                 let eff_start = alloc.start.max(self.now);
                 let proc = self.actual_duration(&alloc);
                 self.queue.push(eff_start + proc, Event::LpFinish { task: h });
+                self.energy_transfer_end(source, alloc.device);
             }
         }
         self.arm_medium();
+    }
+
+    // ---- cloud tier ------------------------------------------------------
+
+    /// (Re-)arm the next WAN upload completion under the WAN epoch.
+    fn arm_wan(&mut self) {
+        let Some(c) = self.cloud.as_mut() else { return };
+        if let Some((t, flow)) = c.next_completion(self.now) {
+            let epoch = c.wan.epoch;
+            self.queue.push(t, Event::WanComplete { flow, epoch });
+        }
+    }
+
+    /// A cloud upload is predicted complete. On a genuine completion the
+    /// task runs for its *deterministic* `cloud_us` service time (the
+    /// cloud tier is not a jittery Raspberry Pi — and crucially, this
+    /// path draws no RNG, so enabling the cloud perturbs nothing else),
+    /// finishing one WAN round-trip plus the service time later. The
+    /// refreshed goodput EWMA goes back to the schedulers as a zero-cost
+    /// [`SchedEvent::CloudBandwidthUpdate`].
+    fn on_wan_complete(&mut self, flow: FlowId, epoch: u64) {
+        let now = self.now;
+        let Some(c) = self.cloud.as_mut() else { return };
+        if epoch != c.wan.epoch {
+            return; // stale prediction; a newer event is armed
+        }
+        let rtt_us = c.rtt_us;
+        let completed = c.complete_upload(now, flow);
+        let bps = c.estimate_bps();
+        if completed.is_none() {
+            self.arm_wan();
+            return;
+        }
+        let h = self.slot_of(flow);
+        let done = self
+            .tasks
+            .get(h)
+            .and_then(|s| s.rt.as_ref().map(|rt| (rt.alloc.device, s.task.source, s.task.cloud_us)));
+        if let Some((device, source, cloud_us)) = done {
+            // The source's radio goes quiet the moment the upload lands.
+            self.energy_transfer_end(source, device);
+            self.queue.push(now + rtt_us + cloud_us, Event::LpFinish { task: h });
+        }
+        let _ = self.sched.on_event(now, SchedEvent::CloudBandwidthUpdate { bps });
+        self.arm_wan();
     }
 
     fn on_probe_start(&mut self) {
@@ -1111,6 +1331,7 @@ impl Engine {
         }
         self.active_devices[device] = true;
         self.metrics.churn_joins += 1;
+        self.energy_set_online(device, true);
         let _ = self.sched.on_event(self.now, SchedEvent::DeviceJoined { device });
     }
 
@@ -1120,6 +1341,10 @@ impl Engine {
         }
         self.active_devices[device] = false;
         self.metrics.churn_leaves += 1;
+        // Settle the departing device's draw first: eviction hooks below
+        // then no-op on it (its run counters are force-cleared) while
+        // still releasing live counterparts on surviving devices.
+        self.energy_set_online(device, false);
         let decision = self.sched.on_event(self.now, SchedEvent::DeviceLeft { device });
         let Outcome::Ack { evicted } = decision.outcome else {
             unreachable!("DeviceLeft must be acknowledged");
@@ -1163,6 +1388,7 @@ impl Engine {
             self.crashed_at.resize(device + 1, None);
         }
         self.crashed_at[device] = Some(self.now);
+        self.energy_set_online(device, false);
         let decision = self.sched.on_event(self.now, SchedEvent::DeviceCrashed { device });
         let Outcome::Ack { evicted } = decision.outcome else {
             unreachable!("DeviceCrashed must be acknowledged");
@@ -1218,6 +1444,26 @@ impl Engine {
             self.fail_frame(frame);
             self.free_task(id);
         }
+        // In-flight *cloud* uploads from the crashed device die the same
+        // way (the WAN flow table is id-sorted too, so the scan is
+        // deterministic for the same reason as above).
+        orphans.clear();
+        if let Some(c) = self.cloud.as_ref() {
+            for id in c.upload_ids() {
+                let Some(slot) = self.tasks.get(self.slot_of(id)) else { continue };
+                let Some(rt) = slot.rt.as_ref() else { continue };
+                if slot.task.source == device {
+                    orphans.push((id, rt.alloc.frame));
+                }
+            }
+        }
+        for &(id, frame) in orphans.iter() {
+            self.cancel_placement(id); // aborts the WAN upload too
+            let _ = self.sched.on_event(self.now, SchedEvent::Violation { task: id });
+            self.metrics.crash_tasks_lost += 1;
+            self.fail_frame(frame);
+            self.free_task(id);
+        }
         orphans.clear();
         self.scratch_orphans = orphans;
     }
@@ -1228,6 +1474,9 @@ impl Engine {
     /// already gracefully left) is a no-op, never a spurious revival —
     /// graceful returns go through `join_at`.
     fn on_device_recover(&mut self, device: DeviceId) {
+        if self.fleet.as_ref().map_or(false, |f| f.depleted(device)) {
+            return; // a drained battery never comes back
+        }
         let Some(crashed) = self.crashed_at.get_mut(device).and_then(Option::take) else {
             return; // no crash on record: nothing to recover from
         };
@@ -1237,6 +1486,7 @@ impl Engine {
         self.active_devices[device] = true;
         self.metrics.device_recoveries += 1;
         self.metrics.lat_crash_recovery.record(self.now - crashed);
+        self.energy_set_online(device, true);
         let _ = self.sched.on_event(self.now, SchedEvent::DeviceRecovered { device });
     }
 
@@ -1380,12 +1630,14 @@ mod tests {
             assert!(m.lp_completed_initial + m.lp_violations <= m.lp_allocated_initial + m.lp_realloc_success);
             assert!(m.offloaded_completed <= m.offloaded_total);
             assert!(m.frames_completed <= m.frames_total);
-            // Core mix only counts successful allocations.
+            // Core mix (plus the cloud axis) only counts successful
+            // allocations; edge-only runs keep cloud_offloads at 0.
             assert_eq!(
-                m.two_core_allocs + m.four_core_allocs,
+                m.two_core_allocs + m.four_core_allocs + m.cloud_offloads,
                 m.lp_allocated_initial + m.lp_realloc_success,
                 "{}: core mix accounting", m.label
             );
+            assert_eq!(m.cloud_offloads, 0, "{}: no cloud tier configured", m.label);
         }
     }
 

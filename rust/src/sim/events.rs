@@ -145,6 +145,15 @@ pub enum Event {
     /// The background-traffic regime changes mid-run (scenario schedule).
     /// The f64 rate/duty are carried as `to_bits` so the event stays `Eq`.
     RegimeChange { bg_bps_bits: u64, duty_bits: u64 },
+    /// The cloud tier's WAN medium predicts an upload completion (stale
+    /// if the WAN epoch mismatches). Only pushed when the cloud tier is
+    /// enabled — edge-only runs never see it.
+    WanComplete { flow: FlowId, epoch: u64 },
+    /// A device's battery is predicted to hit zero under its current
+    /// draw ([`crate::energy::FleetEnergy`]): stale if the device's
+    /// power changed since (epoch mismatch). Only pushed when a battery
+    /// is configured — unbatteried runs never see it.
+    BatteryDeplete { device: DeviceId, epoch: u64 },
 }
 
 /// A scheduled event: ordered by time, then insertion sequence (FIFO among

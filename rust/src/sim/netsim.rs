@@ -283,6 +283,113 @@ impl Medium {
     }
 }
 
+/// The cloud tier: a high-capacity executor behind a WAN [`Medium`].
+///
+/// The third placement target (after local and edge-offload): inputs are
+/// uploaded over a dedicated WAN uplink — fluid processor-sharing, like
+/// the edge link, so concurrent uploads contend — then the task runs for
+/// its deterministic `Task::cloud_us` service time after a fixed
+/// propagation delay (`rtt_us` covers request up + result back; the
+/// bandwidth-limited upload itself is simulated, not folded into the
+/// RTT). The executor is provisioned: there is no queueing and no load
+/// jitter on the cloud side, which is exactly why it changes which
+/// deadline/accuracy trades are reachable under overload.
+///
+/// The tier carries **its own bandwidth estimator**: instead of the edge
+/// link's probe trains, every completed upload contributes its achieved
+/// goodput to an EWMA (same α as the edge estimator). The schedulers'
+/// cloud-feasibility check plans with this estimate, so WAN congestion
+/// from concurrent uploads feeds back into placement the same way probe
+/// under-estimation does at the edge.
+#[derive(Debug, Clone)]
+pub struct CloudTier {
+    /// The WAN uplink shared by in-flight uploads.
+    pub wan: Medium,
+    /// Fixed round-trip propagation delay, µs.
+    pub rtt_us: SimTime,
+    /// EWMA of achieved upload goodput, bits/s.
+    est_bps: f64,
+    alpha: f64,
+    /// In-flight uploads: `(flow id, start time, payload bytes)`. Small
+    /// (bounded by concurrent cloud placements), scanned linearly.
+    uploads: Vec<(FlowId, SimTime, u64)>,
+}
+
+impl CloudTier {
+    /// Build from config; `None` when the cloud tier is disabled
+    /// (`cloud_wan_bps == 0`, the default).
+    pub fn from_config(cfg: &crate::config::SystemConfig) -> Option<Self> {
+        if cfg.cloud_wan_bps <= 0.0 {
+            return None;
+        }
+        Some(Self {
+            wan: Medium::new(cfg.cloud_wan_bps, 0.0),
+            rtt_us: crate::time::millis(cfg.cloud_rtt_ms.max(0.0)),
+            est_bps: cfg.cloud_wan_bps,
+            alpha: cfg.ewma_alpha,
+            uploads: Vec::new(),
+        })
+    }
+
+    /// Current WAN bandwidth estimate the schedulers plan with, bits/s.
+    pub fn estimate_bps(&self) -> f64 {
+        self.est_bps
+    }
+
+    /// Start uploading `bytes` for task-flow `id` at `now`.
+    pub fn begin_upload(&mut self, now: SimTime, id: FlowId, bytes: u64) {
+        self.wan.add_flow(now, id, bytes);
+        self.uploads.push((id, now, bytes));
+    }
+
+    /// Earliest predicted upload completion (see [`Medium::next_completion`]).
+    pub fn next_completion(&mut self, now: SimTime) -> Option<(SimTime, FlowId)> {
+        self.wan.next_completion(now)
+    }
+
+    /// An upload completion event fired: pop the flow if it really is
+    /// done, feed the achieved goodput into the estimator, and return
+    /// the payload size. `None` if the prediction went stale.
+    pub fn complete_upload(&mut self, now: SimTime, id: FlowId) -> Option<u64> {
+        if !self.wan.complete_flow(now, id) {
+            return None;
+        }
+        let pos = self.uploads.iter().position(|&(f, _, _)| f == id)?;
+        let (_, start, bytes) = self.uploads.swap_remove(pos);
+        let dt_s = now.saturating_sub(start) as f64 / 1e6;
+        if dt_s > 0.0 {
+            let sample = bytes as f64 * 8.0 / dt_s;
+            self.est_bps = self.alpha * sample + (1.0 - self.alpha) * self.est_bps;
+        }
+        Some(bytes)
+    }
+
+    /// Abort an in-flight upload (source crashed / placement cancelled).
+    /// Returns whether it existed.
+    pub fn abort_upload(&mut self, now: SimTime, id: FlowId) -> bool {
+        let existed = self.wan.remove_flow(now, id);
+        if let Some(pos) = self.uploads.iter().position(|&(f, _, _)| f == id) {
+            self.uploads.swap_remove(pos);
+        }
+        existed
+    }
+
+    /// Whether task-flow `id` is currently uploading.
+    pub fn has_upload(&self, id: FlowId) -> bool {
+        self.wan.has_flow(id)
+    }
+
+    /// Uploads currently in flight.
+    pub fn inflight(&self) -> usize {
+        self.uploads.len()
+    }
+
+    /// In-flight upload flow ids, ascending (crash orphan scan).
+    pub fn upload_ids(&self) -> impl Iterator<Item = FlowId> + '_ {
+        self.wan.flow_ids()
+    }
+}
+
 /// MTU-sized packet the loss model samples over (1500 B Ethernet-class
 /// frames, matching the paper's Packet_MMAP traffic generator).
 pub const PACKET_BYTES: u64 = 1500;
@@ -484,6 +591,44 @@ mod tests {
         lossy.add_flow(0, PROBE_FLOW_BASE, 84_000);
         assert_eq!(lossy.retransmitted_bits, before);
         assert_eq!(lossy.remaining_bits(0, PROBE_FLOW_BASE), Some(84_000.0 * 8.0));
+    }
+
+    #[test]
+    fn cloud_tier_gates_on_config_and_estimates_from_uploads() {
+        use crate::config::SystemConfig;
+        assert!(
+            CloudTier::from_config(&SystemConfig::default()).is_none(),
+            "cloud tier must default OFF"
+        );
+        let cfg = SystemConfig { cloud_wan_bps: 20e6, cloud_rtt_ms: 50.0, ..Default::default() };
+        let mut c = CloudTier::from_config(&cfg).unwrap();
+        assert_eq!(c.rtt_us, 50_000);
+        assert_eq!(c.estimate_bps(), 20e6);
+        // A solo 1.1 MB upload at 20 Mb/s finishes in 440 ms and its
+        // achieved goodput equals the link rate: the EWMA stays put.
+        c.begin_upload(0, 7, 1_100_000);
+        assert_eq!(c.inflight(), 1);
+        let (t, id) = c.next_completion(0).unwrap();
+        assert_eq!(id, 7);
+        assert_eq!(t, 440_000);
+        assert_eq!(c.complete_upload(t, 7), Some(1_100_000));
+        assert_eq!(c.inflight(), 0);
+        assert!((c.estimate_bps() - 20e6).abs() < 20e6 * 0.01, "est {}", c.estimate_bps());
+        // Two concurrent uploads halve the share: the survivor's sample
+        // drags the estimate below the raw link rate.
+        c.begin_upload(1_000_000, 8, 1_100_000);
+        c.begin_upload(1_000_000, 9, 1_100_000);
+        let (t2, first) = c.next_completion(1_000_000).unwrap();
+        assert_eq!(c.complete_upload(t2, first), Some(1_100_000));
+        let (t3, second) = c.next_completion(t2).unwrap();
+        assert_eq!(c.complete_upload(t3, second), Some(1_100_000));
+        assert!(c.estimate_bps() < 20e6 * 0.95, "contended est {}", c.estimate_bps());
+        // Aborts drop the flow and the record.
+        c.begin_upload(t3, 10, 500_000);
+        assert!(c.has_upload(10));
+        assert!(c.abort_upload(t3 + 1_000, 10));
+        assert!(!c.abort_upload(t3 + 1_000, 10));
+        assert_eq!(c.inflight(), 0);
     }
 
     #[test]

@@ -45,6 +45,13 @@ pub struct TaskClass {
     pub batch: u32,
     /// Unnormalised mix weight (chance this class is drawn per arrival).
     pub weight: f64,
+    /// Cloud-tier service time, seconds. `None` (the default) derives it
+    /// from the four-core time and the system's `cloud_speedup` at
+    /// compile; an explicit value overrides per class (a memory-bound
+    /// stage may gain less from the server tier than a compute-bound
+    /// one). Ignored for high-priority classes, which never leave the
+    /// edge, and irrelevant while the cloud tier is disabled.
+    pub cloud_s: Option<f64>,
     /// Model-variant ladder (ordered, rung 0 = full accuracy). Empty =
     /// the class's single spec compiles to an implicit one-rung ladder
     /// at accuracy 1.0, bit-identical to the pre-ladder behaviour. Set
@@ -65,6 +72,7 @@ impl TaskClass {
             proc4_s,
             batch: 1,
             weight: 1.0,
+            cloud_s: None,
             variants: Vec::new(),
         }
     }
@@ -80,6 +88,7 @@ impl TaskClass {
             proc4_s: proc_s,
             batch: 1,
             weight: 1.0,
+            cloud_s: None,
             variants: Vec::new(),
         }
     }
@@ -109,6 +118,12 @@ impl TaskClass {
         self
     }
 
+    /// Override the cloud-tier service time (seconds).
+    pub fn cloud(mut self, secs: f64) -> Self {
+        self.cloud_s = Some(secs);
+        self
+    }
+
     /// Attach a model-variant ladder. Rung 0 becomes the class's own
     /// spec (input/stage times are synced to it), so an attached ladder
     /// *replaces* the single-model cost — the class never runs a model
@@ -134,6 +149,14 @@ impl TaskClass {
             deadline_us: secs(self.deadline_s),
             input_bytes: (self.input_mbits * 1e6 / 8.0).round() as u64,
             proc_us: [secs(self.proc2_s + pad), secs(self.proc4_s + pad)],
+            cloud_us: if self.priority == Priority::High {
+                0
+            } else {
+                match self.cloud_s {
+                    Some(s) => secs(s).max(1), // explicit, unpadded
+                    None => crate::coordinator::task::default_cloud_us(self.proc4_s, cfg),
+                }
+            },
             batch: self.batch.max(1),
             rungs: self.variants.iter().map(|v| v.compile(pad)).collect(),
         }
@@ -217,6 +240,18 @@ impl Catalog {
                 "class {}: high-priority classes are placed per-task (batch must be 1)",
                 c.name
             );
+            if let Some(s) = c.cloud_s {
+                anyhow::ensure!(
+                    s.is_finite() && s > 0.0,
+                    "class {}: cloud service time must be finite and positive",
+                    c.name
+                );
+                anyhow::ensure!(
+                    c.priority == Priority::Low,
+                    "class {}: high-priority classes never run on the cloud tier",
+                    c.name
+                );
+            }
             if !c.variants.is_empty() {
                 anyhow::ensure!(
                     c.priority == Priority::Low,
@@ -335,6 +370,27 @@ mod tests {
         let mut desync = TaskClass::low("x", 20.0, 4.0, 8.0, 6.0);
         desync.variants = fam.rungs;
         assert!(Catalog::new(vec![desync]).validate().is_err());
+    }
+
+    #[test]
+    fn cloud_times_default_from_speedup_and_override_per_class() {
+        let cfg = SystemConfig { cloud_wan_bps: 20e6, ..Default::default() };
+        let derived = TaskClass::low("d", 20.0, 1.0, 3.0, 2.0).compile(&cfg);
+        assert_eq!(derived.cloud_us, secs(2.0 / cfg.cloud_speedup));
+        let explicit = TaskClass::low("e", 20.0, 1.0, 3.0, 2.0).cloud(0.5).compile(&cfg);
+        assert_eq!(explicit.cloud_us, secs(0.5));
+        // HP classes never compile a cloud time.
+        assert_eq!(TaskClass::high("h", 2.0, 1.0).compile(&cfg).cloud_us, 0);
+        // Validation rejects degenerate overrides (and HP overrides).
+        assert!(Catalog::new(vec![TaskClass::low("x", 10.0, 1.0, 1.0, 0.8).cloud(0.0)])
+            .validate()
+            .is_err());
+        assert!(Catalog::new(vec![TaskClass::low("x", 10.0, 1.0, 1.0, 0.8).cloud(f64::NAN)])
+            .validate()
+            .is_err());
+        let mut hp = TaskClass::high("h", 2.0, 1.0);
+        hp.cloud_s = Some(1.0);
+        assert!(Catalog::new(vec![hp]).validate().is_err());
     }
 
     #[test]

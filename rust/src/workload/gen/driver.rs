@@ -106,6 +106,9 @@ pub struct GenClass {
     /// `[two-core, four-core]` stage durations (HP: the stage duration in
     /// both entries).
     pub proc_us: [SimDuration; 2],
+    /// Cloud-tier service time (0 for HP classes — see
+    /// [`crate::coordinator::task::Task::cloud_us`]).
+    pub cloud_us: SimDuration,
     pub batch: u32,
     /// Compiled model-variant ladder (rung 0 equals this class's own
     /// spec by construction). Empty = no explicit ladder: the class runs

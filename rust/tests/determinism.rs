@@ -117,6 +117,111 @@ fn accuracy_grid() -> Sweep {
     sweep
 }
 
+/// The energy & cloud-tier axis: {WPS, RAS, ENERGY} × {battery-constrained
+/// conveyor, cloud-burst MMPP overload}, with a crash and a lossy link in
+/// every cell. Battery depletion re-enters the crash/re-offer machinery and
+/// the cloud path adds a second (WAN) flow table plus passive bandwidth
+/// feedback — none of which may draw outside the seed-derived streams, so
+/// the rows must be identical across worker-thread counts and repeats.
+fn energy_grid() -> Sweep {
+    let cfg = medge::config::SystemConfig::default();
+    let kinds = [SchedKind::Wps, SchedKind::Ras, SchedKind::Energy];
+    let mut sweep = Sweep::new();
+    for (i, kind) in kinds.into_iter().enumerate() {
+        // Battery-constrained conveyor cell: tight budget, cloud reachable.
+        sweep = sweep.add(
+            ScenarioBuilder::new()
+                .scheduler(kind)
+                .trace(TraceSpec::Weighted(4))
+                .frames(12)
+                .seed(700 + i as u64)
+                .energy(medge::energy::EnergyModel::pi2b())
+                .battery_j(300.0)
+                .cloud(20e6, 40.0)
+                .crash_at(40.0, 0)
+                .recover_at(120.0, 0)
+                .loss_rate(0.1)
+                .probe_loss(0.2)
+                .named(format!("{}_bat", kind.label()))
+                .build(),
+        );
+        // Cloud-burst cell: MMPP overload spilling onto the WAN tier.
+        sweep = sweep.add(
+            ScenarioBuilder::new()
+                .scheduler(kind)
+                .workload(Workload::Generative(GenSpec {
+                    arrivals: ArrivalProcess::Mmpp {
+                        on_rate_per_min: 36.0,
+                        off_rate_per_min: 1.0,
+                        mean_on_s: 60.0,
+                        mean_off_s: 60.0,
+                    },
+                    catalog: Catalog::edge_serving(&cfg),
+                    admission_cap: 0,
+                }))
+                .minutes(8.0)
+                .seed(710 + i as u64)
+                .energy(medge::energy::EnergyModel::pi2b())
+                .cloud(20e6, 40.0)
+                .crash_at(120.0, 1)
+                .recover_at(240.0, 1)
+                .loss_rate(0.05)
+                .named(format!("{}_burst", kind.label()))
+                .build(),
+        );
+    }
+    sweep
+}
+
+#[test]
+fn energy_grid_identical_across_thread_counts() {
+    let g = energy_grid();
+    let seq = rows_debug(&g.clone().threads(1));
+    let par4 = rows_debug(&g.clone().threads(4));
+    let par2 = rows_debug(&g.threads(2));
+    assert_eq!(seq.len(), 6);
+    for (i, row) in seq.iter().enumerate() {
+        assert_eq!(row, &par4[i], "energy row {i} differs between --threads 1 and --threads 4");
+        assert_eq!(row, &par2[i], "energy row {i} differs between --threads 1 and --threads 2");
+    }
+}
+
+#[test]
+fn energy_grid_identical_across_repeated_runs() {
+    let g = energy_grid().threads(4);
+    assert_eq!(rows_debug(&g), rows_debug(&g), "re-running the energy sweep must not drift");
+}
+
+#[test]
+fn energy_grid_actually_drains_and_offloads() {
+    // Guard against a silently inert axis: somewhere in the grid a
+    // battery must deplete, the cloud must take work, and every cell
+    // must integrate joules and keep the generalized placement identity.
+    let rows = energy_grid().threads(2).run();
+    assert!(
+        rows.iter().any(|m| m.battery_depletions > 0),
+        "a 300 J budget under weighted-4 load must deplete somewhere"
+    );
+    assert!(
+        rows.iter().any(|m| m.cloud_offloads > 0),
+        "MMPP overload with a WAN tier must offload somewhere"
+    );
+    for m in &rows {
+        assert!(m.energy_total_j > 0.0, "{}: power model must integrate", m.label);
+        assert!(
+            m.cloud_completions <= m.cloud_offloads,
+            "{}: cloud deliveries cannot exceed cloud placements",
+            m.label
+        );
+        assert_eq!(
+            m.two_core_allocs + m.four_core_allocs + m.cloud_offloads,
+            m.lp_allocated_initial + m.lp_realloc_success,
+            "{}: three-tier placement identity",
+            m.label
+        );
+    }
+}
+
 #[test]
 fn accuracy_grid_identical_across_thread_counts() {
     let g = accuracy_grid();

@@ -1,0 +1,153 @@
+//! Energy & cloud-tier property suite: conservation of the integrated
+//! joules, battery bounds, the no-model/zero-model equivalence wall, and
+//! the two acceptance claims of the three-tier subsystem —
+//!
+//! * an MMPP-overload scenario with the cloud tier reachable delivers
+//!   strictly more deadlines than its edge-only twin on every scheduler;
+//! * the energy-aware scheduler beats the deadline-only ones on
+//!   deadlines met per kilojoule in the battery-constrained grid.
+
+use medge::config::SystemConfig;
+use medge::energy::EnergyModel;
+use medge::experiments;
+use medge::metrics::Metrics;
+use medge::scenario::{ScenarioBuilder, SchedKind};
+use medge::workload::trace::TraceSpec;
+
+fn powered(kind: SchedKind, seed: u64, battery_j: Option<f64>) -> Metrics {
+    let mut b = ScenarioBuilder::new()
+        .scheduler(kind)
+        .trace(TraceSpec::Weighted(4))
+        .frames(14)
+        .seed(seed)
+        .energy(EnergyModel::pi2b())
+        .cloud(20e6, 40.0)
+        .crash_at(50.0, 0)
+        .recover_at(130.0, 0)
+        .loss_rate(0.05);
+    if let Some(j) = battery_j {
+        b = b.battery_j(j);
+    }
+    b.build().run()
+}
+
+/// The integrator keeps per-component and total accumulators separately;
+/// conservation (`idle + active + tx + rx == total`) must hold to
+/// floating-point tolerance on every run — mains or battery, clean or
+/// faulted, edge or three-tier.
+#[test]
+fn energy_components_sum_to_total() {
+    for kind in [SchedKind::Wps, SchedKind::Ras, SchedKind::Energy] {
+        for battery in [None, Some(400.0)] {
+            let m = powered(kind, 811, battery);
+            let parts = m.energy_idle_j + m.energy_active_j + m.energy_tx_j + m.energy_rx_j;
+            assert!(m.energy_total_j > 0.0, "{}: nothing integrated", m.label);
+            assert!(
+                (parts - m.energy_total_j).abs() <= 1e-6 * m.energy_total_j.max(1.0),
+                "{}: conservation violated: {parts} != {}",
+                m.label,
+                m.energy_total_j
+            );
+        }
+    }
+}
+
+/// Batteries only discharge: every final level sits in `[0, capacity]`,
+/// and a strictly larger budget never finishes lower (same seed, same
+/// events up to the first depletion; extra capacity can only add margin).
+#[test]
+fn battery_levels_stay_bounded_and_capacity_helps() {
+    let cap = 350.0;
+    let m = powered(SchedKind::Ras, 823, Some(cap));
+    assert_eq!(m.battery_final_j.len(), 4);
+    for (d, &j) in m.battery_final_j.iter().enumerate() {
+        assert!((0.0..=cap).contains(&j), "{}: device {d} battery {j} outside [0, {cap}]", m.label);
+    }
+    assert!(m.battery_depletions > 0, "a 350 J budget must deplete under weighted-4 load");
+    let generous = powered(SchedKind::Ras, 823, Some(100_000.0));
+    assert_eq!(generous.battery_depletions, 0, "a 100 kJ budget cannot drain in 14 frames");
+    assert!(generous.battery_final_j.iter().all(|&j| j > 0.0));
+}
+
+/// The no-model run and the zero-watt-model run are the same simulation:
+/// identical rows (the hooks fire but draw no RNG and integrate nothing),
+/// and the mains-powered pi2b run only *observes* — it must not perturb a
+/// single scheduling outcome relative to the unmetered twin.
+#[test]
+fn energy_accounting_is_observer_only() {
+    let base = |seed: u64| {
+        ScenarioBuilder::new()
+            .scheduler(SchedKind::Wps)
+            .trace(TraceSpec::Weighted(3))
+            .frames(12)
+            .seed(seed)
+            .loss_rate(0.1)
+            .crash_at(45.0, 2)
+            .recover_at(140.0, 2)
+    };
+    for seed in [831u64, 832] {
+        let plain = base(seed).build().run();
+        let zero = base(seed).energy(EnergyModel::zero()).build().run();
+        assert_eq!(
+            format!("{plain:?}"),
+            format!("{zero:?}"),
+            "seed {seed}: zero-watt model must be bit-identical to no model"
+        );
+        let metered = base(seed).energy(EnergyModel::pi2b()).build().run();
+        assert!(metered.energy_total_j > 0.0);
+        // Everything the simulation *decides* is unchanged by metering.
+        assert_eq!(metered.frames_completed, plain.frames_completed, "seed {seed}");
+        assert_eq!(metered.lp_deadline_met(), plain.lp_deadline_met(), "seed {seed}");
+        assert_eq!(metered.hp_completed, plain.hp_completed, "seed {seed}");
+        assert_eq!(metered.lp_violations, plain.lp_violations, "seed {seed}");
+        assert_eq!(metered.final_bandwidth_estimate_bps, plain.final_bandwidth_estimate_bps);
+    }
+}
+
+/// Acceptance: under MMPP overload, opening the cloud tier strictly
+/// raises deadlines met for every scheduler — the WAN spill valve must
+/// buy real capacity, not just move placements around.
+#[test]
+fn cloud_tier_strictly_raises_deadline_met_under_overload() {
+    let cfg = SystemConfig { seed: 29, ..SystemConfig::default() };
+    let kinds = [SchedKind::Wps, SchedKind::Ras, SchedKind::Energy];
+    let rows = experiments::cloud_burst_grid(&cfg, &kinds, 8.0).run();
+    assert_eq!(rows.len(), 6);
+    for pair in rows.chunks(2) {
+        let (edge, cloud) = (&pair[0], &pair[1]);
+        assert!(edge.label.ends_with("_edge") && cloud.label.ends_with("_cloud"));
+        assert_eq!(edge.cloud_offloads, 0, "{}: edge twin must not touch the cloud", edge.label);
+        assert!(cloud.cloud_offloads > 0, "{}: overload must spill to the WAN", cloud.label);
+        assert!(
+            cloud.lp_deadline_met() > edge.lp_deadline_met(),
+            "{} vs {}: cloud tier must strictly raise deadline-met ({} vs {})",
+            cloud.label,
+            edge.label,
+            cloud.lp_deadline_met(),
+            edge.lp_deadline_met()
+        );
+    }
+}
+
+/// Acceptance: in the battery-constrained grid the energy-aware
+/// scheduler — joule-scored placements plus the battery-scarcity
+/// steering — buys more deadlines per kilojoule than either
+/// deadline-only scheduler.
+#[test]
+fn energy_scheduler_wins_deadline_met_per_kilojoule() {
+    let cfg = SystemConfig { seed: 31, ..SystemConfig::default() };
+    let kinds = [SchedKind::Wps, SchedKind::Ras, SchedKind::Energy];
+    let rows =
+        experiments::energy_battery_grid(&cfg, &kinds, 6.0, 400.0, &EnergyModel::pi2b()).run();
+    assert_eq!(rows.len(), 3);
+    let per_kj: Vec<(String, f64)> =
+        rows.iter().map(|m| (m.label.clone(), m.deadline_met_per_kj())).collect();
+    let energy = per_kj.iter().find(|(l, _)| l.starts_with("ENERGY")).unwrap();
+    for (label, v) in per_kj.iter().filter(|(l, _)| !l.starts_with("ENERGY")) {
+        assert!(
+            energy.1 > *v,
+            "battery grid: ENERGY must beat {label} on deadlines/kJ ({:.3} vs {v:.3})",
+            energy.1
+        );
+    }
+}

@@ -146,6 +146,31 @@ fn one_rung_ladder_replays_golden_rows_byte_for_byte() {
     }
 }
 
+/// Energy accounting must be provably zero-cost when it measures
+/// nothing: the golden scenario with the ZERO-WATT power model attached
+/// replays `json_rows` **byte-identically** to the model-free run, for
+/// every scheduler. The hooks fire at every state transition but draw
+/// no RNG and integrate 0.0 everywhere, so both the simulation outcome
+/// and the serialized energy fields (all zero) are the same bytes —
+/// which is also what keeps the checked-in goldens valid across the
+/// energy PR.
+#[test]
+fn zero_energy_model_replays_golden_rows_byte_for_byte() {
+    use medge::energy::EnergyModel;
+    for kind in [SchedKind::Wps, SchedKind::Ras, SchedKind::Multi] {
+        let plain = report::json_rows(&[golden_scenario(kind)]);
+        let powered = report::json_rows(&[
+            golden_builder(kind).energy(EnergyModel::zero()).build().run()
+        ]);
+        assert_eq!(
+            plain,
+            powered,
+            "{}: the zero-watt power model must be byte-identical to no model",
+            kind.label()
+        );
+    }
+}
+
 /// Determinism assertion for the fault path specifically: the golden
 /// scenario crashes device 3 with work in flight, so every replay
 /// exercises the crash orphan scan. That scan now iterates the medium's
