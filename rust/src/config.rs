@@ -115,6 +115,23 @@ pub struct SystemConfig {
     /// Classes can override with an explicit `TaskClass::cloud`.
     pub cloud_speedup: f64,
 
+    /// Fleet cell (shard) size for the sharded placement hierarchy:
+    /// devices are grouped into contiguous cells of this many slots, and
+    /// schedulers descend cell → device instead of scanning the fleet
+    /// ([`crate::coordinator::fleet`]). `0` (the default) sizes cells
+    /// automatically: one cell for small fleets, ~√n-device cells at
+    /// scale. Placement decisions are identical for every cell size —
+    /// the hierarchy prunes work, never changes answers.
+    pub cell_size: usize,
+    /// Remote-candidate count above which RAS switches from an eager
+    /// materialized shuffle to the sparse lazy shuffle (draws
+    /// proportional to candidates *consumed*, not fleet size). Below
+    /// the cutover the draw sequence is bit-identical to the historical
+    /// eager shuffle; at any count the choice depends only on the
+    /// candidate count, never on the cell layout, so sharded and flat
+    /// placement stay decision-identical.
+    pub lazy_shuffle_cutover: usize,
+
     /// RNG seed for trace generation, device shuffling, probe host
     /// selection and traffic bursts. Same seed ⇒ identical run.
     pub seed: u64,
@@ -150,6 +167,8 @@ impl Default for SystemConfig {
             cloud_wan_bps: 0.0,
             cloud_rtt_ms: 40.0,
             cloud_speedup: 8.0,
+            cell_size: 0,
+            lazy_shuffle_cutover: 256,
             seed: 42,
         }
     }
@@ -218,7 +237,8 @@ impl SystemConfig {
                 image_bytes, link_bps, control_latency_ms, base_buckets,
                 exp_buckets, bandwidth_interval_s, ewma_alpha, ping_count,
                 ping_bytes, probe_airtime_factor, cost_scale, op_cost_us, bg_bps, duty_cycle,
-                cloud_wan_bps, cloud_rtt_ms, cloud_speedup, seed
+                cloud_wan_bps, cloud_rtt_ms, cloud_speedup, cell_size,
+                lazy_shuffle_cutover, seed
             );
         }
         Ok(cfg)
@@ -227,14 +247,14 @@ impl SystemConfig {
     /// Render to the `key value` text format (stable, diffable).
     pub fn to_kv(&self) -> String {
         format!(
-            "n_devices {}\ncores_per_device {}\nhp_proc_s {}\nlp2_proc_s {}\nlp4_proc_s {}\nproc_padding_s {}\nproc_jitter_s {}\nhp_cores {}\nframe_period_s {}\nhp_deadline_s {}\nimage_bytes {}\nlink_bps {}\ncontrol_latency_ms {}\nbase_buckets {}\nexp_buckets {}\nbandwidth_interval_s {}\newma_alpha {}\nping_count {}\nping_bytes {}\nprobe_airtime_factor {}\ncost_scale {}\nop_cost_us {}\nbg_bps {}\nduty_cycle {}\ncloud_wan_bps {}\ncloud_rtt_ms {}\ncloud_speedup {}\nseed {}\n",
+            "n_devices {}\ncores_per_device {}\nhp_proc_s {}\nlp2_proc_s {}\nlp4_proc_s {}\nproc_padding_s {}\nproc_jitter_s {}\nhp_cores {}\nframe_period_s {}\nhp_deadline_s {}\nimage_bytes {}\nlink_bps {}\ncontrol_latency_ms {}\nbase_buckets {}\nexp_buckets {}\nbandwidth_interval_s {}\newma_alpha {}\nping_count {}\nping_bytes {}\nprobe_airtime_factor {}\ncost_scale {}\nop_cost_us {}\nbg_bps {}\nduty_cycle {}\ncloud_wan_bps {}\ncloud_rtt_ms {}\ncloud_speedup {}\ncell_size {}\nlazy_shuffle_cutover {}\nseed {}\n",
             self.n_devices, self.cores_per_device, self.hp_proc_s, self.lp2_proc_s,
             self.lp4_proc_s, self.proc_padding_s, self.proc_jitter_s, self.hp_cores, self.frame_period_s,
             self.hp_deadline_s, self.image_bytes, self.link_bps, self.control_latency_ms,
             self.base_buckets, self.exp_buckets, self.bandwidth_interval_s, self.ewma_alpha,
             self.ping_count, self.ping_bytes, self.probe_airtime_factor, self.cost_scale, self.op_cost_us,
             self.bg_bps, self.duty_cycle, self.cloud_wan_bps, self.cloud_rtt_ms, self.cloud_speedup,
-            self.seed
+            self.cell_size, self.lazy_shuffle_cutover, self.seed
         )
     }
 }
@@ -293,6 +313,17 @@ mod tests {
         assert_eq!(c2.cloud_wan_bps, 20e6);
         assert!((c2.cloud_rtt_ms - 60.0).abs() < 1e-12);
         assert!((c2.cloud_speedup - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fleet_sharding_knobs_default_and_roundtrip() {
+        let c = SystemConfig::default();
+        assert_eq!(c.cell_size, 0, "cell sizing must default to auto");
+        assert_eq!(c.lazy_shuffle_cutover, 256);
+        let c = SystemConfig { cell_size: 64, lazy_shuffle_cutover: 8, ..Default::default() };
+        let c2 = SystemConfig::from_kv(&c.to_kv()).unwrap();
+        assert_eq!(c2.cell_size, 64);
+        assert_eq!(c2.lazy_shuffle_cutover, 8);
     }
 
     #[test]

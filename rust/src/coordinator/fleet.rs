@@ -1,0 +1,563 @@
+//! Sharded fleet hierarchy: cells, per-cell availability aggregates,
+//! and the sparse lazy shuffle — the scale-out layer that lets
+//! placement descend cell → device instead of scanning the fleet.
+//!
+//! ## Cells
+//!
+//! Devices are grouped into contiguous *cells* of [`CellMap::span`]
+//! slots (configured by `cell_size`, auto-sized to ~√n at scale). Each
+//! cell maintains, incrementally on every scheduler state transition:
+//!
+//! * its **active** member count (fleet membership),
+//! * its **idle** member count — members in the scheduler's quiescent
+//!   state (RAS: availability lists never written since construction;
+//!   WPS: zero live allocations), whose placement answer is *uniform*
+//!   and can be computed once per cell instead of once per device,
+//! * an ordered **active-member set**, so mixed cells iterate their
+//!   real members in device order instead of probing every slot,
+//! * an **availability index** over busy members keyed by their
+//!   earliest-finish time, so top-k feasible candidates come out in
+//!   `O(log span)` per pull ([`FleetCells::top_k`]) and the cell's
+//!   earliest-finish aggregate is an `O(1)` peek
+//!   ([`FleetCells::earliest_end`]).
+//!
+//! The hierarchy **prunes work, never changes answers**: schedulers use
+//! the counters to pick between a per-cell uniform fast path and the
+//! exact per-device path, both of which produce identical decisions,
+//! operation counts, and RNG draws (proven by the sharded-vs-flat
+//! equivalence suite in `rust/tests/fleet_scale.rs`).
+//!
+//! ## Lazy shuffle
+//!
+//! RAS scatters guest tasks over a uniformly shuffled candidate list.
+//! Eagerly shuffling 100k candidates costs 100k RNG draws per decision;
+//! [`LazyShuffle`] materializes the *prefix* of a forward Fisher–Yates
+//! permutation on demand — one draw per element actually consumed — via
+//! a sparse swap map. Consuming the whole permutation reproduces the
+//! eager forward Fisher–Yates shuffle exactly (same draws, same order).
+
+use std::collections::{BTreeSet, HashMap};
+
+use crate::time::SimTime;
+use crate::util::Rng;
+
+/// Sentinel for "no availability-index entry".
+const NO_KEY: SimTime = SimTime::MAX;
+
+/// Static device → cell geometry. Cells are contiguous, `span` wide;
+/// the last cell may be partial.
+#[derive(Debug, Clone)]
+pub struct CellMap {
+    n: usize,
+    span: usize,
+}
+
+impl CellMap {
+    /// Fleets at or below this size get a single cell under auto
+    /// sizing: descent overhead only pays for itself at scale.
+    pub const AUTO_SINGLE_CELL_MAX: usize = 512;
+
+    /// Resolve the configured `cell_size` (0 = auto) against the fleet
+    /// size: auto gives one cell for small fleets and ~√n-device cells
+    /// at scale, so cell count and cell span grow together.
+    pub fn resolve_span(cell_size: usize, n: usize) -> usize {
+        if cell_size > 0 {
+            return cell_size;
+        }
+        if n <= Self::AUTO_SINGLE_CELL_MAX {
+            n.max(1)
+        } else {
+            (n as f64).sqrt().ceil() as usize
+        }
+    }
+
+    pub fn new(cell_size: usize, n: usize) -> Self {
+        Self { n, span: Self::resolve_span(cell_size, n) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn span(&self) -> usize {
+        self.span
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.n.div_ceil(self.span).max(1)
+    }
+
+    pub fn cell_of(&self, device: usize) -> usize {
+        device / self.span
+    }
+
+    /// Device range of cell `c`, clipped to the fleet.
+    pub fn range(&self, c: usize) -> std::ops::Range<usize> {
+        let lo = c * self.span;
+        lo.min(self.n)..((c + 1) * self.span).min(self.n)
+    }
+
+    /// Extend coverage to include `device` (mid-run joins past the
+    /// initial fleet size).
+    pub fn ensure(&mut self, device: usize) {
+        if device >= self.n {
+            self.n = device + 1;
+        }
+    }
+}
+
+/// Per-cell aggregate state over one scheduler's fleet view. The owner
+/// reports membership (`set_active`), quiescence (`note_busy` /
+/// `note_idle`), and earliest-finish keys (`set_avail_key` /
+/// `clear_avail_key`); the aggregates answer cell-level questions in
+/// `O(1)` and candidate pulls in `O(log span)`.
+#[derive(Debug, Clone)]
+pub struct FleetCells {
+    map: CellMap,
+    /// Per cell: active member count.
+    active: Vec<u32>,
+    /// Per cell: active members currently idle (quiescent).
+    idle: Vec<u32>,
+    /// Per cell: active members, in device order.
+    members: Vec<BTreeSet<u32>>,
+    /// Per cell: busy members keyed by earliest-finish time.
+    avail: Vec<BTreeSet<(SimTime, u32)>>,
+    /// Per device: current availability key (NO_KEY = none).
+    key: Vec<SimTime>,
+    is_active: Vec<bool>,
+    is_idle: Vec<bool>,
+    total_active: usize,
+}
+
+impl FleetCells {
+    /// A fleet of `n` devices, all active and idle (the schedulers'
+    /// construction state).
+    pub fn new(cell_size: usize, n: usize) -> Self {
+        let map = CellMap::new(cell_size, n);
+        let cells = map.n_cells();
+        let mut members: Vec<BTreeSet<u32>> = vec![BTreeSet::new(); cells];
+        let mut active = vec![0u32; cells];
+        let mut idle = vec![0u32; cells];
+        for d in 0..n {
+            let c = map.cell_of(d);
+            members[c].insert(d as u32);
+            active[c] += 1;
+            idle[c] += 1;
+        }
+        Self {
+            map,
+            active,
+            idle,
+            members,
+            avail: vec![BTreeSet::new(); cells],
+            key: vec![NO_KEY; n],
+            is_active: vec![true; n],
+            is_idle: vec![true; n],
+            total_active: n,
+        }
+    }
+
+    pub fn map(&self) -> &CellMap {
+        &self.map
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.active.len()
+    }
+
+    fn grow_to(&mut self, device: usize) {
+        self.map.ensure(device);
+        let cells = self.map.n_cells();
+        self.active.resize(cells, 0);
+        self.idle.resize(cells, 0);
+        self.members.resize_with(cells, BTreeSet::new);
+        self.avail.resize_with(cells, BTreeSet::new);
+        self.key.resize(device + 1, NO_KEY);
+        self.is_active.resize(device + 1, false);
+        self.is_idle.resize(device + 1, false);
+    }
+
+    /// Report fleet membership. Joining resets the member to idle with
+    /// no availability key (schedulers rebuild state fresh on churn);
+    /// leaving removes it from every aggregate.
+    pub fn set_active(&mut self, device: usize, on: bool) {
+        if device >= self.is_active.len() {
+            self.grow_to(device);
+        }
+        if self.is_active[device] == on {
+            return;
+        }
+        let c = self.map.cell_of(device);
+        self.is_active[device] = on;
+        if on {
+            self.total_active += 1;
+            self.active[c] += 1;
+            self.members[c].insert(device as u32);
+            self.is_idle[device] = true;
+            self.idle[c] += 1;
+            debug_assert_eq!(self.key[device], NO_KEY);
+        } else {
+            self.total_active -= 1;
+            self.active[c] -= 1;
+            self.members[c].remove(&(device as u32));
+            if self.is_idle[device] {
+                self.idle[c] -= 1;
+            }
+            self.is_idle[device] = false;
+            self.clear_avail_key(device);
+        }
+    }
+
+    /// The member left its quiescent state (first write / first live
+    /// allocation). Idempotent.
+    pub fn note_busy(&mut self, device: usize) {
+        if device < self.is_idle.len() && self.is_idle[device] {
+            self.is_idle[device] = false;
+            if self.is_active[device] {
+                self.idle[self.map.cell_of(device)] -= 1;
+            }
+        }
+    }
+
+    /// The member returned to its quiescent state (reconstructed fresh /
+    /// last allocation gone). Idempotent; clears its availability key.
+    pub fn note_idle(&mut self, device: usize) {
+        if device < self.is_idle.len() && !self.is_idle[device] {
+            self.is_idle[device] = true;
+            if self.is_active[device] {
+                self.idle[self.map.cell_of(device)] += 1;
+            }
+        }
+        self.clear_avail_key(device);
+    }
+
+    /// (Re-)key `device` in its cell's availability index by its
+    /// earliest-finish time.
+    pub fn set_avail_key(&mut self, device: usize, end: SimTime) {
+        if device >= self.key.len() {
+            self.grow_to(device);
+        }
+        let c = self.map.cell_of(device);
+        let old = self.key[device];
+        if old == end {
+            return;
+        }
+        if old != NO_KEY {
+            self.avail[c].remove(&(old, device as u32));
+        }
+        // NO_KEY doubles as the sentinel: an explicit MAX key is
+        // indistinguishable from "none", which is fine — it could never
+        // win a top-k pull anyway.
+        if end != NO_KEY {
+            self.avail[c].insert((end, device as u32));
+        }
+        self.key[device] = end;
+    }
+
+    pub fn clear_avail_key(&mut self, device: usize) {
+        if device < self.key.len() && self.key[device] != NO_KEY {
+            let c = self.map.cell_of(device);
+            self.avail[c].remove(&(self.key[device], device as u32));
+            self.key[device] = NO_KEY;
+        }
+    }
+
+    pub fn cell_active(&self, c: usize) -> u32 {
+        self.active[c]
+    }
+
+    /// Active members across the whole fleet.
+    pub fn active_total(&self) -> usize {
+        self.total_active
+    }
+
+    /// Is this device an active fleet member?
+    pub fn device_active(&self, device: usize) -> bool {
+        device < self.is_active.len() && self.is_active[device]
+    }
+
+    /// Is this active member in its quiescent state? (Inactive devices
+    /// report `false`.)
+    pub fn device_idle(&self, device: usize) -> bool {
+        device < self.is_idle.len() && self.is_active[device] && self.is_idle[device]
+    }
+
+    /// Current availability key of `device`, if any.
+    pub fn avail_key(&self, device: usize) -> Option<SimTime> {
+        self.key.get(device).copied().filter(|&k| k != NO_KEY)
+    }
+
+    /// The `rank`-th active device (ascending id) excluding `skip`:
+    /// cell-prefix descent plus an in-cell walk, `O(cells + span)`
+    /// instead of an `O(n)` materialized remote list.
+    pub fn nth_active_excluding(&self, rank: usize, skip: usize) -> Option<usize> {
+        let mut rest = rank;
+        for c in 0..self.n_cells() {
+            let mut here = self.active[c] as usize;
+            let skip_here = self.device_active(skip) && self.map.cell_of(skip) == c;
+            if skip_here {
+                here -= 1;
+            }
+            if rest >= here {
+                rest -= here;
+                continue;
+            }
+            for d in self.members(c) {
+                if d == skip {
+                    continue;
+                }
+                if rest == 0 {
+                    return Some(d);
+                }
+                rest -= 1;
+            }
+        }
+        None
+    }
+
+    pub fn cell_idle(&self, c: usize) -> u32 {
+        self.idle[c]
+    }
+
+    /// Every active member of `c` is quiescent (and there is at least
+    /// one): the whole cell shares a single uniform placement answer.
+    pub fn all_idle(&self, c: usize) -> bool {
+        self.active[c] > 0 && self.idle[c] == self.active[c]
+    }
+
+    /// Active members of `c`, ascending by device id.
+    pub fn members(&self, c: usize) -> impl Iterator<Item = usize> + '_ {
+        self.members[c].iter().map(|&d| d as usize)
+    }
+
+    /// Lowest-id active member of `c` (the uniform fast path's winner
+    /// under first-wins tie-breaking).
+    pub fn first_member(&self, c: usize) -> Option<usize> {
+        self.members[c].first().map(|&d| d as usize)
+    }
+
+    /// Cell-level earliest-finish aggregate: the smallest availability
+    /// key among busy members (`None` when nothing is keyed).
+    pub fn earliest_end(&self, c: usize) -> Option<SimTime> {
+        self.avail[c].first().map(|&(t, _)| t)
+    }
+
+    /// Up to `k` busy members of `c` in earliest-finish order.
+    pub fn top_k(&self, c: usize, k: usize) -> impl Iterator<Item = (SimTime, usize)> + '_ {
+        self.avail[c].iter().take(k).map(|&(t, d)| (t, d as usize))
+    }
+
+    /// Fleet-wide top-k by earliest finish: a k-way merge over the
+    /// per-cell indexes that touches `O(k + cells)` entries, never the
+    /// whole fleet.
+    pub fn top_k_fleet(&self, k: usize) -> Vec<(SimTime, usize)> {
+        let mut heads: std::collections::BinaryHeap<std::cmp::Reverse<(SimTime, u32, usize)>> =
+            self.avail
+                .iter()
+                .enumerate()
+                .filter_map(|(c, set)| set.first().map(|&(t, d)| std::cmp::Reverse((t, d, c))))
+                .collect();
+        let mut out = Vec::with_capacity(k);
+        while out.len() < k {
+            let Some(std::cmp::Reverse((t, d, c))) = heads.pop() else { break };
+            out.push((t, d as usize));
+            if let Some(&(nt, nd)) = self.avail[c].range((t, d + 1)..).next() {
+                heads.push(std::cmp::Reverse((nt, nd, c)));
+            }
+        }
+        out
+    }
+}
+
+/// Sparse forward Fisher–Yates: the permutation prefix materializes on
+/// demand, one RNG draw per element consumed. Consuming all `m`
+/// elements reproduces the eager forward Fisher–Yates shuffle of
+/// `0..m` exactly — same draws, same order — so switching between the
+/// eager and lazy forms at a fixed cutover never changes decisions,
+/// only how much of the permutation gets paid for.
+#[derive(Debug)]
+pub struct LazyShuffle {
+    m: usize,
+    next: usize,
+    /// Sparse displaced-element map: position → value (identity where
+    /// absent). Only positions touched by a swap are stored.
+    swaps: HashMap<usize, usize>,
+}
+
+impl LazyShuffle {
+    pub fn new(m: usize) -> Self {
+        Self { m, next: 0, swaps: HashMap::new() }
+    }
+
+    fn slot(&self, k: usize) -> usize {
+        self.swaps.get(&k).copied().unwrap_or(k)
+    }
+
+    /// Elements already drawn.
+    pub fn drawn(&self) -> usize {
+        self.next
+    }
+
+    /// Draw the next element of the permutation (`None` once all `m`
+    /// are out). Exactly one `rng` draw per call.
+    #[allow(clippy::should_implement_trait)]
+    pub fn next(&mut self, rng: &mut Rng) -> Option<usize> {
+        if self.next >= self.m {
+            return None;
+        }
+        let i = self.next;
+        let j = i + rng.index(self.m - i);
+        let vi = self.slot(i);
+        let vj = self.slot(j);
+        self.swaps.insert(j, vi);
+        self.swaps.remove(&i);
+        self.next = i + 1;
+        Some(vj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_ranges_partition_the_fleet() {
+        for (cell_size, n) in [(0, 4), (0, 513), (0, 100_000), (3, 10), (7, 7), (16, 100)] {
+            let map = CellMap::new(cell_size, n);
+            let mut covered = 0usize;
+            for c in 0..map.n_cells() {
+                let r = map.range(c);
+                assert_eq!(r.start, covered, "ranges must be contiguous");
+                for d in r.clone() {
+                    assert_eq!(map.cell_of(d), c);
+                }
+                covered = r.end;
+            }
+            assert_eq!(covered, n, "ranges must cover the fleet exactly");
+        }
+    }
+
+    #[test]
+    fn auto_sizing_is_single_cell_small_and_sqrt_at_scale() {
+        assert_eq!(CellMap::new(0, 4).n_cells(), 1);
+        assert_eq!(CellMap::new(0, 512).n_cells(), 1);
+        let big = CellMap::new(0, 100_000);
+        assert!(big.span() >= 300 && big.span() <= 340, "span {}", big.span());
+        assert!(big.n_cells() >= 290 && big.n_cells() <= 340, "cells {}", big.n_cells());
+    }
+
+    #[test]
+    fn aggregates_track_membership_and_quiescence() {
+        let mut f = FleetCells::new(4, 10);
+        assert_eq!(f.n_cells(), 3);
+        assert!(f.all_idle(0) && f.all_idle(1) && f.all_idle(2));
+        assert_eq!(f.first_member(1), Some(4));
+        f.note_busy(5);
+        assert!(!f.all_idle(1));
+        assert_eq!((f.cell_active(1), f.cell_idle(1)), (4, 3));
+        f.note_busy(5); // idempotent
+        assert_eq!(f.cell_idle(1), 3);
+        f.note_idle(5);
+        assert!(f.all_idle(1));
+        // Leaving shrinks; a cell of leavers goes quiet entirely.
+        f.set_active(8, false);
+        f.set_active(9, false);
+        assert_eq!(f.cell_active(2), 0);
+        assert!(!f.all_idle(2), "an empty cell is not 'all idle'");
+        assert_eq!(f.members(2).count(), 0);
+        // Rejoin resets to idle.
+        f.note_busy(8); // no-op while inactive
+        f.set_active(8, true);
+        assert!(f.all_idle(2));
+        assert_eq!(f.first_member(2), Some(8));
+    }
+
+    #[test]
+    fn rank_select_matches_a_materialized_remote_list() {
+        let mut f = FleetCells::new(3, 11);
+        for d in [2usize, 5, 6, 10] {
+            f.set_active(d, false);
+        }
+        assert_eq!(f.active_total(), 7);
+        for skip in 0..11usize {
+            let remotes: Vec<usize> =
+                (0..11).filter(|&d| d != skip && f.device_active(d)).collect();
+            for (r, &want) in remotes.iter().enumerate() {
+                assert_eq!(f.nth_active_excluding(r, skip), Some(want), "rank {r} skip {skip}");
+            }
+            assert_eq!(f.nth_active_excluding(remotes.len(), skip), None);
+        }
+    }
+
+    #[test]
+    fn availability_index_orders_and_aggregates() {
+        let mut f = FleetCells::new(4, 12);
+        for (d, end) in [(0usize, 500u64), (1, 300), (2, 300), (5, 100), (9, 900)] {
+            f.note_busy(d);
+            f.set_avail_key(d, end);
+        }
+        assert_eq!(f.earliest_end(0), Some(300));
+        assert_eq!(f.earliest_end(1), Some(100));
+        assert_eq!(f.earliest_end(2), Some(900));
+        // Ties break by device id; pulls come out sorted.
+        let cell0: Vec<_> = f.top_k(0, 10).collect();
+        assert_eq!(cell0, vec![(300, 1), (300, 2), (500, 0)]);
+        let fleet = f.top_k_fleet(4);
+        assert_eq!(fleet, vec![(100, 5), (300, 1), (300, 2), (500, 0)]);
+        // Re-keying moves, clearing removes, leaving clears.
+        f.set_avail_key(1, 50);
+        assert_eq!(f.earliest_end(0), Some(50));
+        f.clear_avail_key(1);
+        assert_eq!(f.earliest_end(0), Some(300));
+        f.set_active(5, false);
+        assert_eq!(f.earliest_end(1), None);
+        assert_eq!(f.top_k_fleet(10).len(), 3);
+    }
+
+    /// The lazy shuffle must reproduce the eager forward Fisher–Yates
+    /// permutation *exactly* — same RNG draws, same order — when fully
+    /// consumed, for many sizes and seeds. This is what lets the RAS
+    /// candidate scatter switch between eager and lazy at a count
+    /// cutover without changing a single decision.
+    #[test]
+    fn lazy_shuffle_equals_eager_forward_fisher_yates() {
+        for m in [1usize, 2, 3, 7, 64, 257] {
+            for seed in 0..5u64 {
+                let mut r1 = Rng::seed_from_u64(0xF1_5e ^ seed);
+                let mut r2 = Rng::seed_from_u64(0xF1_5e ^ seed);
+                let mut eager: Vec<usize> = (0..m).collect();
+                for i in 0..m {
+                    let j = i + r1.index(m - i);
+                    eager.swap(i, j);
+                }
+                let mut lazy = LazyShuffle::new(m);
+                let got: Vec<usize> = (0..m).map(|_| lazy.next(&mut r2).unwrap()).collect();
+                assert_eq!(got, eager, "m={m} seed={seed}");
+                assert!(lazy.next(&mut r2).is_none());
+                // Both consumed the same number of draws: the streams
+                // agree on the next value.
+                assert_eq!(r1.next_u64(), r2.next_u64());
+            }
+        }
+    }
+
+    #[test]
+    fn lazy_shuffle_prefix_is_a_valid_partial_permutation() {
+        let mut rng = Rng::seed_from_u64(77);
+        let m = 10_000;
+        let mut s = LazyShuffle::new(m);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..100 {
+            let v = s.next(&mut rng).unwrap();
+            assert!(v < m);
+            assert!(seen.insert(v), "duplicate {v} in permutation prefix");
+        }
+        assert_eq!(s.drawn(), 100);
+        // The sparse map holds at most one entry per consumed element.
+        assert!(s.swaps.len() <= 100);
+    }
+}

@@ -9,12 +9,16 @@
 //! * [`ras`] — the resource-availability abstraction (Section IV-A1);
 //! * [`netlink`] — the discretised network link (Section IV-A2);
 //! * [`bandwidth`] — the EWMA dynamic bandwidth estimator (Section V);
+//! * [`fleet`] — the sharded fleet hierarchy (cells, per-cell
+//!   availability aggregates, top-k candidate index, lazy shuffle) that
+//!   lets placement descend cell → device instead of scanning the fleet;
 //! * [`scheduler`] — the RAS scheduler, the WPS baseline, and the
 //!   future-work contextual multi-scheduler;
 //! * [`cost`] — scheduler-latency accounting for the simulator.
 
 pub mod bandwidth;
 pub mod cost;
+pub mod fleet;
 pub mod netlink;
 pub mod ras;
 pub mod scheduler;

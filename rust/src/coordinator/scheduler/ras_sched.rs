@@ -7,10 +7,11 @@ use super::{
     Outcome, SchedEvent, Scheduler, WorkloadState,
 };
 use crate::config::SystemConfig;
+use crate::coordinator::fleet::{FleetCells, LazyShuffle};
 use crate::coordinator::netlink::{CommTask, DiscretisedLink};
 use crate::coordinator::ras::{DeviceAvailability, WindowRef};
 use crate::coordinator::task::{Allocation, DeviceId, Task, TaskConfig, TaskId};
-use crate::time::SimTime;
+use crate::time::{SimDuration, SimTime};
 use crate::util::Rng;
 
 /// The resource-availability abstraction scheduler.
@@ -20,11 +21,31 @@ pub struct RasScheduler {
     /// Fleet membership (scenario churn): inactive devices are skipped by
     /// every placement loop and hold no availability.
     active: Vec<bool>,
+    /// Sharded fleet hierarchy: per-cell active/quiescent counts and the
+    /// earliest-finish candidate index. Placement descends cell → device
+    /// through this instead of scanning every slot; devices whose lists
+    /// were never written are answered closed-form without being touched.
+    cells: FleetCells,
+    /// Reference time of the most recent placement scan. The flat scan
+    /// advances *every* active device to the scan time; the sharded scan
+    /// leaves never-written devices untouched, so any later write to one
+    /// of them first catches it up to this point (a no-op for devices
+    /// the scan did visit) — reproducing the flat state exactly.
+    last_scan: SimTime,
     link: DiscretisedLink,
     state: WorkloadState,
     /// Current bandwidth estimate (bits/s) — updated by probe rounds.
     bps: f64,
-    rng: Rng,
+    /// Guest-scatter stream base (derived from the config seed).
+    scatter_seed: u64,
+    /// Placement decisions that drew a scatter permutation so far. Each
+    /// decision derives a fresh stream from `(scatter_seed, counter)`:
+    /// the eager regime consumes the whole permutation's draws while
+    /// the lazy regime stops at the candidates it actually used, and a
+    /// per-decision stream keeps that draw-count difference from ever
+    /// leaking into the next decision's permutation — the two regimes
+    /// stay decision-identical across a whole run.
+    scatter_decisions: u64,
     /// Cumulative link rebuilds (Fig. 6/7 diagnostics).
     pub link_rebuilds: u64,
     /// Items dropped during cascades.
@@ -47,10 +68,13 @@ impl RasScheduler {
         Self {
             devices: (0..cfg.n_devices).map(|_| DeviceAvailability::new(cfg, now)).collect(),
             active: vec![true; cfg.n_devices],
+            cells: FleetCells::new(cfg.cell_size, cfg.n_devices),
+            last_scan: now,
             link: DiscretisedLink::build(now, unit, cfg.base_buckets, cfg.exp_buckets),
             state: WorkloadState::new(cfg.n_devices),
             bps: baseline_bps,
-            rng: Rng::seed_from_u64(cfg.seed ^ 0x5241_53), // "RAS"
+            scatter_seed: cfg.seed ^ 0x5241_53, // "RAS"
+            scatter_decisions: 0,
             link_rebuilds: 0,
             cascade_dropped: 0,
             reject_reasons: [0; 4],
@@ -61,6 +85,17 @@ impl RasScheduler {
 
     fn device_active(&self, d: DeviceId) -> bool {
         d < self.devices.len() && self.active[d]
+    }
+
+    /// Fresh scatter stream for one placement decision. Seeded from the
+    /// scheduler seed and a decision counter (golden-ratio mixed), so
+    /// the stream depends only on *which* decision this is — never on
+    /// how many draws earlier decisions consumed.
+    fn scatter_rng(&mut self) -> Rng {
+        self.scatter_decisions += 1;
+        Rng::seed_from_u64(
+            self.scatter_seed ^ self.scatter_decisions.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        )
     }
 
     /// Viable low-priority configurations in preference order
@@ -116,7 +151,19 @@ impl RasScheduler {
             comm,
         };
         self.state.insert(alloc);
+        self.cells.note_busy(device);
+        let key = self.cells.avail_key(device).map_or(end, |k| k.max(end));
+        self.cells.set_avail_key(device, key);
         (alloc, ops)
+    }
+
+    /// Re-derive a device's earliest-finish index key from its live
+    /// allocations (after a completion, violation, or eviction).
+    fn refresh_avail_key(&mut self, device: DeviceId) {
+        match self.state.device_allocs(device).map(|a| a.end).max() {
+            Some(end) => self.cells.set_avail_key(device, end),
+            None => self.cells.clear_avail_key(device),
+        }
     }
 
     /// Roll a failed batch back: drop the already-committed allocations and
@@ -142,6 +189,15 @@ impl RasScheduler {
         let allocs: Vec<Allocation> = self.state.device_allocs(device).copied().collect();
         let n = allocs.len() as Ops;
         self.devices[device].reconstruct(&self.cfg, now, allocs.iter());
+        if allocs.is_empty() {
+            // Rebuilt with no residents: indistinguishable from a fresh
+            // construct, so the closed-form placement path applies again.
+            self.cells.note_idle(device);
+        } else {
+            self.cells.note_busy(device);
+            let end = allocs.iter().map(|a| a.end).max().unwrap();
+            self.cells.set_avail_key(device, end);
+        }
         // Cost: one fresh list set + one cross-list write per live task.
         n * 7 + 7
     }
@@ -151,8 +207,14 @@ impl RasScheduler {
     /// the device's availability lists and the exact state, without going
     /// through this scheduler's own placement logic.
     pub fn mirror_external(&mut self, a: &Allocation) {
+        // Catch a scan-skipped (never-written) device up to the flat
+        // scan's reference time before the first write lands on it.
+        self.devices[a.device].advance(self.last_scan);
         self.devices[a.device].write_all(a.start, a.end, a.cores);
         self.state.insert(*a);
+        self.cells.note_busy(a.device);
+        let key = self.cells.avail_key(a.device).map_or(a.end, |k| k.max(a.end));
+        self.cells.set_avail_key(a.device, key);
     }
 
     /// Expose internals for white-box tests/benches.
@@ -214,71 +276,40 @@ impl RasScheduler {
         // error that is inherent to the abstraction (the accuracy the
         // model trades for performance), not corrected here; the exact
         // WPS baseline sizes its windows per task.
-        // Step 3: multi-fit query of the placement window [now, deadline)
-        // across every device: the earliest slot per track that can host
-        // the configuration's processing time (every window in a list is
-        // at least that long by construction, so the first window starting
-        // early enough is guaranteed to fit — same early-exit speed as
-        // pure containment, but tracks that free up part-way through the
-        // placement window are still usable, which reallocation of
-        // preempted tasks depends on). Remote candidates must leave room
-        // for one unit transfer before processing starts.
+        // Steps 3 and 4 come in two regimes that make identical
+        // decisions. Small remote pools take the historical shape (full
+        // scan, eager shuffle) over a per-decision scatter stream. Past
+        // the cutover, placement descends the cell hierarchy instead:
+        // closed-form window counts for never-written cells, per-device
+        // queries only for devices that are actually inspected, and a
+        // lazily-materialized shuffle — the same permutation, with RNG
+        // cost proportional to candidates consumed. The regime is
+        // chosen by *remote candidate count alone* — never by cell layout
+        // — so decisions are independent of `cell_size` at every scale,
+        // and the per-decision stream keeps the regimes' different draw
+        // counts from ever diverging their later permutations.
         let unit = self.cfg.transfer_unit(self.bps);
-        let mut windows: Vec<(DeviceId, WindowRef, SimTime)> = Vec::new();
-        for d in 0..self.devices.len() {
-            if !self.active[d] {
-                continue;
-            }
-            self.devices[d].advance(now);
-            let earliest = if d == source { now } else { now + unit };
-            let list = self.devices[d].list(config);
-            *ops += list.track_count() as Ops;
-            for (r, start) in list.query_all_fits(earliest, deadline, proc) {
-                windows.push((d, r, start));
-            }
-        }
-        if windows.len() < tasks.len() {
+        self.last_scan = now;
+        let picks = if self.cells.active_total().saturating_sub(1) <= self.cfg.lazy_shuffle_cutover
+        {
+            self.pick_windows_eager(now, tasks.len(), deadline, config, proc, source, unit, ops)
+        } else {
+            self.pick_windows_lazy(now, tasks.len(), deadline, config, proc, source, unit, ops)
+        };
+        let Some(picks) = picks else {
             self.reject_reasons[2] += 1;
             return None;
-        }
-
-        // Step 4: prioritise source-device windows, then shuffle the remote
-        // devices and round-robin one window at a time (load balancing).
-        let mut source_windows: Vec<(DeviceId, WindowRef, SimTime)> =
-            windows.iter().copied().filter(|(d, ..)| *d == source).collect();
-        let mut remote_devices: Vec<DeviceId> =
-            (0..self.devices.len()).filter(|&d| d != source && self.active[d]).collect();
-        self.rng.shuffle(&mut remote_devices);
-        let mut remote_per_dev: Vec<Vec<(DeviceId, WindowRef, SimTime)>> = remote_devices
-            .iter()
-            .map(|&d| windows.iter().copied().filter(|(w, ..)| *w == d).collect())
-            .collect();
-        let mut picks: Vec<(DeviceId, WindowRef, SimTime)> = Vec::with_capacity(tasks.len());
-        while picks.len() < tasks.len() {
-            if let Some(w) = source_windows.pop() {
-                picks.push(w);
-                continue;
-            }
-            let mut advanced = false;
-            for dev_windows in remote_per_dev.iter_mut() {
-                if picks.len() == tasks.len() {
-                    break;
-                }
-                if let Some(w) = dev_windows.pop() {
-                    picks.push(w);
-                    advanced = true;
-                }
-            }
-            if picks.len() < tasks.len() && !advanced {
-                self.reject_reasons[2] += 1;
-                return None;
-            }
-        }
+        };
 
         // Step 5: commit task-by-task; offloads reserve a link slot that
         // must complete before the processing slot opens.
         let mut committed: Vec<Allocation> = Vec::with_capacity(tasks.len());
         for (&task, (device, r, fit_start)) in tasks.iter().zip(picks) {
+            // Bring the device's lists to the scan's reference time before
+            // touching them — a no-op for every device the scan visited,
+            // and the flat-equivalent catch-up for devices the closed-form
+            // fresh path answered without touching.
+            self.devices[device].advance(now);
             let (start, comm) = if device == task.source {
                 (fit_start, None)
             } else {
@@ -317,6 +348,241 @@ impl RasScheduler {
             committed.push(alloc);
         }
         Some(committed)
+    }
+
+    /// Steps 3–4, historical form: multi-fit query of the placement window
+    /// [now, deadline) across every device — the earliest slot per track
+    /// that can host the configuration's processing time (every window in
+    /// a list is at least that long by construction, so the first window
+    /// starting early enough is guaranteed to fit — same early-exit speed
+    /// as pure containment, but tracks that free up part-way through the
+    /// placement window are still usable, which reallocation of preempted
+    /// tasks depends on). Remote candidates must leave room for one unit
+    /// transfer before processing starts. Then prioritise source-device
+    /// windows, shuffle the remote devices eagerly, and round-robin one
+    /// window at a time (load balancing). `None` = not enough windows.
+    #[allow(clippy::too_many_arguments)]
+    fn pick_windows_eager(
+        &mut self,
+        now: SimTime,
+        need: usize,
+        deadline: SimTime,
+        config: TaskConfig,
+        proc: SimDuration,
+        source: DeviceId,
+        unit: SimDuration,
+        ops: &mut Ops,
+    ) -> Option<Vec<(DeviceId, WindowRef, SimTime)>> {
+        let mut windows: Vec<(DeviceId, WindowRef, SimTime)> = Vec::new();
+        for d in 0..self.devices.len() {
+            if !self.active[d] {
+                continue;
+            }
+            self.devices[d].advance(now);
+            let earliest = if d == source { now } else { now + unit };
+            let list = self.devices[d].list(config);
+            *ops += list.track_count() as Ops;
+            for (r, start) in list.query_all_fits(earliest, deadline, proc) {
+                windows.push((d, r, start));
+            }
+        }
+        if windows.len() < need {
+            return None;
+        }
+        let mut source_windows: Vec<(DeviceId, WindowRef, SimTime)> =
+            windows.iter().copied().filter(|(d, ..)| *d == source).collect();
+        let mut remote_devices: Vec<DeviceId> =
+            (0..self.devices.len()).filter(|&d| d != source && self.active[d]).collect();
+        // Forward Fisher–Yates over the decision's scatter stream: the
+        // fully-consumed form of the lazy regime's [`LazyShuffle`], so
+        // both regimes enumerate remote candidates in the same order.
+        let mut rng = self.scatter_rng();
+        for i in 0..remote_devices.len() {
+            let j = i + rng.index(remote_devices.len() - i);
+            remote_devices.swap(i, j);
+        }
+        let mut remote_per_dev: Vec<Vec<(DeviceId, WindowRef, SimTime)>> = remote_devices
+            .iter()
+            .map(|&d| windows.iter().copied().filter(|(w, ..)| *w == d).collect())
+            .collect();
+        let mut picks: Vec<(DeviceId, WindowRef, SimTime)> = Vec::with_capacity(need);
+        while picks.len() < need {
+            if let Some(w) = source_windows.pop() {
+                picks.push(w);
+                continue;
+            }
+            let mut advanced = false;
+            for dev_windows in remote_per_dev.iter_mut() {
+                if picks.len() == need {
+                    break;
+                }
+                if let Some(w) = dev_windows.pop() {
+                    picks.push(w);
+                    advanced = true;
+                }
+            }
+            if picks.len() < need && !advanced {
+                return None;
+            }
+        }
+        Some(picks)
+    }
+
+    /// Steps 3–4, sharded form (remote pools past the shuffle cutover):
+    /// the window census descends cells — never-written cells contribute
+    /// `active × tracks` windows in O(1) via the closed-form fresh-list
+    /// answer, written members get the exact advance + multi-fit query —
+    /// and early-exits at the batch size (the census only feeds the
+    /// enough-windows verdict). Candidate devices then materialize out of
+    /// a lazy Fisher–Yates permutation one draw per device consumed,
+    /// querying windows on demand. The virtual cost charged is identical
+    /// to the flat scan's (one multi-fit query per active device): the
+    /// hierarchy prunes real work, not modelled work.
+    #[allow(clippy::too_many_arguments)]
+    fn pick_windows_lazy(
+        &mut self,
+        now: SimTime,
+        need: usize,
+        deadline: SimTime,
+        config: TaskConfig,
+        proc: SimDuration,
+        source: DeviceId,
+        unit: SimDuration,
+        ops: &mut Ops,
+    ) -> Option<Vec<(DeviceId, WindowRef, SimTime)>> {
+        let tracks = self.devices[source].list(config).track_count();
+        *ops += self.cells.active_total() as Ops * tracks as Ops;
+
+        // Source first: exact, and advanced on every scan — the next
+        // decision's link-pressure fallback query reads this state.
+        self.devices[source].advance(now);
+        let mut source_windows: Vec<(DeviceId, WindowRef, SimTime)> = self.devices[source]
+            .list(config)
+            .query_all_fits(now, deadline, proc)
+            .into_iter()
+            .map(|(r, s)| (source, r, s))
+            .collect();
+
+        let fresh_fits = if now + unit + proc <= deadline { tracks } else { 0 };
+        let mut count = source_windows.len();
+        'census: for c in 0..self.cells.n_cells() {
+            if count >= need {
+                break;
+            }
+            if self.cells.cell_active(c) == 0 {
+                continue;
+            }
+            if self.cells.all_idle(c) && self.cells.map().cell_of(source) != c {
+                count += self.cells.cell_active(c) as usize * fresh_fits;
+                continue;
+            }
+            for d in self.cells.members(c).collect::<Vec<_>>() {
+                if d == source {
+                    continue;
+                }
+                count += self.count_fits(d, now, unit, deadline, proc, config, fresh_fits);
+                if count >= need {
+                    break 'census;
+                }
+            }
+        }
+        if count < need {
+            return None;
+        }
+
+        let mut picks: Vec<(DeviceId, WindowRef, SimTime)> = Vec::with_capacity(need);
+        while picks.len() < need {
+            let Some(w) = source_windows.pop() else { break };
+            picks.push(w);
+        }
+        // First round: draw remote devices out of the lazy permutation
+        // until the batch is placed (or every remote has been seen once).
+        // The stream is the same one the eager regime's forward shuffle
+        // consumes, so the consumed prefix — and therefore every pick —
+        // is identical in both regimes.
+        let mut shuffle = LazyShuffle::new(self.cells.active_total() - 1);
+        let mut rng = self.scatter_rng();
+        let mut alive: Vec<Vec<(DeviceId, WindowRef, SimTime)>> = Vec::new();
+        while picks.len() < need {
+            let Some(rank) = shuffle.next(&mut rng) else { break };
+            let d = self.cells.nth_active_excluding(rank, source).expect("rank < remote count");
+            let mut ws = self.windows_for(d, now, unit, deadline, proc, config);
+            if let Some(w) = ws.pop() {
+                picks.push(w);
+            }
+            if !ws.is_empty() {
+                alive.push(ws);
+            }
+        }
+        // Later rounds: only devices with windows left can contribute.
+        while picks.len() < need {
+            let mut advanced = false;
+            alive.retain_mut(|ws| {
+                if picks.len() < need {
+                    if let Some(w) = ws.pop() {
+                        picks.push(w);
+                        advanced = true;
+                    }
+                }
+                !ws.is_empty()
+            });
+            if picks.len() < need && !advanced {
+                return None;
+            }
+        }
+        Some(picks)
+    }
+
+    /// Multi-fit windows for one remote device: closed-form for a
+    /// never-written device (each track is a single `[construction, ∞)`
+    /// window, so every track fits at the earliest remote start — without
+    /// touching the device), exact advance + query otherwise.
+    fn windows_for(
+        &mut self,
+        d: DeviceId,
+        now: SimTime,
+        unit: SimDuration,
+        deadline: SimTime,
+        proc: SimDuration,
+        config: TaskConfig,
+    ) -> Vec<(DeviceId, WindowRef, SimTime)> {
+        let earliest = now + unit;
+        if self.cells.device_idle(d) {
+            let k = self.devices[d].list(config).track_count();
+            if earliest + proc <= deadline {
+                (0..k).map(|t| (d, WindowRef { track: t, index: 0 }, earliest)).collect()
+            } else {
+                Vec::new()
+            }
+        } else {
+            self.devices[d].advance(now);
+            self.devices[d]
+                .list(config)
+                .query_all_fits(earliest, deadline, proc)
+                .into_iter()
+                .map(|(r, s)| (d, r, s))
+                .collect()
+        }
+    }
+
+    /// Window count for one remote device (census only — refs discarded).
+    #[allow(clippy::too_many_arguments)]
+    fn count_fits(
+        &mut self,
+        d: DeviceId,
+        now: SimTime,
+        unit: SimDuration,
+        deadline: SimTime,
+        proc: SimDuration,
+        config: TaskConfig,
+        fresh_fits: usize,
+    ) -> usize {
+        if self.cells.device_idle(d) {
+            fresh_fits
+        } else {
+            self.devices[d].advance(now);
+            self.devices[d].list(config).query_all_fits(now + unit, deadline, proc).len()
+        }
     }
 }
 
@@ -404,9 +670,14 @@ impl RasScheduler {
     /// Task finished (free its resources from the scheduler's state).
     pub fn on_complete(&mut self, _now: SimTime, task: TaskId) {
         // Windows are not re-inserted (their true capacity is unknown) —
-        // completion only clears the exact-state bookkeeping.
-        self.state.remove(task);
+        // completion only clears the exact-state bookkeeping. The device
+        // stays off the closed-form path (its lists were written), but
+        // its earliest-finish index key shrinks with the departing task.
+        let removed = self.state.remove(task);
         self.link.remove_task(task);
+        if let Some(a) = removed {
+            self.refresh_avail_key(a.device);
+        }
     }
 
     /// Task missed its deadline and was abandoned.
@@ -417,6 +688,8 @@ impl RasScheduler {
             // remains: same reconstruction path as preemption.
             if a.end > now + self.cfg.hp_proc() {
                 self.reconstruct_device(a.device, now);
+            } else {
+                self.refresh_avail_key(a.device);
             }
         }
     }
@@ -446,6 +719,7 @@ impl RasScheduler {
         if !self.active[device] {
             self.active[device] = true;
             self.devices[device] = DeviceAvailability::new(&self.cfg, now);
+            self.cells.set_active(device, true);
         }
         // One fresh list per configuration.
         self.devices[device].lists.len() as Ops
@@ -458,6 +732,7 @@ impl RasScheduler {
             return (Vec::new(), 1);
         }
         self.active[device] = false;
+        self.cells.set_active(device, false);
         let evicted = self.state.evict_device(device);
         let mut ops: Ops = 1;
         for a in &evicted {

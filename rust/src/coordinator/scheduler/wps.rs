@@ -26,6 +26,7 @@ use super::{
 };
 use crate::config::SystemConfig;
 use crate::coordinator::cost::ENERGY_SCORE_OPS;
+use crate::coordinator::fleet::FleetCells;
 use crate::coordinator::task::{Allocation, DeviceId, Task, TaskConfig, TaskId};
 use crate::energy::EnergyModel;
 use crate::time::{SimDuration, SimTime};
@@ -59,6 +60,12 @@ pub struct WpsScheduler {
     /// Fleet membership (scenario churn): inactive devices are skipped by
     /// the exhaustive search.
     active: Vec<bool>,
+    /// Sharded fleet hierarchy. For WPS "idle" means *zero live
+    /// allocations*: every idle remote device produces the same candidate
+    /// start, the same operation count, and (under the latency score) the
+    /// same score, so a whole idle cell collapses to one representative
+    /// evaluation — with the flat scan's full cost still charged.
+    cells: FleetCells,
     /// Reserved communication windows, kept sorted by start.
     comms: Vec<CommWindow>,
     /// Static bandwidth estimate (bits/s) fixed at startup.
@@ -80,6 +87,7 @@ impl WpsScheduler {
             cfg: cfg.clone(),
             state: WorkloadState::new(cfg.n_devices),
             active: vec![true; cfg.n_devices],
+            cells: FleetCells::new(cfg.cell_size, cfg.n_devices),
             comms: Vec::new(),
             bps: baseline_bps,
             cloud: CloudPlan::from_config(cfg),
@@ -241,6 +249,29 @@ impl WpsScheduler {
         }
     }
 
+    /// Cell bookkeeping after an allocation lands on `device`: the device
+    /// leaves the idle (uniform-answer) pool and its earliest-finish index
+    /// key grows to cover the new allocation.
+    fn note_insert(&mut self, a: &Allocation) {
+        if a.device < self.active.len() {
+            self.cells.note_busy(a.device);
+            let key = self.cells.avail_key(a.device).map_or(a.end, |k| k.max(a.end));
+            self.cells.set_avail_key(a.device, key);
+        }
+    }
+
+    /// Cell bookkeeping after an allocation left `device`: back to the
+    /// idle pool when nothing remains, re-keyed otherwise.
+    fn note_removed(&mut self, device: DeviceId) {
+        if device >= self.active.len() {
+            return;
+        }
+        match self.state.device_allocs(device).map(|a| a.end).max() {
+            Some(end) => self.cells.set_avail_key(device, end),
+            None => self.cells.note_idle(device),
+        }
+    }
+
     /// Record an allocation decided by another scheduler (used by the
     /// contextual multi-scheduler ablation).
     pub fn mirror_external(&mut self, a: &Allocation) {
@@ -248,6 +279,7 @@ impl WpsScheduler {
             self.reserve_comm(a.task, c1, c2);
         }
         self.state.insert(*a);
+        self.note_insert(a);
     }
 
     /// Expose comm reservations for white-box tests.
@@ -284,6 +316,7 @@ impl WpsScheduler {
                 comm: None,
             };
             self.state.insert(alloc);
+            self.note_insert(&alloc);
             return HpOutcome::Allocated { alloc, ops };
         }
         // Preemption at the desired window [now, now + dur): evict the
@@ -298,6 +331,7 @@ impl WpsScheduler {
             let Some(victim) = victim else { break };
             let victim_alloc = self.state.remove(victim).expect("victim tracked");
             self.release_comm(victim);
+            self.note_removed(dev);
             victims.push(victim_alloc);
             // Preemption-aware consistency pass (the prior-work system's
             // defining feature): after an eviction, re-validate that every
@@ -328,12 +362,26 @@ impl WpsScheduler {
                 victims.last().unwrap().end - victims.last().unwrap().start,
                 victims.last().unwrap().cores,
             );
-            for device in 0..self.active.len() {
-                if !self.active[device] {
+            // The relocation search's *result* is discarded — only its
+            // exact cost is charged — so idle cells collapse to one
+            // representative probe whose cost every member repeats.
+            for c in 0..self.cells.n_cells() {
+                let members = self.cells.cell_active(c);
+                if members == 0 {
                     continue;
                 }
-                let _ = self.earliest_start(device, now, v_deadline.max(now + v_dur), v_dur, v_cores, &mut ops);
-                ops += self.comms.len() as Ops; // transfer-slot rescan per device
+                if self.cells.all_idle(c) {
+                    let rep = self.cells.first_member(c).expect("active cell");
+                    let mut rep_ops: Ops = 0;
+                    let _ = self.earliest_start(rep, now, v_deadline.max(now + v_dur), v_dur, v_cores, &mut rep_ops);
+                    rep_ops += self.comms.len() as Ops; // transfer-slot rescan per device
+                    ops += rep_ops * members as Ops;
+                    continue;
+                }
+                for device in self.cells.members(c).collect::<Vec<_>>() {
+                    let _ = self.earliest_start(device, now, v_deadline.max(now + v_dur), v_dur, v_cores, &mut ops);
+                    ops += self.comms.len() as Ops; // transfer-slot rescan per device
+                }
             }
             if let Some(s) = self.earliest_start(dev, now, task.deadline, dur, cores, &mut ops) {
                 let alloc = Allocation {
@@ -349,6 +397,7 @@ impl WpsScheduler {
                     comm: None,
                 };
                 self.state.insert(alloc);
+                self.note_insert(&alloc);
                 return HpOutcome::Preempted { alloc, victims, ops };
             }
         }
@@ -373,7 +422,12 @@ impl WpsScheduler {
             // the best-scoring placement. Configurations are tried in the
             // system's conservative order (Section IV-B2): two cores
             // first, four only if no two-core placement meets the
-            // deadline anywhere.
+            // deadline anywhere. The scan descends the cell hierarchy:
+            // under the latency score, every idle remote device produces
+            // the same candidate start, cost, and score, and the `<=`
+            // tie-break keeps the first — so an all-idle remote cell
+            // collapses to one representative evaluation, with every
+            // member's flat-scan cost still charged.
             let mut best: Option<(Allocation, f64)> = None;
             for config in [TaskConfig::LowTwoCore, TaskConfig::LowFourCore] {
                 if best.is_some() {
@@ -384,38 +438,35 @@ impl WpsScheduler {
                 // paper's benchmark times — identical arithmetic).
                 let dur = task.proc_for(config);
                 let cores = config.cores(&self.cfg);
-                for device in 0..self.active.len() {
-                    if !self.active[device] {
+                for c in 0..self.cells.n_cells() {
+                    let members = self.cells.cell_active(c);
+                    if members == 0 {
                         continue;
                     }
-                    let local = device == task.source;
-                    let (from, comm) = if local {
-                        (now, None)
-                    } else {
-                        // Transfer must complete before processing starts.
-                        let t = self.transfer_time_for(task);
-                        match self.earliest_comm(now, task.deadline.saturating_sub(dur), t, &mut ops) {
-                            Some((c1, c2)) => (c2, Some((c1, c2))),
-                            None => continue,
+                    let uniform = matches!(self.mode, ScoreMode::Latency)
+                        && self.cells.all_idle(c)
+                        && self.cells.map().cell_of(task.source) != c;
+                    if uniform {
+                        let rep = self.cells.first_member(c).expect("active cell");
+                        let mut rep_ops: Ops = 0;
+                        let cand = self.try_place(task, rep, config, dur, cores, now, &mut rep_ops);
+                        ops += rep_ops * members as Ops;
+                        if let Some((alloc, sc)) = cand {
+                            match &best {
+                                Some((_, b)) if *b <= sc => {}
+                                _ => best = Some((alloc, sc)),
+                            }
                         }
-                    };
-                    if let Some(s) = self.earliest_start(device, from, task.deadline, dur, cores, &mut ops) {
-                        let alloc = Allocation {
-                            task: task.id,
-                            frame: task.frame,
-                            device,
-                            config,
-                            cores,
-                            start: s,
-                            end: s + dur,
-                            deadline: task.deadline,
-                            offloaded: !local,
-                            comm,
-                        };
-                        let sc = self.score_placement(task, &alloc, local, &mut ops);
-                        match &best {
-                            Some((_, b)) if *b <= sc => {}
-                            _ => best = Some((alloc, sc)),
+                        continue;
+                    }
+                    for device in self.cells.members(c).collect::<Vec<_>>() {
+                        if let Some((alloc, sc)) =
+                            self.try_place(task, device, config, dur, cores, now, &mut ops)
+                        {
+                            match &best {
+                                Some((_, b)) if *b <= sc => {}
+                                _ => best = Some((alloc, sc)),
+                            }
                         }
                     }
                 }
@@ -426,6 +477,7 @@ impl WpsScheduler {
                         self.reserve_comm(alloc.task, c1, c2);
                     }
                     self.state.insert(alloc);
+                    self.note_insert(&alloc);
                     committed.push(alloc);
                 }
                 None => {
@@ -435,6 +487,10 @@ impl WpsScheduler {
                         self.release_comm(a.task);
                         ops += 1;
                     }
+                    let devices: Vec<DeviceId> = committed.iter().map(|a| a.device).collect();
+                    for d in devices {
+                        self.note_removed(d);
+                    }
                     return LpOutcome::Rejected { ops };
                 }
             }
@@ -442,18 +498,67 @@ impl WpsScheduler {
         LpOutcome::Allocated { allocs: committed, ops }
     }
 
+    /// One (task, device, configuration) placement attempt: the exact
+    /// transfer-gap search, the exhaustive start search, and the score —
+    /// charging exactly what the flat scan charges per device. `None`
+    /// when no feasible start (or transfer slot) exists in the deadline.
+    #[allow(clippy::too_many_arguments)]
+    fn try_place(
+        &self,
+        task: &Task,
+        device: DeviceId,
+        config: TaskConfig,
+        dur: SimDuration,
+        cores: u32,
+        now: SimTime,
+        ops: &mut Ops,
+    ) -> Option<(Allocation, f64)> {
+        let local = device == task.source;
+        let (from, comm) = if local {
+            (now, None)
+        } else {
+            // Transfer must complete before processing starts.
+            let t = self.transfer_time_for(task);
+            match self.earliest_comm(now, task.deadline.saturating_sub(dur), t, ops) {
+                Some((c1, c2)) => (c2, Some((c1, c2))),
+                None => return None,
+            }
+        };
+        let s = self.earliest_start(device, from, task.deadline, dur, cores, ops)?;
+        let alloc = Allocation {
+            task: task.id,
+            frame: task.frame,
+            device,
+            config,
+            cores,
+            start: s,
+            end: s + dur,
+            deadline: task.deadline,
+            offloaded: !local,
+            comm,
+        };
+        let sc = self.score_placement(task, &alloc, local, ops);
+        Some((alloc, sc))
+    }
+
     /// Task finished (free its resources from the scheduler's state).
     pub fn on_complete(&mut self, _now: SimTime, task: TaskId) {
         // Exact state: removal is cheap and fully reclaims capacity —
         // the accuracy advantage of the baseline representation.
-        self.state.remove(task);
+        let removed = self.state.remove(task);
         self.release_comm(task);
+        if let Some(a) = removed {
+            self.note_removed(a.device);
+        }
     }
 
     /// Task missed its deadline and was abandoned.
     pub fn on_violation(&mut self, _now: SimTime, task: TaskId) {
-        self.state.remove(task);
+        let removed = self.state.remove(task);
         self.release_comm(task);
+        if let Some(a) = removed {
+            self.note_removed(a.device);
+        }
     }
 
     /// WPS predates the dynamic mechanism: static estimate, no rebuild.
@@ -468,6 +573,7 @@ impl WpsScheduler {
         }
         self.state.ensure_device(device);
         self.active[device] = true;
+        self.cells.set_active(device, true);
         1
     }
 
@@ -478,6 +584,7 @@ impl WpsScheduler {
             return (Vec::new(), 1);
         }
         self.active[device] = false;
+        self.cells.set_active(device, false);
         let evicted = self.state.evict_device(device);
         let mut ops: Ops = 1;
         for a in &evicted {

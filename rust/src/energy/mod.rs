@@ -168,6 +168,12 @@ struct DevEnergy {
     epoch: u64,
 }
 
+/// Depletion horizons at or beyond this are "never" (no event worth
+/// scheduling): ~285 simulated years in µs, exactly representable in
+/// `f64`, and far enough below `u64::MAX` that `now + horizon` cannot
+/// overflow for any reachable `now`.
+pub const DEPLETION_HORIZON_US: u64 = 1 << 53;
+
 /// The fleet-wide energy integrator the engine drives.
 #[derive(Debug, Clone)]
 pub struct FleetEnergy {
@@ -274,6 +280,10 @@ impl FleetEnergy {
     }
 
     /// Depletion prediction under the *current* power (post-mutation).
+    /// Horizons at or past [`DEPLETION_HORIZON_US`] are treated as
+    /// "never": returning a finite-but-astronomical `delta_us` invited
+    /// `now + delta_us` overflow in the caller late in a long run (the
+    /// old clamp was `u64::MAX / 2` *relative to zero*, not to `now`).
     fn predict(&self, device: usize) -> Option<(u64, u64)> {
         self.capacity_j?;
         let d = &self.devs[device];
@@ -284,7 +294,10 @@ impl FleetEnergy {
         if p <= 0.0 {
             return None;
         }
-        let dt_us = (d.remaining_j / p * 1e6).ceil().min(u64::MAX as f64 / 2.0) as u64;
+        let dt_us = (d.remaining_j / p * 1e6).ceil().min(DEPLETION_HORIZON_US as f64) as u64;
+        if dt_us >= DEPLETION_HORIZON_US {
+            return None; // effectively infinite: nothing to schedule
+        }
         Some((d.epoch, dt_us.max(1)))
     }
 
@@ -346,6 +359,13 @@ impl FleetEnergy {
         d.remaining_j = 0.0;
         d.depleted = true;
         true
+    }
+
+    /// Current prediction epoch of `device` (`None` outside the fleet).
+    /// A queued `BatteryDeplete` carrying any other epoch is dead — the
+    /// engine's queue compaction uses this to drop superseded entries.
+    pub fn pred_epoch(&self, device: usize) -> Option<u64> {
+        self.devs.get(device).map(|d| d.epoch)
     }
 
     pub fn depleted(&self, device: usize) -> bool {
@@ -465,6 +485,28 @@ mod tests {
         assert!((idle - 1.1 * 5.0).abs() < 1e-9);
         assert_eq!((active, tx, rx), (0.0, 0.0, 0.0));
         assert!((total - idle).abs() < 1e-9);
+    }
+
+    /// Regression: a near-zero draw used to predict a depletion
+    /// `u64::MAX / 2` µs out — clamped relative to zero, not to `now` —
+    /// so `now + delta_us` could overflow late in a long run. Such
+    /// horizons are "never": no prediction at all, and any finite
+    /// prediction stays below [`DEPLETION_HORIZON_US`] so the engine's
+    /// saturating add can never wrap.
+    #[test]
+    fn near_zero_draw_predicts_no_depletion_instead_of_overflowing() {
+        let trickle = EnergyModel { idle_w: 1e-12, active_w: [0.0; 3], tx_w: 0.0, rx_w: 0.0 };
+        let mut f = FleetEnergy::new(trickle, Some(1000.0), 1);
+        // 1000 J / 1e-12 W ≈ 1e21 µs — far past the horizon: no event.
+        assert_eq!(f.task_start(0, 0, 0), None, "infinite horizon must not schedule");
+        assert_eq!(f.task_end(1_000_000, 0, 0), None);
+        // A real draw still predicts, and the delta is overflow-proof by
+        // construction (strictly below the horizon cap).
+        let mut g = FleetEnergy::new(EnergyModel::pi2b(), Some(1000.0), 1);
+        let (_, dt) = g.task_start(0, 0, 2).expect("finite horizon must schedule");
+        assert!(dt >= 1 && dt < DEPLETION_HORIZON_US);
+        let far_future = u64::MAX - DEPLETION_HORIZON_US;
+        assert!(far_future.checked_add(dt).is_some(), "now + delta must not overflow");
     }
 
     #[test]

@@ -267,6 +267,32 @@ pub fn run_suite(opts: &SuiteOptions) -> Vec<BenchRow> {
         rows.push(row);
     }
 
+    println!("\n== hot_path macro: fleet scale ladder ==");
+    {
+        // The scale acceptance gate (ROADMAP item 1): ns/event may not
+        // grow more than ~2× from 100 devices to 100k. Past 512 devices
+        // the schedulers shard the fleet into ~√n-device cells, the
+        // conveyor chains one TraceFrame event per cell, and the
+        // calendar queue keeps pops O(log bucket) — so per-event cost
+        // should stay near-flat in fleet size. Quick mode (the CI smoke
+        // job) climbs 100 → 10k; the full suite reaches 100k.
+        let ladder: &[usize] = if opts.quick { &[100, 10_000] } else { &[100, 10_000, 100_000] };
+        let ladder_frames = if opts.quick { 2 } else { 4 };
+        for &n in ladder {
+            let s = ScenarioBuilder::new()
+                .scheduler(SchedKind::Ras)
+                .trace(TraceSpec::Weighted(2))
+                .devices(n)
+                .frames(ladder_frames)
+                .seed(42)
+                .build();
+            let label = if n % 1_000 == 0 { format!("{}k", n / 1_000) } else { n.to_string() };
+            let row = steady_row(&format!("engine_event/steady_state_{label}"), s);
+            println!("{}", row.report());
+            rows.push(row);
+        }
+    }
+
     println!("\n== hot_path macro: end-to-end sweep ==");
     {
         let sweep_frames = if opts.quick { 4 } else { 12 };

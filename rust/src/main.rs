@@ -81,6 +81,8 @@ OPTIONS:
   --scheds L    sweep/loadgen: comma list of schedulers (default wps,ras;
                 loadgen defaults to wps,ras,multi)
   --loads L     sweep: comma list of weighted loads 1..4 (default 1,2,3,4)
+  --devices N   fleet size override (scale-out runs; past 512 devices the
+                schedulers auto-shard the fleet into ~√n-device cells)
   --procs L     loadgen: comma list of arrival-process specs
   --depths L    accuracy: comma list of ladder depths 1..3 (default 1,2,3)
   --cap N       loadgen: admission cap on in-flight tasks (default 0 = open)
@@ -109,6 +111,7 @@ struct Args {
     /// loadgen: wps,ras,multi) — an explicit flag is never overridden.
     scheds: Option<String>,
     loads: String,
+    devices: Option<usize>,
     procs: Option<String>,
     depths: Option<String>,
     cap: usize,
@@ -141,6 +144,7 @@ fn parse_args() -> anyhow::Result<Args> {
         out: None,
         scheds: None,
         loads: "1,2,3,4".to_string(),
+        devices: None,
         procs: None,
         depths: None,
         cap: 0,
@@ -173,6 +177,7 @@ fn parse_args() -> anyhow::Result<Args> {
             "--out" => args.out = Some(value(&mut it, "--out")?.into()),
             "--scheds" => args.scheds = Some(value(&mut it, "--scheds")?),
             "--loads" => args.loads = value(&mut it, "--loads")?,
+            "--devices" => args.devices = Some(value(&mut it, "--devices")?.parse()?),
             "--procs" => args.procs = Some(value(&mut it, "--procs")?),
             "--depths" => args.depths = Some(value(&mut it, "--depths")?),
             "--cap" => args.cap = value(&mut it, "--cap")?.parse()?,
@@ -328,6 +333,10 @@ fn main() -> anyhow::Result<()> {
     };
     if let Some(seed) = args.seed {
         cfg.seed = seed;
+    }
+    if let Some(n) = args.devices {
+        anyhow::ensure!(n >= 1, "--devices needs at least 1 device");
+        cfg.n_devices = n;
     }
     let minutes = args.minutes;
 

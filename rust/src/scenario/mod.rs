@@ -274,6 +274,25 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Fleet-cell span for the sharded scheduler hierarchy (0 = auto:
+    /// one cell for small fleets, ~√n-device cells at scale). Any value
+    /// produces identical decisions — the knob only moves work between
+    /// the per-cell uniform fast path and the exact per-device path —
+    /// which the fleet-scale equivalence suite asserts byte-for-byte.
+    pub fn cell_size(mut self, span: usize) -> Self {
+        self.cfg.cell_size = span;
+        self
+    }
+
+    /// Remote-candidate count at or below which RAS keeps the legacy
+    /// eager shuffle instead of the lazy cell descent. 0 forces the
+    /// descent everywhere (equivalence tests); a huge value forces the
+    /// eager path everywhere.
+    pub fn lazy_shuffle_cutover(mut self, cutover: usize) -> Self {
+        self.cfg.lazy_shuffle_cutover = cutover;
+        self
+    }
+
     /// Heterogeneous fleet: `device` runs `slowdown`× the planned
     /// processing time (1.0 = nominal; 1.3 = 30 % slower than the
     /// controller's homogeneous plan believes).

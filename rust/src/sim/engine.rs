@@ -58,6 +58,7 @@ use std::sync::Arc;
 
 use crate::config::SystemConfig;
 use crate::coordinator::bandwidth::{BandwidthEstimator, ProbeRound};
+use crate::coordinator::fleet::CellMap;
 use crate::coordinator::scheduler::{Decision, Ops, Outcome, SchedEvent, Scheduler};
 use crate::coordinator::task::{Allocation, DeviceId, FrameId, Task, TaskId, VariantRung, MAX_RUNGS};
 use crate::energy::{EnergyModel, FleetEnergy};
@@ -227,6 +228,17 @@ pub struct Engine {
     cloud: Option<CloudTier>,
     /// Scratch: battery levels relayed to the scheduler.
     scratch_levels: Vec<f64>,
+    /// Device-cell span of the TraceFrame event chains (one chain head
+    /// per cell lives in the queue at a time).
+    trace_span: usize,
+    /// Epoch of the latest armed medium-completion prediction
+    /// (`u64::MAX` = none armed). Re-arming under a newer epoch marks
+    /// the superseded queued event stale for compaction accounting.
+    armed_medium: u64,
+    /// Same, for the WAN upload-completion prediction.
+    armed_wan: u64,
+    /// Per-device epoch of the latest armed battery-depletion event.
+    armed_battery: Vec<u64>,
 }
 
 impl Engine {
@@ -259,13 +271,21 @@ impl Engine {
         // offloading interesting — a host device's high-priority work
         // arrives mid-way through guest tasks' processing windows — and it
         // is where the paper's preemption/reallocation traffic comes from.
-        for i in 0..trace.entries.len() {
-            for d in 0..cfg.n_devices {
+        //
+        // Only one chain head per device *cell* enters the queue; each
+        // fired frame chains its successor (the cell's next device in the
+        // same row — phases ascend with the device index — then the
+        // cell's head in the next row). Every frame still fires at
+        // exactly i·T + d·T/n, but queue occupancy is O(cells), not
+        // O(rows × devices) — pre-pushing a 100k-device trace used to
+        // hold millions of pending frames up front.
+        let trace_span = CellMap::new(cfg.cell_size, cfg.n_devices).span();
+        if !trace.entries.is_empty() {
+            let mut d = 0;
+            while d < cfg.n_devices {
                 let phase = d as u64 * cfg.frame_period() / cfg.n_devices as u64;
-                queue.push(
-                    i as u64 * cfg.frame_period() + phase,
-                    Event::TraceFrame { index: i * cfg.n_devices + d },
-                );
+                queue.push(phase, Event::TraceFrame { index: d });
+                d += trace_span;
             }
         }
         // First probe after one interval (the baseline estimate covers
@@ -382,6 +402,10 @@ impl Engine {
             fleet,
             cloud,
             scratch_levels: Vec::new(),
+            trace_span,
+            armed_medium: u64::MAX,
+            armed_wan: u64::MAX,
+            armed_battery: vec![u64::MAX; cfg.n_devices],
             cfg,
             sched,
         }
@@ -395,7 +419,43 @@ impl Engine {
         debug_assert!(s.at >= self.now, "time went backwards");
         self.now = s.at;
         self.handle(s.event);
+        // Lazy compaction: epoch-guarded predictions and finishes of dead
+        // placements die in place when superseded; once they dominate the
+        // queue, one sweep drops them all so the footprint tracks *live*
+        // events under heavy preemption, churn, and battery re-arming.
+        if self.queue.should_compact() {
+            let mut q = std::mem::take(&mut self.queue);
+            q.compact(|ev| self.event_live(ev));
+            self.queue = q;
+        }
         true
+    }
+
+    /// Number of events currently queued. Scale tests assert occupancy
+    /// stays O(cells + live work), not O(trace length × fleet size).
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Can this queued event still do work when it fires? The compaction
+    /// predicate: superseded epoch-guarded predictions and finish /
+    /// transfer events whose placement died (slab handle re-slotted) are
+    /// dead weight the sweep may drop.
+    fn event_live(&self, ev: &Event) -> bool {
+        match ev {
+            Event::HpFinish { task } | Event::LpFinish { task } | Event::TransferStart { task } => {
+                self.tasks.get(*task).map_or(false, |s| s.rt.is_some())
+            }
+            Event::MediumComplete { epoch, .. } => *epoch == self.medium.epoch,
+            Event::WanComplete { epoch, .. } => {
+                self.cloud.as_ref().map_or(false, |c| c.wan.epoch == *epoch)
+            }
+            Event::BatteryDeplete { device, epoch } => self
+                .fleet
+                .as_ref()
+                .map_or(false, |f| f.pred_epoch(*device) == Some(*epoch)),
+            _ => true,
+        }
     }
 
     /// Run to completion and return the collected metrics.
@@ -500,6 +560,9 @@ impl Engine {
         let lan_flow = self.medium.remove_flow(self.now, task);
         self.arm_medium();
         if let Some((device, cfg_idx, source)) = ended {
+            // The finish event queued under the dead placement will never
+            // resolve — report it so compaction accounting sees it.
+            self.queue.note_stale(1);
             // A cloud placement's upload rides the WAN, not the LAN.
             let wan_flow = device >= self.cfg.n_devices
                 && self.cloud.as_mut().map_or(false, |c| c.abort_upload(self.now, task));
@@ -571,7 +634,14 @@ impl Engine {
     /// Arm the battery-depletion prediction a fleet hook returned.
     fn arm_battery(&mut self, device: DeviceId, pred: Option<(u64, u64)>) {
         if let Some((epoch, delta_us)) = pred {
-            self.queue.push(self.now + delta_us, Event::BatteryDeplete { device, epoch });
+            if let Some(armed) = self.armed_battery.get_mut(device) {
+                if *armed != u64::MAX && *armed != epoch {
+                    self.queue.note_stale(1); // superseded prediction
+                }
+                *armed = epoch;
+            }
+            self.queue
+                .push(self.now.saturating_add(delta_us), Event::BatteryDeplete { device, epoch });
         }
     }
 
@@ -620,9 +690,13 @@ impl Engine {
     /// in-flight work is lost or re-offered — and the recover guard
     /// keeps the device down for the rest of the run.
     fn on_battery_deplete(&mut self, device: DeviceId, epoch: u64) {
+        if self.armed_battery.get(device).copied() == Some(epoch) {
+            self.armed_battery[device] = u64::MAX;
+        }
         let now = self.now;
         let drained = self.fleet.as_mut().map_or(false, |f| f.on_deplete(now, device, epoch));
         if !drained {
+            self.queue.note_popped_stale();
             return;
         }
         self.metrics.battery_depletions += 1;
@@ -633,7 +707,26 @@ impl Engine {
 
     fn on_trace_frame(&mut self, index: usize) {
         // `index` encodes (trace row, device): one event per device frame.
-        let (row, device) = (index / self.cfg.n_devices, index % self.cfg.n_devices);
+        let n = self.cfg.n_devices;
+        let (row, device) = (index / n, index % n);
+        // Chain the successor first, unconditionally — the conveyor must
+        // keep rolling even when this frame is dropped (device out of the
+        // fleet, empty belt cell). Within a row the cell's members fire
+        // in device order (phases ascend with the index); the cell's last
+        // member chains the cell head in the next row.
+        let next = device + 1;
+        if next < n && next % self.trace_span != 0 {
+            let phase = next as u64 * self.cfg.frame_period() / n as u64;
+            self.queue
+                .push(row as u64 * self.cfg.frame_period() + phase, Event::TraceFrame { index: index + 1 });
+        } else if row + 1 < self.trace.entries.len() {
+            let head = (device / self.trace_span) * self.trace_span;
+            let phase = head as u64 * self.cfg.frame_period() / n as u64;
+            self.queue.push(
+                (row as u64 + 1) * self.cfg.frame_period() + phase,
+                Event::TraceFrame { index: (row + 1) * n + head },
+            );
+        }
         if !self.device_active(device) {
             return; // the device has left the fleet: no camera, no frames
         }
@@ -855,8 +948,14 @@ impl Engine {
 
     fn on_hp_finish(&mut self, h: SlotRef) {
         // A non-resolving handle is an event from a dead placement.
-        let Some(slot) = self.tasks.get(h) else { return };
-        let Some(rt) = slot.rt.as_ref() else { return };
+        let Some(slot) = self.tasks.get(h) else {
+            self.queue.note_popped_stale();
+            return;
+        };
+        let Some(rt) = slot.rt.as_ref() else {
+            self.queue.note_popped_stale();
+            return;
+        };
         let frame = rt.alloc.frame;
         let (device, cfg_idx) = (rt.alloc.device, rt.alloc.config.index());
         let task_id = slot.task.id;
@@ -1046,8 +1145,14 @@ impl Engine {
     }
 
     fn on_transfer_start(&mut self, h: SlotRef) {
-        let Some(slot) = self.tasks.get(h) else { return };
-        let Some(rt) = slot.rt.as_ref() else { return };
+        let Some(slot) = self.tasks.get(h) else {
+            self.queue.note_popped_stale();
+            return;
+        };
+        let Some(rt) = slot.rt.as_ref() else {
+            self.queue.note_popped_stale();
+            return;
+        };
         let (id, bytes) = (slot.task.id, slot.task.input_bytes);
         let (src, dst) = (slot.task.source, rt.alloc.device);
         if dst >= self.cfg.n_devices {
@@ -1067,8 +1172,14 @@ impl Engine {
     }
 
     fn on_lp_finish(&mut self, h: SlotRef) {
-        let Some(slot) = self.tasks.get(h) else { return };
-        let Some(rt) = slot.rt.as_ref() else { return };
+        let Some(slot) = self.tasks.get(h) else {
+            self.queue.note_popped_stale();
+            return;
+        };
+        let Some(rt) = slot.rt.as_ref() else {
+            self.queue.note_popped_stale();
+            return;
+        };
         let (frame, offloaded, realloc, reoffered) =
             (rt.alloc.frame, rt.alloc.offloaded, rt.realloc, rt.reoffered);
         let (device, cfg_idx) = (rt.alloc.device, rt.alloc.config.index());
@@ -1126,12 +1237,21 @@ impl Engine {
     /// (Re-)arm the next medium completion event under the current epoch.
     fn arm_medium(&mut self) {
         if let Some((t, flow)) = self.medium.next_completion(self.now) {
-            self.queue.push(t, Event::MediumComplete { flow, epoch: self.medium.epoch });
+            let epoch = self.medium.epoch;
+            if self.armed_medium != u64::MAX && self.armed_medium != epoch {
+                self.queue.note_stale(1); // superseded prediction
+            }
+            self.armed_medium = epoch;
+            self.queue.push(t, Event::MediumComplete { flow, epoch });
         }
     }
 
     fn on_medium_complete(&mut self, flow: FlowId, epoch: u64) {
+        if self.armed_medium == epoch {
+            self.armed_medium = u64::MAX; // the tracked event left the queue
+        }
         if epoch != self.medium.epoch {
+            self.queue.note_popped_stale();
             return; // stale prediction; a newer event is armed
         }
         if !self.medium.complete_flow(self.now, flow) {
@@ -1164,6 +1284,10 @@ impl Engine {
         let Some(c) = self.cloud.as_mut() else { return };
         if let Some((t, flow)) = c.next_completion(self.now) {
             let epoch = c.wan.epoch;
+            if self.armed_wan != u64::MAX && self.armed_wan != epoch {
+                self.queue.note_stale(1); // superseded prediction
+            }
+            self.armed_wan = epoch;
             self.queue.push(t, Event::WanComplete { flow, epoch });
         }
     }
@@ -1176,9 +1300,13 @@ impl Engine {
     /// refreshed goodput EWMA goes back to the schedulers as a zero-cost
     /// [`SchedEvent::CloudBandwidthUpdate`].
     fn on_wan_complete(&mut self, flow: FlowId, epoch: u64) {
+        if self.armed_wan == epoch {
+            self.armed_wan = u64::MAX; // the tracked event left the queue
+        }
         let now = self.now;
         let Some(c) = self.cloud.as_mut() else { return };
         if epoch != c.wan.epoch {
+            self.queue.note_popped_stale();
             return; // stale prediction; a newer event is armed
         }
         let rtt_us = c.rtt_us;

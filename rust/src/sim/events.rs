@@ -178,37 +178,209 @@ impl PartialOrd for Scheduled {
     }
 }
 
-/// Deterministic time-ordered queue.
-#[derive(Debug, Default)]
+/// Bucket width of the calendar ring, microseconds. With
+/// [`EventQueue::N_BUCKETS`] buckets the ring spans ~33.5 s — wide
+/// enough that the engine's periodic chains (frame period ~18.9 s,
+/// probe interval 30 s) land inside the ring instead of the far heap.
+const BUCKET_WIDTH_US: SimTime = 1 << 16;
+
+/// Deterministic time-ordered queue: a two-level calendar.
+///
+/// Events near the cursor live in a ring of [`EventQueue::N_BUCKETS`]
+/// unsorted buckets of [`BUCKET_WIDTH_US`] each; the *current* bucket is
+/// staged into a small binary heap (exact `(at, seq)` order), and events
+/// past the ring's horizon wait in a far heap that drains into the ring
+/// as the cursor advances. Every operation is `O(log bucket)` instead of
+/// `O(log total)`, and a bad width guess degenerates to the old single
+/// binary heap — never worse.
+///
+/// Pop order is **identical** to the old `BinaryHeap<Scheduled>`:
+/// earliest `at` first, FIFO (`seq`) among simultaneous events.
+///
+/// Epoch-guarded events (medium/WAN predictions, battery depletions,
+/// slab-stale finishes) die in place when superseded; the owner reports
+/// them via [`EventQueue::note_stale`] / [`EventQueue::note_popped_stale`]
+/// and triggers [`EventQueue::compact`] when [`EventQueue::should_compact`]
+/// says the dead fraction crossed ½, so the queue's footprint tracks
+/// *live* events under heavy preemption, churn, and battery re-arming.
+#[derive(Debug)]
 pub struct EventQueue {
-    heap: BinaryHeap<Scheduled>,
+    /// Current bucket, heapified: the only totally-ordered region.
+    staged: BinaryHeap<Scheduled>,
+    /// Ring of future buckets (unsorted), disjoint time ranges.
+    ring: Vec<Vec<Scheduled>>,
+    /// Events at or past `horizon()`.
+    far: BinaryHeap<Scheduled>,
+    /// Events in `ring` (excluding `staged`).
+    in_ring: usize,
+    len: usize,
+    /// Start time of the staged bucket's range.
+    cursor_start: SimTime,
+    /// Ring slot currently staged.
+    cursor: usize,
     seq: u64,
+    /// Estimated dead (superseded) events still queued.
+    stale: usize,
+}
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        Self {
+            staged: BinaryHeap::new(),
+            ring: (0..Self::N_BUCKETS).map(|_| Vec::new()).collect(),
+            far: BinaryHeap::new(),
+            in_ring: 0,
+            len: 0,
+            cursor_start: 0,
+            cursor: 0,
+            seq: 0,
+            stale: 0,
+        }
+    }
 }
 
 impl EventQueue {
+    /// Ring size (slots). Power of two so the modulo is a mask.
+    pub const N_BUCKETS: usize = 512;
+
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// End of the ring's coverage; later events wait in the far heap.
+    fn horizon(&self) -> SimTime {
+        self.cursor_start + Self::N_BUCKETS as SimTime * BUCKET_WIDTH_US
+    }
+
+    /// File an event into staged / ring / far by its time.
+    fn route(&mut self, s: Scheduled) {
+        // `at` below the staged range is legal (safety, not used by the
+        // engine): the staged heap orders it correctly anyway.
+        let offset = s.at.saturating_sub(self.cursor_start) / BUCKET_WIDTH_US;
+        if offset == 0 {
+            self.staged.push(s);
+        } else if (offset as usize) < Self::N_BUCKETS {
+            let slot = (self.cursor + offset as usize) % Self::N_BUCKETS;
+            self.ring[slot].push(s);
+            self.in_ring += 1;
+        } else {
+            self.far.push(s);
+        }
+    }
+
     pub fn push(&mut self, at: SimTime, event: Event) {
         self.seq += 1;
-        self.heap.push(Scheduled { at, seq: self.seq, event });
+        let seq = self.seq;
+        self.len += 1;
+        self.route(Scheduled { at, seq, event });
+    }
+
+    /// Move the cursor one bucket forward: stage the next slot and pull
+    /// far events that the advancing horizon made near.
+    fn advance_bucket(&mut self) {
+        debug_assert!(self.staged.is_empty());
+        self.cursor = (self.cursor + 1) % Self::N_BUCKETS;
+        self.cursor_start += BUCKET_WIDTH_US;
+        let bucket = std::mem::take(&mut self.ring[self.cursor]);
+        self.in_ring -= bucket.len();
+        self.staged = BinaryHeap::from(bucket);
+        let horizon = self.horizon();
+        while self.far.peek().is_some_and(|s| s.at < horizon) {
+            let s = self.far.pop().unwrap();
+            self.route(s);
+        }
     }
 
     pub fn pop(&mut self) -> Option<Scheduled> {
-        self.heap.pop()
+        loop {
+            if let Some(s) = self.staged.pop() {
+                self.len -= 1;
+                return Some(s);
+            }
+            if self.in_ring > 0 {
+                self.advance_bucket();
+            } else if let Some(next) = self.far.peek().map(|s| s.at) {
+                // The ring is empty: jump the cursor straight to the far
+                // heap's minimum instead of stepping bucket by bucket.
+                self.cursor_start = (next / BUCKET_WIDTH_US) * BUCKET_WIDTH_US;
+                let horizon = self.horizon();
+                while self.far.peek().is_some_and(|s| s.at < horizon) {
+                    let s = self.far.pop().unwrap();
+                    self.route(s);
+                }
+            } else {
+                return None;
+            }
+        }
     }
 
     pub fn peek_time(&self) -> Option<SimTime> {
-        self.heap.peek().map(|s| s.at)
+        if let Some(s) = self.staged.peek() {
+            return Some(s.at);
+        }
+        // Buckets hold disjoint ranges in cursor order: the first
+        // nonempty slot contains the global near-minimum.
+        for offset in 1..Self::N_BUCKETS {
+            let slot = (self.cursor + offset) % Self::N_BUCKETS;
+            if let Some(t) = self.ring[slot].iter().map(|s| s.at).min() {
+                return Some(t);
+            }
+        }
+        self.far.peek().map(|s| s.at)
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len == 0
+    }
+
+    // ---- stale-entry accounting -----------------------------------------
+
+    /// Report `n` queued events as superseded (epoch bumped, placement
+    /// cancelled): they will be ignored when popped, and count toward the
+    /// compaction trigger until then.
+    pub fn note_stale(&mut self, n: usize) {
+        self.stale = (self.stale + n).min(self.len);
+    }
+
+    /// A superseded event was popped (and ignored): it no longer bloats
+    /// the queue.
+    pub fn note_popped_stale(&mut self) {
+        self.stale = self.stale.saturating_sub(1);
+    }
+
+    /// Estimated dead entries currently queued (diagnostics/tests).
+    pub fn stale_estimate(&self) -> usize {
+        self.stale
+    }
+
+    /// True when dead entries dominate: more than half the queue is
+    /// superseded (and the queue is big enough for a sweep to pay off).
+    pub fn should_compact(&self) -> bool {
+        self.len >= 512 && self.stale * 2 > self.len
+    }
+
+    /// Drop every queued event the predicate rejects, keeping original
+    /// `(at, seq)` order for survivors (seq values are preserved, so FIFO
+    /// ties replay identically). Resets the stale estimate.
+    pub fn compact(&mut self, mut live: impl FnMut(&Event) -> bool) {
+        let mut all: Vec<Scheduled> =
+            Vec::with_capacity(self.staged.len() + self.in_ring + self.far.len());
+        all.extend(std::mem::take(&mut self.staged));
+        for slot in &mut self.ring {
+            all.append(slot);
+        }
+        all.extend(std::mem::take(&mut self.far));
+        all.retain(|s| live(&s.event));
+        self.in_ring = 0;
+        self.len = all.len();
+        self.stale = 0;
+        for s in all {
+            self.route(s);
+        }
     }
 }
 
@@ -276,6 +448,116 @@ mod tests {
         assert_eq!(spilled.clone(), spilled);
         // ...and different content does not.
         assert_ne!(inline, spilled);
+    }
+
+    /// The calendar queue must replay the exact `(at, seq)` order of a
+    /// plain `BinaryHeap<Scheduled>` under an adversarial mix of near
+    /// pushes (same-time bursts), in-ring pushes, and far-horizon pushes
+    /// interleaved with pops — the property the engine's determinism
+    /// rests on.
+    #[test]
+    fn calendar_matches_reference_heap_order() {
+        let mut q = EventQueue::new();
+        let mut model: BinaryHeap<Scheduled> = BinaryHeap::new();
+        let mut seq = 0u64;
+        // Small deterministic LCG: no external RNG in this crate's tests.
+        let mut state = 0x2545_f491_4f6c_dd1du64;
+        let mut rand = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            state >> 33
+        };
+        let mut now = 0u64;
+        for round in 0..5000u64 {
+            let op = rand() % 10;
+            if op < 6 {
+                // Push: near (same bucket), mid-ring, or far beyond the
+                // horizon — including exact time collisions for FIFO.
+                let delta = match rand() % 4 {
+                    0 => 0,
+                    1 => rand() % 1000,
+                    2 => rand() % (BUCKET_WIDTH_US * 64),
+                    _ => BUCKET_WIDTH_US * EventQueue::N_BUCKETS as u64 + rand() % (1 << 28),
+                };
+                let at = now + delta;
+                seq += 1;
+                q.push(at, Event::TraceFrame { index: round as usize });
+                model.push(Scheduled {
+                    at,
+                    seq,
+                    event: Event::TraceFrame { index: round as usize },
+                });
+            } else {
+                let got = q.pop();
+                let want = model.pop();
+                assert_eq!(got, want, "divergence at round {round}");
+                if let Some(s) = got {
+                    assert!(s.at >= now, "time went backwards");
+                    now = s.at;
+                }
+            }
+            assert_eq!(q.len(), model.len());
+            assert_eq!(q.peek_time(), model.peek().map(|s| s.at));
+        }
+        while let Some(want) = model.pop() {
+            assert_eq!(q.pop(), Some(want));
+        }
+        assert!(q.pop().is_none());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn far_horizon_events_pop_in_order() {
+        // Events far beyond the ring's span (probe chains, late churn)
+        // must come back in exact time order across the far→ring drain.
+        let mut q = EventQueue::new();
+        let span = BUCKET_WIDTH_US * EventQueue::N_BUCKETS as u64;
+        q.push(7 * span, Event::ProbeStart);
+        q.push(3, Event::TraceFrame { index: 0 });
+        q.push(2 * span + 17, Event::TrafficToggle { active: true });
+        q.push(7 * span, Event::ProbeStart); // same time: FIFO by seq
+        assert_eq!(q.peek_time(), Some(3));
+        assert_eq!(q.pop().unwrap().at, 3);
+        assert_eq!(q.pop().unwrap().at, 2 * span + 17);
+        let a = q.pop().unwrap();
+        let b = q.pop().unwrap();
+        assert_eq!((a.at, b.at), (7 * span, 7 * span));
+        assert!(a.seq < b.seq, "simultaneous far events must stay FIFO");
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn stale_accounting_triggers_and_compaction_shrinks() {
+        let mut q = EventQueue::new();
+        for i in 0..1000u64 {
+            // Even indices simulate epoch-stale predictions.
+            q.push(i * 100, Event::MediumComplete { flow: i, epoch: i % 2 });
+        }
+        assert!(!q.should_compact());
+        q.note_stale(400);
+        assert!(!q.should_compact(), "400/1000 dead is below the ½ trigger");
+        q.note_stale(200);
+        assert!(q.should_compact(), "600/1000 dead must trigger");
+        q.compact(|ev| !matches!(ev, Event::MediumComplete { epoch: 0, .. }));
+        assert_eq!(q.len(), 500);
+        assert_eq!(q.stale_estimate(), 0);
+        assert!(!q.should_compact());
+        // Survivors still pop in exact time order with odd epochs only.
+        let mut last = 0;
+        let mut n = 0;
+        while let Some(s) = q.pop() {
+            assert!(s.at >= last);
+            last = s.at;
+            assert!(matches!(s.event, Event::MediumComplete { epoch: 1, .. }));
+            n += 1;
+        }
+        assert_eq!(n, 500);
+        // The estimate clamps to the queue size and drains saturating.
+        q.push(1, Event::ProbeStart);
+        q.note_stale(99);
+        assert_eq!(q.stale_estimate(), 1);
+        q.note_popped_stale();
+        q.note_popped_stale();
+        assert_eq!(q.stale_estimate(), 0);
     }
 
     #[test]

@@ -347,6 +347,37 @@ fn fault_runs_actually_inject_faults() {
 }
 
 #[test]
+fn faulted_run_queue_occupancy_tracks_live_work() {
+    // The calendar-queue rework: trace frames chain one event per
+    // device cell instead of pre-pushing every (row, device) pair, and
+    // superseded epoch-guarded events are compacted away. Even in a
+    // churny, crashing, lossy run the queue must stay below the old
+    // constructor pre-push floor of frames × devices events.
+    let frames = 24;
+    let s = ScenarioBuilder::new()
+        .scheduler(SchedKind::Ras)
+        .trace(TraceSpec::Weighted(4))
+        .frames(frames)
+        .seed(99)
+        .leave_at(80.0, 1)
+        .join_at(150.0, 1)
+        .crash_at(40.0, 0)
+        .recover_at(120.0, 0)
+        .loss_rate(0.1)
+        .probe_loss(0.3)
+        .named("occupancy_probe")
+        .build();
+    let mut eng = s.engine();
+    let mut peak = 0usize;
+    while eng.step() {
+        peak = peak.max(eng.queue_len());
+    }
+    assert!(eng.metrics.frames_total > 0, "the probe run produced no frames");
+    let floor = frames * medge::config::SystemConfig::default().n_devices;
+    assert!(peak < floor, "queue peaked at {peak} events (old pre-push floor: {floor})");
+}
+
+#[test]
 fn random_fault_schedule_depends_only_on_seed() {
     let plan = FaultPlan::new().random_faults(150.0, 30.0);
     let a = plan.schedule(7, 4, 900.0);

@@ -1,0 +1,186 @@
+//! Sharded-vs-flat equivalence suite (ROADMAP item 1): the fleet-cell
+//! hierarchy and the lazy candidate shuffle **prune work, never change
+//! answers**. Every test here pins that claim byte-for-byte:
+//!
+//! * any `cell_size` (auto, degenerate 1-device cells, odd spans, one
+//!   giant cell) must produce identical metric rows and identical
+//!   `json_rows` output — the cell layer only moves devices between the
+//!   per-cell uniform fast path and the exact per-device path;
+//! * RAS's lazy cell descent (forced via `lazy_shuffle_cutover 0`) must
+//!   make the same decisions, charge the same operation counts, and
+//!   draw the same per-decision scatter stream as the eager full-fleet
+//!   shuffle (forced via a huge cutover);
+//! * a sharded fleet well past the auto-shard threshold must complete a
+//!   conveyor run with event-queue occupancy far below the old
+//!   O(rows × devices) constructor pre-push floor.
+
+use medge::metrics::report::json_rows;
+use medge::scenario::{Scenario, ScenarioBuilder, SchedKind, Sweep};
+use medge::workload::trace::TraceSpec;
+
+/// A churn-heavy conveyor scenario: leaves, rejoins, a crash, and a
+/// lossy link drive every cell bookkeeping path (note_busy/note_idle,
+/// set_active, eviction re-keys, reconstruct-after-rebuild).
+fn churny(kind: SchedKind, load: u8, cell: usize, cutover: Option<usize>) -> Scenario {
+    let mut b = ScenarioBuilder::new()
+        .scheduler(kind)
+        .trace(TraceSpec::Weighted(load))
+        .frames(12)
+        .seed(1234)
+        .cell_size(cell)
+        .leave_at(80.0, 1)
+        .join_at(150.0, 1)
+        .crash_at(40.0, 0)
+        .recover_at(120.0, 0)
+        .loss_rate(0.1)
+        .named(format!("{}_{}", kind.label(), load));
+    if let Some(c) = cutover {
+        b = b.lazy_shuffle_cutover(c);
+    }
+    b.build()
+}
+
+fn rows_json(scenarios: Vec<Scenario>) -> String {
+    let mut sweep = Sweep::new().threads(2);
+    for s in scenarios {
+        sweep = sweep.add(s);
+    }
+    json_rows(&sweep.run())
+}
+
+#[test]
+fn cell_size_never_changes_decisions() {
+    // The full scheduler zoo under churn, across cell layouts from
+    // degenerate (span 1: every device its own cell) to one giant cell
+    // (span ≥ fleet: the flat layout). Byte-identical JSON or the cell
+    // layer leaked into a decision.
+    let grid = |cell: usize| {
+        rows_json(
+            [SchedKind::Wps, SchedKind::Ras, SchedKind::Multi]
+                .into_iter()
+                .flat_map(|k| [churny(k, 2, cell, None), churny(k, 4, cell, None)])
+                .collect(),
+        )
+    };
+    let auto = grid(0);
+    for cell in [1, 3, 7, 64] {
+        assert_eq!(auto, grid(cell), "cell_size {cell} changed a decision");
+    }
+}
+
+#[test]
+fn energy_and_cloud_rows_are_cell_size_invariant() {
+    // The energy-aware scheduler takes the exact per-member path in
+    // every cell (its score depends on per-device battery levels), and
+    // the cloud pseudo-device must stay outside the cell bookkeeping.
+    let run = |cell: usize| {
+        let s = ScenarioBuilder::new()
+            .scheduler(SchedKind::Energy)
+            .trace(TraceSpec::Weighted(4))
+            .frames(12)
+            .seed(77)
+            .cell_size(cell)
+            .energy(medge::energy::EnergyModel::pi2b())
+            .battery_j(300.0)
+            .cloud(20e6, 40.0)
+            .loss_rate(0.05)
+            .named("energy_cloud")
+            .build();
+        format!("{:?}", s.run())
+    };
+    let auto = run(0);
+    for cell in [1, 2, 5] {
+        assert_eq!(auto, run(cell), "cell_size {cell} changed an energy/cloud decision");
+    }
+}
+
+#[test]
+fn lazy_descent_is_decision_identical_to_the_eager_scan() {
+    // RAS two-regime equivalence: a huge cutover pins the eager
+    // full-fleet shuffle, cutover 0 forces the lazy cell descent on
+    // every decision. Both regimes consume the same per-decision
+    // scatter stream, so decisions, ops, and RNG draws must all agree —
+    // the rows match byte for byte, whatever the cell layout.
+    let grid = |cutover: usize, cell: usize| {
+        rows_json(
+            [SchedKind::Ras, SchedKind::Multi]
+                .into_iter()
+                .flat_map(|k| {
+                    [churny(k, 2, cell, Some(cutover)), churny(k, 4, cell, Some(cutover))]
+                })
+                .collect(),
+        )
+    };
+    let eager = grid(usize::MAX, 0);
+    for cell in [0, 1, 3] {
+        assert_eq!(
+            eager,
+            grid(0, cell),
+            "lazy descent (cell_size {cell}) diverged from the eager scan"
+        );
+    }
+}
+
+#[test]
+fn json_rows_replay_byte_identically() {
+    // The export itself is part of the equivalence contract: two runs of
+    // the same grid must serialize to the same bytes.
+    let grid = || rows_json(vec![churny(SchedKind::Ras, 3, 0, None)]);
+    assert_eq!(grid(), grid());
+}
+
+#[test]
+fn sharded_fleet_completes_with_bounded_queue_occupancy() {
+    // 600 devices is past the auto-shard threshold (512): the fleet
+    // shards into ~√n-device cells, RAS's default cutover (256) forces
+    // the lazy descent on every decision, and the conveyor chains one
+    // TraceFrame per cell. The old constructor pre-pushed every frame:
+    // 24 rows × 600 devices = 14 400 events before the run even started.
+    // Occupancy must now track live work only.
+    let frames = 24;
+    let devices = 600;
+    let s = ScenarioBuilder::new()
+        .scheduler(SchedKind::Ras)
+        .trace(TraceSpec::Weighted(2))
+        .devices(devices)
+        .frames(frames)
+        .seed(42)
+        .named("scale_600")
+        .build();
+    let mut eng = s.engine();
+    let mut peak = 0usize;
+    while eng.step() {
+        peak = peak.max(eng.queue_len());
+    }
+    assert!(eng.metrics.frames_total > 0, "the scaled conveyor produced no frames");
+    assert!(eng.metrics.hp_completed > 0, "no task ever completed at scale");
+    let floor = frames * devices;
+    assert!(
+        peak < floor / 2,
+        "queue peaked at {peak} events — O(rows × devices) occupancy is back (floor {floor})"
+    );
+}
+
+#[test]
+fn scaled_fleet_is_still_cell_size_invariant() {
+    // The same 600-device run under three layouts: auto (~25-device
+    // cells), a skewed explicit span, and one giant cell (flat layout).
+    // All three run the lazy descent (600 actives > default cutover),
+    // so this is sharded-vs-flat at scale, not just at toy sizes.
+    let run = |cell: usize| {
+        let s = ScenarioBuilder::new()
+            .scheduler(SchedKind::Ras)
+            .trace(TraceSpec::Weighted(2))
+            .devices(600)
+            .frames(6)
+            .seed(42)
+            .cell_size(cell)
+            .named("scale_600")
+            .build();
+        format!("{:?}", s.run())
+    };
+    let auto = run(0);
+    for cell in [37, 600] {
+        assert_eq!(auto, run(cell), "cell_size {cell} changed a decision at scale");
+    }
+}
