@@ -132,6 +132,35 @@ pub struct SystemConfig {
     /// placement stay decision-identical.
     pub lazy_shuffle_cutover: usize,
 
+    /// Missed probe rounds before the failure detector marks a device
+    /// `Suspected` and schedulers receive `DeviceSuspected`. `0` (the
+    /// default) disables the detector entirely: no suspicion state, no
+    /// new scheduler events, byte-identical runs.
+    pub suspect_after: u32,
+    /// Additional missed rounds (past `suspect_after`) before a suspected
+    /// device is escalated to `Confirmed`-down (diagnostic only; the
+    /// scheduler already placed around the suspicion).
+    pub confirm_after: u32,
+    /// Per-placement offload timeout in seconds: an offloaded low-priority
+    /// placement that has not completed this long after its transfer was
+    /// scheduled is cancelled and re-offered (exponential backoff doubles
+    /// the window per retry, up to `retry_limit` tries). `0.0` (the
+    /// default) disables timeouts and retries entirely.
+    pub offload_timeout_s: f64,
+    /// Maximum number of timeout-driven re-offers per task before the
+    /// task is abandoned as lost.
+    pub retry_limit: u32,
+    /// Hedged-duplicate window in seconds: an offloaded deadline-critical
+    /// placement still unfinished this long after it started gets a
+    /// duplicate placed elsewhere; first completion wins, the loser is
+    /// cancelled without credit. `0.0` (the default) disables hedging.
+    pub hedge_timeout_s: f64,
+    /// Consecutive failed probe rounds after which the bandwidth estimate
+    /// is considered stale (`BandwidthEstimator::is_stale`); RAS widens
+    /// its conservative windows while stale. `0` (the default) means the
+    /// estimate never goes stale.
+    pub bw_stale_after: u32,
+
     /// RNG seed for trace generation, device shuffling, probe host
     /// selection and traffic bursts. Same seed ⇒ identical run.
     pub seed: u64,
@@ -169,6 +198,12 @@ impl Default for SystemConfig {
             cloud_speedup: 8.0,
             cell_size: 0,
             lazy_shuffle_cutover: 256,
+            suspect_after: 0,
+            confirm_after: 2,
+            offload_timeout_s: 0.0,
+            retry_limit: 2,
+            hedge_timeout_s: 0.0,
+            bw_stale_after: 0,
             seed: 42,
         }
     }
@@ -238,7 +273,9 @@ impl SystemConfig {
                 exp_buckets, bandwidth_interval_s, ewma_alpha, ping_count,
                 ping_bytes, probe_airtime_factor, cost_scale, op_cost_us, bg_bps, duty_cycle,
                 cloud_wan_bps, cloud_rtt_ms, cloud_speedup, cell_size,
-                lazy_shuffle_cutover, seed
+                lazy_shuffle_cutover, suspect_after, confirm_after,
+                offload_timeout_s, retry_limit, hedge_timeout_s,
+                bw_stale_after, seed
             );
         }
         Ok(cfg)
@@ -247,14 +284,16 @@ impl SystemConfig {
     /// Render to the `key value` text format (stable, diffable).
     pub fn to_kv(&self) -> String {
         format!(
-            "n_devices {}\ncores_per_device {}\nhp_proc_s {}\nlp2_proc_s {}\nlp4_proc_s {}\nproc_padding_s {}\nproc_jitter_s {}\nhp_cores {}\nframe_period_s {}\nhp_deadline_s {}\nimage_bytes {}\nlink_bps {}\ncontrol_latency_ms {}\nbase_buckets {}\nexp_buckets {}\nbandwidth_interval_s {}\newma_alpha {}\nping_count {}\nping_bytes {}\nprobe_airtime_factor {}\ncost_scale {}\nop_cost_us {}\nbg_bps {}\nduty_cycle {}\ncloud_wan_bps {}\ncloud_rtt_ms {}\ncloud_speedup {}\ncell_size {}\nlazy_shuffle_cutover {}\nseed {}\n",
+            "n_devices {}\ncores_per_device {}\nhp_proc_s {}\nlp2_proc_s {}\nlp4_proc_s {}\nproc_padding_s {}\nproc_jitter_s {}\nhp_cores {}\nframe_period_s {}\nhp_deadline_s {}\nimage_bytes {}\nlink_bps {}\ncontrol_latency_ms {}\nbase_buckets {}\nexp_buckets {}\nbandwidth_interval_s {}\newma_alpha {}\nping_count {}\nping_bytes {}\nprobe_airtime_factor {}\ncost_scale {}\nop_cost_us {}\nbg_bps {}\nduty_cycle {}\ncloud_wan_bps {}\ncloud_rtt_ms {}\ncloud_speedup {}\ncell_size {}\nlazy_shuffle_cutover {}\nsuspect_after {}\nconfirm_after {}\noffload_timeout_s {}\nretry_limit {}\nhedge_timeout_s {}\nbw_stale_after {}\nseed {}\n",
             self.n_devices, self.cores_per_device, self.hp_proc_s, self.lp2_proc_s,
             self.lp4_proc_s, self.proc_padding_s, self.proc_jitter_s, self.hp_cores, self.frame_period_s,
             self.hp_deadline_s, self.image_bytes, self.link_bps, self.control_latency_ms,
             self.base_buckets, self.exp_buckets, self.bandwidth_interval_s, self.ewma_alpha,
             self.ping_count, self.ping_bytes, self.probe_airtime_factor, self.cost_scale, self.op_cost_us,
             self.bg_bps, self.duty_cycle, self.cloud_wan_bps, self.cloud_rtt_ms, self.cloud_speedup,
-            self.cell_size, self.lazy_shuffle_cutover, self.seed
+            self.cell_size, self.lazy_shuffle_cutover, self.suspect_after, self.confirm_after,
+            self.offload_timeout_s, self.retry_limit, self.hedge_timeout_s,
+            self.bw_stale_after, self.seed
         )
     }
 }
@@ -324,6 +363,33 @@ mod tests {
         let c2 = SystemConfig::from_kv(&c.to_kv()).unwrap();
         assert_eq!(c2.cell_size, 64);
         assert_eq!(c2.lazy_shuffle_cutover, 8);
+    }
+
+    #[test]
+    fn robustness_knobs_default_off_and_roundtrip() {
+        let c = SystemConfig::default();
+        assert_eq!(c.suspect_after, 0, "detector must default OFF");
+        assert_eq!(c.offload_timeout_s, 0.0, "offload timeouts must default OFF");
+        assert_eq!(c.hedge_timeout_s, 0.0, "hedging must default OFF");
+        assert_eq!(c.bw_stale_after, 0, "staleness must default OFF");
+        assert_eq!(c.confirm_after, 2);
+        assert_eq!(c.retry_limit, 2);
+        let c = SystemConfig {
+            suspect_after: 3,
+            confirm_after: 1,
+            offload_timeout_s: 4.5,
+            retry_limit: 5,
+            hedge_timeout_s: 2.25,
+            bw_stale_after: 2,
+            ..Default::default()
+        };
+        let c2 = SystemConfig::from_kv(&c.to_kv()).unwrap();
+        assert_eq!(c2.suspect_after, 3);
+        assert_eq!(c2.confirm_after, 1);
+        assert!((c2.offload_timeout_s - 4.5).abs() < 1e-12);
+        assert_eq!(c2.retry_limit, 5);
+        assert!((c2.hedge_timeout_s - 2.25).abs() < 1e-12);
+        assert_eq!(c2.bw_stale_after, 2);
     }
 
     #[test]

@@ -46,6 +46,20 @@ pub struct BandwidthEstimator {
     pub updates: u64,
     /// Rounds that carried no samples (probe failure; no update applied).
     pub failures: u64,
+    /// Length of the current run of failed rounds (reset by any success).
+    /// The EWMA keeps reporting the last estimate with full confidence
+    /// through an arbitrarily long probe outage — this counter is what
+    /// lets callers notice the estimate has gone stale.
+    pub consecutive_failures: u64,
+    /// Consecutive failures after which the estimate counts as stale
+    /// (`0` = never; mirrors `SystemConfig::bw_stale_after`).
+    pub stale_after: u32,
+    /// When the estimate crossed the staleness threshold, if it is
+    /// currently stale.
+    stale_since: Option<SimTime>,
+    /// Accumulated stale time from *completed* stale episodes (µs); the
+    /// open episode, if any, is added by [`Self::stale_us`].
+    stale_us_accum: u64,
 }
 
 impl BandwidthEstimator {
@@ -58,6 +72,10 @@ impl BandwidthEstimator {
             last_attempt: 0,
             updates: 0,
             failures: 0,
+            consecutive_failures: 0,
+            stale_after: cfg.bw_stale_after,
+            stale_since: None,
+            stale_us_accum: 0,
         }
     }
 
@@ -74,11 +92,36 @@ impl BandwidthEstimator {
         self.last_attempt = now;
         let Some(mean) = round.mean_bps() else {
             self.failures += 1;
+            self.consecutive_failures += 1;
+            if self.stale_after > 0
+                && self.consecutive_failures >= u64::from(self.stale_after)
+                && self.stale_since.is_none()
+            {
+                self.stale_since = Some(now);
+            }
             return None;
         };
         self.last_update = now;
         self.updates += 1;
+        self.consecutive_failures = 0;
+        if let Some(since) = self.stale_since.take() {
+            self.stale_us_accum += now.saturating_sub(since);
+        }
         Some(self.ewma.update(mean))
+    }
+
+    /// Whether the estimate is stale at `now`: the staleness knob is on
+    /// and at least `stale_after` consecutive probe rounds have failed
+    /// since the last successful update.
+    pub fn is_stale(&self, now: SimTime) -> bool {
+        self.stale_since.is_some_and(|since| now >= since)
+    }
+
+    /// Total time the estimate has spent stale up to `now` (µs) — closed
+    /// episodes plus the currently-open one, for `bw_stale_us`.
+    pub fn stale_us(&self, now: SimTime) -> u64 {
+        self.stale_us_accum
+            + self.stale_since.map_or(0, |since| now.saturating_sub(since))
     }
 
     /// When the next probe is due: one interval after the last *attempt*
@@ -150,6 +193,38 @@ mod tests {
         assert_eq!(e.next_due(), 90_000_000);
         assert_eq!(e.failures, 1);
         assert_eq!(e.updates, 1);
+    }
+
+    #[test]
+    fn staleness_disabled_by_default() {
+        let mut e = BandwidthEstimator::new(&cfg(), 40e6);
+        for i in 0..10u64 {
+            assert!(e.apply(i * 30_000_000, &ProbeRound { host: 0, samples_bps: vec![] }).is_none());
+        }
+        assert_eq!(e.consecutive_failures, 10);
+        assert!(!e.is_stale(300_000_000), "stale_after 0 must never go stale");
+        assert_eq!(e.stale_us(300_000_000), 0);
+    }
+
+    #[test]
+    fn staleness_crosses_threshold_and_recovers() {
+        let c = SystemConfig { bw_stale_after: 2, ..Default::default() };
+        let mut e = BandwidthEstimator::new(&c, 40e6);
+        let empty = ProbeRound { host: 0, samples_bps: vec![] };
+        assert!(e.apply(30_000_000, &empty).is_none());
+        assert!(!e.is_stale(30_000_000), "one failure is below the threshold");
+        assert!(e.apply(60_000_000, &empty).is_none());
+        assert!(e.is_stale(60_000_000), "second consecutive failure crosses");
+        assert_eq!(e.stale_us(90_000_000), 30_000_000);
+        // A successful round clears staleness and banks the episode.
+        let ok = ProbeRound { host: 0, samples_bps: vec![20e6] };
+        assert!(e.apply(90_000_000, &ok).is_some());
+        assert_eq!(e.consecutive_failures, 0);
+        assert!(!e.is_stale(90_000_000));
+        assert_eq!(e.stale_us(120_000_000), 30_000_000, "episode banked, clock stopped");
+        // The run length restarts from zero after recovery.
+        assert!(e.apply(120_000_000, &empty).is_none());
+        assert!(!e.is_stale(120_000_000));
     }
 
     #[test]

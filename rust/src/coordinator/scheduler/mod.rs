@@ -125,6 +125,27 @@ pub enum SchedEvent<'a> {
     /// low-priority placement dispatches — the energy-aware scheduler
     /// penalises low-battery candidates; others acknowledge for free.
     BatteryLevels { levels: &'a [f64] },
+    /// The failure detector suspects `device` is down (missed-heartbeat
+    /// threshold crossed — see [`crate::fault::detector`]). This is
+    /// *belief*, not truth: the device may be alive (false positive
+    /// under probe loss) or may have been dead for a while (detection
+    /// lag). Schedulers stop placing on it until cleared; existing
+    /// allocations stay (a false suspicion must not lose work — only a
+    /// real `DeviceCrashed`/`DeviceLeft` evicts). Only dispatched when
+    /// the detector is enabled (`suspect_after > 0`).
+    DeviceSuspected { device: DeviceId },
+    /// A heartbeat reached a suspected device: the suspicion was wrong
+    /// (or the device healed). Resume placing on it with its existing
+    /// availability intact — unlike [`SchedEvent::DeviceJoined`],
+    /// nothing is reset.
+    DeviceCleared { device: DeviceId },
+    /// The bandwidth estimate went stale (`bw_stale_after` consecutive
+    /// failed probe rounds): the EWMA still reports its last value with
+    /// full confidence, but it is old. RAS widens its conservative
+    /// windows while stale (cleared by the next successful
+    /// [`SchedEvent::BandwidthUpdate`]); WPS ignores it — its estimate
+    /// was static anyway. Only dispatched when `bw_stale_after > 0`.
+    BandwidthStale,
 }
 
 /// Adapt an owned/contiguous task buffer to the reference-slice shape

@@ -233,6 +233,25 @@ impl Scheduler for MultiScheduler {
                 let b = self.ras.on_event(now, SchedEvent::BatteryLevels { levels });
                 Decision::ack(a.ops + b.ops)
             }
+            SchedEvent::DeviceSuspected { device } => {
+                // Belief, not truth: both inner candidate pools shrink, but
+                // the merged state keeps the device's allocations — the
+                // detector may be wrong and the work may still complete.
+                let a = self.wps.on_device_suspected(device);
+                let b = self.ras.on_device_suspected(device);
+                Decision::ack(a + b)
+            }
+            SchedEvent::DeviceCleared { device } => {
+                let a = self.wps.on_device_cleared(device);
+                let b = self.ras.on_device_cleared(device);
+                Decision::ack(a + b)
+            }
+            SchedEvent::BandwidthStale => {
+                // Only RAS plans with the dynamic estimate; WPS acks free.
+                let a = self.wps.on_event(now, SchedEvent::BandwidthStale);
+                let b = self.ras.on_event(now, SchedEvent::BandwidthStale);
+                Decision::ack(a.ops + b.ops)
+            }
         }
     }
 
@@ -291,6 +310,32 @@ mod tests {
         s.on_complete(1_000, 1);
         s.on_complete(1_000, 2);
         assert!(!s.use_ras());
+    }
+
+    #[test]
+    fn suspicion_fans_to_both_inners_and_crash_still_evicts() {
+        let c = cfg();
+        let mut s = MultiScheduler::new(&c, 0, c.link_bps, 3);
+        let b1 = lp_batch(1, 3, 0, 0, &c);
+        let LpOutcome::Allocated { allocs, .. } = s.schedule_low(0, &task_refs(&b1), false)
+        else {
+            panic!("batch should fit")
+        };
+        let dev = allocs.iter().find(|a| a.offloaded).expect("one offload").device;
+        let d = s.on_event(0, SchedEvent::DeviceSuspected { device: dev });
+        assert!(matches!(d.outcome, Outcome::Ack { .. }));
+        // Belief, not truth: the merged state keeps the allocation.
+        assert!(s.state().device_allocs(dev).next().is_some());
+        // New placements route around the suspected device in both inners.
+        let b2 = lp_batch(11, 3, 0, 0, &c);
+        if let LpOutcome::Allocated { allocs, .. } = s.schedule_low(0, &task_refs(&b2), false) {
+            assert!(allocs.iter().all(|a| a.device != dev));
+        }
+        // A real crash of the suspected device still evicts from merged.
+        let d = s.on_event(0, SchedEvent::DeviceCrashed { device: dev });
+        let Outcome::Ack { evicted } = d.outcome else { panic!("ack expected") };
+        assert_eq!(evicted.len(), 1);
+        assert!(s.state().device_allocs(dev).next().is_none());
     }
 
     #[test]

@@ -14,6 +14,13 @@ use crate::coordinator::task::{Allocation, DeviceId, Task, TaskConfig, TaskId};
 use crate::time::{SimDuration, SimTime};
 use crate::util::Rng;
 
+/// Fraction of the last estimate RAS plans with while the estimate is
+/// stale ([`SchedEvent::BandwidthStale`]): the transfer unit grows by
+/// 1/0.7 ≈ 1.43×, widening every conservative communication window until
+/// a fresh probe round lands. Deliberately milder than a congestion
+/// measurement — staleness is *uncertainty*, not evidence of collapse.
+const STALE_BW_DISCOUNT: f64 = 0.7;
+
 /// The resource-availability abstraction scheduler.
 pub struct RasScheduler {
     cfg: SystemConfig,
@@ -21,6 +28,19 @@ pub struct RasScheduler {
     /// Fleet membership (scenario churn): inactive devices are skipped by
     /// every placement loop and hold no availability.
     active: Vec<bool>,
+    /// Believed-down devices (failure detector, [`SchedEvent::DeviceSuspected`]):
+    /// removed from the candidate pool like inactive devices, but their
+    /// allocations and availability lists stay — a false suspicion must
+    /// not lose work, and a cleared device resumes with its state intact.
+    suspected: Vec<bool>,
+    /// Whether the device was on the closed-form never-written path when
+    /// it was suspended, so clearing restores the cell bookkeeping
+    /// exactly instead of mistaking a written device for a fresh one.
+    suspected_idle: Vec<bool>,
+    /// The bandwidth estimate went stale ([`SchedEvent::BandwidthStale`])
+    /// and has not been refreshed: plan transfers at
+    /// [`STALE_BW_DISCOUNT`] of the last estimate.
+    stale_widen: bool,
     /// Sharded fleet hierarchy: per-cell active/quiescent counts and the
     /// earliest-finish candidate index. Placement descends cell → device
     /// through this instead of scanning every slot; devices whose lists
@@ -68,6 +88,9 @@ impl RasScheduler {
         Self {
             devices: (0..cfg.n_devices).map(|_| DeviceAvailability::new(cfg, now)).collect(),
             active: vec![true; cfg.n_devices],
+            suspected: vec![false; cfg.n_devices],
+            suspected_idle: vec![false; cfg.n_devices],
+            stale_widen: false,
             cells: FleetCells::new(cfg.cell_size, cfg.n_devices),
             last_scan: now,
             link: DiscretisedLink::build(now, unit, cfg.base_buckets, cfg.exp_buckets),
@@ -85,6 +108,19 @@ impl RasScheduler {
 
     fn device_active(&self, d: DeviceId) -> bool {
         d < self.devices.len() && self.active[d]
+    }
+
+    fn device_suspected(&self, d: DeviceId) -> bool {
+        d < self.suspected.len() && self.suspected[d]
+    }
+
+    /// Estimate the placement math plans with: discounted while stale.
+    fn planning_bps(&self) -> f64 {
+        if self.stale_widen {
+            self.bps * STALE_BW_DISCOUNT
+        } else {
+            self.bps
+        }
     }
 
     /// Fresh scatter stream for one placement decision. Seeded from the
@@ -158,8 +194,13 @@ impl RasScheduler {
     }
 
     /// Re-derive a device's earliest-finish index key from its live
-    /// allocations (after a completion, violation, or eviction).
+    /// allocations (after a completion, violation, or eviction). A
+    /// suspended device is not in the cell index (its key was cleared
+    /// with its membership); its key is rebuilt when it is cleared.
     fn refresh_avail_key(&mut self, device: DeviceId) {
+        if !self.cells.device_active(device) {
+            return;
+        }
         match self.state.device_allocs(device).map(|a| a.end).max() {
             Some(end) => self.cells.set_avail_key(device, end),
             None => self.cells.clear_avail_key(device),
@@ -193,7 +234,7 @@ impl RasScheduler {
             // Rebuilt with no residents: indistinguishable from a fresh
             // construct, so the closed-form placement path applies again.
             self.cells.note_idle(device);
-        } else {
+        } else if self.cells.device_active(device) {
             self.cells.note_busy(device);
             let end = allocs.iter().map(|a| a.end).max().unwrap();
             self.cells.set_avail_key(device, end);
@@ -288,7 +329,7 @@ impl RasScheduler {
         // — so decisions are independent of `cell_size` at every scale,
         // and the per-decision stream keeps the regimes' different draw
         // counts from ever diverging their later permutations.
-        let unit = self.cfg.transfer_unit(self.bps);
+        let unit = self.cfg.transfer_unit(self.planning_bps());
         self.last_scan = now;
         let picks = if self.cells.active_total().saturating_sub(1) <= self.cfg.lazy_shuffle_cutover
         {
@@ -696,8 +737,10 @@ impl RasScheduler {
 
     /// A probe round produced a new estimate: rebuild the discretised link
     /// at the new transfer unit. Returns the (non-trivial) rebuild ops.
+    /// A fresh estimate also ends any stale-widening episode.
     pub fn on_bandwidth_update(&mut self, now: SimTime, bps: f64) -> Ops {
         self.bps = bps;
+        self.stale_widen = false;
         let unit = self.cfg.transfer_unit(bps);
         let (fresh, dropped) = self.link.rebuild(now, unit);
         let ops = (self.link.pending() + self.link.buckets.len()) as Ops + fresh.buckets.len() as Ops;
@@ -709,13 +752,18 @@ impl RasScheduler {
 
     /// A device joined the fleet: give it fresh, fully-available lists.
     /// Rejoining a departed slot reactivates it; an index past the current
-    /// fleet grows it (intermediate slots stay inactive).
+    /// fleet grows it (intermediate slots stay inactive). A join (or a
+    /// crash recovery) supersedes any standing suspicion of the slot.
     pub fn on_device_joined(&mut self, now: SimTime, device: DeviceId) -> Ops {
         while self.devices.len() <= device {
             self.devices.push(DeviceAvailability::new(&self.cfg, now));
             self.active.push(false);
+            self.suspected.push(false);
+            self.suspected_idle.push(false);
         }
         self.state.ensure_device(device);
+        self.suspected[device] = false;
+        self.suspected_idle[device] = false;
         if !self.active[device] {
             self.active[device] = true;
             self.devices[device] = DeviceAvailability::new(&self.cfg, now);
@@ -726,10 +774,18 @@ impl RasScheduler {
     }
 
     /// A device left the fleet: evict its live allocations (returned so the
-    /// controller can reschedule them) and drop its availability.
+    /// controller can reschedule them) and drop its availability. A
+    /// *suspected* device is already out of the candidate pool but still
+    /// holds its allocations — a real departure/crash on top of the
+    /// suspicion must still evict them, so suspicion does not short the
+    /// early return.
     pub fn on_device_left(&mut self, now: SimTime, device: DeviceId) -> (Vec<Allocation>, Ops) {
-        if !self.device_active(device) {
+        if !self.device_active(device) && !self.device_suspected(device) {
             return (Vec::new(), 1);
+        }
+        if device < self.suspected.len() {
+            self.suspected[device] = false;
+            self.suspected_idle[device] = false;
         }
         self.active[device] = false;
         self.cells.set_active(device, false);
@@ -741,6 +797,60 @@ impl RasScheduler {
         }
         self.devices[device] = DeviceAvailability::new(&self.cfg, now);
         (evicted, ops)
+    }
+
+    /// The failure detector suspects `device`: pull it from the candidate
+    /// pool (like a departure) but keep its allocations and availability
+    /// lists (unlike one) — if the suspicion is false, nothing was lost.
+    /// Suspicion of an already-departed slot is a no-op: the oracle-level
+    /// eviction already ran.
+    pub fn on_device_suspected(&mut self, device: DeviceId) -> Ops {
+        if !self.device_active(device) || self.device_suspected(device) {
+            return 1;
+        }
+        self.suspected[device] = true;
+        self.suspected_idle[device] = self.cells.device_idle(device);
+        self.active[device] = false;
+        self.cells.set_active(device, false);
+        1
+    }
+
+    /// A heartbeat reached a suspected device: restore it to the
+    /// candidate pool with its availability intact — cell idle/busy and
+    /// earliest-finish bookkeeping are rebuilt from the live state, not
+    /// reset like a join.
+    pub fn on_device_cleared(&mut self, device: DeviceId) -> Ops {
+        if !self.device_suspected(device) {
+            return 1;
+        }
+        self.suspected[device] = false;
+        self.active[device] = true;
+        self.cells.set_active(device, true);
+        if !self.suspected_idle[device] {
+            self.cells.note_busy(device);
+        }
+        self.suspected_idle[device] = false;
+        self.refresh_avail_key(device);
+        1
+    }
+
+    /// The bandwidth estimate went stale: switch to the discounted
+    /// planning estimate and rebuild the link at the wider unit, so both
+    /// processing-window math and communication reservations turn
+    /// conservative until a fresh probe round lands.
+    pub fn on_bandwidth_stale(&mut self, now: SimTime) -> Ops {
+        if self.stale_widen {
+            return 1;
+        }
+        self.stale_widen = true;
+        let unit = self.cfg.transfer_unit(self.planning_bps());
+        let (fresh, dropped) = self.link.rebuild(now, unit);
+        let ops =
+            (self.link.pending() + self.link.buckets.len()) as Ops + fresh.buckets.len() as Ops;
+        self.link = fresh;
+        self.link_rebuilds += 1;
+        self.cascade_dropped += dropped as u64;
+        ops
     }
 }
 
@@ -810,6 +920,11 @@ impl Scheduler for RasScheduler {
                 // acknowledged and ignored.
                 Decision::ack(0)
             }
+            SchedEvent::DeviceSuspected { device } => {
+                Decision::ack(self.on_device_suspected(device))
+            }
+            SchedEvent::DeviceCleared { device } => Decision::ack(self.on_device_cleared(device)),
+            SchedEvent::BandwidthStale => Decision::ack(self.on_bandwidth_stale(now)),
         }
     }
 
@@ -1047,6 +1162,78 @@ mod tests {
         assert_eq!(s.state().len(), 1);
         s.on_complete(alloc.end, 1);
         assert_eq!(s.state().len(), 0);
+    }
+
+    #[test]
+    fn suspicion_removes_candidate_but_keeps_allocations() {
+        let c = cfg();
+        let mut s = RasScheduler::new(&c, 0, c.link_bps);
+        // Place a batch that lands work on device 2 (remote from source 0).
+        let tasks = lp_batch(10, 4, 0, 0, &c);
+        let LpOutcome::Allocated { allocs, .. } = s.schedule_low(0, &task_refs(&tasks), false)
+        else {
+            panic!("idle fleet must place")
+        };
+        // Suspect a remote device that actually holds work.
+        let dev = allocs.iter().map(|a| a.device).find(|&d| d != 0).expect("remote placement");
+        let mine: Vec<TaskId> =
+            allocs.iter().filter(|a| a.device == dev).map(|a| a.task).collect();
+        let before = s.state().len();
+        s.on_device_suspected(dev);
+        // Allocations survive the suspicion...
+        assert_eq!(s.state().len(), before, "suspicion must not evict work");
+        // ...but the device takes no new placements.
+        let more = lp_batch(50, 4, 0, 1_000, &c);
+        if let LpOutcome::Allocated { allocs, .. } =
+            s.schedule_low(1_000, &task_refs(&more), false)
+        {
+            assert!(allocs.iter().all(|a| a.device != dev), "suspected device placed: {allocs:?}");
+        }
+        // Clearing restores it without resetting availability: completing
+        // a pre-suspicion task still resolves against the same state.
+        s.on_device_cleared(dev);
+        for t in mine {
+            s.on_complete(20_000_000, t);
+        }
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn crash_on_suspected_device_still_evicts() {
+        let c = cfg();
+        let mut s = RasScheduler::new(&c, 0, c.link_bps);
+        let tasks = lp_batch(10, 4, 0, 0, &c);
+        let LpOutcome::Allocated { allocs, .. } = s.schedule_low(0, &task_refs(&tasks), false)
+        else {
+            panic!("idle fleet must place")
+        };
+        let dev = allocs.iter().map(|a| a.device).find(|&d| d != 0).expect("remote placement");
+        let held = s.state().device_allocs(dev).count();
+        assert!(held > 0);
+        s.on_device_suspected(dev);
+        // The real crash lands after the suspicion: the eviction must not
+        // be shorted by the device already being out of the pool.
+        let (evicted, _) = s.on_device_left(1_000, dev);
+        assert_eq!(evicted.len(), held, "suspected-then-crashed must still evict");
+        assert_eq!(s.state().device_allocs(dev).count(), 0);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn stale_estimate_widens_planning_and_recovers() {
+        let c = cfg();
+        let mut s = RasScheduler::new(&c, 0, c.link_bps);
+        let unit_fresh = s.link().unit;
+        let ops = s.on_bandwidth_stale(1_000);
+        assert!(ops > 0);
+        assert!(s.link().unit > unit_fresh, "stale widening must grow the transfer unit");
+        assert_eq!(s.link_rebuilds, 1);
+        assert_eq!(s.on_bandwidth_stale(2_000), 1, "already stale: no second rebuild");
+        // A fresh estimate at the original bandwidth restores the unit.
+        s.on_bandwidth_update(3_000, c.link_bps);
+        assert_eq!(s.link().unit, unit_fresh);
+        assert_eq!(s.bandwidth_estimate(), c.link_bps);
+        s.check_invariants().unwrap();
     }
 
     #[test]

@@ -60,6 +60,11 @@ pub struct WpsScheduler {
     /// Fleet membership (scenario churn): inactive devices are skipped by
     /// the exhaustive search.
     active: Vec<bool>,
+    /// Detector belief (PR 8): devices the failure detector suspects are
+    /// down. Suspected devices leave the candidate pool like crashed ones,
+    /// but their exact state stays — the belief may be wrong, and in-flight
+    /// allocations can still complete.
+    suspected: Vec<bool>,
     /// Sharded fleet hierarchy. For WPS "idle" means *zero live
     /// allocations*: every idle remote device produces the same candidate
     /// start, the same operation count, and (under the latency score) the
@@ -87,6 +92,7 @@ impl WpsScheduler {
             cfg: cfg.clone(),
             state: WorkloadState::new(cfg.n_devices),
             active: vec![true; cfg.n_devices],
+            suspected: vec![false; cfg.n_devices],
             cells: FleetCells::new(cfg.cell_size, cfg.n_devices),
             comms: Vec::new(),
             bps: baseline_bps,
@@ -109,6 +115,10 @@ impl WpsScheduler {
 
     fn device_active(&self, d: DeviceId) -> bool {
         d < self.active.len() && self.active[d]
+    }
+
+    fn device_suspected(&self, d: DeviceId) -> bool {
+        d < self.suspected.len() && self.suspected[d]
     }
 
     /// Transfer duration for `task`'s actual input at the static
@@ -253,7 +263,7 @@ impl WpsScheduler {
     /// leaves the idle (uniform-answer) pool and its earliest-finish index
     /// key grows to cover the new allocation.
     fn note_insert(&mut self, a: &Allocation) {
-        if a.device < self.active.len() {
+        if a.device < self.active.len() && self.cells.device_active(a.device) {
             self.cells.note_busy(a.device);
             let key = self.cells.avail_key(a.device).map_or(a.end, |k| k.max(a.end));
             self.cells.set_avail_key(a.device, key);
@@ -263,7 +273,9 @@ impl WpsScheduler {
     /// Cell bookkeeping after an allocation left `device`: back to the
     /// idle pool when nothing remains, re-keyed otherwise.
     fn note_removed(&mut self, device: DeviceId) {
-        if device >= self.active.len() {
+        // Suspended (believed-down) devices are out of the cell index;
+        // their keys rebuild wholesale when the suspicion clears.
+        if device >= self.active.len() || !self.cells.device_active(device) {
             return;
         }
         match self.state.device_allocs(device).map(|a| a.end).max() {
@@ -570,8 +582,10 @@ impl WpsScheduler {
     pub fn on_device_joined(&mut self, _now: SimTime, device: DeviceId) -> Ops {
         while self.active.len() <= device {
             self.active.push(false);
+            self.suspected.push(false);
         }
         self.state.ensure_device(device);
+        self.suspected[device] = false;
         self.active[device] = true;
         self.cells.set_active(device, true);
         1
@@ -580,11 +594,18 @@ impl WpsScheduler {
     /// A device left the fleet: evict its live allocations (returned so
     /// the controller can reschedule them) and release their link slots.
     pub fn on_device_left(&mut self, _now: SimTime, device: DeviceId) -> (Vec<Allocation>, Ops) {
-        if !self.device_active(device) {
+        if !self.device_active(device) && !self.device_suspected(device) {
             return (Vec::new(), 1);
         }
-        self.active[device] = false;
-        self.cells.set_active(device, false);
+        if self.device_suspected(device) {
+            // The suspicion was right (or churn beat the heartbeat): the
+            // device already left the candidate pool — only the eviction
+            // of its still-tracked allocations remains.
+            self.suspected[device] = false;
+        } else {
+            self.active[device] = false;
+            self.cells.set_active(device, false);
+        }
         let evicted = self.state.evict_device(device);
         let mut ops: Ops = 1;
         for a in &evicted {
@@ -592,6 +613,37 @@ impl WpsScheduler {
             ops += 2;
         }
         (evicted, ops)
+    }
+
+    /// The failure detector suspects `device` is down. Belief, not truth:
+    /// the device leaves the candidate pool (no new placements) but its
+    /// exact state — allocations and comm windows — stands, because the
+    /// work may well still complete.
+    pub fn on_device_suspected(&mut self, device: DeviceId) -> Ops {
+        if !self.device_active(device) || self.device_suspected(device) {
+            return 1;
+        }
+        self.suspected[device] = true;
+        self.active[device] = false;
+        self.cells.set_active(device, false);
+        1
+    }
+
+    /// A heartbeat cleared the suspicion: restore the device to the
+    /// candidate pool and rebuild its cell key from the exact state (it
+    /// may have finished — or accumulated — work while believed down).
+    pub fn on_device_cleared(&mut self, device: DeviceId) -> Ops {
+        if !self.device_suspected(device) {
+            return 1;
+        }
+        self.suspected[device] = false;
+        self.active[device] = true;
+        self.cells.set_active(device, true);
+        if let Some(end) = self.state.device_allocs(device).map(|a| a.end).max() {
+            self.cells.note_busy(device);
+            self.cells.set_avail_key(device, end);
+        }
+        1
     }
 }
 
@@ -661,6 +713,16 @@ impl Scheduler for WpsScheduler {
                 self.levels.extend_from_slice(levels);
                 Decision::ack(0)
             }
+            SchedEvent::DeviceSuspected { device } => {
+                Decision::ack(self.on_device_suspected(device))
+            }
+            SchedEvent::DeviceCleared { device } => {
+                Decision::ack(self.on_device_cleared(device))
+            }
+            // WPS predates the dynamic bandwidth mechanism: a stale
+            // estimator changes nothing for a scheduler that never
+            // believed the estimator in the first place.
+            SchedEvent::BandwidthStale => Decision::ack(0),
         }
     }
 
@@ -875,6 +937,57 @@ mod tests {
         let mut s = WpsScheduler::new(&c, 0, c.link_bps);
         assert_eq!(s.on_bandwidth_update(0, 1.0), 0);
         assert_eq!(s.bandwidth_estimate(), c.link_bps);
+    }
+
+    #[test]
+    fn suspicion_excludes_candidate_but_keeps_allocations() {
+        let c = cfg();
+        let mut s = WpsScheduler::new(&c, 0, c.link_bps);
+        let tasks = lp_batch(1, 3, 2, 0, &c);
+        let allocs = match s.schedule_low(0, &task_refs(&tasks), false) {
+            LpOutcome::Allocated { allocs, .. } => allocs,
+            other => panic!("{other:?}"),
+        };
+        let off = *allocs.iter().find(|a| a.offloaded).expect("one offload");
+        let dev = off.device;
+        assert_eq!(s.on_device_suspected(dev), 1);
+        assert_eq!(s.on_device_suspected(dev), 1, "idempotent");
+        // Exact state untouched: the in-flight allocation still holds cores.
+        let (peak, _) = s.state().peak_usage(dev, off.start, off.end);
+        assert!(peak > 0, "suspicion must not evict");
+        // New work routes around the believed-down device.
+        let more = lp_batch(11, 3, 2, 0, &c);
+        if let LpOutcome::Allocated { allocs, .. } = s.schedule_low(0, &task_refs(&more), false) {
+            assert!(allocs.iter().all(|a| a.device != dev), "suspected device got work");
+        }
+        // Clearing restores the device; completion then reclaims normally.
+        assert_eq!(s.on_device_cleared(dev), 1);
+        s.on_complete(off.end, off.task);
+        let (peak, _) = s.state().peak_usage(dev, off.start, off.end);
+        assert_eq!(peak, 0);
+    }
+
+    #[test]
+    fn crash_on_suspected_device_still_evicts() {
+        let c = cfg();
+        let mut s = WpsScheduler::new(&c, 0, c.link_bps);
+        let tasks = lp_batch(1, 3, 2, 0, &c);
+        let allocs = match s.schedule_low(0, &task_refs(&tasks), false) {
+            LpOutcome::Allocated { allocs, .. } => allocs,
+            other => panic!("{other:?}"),
+        };
+        let off = *allocs.iter().find(|a| a.offloaded).expect("one offload");
+        s.on_device_suspected(off.device);
+        // The suspicion was right: the crash notice must still evict even
+        // though the candidate-pool flags already show the device as gone.
+        let (evicted, _) = s.on_device_left(0, off.device);
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(evicted[0].task, off.task);
+        let (peak, _) = s.state().peak_usage(off.device, off.start, off.end);
+        assert_eq!(peak, 0);
+        // Already handled: a second notice is a cheap no-op.
+        let (again, _) = s.on_device_left(0, off.device);
+        assert!(again.is_empty());
     }
 
     #[test]

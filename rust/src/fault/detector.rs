@@ -1,0 +1,172 @@
+//! Heartbeat/suspicion failure detection (imperfect availability belief).
+//!
+//! The baseline engine tells schedulers about crashes through an oracle:
+//! `DeviceCrashed` arrives the instant the device dies. Real controllers
+//! only *infer* liveness — here, from the bandwidth probe rounds the
+//! controller already runs. Every round that reaches a device is a
+//! heartbeat; every round that cannot (device crashed, partitioned, or
+//! the whole round lost to probe loss) is a miss. After
+//! `suspect_after` consecutive misses the device is [`Belief::Suspected`]
+//! and schedulers receive
+//! [`crate::coordinator::scheduler::SchedEvent::DeviceSuspected`]; after
+//! `confirm_after` further misses it is [`Belief::Confirmed`]
+//! (diagnostic only — placement already routed around the suspicion).
+//! A later heartbeat clears the device
+//! ([`crate::coordinator::scheduler::SchedEvent::DeviceCleared`]).
+//!
+//! Detection latency is therefore `suspect_after × bandwidth_interval`
+//! in the best case, and fully-lost probe rounds make *every* device
+//! miss at once — the seed-deterministic false-positive mechanism: under
+//! heavy probe loss the controller suspects healthy devices, exactly the
+//! stale-knowledge failure mode the paper's contended-medium experiments
+//! (Figs. 6–8) exhibit.
+//!
+//! The detector itself is pure bookkeeping: no RNG, no clock, no truth.
+//! The engine feeds it observations and owns truth-vs-belief accounting
+//! (`false_suspicions`, `detection_lag_us`).
+
+use crate::coordinator::task::DeviceId;
+
+/// Controller belief about one device's liveness.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Belief {
+    /// Heartbeats arriving normally (or never observed yet).
+    #[default]
+    Alive,
+    /// `suspect_after` consecutive misses: schedulers place around it.
+    Suspected,
+    /// `confirm_after` further misses: written off until a heartbeat.
+    Confirmed,
+}
+
+/// Per-device missed-heartbeat counters and the resulting beliefs.
+#[derive(Debug, Clone)]
+pub struct SuspicionDetector {
+    suspect_after: u32,
+    confirm_threshold: u32,
+    missed: Vec<u32>,
+    belief: Vec<Belief>,
+}
+
+impl SuspicionDetector {
+    /// `suspect_after` misses ⇒ `Suspected`; `confirm_after.max(1)` more
+    /// ⇒ `Confirmed`. `suspect_after == 0` builds an inert detector that
+    /// never transitions (the engine additionally gates all feeding on
+    /// the knob, so a disabled run does no work here at all).
+    pub fn new(n_devices: usize, suspect_after: u32, confirm_after: u32) -> Self {
+        Self {
+            suspect_after,
+            confirm_threshold: suspect_after.saturating_add(confirm_after.max(1)),
+            missed: vec![0; n_devices],
+            belief: vec![Belief::Alive; n_devices],
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.suspect_after > 0
+    }
+
+    pub fn belief(&self, device: DeviceId) -> Belief {
+        self.belief.get(device).copied().unwrap_or_default()
+    }
+
+    /// Suspected or Confirmed — the controller is placing around it.
+    pub fn is_suspected(&self, device: DeviceId) -> bool {
+        self.belief(device) != Belief::Alive
+    }
+
+    /// A probe round reached `device`: reset its miss count. Returns
+    /// `true` if the device was Suspected/Confirmed and is now cleared
+    /// (the caller emits `DeviceCleared`).
+    pub fn heartbeat(&mut self, device: DeviceId) -> bool {
+        if device >= self.missed.len() {
+            return false;
+        }
+        self.missed[device] = 0;
+        if self.belief[device] != Belief::Alive {
+            self.belief[device] = Belief::Alive;
+            return true;
+        }
+        false
+    }
+
+    /// A probe round failed to reach `device`. Returns the new belief on
+    /// a transition (`Alive → Suspected` or `Suspected → Confirmed`),
+    /// `None` otherwise.
+    pub fn miss(&mut self, device: DeviceId) -> Option<Belief> {
+        if !self.enabled() || device >= self.missed.len() {
+            return None;
+        }
+        self.missed[device] = self.missed[device].saturating_add(1);
+        let missed = self.missed[device];
+        match self.belief[device] {
+            Belief::Alive if missed >= self.suspect_after => {
+                self.belief[device] = Belief::Suspected;
+                Some(Belief::Suspected)
+            }
+            Belief::Suspected if missed >= self.confirm_threshold => {
+                self.belief[device] = Belief::Confirmed;
+                Some(Belief::Confirmed)
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suspects_after_threshold_and_confirms_later() {
+        let mut d = SuspicionDetector::new(2, 2, 2);
+        assert!(d.enabled());
+        assert_eq!(d.miss(0), None, "first miss is below the threshold");
+        assert_eq!(d.miss(0), Some(Belief::Suspected));
+        assert!(d.is_suspected(0));
+        assert!(!d.is_suspected(1), "per-device state");
+        assert_eq!(d.miss(0), None, "between suspect and confirm");
+        assert_eq!(d.miss(0), Some(Belief::Confirmed));
+        assert_eq!(d.belief(0), Belief::Confirmed);
+        assert_eq!(d.miss(0), None, "already confirmed: no more transitions");
+    }
+
+    #[test]
+    fn heartbeat_clears_and_resets_the_count() {
+        let mut d = SuspicionDetector::new(1, 2, 1);
+        assert!(!d.heartbeat(0), "clearing an alive device reports nothing");
+        d.miss(0);
+        assert!(!d.heartbeat(0), "below threshold: nothing to clear");
+        d.miss(0);
+        assert_eq!(d.miss(0), Some(Belief::Suspected));
+        assert!(d.heartbeat(0), "suspected device clears on heartbeat");
+        assert_eq!(d.belief(0), Belief::Alive);
+        // The count restarted: one miss is not enough again.
+        assert_eq!(d.miss(0), None);
+    }
+
+    #[test]
+    fn zero_suspect_after_is_inert() {
+        let mut d = SuspicionDetector::new(1, 0, 2);
+        assert!(!d.enabled());
+        for _ in 0..100 {
+            assert_eq!(d.miss(0), None);
+        }
+        assert_eq!(d.belief(0), Belief::Alive);
+    }
+
+    #[test]
+    fn confirm_after_zero_still_leaves_a_suspected_step() {
+        let mut d = SuspicionDetector::new(1, 1, 0);
+        assert_eq!(d.miss(0), Some(Belief::Suspected));
+        assert_eq!(d.miss(0), Some(Belief::Confirmed), "confirm_after 0 acts as 1");
+    }
+
+    #[test]
+    fn out_of_range_devices_are_ignored() {
+        let mut d = SuspicionDetector::new(2, 1, 1);
+        assert_eq!(d.miss(7), None);
+        assert!(!d.heartbeat(7));
+        assert_eq!(d.belief(7), Belief::Alive);
+    }
+}

@@ -28,6 +28,8 @@
 //! never from ambient randomness — the same scenario produces the same
 //! fault trace, run after run and thread count after thread count.
 
+pub mod detector;
+
 use crate::coordinator::task::DeviceId;
 use crate::sim::engine::RunExtras;
 use crate::time::{secs, SimTime};
@@ -41,6 +43,10 @@ pub const MAX_LOSS_RATE: f64 = 0.95;
 /// RNG domain tag for the random-fault generator ("FLT").
 const FAULT_SEED_TAG: u64 = 0x46_4c54;
 
+/// RNG domain tag for the random-partition generator ("PRT") — a
+/// separate stream so adding partitions never perturbs the crash trace.
+const PARTITION_SEED_TAG: u64 = 0x50_5254;
+
 /// A fluent fault specification for one scenario run.
 ///
 /// Compose with the builder methods and attach via
@@ -52,6 +58,11 @@ pub struct FaultPlan {
     /// Explicit fault schedule: (time, device, recover?). `false` is a
     /// crash, `true` a recovery.
     pub crashes: Vec<(SimTime, DeviceId, bool)>,
+    /// Explicit partition schedule: (time, device, heal?). `false` cuts
+    /// the device off the medium (unreachable-but-alive: flows stall,
+    /// in-progress compute finishes but results are held until heal),
+    /// `true` heals it. Distinct from a crash — nothing is lost.
+    pub partitions: Vec<(SimTime, DeviceId, bool)>,
     /// Per-packet loss probability on task transfers, in
     /// `[0, MAX_LOSS_RATE]`.
     pub loss_rate: f64,
@@ -62,6 +73,10 @@ pub struct FaultPlan {
     /// mean time to recovery), seconds. Expanded at compile time from the
     /// scenario seed.
     pub random: Option<(f64, f64)>,
+    /// Random partition/heal generator: (mean time between partitions,
+    /// mean time to heal), seconds. Expanded from its own seed stream so
+    /// it composes with `random` without perturbing the crash trace.
+    pub random_partitions: Option<(f64, f64)>,
 }
 
 impl FaultPlan {
@@ -72,7 +87,9 @@ impl FaultPlan {
     /// No faults of any kind (the default plan compiles to a no-op).
     pub fn is_empty(&self) -> bool {
         self.crashes.is_empty()
+            && self.partitions.is_empty()
             && self.random.is_none()
+            && self.random_partitions.is_none()
             && self.loss_rate == 0.0
             && self.probe_loss == 0.0
     }
@@ -88,6 +105,22 @@ impl FaultPlan {
     /// availability (everything it was running died with the crash).
     pub fn recover_at(mut self, at_s: f64, device: DeviceId) -> Self {
         self.crashes.push((secs(at_s), device, true));
+        self
+    }
+
+    /// Device `device` becomes unreachable at `at_s` seconds: its flows
+    /// stall on the medium (captured, not aborted) and any results it
+    /// computes are held undeliverable until the partition heals.
+    pub fn partition_at(mut self, at_s: f64, device: DeviceId) -> Self {
+        self.partitions.push((secs(at_s), device, false));
+        self
+    }
+
+    /// Device `device`'s partition heals at `at_s` seconds: stalled
+    /// flows resume from their captured progress and held results are
+    /// delivered (subject to their original deadlines).
+    pub fn heal_at(mut self, at_s: f64, device: DeviceId) -> Self {
+        self.partitions.push((secs(at_s), device, true));
         self
     }
 
@@ -114,38 +147,126 @@ impl FaultPlan {
         self
     }
 
+    /// Seed-deterministic random partition/heal process, analogous to
+    /// [`Self::random_faults`] but on its own RNG stream: every device
+    /// independently alternates exponential reachable times (mean
+    /// `mtbp_s`) and partitioned times (mean `mtth_s`).
+    pub fn random_partitions(mut self, mtbp_s: f64, mtth_s: f64) -> Self {
+        self.random_partitions = Some((mtbp_s.max(1.0), mtth_s.max(0.1)));
+        self
+    }
+
     /// Concrete crash/recover schedule for a fleet of `n_devices` over
     /// `horizon_s` seconds: explicit entries plus the expanded random
     /// process (seeded from `seed` — same seed, same fault trace).
     pub fn schedule(&self, seed: u64, n_devices: usize, horizon_s: f64) -> Vec<(SimTime, DeviceId, bool)> {
         let mut out = self.crashes.clone();
         if let Some((mtbf_s, mttr_s)) = self.random {
-            let mut rng = Rng::seed_from_u64(seed ^ FAULT_SEED_TAG);
-            for device in 0..n_devices {
-                let mut t = exp_sample(&mut rng, mtbf_s);
-                while t < horizon_s {
-                    out.push((secs(t), device, false));
-                    let down = exp_sample(&mut rng, mttr_s);
-                    if t + down >= horizon_s {
-                        break; // stays down past the end of input
-                    }
-                    t += down;
-                    out.push((secs(t), device, true));
-                    t += exp_sample(&mut rng, mtbf_s);
-                }
-            }
+            expand_random(&mut out, seed ^ FAULT_SEED_TAG, n_devices, horizon_s, mtbf_s, mttr_s);
         }
         // Stable order: time, then device, crashes before recoveries.
         out.sort_unstable();
         out
     }
 
-    /// Compile into the engine-level knobs: the concrete fault schedule
-    /// plus the medium loss rates.
-    pub fn compile_into(&self, extras: &mut RunExtras, seed: u64, n_devices: usize, horizon_s: f64) {
+    /// Concrete partition/heal schedule, analogous to [`Self::schedule`]
+    /// but expanded from the partition seed stream.
+    pub fn partition_schedule(
+        &self,
+        seed: u64,
+        n_devices: usize,
+        horizon_s: f64,
+    ) -> Vec<(SimTime, DeviceId, bool)> {
+        let mut out = self.partitions.clone();
+        if let Some((mtbp_s, mtth_s)) = self.random_partitions {
+            expand_random(&mut out, seed ^ PARTITION_SEED_TAG, n_devices, horizon_s, mtbp_s, mtth_s);
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Reject malformed *explicit* schedules before they compile: device
+    /// IDs past the fleet, and double-crash/double-recover (or
+    /// double-partition/double-heal) sequences — a recover without a
+    /// preceding crash, or a second crash of an already-down device,
+    /// would be silently absorbed by the engine's runtime guards and the
+    /// scenario would not mean what it says. Random generators alternate
+    /// by construction and are not re-checked here.
+    pub fn validate(&self, n_devices: usize) -> anyhow::Result<()> {
+        for (what, down_word, up_word, list) in [
+            ("crash schedule", "crash", "recover", &self.crashes),
+            ("partition schedule", "partition", "heal", &self.partitions),
+        ] {
+            let mut sorted = list.clone();
+            sorted.sort_unstable();
+            let mut down = vec![false; n_devices];
+            for &(t, device, up) in &sorted {
+                if device >= n_devices {
+                    anyhow::bail!(
+                        "fault plan {what}: device {device} at {t} µs is out of range \
+                         (fleet has {n_devices} devices)"
+                    );
+                }
+                if up && !down[device] {
+                    anyhow::bail!(
+                        "fault plan {what}: {up_word} of device {device} at {t} µs \
+                         without a preceding {down_word}"
+                    );
+                }
+                if !up && down[device] {
+                    anyhow::bail!(
+                        "fault plan {what}: double {down_word} of device {device} at {t} µs \
+                         (already down)"
+                    );
+                }
+                down[device] = !up;
+            }
+        }
+        Ok(())
+    }
+
+    /// Compile into the engine-level knobs: the concrete fault and
+    /// partition schedules plus the medium loss rates. Fails if the
+    /// explicit schedules are malformed (see [`Self::validate`]).
+    pub fn compile_into(
+        &self,
+        extras: &mut RunExtras,
+        seed: u64,
+        n_devices: usize,
+        horizon_s: f64,
+    ) -> anyhow::Result<()> {
+        self.validate(n_devices)?;
         extras.faults = self.schedule(seed, n_devices, horizon_s);
+        extras.partitions = self.partition_schedule(seed, n_devices, horizon_s);
         extras.loss_rate = self.loss_rate;
         extras.probe_loss = self.probe_loss;
+        Ok(())
+    }
+}
+
+/// Expand one alternating exponential down/up process per device into
+/// `out`, from its own seeded stream.
+fn expand_random(
+    out: &mut Vec<(SimTime, DeviceId, bool)>,
+    stream_seed: u64,
+    n_devices: usize,
+    horizon_s: f64,
+    mean_up_s: f64,
+    mean_down_s: f64,
+) {
+    let mut rng = Rng::seed_from_u64(stream_seed);
+    for device in 0..n_devices {
+        let mut t = exp_sample(&mut rng, mean_up_s);
+        while t < horizon_s {
+            out.push((secs(t), device, false));
+            let down = exp_sample(&mut rng, mean_down_s);
+            if t + down >= horizon_s {
+                break; // stays down past the end of input
+            }
+            t += down;
+            out.push((secs(t), device, true));
+            t += exp_sample(&mut rng, mean_up_s);
+        }
     }
 }
 
@@ -163,10 +284,83 @@ mod tests {
         let mut extras = RunExtras::default();
         let plan = FaultPlan::new();
         assert!(plan.is_empty());
-        plan.compile_into(&mut extras, 42, 4, 600.0);
+        plan.compile_into(&mut extras, 42, 4, 600.0).unwrap();
         assert!(extras.faults.is_empty());
+        assert!(extras.partitions.is_empty());
         assert_eq!(extras.loss_rate, 0.0);
         assert_eq!(extras.probe_loss, 0.0);
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_devices() {
+        let plan = FaultPlan::new().crash_at(10.0, 4);
+        assert!(plan.validate(4).is_err(), "device 4 in a 4-device fleet");
+        assert!(plan.validate(5).is_ok());
+        let plan = FaultPlan::new().partition_at(10.0, 9);
+        assert!(plan.validate(4).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_double_crash_and_orphan_recover() {
+        let double = FaultPlan::new().crash_at(10.0, 1).crash_at(20.0, 1);
+        assert!(double.validate(4).is_err(), "double crash without recover");
+        let orphan = FaultPlan::new().recover_at(10.0, 1);
+        assert!(orphan.validate(4).is_err(), "recover without crash");
+        let double_rec =
+            FaultPlan::new().crash_at(5.0, 1).recover_at(10.0, 1).recover_at(15.0, 1);
+        assert!(double_rec.validate(4).is_err(), "double recover");
+        let ok = FaultPlan::new()
+            .crash_at(5.0, 1)
+            .recover_at(10.0, 1)
+            .crash_at(15.0, 1)
+            .partition_at(3.0, 0)
+            .heal_at(8.0, 0);
+        assert!(ok.validate(4).is_ok(), "alternating sequences are fine");
+        // Order of builder calls must not matter: validation sorts.
+        let unordered = FaultPlan::new().recover_at(10.0, 1).crash_at(5.0, 1);
+        assert!(unordered.validate(4).is_ok());
+        // Crash and partition streams are independent: partitioning a
+        // crashed device is a legal (if cruel) scenario.
+        let mixed = FaultPlan::new().crash_at(5.0, 2).partition_at(6.0, 2);
+        assert!(mixed.validate(4).is_ok());
+        // compile_into surfaces the failure.
+        let mut extras = RunExtras::default();
+        assert!(double.compile_into(&mut extras, 42, 4, 600.0).is_err());
+    }
+
+    #[test]
+    fn partition_schedule_is_ordered_and_separate_from_crashes() {
+        let plan = FaultPlan::new()
+            .crash_at(50.0, 0)
+            .heal_at(200.0, 1)
+            .partition_at(100.0, 1);
+        let crashes = plan.schedule(7, 4, 600.0);
+        let parts = plan.partition_schedule(7, 4, 600.0);
+        assert_eq!(crashes, vec![(secs(50.0), 0, false)]);
+        assert_eq!(parts, vec![(secs(100.0), 1, false), (secs(200.0), 1, true)]);
+    }
+
+    #[test]
+    fn random_partitions_are_seed_deterministic_and_independent() {
+        let plan = FaultPlan::new().random_faults(120.0, 30.0).random_partitions(150.0, 40.0);
+        let a = plan.partition_schedule(42, 4, 1800.0);
+        let b = plan.partition_schedule(42, 4, 1800.0);
+        assert_eq!(a, b, "same seed must give the same partition trace");
+        assert!(!a.is_empty());
+        // Adding partitions must not perturb the crash trace (separate
+        // RNG streams).
+        let crashes_with = plan.schedule(42, 4, 1800.0);
+        let crashes_without =
+            FaultPlan::new().random_faults(120.0, 30.0).schedule(42, 4, 1800.0);
+        assert_eq!(crashes_with, crashes_without);
+        // And the partition stream alternates per device.
+        for d in 0..4usize {
+            let mine: Vec<bool> =
+                a.iter().filter(|&&(_, dev, _)| dev == d).map(|&(_, _, h)| h).collect();
+            for (i, &heal) in mine.iter().enumerate() {
+                assert_eq!(heal, i % 2 == 1, "device {d} must alternate: {mine:?}");
+            }
+        }
     }
 
     #[test]

@@ -65,6 +65,15 @@ COMMANDS:
            --scheds wps,ras,energy  --battery J  --power PROFILE
            --wan BPS  --rtt MS  --threads N  --json PATH
            PROFILE: pi2b | zero | IDLE:HP:TWO:FOUR:TX:RX (watts)
+  chaos    Seeded fault-campaign runner: randomized crash/partition/
+           packet-loss/probe-loss schedules with every robustness knob on
+           (failure detector, offload timeout + retry, hedging, bandwidth
+           staleness), swept across seeds × schedulers (wps, ras, multi)
+           and hard-checked against the conservation invariants (no task
+           leaked, lost, or double-credited). Nonzero exit on the first
+           violated invariant.
+           --seeds N (schedules per scheduler, default 50)
+           --quick (10 seeds, the CI smoke campaign)  --json PATH
   bench    Hot-path micro/macro benchmark suite (slab vs hashmap,
            incremental vs rescanning medium, engine event rate,
            steady-state allocs/event, end-to-end sweep):
@@ -86,6 +95,7 @@ OPTIONS:
   --procs L     loadgen: comma list of arrival-process specs
   --depths L    accuracy: comma list of ladder depths 1..3 (default 1,2,3)
   --cap N       loadgen: admission cap on in-flight tasks (default 0 = open)
+  --seeds N     chaos: randomized schedules per scheduler (default 50)
   --grid G      energy: which grid(s) to run (battery | burst | diurnal | all)
   --battery J   energy: per-device battery capacity in joules (default 2000)
   --power P     energy: power profile (pi2b | zero | IDLE:HP:TWO:FOUR:TX:RX)
@@ -115,6 +125,7 @@ struct Args {
     procs: Option<String>,
     depths: Option<String>,
     cap: usize,
+    seeds: Option<usize>,
     /// `medge energy` flags, parsed strictly at dispatch time (the
     /// raw strings are kept here so a bad value errors with the full
     /// flag context, never panics).
@@ -148,6 +159,7 @@ fn parse_args() -> anyhow::Result<Args> {
         procs: None,
         depths: None,
         cap: 0,
+        seeds: None,
         grid: "all".to_string(),
         battery: None,
         power: None,
@@ -181,6 +193,7 @@ fn parse_args() -> anyhow::Result<Args> {
             "--procs" => args.procs = Some(value(&mut it, "--procs")?),
             "--depths" => args.depths = Some(value(&mut it, "--depths")?),
             "--cap" => args.cap = value(&mut it, "--cap")?.parse()?,
+            "--seeds" => args.seeds = Some(value(&mut it, "--seeds")?.parse()?),
             "--grid" => args.grid = value(&mut it, "--grid")?,
             "--battery" => args.battery = Some(value(&mut it, "--battery")?),
             "--power" => args.power = Some(value(&mut it, "--power")?),
@@ -572,6 +585,32 @@ fn main() -> anyhow::Result<()> {
                 std::fs::write(path, report::json_rows(&runs))?;
                 println!("\nwrote {} JSON rows to {}", runs.len(), path.display());
             }
+        }
+        "chaos" => {
+            anyhow::ensure!(
+                !(args.json_flag && args.json.is_none()),
+                "chaos --json needs a PATH"
+            );
+            let seeds = args.seeds.unwrap_or(if args.quick {
+                experiments::CHAOS_QUICK_SEEDS
+            } else {
+                experiments::CHAOS_SEEDS
+            });
+            anyhow::ensure!(seeds >= 1, "--seeds needs at least 1 schedule");
+            eprintln!(
+                "chaos: {seeds} schedules × {} schedulers × {minutes:.1} simulated minutes",
+                experiments::CHAOS_KINDS.len()
+            );
+            // Aborts with a seed-labelled error (nonzero exit) on the
+            // first violated conservation invariant.
+            let runs = experiments::chaos_campaign(&cfg, seeds, minutes)?;
+            print!("{}", report::robustness(&runs));
+            print!("{}", report::faults(&runs));
+            if let Some(path) = &args.json {
+                std::fs::write(path, report::json_rows(&runs))?;
+                println!("\nwrote {} JSON rows to {}", runs.len(), path.display());
+            }
+            println!("\nchaos: {} runs, every invariant held", runs.len());
         }
         "trace" => {
             let out = args.out.ok_or_else(|| anyhow::anyhow!("trace needs --out PATH"))?;

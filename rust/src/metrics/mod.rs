@@ -269,6 +269,47 @@ pub struct Metrics {
     pub cloud_offloads: u64,
     /// Cloud placements that delivered within their deadline.
     pub cloud_completions: u64,
+
+    // ---- robustness layer (PR 8; all zero with the detector, timeout,
+    // hedge, partition, and staleness knobs off) ----
+    /// Offload-timeout reallocation attempts (bounded exponential-backoff
+    /// retry; also counted in `lp_realloc_attempts`).
+    pub retries: u64,
+    /// Hedged duplicate placements launched for deadline-pressed tasks.
+    pub hedges_launched: u64,
+    /// Hedges whose duplicate finished first (the hedge paid off).
+    pub hedges_won: u64,
+    /// Hedges whose primary finished first (duplicate work discarded).
+    pub hedges_wasted: u64,
+    /// `DeviceSuspected` events whose device was actually alive and
+    /// reachable at suspicion time (probe loss fooled the detector).
+    pub false_suspicions: u64,
+    /// `DeviceSuspected` events dispatched to the scheduler.
+    pub devices_suspected: u64,
+    /// `DeviceCleared` events dispatched (heartbeat ended a suspicion).
+    pub devices_cleared: u64,
+    /// Truth-to-belief lag for *correct* suspicions: device actually
+    /// down (crash/partition) → detector suspects it.
+    pub lat_detection: LatencyStat,
+    /// Partition fault events started (device unreachable but alive).
+    pub partitions_started: u64,
+    /// Partitions healed (stalled flows resume, held results deliver).
+    pub partitions_healed: u64,
+    /// In-flight transfers stalled by a partition (resume on heal).
+    pub partition_stalled_flows: u64,
+    /// Finished computations whose result was undeliverable across a
+    /// partition and was held until heal (or lost to crash/run end).
+    pub partition_held_results: u64,
+    /// Low-priority tasks lost without completing or violating: rejected
+    /// (re)placements, crash/churn eviction failures, orphaned transfers,
+    /// dropped re-offers, exhausted retries, and partition-held work the
+    /// run ended on. Closes the conservation identity `lp_generated ==
+    /// lp_completed_total + lp_violations + lp_lost`, which `medge chaos`
+    /// hard-asserts on every run.
+    pub lp_lost: u64,
+    /// Virtual µs the bandwidth estimator spent stale (consecutive probe
+    /// failures ≥ `bw_stale_after`); 0 with the knob off.
+    pub bw_stale_us: u64,
 }
 
 impl Metrics {

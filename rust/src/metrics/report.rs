@@ -185,6 +185,41 @@ pub fn faults(runs: &[Metrics]) -> String {
     s
 }
 
+/// Robustness summary — imperfect failure detection, partitions, and
+/// the recovery policy (retries/hedges). All zero on runs with the
+/// robustness knobs off (the zero-knob equivalence contract).
+pub fn robustness(runs: &[Metrics]) -> String {
+    let mut s = header("Robustness — detection, partitions, recovery policy");
+    s += &format!(
+        "{:<12} {:>5} {:>5} {:>6} {:>9} | {:>5} {:>5} {:>6} {:>6} | {:>6} {:>6} {:>6} {:>6} | {:>7} {:>9}\n",
+        "scenario", "susp", "clear", "false", "det_ms",
+        "part", "heal", "stall", "held",
+        "retry", "hedge", "won", "waste",
+        "lp_lost", "stale_ms",
+    );
+    for m in runs {
+        s += &format!(
+            "{:<12} {:>5} {:>5} {:>6} {:>9.1} | {:>5} {:>5} {:>6} {:>6} | {:>6} {:>6} {:>6} {:>6} | {:>7} {:>9.1}\n",
+            m.label,
+            m.devices_suspected,
+            m.devices_cleared,
+            m.false_suspicions,
+            m.lat_detection.mean_ms(),
+            m.partitions_started,
+            m.partitions_healed,
+            m.partition_stalled_flows,
+            m.partition_held_results,
+            m.retries,
+            m.hedges_launched,
+            m.hedges_won,
+            m.hedges_wasted,
+            m.lp_lost,
+            m.bw_stale_us as f64 / 1000.0,
+        );
+    }
+    s
+}
+
 /// Latency percentiles per priority class — scheduling and end-to-end,
 /// p50/p95/p99 in ms. Means alone hide the tail under bursty arrivals;
 /// this is the table that shows it.
@@ -445,6 +480,20 @@ pub fn json_row(m: &Metrics) -> String {
     ));
     f.push(format!("\"cloud_offloads\": {}", m.cloud_offloads));
     f.push(format!("\"cloud_completions\": {}", m.cloud_completions));
+    f.push(format!("\"retries\": {}", m.retries));
+    f.push(format!("\"hedges_launched\": {}", m.hedges_launched));
+    f.push(format!("\"hedges_won\": {}", m.hedges_won));
+    f.push(format!("\"hedges_wasted\": {}", m.hedges_wasted));
+    f.push(format!("\"false_suspicions\": {}", m.false_suspicions));
+    f.push(format!("\"devices_suspected\": {}", m.devices_suspected));
+    f.push(format!("\"devices_cleared\": {}", m.devices_cleared));
+    f.push(format!("\"lat_detection\": {}", json_latency(&m.lat_detection)));
+    f.push(format!("\"partitions_started\": {}", m.partitions_started));
+    f.push(format!("\"partitions_healed\": {}", m.partitions_healed));
+    f.push(format!("\"partition_stalled_flows\": {}", m.partition_stalled_flows));
+    f.push(format!("\"partition_held_results\": {}", m.partition_held_results));
+    f.push(format!("\"lp_lost\": {}", m.lp_lost));
+    f.push(format!("\"bw_stale_us\": {}", m.bw_stale_us));
     format!("{{{}}}", f.join(", "))
 }
 
@@ -549,6 +598,27 @@ mod tests {
     }
 
     #[test]
+    fn robustness_table_renders_counters() {
+        let mut m = sample("RAS_chaos");
+        m.devices_suspected = 3;
+        m.false_suspicions = 1;
+        m.lat_detection.record(250_000);
+        m.partitions_started = 2;
+        m.partitions_healed = 2;
+        m.retries = 7;
+        m.hedges_launched = 4;
+        m.hedges_won = 1;
+        m.hedges_wasted = 3;
+        m.lp_lost = 2;
+        m.bw_stale_us = 1_500_000;
+        let r = robustness(&[m]);
+        assert!(r.contains("RAS_chaos"));
+        assert!(r.contains("det_ms"));
+        assert!(r.contains("250.0"), "detection lag column: {r}");
+        assert!(r.contains("1500.0"), "stale_ms column: {r}");
+    }
+
+    #[test]
     fn json_rows_are_wellformed_and_complete() {
         let runs = vec![sample("WPS_1"), sample("RAS \"odd\"\\label")];
         let j = json_rows(&runs);
@@ -585,6 +655,16 @@ mod tests {
         assert!(j.contains("\"battery_final_j\": []"));
         assert!(j.contains("\"cloud_offloads\": 0"));
         assert!(j.contains("\"cloud_completions\": 0"));
+        // Robustness fields render as zeros on knob-off runs (the
+        // zero-knob byte-identity contract).
+        assert!(j.contains("\"retries\": 0"));
+        assert!(j.contains("\"hedges_launched\": 0"));
+        assert!(j.contains("\"false_suspicions\": 0"));
+        assert!(j.contains("\"lat_detection\": {\"count\": 0"));
+        assert!(j.contains("\"partitions_started\": 0"));
+        assert!(j.contains("\"partition_held_results\": 0"));
+        assert!(j.contains("\"lp_lost\": 0"));
+        assert!(j.contains("\"bw_stale_us\": 0"));
         // Balanced braces (cheap well-formedness proxy without a parser).
         assert_eq!(j.matches('{').count(), j.matches('}').count());
     }

@@ -410,6 +410,64 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Device `device` becomes unreachable-but-alive at `at_s` seconds:
+    /// its flows stall (resuming on heal), finished results are held
+    /// undeliverable — unlike [`Self::crash_at`], no work is force-lost.
+    pub fn partition_at(mut self, at_s: f64, device: DeviceId) -> Self {
+        self.plan = self.plan.partition_at(at_s, device);
+        self
+    }
+
+    /// The partition around `device` heals at `at_s` seconds.
+    pub fn heal_at(mut self, at_s: f64, device: DeviceId) -> Self {
+        self.plan = self.plan.heal_at(at_s, device);
+        self
+    }
+
+    /// Seed-deterministic random partition/heal process over the whole
+    /// run (exponential reachable/unreachable times with the given
+    /// means) — composes with [`Self::random_faults`].
+    pub fn random_partitions(mut self, mtbp_s: f64, mtth_s: f64) -> Self {
+        self.plan = self.plan.random_partitions(mtbp_s, mtth_s);
+        self
+    }
+
+    // ---- robustness knobs (PR 8; all default off) ------------------------
+
+    /// Enable the heartbeat suspicion detector: a device is `Suspected`
+    /// (schedulers stop placing on it) after `suspect` consecutive
+    /// missed probe heartbeats and `Confirmed` after `confirm` more.
+    pub fn detector(mut self, suspect: u32, confirm: u32) -> Self {
+        self.cfg.suspect_after = suspect;
+        self.cfg.confirm_after = confirm;
+        self
+    }
+
+    /// Per-placement offload timeout with bounded retry: an undelivered
+    /// input past `timeout_s` (doubling per attempt) cancels the
+    /// placement and re-enters scheduling, up to `retries` times.
+    pub fn offload_timeout(mut self, timeout_s: f64, retries: u32) -> Self {
+        self.cfg.offload_timeout_s = timeout_s;
+        self.cfg.retry_limit = retries;
+        self
+    }
+
+    /// Deadline-aware hedged duplicates: an offloaded placement still
+    /// unfinished `timeout_s` after its decision races a duplicate;
+    /// first completion wins, the loser is suppressed without credit.
+    pub fn hedge(mut self, timeout_s: f64) -> Self {
+        self.cfg.hedge_timeout_s = timeout_s;
+        self
+    }
+
+    /// Bandwidth-estimate staleness: after `rounds` consecutive failed
+    /// probe rounds the estimate is stale and RAS plans conservatively
+    /// until the next successful round.
+    pub fn bw_stale_after(mut self, rounds: u32) -> Self {
+        self.cfg.bw_stale_after = rounds;
+        self
+    }
+
     /// Freeze into a runnable [`Scenario`]. Everything time-varying
     /// compiles here — the fault plan *and* the generative arrival plan
     /// both expand over the run horizon from the scenario seed (never
@@ -421,9 +479,12 @@ impl ScenarioBuilder {
     /// # Panics
     ///
     /// On a generative workload whose catalog fails validation (empty,
-    /// zero weights, inverted stage times) or an invalid
-    /// [`ScenarioBuilder::lp_ladder`] — a programming error in the
-    /// scenario definition, not a runtime condition.
+    /// zero weights, inverted stage times), an invalid
+    /// [`ScenarioBuilder::lp_ladder`], or a fault plan that fails
+    /// [`FaultPlan::validate`](crate::fault::FaultPlan::validate)
+    /// (out-of-range device, unordered crash/recover or
+    /// partition/heal pairs) — a programming error in the scenario
+    /// definition, not a runtime condition.
     pub fn build(self) -> Scenario {
         let (frames, horizon_s, gen) = match &self.workload {
             Workload::Conveyor(_) => {
@@ -471,7 +532,9 @@ impl ScenarioBuilder {
             );
             extras.lp_ladder = compiled;
         }
-        self.plan.compile_into(&mut extras, self.cfg.seed, self.cfg.n_devices, horizon_s);
+        self.plan
+            .compile_into(&mut extras, self.cfg.seed, self.cfg.n_devices, horizon_s)
+            .expect("invalid fault plan");
         let trace = Trace::shared(self.spec, self.cfg.n_devices, frames, self.cfg.seed);
         Scenario {
             name,
@@ -591,6 +654,37 @@ mod tests {
         // 30 min at 18.86 s/frame → 96 frames.
         assert_eq!(s.frames, 96);
         assert!(s.extras.churn.is_empty() && s.extras.regimes.is_empty());
+    }
+
+    #[test]
+    fn robustness_builders_flow_into_cfg_and_extras() {
+        let s = ScenarioBuilder::new()
+            .trace(TraceSpec::Weighted(2))
+            .frames(8)
+            .partition_at(5.0, 1)
+            .heal_at(9.0, 1)
+            .detector(3, 2)
+            .offload_timeout(0.5, 2)
+            .hedge(0.25)
+            .bw_stale_after(4)
+            .build();
+        assert_eq!(s.cfg.suspect_after, 3);
+        assert_eq!(s.cfg.confirm_after, 2);
+        assert_eq!(s.cfg.offload_timeout_s, 0.5);
+        assert_eq!(s.cfg.retry_limit, 2);
+        assert_eq!(s.cfg.hedge_timeout_s, 0.25);
+        assert_eq!(s.cfg.bw_stale_after, 4);
+        assert_eq!(s.extras.partitions, vec![(secs(5.0), 1, false), (secs(9.0), 1, true)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid fault plan")]
+    fn build_rejects_out_of_range_partition_device() {
+        ScenarioBuilder::new()
+            .trace(TraceSpec::Weighted(2))
+            .frames(8)
+            .partition_at(5.0, 99)
+            .build();
     }
 
     #[test]

@@ -62,6 +62,7 @@ use crate::coordinator::fleet::CellMap;
 use crate::coordinator::scheduler::{Decision, Ops, Outcome, SchedEvent, Scheduler};
 use crate::coordinator::task::{Allocation, DeviceId, FrameId, Task, TaskId, VariantRung, MAX_RUNGS};
 use crate::energy::{EnergyModel, FleetEnergy};
+use crate::fault::detector::{Belief, SuspicionDetector};
 use crate::metrics::Metrics;
 use crate::sim::events::{Event, EventQueue, IdBatch};
 use crate::sim::netsim::{CloudTier, FlowId, LossyMedium, Medium, PROBE_FLOW_BASE};
@@ -116,6 +117,12 @@ pub struct RunExtras {
     /// routes through the crash path — in-flight work lost or
     /// re-offered — and a drained device never recovers.
     pub battery_j: Option<f64>,
+    /// Partition schedule: (time, device, heal?). A partitioned device is
+    /// unreachable-but-alive: its flows stall (resuming on heal with the
+    /// bits already sent preserved), in-progress compute finishes but the
+    /// result is held undeliverable until heal. Distinct from crash, which
+    /// loses work. Compile a [`crate::fault::FaultPlan`] to fill this.
+    pub partitions: Vec<(SimTime, DeviceId, bool)>,
 }
 
 /// Runtime state of a placed task. Staleness is carried by the slab
@@ -144,6 +151,14 @@ struct TaskSlot {
     /// are rewritten to the rung at the same moment, so re-placements
     /// and transfers always see the spec that was actually scheduled.
     rung: u8,
+    /// Offload attempts consumed by the timeout/retry policy (each retry
+    /// doubles the timeout — exponential backoff).
+    tries: u8,
+    /// For a hedge duplicate: the primary task it shadows.
+    hedge_of: Option<TaskId>,
+    /// For a hedged primary: the duplicate racing it (first terminal
+    /// outcome wins; the loser is cancelled without accounting).
+    hedged_by: Option<TaskId>,
 }
 
 /// Per-frame pipeline bookkeeping (Fig. 1's three stages), stored densely
@@ -239,6 +254,20 @@ pub struct Engine {
     armed_wan: u64,
     /// Per-device epoch of the latest armed battery-depletion event.
     armed_battery: Vec<u64>,
+    /// Imperfect failure detector fed by probe rounds (belief, not truth;
+    /// disabled — zero overhead, no events — when `suspect_after == 0`).
+    detector: SuspicionDetector,
+    /// Partition truth per device (unreachable-but-alive).
+    partitioned: Vec<bool>,
+    /// When the device's current outage (crash or partition) began —
+    /// detection-lag accounting for the suspicion detector.
+    down_since: Vec<Option<SimTime>>,
+    /// Flows stalled by a partition: (task, remaining bits). Re-added to
+    /// the medium when both endpoints are reachable again.
+    stalled_flows: Vec<(TaskId, f64)>,
+    /// Finished-but-undeliverable results held behind a partition; the
+    /// heal re-fires their `LpFinish` (deadline re-checked then).
+    held_finishes: Vec<TaskId>,
 }
 
 impl Engine {
@@ -311,6 +340,15 @@ impl Engine {
                 Event::DeviceRecover { device }
             } else {
                 Event::DeviceCrash { device }
+            };
+            queue.push(at, ev);
+        }
+        // Partition schedule: unreachable-but-alive intervals.
+        for &(at, device, heal) in &extras.partitions {
+            let ev = if heal {
+                Event::PartitionHeal { device }
+            } else {
+                Event::PartitionStart { device }
             };
             queue.push(at, ev);
         }
@@ -406,6 +444,11 @@ impl Engine {
             armed_medium: u64::MAX,
             armed_wan: u64::MAX,
             armed_battery: vec![u64::MAX; cfg.n_devices],
+            detector: SuspicionDetector::new(cfg.n_devices, cfg.suspect_after, cfg.confirm_after),
+            partitioned: vec![false; cfg.n_devices],
+            down_since: vec![None; cfg.n_devices],
+            stalled_flows: Vec::new(),
+            held_finishes: Vec::new(),
             cfg,
             sched,
         }
@@ -446,6 +489,9 @@ impl Engine {
             Event::HpFinish { task } | Event::LpFinish { task } | Event::TransferStart { task } => {
                 self.tasks.get(*task).map_or(false, |s| s.rt.is_some())
             }
+            Event::OffloadTimeout { task } | Event::HedgeLaunch { task } => {
+                self.tasks.get(*task).map_or(false, |s| s.rt.is_some())
+            }
             Event::MediumComplete { epoch, .. } => *epoch == self.medium.epoch,
             Event::WanComplete { epoch, .. } => {
                 self.cloud.as_ref().map_or(false, |c| c.wan.epoch == *epoch)
@@ -460,8 +506,18 @@ impl Engine {
 
     /// Run to completion and return the collected metrics.
     pub fn run(mut self) -> Metrics {
+        self.drain();
+        self.metrics
+    }
+
+    /// Run to completion in place, leaving the engine inspectable — the
+    /// chaos campaign audits the slab ([`Self::live_tasks`]) after the
+    /// drain, which a consuming [`Self::run`] cannot offer.
+    pub fn drain(&mut self) -> &Metrics {
         while self.step() {}
+        self.flush_partition_remnants();
         self.metrics.final_bandwidth_estimate_bps = self.sched.bandwidth_estimate();
+        self.metrics.bw_stale_us = self.estimator.stale_us(self.now);
         self.metrics.reject_reasons = self.sched.reject_diag();
         self.metrics.retransmitted_mbits = self.medium.retransmitted_bits / 1e6;
         if let Some(f) = self.fleet.as_mut() {
@@ -475,7 +531,7 @@ impl Engine {
             self.metrics.energy_total_j = total;
             self.metrics.battery_final_j = f.battery_final_j();
         }
-        self.metrics
+        &self.metrics
     }
 
     fn fresh_task_id(&mut self) -> TaskId {
@@ -501,7 +557,15 @@ impl Engine {
     /// Insert a fresh task (rung 0 of `ladder`; 0 = no ladder).
     fn insert_task(&mut self, task: Task, ladder: u16) -> SlotRef {
         let id = task.id as usize;
-        let h = self.tasks.insert(TaskSlot { task, rt: None, ladder, rung: 0 });
+        let h = self.tasks.insert(TaskSlot {
+            task,
+            rt: None,
+            ladder,
+            rung: 0,
+            tries: 0,
+            hedge_of: None,
+            hedged_by: None,
+        });
         if self.task_index.len() <= id {
             self.task_index.resize(id + 1, SlotRef::NULL);
         }
@@ -559,6 +623,14 @@ impl Engine {
         }
         let lan_flow = self.medium.remove_flow(self.now, task);
         self.arm_medium();
+        // A cancelled placement's partition bookkeeping dies with it:
+        // stalled transfers are not resumed, held results not delivered.
+        if let Some(pos) = self.stalled_flows.iter().position(|&(id, _)| id == task) {
+            self.stalled_flows.remove(pos);
+        }
+        if let Some(pos) = self.held_finishes.iter().position(|&id| id == task) {
+            self.held_finishes.remove(pos);
+        }
         if let Some((device, cfg_idx, source)) = ended {
             // The finish event queued under the dead placement will never
             // resolve — report it so compaction accounting sees it.
@@ -616,6 +688,10 @@ impl Engine {
             }
             Event::WanComplete { flow, epoch } => self.on_wan_complete(flow, epoch),
             Event::BatteryDeplete { device, epoch } => self.on_battery_deplete(device, epoch),
+            Event::PartitionStart { device } => self.on_partition_start(device),
+            Event::PartitionHeal { device } => self.on_partition_heal(device),
+            Event::OffloadTimeout { task } => self.on_offload_timeout(task),
+            Event::HedgeLaunch { task } => self.on_hedge_launch(task),
         }
     }
 
@@ -1065,8 +1141,22 @@ impl Engine {
     }
 
     fn on_lp_arrive(&mut self, batch: IdBatch, realloc: bool) {
+        debug_assert!(!batch.as_slice().is_empty(), "LpArrive batches are never empty");
+        // Recovery-policy re-placements can race a hedge settlement: the
+        // partner may have won (and freed this task) while the retry sat
+        // in the queue. Dead ids are silently skipped — on the default
+        // path every queued id is still live and this filter keeps all.
+        let mut live = IdBatch::new();
+        for &id in batch.as_slice() {
+            if self.tasks.get(self.slot_of(id)).is_some() {
+                live.push(id);
+            }
+        }
+        if live.is_empty() {
+            return;
+        }
+        let batch = live;
         let ids = batch.as_slice();
-        debug_assert!(!ids.is_empty(), "LpArrive batches are never empty");
         let arrival = self.now;
         let service_start = self.busy_until.max(arrival);
         let Decision { outcome, ops, variant } = self.dispatch_batch(service_start, ids, Some(realloc));
@@ -1087,9 +1177,13 @@ impl Engine {
                 if !realloc {
                     self.metrics.lp_alloc_failures += batch.len() as u64;
                 }
-                let frame = self.task(ids[0]).frame;
-                self.fail_frame(frame);
                 for &id in ids {
+                    if self.hedge_dissolve_on_loss(id) {
+                        continue;
+                    }
+                    let frame = self.task(id).frame;
+                    self.metrics.lp_lost += 1;
+                    self.fail_frame(frame);
                     self.free_task(id);
                 }
             }
@@ -1132,9 +1226,24 @@ impl Engine {
                 let task = alloc.task;
                 let (device, cfg_idx) = (alloc.device, alloc.config.index());
                 let h = self.slot_of(task);
-                self.tasks.get_mut(h).expect("placing a live task").rt =
-                    Some(TaskRuntime { alloc, realloc, reoffered });
+                let slot = self.tasks.get_mut(h).expect("placing a live task");
+                slot.rt = Some(TaskRuntime { alloc, realloc, reoffered });
+                let tries = slot.tries;
+                let hedgeable = slot.hedge_of.is_none() && slot.hedged_by.is_none();
                 self.queue.push(at, Event::TransferStart { task: h });
+                // Recovery policy (both knobs default off — no events, no
+                // behavior change): a per-placement timeout with
+                // exponential backoff, and a hedged duplicate launch for
+                // placements still unfinished past the hedge horizon.
+                if self.cfg.offload_timeout_s > 0.0 {
+                    let timeout = (self.cfg.offload_timeout_s * 1e6).round() as u64;
+                    let deadline_at = at.saturating_add(timeout << tries.min(16));
+                    self.queue.push(deadline_at, Event::OffloadTimeout { task: h });
+                }
+                if self.cfg.hedge_timeout_s > 0.0 && hedgeable {
+                    let horizon = (self.cfg.hedge_timeout_s * 1e6).round() as u64;
+                    self.queue.push(decision.saturating_add(horizon), Event::HedgeLaunch { task: h });
+                }
                 // Commitment powers the destination (a cloud destination
                 // is mains powered and no-ops inside the integrator).
                 self.energy_task_start(device, cfg_idx);
@@ -1166,6 +1275,12 @@ impl Engine {
             self.medium.add_flow(self.now, id, bytes);
             self.arm_medium();
         }
+        // An endpoint behind a partition stalls the transfer on the spot
+        // (the flow is added first so loss inflation draws stay on the
+        // one shared code path, then pulled off the air until heal).
+        if self.is_partitioned(src) || self.is_partitioned(dst) {
+            self.stall_flow(id, dst);
+        }
         // Radio power: tx on the source, rx on the destination (the
         // cloud side no-ops — it is not in the fleet).
         self.energy_transfer_start(src, dst);
@@ -1184,16 +1299,66 @@ impl Engine {
             (rt.alloc.frame, rt.alloc.offloaded, rt.realloc, rt.reoffered);
         let (device, cfg_idx) = (rt.alloc.device, rt.alloc.config.index());
         let task_id = slot.task.id;
+        let source = slot.task.source;
         let deadline = slot.task.deadline;
         let created_at = slot.task.created_at;
         let (lidx, rung) = (slot.ladder as usize, slot.rung as usize);
+        let (hedge_of, hedged_by) = (slot.hedge_of, slot.hedged_by);
+        // Partition hold: the compute finished but the result cannot
+        // reach its source across the partition. The task stays live and
+        // undelivered until the heal re-fires this event (the deadline is
+        // re-checked then — a long partition turns the hold into a
+        // violation). Local completions deliver locally, never held.
+        if offloaded && (self.is_partitioned(source) || self.is_partitioned(device)) {
+            if !self.held_finishes.contains(&task_id) {
+                self.held_finishes.push(task_id);
+                self.metrics.partition_held_results += 1;
+            }
+            return;
+        }
         self.energy_task_end(device, cfg_idx);
         if self.now > deadline {
+            // Hedge settlement on a late finish: the partner may still
+            // deliver in time, so a late half never fails the frame — it
+            // hands the logical task to the survivor and exits silently.
+            if let Some(primary) = hedge_of {
+                self.metrics.hedges_wasted += 1;
+                let ph = self.slot_of(primary);
+                if let Some(ps) = self.tasks.get_mut(ph) {
+                    ps.hedged_by = None;
+                }
+                self.sched.on_event(self.now, SchedEvent::Violation { task: task_id });
+                self.free_task(task_id);
+                return;
+            }
+            if let Some(clone) = hedged_by {
+                let ch = self.slot_of(clone);
+                if let Some(cs) = self.tasks.get_mut(ch) {
+                    cs.hedge_of = None;
+                }
+                self.sched.on_event(self.now, SchedEvent::Violation { task: task_id });
+                self.free_task(task_id);
+                return;
+            }
             self.metrics.lp_violations += 1;
             self.sched.on_event(self.now, SchedEvent::Violation { task: task_id });
             self.fail_frame(frame);
             self.free_task(task_id);
             return;
+        }
+        // First-completion-wins duplicate suppression: exactly one half
+        // of a hedge pair ever reaches the accounting below; the loser's
+        // placement is cancelled without any completion/violation credit.
+        if let Some(primary) = hedge_of {
+            self.metrics.hedges_won += 1;
+            self.cancel_placement(primary);
+            self.sched.on_event(self.now, SchedEvent::Violation { task: primary });
+            self.free_task(primary);
+        } else if let Some(clone) = hedged_by {
+            self.metrics.hedges_wasted += 1;
+            self.cancel_placement(clone);
+            self.sched.on_event(self.now, SchedEvent::Violation { task: clone });
+            self.free_task(clone);
         }
         self.metrics.lat_lp_e2e.record(self.now - created_at);
         if realloc {
@@ -1341,7 +1506,13 @@ impl Engine {
         // The device list is a scratch buffer reused across rounds.
         let mut active = std::mem::take(&mut self.scratch_devices);
         active.clear();
-        active.extend((0..self.active_devices.len()).filter(|&d| self.active_devices[d]));
+        // Partitioned devices are unreachable: they cannot host or answer
+        // pings (with no partitions scheduled this filter keeps everyone
+        // and the host draw is unchanged).
+        active.extend(
+            (0..self.active_devices.len())
+                .filter(|&d| self.active_devices[d] && !self.is_partitioned(d)),
+        );
         let host = if active.len() >= 2 {
             Some((active[self.rng.index(active.len())], active.len()))
         } else {
@@ -1364,10 +1535,23 @@ impl Engine {
         self.metrics.probe_pings_lost += pings - survivors;
         if survivors == 0 {
             self.metrics.probe_rounds_lost += 1;
+            let was_stale = self.estimator.is_stale(self.now);
             let _ = self.estimator.apply(self.now, &ProbeRound { host, samples_bps: vec![] });
+            if !was_stale && self.estimator.is_stale(self.now) {
+                self.emit_bandwidth_stale();
+            }
+            // A fully lost round reaches nobody: every expected heartbeat
+            // is a miss — the detector's false-positive mechanism (the
+            // lost round is seed-deterministic through the probe-loss
+            // RNG, so false suspicions replay exactly).
+            self.feed_detector(false);
             self.queue.push(self.now + self.estimator.interval, Event::ProbeStart);
             return;
         }
+        // The surviving round will reach every reachable device; devices
+        // that are down (crashed) or unreachable (partitioned) miss their
+        // heartbeat either way.
+        self.feed_detector(true);
         // Payload of the surviving round (out + back per ping), inflated
         // by the small-frame airtime factor — the medium is occupied for
         // much longer than the raw bytes suggest.
@@ -1400,6 +1584,7 @@ impl Engine {
         // survivor counts already tracked in the metrics).
         let achieved_bps = p.bytes as f64 * 8.0 / (dur_us as f64 / 1e6);
         let round = ProbeRound { host: p.host, samples_bps: vec![achieved_bps] };
+        let was_stale = self.estimator.is_stale(self.now);
         if let Some(new_est) = self.estimator.apply(self.now, &round) {
             self.metrics.bandwidth_updates += 1;
             // The scheduler rebuilds its link representation; the
@@ -1413,6 +1598,9 @@ impl Engine {
             let proc = (ops as f64 * self.cfg.op_cost_us).round() as SimDuration;
             self.busy_until = self.busy_until.max(self.now) + proc;
             self.metrics.controller_busy_us += proc;
+        }
+        if !was_stale && self.estimator.is_stale(self.now) {
+            self.emit_bandwidth_stale();
         }
     }
 
@@ -1459,6 +1647,9 @@ impl Engine {
         }
         self.active_devices[device] = true;
         self.metrics.churn_joins += 1;
+        // A (re-)join is announced: any stale suspicion resets silently
+        // (the join path clears it scheduler-side too).
+        let _ = self.detector.heartbeat(device);
         self.energy_set_online(device, true);
         let _ = self.sched.on_event(self.now, SchedEvent::DeviceJoined { device });
     }
@@ -1485,6 +1676,12 @@ impl Engine {
             if hp || source == device || !self.device_active(source) {
                 // The task (or the device holding its input image) is
                 // gone: the frame cannot complete.
+                if self.hedge_dissolve_on_loss(a.task) {
+                    continue;
+                }
+                if !hp {
+                    self.metrics.lp_lost += 1;
+                }
                 self.fail_frame(a.frame);
                 self.free_task(a.task);
             } else {
@@ -1516,6 +1713,9 @@ impl Engine {
             self.crashed_at.resize(device + 1, None);
         }
         self.crashed_at[device] = Some(self.now);
+        if let Some(x) = self.down_since.get_mut(device) {
+            x.get_or_insert(self.now);
+        }
         self.energy_set_online(device, false);
         let decision = self.sched.on_event(self.now, SchedEvent::DeviceCrashed { device });
         let Outcome::Ack { evicted } = decision.outcome else {
@@ -1529,6 +1729,12 @@ impl Engine {
             if hp || source == device || !self.device_active(source) {
                 // The work (or the device holding its input image) died
                 // with the crash: the frame cannot complete.
+                if self.hedge_dissolve_on_loss(a.task) {
+                    continue;
+                }
+                if !hp {
+                    self.metrics.lp_lost += 1;
+                }
                 self.fail_frame(a.frame);
                 self.free_task(a.task);
             } else {
@@ -1568,7 +1774,11 @@ impl Engine {
             self.cancel_placement(id);
             // Free the placement the scheduler still holds for it.
             let _ = self.sched.on_event(self.now, SchedEvent::Violation { task: id });
+            if self.hedge_dissolve_on_loss(id) {
+                continue;
+            }
             self.metrics.crash_tasks_lost += 1;
+            self.metrics.lp_lost += 1;
             self.fail_frame(frame);
             self.free_task(id);
         }
@@ -1588,12 +1798,20 @@ impl Engine {
         for &(id, frame) in orphans.iter() {
             self.cancel_placement(id); // aborts the WAN upload too
             let _ = self.sched.on_event(self.now, SchedEvent::Violation { task: id });
+            if self.hedge_dissolve_on_loss(id) {
+                continue;
+            }
             self.metrics.crash_tasks_lost += 1;
+            self.metrics.lp_lost += 1;
             self.fail_frame(frame);
             self.free_task(id);
         }
         orphans.clear();
         self.scratch_orphans = orphans;
+        // Held results and stalled transfers whose *source* crashed die
+        // too (entries touching the crashed compute device were already
+        // purged through the scheduler eviction above).
+        self.kill_partition_remnants_of(device);
     }
 
     /// A crashed device comes back with fresh, empty availability. Only
@@ -1614,6 +1832,11 @@ impl Engine {
         self.active_devices[device] = true;
         self.metrics.device_recoveries += 1;
         self.metrics.lat_crash_recovery.record(self.now - crashed);
+        // `DeviceRecovered` already re-admits the device scheduler-side
+        // (it routes through the join path, which drops any suspicion),
+        // so the detector resets silently — no separate `DeviceCleared`.
+        let _ = self.detector.heartbeat(device);
+        self.refresh_down(device);
         self.energy_set_online(device, true);
         let _ = self.sched.on_event(self.now, SchedEvent::DeviceRecovered { device });
     }
@@ -1624,6 +1847,11 @@ impl Engine {
     fn on_reoffer(&mut self, batch: IdBatch) {
         let mut live = IdBatch::new();
         for &id in batch.as_slice() {
+            // The task may have settled since the re-offer was queued
+            // (its hedge partner won): dead ids are skipped silently.
+            if self.tasks.get(self.slot_of(id)).is_none() {
+                continue;
+            }
             let (frame, source) = {
                 let t = self.task(id);
                 (t.frame, t.source)
@@ -1636,7 +1864,11 @@ impl Engine {
             if frame_alive && self.device_active(source) {
                 live.push(id);
             } else {
+                if self.hedge_dissolve_on_loss(id) {
+                    continue;
+                }
                 self.metrics.crash_reoffer_dropped += 1;
+                self.metrics.lp_lost += 1;
                 if frame_alive {
                     // The source (and its input image) died between the
                     // crash and the re-offer: the frame can never finish.
@@ -1660,10 +1892,14 @@ impl Engine {
                 self.place_lp_allocs(allocs, decision, true, true)
             }
             Outcome::LpRejected => {
-                self.metrics.crash_reoffer_dropped += live.len() as u64;
-                let frame = self.task(ids[0]).frame;
-                self.fail_frame(frame);
                 for &id in ids {
+                    if self.hedge_dissolve_on_loss(id) {
+                        continue;
+                    }
+                    self.metrics.crash_reoffer_dropped += 1;
+                    self.metrics.lp_lost += 1;
+                    let frame = self.task(id).frame;
+                    self.fail_frame(frame);
                     self.free_task(id);
                 }
             }
@@ -1683,6 +1919,415 @@ impl Engine {
         if duty <= 0.0 {
             self.medium.set_background(self.now, false);
             self.arm_medium();
+        }
+    }
+
+    // ---- robustness: partitions, failure detection, recovery policy ------
+    //
+    // Everything below is gated behind the PR 8 knobs (all default off)
+    // or behind partition schedules (default empty): the zero-knob path
+    // pushes no events, makes no RNG draws, and dispatches no scheduler
+    // events — byte-identical output to the oracle-only engine.
+
+    fn is_partitioned(&self, device: DeviceId) -> bool {
+        self.partitioned.get(device).copied().unwrap_or(false)
+    }
+
+    /// Clear the outage timestamp once the device is both alive and
+    /// reachable again (crash and partition can overlap; the timestamp
+    /// tracks the earliest still-active outage).
+    fn refresh_down(&mut self, device: DeviceId) {
+        if self.device_active(device) && !self.is_partitioned(device) {
+            if let Some(x) = self.down_since.get_mut(device) {
+                *x = None;
+            }
+        }
+    }
+
+    /// Charge scheduler ops incurred outside a placement call (suspicion
+    /// fan-out, staleness rebuilds) to the controller's single server.
+    fn charge_control(&mut self, ops: Ops) {
+        let proc = (ops as f64 * self.cfg.op_cost_us).round() as SimDuration;
+        self.busy_until = self.busy_until.max(self.now) + proc;
+        self.metrics.controller_busy_us += proc;
+    }
+
+    /// The estimator crossed into staleness: the schedulers switch to
+    /// conservative planning until the next successful probe round.
+    fn emit_bandwidth_stale(&mut self) {
+        let ops = self.sched.on_event(self.now, SchedEvent::BandwidthStale).ops;
+        self.metrics.link_rebuild_ops += ops;
+        self.charge_control(ops);
+    }
+
+    /// Feed one probe round's evidence to the suspicion detector.
+    /// `delivered` = the round survived probe loss (its pings will reach
+    /// every reachable device). Devices that are crashed or partitioned
+    /// answer nothing either way; gracefully departed devices deregister
+    /// and owe no heartbeat. Heartbeats are credited at round start —
+    /// one probe interval of granularity, deterministic and cheap.
+    fn feed_detector(&mut self, delivered: bool) {
+        if !self.detector.enabled() {
+            return;
+        }
+        for d in 0..self.cfg.n_devices {
+            let reachable = self.device_active(d) && !self.is_partitioned(d);
+            if reachable && delivered {
+                if self.detector.heartbeat(d) {
+                    self.metrics.devices_cleared += 1;
+                    let ops =
+                        self.sched.on_event(self.now, SchedEvent::DeviceCleared { device: d }).ops;
+                    self.charge_control(ops);
+                }
+            } else {
+                // Gracefully departed devices deregistered: no heartbeat
+                // owed. Everyone else (crashed, partitioned, or unlucky
+                // in a fully lost round) missed one.
+                let deregistered = !self.device_active(d)
+                    && self.crashed_at.get(d).map_or(true, |c| c.is_none())
+                    && !self.is_partitioned(d);
+                if !deregistered {
+                    self.note_miss(d);
+                }
+            }
+        }
+    }
+
+    /// One missed heartbeat: escalate belief and fan out a suspicion the
+    /// moment the threshold trips. A suspicion of a genuinely down
+    /// device records its detection lag; one of a live device is a false
+    /// positive (probe loss) — the work it strands is the detector's
+    /// accuracy cost.
+    fn note_miss(&mut self, device: DeviceId) {
+        match self.detector.miss(device) {
+            Some(Belief::Suspected) => {
+                self.metrics.devices_suspected += 1;
+                match self.down_since.get(device).copied().flatten() {
+                    Some(since) => self.metrics.lat_detection.record(self.now - since),
+                    None => self.metrics.false_suspicions += 1,
+                }
+                let ops = self
+                    .sched
+                    .on_event(self.now, SchedEvent::DeviceSuspected { device })
+                    .ops;
+                self.charge_control(ops);
+            }
+            // Confirmation is a metrics-grade escalation only: the
+            // scheduler already stopped placing at suspicion.
+            Some(Belief::Confirmed) | Some(Belief::Alive) | None => {}
+        }
+    }
+
+    /// Pull a task's in-flight transfer off the air (LAN or WAN),
+    /// preserving the bits already delivered for the heal-time resume.
+    fn stall_flow(&mut self, id: TaskId, dst: DeviceId) {
+        if dst >= self.cfg.n_devices {
+            let bits = self
+                .cloud
+                .as_mut()
+                .and_then(|c| c.wan.remaining_bits(self.now, id))
+                .unwrap_or(0.0);
+            if self.cloud.as_mut().map_or(false, |c| c.abort_upload(self.now, id)) {
+                self.stalled_flows.push((id, bits));
+                self.metrics.partition_stalled_flows += 1;
+                self.arm_wan();
+            }
+        } else if let Some(bits) = self.medium.remaining_bits(self.now, id) {
+            self.medium.remove_flow(self.now, id);
+            self.stalled_flows.push((id, bits));
+            self.metrics.partition_stalled_flows += 1;
+            self.arm_medium();
+        }
+    }
+
+    /// A device becomes unreachable-but-alive: flows touching it stall
+    /// (bits preserved), its in-progress compute keeps running, and any
+    /// result it finishes is held undeliverable until the heal.
+    fn on_partition_start(&mut self, device: DeviceId) {
+        if device >= self.partitioned.len() || self.partitioned[device] {
+            return; // unknown device or already partitioned
+        }
+        if !self.device_active(device) {
+            return; // already down: a crash dominates a partition
+        }
+        self.partitioned[device] = true;
+        self.metrics.partitions_started += 1;
+        if let Some(x) = self.down_since.get_mut(device) {
+            x.get_or_insert(self.now);
+        }
+        // Stall every LAN task flow with an endpoint behind the
+        // partition. The flow table is id-sorted, so the scan visits
+        // tasks in ascending id order (determinism, as in the crash
+        // orphan scan).
+        let mut hit: Vec<(TaskId, DeviceId)> = Vec::new();
+        for id in self.medium.flow_ids() {
+            if id >= PROBE_FLOW_BASE {
+                break;
+            }
+            let Some(slot) = self.tasks.get(self.slot_of(id)) else { continue };
+            let Some(rt) = slot.rt.as_ref() else { continue };
+            if slot.task.source == device || rt.alloc.device == device {
+                hit.push((id, rt.alloc.device));
+            }
+        }
+        // WAN uploads *from* the partitioned device stall the same way.
+        if let Some(c) = self.cloud.as_ref() {
+            for id in c.upload_ids() {
+                let Some(slot) = self.tasks.get(self.slot_of(id)) else { continue };
+                let Some(rt) = slot.rt.as_ref() else { continue };
+                if slot.task.source == device {
+                    hit.push((id, rt.alloc.device));
+                }
+            }
+        }
+        for (id, dst) in hit {
+            self.stall_flow(id, dst);
+        }
+    }
+
+    /// The partition heals: stalled flows whose endpoints are all
+    /// reachable again resume with their remaining bits, and held
+    /// results re-fire their finish (deadline re-checked there).
+    fn on_partition_heal(&mut self, device: DeviceId) {
+        if device >= self.partitioned.len() || !self.partitioned[device] {
+            return;
+        }
+        self.partitioned[device] = false;
+        self.metrics.partitions_healed += 1;
+        self.refresh_down(device);
+        let stalled = std::mem::take(&mut self.stalled_flows);
+        let mut keep = Vec::new();
+        let (mut resumed_lan, mut resumed_wan) = (false, false);
+        for (id, bits) in stalled {
+            let Some(slot) = self.tasks.get(self.slot_of(id)) else { continue };
+            let Some(rt) = slot.rt.as_ref() else { continue };
+            let (src, dst) = (slot.task.source, rt.alloc.device);
+            if self.is_partitioned(src) || self.is_partitioned(dst) {
+                keep.push((id, bits)); // still cut off by another partition
+                continue;
+            }
+            let bytes = (bits / 8.0).ceil() as u64;
+            if dst >= self.cfg.n_devices {
+                if let Some(c) = self.cloud.as_mut() {
+                    c.begin_upload(self.now, id, bytes);
+                    resumed_wan = true;
+                }
+            } else {
+                // Raw `Medium` re-add through the deref: the stalled bits
+                // already carry their loss inflation from the original
+                // `add_flow` — re-inflating (and re-drawing the loss RNG)
+                // would double-count it.
+                let m: &mut Medium = &mut self.medium;
+                m.add_flow(self.now, id, bytes);
+                resumed_lan = true;
+            }
+        }
+        self.stalled_flows = keep;
+        if resumed_lan {
+            self.arm_medium();
+        }
+        if resumed_wan {
+            self.arm_wan();
+        }
+        let held = std::mem::take(&mut self.held_finishes);
+        let mut keep = Vec::new();
+        for id in held {
+            let h = self.slot_of(id);
+            let Some(slot) = self.tasks.get(h) else { continue };
+            let Some(rt) = slot.rt.as_ref() else { continue };
+            let (src, dst) = (slot.task.source, rt.alloc.device);
+            if self.is_partitioned(src) || self.is_partitioned(dst) {
+                keep.push(id);
+            } else {
+                self.queue.push(self.now, Event::LpFinish { task: h });
+            }
+        }
+        self.held_finishes = keep;
+    }
+
+    /// Held results and stalled transfers whose source (input image and
+    /// result consumer) crashed can never deliver: lose them now so the
+    /// slab drains. Entries whose *compute* device crashed were already
+    /// purged via the scheduler eviction in the crash path.
+    fn kill_partition_remnants_of(&mut self, device: DeviceId) {
+        let mut doomed: Vec<TaskId> = Vec::new();
+        for &id in self.held_finishes.iter() {
+            if let Some(slot) = self.tasks.get(self.slot_of(id)) {
+                if slot.task.source == device {
+                    doomed.push(id);
+                }
+            }
+        }
+        for &(id, _) in self.stalled_flows.iter() {
+            if let Some(slot) = self.tasks.get(self.slot_of(id)) {
+                if slot.task.source == device {
+                    doomed.push(id);
+                }
+            }
+        }
+        for id in doomed {
+            let frame = self
+                .tasks
+                .get(self.slot_of(id))
+                .and_then(|s| s.rt.as_ref().map(|rt| rt.alloc.frame));
+            let _ = self.sched.on_event(self.now, SchedEvent::Violation { task: id });
+            self.cancel_placement(id); // purges the held/stalled record
+            if self.hedge_dissolve_on_loss(id) {
+                continue;
+            }
+            self.metrics.crash_tasks_lost += 1;
+            self.metrics.lp_lost += 1;
+            if let Some(f) = frame {
+                self.fail_frame(f);
+            }
+            self.free_task(id);
+        }
+    }
+
+    /// Post-drain sweep: a partition that never healed leaves held
+    /// results and stalled transfers behind — they are lost, and the
+    /// slab must still come out empty (the chaos campaign's invariant).
+    fn flush_partition_remnants(&mut self) {
+        let held = std::mem::take(&mut self.held_finishes);
+        let stalled = std::mem::take(&mut self.stalled_flows);
+        for id in held.into_iter().chain(stalled.into_iter().map(|(id, _)| id)) {
+            let Some(slot) = self.tasks.get(self.slot_of(id)) else { continue };
+            let frame = slot.rt.as_ref().map(|rt| rt.alloc.frame);
+            let _ = self.sched.on_event(self.now, SchedEvent::Violation { task: id });
+            self.cancel_placement(id);
+            if self.hedge_dissolve_on_loss(id) {
+                continue;
+            }
+            self.metrics.lp_lost += 1;
+            if let Some(f) = frame {
+                self.fail_frame(f);
+            }
+            self.free_task(id);
+        }
+    }
+
+    /// If `task` is half of a hedge pair, dissolve the pair: the partner
+    /// carries the logical task alone from here, and `task` is freed
+    /// with no frame/loss accounting (exactly one half may ever reach a
+    /// terminal counter). Returns whether the dissolution happened.
+    fn hedge_dissolve_on_loss(&mut self, task: TaskId) -> bool {
+        let Some(slot) = self.tasks.get(self.slot_of(task)) else { return false };
+        let (hedge_of, hedged_by) = (slot.hedge_of, slot.hedged_by);
+        let Some(partner) = hedge_of.or(hedged_by) else { return false };
+        if hedge_of.is_some() {
+            self.metrics.hedges_wasted += 1; // a lost duplicate never wins
+        }
+        if let Some(ps) = self.tasks.get_mut(self.slot_of(partner)) {
+            ps.hedge_of = None;
+            ps.hedged_by = None;
+        }
+        self.free_task(task);
+        true
+    }
+
+    /// A placement's offload timeout fired. Only an undelivered input
+    /// counts — once the transfer lands, compute runs deterministically
+    /// and retrying would only waste work. Within the retry budget the
+    /// placement is cancelled and re-enters scheduling (the next timeout
+    /// doubles: exponential backoff); past it the task is lost.
+    fn on_offload_timeout(&mut self, h: SlotRef) {
+        let Some(slot) = self.tasks.get(h) else {
+            self.queue.note_popped_stale();
+            return;
+        };
+        let Some(rt) = slot.rt.as_ref() else {
+            self.queue.note_popped_stale();
+            return;
+        };
+        if !rt.alloc.offloaded {
+            return;
+        }
+        let id = slot.task.id;
+        let (frame, source, tries) = (rt.alloc.frame, slot.task.source, slot.tries);
+        let in_flight = self.medium.has_flow(id)
+            || self.stalled_flows.iter().any(|&(f, _)| f == id)
+            || self.cloud.as_ref().map_or(false, |c| c.upload_ids().any(|u| u == id));
+        if !in_flight {
+            return; // input delivered (or result already held): no timeout
+        }
+        if !self.device_active(source) {
+            return; // source down: the crash path owns this task's fate
+        }
+        let _ = self.sched.on_event(self.now, SchedEvent::Violation { task: id });
+        self.cancel_placement(id);
+        if (tries as u32) < self.cfg.retry_limit {
+            self.metrics.retries += 1;
+            if let Some(s) = self.tasks.get_mut(self.slot_of(id)) {
+                s.tries = tries.saturating_add(1);
+            }
+            self.metrics.lp_realloc_attempts += 1;
+            self.queue.push(
+                self.now + self.cfg.control_latency(),
+                Event::LpArrive { tasks: IdBatch::one(id), realloc: true },
+            );
+        } else {
+            if self.hedge_dissolve_on_loss(id) {
+                return;
+            }
+            self.metrics.lp_lost += 1;
+            self.fail_frame(frame);
+            self.free_task(id);
+        }
+    }
+
+    /// The hedge horizon passed with the primary still unfinished: race
+    /// a duplicate placement against it. The duplicate is a full clone
+    /// (same frame, deadline, and input) under a fresh id, dispatched on
+    /// the re-placement path; first terminal outcome wins and the loser
+    /// is suppressed without double credit.
+    fn on_hedge_launch(&mut self, h: SlotRef) {
+        let Some(slot) = self.tasks.get(h) else {
+            self.queue.note_popped_stale();
+            return;
+        };
+        let Some(rt) = slot.rt.as_ref() else {
+            self.queue.note_popped_stale();
+            return;
+        };
+        if slot.hedge_of.is_some() || slot.hedged_by.is_some() || !rt.alloc.offloaded {
+            return;
+        }
+        if self.now > slot.task.deadline {
+            return; // no budget left to hedge with
+        }
+        let primary_id = slot.task.id;
+        let (ladder, rung) = (slot.ladder, slot.rung);
+        let mut task = slot.task.clone();
+        let clone_id = self.fresh_task_id();
+        task.id = clone_id;
+        let ch = self.insert_task(task, ladder);
+        self.tasks.get_mut(ch).expect("fresh clone is live").rung = rung;
+        let arrival = self.now;
+        let service_start = self.busy_until.max(arrival);
+        let ids = [clone_id];
+        let Decision { outcome, ops, variant } =
+            self.dispatch_batch(service_start, &ids, Some(true));
+        let (decision, lat) = self.charge(arrival, ops);
+        self.metrics.lat_lp_realloc.record(lat);
+        self.metrics.lp_realloc_attempts += 1;
+        match outcome {
+            Outcome::LpAllocated { allocs } => {
+                self.metrics.hedges_launched += 1;
+                self.apply_variant(&ids, variant);
+                // Link before placement so neither half re-hedges.
+                if let Some(ps) = self.tasks.get_mut(self.slot_of(primary_id)) {
+                    ps.hedged_by = Some(clone_id);
+                }
+                if let Some(cs) = self.tasks.get_mut(self.slot_of(clone_id)) {
+                    cs.hedge_of = Some(primary_id);
+                }
+                self.place_lp_allocs(allocs, decision, true, false);
+            }
+            Outcome::LpRejected => {
+                // Nowhere to hedge to: the primary keeps running alone.
+                self.free_task(clone_id);
+            }
+            other => unreachable!("hedge dispatch must yield an LP outcome, got {other:?}"),
         }
     }
 
@@ -1877,6 +2522,145 @@ mod tests {
             quiet.frames_completed,
             congested.frames_completed
         );
+    }
+
+    /// LP conservation: every generated low-priority task ends exactly
+    /// one way. The chaos campaign hard-asserts this on every run; the
+    /// unit tests below check it on each robustness mechanism in
+    /// isolation.
+    fn assert_lp_conserved(m: &Metrics) {
+        assert_eq!(
+            m.lp_generated,
+            m.lp_completed_total() + m.lp_violations + m.lp_lost,
+            "{}: lp conservation (completed {} violated {} lost {})",
+            m.label,
+            m.lp_completed_total(),
+            m.lp_violations,
+            m.lp_lost
+        );
+    }
+
+    #[test]
+    fn zero_knob_robustness_stays_inert() {
+        // All PR 8 knobs default off: no detector traffic, no retries,
+        // no hedges, no partitions, no staleness — only the conservation
+        // ledger (lp_lost) is allowed to move, and conservation closes.
+        for ras in [true, false] {
+            let m = run(ras, TraceSpec::Weighted(3), 15, 11);
+            assert_eq!(m.retries, 0, "{}", m.label);
+            assert_eq!(m.hedges_launched + m.hedges_won + m.hedges_wasted, 0, "{}", m.label);
+            assert_eq!(m.devices_suspected + m.devices_cleared + m.false_suspicions, 0);
+            assert_eq!(m.lat_detection.count, 0);
+            assert_eq!(m.partitions_started + m.partitions_healed, 0);
+            assert_eq!(m.partition_stalled_flows + m.partition_held_results, 0);
+            assert_eq!(m.bw_stale_us, 0);
+            assert_lp_conserved(&m);
+        }
+    }
+
+    #[test]
+    fn partition_stalls_work_then_heals_and_drains() {
+        let mut cfg = SystemConfig::default();
+        cfg.seed = 27;
+        let trace = Trace::generate(TraceSpec::Weighted(4), cfg.n_devices, 20, 27);
+        let extras = RunExtras {
+            // Device 1 is unreachable-but-alive for ~130 s mid-run: its
+            // flows stall (or its finished results are held) and resume
+            // on heal — unlike a crash, nothing is force-lost.
+            partitions: vec![(20_000_000, 1, false), (150_000_000, 1, true)],
+            ..Default::default()
+        };
+        let sched: Box<dyn Scheduler> = Box::new(RasScheduler::new(&cfg, 0, cfg.link_bps));
+        let mut eng = Engine::with_extras(cfg.clone(), sched, trace, "partition", extras);
+        while eng.step() {}
+        eng.flush_partition_remnants();
+        let m = eng.metrics;
+        assert_eq!(m.partitions_started, 1);
+        assert_eq!(m.partitions_healed, 1);
+        assert!(
+            m.partition_stalled_flows + m.partition_held_results > 0,
+            "a 130 s partition under offload load must stall or hold something ({m:?})"
+        );
+        assert_lp_conserved(&m);
+    }
+
+    #[test]
+    fn partition_without_heal_still_drains_the_slab() {
+        let mut cfg = SystemConfig::default();
+        cfg.seed = 29;
+        let trace = Trace::generate(TraceSpec::Weighted(4), cfg.n_devices, 12, 29);
+        let extras = RunExtras {
+            partitions: vec![(20_000_000, 2, false)], // never heals
+            ..Default::default()
+        };
+        let sched: Box<dyn Scheduler> = Box::new(RasScheduler::new(&cfg, 0, cfg.link_bps));
+        let mut eng = Engine::with_extras(cfg.clone(), sched, trace, "no-heal", extras);
+        while eng.step() {}
+        eng.flush_partition_remnants();
+        assert_eq!(eng.live_tasks(), 0, "post-drain flush must reap partition remnants");
+        assert_lp_conserved(&eng.metrics);
+    }
+
+    #[test]
+    fn offload_timeout_retries_with_bounded_budget() {
+        let mut cfg = SystemConfig::default();
+        cfg.seed = 41;
+        // A 1 ms timeout is shorter than any real transfer: every
+        // offload times out, retries (with backoff), and finally drops —
+        // the retry budget bounds the cycle and conservation closes.
+        cfg.offload_timeout_s = 0.001;
+        cfg.retry_limit = 2;
+        let trace = Trace::generate(TraceSpec::Weighted(4), cfg.n_devices, 12, 41);
+        let sched: Box<dyn Scheduler> = Box::new(RasScheduler::new(&cfg, 0, cfg.link_bps));
+        let mut eng = Engine::with_extras(cfg.clone(), sched, trace, "timeout", RunExtras::default());
+        while eng.step() {}
+        eng.flush_partition_remnants();
+        let m = eng.metrics;
+        assert!(m.retries > 0, "1 ms timeout under offload load must retry ({m:?})");
+        assert!(m.retries <= m.offloaded_total * cfg.retry_limit as u64);
+        assert_eq!(eng.tasks.len(), 0);
+        assert_lp_conserved(&m);
+    }
+
+    #[test]
+    fn hedging_settles_first_completion_wins() {
+        let mut cfg = SystemConfig::default();
+        cfg.seed = 43;
+        // Hedge almost immediately: every offloaded placement races a
+        // duplicate. Exactly one half of each pair may credit the ledger.
+        cfg.hedge_timeout_s = 0.001;
+        let trace = Trace::generate(TraceSpec::Weighted(3), cfg.n_devices, 15, 43);
+        let sched: Box<dyn Scheduler> = Box::new(RasScheduler::new(&cfg, 0, cfg.link_bps));
+        let mut eng = Engine::with_extras(cfg.clone(), sched, trace, "hedge", RunExtras::default());
+        while eng.step() {}
+        eng.flush_partition_remnants();
+        let m = eng.metrics;
+        assert!(m.hedges_launched > 0, "hedge horizon of 1 ms must launch duplicates ({m:?})");
+        assert!(m.hedges_won + m.hedges_wasted <= m.hedges_launched);
+        assert_eq!(eng.tasks.len(), 0, "hedge pairs must fully settle");
+        assert_lp_conserved(&m);
+    }
+
+    #[test]
+    fn detector_suspects_a_crashed_device() {
+        let mut cfg = SystemConfig::default();
+        cfg.seed = 47;
+        cfg.suspect_after = 1;
+        cfg.confirm_after = 1;
+        let trace = Trace::generate(TraceSpec::Weighted(2), cfg.n_devices, 20, 47);
+        let extras = RunExtras {
+            faults: vec![(40_000_000, 1, false)], // crash, never recovers
+            ..Default::default()
+        };
+        let sched: Box<dyn Scheduler> = Box::new(RasScheduler::new(&cfg, 0, cfg.link_bps));
+        let m = Engine::with_extras(cfg.clone(), sched, trace, "detector", extras).run();
+        // Probe rounds every 30 s: the missed heartbeats push the crashed
+        // device to Suspected, with a recorded detection lag; no probe
+        // loss means no false positives.
+        assert!(m.devices_suspected >= 1, "crashed device must be suspected ({m:?})");
+        assert_eq!(m.false_suspicions, 0);
+        assert!(m.lat_detection.count >= 1);
+        assert_lp_conserved(&m);
     }
 
     #[test]

@@ -154,6 +154,22 @@ pub enum Event {
     /// power changed since (epoch mismatch). Only pushed when a battery
     /// is configured — unbatteried runs never see it.
     BatteryDeplete { device: DeviceId, epoch: u64 },
+    /// A device becomes unreachable-but-alive (fault plan partition):
+    /// its medium flows stall (captured, not aborted) and compute
+    /// results are held undeliverable until the partition heals.
+    PartitionStart { device: DeviceId },
+    /// A partitioned device becomes reachable again: stalled flows
+    /// resume from their captured progress, held results deliver.
+    PartitionHeal { device: DeviceId },
+    /// An offloaded placement's timeout window expired (recovery layer):
+    /// if the placement is still live, cancel and retry with backoff or
+    /// abandon past the retry limit. Dead if the `SlotRef` went stale.
+    /// Only pushed when `offload_timeout_s > 0`.
+    OffloadTimeout { task: SlotRef },
+    /// A hedged-duplicate window expired for a still-running offloaded
+    /// placement: launch a duplicate, first completion wins. Dead if the
+    /// `SlotRef` went stale. Only pushed when `hedge_timeout_s > 0`.
+    HedgeLaunch { task: SlotRef },
 }
 
 /// A scheduled event: ordered by time, then insertion sequence (FIFO among

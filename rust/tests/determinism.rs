@@ -173,6 +173,82 @@ fn energy_grid() -> Sweep {
     sweep
 }
 
+/// The robustness axis (PR 8): every scheduler with the failure
+/// detector, a partition window, a crash window, offload retries, hedged
+/// duplicates, and bandwidth staleness all armed at once, on a lossy,
+/// probe-dropping link. Detection, stall/heal, timeout rescheduling, and
+/// hedge settlement all ride the seed-derived streams, so the rows must
+/// be identical across worker-thread counts and repeats.
+fn chaos_grid() -> Sweep {
+    let mut sweep = Sweep::new();
+    for (i, kind) in [SchedKind::Wps, SchedKind::Ras, SchedKind::Multi].into_iter().enumerate() {
+        sweep = sweep.add(
+            ScenarioBuilder::new()
+                .scheduler(kind)
+                .trace(TraceSpec::Weighted(4))
+                .frames(16)
+                .seed(900 + i as u64)
+                .detector(2, 2)
+                .offload_timeout(0.4, 2)
+                .hedge(0.4)
+                .bw_stale_after(2)
+                .loss_rate(0.08)
+                .probe_loss(0.3)
+                .crash_at(60.0, 2)
+                .recover_at(150.0, 2)
+                .partition_at(90.0, 1)
+                .heal_at(180.0, 1)
+                .named(format!("{}_chaos", kind.label()))
+                .build(),
+        );
+    }
+    sweep
+}
+
+#[test]
+fn chaos_grid_identical_across_thread_counts() {
+    let g = chaos_grid();
+    let seq = rows_debug(&g.clone().threads(1));
+    let par4 = rows_debug(&g.clone().threads(4));
+    let par2 = rows_debug(&g.threads(2));
+    assert_eq!(seq.len(), 3);
+    for (i, row) in seq.iter().enumerate() {
+        assert_eq!(row, &par4[i], "chaos row {i} differs between --threads 1 and --threads 4");
+        assert_eq!(row, &par2[i], "chaos row {i} differs between --threads 1 and --threads 2");
+    }
+}
+
+#[test]
+fn chaos_grid_identical_across_repeated_runs() {
+    let g = chaos_grid().threads(4);
+    assert_eq!(rows_debug(&g), rows_debug(&g), "re-running the chaos sweep must not drift");
+}
+
+#[test]
+fn chaos_grid_actually_fires_the_robustness_machinery() {
+    // Guard against a silently inert axis: the detector must suspect,
+    // the partition must stall work, and the recovery policy (retry or
+    // hedge) must fire somewhere — while the conservation identity
+    // closes in every row.
+    let rows = chaos_grid().threads(2).run();
+    assert!(rows.iter().any(|m| m.devices_suspected > 0), "detector never suspected anyone");
+    assert!(
+        rows.iter().any(|m| m.retries + m.hedges_launched > 0),
+        "recovery policy never fired"
+    );
+    for m in &rows {
+        assert_eq!(m.partitions_started, 1, "{}: partition window missing", m.label);
+        assert_eq!(m.partitions_healed, 1, "{}: heal missing", m.label);
+        assert_eq!(
+            m.lp_generated,
+            m.lp_completed_total() + m.lp_violations + m.lp_lost,
+            "{}: lp conservation",
+            m.label
+        );
+        assert!(m.hedges_won + m.hedges_wasted <= m.hedges_launched, "{}: hedge settle", m.label);
+    }
+}
+
 #[test]
 fn energy_grid_identical_across_thread_counts() {
     let g = energy_grid();

@@ -171,6 +171,35 @@ fn zero_energy_model_replays_golden_rows_byte_for_byte() {
     }
 }
 
+/// The robustness layer (PR 8) must be provably zero-cost when every
+/// knob is off: the golden scenario with the failure detector, offload
+/// timeout/retry, hedging, and bandwidth staleness all set to their
+/// explicit OFF values (0 everywhere) replays `json_rows`
+/// **byte-identically** to the untouched builder, for every scheduler —
+/// through the full churn/fault/congestion path the snapshots pin. This
+/// guards the off-values themselves: `detector(0, 0)` must construct a
+/// disabled detector, not a hair-trigger one, and a zero timeout must
+/// schedule nothing.
+#[test]
+fn zero_robustness_knobs_replay_golden_rows_byte_for_byte() {
+    for kind in [SchedKind::Wps, SchedKind::Ras, SchedKind::Multi] {
+        let plain = report::json_rows(&[golden_scenario(kind)]);
+        let knobbed = report::json_rows(&[golden_builder(kind)
+            .detector(0, 0)
+            .offload_timeout(0.0, 0)
+            .hedge(0.0)
+            .bw_stale_after(0)
+            .build()
+            .run()]);
+        assert_eq!(
+            plain,
+            knobbed,
+            "{}: explicit zero robustness knobs must be byte-identical to defaults",
+            kind.label()
+        );
+    }
+}
+
 /// Determinism assertion for the fault path specifically: the golden
 /// scenario crashes device 3 with work in flight, so every replay
 /// exercises the crash orphan scan. That scan now iterates the medium's

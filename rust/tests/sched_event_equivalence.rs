@@ -320,6 +320,61 @@ fn deep_ladder_variant_selections_are_well_formed() {
     }
 }
 
+/// Suspicion well-formedness (PR 8): while a device is believed down
+/// ([`SchedEvent::DeviceSuspected`]), neither scheduler may place ANY
+/// work on it — it leaves the candidate pool like a crashed device.
+/// After [`SchedEvent::DeviceCleared`] it must become placeable again.
+/// Driven over the same random event stream the equivalence suite uses,
+/// so the guarantee holds under realistic interleavings, not a
+/// hand-picked sequence.
+#[test]
+fn suspected_devices_receive_no_placements_until_cleared() {
+    let cfg = SystemConfig { seed: 42, ..Default::default() };
+    let suspect: usize = cfg.n_devices - 1;
+    for (tag, seed) in [("RAS", 0x5059_01u64), ("WPS", 0x5059_02)] {
+        let evs = gen_events(&mut Rng::seed_from_u64(seed), &cfg, 600);
+        let mut s: Box<dyn Scheduler> = if tag == "RAS" {
+            Box::new(RasScheduler::new(&cfg, 0, cfg.link_bps))
+        } else {
+            Box::new(WpsScheduler::new(&cfg, 0, cfg.link_bps))
+        };
+        let (mut placed_before, mut placed_after) = (0u32, 0u32);
+        for (i, (now, ev)) in evs.iter().enumerate() {
+            // First third: normal. Middle third: `suspect` is believed
+            // down. Last third: cleared again.
+            if i == evs.len() / 3 {
+                s.on_event(*now, SchedEvent::DeviceSuspected { device: suspect });
+            } else if i == 2 * evs.len() / 3 {
+                s.on_event(*now, SchedEvent::DeviceCleared { device: suspect });
+            }
+            let suspected_now = (evs.len() / 3..2 * evs.len() / 3).contains(&i);
+            let d = replay_laddered(&mut *s, std::slice::from_ref(&(*now, ev.clone())), &[]);
+            for dec in &d {
+                if let Outcome::LpAllocated { allocs } = &dec.outcome {
+                    for a in allocs {
+                        if a.device == suspect {
+                            assert!(
+                                !suspected_now,
+                                "{tag}: event {i} placed task {} on suspected device {suspect}",
+                                a.task
+                            );
+                            if i < evs.len() / 3 {
+                                placed_before += 1;
+                            } else {
+                                placed_after += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // Guard against vacuity: the device must actually attract work
+        // when it is believed up, on both sides of the window.
+        assert!(placed_before > 0, "{tag}: device {suspect} never placed before suspicion");
+        assert!(placed_after > 0, "{tag}: device {suspect} never placed after clearing");
+    }
+}
+
 /// The paper treats a low-priority batch atomically: a rejection must
 /// leave the committed state exactly as it was (partial placements rolled
 /// back), and that guarantee must survive the `Decision` migration on
