@@ -52,7 +52,22 @@ impl EnergyScheduler {
 
     /// Edge ladder first (shared [`place_degrading`] policy over the
     /// energy-scored exact search), cloud last, at the deepest rung.
+    /// Explainability records route through the inner exact-state
+    /// scheduler's buffer (labelled "ENERGY" by its score mode), because
+    /// this path bypasses the inner [`Scheduler::on_event`] hooks.
     fn place_low(
+        &mut self,
+        now: SimTime,
+        tasks: &[&Task],
+        ladder: &[VariantRung],
+        realloc: bool,
+    ) -> Decision {
+        let d = self.place_low_inner(now, tasks, ladder, realloc);
+        self.inner.explain_lp_decision(tasks, &d);
+        d
+    }
+
+    fn place_low_inner(
         &mut self,
         now: SimTime,
         tasks: &[&Task],
@@ -124,6 +139,14 @@ impl Scheduler for EnergyScheduler {
     fn state(&self) -> &WorkloadState {
         self.inner.state()
     }
+
+    fn set_explain(&mut self, on: bool) {
+        self.inner.explain_set(on);
+    }
+
+    fn drain_decisions(&mut self) -> Vec<crate::obs::DecisionRecord> {
+        self.inner.explain_drain()
+    }
 }
 
 #[cfg(test)]
@@ -191,6 +214,31 @@ mod tests {
         let Outcome::LpAllocated { allocs } = d.outcome else { panic!("{:?}", d.outcome) };
         assert!(allocs[0].device < c.n_devices);
         assert_eq!(allocs[0].end - allocs[0].start, 2_000_000);
+    }
+
+    #[test]
+    fn explain_records_carry_the_energy_label_and_cloud_flag() {
+        let c = cloud_cfg();
+        let mut s = sched(&c);
+        s.set_explain(true);
+        let deadline = c.frame_period();
+        let mut last = None;
+        for id in 1..=9u64 {
+            let t = Task::low(id, id, (id as usize - 1) % c.n_devices, 0, deadline, &c);
+            let refs = task_refs(std::slice::from_ref(&t));
+            last = Some(s.on_event(
+                0,
+                SchedEvent::LowPriorityBatch { tasks: &refs, realloc: false, ladder: &[] },
+            ));
+        }
+        let Outcome::LpAllocated { allocs } = last.unwrap().outcome else { panic!() };
+        assert_eq!(allocs[0].device, c.n_devices);
+        let recs = s.drain_decisions();
+        assert_eq!(recs.len(), 9, "one record per placement decision");
+        assert!(recs.iter().all(|r| r.scheduler == "ENERGY"));
+        assert!(!recs[0].cloud, "first task lands on the idle edge");
+        assert!(recs[8].cloud, "overflow work is attributed to the cloud");
+        assert_eq!(recs[8].outcome(), "cloud");
     }
 
     #[test]

@@ -513,6 +513,65 @@ pub trait Scheduler {
     fn reject_diag(&self) -> [u64; 4] {
         [0; 4]
     }
+
+    /// Enable (or disable) decision explainability: while on, placement
+    /// dispatches record [`crate::obs::DecisionRecord`]s (per-candidate
+    /// scores, rejection reasons, the chosen rung) for the engine's
+    /// flight recorder to drain. Off by default and a no-op for
+    /// schedulers that don't explain themselves — the zero-cost-when-off
+    /// contract is theirs to keep (no allocation, no extra work while
+    /// disabled).
+    fn set_explain(&mut self, _on: bool) {}
+
+    /// Drain the decision records accumulated since the last call, in
+    /// decision order. Returns an empty vec (no allocation) while
+    /// explainability is off.
+    fn drain_decisions(&mut self) -> Vec<crate::obs::DecisionRecord> {
+        Vec::new()
+    }
+}
+
+/// Most excluded-device candidates a single [`crate::obs::DecisionRecord`]
+/// enumerates: explainability is a debug surface and must stay cheap and
+/// bounded on 100k-device fleets — the cap is deterministic (always the
+/// lowest device ids), so recordings remain bit-identical across runs.
+pub const EXPLAIN_CANDIDATE_CAP: usize = 64;
+
+/// Shared explainability buffer the schedulers embed: a gate plus a
+/// record list. All pushes route through [`ExplainLog::push`], which is
+/// a single branch while disabled — the schedulers only *construct* a
+/// record (candidate vectors and all) after checking [`ExplainLog::on`],
+/// so the off path allocates nothing.
+#[derive(Debug, Clone, Default)]
+pub struct ExplainLog {
+    on: bool,
+    records: Vec<crate::obs::DecisionRecord>,
+}
+
+impl ExplainLog {
+    pub fn set(&mut self, on: bool) {
+        self.on = on;
+        if !on {
+            self.records = Vec::new();
+        }
+    }
+
+    /// Whether records should be constructed at all.
+    pub fn on(&self) -> bool {
+        self.on
+    }
+
+    pub fn push(&mut self, rec: crate::obs::DecisionRecord) {
+        if self.on {
+            self.records.push(rec);
+        }
+    }
+
+    /// Take everything recorded so far (empty + allocation-free when off
+    /// or drained).
+    pub fn drain(&mut self) -> Vec<crate::obs::DecisionRecord> {
+        std::mem::take(&mut self.records)
+    }
 }
 
 /// Callback-style compatibility shim over the typed event API: the
@@ -1029,5 +1088,31 @@ mod tests {
         });
         assert_eq!(d.outcome, Outcome::LpRejected);
         assert_eq!(d.ops, 2 * 5 + 2 * crate::coordinator::cost::CLOUD_CHECK_OPS);
+    }
+
+    #[test]
+    fn explain_log_gates_and_drains() {
+        let rec = || crate::obs::DecisionRecord {
+            scheduler: "test",
+            task: 1,
+            batch: 1,
+            high_priority: true,
+            candidates: Vec::new(),
+            chosen: None,
+            rung: None,
+            cloud: false,
+        };
+        let mut log = ExplainLog::default();
+        assert!(!log.on(), "explainability must default OFF");
+        log.push(rec());
+        assert!(log.drain().is_empty(), "pushes while off are dropped");
+        log.set(true);
+        log.push(rec());
+        log.push(rec());
+        assert_eq!(log.drain().len(), 2);
+        assert!(log.drain().is_empty(), "drain takes everything");
+        log.push(rec());
+        log.set(false);
+        assert!(log.drain().is_empty(), "disabling clears pending records");
     }
 }

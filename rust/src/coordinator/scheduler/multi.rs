@@ -14,10 +14,11 @@
 use super::ras_sched::RasScheduler;
 use super::wps::WpsScheduler;
 use super::{
-    place_degrading_tiered, CloudPlan, Decision, HpOutcome, LpOutcome, Ops, Outcome, SchedEvent,
-    Scheduler, WorkloadState,
+    place_degrading_tiered, CloudPlan, Decision, ExplainLog, HpOutcome, LpOutcome, Ops, Outcome,
+    SchedEvent, Scheduler, WorkloadState,
 };
 use crate::config::SystemConfig;
+use crate::obs::{CandidateScore, DecisionRecord, RejectReason};
 use crate::coordinator::task::{Allocation, DeviceId, Task, TaskId};
 use crate::time::SimTime;
 
@@ -42,6 +43,13 @@ pub struct MultiScheduler {
     /// Cloud tier (None when `cloud_wan_bps` is 0): owned here so the
     /// fallback applies regardless of which inner scheduler is active.
     cloud: Option<CloudPlan>,
+    /// Explainability buffer ([`Scheduler::set_explain`]). Records are
+    /// built here, not in the inners (routing bypasses their
+    /// `on_event` hooks), labelled by the inner that served the request.
+    explain: ExplainLog,
+    /// Inner scheduler the most recent placement request routed to —
+    /// the contextual switch is exactly what the records must expose.
+    last_owner: Owner,
 }
 
 impl MultiScheduler {
@@ -55,6 +63,8 @@ impl MultiScheduler {
             wps_requests: 0,
             ras_requests: 0,
             cloud: CloudPlan::from_config(cfg),
+            explain: ExplainLog::default(),
+            last_owner: Owner::Wps,
         }
     }
 
@@ -95,6 +105,7 @@ impl MultiScheduler {
             self.wps_requests += 1;
             (Owner::Wps, self.wps.schedule_high(now, task))
         };
+        self.last_owner = owner;
         match &out {
             HpOutcome::Allocated { alloc, .. } => self.record(owner, std::slice::from_ref(alloc)),
             HpOutcome::Preempted { alloc, victims, .. } => {
@@ -123,11 +134,83 @@ impl MultiScheduler {
             self.wps_requests += 1;
             (Owner::Wps, self.wps.schedule_low(now, tasks, realloc))
         };
+        self.last_owner = owner;
         if let LpOutcome::Allocated { allocs, .. } = &out {
             let allocs = allocs.clone();
             self.record(owner, &allocs);
         }
         out
+    }
+
+    /// Record label: which inner served the final routed attempt — the
+    /// contextual switch made visible per decision.
+    fn explain_label(&self) -> &'static str {
+        match self.last_owner {
+            Owner::Wps => "MULTI/WPS",
+            Owner::Ras => "MULTI/RAS",
+        }
+    }
+
+    /// Explainability record for a high-priority decision.
+    fn explain_hp(&mut self, task: &Task, d: &Decision) {
+        let (chosen, reject, score) = match &d.outcome {
+            Outcome::HpAllocated { alloc, .. } => {
+                (Some((alloc.device, alloc.cores as u8)), None, alloc.end as f64)
+            }
+            _ => (None, Some(RejectReason::WindowInfeasible), f64::INFINITY),
+        };
+        self.explain.push(DecisionRecord {
+            scheduler: self.explain_label(),
+            task: task.id,
+            batch: 1,
+            high_priority: true,
+            candidates: vec![CandidateScore { device: task.source, score, reject }],
+            chosen,
+            rung: None,
+            cloud: false,
+        });
+    }
+
+    /// Explainability record for one low-priority decision (shared by
+    /// `LowPriorityBatch` and `Reoffer`). The score is the planned finish
+    /// time — the one quantity both inner abstractions agree on.
+    fn explain_lp(&mut self, tasks: &[&Task], d: &Decision) {
+        let cloud_dev = self.cloud.as_ref().map(|c| c.device);
+        let mut candidates: Vec<CandidateScore> = Vec::new();
+        let mut chosen = None;
+        let mut cloud = false;
+        match &d.outcome {
+            Outcome::LpAllocated { allocs } => {
+                for a in allocs {
+                    if Some(a.device) == cloud_dev {
+                        cloud = true;
+                    }
+                    candidates.push(CandidateScore {
+                        device: a.device,
+                        score: a.end as f64,
+                        reject: None,
+                    });
+                }
+                chosen = allocs.first().map(|a| (a.device, a.cores as u8));
+            }
+            _ => {
+                candidates.push(CandidateScore {
+                    device: tasks.first().map(|t| t.source).unwrap_or(0),
+                    score: f64::INFINITY,
+                    reject: Some(RejectReason::WindowInfeasible),
+                });
+            }
+        }
+        self.explain.push(DecisionRecord {
+            scheduler: self.explain_label(),
+            task: tasks.first().map(|t| t.id).unwrap_or(0),
+            batch: tasks.len(),
+            high_priority: false,
+            candidates,
+            chosen,
+            rung: d.variant.map(|v| v as usize),
+            cloud,
+        });
     }
 
     /// Task finished: both inner schedulers must see the state change.
@@ -175,7 +258,13 @@ impl Scheduler for MultiScheduler {
 
     fn on_event(&mut self, now: SimTime, ev: SchedEvent<'_>) -> Decision {
         match ev {
-            SchedEvent::HighPriority { task } => self.schedule_high(now, task).into(),
+            SchedEvent::HighPriority { task } => {
+                let d: Decision = self.schedule_high(now, task).into();
+                if self.explain.on() {
+                    self.explain_hp(task, &d);
+                }
+                d
+            }
             SchedEvent::LowPriorityBatch { tasks, realloc, ladder } => {
                 // The shared policy wraps the load-routed placement:
                 // every rung is routed afresh, so a batch whose rung 0
@@ -186,9 +275,14 @@ impl Scheduler for MultiScheduler {
                 // cloud placements bypass `record` entirely (they hold no
                 // edge resources).
                 let cloud = self.cloud;
-                place_degrading_tiered(now, tasks, ladder, realloc, cloud.as_ref(), |n, ts, r| {
-                    self.schedule_low(n, ts, r)
-                })
+                let d =
+                    place_degrading_tiered(now, tasks, ladder, realloc, cloud.as_ref(), |n, ts, r| {
+                        self.schedule_low(n, ts, r)
+                    });
+                if self.explain.on() {
+                    self.explain_lp(tasks, &d);
+                }
+                d
             }
             SchedEvent::Complete { task } => {
                 self.on_complete(now, task);
@@ -214,9 +308,13 @@ impl Scheduler for MultiScheduler {
                 // both inner views consistent with the re-placement, and
                 // the remaining ladder tail may degrade it further.
                 let cloud = self.cloud;
-                place_degrading_tiered(now, tasks, ladder, true, cloud.as_ref(), |n, ts, r| {
+                let d = place_degrading_tiered(now, tasks, ladder, true, cloud.as_ref(), |n, ts, r| {
                     self.schedule_low(n, ts, r)
-                })
+                });
+                if self.explain.on() {
+                    self.explain_lp(tasks, &d);
+                }
+                d
             }
             SchedEvent::CloudBandwidthUpdate { bps } => {
                 if let Some(c) = &mut self.cloud {
@@ -265,6 +363,14 @@ impl Scheduler for MultiScheduler {
 
     fn state(&self) -> &WorkloadState {
         &self.merged
+    }
+
+    fn set_explain(&mut self, on: bool) {
+        self.explain.set(on);
+    }
+
+    fn drain_decisions(&mut self) -> Vec<DecisionRecord> {
+        self.explain.drain()
     }
 }
 
@@ -336,6 +442,39 @@ mod tests {
         let Outcome::Ack { evicted } = d.outcome else { panic!("ack expected") };
         assert_eq!(evicted.len(), 1);
         assert!(s.state().device_allocs(dev).next().is_none());
+    }
+
+    #[test]
+    fn explain_records_expose_the_contextual_switch() {
+        use crate::coordinator::task::VariantRung;
+        let c = cfg();
+        let mut s = MultiScheduler::new(&c, 0, c.link_bps, 3);
+        s.set_explain(true);
+        let ladder = [VariantRung {
+            accuracy: 0.97,
+            input_bytes: c.image_bytes,
+            proc_us: [c.lp2_proc(), c.lp4_proc()],
+        }];
+        // Light load routes to WPS, then the live state crosses the
+        // threshold and the next batch routes to RAS — the records must
+        // show exactly that switch.
+        let b1 = lp_batch(1, 3, 0, 0, &c);
+        let refs = task_refs(&b1);
+        let _ = s.on_event(
+            0,
+            SchedEvent::LowPriorityBatch { tasks: &refs, realloc: false, ladder: &ladder },
+        );
+        let b2 = lp_batch(11, 2, 1, 0, &c);
+        let refs = task_refs(&b2);
+        let _ = s.on_event(
+            0,
+            SchedEvent::LowPriorityBatch { tasks: &refs, realloc: false, ladder: &ladder },
+        );
+        let recs = s.drain_decisions();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].scheduler, "MULTI/WPS");
+        assert_eq!(recs[1].scheduler, "MULTI/RAS");
+        assert!(recs.iter().all(|r| r.chosen.is_some()));
     }
 
     #[test]

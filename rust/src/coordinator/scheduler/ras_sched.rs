@@ -3,10 +3,11 @@
 //! estimation (Sections IV-A and IV-B).
 
 use super::{
-    place_degrading_tiered, select_victim, CloudPlan, Decision, HpOutcome, LpOutcome, Ops,
-    Outcome, SchedEvent, Scheduler, WorkloadState,
+    place_degrading_tiered, select_victim, CloudPlan, Decision, ExplainLog, HpOutcome, LpOutcome,
+    Ops, Outcome, SchedEvent, Scheduler, WorkloadState, EXPLAIN_CANDIDATE_CAP,
 };
 use crate::config::SystemConfig;
+use crate::obs::{CandidateScore, DecisionRecord, RejectReason};
 use crate::coordinator::fleet::{FleetCells, LazyShuffle};
 use crate::coordinator::netlink::{CommTask, DiscretisedLink};
 use crate::coordinator::ras::{DeviceAvailability, WindowRef};
@@ -80,6 +81,9 @@ pub struct RasScheduler {
     /// extra placement target checked after the availability lists and
     /// the discretised link reject a rung.
     cloud: Option<CloudPlan>,
+    /// Explainability buffer ([`Scheduler::set_explain`]): off by
+    /// default, so the hot path never constructs a record.
+    explain: ExplainLog,
 }
 
 impl RasScheduler {
@@ -102,6 +106,7 @@ impl RasScheduler {
             cascade_dropped: 0,
             reject_reasons: [0; 4],
             cloud: CloudPlan::from_config(cfg),
+            explain: ExplainLog::default(),
             cfg: cfg.clone(),
         }
     }
@@ -305,7 +310,7 @@ impl RasScheduler {
                 .len();
             *ops += self.devices[source].list(config).track_count() as Ops;
             if local < tasks.len() {
-                self.reject_reasons[1] += 1;
+                self.reject_reasons[1] = self.reject_reasons[1].saturating_add(1);
                 return None;
             }
         }
@@ -338,7 +343,7 @@ impl RasScheduler {
             self.pick_windows_lazy(now, tasks.len(), deadline, config, proc, source, unit, ops)
         };
         let Some(picks) = picks else {
-            self.reject_reasons[2] += 1;
+            self.reject_reasons[2] = self.reject_reasons[2].saturating_add(1);
             return None;
         };
 
@@ -363,7 +368,7 @@ impl RasScheduler {
                 match placed {
                     Some((_idx, c1, c2)) => (fit_start.max(c2), Some((c1, c2))),
                     None => {
-                        self.reject_reasons[3] += 1;
+                        self.reject_reasons[3] = self.reject_reasons[3].saturating_add(1);
                         *ops += self.rollback(&committed, now);
                         return None;
                     }
@@ -380,7 +385,7 @@ impl RasScheduler {
                     .unwrap_or(false)
             };
             if end > task.deadline || !window_ok {
-                self.reject_reasons[3] += 1;
+                self.reject_reasons[3] = self.reject_reasons[3].saturating_add(1);
                 *ops += self.rollback(&committed, now);
                 return None;
             }
@@ -695,7 +700,7 @@ impl RasScheduler {
         // Step 1: enumerate viable core configurations (or exit early).
         let configs = self.viable_configs(now, tasks[0], deadline);
         if configs.is_empty() {
-            self.reject_reasons[0] += 1;
+            self.reject_reasons[0] = self.reject_reasons[0].saturating_add(1);
             return LpOutcome::Rejected { ops: 1 };
         }
         for config in configs {
@@ -707,6 +712,99 @@ impl RasScheduler {
         LpOutcome::Rejected { ops }
     }
 
+
+    /// Explainability record for a high-priority decision. HP work is
+    /// pinned to its source device, so the candidate set is that single
+    /// device; the score is the planned finish time (lower = earlier).
+    fn explain_hp(&mut self, task: &Task, d: &Decision) {
+        let (chosen, reject, score) = match &d.outcome {
+            Outcome::HpAllocated { alloc, .. } => {
+                (Some((alloc.device, alloc.cores as u8)), None, alloc.end as f64)
+            }
+            _ if !self.device_active(task.source) => {
+                (None, Some(RejectReason::Offline), f64::INFINITY)
+            }
+            _ => (None, Some(RejectReason::WindowInfeasible), f64::INFINITY),
+        };
+        self.explain.push(DecisionRecord {
+            scheduler: "RAS",
+            task: task.id,
+            batch: 1,
+            high_priority: true,
+            candidates: vec![CandidateScore { device: task.source, score, reject }],
+            chosen,
+            rung: None,
+            cloud: false,
+        });
+    }
+
+    /// Explainability record for one low-priority decision (shared by
+    /// `LowPriorityBatch` and `Reoffer`). Placed batches list every
+    /// device that took work (score = planned finish time); rejections
+    /// attribute the failure from the [`Self::reject_reasons`] delta —
+    /// "insufficient windows" means the availability census collapsed
+    /// ([`RejectReason::CellCollapsed`]), anything else is a window /
+    /// link / commit infeasibility at this deadline. Suspected and
+    /// departed devices are appended as rejected candidates (bounded by
+    /// [`EXPLAIN_CANDIDATE_CAP`], lowest ids first, deterministic).
+    fn explain_lp(&mut self, tasks: &[&Task], d: &Decision, rr_before: [u64; 4]) {
+        let cloud_dev = self.cloud.as_ref().map(|c| c.device);
+        let mut candidates: Vec<CandidateScore> = Vec::new();
+        let mut chosen = None;
+        let mut cloud = false;
+        match &d.outcome {
+            Outcome::LpAllocated { allocs } => {
+                for a in allocs {
+                    if Some(a.device) == cloud_dev {
+                        cloud = true;
+                    }
+                    candidates.push(CandidateScore {
+                        device: a.device,
+                        score: a.end as f64,
+                        reject: None,
+                    });
+                }
+                chosen = allocs.first().map(|a| (a.device, a.cores as u8));
+            }
+            _ => {
+                let reason = if self.reject_reasons[2] > rr_before[2] {
+                    RejectReason::CellCollapsed
+                } else {
+                    RejectReason::WindowInfeasible
+                };
+                candidates.push(CandidateScore {
+                    device: tasks.first().map(|t| t.source).unwrap_or(0),
+                    score: f64::INFINITY,
+                    reject: Some(reason),
+                });
+            }
+        }
+        for dev in 0..self.devices.len().min(EXPLAIN_CANDIDATE_CAP) {
+            if self.device_suspected(dev) {
+                candidates.push(CandidateScore {
+                    device: dev,
+                    score: f64::INFINITY,
+                    reject: Some(RejectReason::Suspected),
+                });
+            } else if !self.active[dev] {
+                candidates.push(CandidateScore {
+                    device: dev,
+                    score: f64::INFINITY,
+                    reject: Some(RejectReason::Offline),
+                });
+            }
+        }
+        self.explain.push(DecisionRecord {
+            scheduler: "RAS",
+            task: tasks.first().map(|t| t.id).unwrap_or(0),
+            batch: tasks.len(),
+            high_priority: false,
+            candidates,
+            chosen,
+            rung: d.variant.map(|v| v as usize),
+            cloud,
+        });
+    }
 
     /// Task finished (free its resources from the scheduler's state).
     pub fn on_complete(&mut self, _now: SimTime, task: TaskId) {
@@ -861,7 +959,13 @@ impl Scheduler for RasScheduler {
 
     fn on_event(&mut self, now: SimTime, ev: SchedEvent<'_>) -> Decision {
         match ev {
-            SchedEvent::HighPriority { task } => self.schedule_high(now, task).into(),
+            SchedEvent::HighPriority { task } => {
+                let d: Decision = self.schedule_high(now, task).into();
+                if self.explain.on() {
+                    self.explain_hp(task, &d);
+                }
+                d
+            }
             SchedEvent::LowPriorityBatch { tasks, realloc, ladder } => {
                 // Shared degradation policy over this scheduler's own
                 // feasibility verdict: RAS steps down when its
@@ -872,9 +976,15 @@ impl Scheduler for RasScheduler {
                 // RAS's conservatism shows up as cloud traffic, not as
                 // extra degradation.
                 let cloud = self.cloud;
-                place_degrading_tiered(now, tasks, ladder, realloc, cloud.as_ref(), |n, ts, r| {
-                    self.schedule_low(n, ts, r)
-                })
+                let rr_before = self.reject_reasons;
+                let d =
+                    place_degrading_tiered(now, tasks, ladder, realloc, cloud.as_ref(), |n, ts, r| {
+                        self.schedule_low(n, ts, r)
+                    });
+                if self.explain.on() {
+                    self.explain_lp(tasks, &d, rr_before);
+                }
+                d
             }
             SchedEvent::Complete { task } => {
                 self.on_complete(now, task);
@@ -903,9 +1013,14 @@ impl Scheduler for RasScheduler {
                 // ladder tail still applies — a re-offer may degrade
                 // further (or spill to the cloud) before dropping.
                 let cloud = self.cloud;
-                place_degrading_tiered(now, tasks, ladder, true, cloud.as_ref(), |n, ts, r| {
+                let rr_before = self.reject_reasons;
+                let d = place_degrading_tiered(now, tasks, ladder, true, cloud.as_ref(), |n, ts, r| {
                     self.schedule_low(n, ts, r)
-                })
+                });
+                if self.explain.on() {
+                    self.explain_lp(tasks, &d, rr_before);
+                }
+                d
             }
             SchedEvent::CloudBandwidthUpdate { bps } => {
                 // Passive WAN estimate refresh — no discretised-link
@@ -938,6 +1053,14 @@ impl Scheduler for RasScheduler {
 
     fn reject_diag(&self) -> [u64; 4] {
         self.reject_reasons
+    }
+
+    fn set_explain(&mut self, on: bool) {
+        self.explain.set(on);
+    }
+
+    fn drain_decisions(&mut self) -> Vec<DecisionRecord> {
+        self.explain.drain()
     }
 }
 
@@ -1024,6 +1147,64 @@ mod tests {
         let mut s = RasScheduler::new(&c, 0, c.link_bps);
         let tasks = vec![Task::low(1, 1, 0, 0, c.lp4_proc() - 1, &c)];
         assert!(matches!(s.schedule_low(0, &task_refs(&tasks), false), LpOutcome::Rejected { .. }));
+    }
+
+    #[test]
+    fn explain_mode_records_placement_decisions() {
+        use crate::coordinator::task::VariantRung;
+        let c = cfg();
+        let mut s = RasScheduler::new(&c, 0, c.link_bps);
+        let ladder = [VariantRung {
+            accuracy: 0.97,
+            input_bytes: c.image_bytes,
+            proc_us: [c.lp2_proc(), c.lp4_proc()],
+        }];
+        // Off by default: decisions leave no records behind.
+        let tasks = lp_batch(10, 2, 0, 0, &c);
+        let refs = task_refs(&tasks);
+        let d = s.on_event(
+            0,
+            SchedEvent::LowPriorityBatch { tasks: &refs, realloc: false, ladder: &ladder },
+        );
+        assert!(matches!(d.outcome, Outcome::LpAllocated { .. }));
+        assert!(s.drain_decisions().is_empty(), "explain off must record nothing");
+
+        s.set_explain(true);
+        let tasks = lp_batch(20, 2, 0, 1_000, &c);
+        let refs = task_refs(&tasks);
+        let d = s.on_event(
+            1_000,
+            SchedEvent::LowPriorityBatch { tasks: &refs, realloc: false, ladder: &ladder },
+        );
+        assert!(matches!(d.outcome, Outcome::LpAllocated { .. }));
+        let _ = s.on_event(1_000, SchedEvent::HighPriority { task: &hp(30, 1, 1_000, &c) });
+        let recs = s.drain_decisions();
+        assert_eq!(recs.len(), 2, "one record per placement decision");
+        let lp = &recs[0];
+        assert_eq!(lp.scheduler, "RAS");
+        assert_eq!(lp.batch, 2);
+        assert!(!lp.high_priority);
+        assert!(lp.chosen.is_some());
+        assert_eq!(lp.rung, None, "single-rung ladder places untouched");
+        assert!(!lp.cloud);
+        assert_eq!(lp.candidates.iter().filter(|x| x.reject.is_none()).count(), 2);
+        let hp_rec = &recs[1];
+        assert!(hp_rec.high_priority);
+        assert_eq!(hp_rec.outcome(), "placed");
+        assert!(s.drain_decisions().is_empty(), "drain takes everything");
+
+        // A suspected device surfaces as a rejected candidate.
+        s.on_device_suspected(2);
+        let tasks = lp_batch(40, 1, 0, 2_000, &c);
+        let refs = task_refs(&tasks);
+        let _ = s.on_event(
+            2_000,
+            SchedEvent::LowPriorityBatch { tasks: &refs, realloc: false, ladder: &ladder },
+        );
+        let recs = s.drain_decisions();
+        assert!(recs[0].candidates.iter().any(|x| {
+            x.device == 2 && x.reject == Some(crate::obs::RejectReason::Suspected)
+        }));
     }
 
     #[test]

@@ -21,10 +21,11 @@
 //! exactly what the paper's congestion experiments punish.
 
 use super::{
-    place_degrading_tiered, select_victim, CloudPlan, Decision, HpOutcome, LpOutcome, Ops,
-    Outcome, SchedEvent, Scheduler, WorkloadState,
+    place_degrading_tiered, select_victim, CloudPlan, Decision, ExplainLog, HpOutcome, LpOutcome,
+    Ops, Outcome, SchedEvent, Scheduler, WorkloadState, EXPLAIN_CANDIDATE_CAP,
 };
 use crate::config::SystemConfig;
+use crate::obs::{CandidateScore, DecisionRecord, RejectReason};
 use crate::coordinator::cost::ENERGY_SCORE_OPS;
 use crate::coordinator::fleet::FleetCells;
 use crate::coordinator::task::{Allocation, DeviceId, Task, TaskConfig, TaskId};
@@ -84,6 +85,12 @@ pub struct WpsScheduler {
     /// Battery fractions by device (empty until the engine reports them;
     /// missing entries read as 1.0 = mains-powered).
     levels: Vec<f64>,
+    /// Explainability buffer ([`Scheduler::set_explain`]): off by
+    /// default, so the exhaustive search never constructs a record. The
+    /// energy variant shares this buffer (its LP path bypasses
+    /// [`Scheduler::on_event`] and records via
+    /// [`WpsScheduler::explain_lp_decision`]).
+    explain: ExplainLog,
 }
 
 impl WpsScheduler {
@@ -99,6 +106,7 @@ impl WpsScheduler {
             cloud: CloudPlan::from_config(cfg),
             mode: ScoreMode::Latency,
             levels: Vec::new(),
+            explain: ExplainLog::default(),
         }
     }
 
@@ -553,6 +561,128 @@ impl WpsScheduler {
         Some((alloc, sc))
     }
 
+    /// Record label: the exact-state machinery serves both the published
+    /// baseline and the energy variant — the score mode is the identity.
+    fn explain_label(&self) -> &'static str {
+        match self.mode {
+            ScoreMode::Latency => "WPS",
+            ScoreMode::Energy { .. } => "ENERGY",
+        }
+    }
+
+    /// Excluded-candidate tail shared by the HP and LP records: suspected
+    /// and departed devices, bounded by [`EXPLAIN_CANDIDATE_CAP`] (lowest
+    /// ids first — deterministic). A departed device whose battery read
+    /// empty is attributed to the battery, not generic churn.
+    fn explain_excluded(&self, candidates: &mut Vec<CandidateScore>) {
+        for dev in 0..self.active.len().min(EXPLAIN_CANDIDATE_CAP) {
+            let reject = if self.device_suspected(dev) {
+                Some(RejectReason::Suspected)
+            } else if !self.active[dev] {
+                if self.levels.get(dev).copied().unwrap_or(1.0) <= 0.0 {
+                    Some(RejectReason::Battery)
+                } else {
+                    Some(RejectReason::Offline)
+                }
+            } else {
+                None
+            };
+            if let Some(reject) = reject {
+                candidates.push(CandidateScore {
+                    device: dev,
+                    score: f64::INFINITY,
+                    reject: Some(reject),
+                });
+            }
+        }
+    }
+
+    /// Explainability record for a high-priority decision (source-pinned:
+    /// the candidate set is the single source device).
+    fn explain_hp(&mut self, task: &Task, d: &Decision) {
+        let (chosen, reject, score) = match &d.outcome {
+            Outcome::HpAllocated { alloc, .. } => {
+                (Some((alloc.device, alloc.cores as u8)), None, alloc.end as f64)
+            }
+            _ if !self.device_active(task.source) => {
+                (None, Some(RejectReason::Offline), f64::INFINITY)
+            }
+            _ => (None, Some(RejectReason::WindowInfeasible), f64::INFINITY),
+        };
+        self.explain.push(DecisionRecord {
+            scheduler: self.explain_label(),
+            task: task.id,
+            batch: 1,
+            high_priority: true,
+            candidates: vec![CandidateScore { device: task.source, score, reject }],
+            chosen,
+            rung: None,
+            cloud: false,
+        });
+    }
+
+    /// Explainability record for one low-priority decision. Placed
+    /// batches carry the *actual placement score* per winning device
+    /// (recomputed from the committed allocation — latency or joules,
+    /// whichever mode is live); rejections pin the source with a
+    /// window-infeasibility. Called from [`Scheduler::on_event`] and from
+    /// the energy variant's tier-inverted LP path, which bypasses it.
+    pub(crate) fn explain_lp_decision(&mut self, tasks: &[&Task], d: &Decision) {
+        if !self.explain.on() {
+            return;
+        }
+        let cloud_dev = self.cloud.as_ref().map(|c| c.device);
+        let mut candidates: Vec<CandidateScore> = Vec::new();
+        let mut chosen = None;
+        let mut cloud = false;
+        match &d.outcome {
+            Outcome::LpAllocated { allocs } => {
+                for a in allocs {
+                    if Some(a.device) == cloud_dev {
+                        cloud = true;
+                    }
+                    let score = match tasks.iter().find(|t| t.id == a.task) {
+                        Some(t) => {
+                            let mut o: Ops = 0;
+                            self.score_placement(t, a, !a.offloaded, &mut o)
+                        }
+                        None => a.end as f64,
+                    };
+                    candidates.push(CandidateScore { device: a.device, score, reject: None });
+                }
+                chosen = allocs.first().map(|a| (a.device, a.cores as u8));
+            }
+            _ => {
+                candidates.push(CandidateScore {
+                    device: tasks.first().map(|t| t.source).unwrap_or(0),
+                    score: f64::INFINITY,
+                    reject: Some(RejectReason::WindowInfeasible),
+                });
+            }
+        }
+        self.explain_excluded(&mut candidates);
+        self.explain.push(DecisionRecord {
+            scheduler: self.explain_label(),
+            task: tasks.first().map(|t| t.id).unwrap_or(0),
+            batch: tasks.len(),
+            high_priority: false,
+            candidates,
+            chosen,
+            rung: d.variant.map(|v| v as usize),
+            cloud,
+        });
+    }
+
+    /// Explain-gate passthrough for the energy wrapper.
+    pub(crate) fn explain_set(&mut self, on: bool) {
+        self.explain.set(on);
+    }
+
+    /// Drain passthrough for the energy wrapper.
+    pub(crate) fn explain_drain(&mut self) -> Vec<DecisionRecord> {
+        self.explain.drain()
+    }
+
     /// Task finished (free its resources from the scheduler's state).
     pub fn on_complete(&mut self, _now: SimTime, task: TaskId) {
         // Exact state: removal is cheap and fully reclaims capacity —
@@ -654,7 +784,13 @@ impl Scheduler for WpsScheduler {
 
     fn on_event(&mut self, now: SimTime, ev: SchedEvent<'_>) -> Decision {
         match ev {
-            SchedEvent::HighPriority { task } => self.schedule_high(now, task).into(),
+            SchedEvent::HighPriority { task } => {
+                let d: Decision = self.schedule_high(now, task).into();
+                if self.explain.on() {
+                    self.explain_hp(task, &d);
+                }
+                d
+            }
             SchedEvent::LowPriorityBatch { tasks, realloc, ladder } => {
                 // Shared degradation policy over the *exact* state: WPS
                 // only steps down when no placement truly exists, so it
@@ -664,9 +800,12 @@ impl Scheduler for WpsScheduler {
                 // configured, each rung falls through to a WAN
                 // feasibility check before the ladder steps down.
                 let cloud = self.cloud;
-                place_degrading_tiered(now, tasks, ladder, realloc, cloud.as_ref(), |n, ts, r| {
-                    self.schedule_low(n, ts, r)
-                })
+                let d =
+                    place_degrading_tiered(now, tasks, ladder, realloc, cloud.as_ref(), |n, ts, r| {
+                        self.schedule_low(n, ts, r)
+                    });
+                self.explain_lp_decision(tasks, &d);
+                d
             }
             SchedEvent::Complete { task } => {
                 self.on_complete(now, task);
@@ -694,9 +833,11 @@ impl Scheduler for WpsScheduler {
                 // remaining ladder tail (and the cloud tier, if any) has
                 // been exhausted.
                 let cloud = self.cloud;
-                place_degrading_tiered(now, tasks, ladder, true, cloud.as_ref(), |n, ts, r| {
+                let d = place_degrading_tiered(now, tasks, ladder, true, cloud.as_ref(), |n, ts, r| {
                     self.schedule_low(n, ts, r)
-                })
+                });
+                self.explain_lp_decision(tasks, &d);
+                d
             }
             SchedEvent::CloudBandwidthUpdate { bps } => {
                 // Passive WAN estimate refresh from the engine — free: no
@@ -732,6 +873,14 @@ impl Scheduler for WpsScheduler {
 
     fn state(&self) -> &WorkloadState {
         &self.state
+    }
+
+    fn set_explain(&mut self, on: bool) {
+        self.explain.set(on);
+    }
+
+    fn drain_decisions(&mut self) -> Vec<DecisionRecord> {
+        self.explain.drain()
     }
 }
 
@@ -901,6 +1050,44 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn explain_mode_records_per_candidate_scores() {
+        use crate::coordinator::task::VariantRung;
+        let c = cfg();
+        let mut s = WpsScheduler::new(&c, 0, c.link_bps);
+        s.set_explain(true);
+        let ladder = [VariantRung {
+            accuracy: 0.97,
+            input_bytes: c.image_bytes,
+            proc_us: [c.lp2_proc(), c.lp4_proc()],
+        }];
+        let tasks = lp_batch(1, 3, 2, 0, &c);
+        let refs = task_refs(&tasks);
+        let d = s.on_event(
+            0,
+            SchedEvent::LowPriorityBatch { tasks: &refs, realloc: false, ladder: &ladder },
+        );
+        let Outcome::LpAllocated { allocs } = &d.outcome else { panic!("{:?}", d.outcome) };
+        let recs = s.drain_decisions();
+        assert_eq!(recs.len(), 1);
+        let r = &recs[0];
+        assert_eq!(r.scheduler, "WPS");
+        assert_eq!(r.batch, 3);
+        assert_eq!(r.outcome(), "placed");
+        // Every winning device carries a finite placement score.
+        let placed: Vec<_> = r.candidates.iter().filter(|x| x.reject.is_none()).collect();
+        assert_eq!(placed.len(), allocs.len());
+        assert!(placed.iter().all(|x| x.score.is_finite()));
+        // The local placements beat the offload on the weighted score.
+        let local_max = placed
+            .iter()
+            .filter(|x| x.device == 2)
+            .map(|x| x.score)
+            .fold(f64::MIN, f64::max);
+        let off = placed.iter().find(|x| x.device != 2).expect("one offload");
+        assert!(local_max < off.score, "{local_max} vs {}", off.score);
     }
 
     #[test]

@@ -267,6 +267,44 @@ pub fn run_suite(opts: &SuiteOptions) -> Vec<BenchRow> {
         rows.push(row);
     }
 
+    println!("\n== hot_path macro: per-phase timing split ==");
+    {
+        // ROADMAP item 5's instrumented profile: one steady-state run
+        // with the timing knob on, split into the engine's four phases
+        // (dispatch is inclusive of the nested scheduler share).
+        // Wall-clock trajectory gauges, not a head-to-head — the same
+        // scenario as `engine_event/steady_state`, so the phase rows sum
+        // to roughly that row's ns/event.
+        let s = ScenarioBuilder::new()
+            .scheduler(SchedKind::Ras)
+            .trace(TraceSpec::Weighted(3))
+            .frames(frames)
+            .seed(42)
+            .timing(true)
+            .build();
+        let mut eng = s.engine();
+        let mut events = 0u64;
+        while eng.step() {
+            events += 1;
+        }
+        let m = eng.drain().clone();
+        for (phase, ns) in [
+            ("dispatch", m.phase_dispatch_ns),
+            ("sched", m.phase_sched_ns),
+            ("medium", m.phase_medium_ns),
+            ("compact", m.phase_compact_ns),
+        ] {
+            let row = BenchRow::gauge(
+                &format!("engine_phase/{phase}"),
+                "ns/event",
+                events,
+                ns as f64 / events.max(1) as f64,
+            );
+            println!("{}", row.report());
+            rows.push(row);
+        }
+    }
+
     println!("\n== hot_path macro: fleet scale ladder ==");
     {
         // The scale acceptance gate (ROADMAP item 1): ns/event may not

@@ -279,7 +279,9 @@ pub const CHAOS_QUICK_SEEDS: usize = 10;
 /// One randomized chaos cell: a seed-derived fault cocktail (packet and
 /// probe loss, per-device crash or partition windows) with every
 /// robustness knob on (detector, offload timeout + retry, hedging,
-/// bandwidth staleness). Same `seed` ⇒ byte-identical schedule and run.
+/// bandwidth staleness) plus a flight recorder, so a failing cell can
+/// dump its full event timeline. Same `seed` ⇒ byte-identical schedule
+/// and run (the recorder makes no RNG draws).
 pub fn chaos_scenario(cfg: &SystemConfig, kind: SchedKind, seed: u64, minutes: f64) -> Scenario {
     let mut rng = crate::util::rng::Rng::seed_from_u64(seed ^ CHAOS_SEED_TAG);
     let total_s = minutes * 60.0;
@@ -291,6 +293,7 @@ pub fn chaos_scenario(cfg: &SystemConfig, kind: SchedKind, seed: u64, minutes: f
         .trace(TraceSpec::Weighted(4))
         .frames(frames_for_minutes(&cfg, minutes))
         .named(format!("{}_chaos{}", kind.label(), seed))
+        .record_trace(crate::obs::DEFAULT_CAPACITY)
         .loss_rate(rng.gen_f64() * 0.10)
         .probe_loss(rng.gen_f64() * 0.40)
         .detector(1 + rng.index(3) as u32, 1 + rng.index(2) as u32)
@@ -343,24 +346,44 @@ pub fn chaos_invariants(m: &Metrics) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Where a failing chaos cell dumps its flight recorder (Perfetto
+/// trace-event JSON, loadable in `ui.perfetto.dev`; CI uploads it as an
+/// artifact when the chaos-smoke job fails).
+pub const CHAOS_DUMP_PATH: &str = "CHAOS_FLIGHT_RECORDER.json";
+
 /// The chaos campaign: `seeds` randomized fault schedules per scheduler
 /// in [`CHAOS_KINDS`], each drained to completion and hard-checked
 /// against [`chaos_invariants`] plus an empty task slab (no leaked
 /// work). Returns every row for reporting; the first violated invariant
-/// aborts the campaign with a seed-labelled error.
+/// aborts the campaign with a seed-labelled error, dumping the failing
+/// cell's flight recorder to [`CHAOS_DUMP_PATH`] for triage.
 pub fn chaos_campaign(cfg: &SystemConfig, seeds: usize, minutes: f64) -> anyhow::Result<Vec<Metrics>> {
     let mut rows = Vec::with_capacity(seeds * CHAOS_KINDS.len());
     for seed in 0..seeds as u64 {
         for kind in CHAOS_KINDS {
             let mut eng = chaos_scenario(cfg, kind, seed, minutes).engine();
             let m = eng.drain().clone();
-            anyhow::ensure!(
-                eng.live_tasks() == 0,
-                "{}: chaos invariant violated: {} tasks leaked in the slab after drain",
-                m.label,
-                eng.live_tasks()
-            );
-            chaos_invariants(&m)?;
+            let leaked = eng.live_tasks();
+            let verdict = if leaked != 0 {
+                Err(anyhow::anyhow!(
+                    "{}: chaos invariant violated: {leaked} tasks leaked in the slab after drain",
+                    m.label
+                ))
+            } else {
+                chaos_invariants(&m)
+            };
+            if let Err(e) = verdict {
+                // Post-mortem: the cell's full event timeline, so triage
+                // starts from the flight recorder instead of a replay.
+                let note = match eng.trace_json() {
+                    Some(json) => match std::fs::write(CHAOS_DUMP_PATH, json) {
+                        Ok(()) => format!("flight recorder dumped to {CHAOS_DUMP_PATH}"),
+                        Err(io) => format!("flight-recorder dump failed: {io}"),
+                    },
+                    None => "no flight recorder attached".to_string(),
+                };
+                return Err(e.context(note));
+            }
             rows.push(m);
         }
     }

@@ -56,6 +56,14 @@
 //! energy` drives the battery-constrained / cloud-burst / diurnal-drain
 //! grids (see README §Energy).
 //!
+//! The [`obs`] subsystem is the observability layer: an optional
+//! flight-recorder ring buffer of structured span events fed by the
+//! engine (zero events and zero RNG draws when disabled), explainable
+//! [`obs::DecisionRecord`]s emitted from inside every scheduler, and a
+//! Chrome-trace/Perfetto JSON export — `medge trace --run` and
+//! `ScenarioBuilder::record_trace` are the entry points (see README
+//! §Observability).
+//!
 //! The simulation hot path is allocation-free and index-based in steady
 //! state: engine tasks live in a generational slab ([`util::slab`],
 //! placement staleness folded into the slot generation), the shared
@@ -70,6 +78,7 @@ pub mod energy;
 pub mod experiments;
 pub mod fault;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod scenario;
 pub mod sim;

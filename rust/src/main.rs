@@ -80,8 +80,14 @@ COMMANDS:
            --quick (short CI smoke sampling)
            --json [PATH] (write the trajectory file;
            default BENCH_hotpath.json at the repo root)
-  trace    Generate a trace file: --spec S --frames N --out PATH
+  trace    Flight-recorder / trace-file tooling.
+           Workload mode (default): generate a conveyor trace file:
+           --spec S --frames N --out PATH
            (S: uniform | weighted1..weighted4)
+           Perfetto mode (--run or --quick): run one flight-recorded
+           scenario and write its Chrome-trace JSON timeline (open in
+           ui.perfetto.dev): --run [--out PATH] | --quick (short CI
+           smoke run); default output TRACE_perfetto.json
 
 OPTIONS:
   --minutes F   simulated experiment duration in minutes (default 30)
@@ -102,6 +108,11 @@ OPTIONS:
   --wan BPS     energy: cloud WAN bandwidth, bits/s (default 20e6)
   --rtt MS      energy: cloud WAN round-trip time, ms (default 40)
   --threads N   sweep/loadgen: worker threads (default: available parallelism)
+  --trace[=P]   sweep/loadgen/accuracy/energy/chaos: re-run the grid's first
+                scenario with a flight recorder attached and write its
+                Perfetto/Chrome-trace JSON to P (default TRACE_perfetto.json).
+                Runs are deterministic and the recorder draws no RNG, so the
+                exported timeline is byte-faithful to the grid row.
   --json P      sweep/loadgen: write the metric rows as a JSON array to P
   --churn       sweep: device 3 leaves at 25% and rejoins at 60% of the run
   --faults      sweep: add a faulted twin of every scenario (suffix F):
@@ -142,6 +153,14 @@ struct Args {
     churn: bool,
     faults: bool,
     quick: bool,
+    /// `--trace[=PATH]` was passed: export the grid's first scenario as a
+    /// Perfetto timeline. The path stays `None` for the bare form (the
+    /// default `TRACE_perfetto.json` is resolved at dispatch time).
+    trace_flag: bool,
+    trace_path: Option<std::path::PathBuf>,
+    /// `medge trace --run`: the Perfetto run mode (vs. workload-file
+    /// generation, the default mode of the `trace` subcommand).
+    run: bool,
 }
 
 fn parse_args() -> anyhow::Result<Args> {
@@ -171,6 +190,9 @@ fn parse_args() -> anyhow::Result<Args> {
         churn: false,
         faults: false,
         quick: false,
+        trace_flag: false,
+        trace_path: None,
+        run: false,
     };
     fn value(
         it: &mut std::iter::Peekable<impl Iterator<Item = String>>,
@@ -214,6 +236,12 @@ fn parse_args() -> anyhow::Result<Args> {
             "--churn" => args.churn = true,
             "--faults" => args.faults = true,
             "--quick" => args.quick = true,
+            "--run" => args.run = true,
+            "--trace" => args.trace_flag = true,
+            t if t.starts_with("--trace=") => {
+                args.trace_flag = true;
+                args.trace_path = Some(parse_trace_eq(t)?);
+            }
             "-h" | "--help" => {
                 print!("{USAGE}");
                 std::process::exit(0);
@@ -264,6 +292,49 @@ fn parse_energy_grids(s: &str) -> anyhow::Result<(bool, bool, bool)> {
         "diurnal" => Ok((false, false, true)),
         other => anyhow::bail!("unknown energy grid: {other} (battery | burst | diurnal | all)"),
     }
+}
+
+/// Default output path for `--trace` / `medge trace --run`.
+const TRACE_DEFAULT_OUT: &str = "TRACE_perfetto.json";
+
+/// Parse the `--trace=PATH` form strictly: an empty path is an error,
+/// never a silent fall-through to the default filename.
+fn parse_trace_eq(arg: &str) -> anyhow::Result<std::path::PathBuf> {
+    let p = arg.strip_prefix("--trace=").expect("caller matched the prefix");
+    anyhow::ensure!(!p.is_empty(), "--trace= needs a non-empty PATH");
+    Ok(p.into())
+}
+
+/// Resolve the `--trace[=PATH]` output path.
+fn trace_out(args: &Args) -> std::path::PathBuf {
+    args.trace_path.clone().unwrap_or_else(|| TRACE_DEFAULT_OUT.into())
+}
+
+/// Re-run `scenario` with a flight recorder attached and write its
+/// Perfetto/Chrome-trace JSON to `path`. Engine runs are deterministic
+/// and the recorder makes no RNG draws, so the exported timeline is
+/// byte-faithful to the metrics row the grid already produced for the
+/// same scenario.
+fn export_scenario_trace(
+    scenario: &medge::scenario::Scenario,
+    path: &std::path::Path,
+) -> anyhow::Result<()> {
+    let mut s = scenario.clone();
+    s.extras.trace_capacity = medge::obs::DEFAULT_CAPACITY;
+    let mut eng = s.engine();
+    eng.drain();
+    let json = eng.trace_json().expect("recorder attached above");
+    std::fs::write(path, &json)?;
+    let r = eng.recorder().expect("recorder attached above");
+    println!(
+        "wrote Perfetto trace of {}: {} span records kept ({} seen, {} decisions) to {}",
+        s.name,
+        r.len(),
+        r.total_seen(),
+        r.decisions(),
+        path.display()
+    );
+    Ok(())
 }
 
 /// Build the sweep grid: schedulers × weighted loads, with optional churn
@@ -437,6 +508,10 @@ fn main() -> anyhow::Result<()> {
                 std::fs::write(path, report::json_rows(&runs))?;
                 println!("\nwrote {} JSON rows to {}", runs.len(), path.display());
             }
+            if args.trace_flag {
+                let first = sweep.scenarios().first().expect("non-empty grid ensured above");
+                export_scenario_trace(first, &trace_out(&args))?;
+            }
         }
         "loadgen" => {
             anyhow::ensure!(
@@ -481,6 +556,10 @@ fn main() -> anyhow::Result<()> {
                 std::fs::write(path, report::json_rows(&runs))?;
                 println!("\nwrote {} JSON rows to {}", runs.len(), path.display());
             }
+            if args.trace_flag {
+                let first = sweep.scenarios().first().expect("non-empty grid ensured above");
+                export_scenario_trace(first, &trace_out(&args))?;
+            }
         }
         "accuracy" => {
             anyhow::ensure!(
@@ -513,6 +592,10 @@ fn main() -> anyhow::Result<()> {
             if let Some(path) = &args.json {
                 std::fs::write(path, report::json_rows(&runs))?;
                 println!("\nwrote {} JSON rows to {}", runs.len(), path.display());
+            }
+            if args.trace_flag {
+                let first = sweep.scenarios().first().expect("empty accuracy grid rejected above");
+                export_scenario_trace(first, &trace_out(&args))?;
             }
         }
         "energy" => {
@@ -548,6 +631,9 @@ fn main() -> anyhow::Result<()> {
                 None => 40.0,
             };
             let mut runs = Vec::new();
+            // First scenario of the first selected grid: the `--trace`
+            // export target (the sweeps are consumed by the fan below).
+            let mut traced: Option<medge::scenario::Scenario> = None;
             let mut fan = |mut sweep: Sweep, what: &str| {
                 if let Some(t) = args.threads {
                     sweep = sweep.threads(t);
@@ -556,6 +642,9 @@ fn main() -> anyhow::Result<()> {
                     "energy/{what}: {} scenarios × {minutes:.1} simulated minutes",
                     sweep.len()
                 );
+                if traced.is_none() {
+                    traced = sweep.scenarios().first().cloned();
+                }
                 runs.extend(sweep.run());
             };
             if battery_grid {
@@ -585,6 +674,12 @@ fn main() -> anyhow::Result<()> {
                 std::fs::write(path, report::json_rows(&runs))?;
                 println!("\nwrote {} JSON rows to {}", runs.len(), path.display());
             }
+            if args.trace_flag {
+                let s = traced
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("--trace needs a non-empty energy grid"))?;
+                export_scenario_trace(s, &trace_out(&args))?;
+            }
         }
         "chaos" => {
             anyhow::ensure!(
@@ -610,18 +705,44 @@ fn main() -> anyhow::Result<()> {
                 std::fs::write(path, report::json_rows(&runs))?;
                 println!("\nwrote {} JSON rows to {}", runs.len(), path.display());
             }
+            if args.trace_flag {
+                // The campaign's first cell (a failing cell dumps its own
+                // recorder to CHAOS_FLIGHT_RECORDER.json before this point).
+                let s = experiments::chaos_scenario(&cfg, experiments::CHAOS_KINDS[0], 0, minutes);
+                export_scenario_trace(&s, &trace_out(&args))?;
+            }
             println!("\nchaos: {} runs, every invariant held", runs.len());
         }
         "trace" => {
-            let out = args.out.ok_or_else(|| anyhow::anyhow!("trace needs --out PATH"))?;
-            let t = Trace::generate(TraceSpec::parse(&args.spec)?, cfg.n_devices, args.frames, cfg.seed);
-            t.save(&out)?;
-            println!(
-                "wrote {} frames ({:.2} mean DNN load) to {}",
-                args.frames,
-                t.mean_dnn_load(),
-                out.display()
-            );
+            if args.run || args.quick {
+                // Perfetto run mode: one flight-recorded scenario, full
+                // span taxonomy plus one DecisionRecord per scheduler
+                // decision, exported as Chrome-trace JSON. `--quick` is
+                // the CI smoke variant (a short fixed-frame run).
+                let kind = match args.scheds.as_deref() {
+                    Some(list) => SchedKind::parse(list.split(',').next().unwrap_or(""))?,
+                    None => SchedKind::Ras,
+                };
+                let mut b = ScenarioBuilder::new()
+                    .config(cfg.clone())
+                    .scheduler(kind)
+                    .trace(TraceSpec::parse(&args.spec)?);
+                b = if args.quick { b.frames(12) } else { b.minutes(minutes) };
+                let path = args.out.clone().unwrap_or_else(|| trace_out(&args));
+                export_scenario_trace(&b.build(), &path)?;
+            } else {
+                let out = args
+                    .out
+                    .ok_or_else(|| anyhow::anyhow!("trace needs --out PATH (or --run/--quick for the Perfetto mode)"))?;
+                let t = Trace::generate(TraceSpec::parse(&args.spec)?, cfg.n_devices, args.frames, cfg.seed);
+                t.save(&out)?;
+                println!(
+                    "wrote {} frames ({:.2} mean DNN load) to {}",
+                    args.frames,
+                    t.mean_dnn_load(),
+                    out.display()
+                );
+            }
         }
         other => anyhow::bail!("unknown command: {other}\n{USAGE}"),
     }
@@ -661,6 +782,20 @@ mod tests {
         assert_eq!(parse_energy_grids("diurnal").unwrap(), (false, false, true));
         assert!(parse_energy_grids("everything").is_err());
         assert!(parse_energy_grids("").is_err());
+    }
+
+    #[test]
+    fn trace_flag_parser_is_strict() {
+        assert_eq!(
+            parse_trace_eq("--trace=out.json").unwrap(),
+            std::path::PathBuf::from("out.json")
+        );
+        assert_eq!(
+            parse_trace_eq("--trace=/tmp/run trace.json").unwrap(),
+            std::path::PathBuf::from("/tmp/run trace.json"),
+            "spaces survive the = form"
+        );
+        assert!(parse_trace_eq("--trace=").is_err(), "empty path");
     }
 
     #[test]

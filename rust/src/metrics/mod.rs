@@ -310,6 +310,28 @@ pub struct Metrics {
     /// Virtual µs the bandwidth estimator spent stale (consecutive probe
     /// failures ≥ `bw_stale_after`); 0 with the knob off.
     pub bw_stale_us: u64,
+
+    // ---- observability (PR 9) ----
+    /// Span events the flight recorder saw over the run, including any
+    /// the ring overwrote; 0 with tracing off.
+    pub trace_events: u64,
+    /// Fluid-model medium advances that did real work. A deterministic
+    /// hot-path gauge: counted whether or not tracing is on.
+    pub medium_drain_ops: u64,
+    /// Event-queue compaction sweeps (deterministic hot-path gauge).
+    pub queue_compactions: u64,
+    /// Wall-clock nanoseconds spent in event dispatch (inclusive of the
+    /// nested scheduler share), measured only when the off-by-default
+    /// `timing` knob is on. Wall-clock is non-deterministic by nature:
+    /// the knob stays off in the determinism and golden grids, where
+    /// these report 0.
+    pub phase_dispatch_ns: u64,
+    /// Wall-clock ns inside scheduler dispatch (subset of dispatch).
+    pub phase_sched_ns: u64,
+    /// Wall-clock ns arming/advancing the shared-medium fluid model.
+    pub phase_medium_ns: u64,
+    /// Wall-clock ns in event-queue compaction sweeps.
+    pub phase_compact_ns: u64,
 }
 
 impl Metrics {
@@ -403,6 +425,46 @@ impl Metrics {
             return 0.0;
         }
         self.cloud_offloads as f64 / placed as f64
+    }
+
+    /// Debug-build audit of the ordering identities the saturating adds
+    /// protect. Called once per run at drain time: a wrapped (or
+    /// saturated) counter silently corrupts every derived rate, so
+    /// debug builds fail loudly instead. Release builds compile this
+    /// to nothing.
+    pub fn debug_audit(&self) {
+        debug_assert!(
+            self.frames_completed <= self.frames_total,
+            "frames_completed {} > frames_total {}",
+            self.frames_completed,
+            self.frames_total
+        );
+        debug_assert!(
+            self.hp_completed.saturating_add(self.hp_violations) <= self.hp_generated,
+            "HP outcomes exceed hp_generated {}",
+            self.hp_generated
+        );
+        debug_assert!(self.hp_rejected <= self.hp_generated);
+        debug_assert!(
+            self.lp_completed_total() <= self.lp_generated,
+            "LP completions {} > lp_generated {}",
+            self.lp_completed_total(),
+            self.lp_generated
+        );
+        debug_assert!(self.lp_violations <= self.lp_generated);
+        debug_assert!(self.lp_lost <= self.lp_generated);
+        debug_assert!(self.offloaded_completed <= self.offloaded_total);
+        debug_assert!(
+            self.admission_dropped.saturating_add(self.offline_dropped) <= self.offered_tasks
+        );
+        debug_assert!(self.devices_cleared <= self.devices_suspected);
+        debug_assert!(self.degraded_completions <= self.lp_completed_total());
+        // None of the run-length counters may sit at the saturation
+        // ceiling: reaching it means the run genuinely overflowed u64
+        // and every identity above is suspect.
+        debug_assert!(self.frames_total < u64::MAX);
+        debug_assert!(self.offered_tasks < u64::MAX);
+        debug_assert!(self.lp_generated < u64::MAX);
     }
 
     /// Table II row: fraction of successful LP allocations per core config.

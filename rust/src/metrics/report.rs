@@ -7,6 +7,13 @@
 use super::Metrics;
 use crate::metrics::LatencyStat;
 
+/// Version of the `json_row` field schema. Bump it in the SAME change
+/// that adds, removes, or renames a row field — the field-inventory
+/// test below fails otherwise, so schema drift can never land silently
+/// again (14 fields did exactly that in PR 8). Downstream consumers
+/// key their parsers on this.
+pub const SCHEMA_VERSION: u32 = 2;
+
 fn header(title: &str) -> String {
     format!("\n=== {title} ===\n")
 }
@@ -392,6 +399,7 @@ fn json_latency(s: &LatencyStat) -> String {
 /// One metrics row as a JSON object (every counter the figures use).
 pub fn json_row(m: &Metrics) -> String {
     let mut f = Vec::new();
+    f.push(format!("\"schema_version\": {SCHEMA_VERSION}"));
     f.push(format!("\"label\": \"{}\"", json_escape(&m.label)));
     f.push(format!("\"frames_total\": {}", m.frames_total));
     f.push(format!("\"frames_completed\": {}", m.frames_completed));
@@ -494,6 +502,13 @@ pub fn json_row(m: &Metrics) -> String {
     f.push(format!("\"partition_held_results\": {}", m.partition_held_results));
     f.push(format!("\"lp_lost\": {}", m.lp_lost));
     f.push(format!("\"bw_stale_us\": {}", m.bw_stale_us));
+    f.push(format!("\"trace_events\": {}", m.trace_events));
+    f.push(format!("\"medium_drain_ops\": {}", m.medium_drain_ops));
+    f.push(format!("\"queue_compactions\": {}", m.queue_compactions));
+    f.push(format!("\"phase_dispatch_ns\": {}", m.phase_dispatch_ns));
+    f.push(format!("\"phase_sched_ns\": {}", m.phase_sched_ns));
+    f.push(format!("\"phase_medium_ns\": {}", m.phase_medium_ns));
+    f.push(format!("\"phase_compact_ns\": {}", m.phase_compact_ns));
     format!("{{{}}}", f.join(", "))
 }
 
@@ -690,6 +705,162 @@ mod tests {
         // Mains-powered rows say so instead of faking a level.
         m.battery_final_j.clear();
         assert!(energy(&[m]).contains("mains"));
+    }
+
+    /// Top-level key names of a `json_row` object, in emission order.
+    /// Depth-tracked so nested object keys (the latency stats) and any
+    /// string *values* are skipped.
+    fn top_level_keys(row: &str) -> Vec<String> {
+        let mut keys = Vec::new();
+        let mut depth = 0i32;
+        let mut chars = row.char_indices().peekable();
+        while let Some((_, c)) = chars.next() {
+            match c {
+                '{' | '[' => depth += 1,
+                '}' | ']' => depth -= 1,
+                '"' => {
+                    // Collect the string literal (json_escape never emits
+                    // a lone backslash, so \" is the only escape to skip).
+                    let mut lit = String::new();
+                    let mut esc = false;
+                    for (_, d) in chars.by_ref() {
+                        if esc {
+                            esc = false;
+                            lit.push(d);
+                        } else if d == '\\' {
+                            esc = true;
+                        } else if d == '"' {
+                            break;
+                        } else {
+                            lit.push(d);
+                        }
+                    }
+                    // A key is a depth-1 string followed by a colon.
+                    let is_key = depth == 1
+                        && matches!(chars.peek(), Some(&(_, next)) if next == ':');
+                    if is_key {
+                        keys.push(lit);
+                    }
+                }
+                _ => {}
+            }
+        }
+        keys
+    }
+
+    #[test]
+    fn field_inventory_matches_schema_version() {
+        // The contract: adding, removing, renaming, or reordering a
+        // `json_row` field REQUIRES bumping `SCHEMA_VERSION` and
+        // updating this inventory in the same change. If this test just
+        // failed on you: append/edit the inventory below AND bump the
+        // version — both, together, nothing else makes it pass.
+        assert_eq!(SCHEMA_VERSION, 2, "the inventory below describes schema v2");
+        const EXPECTED: &[&str] = &[
+            "schema_version",
+            "label",
+            "frames_total",
+            "frames_completed",
+            "frame_completion_rate",
+            "hp_generated",
+            "hp_allocated_no_preempt",
+            "hp_allocated_with_preempt",
+            "hp_rejected",
+            "hp_completed",
+            "hp_violations",
+            "lp_generated",
+            "lp_allocated_initial",
+            "lp_alloc_failures",
+            "lp_completed_initial",
+            "lp_completed_realloc",
+            "lp_violations",
+            "lp_preempted",
+            "lp_realloc_attempts",
+            "lp_realloc_success",
+            "offloaded_total",
+            "offloaded_completed",
+            "lat_hp_alloc",
+            "lat_hp_preempt",
+            "lat_lp_alloc",
+            "lat_lp_realloc",
+            "lat_hp_e2e",
+            "lat_lp_e2e",
+            "gen_arrivals",
+            "offered_tasks",
+            "offered_mbits",
+            "admission_dropped",
+            "offline_dropped",
+            "accuracy_sum",
+            "accuracy_per_deadline_met",
+            "delivered_accuracy_rate",
+            "degraded_placements",
+            "degraded_completions",
+            "rung_completions",
+            "two_core_allocs",
+            "four_core_allocs",
+            "churn_joins",
+            "churn_leaves",
+            "churn_evicted",
+            "device_crashes",
+            "device_recoveries",
+            "crash_tasks_lost",
+            "crash_tasks_reoffered",
+            "crash_reoffer_placed",
+            "crash_reoffer_dropped",
+            "crash_recovered_in_deadline",
+            "lat_crash_recovery",
+            "probe_rounds_lost",
+            "probe_pings_lost",
+            "retransmitted_mbits",
+            "bandwidth_updates",
+            "link_rebuild_ops",
+            "final_bandwidth_estimate_bps",
+            "controller_busy_us",
+            "reject_reasons",
+            "energy_idle_j",
+            "energy_active_j",
+            "energy_tx_j",
+            "energy_rx_j",
+            "energy_total_j",
+            "joules_per_task",
+            "deadline_met_per_kj",
+            "battery_depletions",
+            "battery_final_j",
+            "cloud_offloads",
+            "cloud_completions",
+            "retries",
+            "hedges_launched",
+            "hedges_won",
+            "hedges_wasted",
+            "false_suspicions",
+            "devices_suspected",
+            "devices_cleared",
+            "lat_detection",
+            "partitions_started",
+            "partitions_healed",
+            "partition_stalled_flows",
+            "partition_held_results",
+            "lp_lost",
+            "bw_stale_us",
+            "trace_events",
+            "medium_drain_ops",
+            "queue_compactions",
+            "phase_dispatch_ns",
+            "phase_sched_ns",
+            "phase_medium_ns",
+            "phase_compact_ns",
+        ];
+        // An awkward label exercises the key/value discrimination: its
+        // escaped quotes and colons must not read as keys.
+        let mut m = sample("odd \"label\": tricky");
+        m.battery_final_j = vec![1.0, 2.0];
+        let got = top_level_keys(&json_row(&m));
+        assert_eq!(
+            got,
+            EXPECTED.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+            "json_row fields drifted from the schema inventory — update \
+             EXPECTED and bump SCHEMA_VERSION together"
+        );
     }
 
     #[test]

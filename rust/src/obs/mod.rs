@@ -1,0 +1,773 @@
+//! Observability: flight-recorder tracing, explainable placement
+//! decisions, and a Perfetto-exportable run timeline.
+//!
+//! The engine can carry an optional [`FlightRecorder`] — a bounded
+//! ring buffer of structured [`TraceEvent`]s covering the full task
+//! lifecycle (arrival → admission → placement → transfer → exec →
+//! complete/violation, plus preemption, re-offer, rung-walk, hedge and
+//! retry), probe rounds, bandwidth-estimator updates, detector state
+//! transitions, partition/heal windows, and battery/cloud transitions.
+//! Schedulers additionally emit [`DecisionRecord`]s from inside their
+//! `schedule_*` paths (per-candidate scores, rejection reasons, the
+//! chosen rung) so the RAS/WPS disagreements the paper studies become
+//! inspectable data instead of println archaeology.
+//!
+//! ## Determinism contract
+//!
+//! Every recorded field is **simulated** state: sim-time timestamps, a
+//! run-local sequence counter, task/device ids, scores the scheduler
+//! already computed. No wall clock, no RNG, no allocation-order
+//! artifacts — so a recording is bit-identical across repeated runs and
+//! across sweep thread counts, and the recorder itself draws nothing
+//! from the engine's RNG streams. With recording disabled (the default)
+//! the engine keeps `None` and every hook is a skipped `Option` check:
+//! zero events, zero draws, byte-identical `json_rows` (locked by the
+//! `zero_trace_knob` golden test).
+//!
+//! ## Export
+//!
+//! [`FlightRecorder::perfetto_json`] serialises the buffer to the
+//! Chrome trace event format (the JSON Perfetto and `chrome://tracing`
+//! load directly): one track per device plus a link track and a cloud
+//! track, "X" complete spans for exec/transfer/upload/probe windows
+//! reconstructed by pairing start/finish records, and "i" instant
+//! events for violations, suspicions, and placement decisions. See
+//! README §Observability for the cookbook.
+
+use crate::coordinator::task::{DeviceId, TaskId};
+use crate::time::SimTime;
+
+/// Default ring capacity when a scenario enables recording without
+/// choosing one: large enough to hold a full conveyor golden run, small
+/// enough (~a few MB) to keep per-seed chaos recorders cheap.
+pub const DEFAULT_CAPACITY: usize = 65_536;
+
+/// Per-phase wall-clock accumulators for the engine's hot path, behind
+/// an off-by-default knob ([`crate::sim::engine::RunExtras::timing`]).
+/// Wall-clock values are **not** deterministic — they never feed the
+/// simulation, never enter golden comparisons, and surface only through
+/// the `phase_*_ns` gauge fields (zero whenever the knob is off).
+/// `dispatch_ns` is inclusive of the nested scheduler time.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseTimers {
+    /// Total wall time inside `Engine::handle` (event dispatch).
+    pub dispatch_ns: u64,
+    /// Wall time inside placement `Scheduler::on_event` calls.
+    pub sched_ns: u64,
+    /// Wall time advancing the shared medium's fluid model.
+    pub medium_ns: u64,
+    /// Wall time in event-queue compaction sweeps.
+    pub compact_ns: u64,
+}
+
+/// Which [`PhaseTimers`] accumulator a measured interval belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Dispatch,
+    Sched,
+    Medium,
+    Compact,
+}
+
+impl PhaseTimers {
+    /// Fold an elapsed interval into the chosen accumulator.
+    pub fn add(&mut self, phase: Phase, ns: u64) {
+        match phase {
+            Phase::Dispatch => self.dispatch_ns += ns,
+            Phase::Sched => self.sched_ns += ns,
+            Phase::Medium => self.medium_ns += ns,
+            Phase::Compact => self.compact_ns += ns,
+        }
+    }
+}
+
+/// Why a scheduler passed over (or refused) a candidate placement.
+/// The taxonomy mirrors `Metrics::reject_reasons` but is per-decision
+/// and per-candidate instead of run-aggregated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// No computation/communication window fits before the deadline.
+    WindowInfeasible,
+    /// The failure detector believes the device is down.
+    Suspected,
+    /// Battery-aware policy refused the device (depleted or reserved).
+    Battery,
+    /// The device's availability cell collapsed (sharded fleet) or it
+    /// had no free cores at any acceptable configuration.
+    CellCollapsed,
+    /// The device is offline (crashed / left / partitioned).
+    Offline,
+}
+
+impl RejectReason {
+    /// Stable lowercase label used in exports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            RejectReason::WindowInfeasible => "window_infeasible",
+            RejectReason::Suspected => "suspected",
+            RejectReason::Battery => "battery",
+            RejectReason::CellCollapsed => "cell_collapsed",
+            RejectReason::Offline => "offline",
+        }
+    }
+}
+
+/// One candidate the scheduler considered for a placement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CandidateScore {
+    pub device: DeviceId,
+    /// Scheduler-specific figure of merit (RAS: window slack µs; WPS:
+    /// completion-time score; ENERGY: estimated joules). Lower/higher
+    /// semantics are per-scheduler; the record is evidence, not a rank.
+    pub score: f64,
+    /// `None` when the candidate was feasible (it may still lose the
+    /// comparison); `Some(reason)` when it was ruled out.
+    pub reject: Option<RejectReason>,
+}
+
+/// An explainable placement decision, emitted from inside a scheduler's
+/// `schedule_*` path when the engine has explainability enabled.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecisionRecord {
+    /// Which scheduler decided (`"RAS"`, `"WPS"`, `"MULTI"`, `"ENERGY"`).
+    pub scheduler: &'static str,
+    /// Representative task (first of the batch for LP requests).
+    pub task: TaskId,
+    /// Tasks covered by this decision (1 for HP, batch size for LP).
+    pub batch: usize,
+    pub high_priority: bool,
+    /// Every candidate that was scored or ruled out, in consideration
+    /// order.
+    pub candidates: Vec<CandidateScore>,
+    /// Winning `(device, cores)`; `None` when the request was rejected.
+    pub chosen: Option<(DeviceId, u8)>,
+    /// Degradation ladder rung the placement committed to (0 = full
+    /// model), when a rung-walk was involved.
+    pub rung: Option<usize>,
+    /// The batch went to the cloud tier instead of an edge device.
+    pub cloud: bool,
+}
+
+impl DecisionRecord {
+    /// `"placed"` / `"cloud"` / `"rejected"` — the outcome label exports
+    /// use.
+    pub fn outcome(&self) -> &'static str {
+        if self.cloud {
+            "cloud"
+        } else if self.chosen.is_some() {
+            "placed"
+        } else {
+            "rejected"
+        }
+    }
+}
+
+/// Everything the flight recorder can witness. Fields carry simulated
+/// state only (see the module docs' determinism contract).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// A conveyor frame's requests entered the system.
+    FrameArrive { index: usize },
+    /// A generative-workload arrival fired.
+    GenArrive { index: usize },
+    /// Tasks dropped at admission (queue bound) or because every device
+    /// was offline.
+    AdmissionDrop { tasks: usize },
+    /// High-priority placement succeeded.
+    HpPlace { task: TaskId, device: DeviceId, cores: u8 },
+    /// High-priority placement failed; the frame's deadline is lost.
+    HpReject { task: TaskId },
+    /// A low-priority task was preempted by an HP arrival.
+    Preempt { task: TaskId, device: DeviceId },
+    /// Low-priority placement succeeded (rung = committed ladder rung).
+    LpPlace { task: TaskId, device: DeviceId, cores: u8, rung: usize },
+    /// A low-priority batch was rejected outright.
+    LpReject { tasks: usize },
+    /// Crash-lost tasks re-entered scheduling.
+    Reoffer { tasks: usize },
+    /// An offloaded input transfer started on the shared link.
+    TransferStart { task: TaskId, device: DeviceId },
+    /// The transfer drained; compute starts next.
+    TransferDone { task: TaskId },
+    /// A cloud upload started on the WAN.
+    CloudUploadStart { task: TaskId },
+    /// The cloud upload drained.
+    CloudUploadDone { task: TaskId },
+    /// Compute began on a device.
+    ExecStart { task: TaskId, device: DeviceId },
+    /// A task finished (violated = past its deadline).
+    Complete { task: TaskId, device: DeviceId, high_priority: bool, violated: bool },
+    /// Deadline violation (also flagged on the matching `Complete`).
+    Violation { task: TaskId },
+    /// The recovery layer cancelled a timed-out offload and retried.
+    Retry { task: TaskId, attempt: u32 },
+    /// A hedged duplicate launched for a slow offload.
+    HedgeLaunch { task: TaskId, device: DeviceId },
+    /// A bandwidth probe round began against `device`.
+    ProbeStart { device: DeviceId },
+    /// The round ended with `survivors` of its pings delivered.
+    ProbeEnd { device: DeviceId, survivors: u64 },
+    /// The EWMA bandwidth estimate moved.
+    BandwidthUpdate { est_bps: f64 },
+    /// The estimate aged past the staleness horizon.
+    BandwidthStale,
+    /// The failure detector suspected (or confirmed) a device.
+    DetectorSuspect { device: DeviceId, confirmed: bool },
+    /// A heartbeat cleared a suspected device.
+    DetectorClear { device: DeviceId },
+    PartitionStart { device: DeviceId },
+    PartitionHeal { device: DeviceId },
+    DeviceJoin { device: DeviceId },
+    DeviceLeave { device: DeviceId },
+    DeviceCrash { device: DeviceId },
+    DeviceRecover { device: DeviceId },
+    BatteryDeplete { device: DeviceId },
+    /// An explainable scheduler decision (see [`DecisionRecord`]).
+    Decision(DecisionRecord),
+}
+
+/// A timestamped, sequence-numbered trace record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRecord {
+    pub at: SimTime,
+    /// Run-local monotonic sequence (total events *seen*, including any
+    /// that were later overwritten).
+    pub seq: u64,
+    pub event: TraceEvent,
+}
+
+/// Anything that can consume trace records. [`FlightRecorder`] is the
+/// in-tree sink; the trait keeps the engine decoupled from the storage
+/// policy so tests (and future streaming exporters) can substitute
+/// their own.
+pub trait TraceSink {
+    fn record(&mut self, at: SimTime, event: TraceEvent);
+}
+
+/// Bounded ring-buffer trace sink: fixed capacity, overwrite-oldest.
+/// The crash-dump shape — when a chaos invariant trips, the last
+/// `capacity` events leading up to the failure are exactly what is
+/// needed, and a runaway run cannot exhaust memory.
+#[derive(Debug, Clone)]
+pub struct FlightRecorder {
+    capacity: usize,
+    /// Ring storage; `head` indexes the oldest record once full.
+    buf: Vec<TraceRecord>,
+    head: usize,
+    seq: u64,
+    overwritten: u64,
+}
+
+impl FlightRecorder {
+    /// A recorder holding at most `capacity` records. Zero capacity is
+    /// the explicit OFF value at the scenario layer and never reaches
+    /// here; it is clamped to 1 for safety.
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        Self { capacity, buf: Vec::new(), head: 0, seq: 0, overwritten: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Records currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Total events witnessed, including overwritten ones.
+    pub fn total_seen(&self) -> u64 {
+        self.seq
+    }
+
+    /// Events evicted by the ring bound.
+    pub fn overwritten(&self) -> u64 {
+        self.overwritten
+    }
+
+    /// Records in arrival order (oldest surviving first).
+    pub fn records(&self) -> impl Iterator<Item = &TraceRecord> {
+        self.buf[self.head..].iter().chain(self.buf[..self.head].iter())
+    }
+
+    /// How many surviving records are scheduler [`DecisionRecord`]s.
+    pub fn decisions(&self) -> usize {
+        self.records().filter(|r| matches!(r.event, TraceEvent::Decision(_))).count()
+    }
+
+    /// Serialise to Chrome-trace/Perfetto JSON. `n_devices` sizes the
+    /// track table: tid 0 is the controller, 1..=n the devices, n+1 the
+    /// shared link, n+2 the cloud tier. Exec/transfer/upload/probe
+    /// windows whose start *and* finish survived the ring become "X"
+    /// complete spans; everything else (and unpaired starts) become "i"
+    /// instants. Output is byte-stable for identical buffers.
+    pub fn perfetto_json(&self, n_devices: usize) -> String {
+        let ctrl = 0usize;
+        let dev = |d: DeviceId| d + 1;
+        let link = n_devices + 1;
+        let cloud = n_devices + 2;
+        let mut out = String::with_capacity(256 + self.buf.len() * 96);
+        out.push_str("{\"displayTimeUnit\": \"ms\",\n\"traceEvents\": [\n");
+        let mut first = true;
+        let mut push = |out: &mut String, line: String| {
+            if !first {
+                out.push_str(",\n");
+            }
+            first = false;
+            out.push_str(&line);
+        };
+        // Track naming metadata.
+        push(&mut out, meta_event("process_name", 0, "medge sim"));
+        push(&mut out, meta_thread(ctrl, "controller"));
+        for d in 0..n_devices {
+            push(&mut out, meta_thread(dev(d), &format!("device {d}")));
+        }
+        push(&mut out, meta_thread(link, "link"));
+        push(&mut out, meta_thread(cloud, "cloud"));
+
+        // Span pairing state: open windows keyed by task id. Linear
+        // scans — open windows are bounded by in-flight work, and the
+        // exporter is off the simulation path entirely.
+        let mut exec_open: Vec<(TaskId, SimTime, DeviceId)> = Vec::new();
+        let mut xfer_open: Vec<(TaskId, SimTime, DeviceId)> = Vec::new();
+        let mut wan_open: Vec<(TaskId, SimTime)> = Vec::new();
+        let mut probe_open: Vec<(DeviceId, SimTime)> = Vec::new();
+        let take = |open: &mut Vec<(TaskId, SimTime, DeviceId)>, t: TaskId| {
+            open.iter().position(|&(id, _, _)| id == t).map(|p| open.swap_remove(p))
+        };
+
+        for r in self.records() {
+            let ts = r.at;
+            match &r.event {
+                TraceEvent::FrameArrive { index } => {
+                    push(&mut out, instant(ts, ctrl, &format!("frame {index}"), ""));
+                }
+                TraceEvent::GenArrive { index } => {
+                    push(&mut out, instant(ts, ctrl, &format!("arrival {index}"), ""));
+                }
+                TraceEvent::AdmissionDrop { tasks } => {
+                    push(
+                        &mut out,
+                        instant(ts, ctrl, "admission_drop", &format!("\"tasks\": {tasks}")),
+                    );
+                }
+                TraceEvent::HpPlace { task, device, cores } => {
+                    push(
+                        &mut out,
+                        instant(
+                            ts,
+                            dev(*device),
+                            &format!("hp_place #{task}"),
+                            &format!("\"cores\": {cores}"),
+                        ),
+                    );
+                }
+                TraceEvent::HpReject { task } => {
+                    push(&mut out, instant(ts, ctrl, &format!("hp_reject #{task}"), ""));
+                }
+                TraceEvent::Preempt { task, device } => {
+                    push(&mut out, instant(ts, dev(*device), &format!("preempt #{task}"), ""));
+                }
+                TraceEvent::LpPlace { task, device, cores, rung } => {
+                    push(
+                        &mut out,
+                        instant(
+                            ts,
+                            dev(*device),
+                            &format!("lp_place #{task}"),
+                            &format!("\"cores\": {cores}, \"rung\": {rung}"),
+                        ),
+                    );
+                }
+                TraceEvent::LpReject { tasks } => {
+                    push(&mut out, instant(ts, ctrl, "lp_reject", &format!("\"tasks\": {tasks}")));
+                }
+                TraceEvent::Reoffer { tasks } => {
+                    push(&mut out, instant(ts, ctrl, "reoffer", &format!("\"tasks\": {tasks}")));
+                }
+                TraceEvent::TransferStart { task, device } => {
+                    xfer_open.push((*task, ts, *device));
+                }
+                TraceEvent::TransferDone { task } => match take(&mut xfer_open, *task) {
+                    Some((_, t0, d)) => push(
+                        &mut out,
+                        span(t0, ts, link, &format!("xfer #{task}"), &format!("\"dest\": {d}")),
+                    ),
+                    None => push(&mut out, instant(ts, link, &format!("xfer_done #{task}"), "")),
+                },
+                TraceEvent::CloudUploadStart { task } => {
+                    wan_open.push((*task, ts));
+                }
+                TraceEvent::CloudUploadDone { task } => {
+                    match wan_open.iter().position(|&(id, _)| id == *task) {
+                        Some(p) => {
+                            let (_, t0) = wan_open.swap_remove(p);
+                            push(&mut out, span(t0, ts, cloud, &format!("upload #{task}"), ""));
+                        }
+                        None => {
+                            push(&mut out, instant(ts, cloud, &format!("upload_done #{task}"), ""))
+                        }
+                    }
+                }
+                TraceEvent::ExecStart { task, device } => {
+                    exec_open.push((*task, ts, *device));
+                }
+                TraceEvent::Complete { task, device, high_priority, violated } => {
+                    let args = format!(
+                        "\"hp\": {high_priority}, \"violated\": {violated}"
+                    );
+                    match take(&mut exec_open, *task) {
+                        Some((_, t0, d)) => {
+                            push(&mut out, span(t0, ts, dev(d), &format!("exec #{task}"), &args))
+                        }
+                        None => push(
+                            &mut out,
+                            instant(ts, dev(*device), &format!("complete #{task}"), &args),
+                        ),
+                    }
+                }
+                TraceEvent::Violation { task } => {
+                    push(&mut out, global_instant(ts, ctrl, &format!("violation #{task}")));
+                }
+                TraceEvent::Retry { task, attempt } => {
+                    push(
+                        &mut out,
+                        instant(
+                            ts,
+                            ctrl,
+                            &format!("retry #{task}"),
+                            &format!("\"attempt\": {attempt}"),
+                        ),
+                    );
+                }
+                TraceEvent::HedgeLaunch { task, device } => {
+                    push(&mut out, instant(ts, dev(*device), &format!("hedge #{task}"), ""));
+                }
+                TraceEvent::ProbeStart { device } => {
+                    probe_open.push((*device, ts));
+                }
+                TraceEvent::ProbeEnd { device, survivors } => {
+                    let args = format!("\"survivors\": {survivors}");
+                    match probe_open.iter().position(|&(d, _)| d == *device) {
+                        Some(p) => {
+                            let (_, t0) = probe_open.swap_remove(p);
+                            push(&mut out, span(t0, ts, link, "probe", &args));
+                        }
+                        None => push(&mut out, instant(ts, link, "probe_end", &args)),
+                    }
+                }
+                TraceEvent::BandwidthUpdate { est_bps } => {
+                    push(
+                        &mut out,
+                        instant(ts, ctrl, "bw_update", &format!("\"est_bps\": {}", num(*est_bps))),
+                    );
+                }
+                TraceEvent::BandwidthStale => {
+                    push(&mut out, instant(ts, ctrl, "bw_stale", ""));
+                }
+                TraceEvent::DetectorSuspect { device, confirmed } => {
+                    push(
+                        &mut out,
+                        global_instant(
+                            ts,
+                            dev(*device),
+                            if *confirmed { "confirm_down" } else { "suspect" },
+                        ),
+                    );
+                }
+                TraceEvent::DetectorClear { device } => {
+                    push(&mut out, instant(ts, dev(*device), "suspicion_cleared", ""));
+                }
+                TraceEvent::PartitionStart { device } => {
+                    push(&mut out, instant(ts, dev(*device), "partition", ""));
+                }
+                TraceEvent::PartitionHeal { device } => {
+                    push(&mut out, instant(ts, dev(*device), "heal", ""));
+                }
+                TraceEvent::DeviceJoin { device } => {
+                    push(&mut out, instant(ts, dev(*device), "join", ""));
+                }
+                TraceEvent::DeviceLeave { device } => {
+                    push(&mut out, instant(ts, dev(*device), "leave", ""));
+                }
+                TraceEvent::DeviceCrash { device } => {
+                    push(&mut out, global_instant(ts, dev(*device), "crash"));
+                }
+                TraceEvent::DeviceRecover { device } => {
+                    push(&mut out, instant(ts, dev(*device), "recover", ""));
+                }
+                TraceEvent::BatteryDeplete { device } => {
+                    push(&mut out, global_instant(ts, dev(*device), "battery_depleted"));
+                }
+                TraceEvent::Decision(d) => {
+                    push(&mut out, instant(ts, ctrl, &decision_name(d), &decision_args(d)));
+                }
+            }
+        }
+        // Unpaired starts: the finish never happened (abandoned work) or
+        // was recorded only — render what we know as instants.
+        for (task, t0, d) in exec_open {
+            push(&mut out, instant(t0, dev(d), &format!("exec_start #{task}"), ""));
+        }
+        for (task, t0, _) in xfer_open {
+            push(&mut out, instant(t0, link, &format!("xfer_start #{task}"), ""));
+        }
+        for (task, t0) in wan_open {
+            push(&mut out, instant(t0, cloud, &format!("upload_start #{task}"), ""));
+        }
+        for (d, t0) in probe_open {
+            push(&mut out, instant(t0, link, &format!("probe_start d{d}"), ""));
+        }
+        out.push_str("\n]\n}\n");
+        out
+    }
+}
+
+impl TraceSink for FlightRecorder {
+    fn record(&mut self, at: SimTime, event: TraceEvent) {
+        self.seq += 1;
+        let rec = TraceRecord { at, seq: self.seq, event };
+        if self.buf.len() < self.capacity {
+            self.buf.push(rec);
+        } else {
+            self.buf[self.head] = rec;
+            self.head = (self.head + 1) % self.capacity;
+            self.overwritten += 1;
+        }
+    }
+}
+
+/// Shortest-round-trip float rendering, matching `report::json_f64`:
+/// non-finite values become `null` so the output stays valid JSON.
+fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn meta_event(name: &str, pid: usize, value: &str) -> String {
+    format!(
+        "{{\"name\": \"{name}\", \"ph\": \"M\", \"pid\": {pid}, \"tid\": 0, \
+         \"args\": {{\"name\": \"{}\"}}}}",
+        json_escape(value)
+    )
+}
+
+fn meta_thread(tid: usize, name: &str) -> String {
+    format!(
+        "{{\"name\": \"thread_name\", \"ph\": \"M\", \"pid\": 0, \"tid\": {tid}, \
+         \"args\": {{\"name\": \"{}\"}}}}",
+        json_escape(name)
+    )
+}
+
+/// A thread-scoped instant event; `args` is a pre-rendered `"k": v`
+/// list (may be empty).
+fn instant(ts: SimTime, tid: usize, name: &str, args: &str) -> String {
+    format!(
+        "{{\"name\": \"{}\", \"ph\": \"i\", \"s\": \"t\", \"ts\": {ts}, \"pid\": 0, \
+         \"tid\": {tid}, \"args\": {{{args}}}}}",
+        json_escape(name)
+    )
+}
+
+/// A globally-scoped instant (violations, crashes, suspicions): drawn
+/// full-height in the Perfetto UI.
+fn global_instant(ts: SimTime, tid: usize, name: &str) -> String {
+    format!(
+        "{{\"name\": \"{}\", \"ph\": \"i\", \"s\": \"g\", \"ts\": {ts}, \"pid\": 0, \
+         \"tid\": {tid}, \"args\": {{}}}}",
+        json_escape(name)
+    )
+}
+
+/// An "X" complete span from `t0` to `t1`.
+fn span(t0: SimTime, t1: SimTime, tid: usize, name: &str, args: &str) -> String {
+    format!(
+        "{{\"name\": \"{}\", \"ph\": \"X\", \"ts\": {t0}, \"dur\": {}, \"pid\": 0, \
+         \"tid\": {tid}, \"args\": {{{args}}}}}",
+        json_escape(name),
+        t1.saturating_sub(t0)
+    )
+}
+
+fn decision_name(d: &DecisionRecord) -> String {
+    format!("decide[{}] #{} {}", d.scheduler, d.task, d.outcome())
+}
+
+fn decision_args(d: &DecisionRecord) -> String {
+    let mut cands = String::from("[");
+    for (i, c) in d.candidates.iter().enumerate() {
+        if i > 0 {
+            cands.push_str(", ");
+        }
+        cands.push_str(&format!(
+            "{{\"device\": {}, \"score\": {}, \"reject\": {}}}",
+            c.device,
+            num(c.score),
+            match c.reject {
+                Some(r) => format!("\"{}\"", r.label()),
+                None => "null".to_string(),
+            }
+        ));
+    }
+    cands.push(']');
+    let chosen = match d.chosen {
+        Some((dev, cores)) => format!("{{\"device\": {dev}, \"cores\": {cores}}}"),
+        None => "null".to_string(),
+    };
+    let rung = match d.rung {
+        Some(r) => r.to_string(),
+        None => "null".to_string(),
+    };
+    format!(
+        "\"scheduler\": \"{}\", \"batch\": {}, \"hp\": {}, \"outcome\": \"{}\", \
+         \"chosen\": {chosen}, \"rung\": {rung}, \"cloud\": {}, \"candidates\": {cands}",
+        d.scheduler,
+        d.batch,
+        d.high_priority,
+        d.outcome(),
+        d.cloud
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(cap: usize) -> FlightRecorder {
+        FlightRecorder::new(cap)
+    }
+
+    #[test]
+    fn ring_holds_then_overwrites_oldest() {
+        let mut r = rec(3);
+        for i in 0..3u64 {
+            r.record(i * 10, TraceEvent::GenArrive { index: i as usize });
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.overwritten(), 0);
+        let seqs: Vec<u64> = r.records().map(|x| x.seq).collect();
+        assert_eq!(seqs, vec![1, 2, 3]);
+        // The 4th event evicts the 1st; order stays oldest-first.
+        r.record(30, TraceEvent::GenArrive { index: 3 });
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.overwritten(), 1);
+        assert_eq!(r.total_seen(), 4);
+        let seqs: Vec<u64> = r.records().map(|x| x.seq).collect();
+        assert_eq!(seqs, vec![2, 3, 4]);
+        // Wrap fully around: only the newest 3 survive.
+        for i in 4..10u64 {
+            r.record(i * 10, TraceEvent::GenArrive { index: i as usize });
+        }
+        let seqs: Vec<u64> = r.records().map(|x| x.seq).collect();
+        assert_eq!(seqs, vec![8, 9, 10]);
+        assert_eq!(r.overwritten(), 7);
+    }
+
+    #[test]
+    fn zero_capacity_is_clamped_not_panicking() {
+        let mut r = rec(0);
+        assert_eq!(r.capacity(), 1);
+        r.record(0, TraceEvent::BandwidthStale);
+        r.record(1, TraceEvent::BandwidthStale);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.total_seen(), 2);
+    }
+
+    #[test]
+    fn decisions_are_counted() {
+        let mut r = rec(8);
+        r.record(0, TraceEvent::FrameArrive { index: 0 });
+        r.record(
+            1,
+            TraceEvent::Decision(DecisionRecord {
+                scheduler: "ras",
+                task: 7,
+                batch: 1,
+                high_priority: true,
+                candidates: vec![CandidateScore { device: 0, score: 1.5, reject: None }],
+                chosen: Some((0, 4)),
+                rung: None,
+                cloud: false,
+            }),
+        );
+        assert_eq!(r.decisions(), 1);
+    }
+
+    #[test]
+    fn perfetto_pairs_spans_and_is_byte_stable() {
+        let mut r = rec(64);
+        r.record(0, TraceEvent::TransferStart { task: 1, device: 2 });
+        r.record(500, TraceEvent::TransferDone { task: 1 });
+        r.record(500, TraceEvent::ExecStart { task: 1, device: 2 });
+        r.record(
+            900,
+            TraceEvent::Complete { task: 1, device: 2, high_priority: false, violated: false },
+        );
+        r.record(950, TraceEvent::Violation { task: 9 });
+        // Unpaired start: must degrade to an instant, not invalid JSON.
+        r.record(960, TraceEvent::ExecStart { task: 3, device: 0 });
+        let a = r.perfetto_json(4);
+        let b = r.perfetto_json(4);
+        assert_eq!(a, b, "export must be byte-stable");
+        assert!(a.contains("\"traceEvents\""));
+        assert!(a.contains("\"ph\": \"X\""), "paired windows become complete spans");
+        assert!(a.contains("\"name\": \"xfer #1\""));
+        assert!(a.contains("\"dur\": 400"), "exec span duration from pairing");
+        assert!(a.contains("violation #9"));
+        assert!(a.contains("exec_start #3"), "unpaired start survives as instant");
+        // Track metadata for every device plus link + cloud.
+        assert!(a.contains("\"name\": \"device 3\""));
+        assert!(a.contains("\"name\": \"link\""));
+        assert!(a.contains("\"name\": \"cloud\""));
+        // Structural sanity: balanced braces/brackets.
+        let balance = |open: char, close: char| {
+            a.chars().filter(|&c| c == open).count() == a.chars().filter(|&c| c == close).count()
+        };
+        assert!(balance('{', '}'));
+        assert!(balance('[', ']'));
+    }
+
+    #[test]
+    fn decision_args_render_candidates_and_rejections() {
+        let d = DecisionRecord {
+            scheduler: "wps",
+            task: 42,
+            batch: 3,
+            high_priority: false,
+            candidates: vec![
+                CandidateScore { device: 0, score: 0.25, reject: None },
+                CandidateScore {
+                    device: 1,
+                    score: f64::INFINITY,
+                    reject: Some(RejectReason::Suspected),
+                },
+            ],
+            chosen: Some((0, 2)),
+            rung: Some(1),
+            cloud: false,
+        };
+        assert_eq!(d.outcome(), "placed");
+        let args = decision_args(&d);
+        assert!(args.contains("\"scheduler\": \"wps\""));
+        assert!(args.contains("\"reject\": \"suspected\""));
+        assert!(args.contains("\"score\": null"), "non-finite scores render as null");
+        assert!(args.contains("\"rung\": 1"));
+        let rejected = DecisionRecord { chosen: None, cloud: false, ..d.clone() };
+        assert_eq!(rejected.outcome(), "rejected");
+        let clouded = DecisionRecord { chosen: None, cloud: true, ..d };
+        assert_eq!(clouded.outcome(), "cloud");
+    }
+}

@@ -468,6 +468,29 @@ impl ScenarioBuilder {
         self
     }
 
+    // ---- observability (PR 9; both default off) --------------------------
+
+    /// Attach a flight recorder of `capacity` span records (ring buffer,
+    /// overwrite-oldest; 0 = off, the default). With the recorder on,
+    /// the engine emits the full task-lifecycle span taxonomy plus one
+    /// [`crate::obs::DecisionRecord`] per scheduler decision; read them
+    /// back through [`crate::sim::Engine::recorder`] or export with
+    /// [`crate::sim::Engine::trace_json`]. Off ⇒ zero events, zero RNG
+    /// draws, byte-identical runs (`rust/tests/golden_trace.rs` pins it).
+    pub fn record_trace(mut self, capacity: usize) -> Self {
+        self.extras.trace_capacity = capacity;
+        self
+    }
+
+    /// Measure wall-clock time per engine phase (dispatch / scheduler /
+    /// medium / compaction), surfaced as the `phase_*_ns` metrics
+    /// gauges. Wall-clock is non-deterministic — leave this off (the
+    /// default) anywhere byte-identity matters.
+    pub fn timing(mut self, on: bool) -> Self {
+        self.extras.timing = on;
+        self
+    }
+
     /// Freeze into a runnable [`Scenario`]. Everything time-varying
     /// compiles here — the fault plan *and* the generative arrival plan
     /// both expand over the run horizon from the scenario seed (never

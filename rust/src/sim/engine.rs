@@ -64,6 +64,7 @@ use crate::coordinator::task::{Allocation, DeviceId, FrameId, Task, TaskId, Vari
 use crate::energy::{EnergyModel, FleetEnergy};
 use crate::fault::detector::{Belief, SuspicionDetector};
 use crate::metrics::Metrics;
+use crate::obs::{FlightRecorder, Phase, PhaseTimers, TraceEvent, TraceSink};
 use crate::sim::events::{Event, EventQueue, IdBatch};
 use crate::sim::netsim::{CloudTier, FlowId, LossyMedium, Medium, PROBE_FLOW_BASE};
 use crate::time::{SimDuration, SimTime};
@@ -123,6 +124,17 @@ pub struct RunExtras {
     /// result is held undeliverable until heal. Distinct from crash, which
     /// loses work. Compile a [`crate::fault::FaultPlan`] to fill this.
     pub partitions: Vec<(SimTime, DeviceId, bool)>,
+    /// Flight-recorder ring capacity, records ([`crate::obs`]). 0 = off
+    /// (the default): the engine carries no recorder, the schedulers
+    /// never build [`crate::obs::DecisionRecord`]s, and every hook site
+    /// is a skipped `Option` check — zero events, zero RNG draws,
+    /// byte-identical output (locked by the `zero_trace_knob` golden).
+    pub trace_capacity: usize,
+    /// Per-phase wall-clock timing ([`crate::obs::PhaseTimers`]), off by
+    /// default. Wall time is inherently non-deterministic, so the
+    /// determinism/golden grids must leave this knob off; the timers
+    /// never feed the simulation, only the `phase_*_ns` gauges.
+    pub timing: bool,
 }
 
 /// Runtime state of a placed task. Staleness is carried by the slab
@@ -183,6 +195,8 @@ struct ProbeFlight {
     started: SimTime,
     bytes: u64,
     host: usize,
+    /// Pings that survived probe loss (trace-export payload).
+    survivors: u64,
 }
 
 /// The simulator.
@@ -268,6 +282,12 @@ pub struct Engine {
     /// Finished-but-undeliverable results held behind a partition; the
     /// heal re-fires their `LpFinish` (deadline re-checked then).
     held_finishes: Vec<TaskId>,
+    /// Optional flight recorder ([`crate::obs`]): `None` = tracing off —
+    /// every hook is a skipped `Option` check, no events, no RNG draws.
+    /// Boxed so the disabled engine pays one pointer, not a ring header.
+    recorder: Option<Box<FlightRecorder>>,
+    /// Optional per-phase wall-clock timers (`None` = timing off).
+    timers: Option<Box<PhaseTimers>>,
 }
 
 impl Engine {
@@ -402,6 +422,18 @@ impl Engine {
         let fleet =
             extras.energy.map(|m| FleetEnergy::new(m, extras.battery_j, cfg.n_devices));
         let cloud = CloudTier::from_config(&cfg);
+        // Attaching a recorder implies explainability: the schedulers
+        // start building DecisionRecords, drained into the ring after
+        // every handled event. With capacity 0 the scheduler is never
+        // told and the run stays byte-identical to a recorder-less one.
+        let mut sched = sched;
+        let recorder = if extras.trace_capacity > 0 {
+            sched.set_explain(true);
+            Some(Box::new(FlightRecorder::new(extras.trace_capacity)))
+        } else {
+            None
+        };
+        let timers = extras.timing.then(|| Box::new(PhaseTimers::default()));
         Self {
             active_devices: vec![true; cfg.n_devices],
             device_speed,
@@ -449,6 +481,8 @@ impl Engine {
             down_since: vec![None; cfg.n_devices],
             stalled_flows: Vec::new(),
             held_finishes: Vec::new(),
+            recorder,
+            timers,
             cfg,
             sched,
         }
@@ -461,17 +495,88 @@ impl Engine {
         let Some(s) = self.queue.pop() else { return false };
         debug_assert!(s.at >= self.now, "time went backwards");
         self.now = s.at;
+        let t0 = self.phase_start();
         self.handle(s.event);
+        self.phase_end(t0, Phase::Dispatch);
+        // Single decision-drain point: whatever DecisionRecords the
+        // handled event's scheduler calls produced enter the ring here,
+        // in event order, timestamped with the event's sim-time.
+        if self.recorder.is_some() {
+            let now = self.now;
+            let decisions = self.sched.drain_decisions();
+            if let Some(r) = self.recorder.as_mut() {
+                for d in decisions {
+                    r.record(now, TraceEvent::Decision(d));
+                }
+            }
+        }
         // Lazy compaction: epoch-guarded predictions and finishes of dead
         // placements die in place when superseded; once they dominate the
         // queue, one sweep drops them all so the footprint tracks *live*
         // events under heavy preemption, churn, and battery re-arming.
         if self.queue.should_compact() {
+            let t0 = self.phase_start();
             let mut q = std::mem::take(&mut self.queue);
             q.compact(|ev| self.event_live(ev));
             self.queue = q;
+            self.phase_end(t0, Phase::Compact);
         }
         true
+    }
+
+    // ---- observability ---------------------------------------------------
+
+    /// Start a wall-clock phase measurement. `None` (timing off, the
+    /// default) costs one branch — no clock read on the hot path.
+    #[inline]
+    fn phase_start(&self) -> Option<std::time::Instant> {
+        self.timers.as_ref().map(|_| std::time::Instant::now())
+    }
+
+    /// Fold a measurement started by [`Engine::phase_start`].
+    #[inline]
+    fn phase_end(&mut self, t0: Option<std::time::Instant>, phase: Phase) {
+        if let (Some(t0), Some(t)) = (t0, self.timers.as_mut()) {
+            t.add(phase, t0.elapsed().as_nanos() as u64);
+        }
+    }
+
+    /// Feed the flight recorder, if one is attached. With tracing off
+    /// (the default) this is a skipped `Option` check: no allocation, no
+    /// RNG, no events. Hot-path callers whose event needs extra lookups
+    /// gate construction on [`Engine::tracing`] first.
+    #[inline]
+    fn trace(&mut self, event: TraceEvent) {
+        if let Some(r) = self.recorder.as_mut() {
+            r.record(self.now, event);
+        }
+    }
+
+    /// Like [`Engine::trace`] with an explicit timestamp — exec windows
+    /// open at their allocated start, not at the decision event.
+    #[inline]
+    fn trace_at(&mut self, at: SimTime, event: TraceEvent) {
+        if let Some(r) = self.recorder.as_mut() {
+            r.record(at, event);
+        }
+    }
+
+    /// Whether a flight recorder is attached.
+    #[inline]
+    fn tracing(&self) -> bool {
+        self.recorder.is_some()
+    }
+
+    /// The attached flight recorder (`None` = tracing off). The chaos
+    /// campaign dumps this when an invariant trips.
+    pub fn recorder(&self) -> Option<&FlightRecorder> {
+        self.recorder.as_deref()
+    }
+
+    /// Chrome-trace/Perfetto JSON of the recorded run (`None` = tracing
+    /// off). See [`FlightRecorder::perfetto_json`].
+    pub fn trace_json(&self) -> Option<String> {
+        self.recorder.as_ref().map(|r| r.perfetto_json(self.cfg.n_devices))
     }
 
     /// Number of events currently queued. Scale tests assert occupancy
@@ -520,6 +625,19 @@ impl Engine {
         self.metrics.bw_stale_us = self.estimator.stale_us(self.now);
         self.metrics.reject_reasons = self.sched.reject_diag();
         self.metrics.retransmitted_mbits = self.medium.retransmitted_bits / 1e6;
+        // Hot-path gauges: the deterministic op counters always land;
+        // trace/timing gauges stay 0 unless their knobs were on.
+        self.metrics.medium_drain_ops = self.medium.drain_ops;
+        self.metrics.queue_compactions = self.queue.compactions();
+        if let Some(r) = self.recorder.as_ref() {
+            self.metrics.trace_events = r.total_seen();
+        }
+        if let Some(t) = self.timers.as_ref() {
+            self.metrics.phase_dispatch_ns = t.dispatch_ns;
+            self.metrics.phase_sched_ns = t.sched_ns;
+            self.metrics.phase_medium_ns = t.medium_ns;
+            self.metrics.phase_compact_ns = t.compact_ns;
+        }
         if let Some(f) = self.fleet.as_mut() {
             // Fold the trailing idle draw, then bank the fleet totals.
             f.settle_all(self.now);
@@ -531,6 +649,7 @@ impl Engine {
             self.metrics.energy_total_j = total;
             self.metrics.battery_final_j = f.battery_final_j();
         }
+        self.metrics.debug_audit();
         &self.metrics
     }
 
@@ -591,7 +710,7 @@ impl Engine {
             // Same respec the degradation policy planned the allocation
             // with — never a hand-rolled copy that could drift from it.
             slot.task = slot.task.at_rung(rung);
-            self.metrics.degraded_placements += 1;
+            self.metrics.degraded_placements = self.metrics.degraded_placements.saturating_add(1);
         }
     }
 
@@ -662,7 +781,7 @@ impl Engine {
         let proc = (ops as f64 * self.cfg.op_cost_us).round() as SimDuration;
         let done = service_start + proc;
         self.busy_until = done;
-        self.metrics.controller_busy_us += proc;
+        self.metrics.controller_busy_us = self.metrics.controller_busy_us.saturating_add(proc);
         (done, done - arrival)
     }
 
@@ -775,7 +894,8 @@ impl Engine {
             self.queue.note_popped_stale();
             return;
         }
-        self.metrics.battery_depletions += 1;
+        self.metrics.battery_depletions = self.metrics.battery_depletions.saturating_add(1);
+        self.trace(TraceEvent::BatteryDeplete { device });
         self.on_device_crash(device);
     }
 
@@ -811,8 +931,9 @@ impl Engine {
             return; // no object on the belt
         }
         let frame_id = index as FrameId;
-        self.metrics.frames_total += 1;
-        self.metrics.hp_generated += 1;
+        self.trace(TraceEvent::FrameArrive { index });
+        self.metrics.frames_total = self.metrics.frames_total.saturating_add(1);
+        self.metrics.hp_generated = self.metrics.hp_generated.saturating_add(1);
         self.frames[index] = FrameState {
             tracked: true,
             lp_expected: load as u32,
@@ -861,17 +982,20 @@ impl Engine {
         // Offered-load accounting happens before any drop: the
         // denominator of every drop/completion rate is what the
         // generator *asked* for, outages included.
-        self.metrics.gen_arrivals += 1;
-        self.metrics.offered_tasks += count as u64;
+        self.metrics.gen_arrivals = self.metrics.gen_arrivals.saturating_add(1);
+        self.metrics.offered_tasks = self.metrics.offered_tasks.saturating_add(count as u64);
         self.metrics.offered_mbits += count as f64 * input_bytes as f64 * 8.0 / 1e6;
+        self.trace(TraceEvent::GenArrive { index });
         if !self.device_active(arrival.source) {
             // The client's device is out of the fleet (churn/crash
             // outage): the work is offered but has nowhere to originate.
-            self.metrics.offline_dropped += count as u64;
+            self.metrics.offline_dropped = self.metrics.offline_dropped.saturating_add(count as u64);
+            self.trace(TraceEvent::AdmissionDrop { tasks: count as usize });
             return;
         }
         if cap > 0 && self.tasks.len() + count as usize > cap {
-            self.metrics.admission_dropped += count as u64;
+            self.metrics.admission_dropped = self.metrics.admission_dropped.saturating_add(count as u64);
+            self.trace(TraceEvent::AdmissionDrop { tasks: count as usize });
             return;
         }
         let frame_id = self.frames.len() as FrameId;
@@ -886,9 +1010,9 @@ impl Engine {
             counted: false,
             deadline: self.now + deadline_us,
         });
-        self.metrics.frames_total += 1;
+        self.metrics.frames_total = self.metrics.frames_total.saturating_add(1);
         if is_hp {
-            self.metrics.hp_generated += 1;
+            self.metrics.hp_generated = self.metrics.hp_generated.saturating_add(1);
             let id = self.fresh_task_id();
             let task = Task::of_class(
                 id,
@@ -904,7 +1028,7 @@ impl Engine {
             self.insert_task(task, 0);
             self.queue.push(self.now + self.cfg.control_latency(), Event::HpArrive { task: id });
         } else {
-            self.metrics.lp_generated += count as u64;
+            self.metrics.lp_generated = self.metrics.lp_generated.saturating_add(count as u64);
             let mut ids = IdBatch::new();
             for _ in 0..count {
                 let id = self.fresh_task_id();
@@ -936,20 +1060,27 @@ impl Engine {
         let frame = self.tasks.get(h).expect("hp task live at arrival").task.frame;
         // Borrow the task straight out of the slab for the dispatch — the
         // scheduler sees `&Task`, nothing is cloned.
+        let t0 = self.phase_start();
         let Decision { outcome, ops, .. } = {
             let task = &self.tasks.get(h).expect("hp task live at arrival").task;
             self.sched.on_event(service_start, SchedEvent::HighPriority { task })
         };
+        self.phase_end(t0, Phase::Sched);
         let (decision, lat) = self.charge(arrival, ops);
         match outcome {
             Outcome::HpAllocated { alloc, victims } => {
                 if victims.is_empty() {
-                    self.metrics.hp_allocated_no_preempt += 1;
+                    self.metrics.hp_allocated_no_preempt = self.metrics.hp_allocated_no_preempt.saturating_add(1);
                     self.metrics.lat_hp_alloc.record(lat);
                 } else {
-                    self.metrics.hp_allocated_with_preempt += 1;
+                    self.metrics.hp_allocated_with_preempt = self.metrics.hp_allocated_with_preempt.saturating_add(1);
                     self.metrics.lat_hp_preempt.record(lat);
                 }
+                self.trace(TraceEvent::HpPlace {
+                    task: task_id,
+                    device: alloc.device,
+                    cores: alloc.cores as u8,
+                });
                 // "Reallocation can only begin once the high-priority task
                 // has completed pre-emption": victims re-enter after the
                 // decision, plus the control round.
@@ -957,7 +1088,8 @@ impl Engine {
                 self.start_local(alloc, decision, false, false);
             }
             Outcome::HpRejected { victims } => {
-                self.metrics.hp_rejected += 1;
+                self.metrics.hp_rejected = self.metrics.hp_rejected.saturating_add(1);
+                self.trace(TraceEvent::HpReject { task: task_id });
                 self.fail_frame(frame);
                 // Tasks evicted by a preemption attempt that ultimately
                 // failed still get their reallocation chance.
@@ -971,9 +1103,10 @@ impl Engine {
     /// Cancel preemption victims and queue their low-priority re-entry.
     fn requeue_preempted(&mut self, victims: Vec<Allocation>, decision: SimTime) {
         for v in victims {
+            self.trace(TraceEvent::Preempt { task: v.task, device: v.device });
             self.cancel_placement(v.task);
-            self.metrics.lp_preempted += 1;
-            self.metrics.lp_realloc_attempts += 1;
+            self.metrics.lp_preempted = self.metrics.lp_preempted.saturating_add(1);
+            self.metrics.lp_realloc_attempts = self.metrics.lp_realloc_attempts.saturating_add(1);
             self.queue.push(
                 decision + self.cfg.control_latency(),
                 Event::LpArrive { tasks: IdBatch::one(v.task), realloc: true },
@@ -1014,6 +1147,7 @@ impl Engine {
         let h = self.slot_of(task);
         self.tasks.get_mut(h).expect("placing a live task").rt =
             Some(TaskRuntime { alloc, realloc, reoffered });
+        self.trace_at(eff_start, TraceEvent::ExecStart { task, device });
         self.energy_task_start(device, cfg_idx);
         if is_hp {
             self.queue.push(finish, Event::HpFinish { task: h });
@@ -1040,13 +1174,26 @@ impl Engine {
         let created_at = slot.task.created_at;
         self.energy_task_end(device, cfg_idx);
         if self.now > deadline {
-            self.metrics.hp_violations += 1;
+            self.metrics.hp_violations = self.metrics.hp_violations.saturating_add(1);
+            self.trace(TraceEvent::Complete {
+                task: task_id,
+                device,
+                high_priority: true,
+                violated: true,
+            });
+            self.trace(TraceEvent::Violation { task: task_id });
             self.sched.on_event(self.now, SchedEvent::Violation { task: task_id });
             self.fail_frame(frame);
             self.free_task(task_id);
             return;
         }
-        self.metrics.hp_completed += 1;
+        self.metrics.hp_completed = self.metrics.hp_completed.saturating_add(1);
+        self.trace(TraceEvent::Complete {
+            task: task_id,
+            device,
+            high_priority: true,
+            violated: false,
+        });
         self.metrics.lat_hp_e2e.record(self.now - created_at);
         self.sched.on_event(self.now, SchedEvent::Complete { task: task_id });
         let (lp_expected, frame_deadline) = {
@@ -1064,7 +1211,7 @@ impl Engine {
                 self.insert_task(t, ladder);
                 ids.push(id);
             }
-            self.metrics.lp_generated += lp_expected as u64;
+            self.metrics.lp_generated = self.metrics.lp_generated.saturating_add(lp_expected as u64);
             self.queue
                 .push(self.now + self.cfg.control_latency(), Event::LpArrive { tasks: ids, realloc: false });
         }
@@ -1137,7 +1284,10 @@ impl Engine {
             Some(realloc) => SchedEvent::LowPriorityBatch { tasks, realloc, ladder },
             None => SchedEvent::Reoffer { tasks, ladder },
         };
-        self.sched.on_event(service_start, ev)
+        let t0 = self.phase_start();
+        let d = self.sched.on_event(service_start, ev);
+        self.phase_end(t0, Phase::Sched);
+        d
     }
 
     fn on_lp_arrive(&mut self, batch: IdBatch, realloc: bool) {
@@ -1175,14 +1325,15 @@ impl Engine {
             }
             Outcome::LpRejected => {
                 if !realloc {
-                    self.metrics.lp_alloc_failures += batch.len() as u64;
+                    self.metrics.lp_alloc_failures = self.metrics.lp_alloc_failures.saturating_add(batch.len() as u64);
                 }
+                self.trace(TraceEvent::LpReject { tasks: batch.len() });
                 for &id in ids {
                     if self.hedge_dissolve_on_loss(id) {
                         continue;
                     }
                     let frame = self.task(id).frame;
-                    self.metrics.lp_lost += 1;
+                    self.metrics.lp_lost = self.metrics.lp_lost.saturating_add(1);
                     self.fail_frame(frame);
                     self.free_task(id);
                 }
@@ -1201,24 +1352,36 @@ impl Engine {
                 // Cloud placement: counted on its own axis — the core-mix
                 // counters describe the edge fleet only, so the identity
                 // becomes two + four + cloud = initial + realloc.
-                self.metrics.cloud_offloads += 1;
+                self.metrics.cloud_offloads = self.metrics.cloud_offloads.saturating_add(1);
             } else {
                 match alloc.config {
-                    crate::coordinator::task::TaskConfig::LowTwoCore => self.metrics.two_core_allocs += 1,
-                    crate::coordinator::task::TaskConfig::LowFourCore => self.metrics.four_core_allocs += 1,
+                    crate::coordinator::task::TaskConfig::LowTwoCore => self.metrics.two_core_allocs = self.metrics.two_core_allocs.saturating_add(1),
+                    crate::coordinator::task::TaskConfig::LowFourCore => self.metrics.four_core_allocs = self.metrics.four_core_allocs.saturating_add(1),
                     _ => {}
                 }
             }
             if realloc {
-                self.metrics.lp_realloc_success += 1;
+                self.metrics.lp_realloc_success = self.metrics.lp_realloc_success.saturating_add(1);
             } else {
-                self.metrics.lp_allocated_initial += 1;
+                self.metrics.lp_allocated_initial = self.metrics.lp_allocated_initial.saturating_add(1);
             }
             if reoffered {
-                self.metrics.crash_reoffer_placed += 1;
+                self.metrics.crash_reoffer_placed = self.metrics.crash_reoffer_placed.saturating_add(1);
+            }
+            if self.tracing() {
+                // The committed rung lives on the slab task (rewritten by
+                // `apply_variant` before this commit path runs).
+                let rung =
+                    self.tasks.get(self.slot_of(alloc.task)).map_or(0, |s| s.rung as usize);
+                self.trace(TraceEvent::LpPlace {
+                    task: alloc.task,
+                    device: alloc.device,
+                    cores: alloc.cores as u8,
+                    rung,
+                });
             }
             if alloc.offloaded {
-                self.metrics.offloaded_total += 1;
+                self.metrics.offloaded_total = self.metrics.offloaded_total.saturating_add(1);
                 // The device ships the input image when the
                 // reserved communication window opens.
                 let comm_start = alloc.comm.map(|(c1, _)| c1).unwrap_or(decision);
@@ -1267,11 +1430,13 @@ impl Engine {
         if dst >= self.cfg.n_devices {
             // Cloud placement: the input rides the WAN uplink, not the
             // fleet's shared 802.11 medium.
+            self.trace(TraceEvent::CloudUploadStart { task: id });
             if let Some(c) = self.cloud.as_mut() {
                 c.begin_upload(self.now, id, bytes);
             }
             self.arm_wan();
         } else {
+            self.trace(TraceEvent::TransferStart { task: id, device: dst });
             self.medium.add_flow(self.now, id, bytes);
             self.arm_medium();
         }
@@ -1312,7 +1477,7 @@ impl Engine {
         if offloaded && (self.is_partitioned(source) || self.is_partitioned(device)) {
             if !self.held_finishes.contains(&task_id) {
                 self.held_finishes.push(task_id);
-                self.metrics.partition_held_results += 1;
+                self.metrics.partition_held_results = self.metrics.partition_held_results.saturating_add(1);
             }
             return;
         }
@@ -1322,7 +1487,7 @@ impl Engine {
             // deliver in time, so a late half never fails the frame — it
             // hands the logical task to the survivor and exits silently.
             if let Some(primary) = hedge_of {
-                self.metrics.hedges_wasted += 1;
+                self.metrics.hedges_wasted = self.metrics.hedges_wasted.saturating_add(1);
                 let ph = self.slot_of(primary);
                 if let Some(ps) = self.tasks.get_mut(ph) {
                     ps.hedged_by = None;
@@ -1340,7 +1505,14 @@ impl Engine {
                 self.free_task(task_id);
                 return;
             }
-            self.metrics.lp_violations += 1;
+            self.metrics.lp_violations = self.metrics.lp_violations.saturating_add(1);
+            self.trace(TraceEvent::Complete {
+                task: task_id,
+                device,
+                high_priority: false,
+                violated: true,
+            });
+            self.trace(TraceEvent::Violation { task: task_id });
             self.sched.on_event(self.now, SchedEvent::Violation { task: task_id });
             self.fail_frame(frame);
             self.free_task(task_id);
@@ -1350,28 +1522,34 @@ impl Engine {
         // of a hedge pair ever reaches the accounting below; the loser's
         // placement is cancelled without any completion/violation credit.
         if let Some(primary) = hedge_of {
-            self.metrics.hedges_won += 1;
+            self.metrics.hedges_won = self.metrics.hedges_won.saturating_add(1);
             self.cancel_placement(primary);
             self.sched.on_event(self.now, SchedEvent::Violation { task: primary });
             self.free_task(primary);
         } else if let Some(clone) = hedged_by {
-            self.metrics.hedges_wasted += 1;
+            self.metrics.hedges_wasted = self.metrics.hedges_wasted.saturating_add(1);
             self.cancel_placement(clone);
             self.sched.on_event(self.now, SchedEvent::Violation { task: clone });
             self.free_task(clone);
         }
+        self.trace(TraceEvent::Complete {
+            task: task_id,
+            device,
+            high_priority: false,
+            violated: false,
+        });
         self.metrics.lat_lp_e2e.record(self.now - created_at);
         if realloc {
-            self.metrics.lp_completed_realloc += 1;
+            self.metrics.lp_completed_realloc = self.metrics.lp_completed_realloc.saturating_add(1);
         } else {
-            self.metrics.lp_completed_initial += 1;
+            self.metrics.lp_completed_initial = self.metrics.lp_completed_initial.saturating_add(1);
         }
         if offloaded {
-            self.metrics.offloaded_completed += 1;
+            self.metrics.offloaded_completed = self.metrics.offloaded_completed.saturating_add(1);
             if device >= self.cfg.n_devices {
                 // The three-tier acceptance metric: cloud placements
                 // that actually delivered within deadline.
-                self.metrics.cloud_completions += 1;
+                self.metrics.cloud_completions = self.metrics.cloud_completions.saturating_add(1);
             }
         }
         // Delivered-accuracy accounting: a completion delivers its
@@ -1383,11 +1561,11 @@ impl Engine {
         self.metrics.accuracy_sum += accuracy;
         self.metrics.rung_completions[rung.min(MAX_RUNGS - 1)] += 1;
         if rung > 0 {
-            self.metrics.degraded_completions += 1;
+            self.metrics.degraded_completions = self.metrics.degraded_completions.saturating_add(1);
         }
         if reoffered {
             // A crash-lost task made it back inside its original deadline.
-            self.metrics.crash_recovered_in_deadline += 1;
+            self.metrics.crash_recovered_in_deadline = self.metrics.crash_recovered_in_deadline.saturating_add(1);
         }
         self.sched.on_event(self.now, SchedEvent::Complete { task: task_id });
         if let Some(f) = self.frame_mut(frame) {
@@ -1401,6 +1579,7 @@ impl Engine {
 
     /// (Re-)arm the next medium completion event under the current epoch.
     fn arm_medium(&mut self) {
+        let t0 = self.phase_start();
         if let Some((t, flow)) = self.medium.next_completion(self.now) {
             let epoch = self.medium.epoch;
             if self.armed_medium != u64::MAX && self.armed_medium != epoch {
@@ -1409,6 +1588,7 @@ impl Engine {
             self.armed_medium = epoch;
             self.queue.push(t, Event::MediumComplete { flow, epoch });
         }
+        self.phase_end(t0, Phase::Medium);
     }
 
     fn on_medium_complete(&mut self, flow: FlowId, epoch: u64) {
@@ -1435,6 +1615,8 @@ impl Engine {
             if let Some((alloc, source)) = placed {
                 let eff_start = alloc.start.max(self.now);
                 let proc = self.actual_duration(&alloc);
+                self.trace(TraceEvent::TransferDone { task: flow });
+                self.trace_at(eff_start, TraceEvent::ExecStart { task: flow, device: alloc.device });
                 self.queue.push(eff_start + proc, Event::LpFinish { task: h });
                 self.energy_transfer_end(source, alloc.device);
             }
@@ -1487,6 +1669,7 @@ impl Engine {
             .get(h)
             .and_then(|s| s.rt.as_ref().map(|rt| (rt.alloc.device, s.task.source, s.task.cloud_us)));
         if let Some((device, source, cloud_us)) = done {
+            self.trace(TraceEvent::CloudUploadDone { task: flow });
             // The source's radio goes quiet the moment the upload lands.
             self.energy_transfer_end(source, device);
             self.queue.push(now + rtt_us + cloud_us, Event::LpFinish { task: h });
@@ -1532,9 +1715,11 @@ impl Engine {
         // the attempt still consumes its slot in the probe cadence.
         let pings = self.cfg.ping_count as u64 * (n_active as u64 - 1);
         let survivors = self.medium.probe_survivors(pings);
-        self.metrics.probe_pings_lost += pings - survivors;
+        self.metrics.probe_pings_lost = self.metrics.probe_pings_lost.saturating_add(pings - survivors);
         if survivors == 0 {
-            self.metrics.probe_rounds_lost += 1;
+            self.trace(TraceEvent::ProbeStart { device: host });
+            self.trace(TraceEvent::ProbeEnd { device: host, survivors: 0 });
+            self.metrics.probe_rounds_lost = self.metrics.probe_rounds_lost.saturating_add(1);
             let was_stale = self.estimator.is_stale(self.now);
             let _ = self.estimator.apply(self.now, &ProbeRound { host, samples_bps: vec![] });
             if !was_stale && self.estimator.is_stale(self.now) {
@@ -1560,7 +1745,8 @@ impl Engine {
         let bytes = bytes as u64;
         let id = self.next_probe_id;
         self.next_probe_id += 1;
-        self.probes.push((id, ProbeFlight { started: self.now, bytes, host }));
+        self.trace(TraceEvent::ProbeStart { device: host });
+        self.probes.push((id, ProbeFlight { started: self.now, bytes, host, survivors }));
         self.medium.add_flow(self.now, id, bytes);
         self.arm_medium();
         // Next round is interval-periodic regardless of this round's
@@ -1584,9 +1770,11 @@ impl Engine {
         // survivor counts already tracked in the metrics).
         let achieved_bps = p.bytes as f64 * 8.0 / (dur_us as f64 / 1e6);
         let round = ProbeRound { host: p.host, samples_bps: vec![achieved_bps] };
+        self.trace(TraceEvent::ProbeEnd { device: p.host, survivors: p.survivors });
         let was_stale = self.estimator.is_stale(self.now);
         if let Some(new_est) = self.estimator.apply(self.now, &round) {
-            self.metrics.bandwidth_updates += 1;
+            self.metrics.bandwidth_updates = self.metrics.bandwidth_updates.saturating_add(1);
+            self.trace(TraceEvent::BandwidthUpdate { est_bps: new_est });
             // The scheduler rebuilds its link representation; the
             // controller is busy for the duration (no allocations can be
             // made while the data structure regenerates).
@@ -1594,10 +1782,10 @@ impl Engine {
                 .sched
                 .on_event(self.now, SchedEvent::BandwidthUpdate { bps: new_est })
                 .ops;
-            self.metrics.link_rebuild_ops += ops;
+            self.metrics.link_rebuild_ops = self.metrics.link_rebuild_ops.saturating_add(ops);
             let proc = (ops as f64 * self.cfg.op_cost_us).round() as SimDuration;
             self.busy_until = self.busy_until.max(self.now) + proc;
-            self.metrics.controller_busy_us += proc;
+            self.metrics.controller_busy_us = self.metrics.controller_busy_us.saturating_add(proc);
         }
         if !was_stale && self.estimator.is_stale(self.now) {
             self.emit_bandwidth_stale();
@@ -1646,7 +1834,8 @@ impl Engine {
             return; // already in the fleet
         }
         self.active_devices[device] = true;
-        self.metrics.churn_joins += 1;
+        self.metrics.churn_joins = self.metrics.churn_joins.saturating_add(1);
+        self.trace(TraceEvent::DeviceJoin { device });
         // A (re-)join is announced: any stale suspicion resets silently
         // (the join path clears it scheduler-side too).
         let _ = self.detector.heartbeat(device);
@@ -1659,7 +1848,8 @@ impl Engine {
             return;
         }
         self.active_devices[device] = false;
-        self.metrics.churn_leaves += 1;
+        self.metrics.churn_leaves = self.metrics.churn_leaves.saturating_add(1);
+        self.trace(TraceEvent::DeviceLeave { device });
         // Settle the departing device's draw first: eviction hooks below
         // then no-op on it (its run counters are force-cleared) while
         // still releasing live counterparts on surviving devices.
@@ -1670,7 +1860,7 @@ impl Engine {
         };
         for a in evicted {
             self.cancel_placement(a.task);
-            self.metrics.churn_evicted += 1;
+            self.metrics.churn_evicted = self.metrics.churn_evicted.saturating_add(1);
             let source = self.task(a.task).source;
             let hp = a.config == crate::coordinator::task::TaskConfig::HighPriority;
             if hp || source == device || !self.device_active(source) {
@@ -1680,7 +1870,7 @@ impl Engine {
                     continue;
                 }
                 if !hp {
-                    self.metrics.lp_lost += 1;
+                    self.metrics.lp_lost = self.metrics.lp_lost.saturating_add(1);
                 }
                 self.fail_frame(a.frame);
                 self.free_task(a.task);
@@ -1688,7 +1878,7 @@ impl Engine {
                 // Guest task on the departed device: its source still has
                 // the input, so it re-enters low-priority scheduling like a
                 // preemption victim.
-                self.metrics.lp_realloc_attempts += 1;
+                self.metrics.lp_realloc_attempts = self.metrics.lp_realloc_attempts.saturating_add(1);
                 self.queue.push(
                     self.now + self.cfg.control_latency(),
                     Event::LpArrive { tasks: IdBatch::one(a.task), realloc: true },
@@ -1708,7 +1898,8 @@ impl Engine {
             return; // already down (or never joined): nothing to lose
         }
         self.active_devices[device] = false;
-        self.metrics.device_crashes += 1;
+        self.metrics.device_crashes = self.metrics.device_crashes.saturating_add(1);
+        self.trace(TraceEvent::DeviceCrash { device });
         if self.crashed_at.len() <= device {
             self.crashed_at.resize(device + 1, None);
         }
@@ -1723,7 +1914,7 @@ impl Engine {
         };
         for a in evicted {
             self.cancel_placement(a.task); // aborts the medium flow too
-            self.metrics.crash_tasks_lost += 1;
+            self.metrics.crash_tasks_lost = self.metrics.crash_tasks_lost.saturating_add(1);
             let source = self.task(a.task).source;
             let hp = a.config == crate::coordinator::task::TaskConfig::HighPriority;
             if hp || source == device || !self.device_active(source) {
@@ -1733,7 +1924,7 @@ impl Engine {
                     continue;
                 }
                 if !hp {
-                    self.metrics.lp_lost += 1;
+                    self.metrics.lp_lost = self.metrics.lp_lost.saturating_add(1);
                 }
                 self.fail_frame(a.frame);
                 self.free_task(a.task);
@@ -1741,8 +1932,8 @@ impl Engine {
                 // The source still holds the input: re-offer the lost
                 // task. Its deadline is unchanged — the time burned
                 // before the crash is gone for good.
-                self.metrics.crash_tasks_reoffered += 1;
-                self.metrics.lp_realloc_attempts += 1;
+                self.metrics.crash_tasks_reoffered = self.metrics.crash_tasks_reoffered.saturating_add(1);
+                self.metrics.lp_realloc_attempts = self.metrics.lp_realloc_attempts.saturating_add(1);
                 self.queue.push(
                     self.now + self.cfg.control_latency(),
                     Event::Reoffer { tasks: IdBatch::one(a.task) },
@@ -1777,8 +1968,8 @@ impl Engine {
             if self.hedge_dissolve_on_loss(id) {
                 continue;
             }
-            self.metrics.crash_tasks_lost += 1;
-            self.metrics.lp_lost += 1;
+            self.metrics.crash_tasks_lost = self.metrics.crash_tasks_lost.saturating_add(1);
+            self.metrics.lp_lost = self.metrics.lp_lost.saturating_add(1);
             self.fail_frame(frame);
             self.free_task(id);
         }
@@ -1801,8 +1992,8 @@ impl Engine {
             if self.hedge_dissolve_on_loss(id) {
                 continue;
             }
-            self.metrics.crash_tasks_lost += 1;
-            self.metrics.lp_lost += 1;
+            self.metrics.crash_tasks_lost = self.metrics.crash_tasks_lost.saturating_add(1);
+            self.metrics.lp_lost = self.metrics.lp_lost.saturating_add(1);
             self.fail_frame(frame);
             self.free_task(id);
         }
@@ -1830,7 +2021,8 @@ impl Engine {
             return; // already revived (a graceful join beat the recovery)
         }
         self.active_devices[device] = true;
-        self.metrics.device_recoveries += 1;
+        self.metrics.device_recoveries = self.metrics.device_recoveries.saturating_add(1);
+        self.trace(TraceEvent::DeviceRecover { device });
         self.metrics.lat_crash_recovery.record(self.now - crashed);
         // `DeviceRecovered` already re-admits the device scheduler-side
         // (it routes through the join path, which drops any suspicion),
@@ -1867,8 +2059,8 @@ impl Engine {
                 if self.hedge_dissolve_on_loss(id) {
                     continue;
                 }
-                self.metrics.crash_reoffer_dropped += 1;
-                self.metrics.lp_lost += 1;
+                self.metrics.crash_reoffer_dropped = self.metrics.crash_reoffer_dropped.saturating_add(1);
+                self.metrics.lp_lost = self.metrics.lp_lost.saturating_add(1);
                 if frame_alive {
                     // The source (and its input image) died between the
                     // crash and the re-offer: the frame can never finish.
@@ -1880,6 +2072,7 @@ impl Engine {
         if live.is_empty() {
             return;
         }
+        self.trace(TraceEvent::Reoffer { tasks: live.as_slice().len() });
         let ids = live.as_slice();
         let arrival = self.now;
         let service_start = self.busy_until.max(arrival);
@@ -1892,12 +2085,13 @@ impl Engine {
                 self.place_lp_allocs(allocs, decision, true, true)
             }
             Outcome::LpRejected => {
+                self.trace(TraceEvent::LpReject { tasks: ids.len() });
                 for &id in ids {
                     if self.hedge_dissolve_on_loss(id) {
                         continue;
                     }
-                    self.metrics.crash_reoffer_dropped += 1;
-                    self.metrics.lp_lost += 1;
+                    self.metrics.crash_reoffer_dropped = self.metrics.crash_reoffer_dropped.saturating_add(1);
+                    self.metrics.lp_lost = self.metrics.lp_lost.saturating_add(1);
                     let frame = self.task(id).frame;
                     self.fail_frame(frame);
                     self.free_task(id);
@@ -1949,14 +2143,15 @@ impl Engine {
     fn charge_control(&mut self, ops: Ops) {
         let proc = (ops as f64 * self.cfg.op_cost_us).round() as SimDuration;
         self.busy_until = self.busy_until.max(self.now) + proc;
-        self.metrics.controller_busy_us += proc;
+        self.metrics.controller_busy_us = self.metrics.controller_busy_us.saturating_add(proc);
     }
 
     /// The estimator crossed into staleness: the schedulers switch to
     /// conservative planning until the next successful probe round.
     fn emit_bandwidth_stale(&mut self) {
+        self.trace(TraceEvent::BandwidthStale);
         let ops = self.sched.on_event(self.now, SchedEvent::BandwidthStale).ops;
-        self.metrics.link_rebuild_ops += ops;
+        self.metrics.link_rebuild_ops = self.metrics.link_rebuild_ops.saturating_add(ops);
         self.charge_control(ops);
     }
 
@@ -1974,7 +2169,8 @@ impl Engine {
             let reachable = self.device_active(d) && !self.is_partitioned(d);
             if reachable && delivered {
                 if self.detector.heartbeat(d) {
-                    self.metrics.devices_cleared += 1;
+                    self.metrics.devices_cleared = self.metrics.devices_cleared.saturating_add(1);
+                    self.trace(TraceEvent::DetectorClear { device: d });
                     let ops =
                         self.sched.on_event(self.now, SchedEvent::DeviceCleared { device: d }).ops;
                     self.charge_control(ops);
@@ -2001,10 +2197,11 @@ impl Engine {
     fn note_miss(&mut self, device: DeviceId) {
         match self.detector.miss(device) {
             Some(Belief::Suspected) => {
-                self.metrics.devices_suspected += 1;
+                self.metrics.devices_suspected = self.metrics.devices_suspected.saturating_add(1);
+                self.trace(TraceEvent::DetectorSuspect { device, confirmed: false });
                 match self.down_since.get(device).copied().flatten() {
                     Some(since) => self.metrics.lat_detection.record(self.now - since),
-                    None => self.metrics.false_suspicions += 1,
+                    None => self.metrics.false_suspicions = self.metrics.false_suspicions.saturating_add(1),
                 }
                 let ops = self
                     .sched
@@ -2014,7 +2211,10 @@ impl Engine {
             }
             // Confirmation is a metrics-grade escalation only: the
             // scheduler already stopped placing at suspicion.
-            Some(Belief::Confirmed) | Some(Belief::Alive) | None => {}
+            Some(Belief::Confirmed) => {
+                self.trace(TraceEvent::DetectorSuspect { device, confirmed: true });
+            }
+            Some(Belief::Alive) | None => {}
         }
     }
 
@@ -2029,13 +2229,13 @@ impl Engine {
                 .unwrap_or(0.0);
             if self.cloud.as_mut().map_or(false, |c| c.abort_upload(self.now, id)) {
                 self.stalled_flows.push((id, bits));
-                self.metrics.partition_stalled_flows += 1;
+                self.metrics.partition_stalled_flows = self.metrics.partition_stalled_flows.saturating_add(1);
                 self.arm_wan();
             }
         } else if let Some(bits) = self.medium.remaining_bits(self.now, id) {
             self.medium.remove_flow(self.now, id);
             self.stalled_flows.push((id, bits));
-            self.metrics.partition_stalled_flows += 1;
+            self.metrics.partition_stalled_flows = self.metrics.partition_stalled_flows.saturating_add(1);
             self.arm_medium();
         }
     }
@@ -2051,7 +2251,8 @@ impl Engine {
             return; // already down: a crash dominates a partition
         }
         self.partitioned[device] = true;
-        self.metrics.partitions_started += 1;
+        self.metrics.partitions_started = self.metrics.partitions_started.saturating_add(1);
+        self.trace(TraceEvent::PartitionStart { device });
         if let Some(x) = self.down_since.get_mut(device) {
             x.get_or_insert(self.now);
         }
@@ -2093,7 +2294,8 @@ impl Engine {
             return;
         }
         self.partitioned[device] = false;
-        self.metrics.partitions_healed += 1;
+        self.metrics.partitions_healed = self.metrics.partitions_healed.saturating_add(1);
+        self.trace(TraceEvent::PartitionHeal { device });
         self.refresh_down(device);
         let stalled = std::mem::take(&mut self.stalled_flows);
         let mut keep = Vec::new();
@@ -2175,8 +2377,8 @@ impl Engine {
             if self.hedge_dissolve_on_loss(id) {
                 continue;
             }
-            self.metrics.crash_tasks_lost += 1;
-            self.metrics.lp_lost += 1;
+            self.metrics.crash_tasks_lost = self.metrics.crash_tasks_lost.saturating_add(1);
+            self.metrics.lp_lost = self.metrics.lp_lost.saturating_add(1);
             if let Some(f) = frame {
                 self.fail_frame(f);
             }
@@ -2198,7 +2400,7 @@ impl Engine {
             if self.hedge_dissolve_on_loss(id) {
                 continue;
             }
-            self.metrics.lp_lost += 1;
+            self.metrics.lp_lost = self.metrics.lp_lost.saturating_add(1);
             if let Some(f) = frame {
                 self.fail_frame(f);
             }
@@ -2215,7 +2417,7 @@ impl Engine {
         let (hedge_of, hedged_by) = (slot.hedge_of, slot.hedged_by);
         let Some(partner) = hedge_of.or(hedged_by) else { return false };
         if hedge_of.is_some() {
-            self.metrics.hedges_wasted += 1; // a lost duplicate never wins
+            self.metrics.hedges_wasted = self.metrics.hedges_wasted.saturating_add(1); // a lost duplicate never wins
         }
         if let Some(ps) = self.tasks.get_mut(self.slot_of(partner)) {
             ps.hedge_of = None;
@@ -2256,11 +2458,12 @@ impl Engine {
         let _ = self.sched.on_event(self.now, SchedEvent::Violation { task: id });
         self.cancel_placement(id);
         if (tries as u32) < self.cfg.retry_limit {
-            self.metrics.retries += 1;
+            self.metrics.retries = self.metrics.retries.saturating_add(1);
+            self.trace(TraceEvent::Retry { task: id, attempt: tries as u32 + 1 });
             if let Some(s) = self.tasks.get_mut(self.slot_of(id)) {
                 s.tries = tries.saturating_add(1);
             }
-            self.metrics.lp_realloc_attempts += 1;
+            self.metrics.lp_realloc_attempts = self.metrics.lp_realloc_attempts.saturating_add(1);
             self.queue.push(
                 self.now + self.cfg.control_latency(),
                 Event::LpArrive { tasks: IdBatch::one(id), realloc: true },
@@ -2269,7 +2472,7 @@ impl Engine {
             if self.hedge_dissolve_on_loss(id) {
                 return;
             }
-            self.metrics.lp_lost += 1;
+            self.metrics.lp_lost = self.metrics.lp_lost.saturating_add(1);
             self.fail_frame(frame);
             self.free_task(id);
         }
@@ -2309,10 +2512,14 @@ impl Engine {
             self.dispatch_batch(service_start, &ids, Some(true));
         let (decision, lat) = self.charge(arrival, ops);
         self.metrics.lat_lp_realloc.record(lat);
-        self.metrics.lp_realloc_attempts += 1;
+        self.metrics.lp_realloc_attempts = self.metrics.lp_realloc_attempts.saturating_add(1);
         match outcome {
             Outcome::LpAllocated { allocs } => {
-                self.metrics.hedges_launched += 1;
+                self.metrics.hedges_launched = self.metrics.hedges_launched.saturating_add(1);
+                if self.tracing() {
+                    let dev = allocs.first().map_or(0, |a| a.device);
+                    self.trace(TraceEvent::HedgeLaunch { task: clone_id, device: dev });
+                }
                 self.apply_variant(&ids, variant);
                 // Link before placement so neither half re-hedges.
                 if let Some(ps) = self.tasks.get_mut(self.slot_of(primary_id)) {
@@ -2343,7 +2550,7 @@ impl Engine {
         if let Some(f) = self.frame_mut(frame) {
             if !f.counted && !f.failed && f.hp_done && f.lp_done >= f.lp_expected {
                 f.counted = true;
-                self.metrics.frames_completed += 1;
+                self.metrics.frames_completed = self.metrics.frames_completed.saturating_add(1);
             }
         }
     }

@@ -237,6 +237,9 @@ pub struct EventQueue {
     seq: u64,
     /// Estimated dead (superseded) events still queued.
     stale: usize,
+    /// Compaction sweeps performed over this queue's lifetime
+    /// (deterministic hot-path gauge; surfaced as `queue_compactions`).
+    compactions: u64,
 }
 
 impl Default for EventQueue {
@@ -251,6 +254,7 @@ impl Default for EventQueue {
             cursor: 0,
             seq: 0,
             stale: 0,
+            compactions: 0,
         }
     }
 }
@@ -379,10 +383,16 @@ impl EventQueue {
         self.len >= 512 && self.stale * 2 > self.len
     }
 
+    /// Compaction sweeps performed so far (diagnostics/metrics).
+    pub fn compactions(&self) -> u64 {
+        self.compactions
+    }
+
     /// Drop every queued event the predicate rejects, keeping original
     /// `(at, seq)` order for survivors (seq values are preserved, so FIFO
     /// ties replay identically). Resets the stale estimate.
     pub fn compact(&mut self, mut live: impl FnMut(&Event) -> bool) {
+        self.compactions += 1;
         let mut all: Vec<Scheduled> =
             Vec::with_capacity(self.staged.len() + self.in_ring + self.far.len());
         all.extend(std::mem::take(&mut self.staged));
@@ -556,6 +566,7 @@ mod tests {
         q.compact(|ev| !matches!(ev, Event::MediumComplete { epoch: 0, .. }));
         assert_eq!(q.len(), 500);
         assert_eq!(q.stale_estimate(), 0);
+        assert_eq!(q.compactions(), 1, "the sweep gauge counts each compaction");
         assert!(!q.should_compact());
         // Survivors still pop in exact time order with odd epochs only.
         let mut last = 0;

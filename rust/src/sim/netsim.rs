@@ -69,6 +69,9 @@ pub struct Medium {
     /// is order-preserving until the clamp. Maintained on
     /// add/remove/complete; `Some` iff flows is non-empty.
     min_flow: Option<(f64, FlowId)>,
+    /// Fluid-model advances that did real work (deterministic hot-path
+    /// gauge; surfaced as `medium_drain_ops` in the metrics).
+    pub drain_ops: u64,
 }
 
 impl Medium {
@@ -83,6 +86,7 @@ impl Medium {
             drained: 0.0,
             sum_deficit: 0.0,
             min_flow: None,
+            drain_ops: 0,
         }
     }
 
@@ -154,6 +158,7 @@ impl Medium {
         let dt_s = (now - self.last_update) as f64 / 1e6;
         self.drained += self.per_flow_bps() * dt_s;
         self.last_update = now;
+        self.drain_ops += 1;
     }
 
     /// Start a transfer of `bytes` at `now`.

@@ -478,3 +478,101 @@ fn single_faulted_scenario_replays_identically() {
     let b = s.run();
     assert_eq!(format!("{a:?}"), format!("{b:?}"));
 }
+
+// ---- flight-recorder determinism (PR 9) --------------------------------
+
+/// `grid` with a flight recorder attached to every cell. The recorder
+/// makes no RNG draws and never feeds back into scheduling, so the rows
+/// must stay identical to the unrecorded grid up to the `trace_events`
+/// tally itself.
+fn recorded(grid: &Sweep) -> Sweep {
+    let mut out = Sweep::new();
+    for s in grid.scenarios() {
+        let mut s = s.clone();
+        s.extras.trace_capacity = medge::obs::DEFAULT_CAPACITY;
+        out = out.add(s);
+    }
+    out
+}
+
+#[test]
+fn recorded_chaos_grid_identical_across_thread_counts() {
+    // The chaos grid fires every span source the engine has (detector,
+    // retry, hedge, partition, crash, probe loss); with recorders on,
+    // the rows — including the trace_events tally — must be identical
+    // at any worker-thread count.
+    let g = recorded(&chaos_grid());
+    let seq = rows_debug(&g.clone().threads(1));
+    let par4 = rows_debug(&g.clone().threads(4));
+    let par2 = rows_debug(&g.threads(2));
+    assert_eq!(seq.len(), 3);
+    for (i, row) in seq.iter().enumerate() {
+        assert_eq!(row, &par4[i], "recorded row {i} differs between --threads 1 and --threads 4");
+        assert_eq!(row, &par2[i], "recorded row {i} differs between --threads 1 and --threads 2");
+    }
+}
+
+#[test]
+fn flight_recorder_contents_replay_identically() {
+    // Stronger than the metrics wall: the surviving ring contents AND
+    // the Perfetto export of every chaos cell must replay byte for byte.
+    for s in recorded(&chaos_grid()).scenarios() {
+        let run = || {
+            let mut eng = s.engine();
+            eng.drain();
+            let r = eng.recorder().expect("recorder attached");
+            let records: Vec<String> = r.records().map(|t| format!("{t:?}")).collect();
+            (records, eng.trace_json().expect("recorder attached"))
+        };
+        let (recs_a, json_a) = run();
+        let (recs_b, json_b) = run();
+        assert!(!recs_a.is_empty(), "{}: recorder saw nothing", s.name);
+        assert_eq!(recs_a, recs_b, "{}: ring contents drifted between runs", s.name);
+        assert_eq!(json_a, json_b, "{}: perfetto export drifted between runs", s.name);
+        assert!(json_a.contains("\"traceEvents\""), "{}: not a Chrome trace", s.name);
+    }
+}
+
+#[test]
+fn recording_does_not_perturb_the_simulation() {
+    // The recorder is a pure observer: attaching it must not change a
+    // single metric other than the trace_events tally itself.
+    let plain = chaos_grid().threads(2).run();
+    let rec = recorded(&chaos_grid()).threads(2).run();
+    assert_eq!(plain.len(), rec.len());
+    for (p, mut r) in plain.into_iter().zip(rec) {
+        assert_eq!(p.trace_events, 0, "{}: unrecorded run counted events", p.label);
+        assert!(r.trace_events > 0, "{}: recorded run saw nothing", r.label);
+        r.trace_events = 0;
+        assert_eq!(
+            format!("{p:?}"),
+            format!("{r:?}"),
+            "recording perturbed the simulation in {}",
+            p.label
+        );
+    }
+}
+
+#[test]
+fn recorded_run_explains_placements() {
+    use medge::obs::TraceEvent;
+    // Every chaos cell must carry scheduler decision records, including
+    // at least one explaining a successful placement (chosen device set)
+    // and at least one high-priority decision.
+    for s in recorded(&chaos_grid()).scenarios() {
+        let mut eng = s.engine();
+        eng.drain();
+        let r = eng.recorder().expect("recorder attached");
+        assert!(r.decisions() > 0, "{}: no decision records", s.name);
+        let placed = r
+            .records()
+            .filter(|t| matches!(&t.event, TraceEvent::Decision(d) if d.chosen.is_some()))
+            .count();
+        assert!(placed > 0, "{}: no decision explains a successful placement", s.name);
+        let hp = r
+            .records()
+            .filter(|t| matches!(&t.event, TraceEvent::Decision(d) if d.high_priority))
+            .count();
+        assert!(hp > 0, "{}: no high-priority decision recorded", s.name);
+    }
+}

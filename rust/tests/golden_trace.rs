@@ -200,6 +200,31 @@ fn zero_robustness_knobs_replay_golden_rows_byte_for_byte() {
     }
 }
 
+/// The observability layer (PR 9) must be provably zero-cost when off:
+/// the golden scenario with the flight recorder and phase timers set to
+/// their explicit OFF values (`record_trace(0)`, `timing(false)`)
+/// replays `json_rows` **byte-identically** to the untouched builder,
+/// for every scheduler — zero events, zero RNG draws, zeroed
+/// `trace_events`/`phase_*_ns` fields. This is also what keeps the
+/// checked-in goldens valid across the observability PR.
+#[test]
+fn zero_trace_knob_replays_golden_rows_byte_for_byte() {
+    for kind in [SchedKind::Wps, SchedKind::Ras, SchedKind::Multi] {
+        let plain = report::json_rows(&[golden_scenario(kind)]);
+        let knobbed = report::json_rows(&[golden_builder(kind)
+            .record_trace(0)
+            .timing(false)
+            .build()
+            .run()]);
+        assert_eq!(
+            plain,
+            knobbed,
+            "{}: explicit zero observability knobs must be byte-identical to defaults",
+            kind.label()
+        );
+    }
+}
+
 /// Determinism assertion for the fault path specifically: the golden
 /// scenario crashes device 3 with work in flight, so every replay
 /// exercises the crash orphan scan. That scan now iterates the medium's
