@@ -1,0 +1,65 @@
+//! Anytime-truncation cookbook run: the staged stage-3 family (mandatory
+//! backbone + optional refinement stages) under MMPP burst overload,
+//! pressure controller off vs on, for all four LP policies including the
+//! Fresa & Champati accuracy-maximizing GREEDY. The anytime table is the
+//! point — the cut rows meet strictly more deadlines by shedding
+//! refinement stages mid-flight, and accuracy goodput does not fall:
+//! truncation spends tail accuracy the deadline would have wasted anyway.
+//!
+//! ```sh
+//! cargo run --release --example anytime_pressure
+//! ```
+
+use medge::config::SystemConfig;
+use medge::experiments::{anytime_catalog, frontier_arrivals, ANYTIME_BACKLOG, ANYTIME_CHECK_S};
+use medge::metrics::report;
+use medge::scenario::{ScenarioBuilder, SchedKind, Sweep};
+use medge::workload::gen::Workload;
+
+fn main() {
+    let cfg = SystemConfig::default();
+    let mut sweep = Sweep::new();
+    for kind in [SchedKind::Wps, SchedKind::Ras, SchedKind::Multi, SchedKind::Greedy] {
+        for cut in [false, true] {
+            let mut b = ScenarioBuilder::new()
+                .config(cfg.clone())
+                .scheduler(kind)
+                // ON bursts at 40 arrivals/min (batch 2) — several times
+                // what the full-depth model can serve inside the deadline.
+                .workload(Workload::generative(
+                    frontier_arrivals(40.0),
+                    anytime_catalog(&cfg),
+                ))
+                .minutes(15.0)
+                .seed(2025)
+                .named(format!("{}_{}", kind.label(), if cut { "cut" } else { "full" }));
+            if cut {
+                b = b.pressure(ANYTIME_CHECK_S, ANYTIME_BACKLOG);
+            }
+            sweep = sweep.add(b.build());
+        }
+    }
+    let runs = sweep.run();
+    print!("{}", report::anytime(&runs));
+    print!("{}", report::accuracy(&runs));
+    for pair in runs.chunks(2) {
+        let (full, cut) = (&pair[0], &pair[1]);
+        println!(
+            "{:<12} deadlines met {:>4} -> {:>4}  | truncated {:>4} ({} stages shed)  \
+             | accuracy goodput {:.3} -> {:.3}",
+            cut.label,
+            full.lp_deadline_met(),
+            cut.lp_deadline_met(),
+            cut.truncated_completions,
+            cut.stages_skipped,
+            full.delivered_accuracy_rate(),
+            cut.delivered_accuracy_rate(),
+        );
+    }
+    println!(
+        "\nReading: each '->' is the controller move — surveys cut live tasks \
+         at the next stage boundary when the full depth would blow the \
+         deadline (or the backlog escalates), so the mandatory backbone's \
+         accuracy lands on time instead of a violation landing late."
+    );
+}

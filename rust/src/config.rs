@@ -161,6 +161,19 @@ pub struct SystemConfig {
     /// estimate never goes stale.
     pub bw_stale_after: u32,
 
+    /// Deadline-pressure controller check interval, seconds: how often
+    /// the engine surveys running staged low-priority tasks and offers
+    /// the scheduler a `SchedEvent::Pressure` truncation decision. `0.0`
+    /// (the default) disables the anytime controller entirely — no new
+    /// events, no new RNG draws, byte-identical runs.
+    pub pressure_check_s: f64,
+    /// Queued low-priority backlog (tasks admitted but not yet placed
+    /// or re-offered) at or above which a pressure check also offers
+    /// *slack-positive* truncations, not just deadline-saving ones. `0`
+    /// means backlog never escalates pressure (deadline/battery rescue
+    /// cuts still fire whenever the controller is enabled).
+    pub pressure_backlog: u32,
+
     /// RNG seed for trace generation, device shuffling, probe host
     /// selection and traffic bursts. Same seed ⇒ identical run.
     pub seed: u64,
@@ -204,6 +217,8 @@ impl Default for SystemConfig {
             retry_limit: 2,
             hedge_timeout_s: 0.0,
             bw_stale_after: 0,
+            pressure_check_s: 0.0,
+            pressure_backlog: 0,
             seed: 42,
         }
     }
@@ -275,7 +290,7 @@ impl SystemConfig {
                 cloud_wan_bps, cloud_rtt_ms, cloud_speedup, cell_size,
                 lazy_shuffle_cutover, suspect_after, confirm_after,
                 offload_timeout_s, retry_limit, hedge_timeout_s,
-                bw_stale_after, seed
+                bw_stale_after, pressure_check_s, pressure_backlog, seed
             );
         }
         Ok(cfg)
@@ -284,7 +299,7 @@ impl SystemConfig {
     /// Render to the `key value` text format (stable, diffable).
     pub fn to_kv(&self) -> String {
         format!(
-            "n_devices {}\ncores_per_device {}\nhp_proc_s {}\nlp2_proc_s {}\nlp4_proc_s {}\nproc_padding_s {}\nproc_jitter_s {}\nhp_cores {}\nframe_period_s {}\nhp_deadline_s {}\nimage_bytes {}\nlink_bps {}\ncontrol_latency_ms {}\nbase_buckets {}\nexp_buckets {}\nbandwidth_interval_s {}\newma_alpha {}\nping_count {}\nping_bytes {}\nprobe_airtime_factor {}\ncost_scale {}\nop_cost_us {}\nbg_bps {}\nduty_cycle {}\ncloud_wan_bps {}\ncloud_rtt_ms {}\ncloud_speedup {}\ncell_size {}\nlazy_shuffle_cutover {}\nsuspect_after {}\nconfirm_after {}\noffload_timeout_s {}\nretry_limit {}\nhedge_timeout_s {}\nbw_stale_after {}\nseed {}\n",
+            "n_devices {}\ncores_per_device {}\nhp_proc_s {}\nlp2_proc_s {}\nlp4_proc_s {}\nproc_padding_s {}\nproc_jitter_s {}\nhp_cores {}\nframe_period_s {}\nhp_deadline_s {}\nimage_bytes {}\nlink_bps {}\ncontrol_latency_ms {}\nbase_buckets {}\nexp_buckets {}\nbandwidth_interval_s {}\newma_alpha {}\nping_count {}\nping_bytes {}\nprobe_airtime_factor {}\ncost_scale {}\nop_cost_us {}\nbg_bps {}\nduty_cycle {}\ncloud_wan_bps {}\ncloud_rtt_ms {}\ncloud_speedup {}\ncell_size {}\nlazy_shuffle_cutover {}\nsuspect_after {}\nconfirm_after {}\noffload_timeout_s {}\nretry_limit {}\nhedge_timeout_s {}\nbw_stale_after {}\npressure_check_s {}\npressure_backlog {}\nseed {}\n",
             self.n_devices, self.cores_per_device, self.hp_proc_s, self.lp2_proc_s,
             self.lp4_proc_s, self.proc_padding_s, self.proc_jitter_s, self.hp_cores, self.frame_period_s,
             self.hp_deadline_s, self.image_bytes, self.link_bps, self.control_latency_ms,
@@ -293,7 +308,7 @@ impl SystemConfig {
             self.bg_bps, self.duty_cycle, self.cloud_wan_bps, self.cloud_rtt_ms, self.cloud_speedup,
             self.cell_size, self.lazy_shuffle_cutover, self.suspect_after, self.confirm_after,
             self.offload_timeout_s, self.retry_limit, self.hedge_timeout_s,
-            self.bw_stale_after, self.seed
+            self.bw_stale_after, self.pressure_check_s, self.pressure_backlog, self.seed
         )
     }
 }
@@ -390,6 +405,17 @@ mod tests {
         assert_eq!(c2.retry_limit, 5);
         assert!((c2.hedge_timeout_s - 2.25).abs() < 1e-12);
         assert_eq!(c2.bw_stale_after, 2);
+    }
+
+    #[test]
+    fn anytime_knobs_default_off_and_roundtrip() {
+        let c = SystemConfig::default();
+        assert_eq!(c.pressure_check_s, 0.0, "pressure controller must default OFF");
+        assert_eq!(c.pressure_backlog, 0);
+        let c = SystemConfig { pressure_check_s: 2.5, pressure_backlog: 6, ..Default::default() };
+        let c2 = SystemConfig::from_kv(&c.to_kv()).unwrap();
+        assert!((c2.pressure_check_s - 2.5).abs() < 1e-12);
+        assert_eq!(c2.pressure_backlog, 6);
     }
 
     #[test]

@@ -26,6 +26,14 @@ pub const CLOUD_CHECK_OPS: crate::coordinator::scheduler::Ops = 4;
 /// top of the WPS base score.
 pub const ENERGY_SCORE_OPS: crate::coordinator::scheduler::Ops = 2;
 
+/// Elementary operations charged per running-task candidate evaluated by
+/// a deadline-pressure truncation decision
+/// ([`crate::coordinator::scheduler::decide_pressure`]): two predicted-
+/// finish comparisons against the deadline — far cheaper than any
+/// placement search, which is what makes the anytime controller viable
+/// at a short check interval.
+pub const PRESSURE_EVAL_OPS: crate::coordinator::scheduler::Ops = 2;
+
 /// Converts measured wall-clock scheduler time into virtual latency.
 #[derive(Debug, Clone)]
 pub struct CostModel {

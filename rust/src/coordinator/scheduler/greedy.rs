@@ -1,0 +1,261 @@
+//! The accuracy-maximizing greedy baseline (Fresa & Champati).
+//!
+//! "Offloading Algorithms for Maximizing Inference Accuracy" frames the
+//! model-selection problem as packing accuracy into a hard time budget:
+//! under load, the model with the best *accuracy per unit of compute
+//! time* delivers the most total accuracy per deadline window, even when
+//! it is not the most accurate model that would fit. This scheduler
+//! ports that greedy onto the exact-state (WPS) machinery as a fourth
+//! low-priority policy:
+//!
+//! * The ladder-descent schedulers (RAS/WPS/MULTI/ENERGY via
+//!   [`super::place_degrading`]) try rung 0 first and step down only on
+//!   their own infeasibility verdict — per-task accuracy is primary.
+//! * GREEDY ranks the batch's rungs by **accuracy density**
+//!   (`accuracy / four-core time`, the steepest accuracy-per-unit-time)
+//!   and attempts placement in that order — fleet accuracy *goodput* is
+//!   primary. On the stage-3 family the density order is exactly
+//!   inverted (tiny > distilled > full), so GREEDY and the ladder
+//!   policies genuinely disagree whenever the fleet has slack, which is
+//!   the comparison the `medge anytime` grid measures.
+//!
+//! The deadline budget itself is enforced by the exact-state attempt
+//! (WPS never places past a deadline), so every greedy pick is feasible
+//! by construction. Empty and one-rung ladders skip the ranking and
+//! decide bit-identically to WPS — the zero-knob contract all scenario
+//! subsystems share. The cloud tier, when enabled, is consulted in the
+//! same density order only after every edge attempt rejects.
+
+use super::wps::WpsScheduler;
+use super::{
+    task_refs, CloudPlan, Decision, LpOutcome, Ops, Outcome, SchedEvent, Scheduler, WorkloadState,
+};
+use crate::config::SystemConfig;
+use crate::coordinator::task::{Task, VariantRung};
+use crate::time::SimTime;
+
+/// Rung indices ordered by descending accuracy density, ties broken by
+/// the shallower rung (deterministic; at most [`crate::coordinator::task::MAX_RUNGS`]
+/// entries so the sort is trivial).
+fn density_order(ladder: &[VariantRung]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..ladder.len()).collect();
+    let density = |k: usize| {
+        let r = &ladder[k];
+        r.accuracy / (r.proc_us[1].max(1) as f64)
+    };
+    order.sort_by(|&a, &b| {
+        density(b).partial_cmp(&density(a)).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    order
+}
+
+/// The Fresa & Champati greedy baseline (see module docs).
+pub struct GreedyScheduler {
+    inner: WpsScheduler,
+    /// Cloud tier (None when `cloud_wan_bps` is 0) — consulted in
+    /// density order only after the edge rejects every rung.
+    cloud: Option<CloudPlan>,
+}
+
+impl GreedyScheduler {
+    pub fn new(cfg: &SystemConfig, now: SimTime, baseline_bps: f64) -> Self {
+        Self { inner: WpsScheduler::new(cfg, now, baseline_bps), cloud: CloudPlan::from_config(cfg) }
+    }
+
+    fn place_low(
+        &mut self,
+        now: SimTime,
+        tasks: &[&Task],
+        ladder: &[VariantRung],
+        realloc: bool,
+    ) -> Decision {
+        let d = self.place_low_inner(now, tasks, ladder, realloc);
+        self.inner.explain_lp_decision(tasks, &d);
+        d
+    }
+
+    fn place_low_inner(
+        &mut self,
+        now: SimTime,
+        tasks: &[&Task],
+        ladder: &[VariantRung],
+        realloc: bool,
+    ) -> Decision {
+        if ladder.len() <= 1 {
+            // Nothing to rank: identical to the plain exact-state attempt
+            // (with the cloud as WPS's own tiered path would use it).
+            let d: Decision = self.inner.schedule_low(now, tasks, realloc).into();
+            if !matches!(d.outcome, Outcome::LpRejected) {
+                return d;
+            }
+            let Some(cloud) = self.cloud else { return d };
+            let mut cd: Decision = cloud.attempt(now, tasks).into();
+            cd.ops += d.ops;
+            return cd;
+        }
+        let order = density_order(ladder);
+        let mut spent: Ops = 0;
+        // Edge first, densest rung first: the greedy packs the most
+        // accuracy-per-unit-time the exact state can hold.
+        for &k in &order {
+            let degraded: Vec<Task>;
+            let refs: Vec<&Task>;
+            let batch: &[&Task] = if k == 0 {
+                tasks
+            } else {
+                degraded = tasks.iter().map(|t| t.at_rung(&ladder[k])).collect();
+                refs = task_refs(&degraded);
+                &refs
+            };
+            match self.inner.schedule_low(now, batch, realloc) {
+                LpOutcome::Allocated { allocs, ops } => {
+                    return Decision {
+                        outcome: Outcome::LpAllocated { allocs },
+                        ops: spent + ops,
+                        variant: Some(k as u8),
+                    };
+                }
+                LpOutcome::Rejected { ops } => spent += ops,
+            }
+        }
+        if let Some(cloud) = self.cloud {
+            for &k in &order {
+                let degraded: Vec<Task>;
+                let refs: Vec<&Task>;
+                let batch: &[&Task] = if k == 0 {
+                    tasks
+                } else {
+                    degraded = tasks.iter().map(|t| t.at_rung(&ladder[k])).collect();
+                    refs = task_refs(&degraded);
+                    &refs
+                };
+                match cloud.attempt(now, batch) {
+                    LpOutcome::Allocated { allocs, ops } => {
+                        return Decision {
+                            outcome: Outcome::LpAllocated { allocs },
+                            ops: spent + ops,
+                            variant: Some(k as u8),
+                        };
+                    }
+                    LpOutcome::Rejected { ops } => spent += ops,
+                }
+            }
+        }
+        Decision { outcome: Outcome::LpRejected, ops: spent, variant: None }
+    }
+}
+
+impl Scheduler for GreedyScheduler {
+    fn name(&self) -> &'static str {
+        "GREEDY"
+    }
+
+    fn on_event(&mut self, now: SimTime, ev: SchedEvent<'_>) -> Decision {
+        match ev {
+            SchedEvent::LowPriorityBatch { tasks, realloc, ladder } => {
+                self.place_low(now, tasks, ladder, realloc)
+            }
+            SchedEvent::Reoffer { tasks, ladder } => self.place_low(now, tasks, ladder, true),
+            SchedEvent::CloudBandwidthUpdate { bps } => {
+                if let Some(c) = &mut self.cloud {
+                    c.update(bps);
+                }
+                Decision::ack(0)
+            }
+            // Pressure, HP placement, completions, churn — the inner
+            // exact-state scheduler's business (Pressure routes to the
+            // shared rescue policy there).
+            other => self.inner.on_event(now, other),
+        }
+    }
+
+    fn bandwidth_estimate(&self) -> f64 {
+        self.inner.bandwidth_estimate()
+    }
+
+    fn state(&self) -> &WorkloadState {
+        self.inner.state()
+    }
+
+    fn reject_diag(&self) -> [u64; 4] {
+        self.inner.reject_diag()
+    }
+
+    fn set_explain(&mut self, on: bool) {
+        self.inner.explain_set(on);
+    }
+
+    fn drain_decisions(&mut self) -> Vec<crate::obs::DecisionRecord> {
+        self.inner.explain_drain()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::gen::Ladder;
+
+    fn sched(c: &SystemConfig) -> GreedyScheduler {
+        GreedyScheduler::new(c, 0, c.link_bps)
+    }
+
+    #[test]
+    fn density_order_inverts_the_stage3_family() {
+        let cfg = SystemConfig::default();
+        let compiled = Ladder::stage3_family(&cfg).compile(&cfg);
+        // tiny (0.78 / ~3.25 s) > distilled (0.92 / ~6.7 s) > full
+        // (0.97 / ~12 s): the greedy tries the cheap rungs first.
+        assert_eq!(density_order(&compiled), vec![2, 1, 0]);
+        // One-rung ladders rank trivially.
+        assert_eq!(density_order(&compiled[..1]), vec![0]);
+    }
+
+    #[test]
+    fn idle_fleet_places_the_densest_rung_not_the_most_accurate() {
+        let cfg = SystemConfig::default();
+        let mut s = sched(&cfg);
+        let fam = Ladder::stage3_family(&cfg).compile(&cfg);
+        let t = Task::low(1, 1, 0, 0, cfg.frame_period(), &cfg);
+        let refs = task_refs(std::slice::from_ref(&t));
+        let d = s.on_event(
+            0,
+            SchedEvent::LowPriorityBatch { tasks: &refs, realloc: false, ladder: &fam },
+        );
+        // An idle fleet could host rung 0; the greedy still picks the
+        // densest rung — the policy difference the anytime grid measures.
+        assert_eq!(d.variant, Some(2));
+        let Outcome::LpAllocated { allocs } = d.outcome else { panic!("{:?}", d.outcome) };
+        assert_eq!(allocs[0].end - allocs[0].start, fam[2].proc_us[0]);
+    }
+
+    #[test]
+    fn short_ladders_decide_exactly_like_wps() {
+        let cfg = SystemConfig::default();
+        let mut greedy = sched(&cfg);
+        let mut wps = WpsScheduler::new(&cfg, 0, cfg.link_bps);
+        for id in 1..=6u64 {
+            let t = Task::low(id, id, (id as usize - 1) % cfg.n_devices, 0, cfg.frame_period(), &cfg);
+            let refs = task_refs(std::slice::from_ref(&t));
+            let ev = SchedEvent::LowPriorityBatch { tasks: &refs, realloc: false, ladder: &[] };
+            let a = greedy.on_event(0, ev);
+            let b = wps.on_event(0, ev);
+            assert_eq!(a, b, "task {id}: empty-ladder decisions must match WPS exactly");
+        }
+    }
+
+    #[test]
+    fn exhausted_fleet_rejects_after_the_whole_density_order() {
+        let cfg = SystemConfig::default();
+        let mut s = sched(&cfg);
+        let fam = Ladder::stage3_family(&cfg).compile(&cfg);
+        // A deadline too tight for any rung anywhere.
+        let t = Task::low(1, 1, 0, 0, 1_000, &cfg);
+        let refs = task_refs(std::slice::from_ref(&t));
+        let d = s.on_event(
+            0,
+            SchedEvent::LowPriorityBatch { tasks: &refs, realloc: false, ladder: &fam },
+        );
+        assert_eq!(d.outcome, Outcome::LpRejected);
+        assert_eq!(d.variant, None);
+    }
+}

@@ -53,6 +53,7 @@
 //! golden-seed proof that both surfaces decide identically.
 
 pub mod energy_sched;
+pub mod greedy;
 pub mod multi;
 pub mod ras_sched;
 pub mod wps;
@@ -146,6 +147,86 @@ pub enum SchedEvent<'a> {
     /// [`SchedEvent::BandwidthUpdate`]); WPS ignores it — its estimate
     /// was static anyway. Only dispatched when `bw_stale_after > 0`.
     BandwidthStale,
+    /// The deadline-pressure controller's periodic survey of running
+    /// *staged* low-priority executions (anytime/imprecise computation):
+    /// each candidate is a live task whose next optional-stage boundary
+    /// is still ahead, with the engine's predicted finish times at the
+    /// cut and at full depth. The scheduler answers with
+    /// [`Outcome::Truncate`] naming which candidates to cut short at
+    /// their next boundary; the engine commits the cuts and the tasks
+    /// complete early with partial accuracy. `escalate` is set when the
+    /// queued low-priority backlog crossed `pressure_backlog` — backlog
+    /// pressure justifies cutting tasks that would have met their
+    /// deadlines anyway, to free capacity sooner. Only dispatched when
+    /// `pressure_check_s > 0` and at least one candidate exists.
+    Pressure { candidates: &'a [PressureCandidate], escalate: bool },
+}
+
+/// One running staged execution the deadline-pressure controller may cut
+/// short, as the engine surveys it for [`SchedEvent::Pressure`]. All
+/// predictions are engine ground truth (the engine knows the actual
+/// execution duration it committed to): the scheduler chooses *policy*,
+/// the engine supplies *state*.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PressureCandidate {
+    pub task: TaskId,
+    /// Device the execution runs on (edge only — cloud executions are
+    /// monolithic and never surveyed).
+    pub device: DeviceId,
+    /// The next uncommitted stage boundary (1-based): the earliest stage
+    /// the task could still be cut after. Always `>=` the plan's
+    /// mandatory prefix — the engine never offers a cut below it.
+    pub cut_stage: u8,
+    /// Total stages in the task's plan.
+    pub n_stages: u8,
+    /// Predicted completion time if cut at `cut_stage`.
+    pub cut_finish: SimTime,
+    /// Predicted completion time at full depth.
+    pub full_finish: SimTime,
+    pub deadline: SimTime,
+    /// Accuracy forfeited by cutting at `cut_stage` instead of running
+    /// to full depth.
+    pub accuracy_loss: f64,
+    /// The device runs on a battery predicted to deplete before
+    /// `full_finish`: running to full depth likely loses the task (and
+    /// the device) entirely, so a cut that beats the depletion is a
+    /// rescue even when the deadline itself is safe.
+    pub battery_doomed: bool,
+}
+
+/// One committed truncation in an [`Outcome::Truncate`] decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TruncateCut {
+    /// Index into the [`SchedEvent::Pressure`] `candidates` slice.
+    pub index: u16,
+    /// Cut after this stage (1-based; normally the candidate's
+    /// `cut_stage` — a later boundary is legal, an earlier one is not).
+    pub at_stage: u8,
+}
+
+/// The shared deadline-pressure truncation policy (the anytime
+/// counterpart of [`place_degrading`]): cut a candidate at its next
+/// boundary when the cut still meets the deadline **and** either the
+/// full-depth run would not (salvage partial credit instead of a
+/// violation), the device's battery dies before full depth (PR 6's
+/// energy-aware follow-up), or backlog pressure escalated the survey
+/// (free capacity sooner at a known accuracy cost). Every candidate
+/// evaluation is charged [`crate::coordinator::cost::PRESSURE_EVAL_OPS`].
+///
+/// All four schedulers route [`SchedEvent::Pressure`] through this
+/// policy; what differs between them is *which executions exist at all*
+/// (their placement decisions), not how rescue cuts are judged.
+pub fn decide_pressure(candidates: &[PressureCandidate], escalate: bool) -> Decision {
+    let mut ops: Ops = 0;
+    let mut cuts = Vec::new();
+    for (i, c) in candidates.iter().enumerate() {
+        ops += crate::coordinator::cost::PRESSURE_EVAL_OPS;
+        let rescue = c.full_finish > c.deadline || c.battery_doomed;
+        if c.cut_finish <= c.deadline && (rescue || escalate) {
+            cuts.push(TruncateCut { index: i as u16, at_stage: c.cut_stage });
+        }
+    }
+    Decision { outcome: Outcome::Truncate { cuts }, ops, variant: None }
 }
 
 /// Adapt an owned/contiguous task buffer to the reference-slice shape
@@ -175,6 +256,11 @@ pub enum Outcome {
     /// State change absorbed. Topology changes report the allocations they
     /// evicted (non-empty only for [`SchedEvent::DeviceLeft`]).
     Ack { evicted: Vec<Allocation> },
+    /// Answer to [`SchedEvent::Pressure`]: cut these running staged
+    /// executions short at their next stage boundary (empty = no cuts
+    /// this round). The engine arms each cut; the task completes at the
+    /// boundary with the cumulative accuracy banked there.
+    Truncate { cuts: Vec<TruncateCut> },
 }
 
 /// What one [`Scheduler::on_event`] dispatch decided, with uniform ops
@@ -1088,6 +1174,66 @@ mod tests {
         });
         assert_eq!(d.outcome, Outcome::LpRejected);
         assert_eq!(d.ops, 2 * 5 + 2 * crate::coordinator::cost::CLOUD_CHECK_OPS);
+    }
+
+    fn pressure_candidate(
+        task: TaskId,
+        cut_finish: SimTime,
+        full_finish: SimTime,
+        deadline: SimTime,
+        battery_doomed: bool,
+    ) -> PressureCandidate {
+        PressureCandidate {
+            task,
+            device: 0,
+            cut_stage: 1,
+            n_stages: 3,
+            cut_finish,
+            full_finish,
+            deadline,
+            accuracy_loss: 0.27,
+            battery_doomed,
+        }
+    }
+
+    #[test]
+    fn pressure_policy_cuts_only_rescuable_deadline_misses() {
+        let cands = [
+            // Full depth misses the deadline, the cut saves it: rescue.
+            pressure_candidate(1, 900, 1_500, 1_000, false),
+            // Full depth meets the deadline: left alone without escalation.
+            pressure_candidate(2, 600, 900, 1_000, false),
+            // Even the cut misses: no point truncating (take the credit).
+            pressure_candidate(3, 1_100, 1_500, 1_000, false),
+            // Deadline safe but the battery dies mid-run: energy rescue.
+            pressure_candidate(4, 700, 950, 1_000, true),
+        ];
+        let d = decide_pressure(&cands, false);
+        let Outcome::Truncate { cuts } = &d.outcome else {
+            panic!("pressure must answer with Truncate, got {:?}", d.outcome)
+        };
+        assert_eq!(
+            cuts.as_slice(),
+            &[TruncateCut { index: 0, at_stage: 1 }, TruncateCut { index: 3, at_stage: 1 }]
+        );
+        assert_eq!(d.ops, 4 * crate::coordinator::cost::PRESSURE_EVAL_OPS);
+        assert_eq!(d.variant, None);
+    }
+
+    #[test]
+    fn pressure_escalation_also_cuts_safe_tasks() {
+        let cands = [
+            pressure_candidate(1, 600, 900, 1_000, false), // safe either way
+            pressure_candidate(2, 1_100, 1_500, 1_000, false), // unsalvageable
+        ];
+        // Backlog escalation frees capacity: the safe task is cut too,
+        // but a cut that cannot meet the deadline is still pointless.
+        let d = decide_pressure(&cands, true);
+        let Outcome::Truncate { cuts } = &d.outcome else { panic!() };
+        assert_eq!(cuts.as_slice(), &[TruncateCut { index: 0, at_stage: 1 }]);
+        // Without escalation the same survey cuts nothing.
+        let d = decide_pressure(&cands, false);
+        assert_eq!(d.outcome, Outcome::Truncate { cuts: Vec::new() });
     }
 
     #[test]

@@ -350,6 +350,11 @@ impl Scheduler for MultiScheduler {
                 let b = self.ras.on_event(now, SchedEvent::BandwidthStale);
                 Decision::ack(a.ops + b.ops)
             }
+            SchedEvent::Pressure { candidates, escalate } => {
+                // Truncation is a policy over the engine's survey, not
+                // over either inner's state: answer once, shared policy.
+                super::decide_pressure(candidates, escalate)
+            }
         }
     }
 

@@ -1040,6 +1040,11 @@ impl Scheduler for RasScheduler {
             }
             SchedEvent::DeviceCleared { device } => Decision::ack(self.on_device_cleared(device)),
             SchedEvent::BandwidthStale => Decision::ack(self.on_bandwidth_stale(now)),
+            SchedEvent::Pressure { candidates, escalate } => {
+                // The engine surveys against committed placements (its
+                // ground truth); RAS applies the shared rescue policy.
+                super::decide_pressure(candidates, escalate)
+            }
         }
     }
 

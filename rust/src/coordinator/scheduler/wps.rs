@@ -864,6 +864,9 @@ impl Scheduler for WpsScheduler {
             // estimator changes nothing for a scheduler that never
             // believed the estimator in the first place.
             SchedEvent::BandwidthStale => Decision::ack(0),
+            SchedEvent::Pressure { candidates, escalate } => {
+                super::decide_pressure(candidates, escalate)
+            }
         }
     }
 

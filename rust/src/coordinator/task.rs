@@ -58,6 +58,70 @@ pub struct VariantRung {
     pub proc_us: [SimDuration; 2],
 }
 
+/// Maximum number of anytime stages a rung's stage plan may carry
+/// (compiled plans are fixed-size `Copy` arrays so the engine's slab and
+/// the scheduler API never allocate per task).
+pub const MAX_STAGES: usize = 6;
+
+/// Compiled anytime stage plan for one ladder rung: the imprecise-
+/// computation split of the rung's execution into a mandatory prefix
+/// plus optional refinement stages ("Scheduling Real-time Deep Learning
+/// Services as Imprecise Computations"). A running low-priority task may
+/// be cut short at the boundary after any stage `>= mandatory`,
+/// delivering the cumulative accuracy earned so far instead of the full
+/// rung accuracy. `n_stages == 0` means the rung is monolithic — the
+/// engine schedules no boundary events and behaviour is byte-identical
+/// to the pre-anytime system.
+///
+/// Stages are 1-based; `cum_frac[k-1]` / `cum_accuracy[k-1]` give the
+/// fraction of total execution time spent and the accuracy credit banked
+/// once stage `k` completes. The final entries are exactly `1.0` and the
+/// rung's accuracy, so an uncut staged run is indistinguishable from a
+/// monolithic one in every ledger.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct StagePlan {
+    /// Number of stages (`0` = no plan, monolithic execution).
+    pub n_stages: u8,
+    /// Leading stages that can never be truncated (`>= 1` when staged).
+    pub mandatory: u8,
+    /// Cumulative fraction of the total execution time completed after
+    /// each stage; entry `n_stages - 1` is `1.0`.
+    pub cum_frac: [f64; MAX_STAGES],
+    /// Cumulative accuracy credit after each stage; nondecreasing, entry
+    /// `n_stages - 1` equals the rung's full accuracy.
+    pub cum_accuracy: [f64; MAX_STAGES],
+}
+
+impl StagePlan {
+    /// The empty (monolithic) plan.
+    pub const NONE: StagePlan = StagePlan {
+        n_stages: 0,
+        mandatory: 0,
+        cum_frac: [0.0; MAX_STAGES],
+        cum_accuracy: [0.0; MAX_STAGES],
+    };
+
+    /// Does this rung carry a stage plan at all?
+    pub fn is_staged(&self) -> bool {
+        self.n_stages > 0
+    }
+
+    /// Does the plan expose at least one cut point (an optional stage)?
+    pub fn cuttable(&self) -> bool {
+        self.is_staged() && self.mandatory < self.n_stages
+    }
+
+    /// Fraction of total execution time completed after `stage` (1-based).
+    pub fn frac_after(&self, stage: u8) -> f64 {
+        self.cum_frac[stage as usize - 1]
+    }
+
+    /// Accuracy credit banked after `stage` (1-based) completes.
+    pub fn accuracy_after(&self, stage: u8) -> f64 {
+        self.cum_accuracy[stage as usize - 1]
+    }
+}
+
 /// Application configuration: each has its own fixed processing time and
 /// core requirement, and each device keeps one resource-availability list
 /// per configuration (Section IV-A1).
@@ -389,6 +453,22 @@ mod tests {
         let h = Task::high(9, 3, 1, 0, &c);
         assert_eq!(h.at_rung(&rung).input_bytes, 0);
         assert_eq!(h.at_rung(&rung).proc_us, rung.proc_us);
+    }
+
+    #[test]
+    fn stage_plan_defaults_off_and_indexes_one_based() {
+        let none = StagePlan::NONE;
+        assert!(!none.is_staged() && !none.cuttable());
+        assert_eq!(StagePlan::default(), none);
+        let mut p = StagePlan { n_stages: 3, mandatory: 1, ..StagePlan::NONE };
+        p.cum_frac[..3].copy_from_slice(&[0.5, 0.8, 1.0]);
+        p.cum_accuracy[..3].copy_from_slice(&[0.6, 0.9, 0.97]);
+        assert!(p.is_staged() && p.cuttable());
+        assert_eq!(p.frac_after(2), 0.8);
+        assert_eq!(p.accuracy_after(3), 0.97);
+        // A plan whose stages are all mandatory exposes no cut point.
+        let solid = StagePlan { mandatory: 3, ..p };
+        assert!(solid.is_staged() && !solid.cuttable());
     }
 
     #[test]

@@ -301,6 +301,35 @@ impl FleetEnergy {
         Some((d.epoch, dt_us.max(1)))
     }
 
+    /// Read-only depletion horizon: microseconds from `now` until
+    /// `device` runs dry under its *current* draw. Unlike [`predict`]
+    /// this settles nothing — the draw since the last transition is
+    /// folded in arithmetically (power is piecewise constant, so the
+    /// open interval is at exactly `power_w`). `None` when mains
+    /// powered, offline/depleted, drawing nothing, or past the horizon.
+    /// The pressure controller uses this to flag executions whose
+    /// device will die before the full-depth finish ("battery doomed").
+    ///
+    /// [`predict`]: FleetEnergy::predict
+    pub fn depletion_eta_us(&self, now: SimTime, device: usize) -> Option<u64> {
+        self.capacity_j?;
+        let d = self.devs.get(device)?;
+        if d.depleted || !d.online {
+            return None;
+        }
+        let p = self.power_w(device);
+        if p <= 0.0 {
+            return None;
+        }
+        let drawn = p * now.saturating_sub(d.last_t) as f64 / 1e6;
+        let rem = (d.remaining_j - drawn).max(0.0);
+        let dt_us = (rem / p * 1e6).ceil().min(DEPLETION_HORIZON_US as f64) as u64;
+        if dt_us >= DEPLETION_HORIZON_US {
+            return None;
+        }
+        Some(dt_us.max(1))
+    }
+
     // ---- engine hooks (each returns a depletion (epoch, delta_us)) ------
 
     pub fn task_start(&mut self, now: SimTime, device: usize, cfg: usize) -> Option<(u64, u64)> {
@@ -555,6 +584,27 @@ mod tests {
         assert!(f.depleted(0));
         assert_eq!(f.battery_final_j(), vec![0.0]);
         assert!(!f.on_deplete(at, 0, e3), "a battery depletes once");
+    }
+
+    #[test]
+    fn depletion_eta_reads_without_settling() {
+        let m = EnergyModel { idle_w: 1.0, active_w: [0.0; 3], tx_w: 0.0, rx_w: 0.0 };
+        let mut f = FleetEnergy::new(m, Some(10.0), 2);
+        // Pure idle at 1 W: 10 J lasts 10 s from t=0.
+        assert_eq!(f.depletion_eta_us(0, 0), Some(10_000_000));
+        // Mid-interval the horizon shrinks by elapsed time — with no
+        // settle and no state change (the read is &self).
+        assert_eq!(f.depletion_eta_us(4_000_000, 0), Some(6_000_000));
+        let before = f.battery_final_j();
+        assert_eq!(before, vec![10.0, 10.0], "reads must not drain the battery");
+        // Offline / depleted / mains devices report no horizon.
+        f.set_online(0, 1, false);
+        assert_eq!(f.depletion_eta_us(0, 1), None);
+        assert_eq!(f.depletion_eta_us(0, 9), None, "out of fleet");
+        let mains = FleetEnergy::new(EnergyModel::pi2b(), None, 1);
+        assert_eq!(mains.depletion_eta_us(0, 0), None);
+        // A drained battery clamps to the 1 µs floor, never underflows.
+        assert_eq!(f.depletion_eta_us(50_000_000, 0), Some(1));
     }
 
     #[test]

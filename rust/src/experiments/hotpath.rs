@@ -221,6 +221,23 @@ pub fn run_suite(opts: &SuiteOptions) -> Vec<BenchRow> {
         .cloud(20e6, 40.0)
         .energy(crate::energy::EnergyModel::pi2b())
         .build();
+    // Anytime steady state: the staged ladder plus the pressure
+    // controller surveying at the grid cadence — the delta against the
+    // laddered row is the whole per-event cost of the stage-boundary
+    // chains and pressure surveys.
+    let anytime_scenario = ScenarioBuilder::new()
+        .scheduler(SchedKind::Ras)
+        .trace(TraceSpec::Weighted(3))
+        .frames(frames)
+        .seed(42)
+        .lp_ladder(crate::workload::gen::Ladder::stage3_family_staged(
+            &crate::config::SystemConfig::default(),
+        ))
+        .pressure(
+            crate::experiments::ANYTIME_CHECK_S,
+            crate::experiments::ANYTIME_BACKLOG,
+        )
+        .build();
     for (name, s) in [
         ("engine_event/steady_state", scenario(SchedKind::Ras, None)),
         (
@@ -232,6 +249,7 @@ pub fn run_suite(opts: &SuiteOptions) -> Vec<BenchRow> {
                 )),
             ),
         ),
+        ("engine_event/steady_state_anytime", anytime_scenario),
         ("engine_event/steady_state_cloud", cloud_scenario),
     ] {
         let row = steady_row(name, s);

@@ -210,6 +210,65 @@ pub fn accuracy_frontier(
     sweep
 }
 
+// ---- anytime truncation grid (PR 10) ------------------------------------
+
+/// Schedulers the anytime grid sweeps: every LP policy, including the
+/// Fresa & Champati accuracy-maximizing greedy baseline.
+pub const ANYTIME_KINDS: [SchedKind; 4] =
+    [SchedKind::Wps, SchedKind::Ras, SchedKind::Multi, SchedKind::Greedy];
+
+/// Pressure-controller knobs the anytime grid's `_cut` twins run with:
+/// survey every 0.5 s, escalate past an 8-task backlog.
+pub const ANYTIME_CHECK_S: f64 = 0.5;
+pub const ANYTIME_BACKLOG: u32 = 8;
+
+/// The staged frontier catalog: the stage-3 class running the staged
+/// model family ([`Ladder::stage3_family_staged`]), so every placement
+/// carries per-rung anytime stage plans the pressure controller can cut.
+pub fn anytime_catalog(cfg: &SystemConfig) -> Catalog {
+    let family = Ladder::stage3_family_staged(cfg);
+    Catalog::new(vec![TaskClass::low("stage3", cfg.frame_period_s, 0.0, 1.0, 0.8)
+        .batch(2)
+        .ladder(family)])
+}
+
+/// The anytime grid: offered load × truncation {full, cut} × scheduler
+/// on the staged stage-3 class under bursty MMPP pressure. Twins share
+/// seed and arrival plan — same workload, the only difference is the
+/// pressure controller — so each `_cut` row reads directly against its
+/// `_full` sibling: deadline-met should rise while accuracy goodput
+/// holds (the anytime acceptance claim, property-locked in
+/// `tests/anytime_props.rs`). Labels: `KIND_rRATE_full` / `KIND_rRATE_cut`.
+pub fn anytime_grid(cfg: &SystemConfig, kinds: &[SchedKind], minutes: f64) -> Sweep {
+    let rates = [12.0f64, 24.0];
+    let mut sweep = Sweep::new();
+    for &rate in &rates {
+        for &kind in kinds {
+            for cut in [false, true] {
+                let mut b = ScenarioBuilder::new()
+                    .config(cfg.clone())
+                    .scheduler(kind)
+                    .workload(Workload::generative(
+                        frontier_arrivals(rate),
+                        anytime_catalog(cfg),
+                    ))
+                    .minutes(minutes)
+                    .named(format!(
+                        "{}_r{}_{}",
+                        kind.label(),
+                        rate as u32,
+                        if cut { "cut" } else { "full" }
+                    ));
+                if cut {
+                    b = b.pressure(ANYTIME_CHECK_S, ANYTIME_BACKLOG);
+                }
+                sweep = sweep.add(b.build());
+            }
+        }
+    }
+    sweep
+}
+
 /// Parse a comma list of ladder depths for `medge accuracy` — strict:
 /// a malformed or out-of-range entry is an error, never a panic or a
 /// silent clamp.
@@ -602,6 +661,40 @@ mod tests {
         // Depth-1 twins never degrade.
         assert_eq!(rows[0].degraded_completions, 0);
         assert_eq!(rows[2].degraded_completions, 0);
+    }
+
+    #[test]
+    fn anytime_grid_twins_share_load_and_cut_rows_truncate() {
+        let rows = anytime_grid(&small_cfg(), &[SchedKind::Ras], 4.0).run();
+        // 2 rates × {full, cut} × 1 scheduler.
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0].label, "RAS_r12_full");
+        assert_eq!(rows[1].label, "RAS_r12_cut");
+        assert_eq!(rows[3].label, "RAS_r24_cut");
+        for pair in rows.chunks(2) {
+            let (full, cut) = (&pair[0], &pair[1]);
+            assert_eq!(full.truncated_completions, 0, "{}: controller off", full.label);
+            assert_eq!(full.pressure_events, 0);
+            assert_eq!(
+                full.offered_tasks, cut.offered_tasks,
+                "twins must share the arrival plan"
+            );
+            for m in [full, cut] {
+                assert_eq!(
+                    m.lp_generated,
+                    m.lp_completed_total() + m.lp_violations + m.lp_lost,
+                    "{}: lp conservation",
+                    m.label
+                );
+            }
+        }
+        // The overloaded cut twin actually truncates — the grid is not a
+        // vacuous comparison of identical runs.
+        assert!(
+            rows[3].truncated_completions > 0,
+            "r24 cut twin must truncate: {:?}",
+            rows[3]
+        );
     }
 
     #[test]

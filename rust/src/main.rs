@@ -58,6 +58,14 @@ COMMANDS:
            accuracy vs deadlines met; depth-1 rows are the no-degradation
            twins. --scheds wps,ras,multi  --depths 1,2,3  --threads N
            --json PATH
+  anytime  Anytime-inference grid (offered load × truncation {full, cut} ×
+           scheduler on the staged stage-3 class under MMPP bursts): each
+           _cut row runs the deadline-pressure controller against its
+           _full twin — same seed and arrival plan — reporting deadlines
+           met, pressure surveys/cuts, truncated completions, stages
+           skipped, and delivered accuracy.
+           --scheds wps,ras,multi,greedy  --quick (short CI smoke grid)
+           --threads N  --json PATH
   energy   Energy & cloud-tier grids (battery-constrained fleet, cloud
            burst under overload, diurnal drain): fleet joules, battery
            timelines, deadline-met-per-kilojoule, cloud placements.
@@ -595,6 +603,46 @@ fn main() -> anyhow::Result<()> {
             }
             if args.trace_flag {
                 let first = sweep.scenarios().first().expect("empty accuracy grid rejected above");
+                export_scenario_trace(first, &trace_out(&args))?;
+            }
+        }
+        "anytime" => {
+            anyhow::ensure!(
+                !(args.json_flag && args.json.is_none()),
+                "anytime --json needs a PATH"
+            );
+            let kinds: Vec<SchedKind> = args
+                .scheds
+                .as_deref()
+                .unwrap_or("wps,ras,multi,greedy")
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(SchedKind::parse)
+                .collect::<anyhow::Result<_>>()?;
+            anyhow::ensure!(!kinds.is_empty(), "empty anytime grid");
+            // --quick: the CI smoke grid — long enough for the MMPP
+            // bursts to bite (and the cut twins to truncate), short
+            // enough for a PR gate.
+            let minutes = if args.quick { 4.0 } else { minutes };
+            let mut sweep = experiments::anytime_grid(&cfg, &kinds, minutes);
+            if let Some(t) = args.threads {
+                sweep = sweep.threads(t);
+            }
+            eprintln!(
+                "anytime: {} scenarios × {minutes:.1} simulated minutes (survey {}s, backlog {})",
+                sweep.len(),
+                experiments::ANYTIME_CHECK_S,
+                experiments::ANYTIME_BACKLOG
+            );
+            let runs = sweep.run();
+            print!("{}", report::anytime(&runs));
+            print!("{}", report::accuracy(&runs));
+            if let Some(path) = &args.json {
+                std::fs::write(path, report::json_rows(&runs))?;
+                println!("\nwrote {} JSON rows to {}", runs.len(), path.display());
+            }
+            if args.trace_flag {
+                let first = sweep.scenarios().first().expect("empty anytime grid rejected above");
                 export_scenario_trace(first, &trace_out(&args))?;
             }
         }

@@ -311,6 +311,23 @@ pub struct Metrics {
     /// failures ≥ `bw_stale_after`); 0 with the knob off.
     pub bw_stale_us: u64,
 
+    // ---- anytime inference (all zero without stage plans; a truncated
+    // completion still counts in lp_completed_* and rung_completions,
+    // so every conservation identity above keeps holding) ----
+    /// Completions cut short at a stage boundary by the deadline-pressure
+    /// controller (delivered partial accuracy instead of violating).
+    pub truncated_completions: u64,
+    /// Optional refinement stages skipped across all truncated
+    /// completions (each cut at stage k of an n-stage plan skips n−k).
+    pub stages_skipped: u64,
+    /// Pressure surveys that found at least one cuttable execution and
+    /// were dispatched to the scheduler's rescue policy.
+    pub pressure_events: u64,
+    /// Truncation cuts the rescue policy armed (≥ truncated_completions
+    /// is *not* guaranteed: a cut task can still crash, be evicted, or
+    /// get lost behind a partition before its boundary delivers).
+    pub pressure_cuts: u64,
+
     // ---- observability (PR 9) ----
     /// Span events the flight recorder saw over the run, including any
     /// the ring overwrote; 0 with tracing off.
@@ -459,6 +476,13 @@ impl Metrics {
         );
         debug_assert!(self.devices_cleared <= self.devices_suspected);
         debug_assert!(self.degraded_completions <= self.lp_completed_total());
+        debug_assert!(
+            self.truncated_completions <= self.lp_completed_total(),
+            "truncated {} > LP completions {}",
+            self.truncated_completions,
+            self.lp_completed_total()
+        );
+        debug_assert!(self.stages_skipped >= self.truncated_completions);
         // None of the run-length counters may sit at the saturation
         // ceiling: reaching it means the run genuinely overflowed u64
         // and every identity above is suspect.

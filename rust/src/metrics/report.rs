@@ -12,7 +12,7 @@ use crate::metrics::LatencyStat;
 /// test below fails otherwise, so schema drift can never land silently
 /// again (14 fields did exactly that in PR 8). Downstream consumers
 /// key their parsers on this.
-pub const SCHEMA_VERSION: u32 = 2;
+pub const SCHEMA_VERSION: u32 = 3;
 
 fn header(title: &str) -> String {
     format!("\n=== {title} ===\n")
@@ -289,6 +289,35 @@ pub fn accuracy(runs: &[Metrics]) -> String {
     s
 }
 
+/// Anytime-inference summary — the imprecise-computation axis: how often
+/// the deadline-pressure controller cut running executions short, how
+/// much refinement was skipped, and the deadline/accuracy headline the
+/// truncation traded. All zero on runs without stage plans (and with
+/// `pressure_check_s` at its 0.0 default) — the zero-knob contract.
+pub fn anytime(runs: &[Metrics]) -> String {
+    let mut s = header("Anytime — mid-flight stage truncation under deadline pressure");
+    s += &format!(
+        "{:<16} {:>7} {:>7} {:>6} {:>7} | {:>7} {:>7} {:>7} | {:>9} {:>9}\n",
+        "scenario", "lp_gen", "dl_met", "viol", "lost", "surveys", "cuts", "trunc", "stages_sk", "acc_rate",
+    );
+    for m in runs {
+        s += &format!(
+            "{:<16} {:>7} {:>7} {:>6} {:>7} | {:>7} {:>7} {:>7} | {:>9} {:>9.3}\n",
+            m.label,
+            m.lp_generated,
+            m.lp_deadline_met(),
+            m.lp_violations,
+            m.lp_lost,
+            m.pressure_events,
+            m.pressure_cuts,
+            m.truncated_completions,
+            m.stages_skipped,
+            m.delivered_accuracy_rate(),
+        );
+    }
+    s
+}
+
 /// Energy & cloud-tier summary — fleet joules by component, the
 /// efficiency ratios the energy-aware scheduler optimises, battery
 /// depletions, and cloud offload traffic. All zero on runs without an
@@ -509,6 +538,10 @@ pub fn json_row(m: &Metrics) -> String {
     f.push(format!("\"phase_sched_ns\": {}", m.phase_sched_ns));
     f.push(format!("\"phase_medium_ns\": {}", m.phase_medium_ns));
     f.push(format!("\"phase_compact_ns\": {}", m.phase_compact_ns));
+    f.push(format!("\"truncated_completions\": {}", m.truncated_completions));
+    f.push(format!("\"stages_skipped\": {}", m.stages_skipped));
+    f.push(format!("\"pressure_events\": {}", m.pressure_events));
+    f.push(format!("\"pressure_cuts\": {}", m.pressure_cuts));
     format!("{{{}}}", f.join(", "))
 }
 
@@ -680,8 +713,30 @@ mod tests {
         assert!(j.contains("\"partition_held_results\": 0"));
         assert!(j.contains("\"lp_lost\": 0"));
         assert!(j.contains("\"bw_stale_us\": 0"));
+        // Anytime fields render as zeros on plan-less runs (same contract).
+        assert!(j.contains("\"truncated_completions\": 0"));
+        assert!(j.contains("\"stages_skipped\": 0"));
+        assert!(j.contains("\"pressure_events\": 0"));
+        assert!(j.contains("\"pressure_cuts\": 0"));
         // Balanced braces (cheap well-formedness proxy without a parser).
         assert_eq!(j.matches('{').count(), j.matches('}').count());
+    }
+
+    #[test]
+    fn anytime_table_renders_truncation_counters() {
+        let mut m = sample("GREEDY_r24d3");
+        m.lp_generated = 50;
+        m.lp_completed_initial = 30;
+        m.pressure_events = 9;
+        m.pressure_cuts = 7;
+        m.truncated_completions = 6;
+        m.stages_skipped = 11;
+        m.accuracy_sum = 24.5;
+        let a = anytime(&[m]);
+        assert!(a.contains("GREEDY_r24d3"));
+        assert!(a.contains("stages_sk"));
+        assert!(a.contains("11"), "stages skipped column: {a}");
+        assert!(a.contains("0.490"), "accuracy goodput column: {a}");
     }
 
     #[test]
@@ -755,7 +810,7 @@ mod tests {
         // updating this inventory in the same change. If this test just
         // failed on you: append/edit the inventory below AND bump the
         // version — both, together, nothing else makes it pass.
-        assert_eq!(SCHEMA_VERSION, 2, "the inventory below describes schema v2");
+        assert_eq!(SCHEMA_VERSION, 3, "the inventory below describes schema v3");
         const EXPECTED: &[&str] = &[
             "schema_version",
             "label",
@@ -849,6 +904,10 @@ mod tests {
             "phase_sched_ns",
             "phase_medium_ns",
             "phase_compact_ns",
+            "truncated_completions",
+            "stages_skipped",
+            "pressure_events",
+            "pressure_cuts",
         ];
         // An awkward label exercises the key/value discrimination: its
         // escaped quotes and colons must not read as keys.

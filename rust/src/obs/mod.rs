@@ -222,6 +222,12 @@ pub enum TraceEvent {
     DeviceCrash { device: DeviceId },
     DeviceRecover { device: DeviceId },
     BatteryDeplete { device: DeviceId },
+    /// A running anytime execution crossed a stage boundary and kept
+    /// going (stage = the 1-based stage that just completed).
+    StageBoundary { task: TaskId, device: DeviceId, stage: u8 },
+    /// The pressure controller's cut landed: the task completed at
+    /// `stage` instead of its full depth.
+    Truncate { task: TaskId, device: DeviceId, stage: u8 },
     /// An explainable scheduler decision (see [`DecisionRecord`]).
     Decision(DecisionRecord),
 }
@@ -504,6 +510,28 @@ impl FlightRecorder {
                 TraceEvent::BatteryDeplete { device } => {
                     push(&mut out, global_instant(ts, dev(*device), "battery_depleted"));
                 }
+                TraceEvent::StageBoundary { task, device, stage } => {
+                    push(
+                        &mut out,
+                        instant(
+                            ts,
+                            dev(*device),
+                            &format!("stage #{task}"),
+                            &format!("\"stage\": {stage}"),
+                        ),
+                    );
+                }
+                TraceEvent::Truncate { task, device, stage } => {
+                    push(
+                        &mut out,
+                        instant(
+                            ts,
+                            dev(*device),
+                            &format!("truncate #{task}"),
+                            &format!("\"stage\": {stage}"),
+                        ),
+                    );
+                }
                 TraceEvent::Decision(d) => {
                     push(&mut out, instant(ts, ctrl, &decision_name(d), &decision_args(d)));
                 }
@@ -717,6 +745,8 @@ mod tests {
             TraceEvent::Complete { task: 1, device: 2, high_priority: false, violated: false },
         );
         r.record(950, TraceEvent::Violation { task: 9 });
+        r.record(955, TraceEvent::StageBoundary { task: 5, device: 1, stage: 2 });
+        r.record(956, TraceEvent::Truncate { task: 5, device: 1, stage: 2 });
         // Unpaired start: must degrade to an instant, not invalid JSON.
         r.record(960, TraceEvent::ExecStart { task: 3, device: 0 });
         let a = r.perfetto_json(4);
@@ -727,6 +757,8 @@ mod tests {
         assert!(a.contains("\"name\": \"xfer #1\""));
         assert!(a.contains("\"dur\": 400"), "exec span duration from pairing");
         assert!(a.contains("violation #9"));
+        assert!(a.contains("\"name\": \"stage #5\""));
+        assert!(a.contains("\"name\": \"truncate #5\""));
         assert!(a.contains("exec_start #3"), "unpaired start survives as instant");
         // Track metadata for every device plus link + cloud.
         assert!(a.contains("\"name\": \"device 3\""));

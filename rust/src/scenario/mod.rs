@@ -42,6 +42,7 @@
 
 use crate::config::SystemConfig;
 use crate::coordinator::scheduler::energy_sched::EnergyScheduler;
+use crate::coordinator::scheduler::greedy::GreedyScheduler;
 use crate::coordinator::scheduler::multi::MultiScheduler;
 use crate::fault::FaultPlan;
 use crate::coordinator::scheduler::ras_sched::RasScheduler;
@@ -72,6 +73,10 @@ pub enum SchedKind {
     /// Battery-aware variant: deadline feasibility first, joules second
     /// (see [`crate::coordinator::scheduler::energy_sched`]).
     Energy,
+    /// Fresa & Champati accuracy-maximizing greedy: ranks ladder rungs
+    /// by accuracy density instead of descending from the most accurate
+    /// (see [`crate::coordinator::scheduler::greedy`]).
+    Greedy,
 }
 
 impl SchedKind {
@@ -96,6 +101,7 @@ impl SchedKind {
                 let model = energy.cloned().unwrap_or_else(EnergyModel::pi2b);
                 Box::new(EnergyScheduler::new(cfg, 0, cfg.link_bps, model))
             }
+            SchedKind::Greedy => Box::new(GreedyScheduler::new(cfg, 0, cfg.link_bps)),
         }
     }
 
@@ -105,6 +111,7 @@ impl SchedKind {
             SchedKind::Ras => "RAS",
             SchedKind::Multi => "MULTI",
             SchedKind::Energy => "ENERGY",
+            SchedKind::Greedy => "GREEDY",
         }
     }
 
@@ -114,7 +121,10 @@ impl SchedKind {
             "ras" => Ok(SchedKind::Ras),
             "multi" => Ok(SchedKind::Multi),
             "energy" => Ok(SchedKind::Energy),
-            other => anyhow::bail!("unknown scheduler: {other} (wps | ras | multi | energy)"),
+            "greedy" => Ok(SchedKind::Greedy),
+            other => {
+                anyhow::bail!("unknown scheduler: {other} (wps | ras | multi | energy | greedy)")
+            }
         }
     }
 }
@@ -468,6 +478,25 @@ impl ScenarioBuilder {
         self
     }
 
+    // ---- anytime inference (PR 10; default off) --------------------------
+
+    /// Enable the deadline-pressure controller: every `check_s` seconds
+    /// the engine surveys running staged executions and lets the
+    /// scheduler's rescue policy truncate those that would otherwise
+    /// miss their deadline (or die with their battery). With `backlog`
+    /// > 0 the survey escalates — cuts *every* cuttable execution —
+    /// whenever at least that many tasks are live. Only executions
+    /// whose rung carries a [`crate::coordinator::task::StagePlan`]
+    /// (see [`Ladder::stage3_family_staged`] /
+    /// [`crate::workload::gen::ModelVariant::staged`]) can be cut;
+    /// without plans, or at the 0.0 default, the run is byte-identical
+    /// to the pre-anytime engine.
+    pub fn pressure(mut self, check_s: f64, backlog: u32) -> Self {
+        self.cfg.pressure_check_s = check_s;
+        self.cfg.pressure_backlog = backlog;
+        self
+    }
+
     // ---- observability (PR 9; both default off) --------------------------
 
     /// Attach a flight recorder of `capacity` span records (ring buffer,
@@ -554,6 +583,9 @@ impl ScenarioBuilder {
                 r0.proc_us,
             );
             extras.lp_ladder = compiled;
+            if ladder.has_stage_plans() {
+                extras.lp_stage_plans = ladder.compile_stage_plans();
+            }
         }
         self.plan
             .compile_into(&mut extras, self.cfg.seed, self.cfg.n_devices, horizon_s)
@@ -1126,6 +1158,65 @@ mod tests {
             .build();
         assert_eq!(s.name, "ENERGY_2");
         assert_eq!(s.kind.build(&s.cfg).name(), "ENERGY");
+    }
+
+    #[test]
+    fn greedy_kind_parses_labels_and_runs() {
+        use crate::workload::gen::Ladder;
+        assert_eq!(SchedKind::parse("greedy").unwrap(), SchedKind::Greedy);
+        assert_eq!(SchedKind::Greedy.label(), "GREEDY");
+        let cfg = SystemConfig::default();
+        let build = || {
+            ScenarioBuilder::new()
+                .scheduler(SchedKind::Greedy)
+                .trace(TraceSpec::Weighted(3))
+                .frames(12)
+                .seed(67)
+                .lp_ladder(Ladder::stage3_family(&cfg))
+                .build()
+        };
+        let s = build();
+        assert_eq!(s.name, "GREEDY_3");
+        assert_eq!(s.kind.build(&s.cfg).name(), "GREEDY");
+        let (a, b) = (build().run(), build().run());
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        assert_eq!(
+            a.lp_generated,
+            a.lp_completed_total() + a.lp_violations + a.lp_lost
+        );
+    }
+
+    #[test]
+    fn stage_plans_compile_into_extras_only_when_present() {
+        use crate::workload::gen::Ladder;
+        let cfg = SystemConfig::default();
+        let plain = ScenarioBuilder::new()
+            .trace(TraceSpec::Weighted(2))
+            .frames(4)
+            .seed(7)
+            .lp_ladder(Ladder::stage3_family(&cfg))
+            .build();
+        assert!(plain.extras.lp_stage_plans.is_empty(), "monolithic ladder: no plans");
+        let staged = ScenarioBuilder::new()
+            .trace(TraceSpec::Weighted(2))
+            .frames(4)
+            .seed(7)
+            .lp_ladder(Ladder::stage3_family_staged(&cfg))
+            .build();
+        assert_eq!(staged.extras.lp_stage_plans.len(), 3);
+        assert!(staged.extras.lp_stage_plans[0].cuttable());
+        assert!(staged.extras.lp_stage_plans[1].cuttable());
+        assert!(!staged.extras.lp_stage_plans[2].is_staged(), "rung 2 stays monolithic");
+    }
+
+    #[test]
+    fn pressure_knobs_flow_into_cfg() {
+        let off = ScenarioBuilder::new().frames(2).build();
+        assert_eq!(off.cfg.pressure_check_s, 0.0, "controller defaults off");
+        assert_eq!(off.cfg.pressure_backlog, 0);
+        let on = ScenarioBuilder::new().frames(2).pressure(0.5, 8).build();
+        assert_eq!(on.cfg.pressure_check_s, 0.5);
+        assert_eq!(on.cfg.pressure_backlog, 8);
     }
 
     #[test]

@@ -59,8 +59,12 @@ use std::sync::Arc;
 use crate::config::SystemConfig;
 use crate::coordinator::bandwidth::{BandwidthEstimator, ProbeRound};
 use crate::coordinator::fleet::CellMap;
-use crate::coordinator::scheduler::{Decision, Ops, Outcome, SchedEvent, Scheduler};
-use crate::coordinator::task::{Allocation, DeviceId, FrameId, Task, TaskId, VariantRung, MAX_RUNGS};
+use crate::coordinator::scheduler::{
+    Decision, Ops, Outcome, PressureCandidate, SchedEvent, Scheduler,
+};
+use crate::coordinator::task::{
+    Allocation, DeviceId, FrameId, StagePlan, Task, TaskId, VariantRung, MAX_RUNGS,
+};
 use crate::energy::{EnergyModel, FleetEnergy};
 use crate::fault::detector::{Belief, SuspicionDetector};
 use crate::metrics::Metrics;
@@ -110,6 +114,14 @@ pub struct RunExtras {
     /// deeper ladders let the schedulers trade accuracy for deadlines.
     /// Generative classes carry their own ladders in the compiled plan.
     pub lp_ladder: Vec<VariantRung>,
+    /// Anytime stage plans for the conveyor LP ladder, parallel to
+    /// `lp_ladder` (rung k runs under plan k; missing/short entries mean
+    /// monolithic). Empty = no stage plans: no boundary events exist,
+    /// the pressure controller has nothing to survey, and the run stays
+    /// byte-identical to the pre-anytime engine. Generative classes
+    /// carry their own plans in the compiled plan
+    /// ([`crate::workload::gen::GenClass::stage_plans`]).
+    pub lp_stage_plans: Vec<StagePlan>,
     /// Per-device power model ([`crate::energy`]): integrated at every
     /// state transition the engine observes. `None` = energy accounting
     /// off — no extra events, no extra RNG draws, byte-identical output.
@@ -171,6 +183,21 @@ struct TaskSlot {
     /// For a hedged primary: the duplicate racing it (first terminal
     /// outcome wins; the loser is cancelled without accounting).
     hedged_by: Option<TaskId>,
+    /// Anytime execution window: `Some((eff_start, total))` while a
+    /// *staged* LP execution runs on an edge device — the committed
+    /// start and actual total duration, from which the engine predicts
+    /// stage-boundary and finish times for the pressure survey. `None`
+    /// for monolithic executions (the default path).
+    exec: Option<(SimTime, SimDuration)>,
+    /// Next uncommitted stage boundary of the running staged execution
+    /// (1-based; starts at the plan's mandatory prefix, advances as
+    /// boundaries fire). Meaningless while `exec` is `None`.
+    next_stage: u8,
+    /// Armed truncation: complete at the first boundary at or past this
+    /// stage instead of running to full depth (`u8::MAX` = no cut).
+    /// Also doubles as the completion stage of a truncated result held
+    /// behind a partition, so the heal re-delivers the same cut.
+    cut_stage: u8,
 }
 
 /// Per-frame pipeline bookkeeping (Fig. 1's three stages), stored densely
@@ -250,6 +277,21 @@ pub struct Engine {
     conveyor_ladder: u16,
     /// Ladder index per generative class (parallel to `gen.classes`).
     gen_ladders: Vec<u16>,
+    /// Anytime stage-plan table, in lockstep with `ladders`: entry
+    /// `[l][r]` is rung `r`'s plan in ladder `l` (`StagePlan::NONE` =
+    /// monolithic). Index 0 is the same empty sentinel, so a slot's
+    /// `(ladder, rung)` pair resolves both tables.
+    stage_plans: Vec<Vec<StagePlan>>,
+    /// Slab handles of staged LP executions in flight — the pressure
+    /// survey's worklist. Entries go stale when their execution ends
+    /// (handle dies or `exec` clears) and are swept on the next survey;
+    /// empty whenever no ladder carries stage plans.
+    staged_execs: Vec<SlotRef>,
+    /// Scratch: pressure-survey candidates (reused per check).
+    pressure_cands: Vec<PressureCandidate>,
+    /// Scratch: slab handle per survey candidate, same order (maps the
+    /// scheduler's `TruncateCut::index` back to a slot).
+    pressure_slots: Vec<SlotRef>,
     /// Per-device energy integrator (`None` = accounting off: every
     /// hook site is behind an `Option` check and pushes no events).
     fleet: Option<FleetEnergy>,
@@ -280,8 +322,10 @@ pub struct Engine {
     /// the medium when both endpoints are reachable again.
     stalled_flows: Vec<(TaskId, f64)>,
     /// Finished-but-undeliverable results held behind a partition; the
-    /// heal re-fires their `LpFinish` (deadline re-checked then).
-    held_finishes: Vec<TaskId>,
+    /// heal re-fires their `LpFinish` (deadline re-checked then). The
+    /// second field is the anytime completion stage (`u8::MAX` = ran to
+    /// full depth), so a truncated result re-delivers the same cut.
+    held_finishes: Vec<(TaskId, u8)>,
     /// Optional flight recorder ([`crate::obs`]): `None` = tracing off —
     /// every hook is a skipped `Option` check, no events, no RNG draws.
     /// Boxed so the disabled engine pays one pointer, not a ring header.
@@ -392,31 +436,40 @@ impl Engine {
         // Ladder table: index 0 is the "no ladder" sentinel. The conveyor
         // LP ladder and every laddered generative class register once
         // here; tasks carry only the u16 index, so the hot path never
-        // clones rung vectors.
+        // clones rung vectors. Anytime stage plans ride in lockstep —
+        // the same push order fills both tables, padded with
+        // `StagePlan::NONE` so every rung has an entry.
         let mut ladders: Vec<Vec<VariantRung>> = vec![Vec::new()];
+        let mut stage_plans: Vec<Vec<StagePlan>> = vec![Vec::new()];
         let conveyor_ladder = if extras.lp_ladder.is_empty() {
             0u16
         } else {
+            let mut plans = extras.lp_stage_plans.clone();
+            plans.resize(extras.lp_ladder.len(), StagePlan::NONE);
             ladders.push(extras.lp_ladder.clone());
+            stage_plans.push(plans);
             (ladders.len() - 1) as u16
         };
-        let gen_ladders: Vec<u16> = extras
-            .gen
-            .as_ref()
-            .map(|g| {
-                g.classes
-                    .iter()
-                    .map(|c| {
-                        if c.rungs.is_empty() {
-                            0
-                        } else {
-                            ladders.push(c.rungs.clone());
-                            (ladders.len() - 1) as u16
-                        }
-                    })
-                    .collect()
-            })
-            .unwrap_or_default();
+        let mut gen_ladders: Vec<u16> = Vec::new();
+        if let Some(g) = &extras.gen {
+            for c in &g.classes {
+                if c.rungs.is_empty() {
+                    gen_ladders.push(0);
+                } else {
+                    let mut plans = c.stage_plans.clone();
+                    plans.resize(c.rungs.len(), StagePlan::NONE);
+                    ladders.push(c.rungs.clone());
+                    stage_plans.push(plans);
+                    gen_ladders.push((ladders.len() - 1) as u16);
+                }
+            }
+        }
+        // Anytime pressure controller: one periodic survey chain, alive
+        // only while the knob is set — the off default pushes nothing
+        // and the run stays byte-identical.
+        if cfg.pressure_check_s > 0.0 {
+            queue.push(crate::time::secs(cfg.pressure_check_s), Event::PressureCheck);
+        }
         let estimator = BandwidthEstimator::new(&cfg, cfg.link_bps);
         let n_cells = trace.entries.len() * cfg.n_devices;
         let fleet =
@@ -469,6 +522,10 @@ impl Engine {
             ladders,
             conveyor_ladder,
             gen_ladders,
+            stage_plans,
+            staged_execs: Vec::new(),
+            pressure_cands: Vec::new(),
+            pressure_slots: Vec::new(),
             fleet,
             cloud,
             scratch_levels: Vec::new(),
@@ -597,6 +654,9 @@ impl Engine {
             Event::OffloadTimeout { task } | Event::HedgeLaunch { task } => {
                 self.tasks.get(*task).map_or(false, |s| s.rt.is_some())
             }
+            Event::LpStageBoundary { task, .. } => {
+                self.tasks.get(*task).map_or(false, |s| s.rt.is_some())
+            }
             Event::MediumComplete { epoch, .. } => *epoch == self.medium.epoch,
             Event::WanComplete { epoch, .. } => {
                 self.cloud.as_ref().map_or(false, |c| c.wan.epoch == *epoch)
@@ -684,6 +744,9 @@ impl Engine {
             tries: 0,
             hedge_of: None,
             hedged_by: None,
+            exec: None,
+            next_stage: 0,
+            cut_stage: u8::MAX,
         });
         if self.task_index.len() <= id {
             self.task_index.resize(id + 1, SlotRef::NULL);
@@ -737,6 +800,14 @@ impl Engine {
             if let Some(rt) = slot.rt.take() {
                 ended = Some((rt.alloc.device, rt.alloc.config.index(), slot.task.source));
             }
+            if slot.exec.take().is_some() {
+                // Unfired stage boundaries of the dead staged execution
+                // can never resolve under the new slab generation.
+                let plan = self.stage_plan(slot.ladder as usize, slot.rung as usize);
+                self.queue.note_stale(plan.n_stages.saturating_sub(slot.next_stage) as usize);
+                slot.next_stage = 0;
+                slot.cut_stage = u8::MAX;
+            }
             let nh = self.tasks.insert(slot);
             self.task_index[task as usize] = nh;
         }
@@ -747,7 +818,7 @@ impl Engine {
         if let Some(pos) = self.stalled_flows.iter().position(|&(id, _)| id == task) {
             self.stalled_flows.remove(pos);
         }
-        if let Some(pos) = self.held_finishes.iter().position(|&id| id == task) {
+        if let Some(pos) = self.held_finishes.iter().position(|&(id, _)| id == task) {
             self.held_finishes.remove(pos);
         }
         if let Some((device, cfg_idx, source)) = ended {
@@ -811,6 +882,8 @@ impl Engine {
             Event::PartitionHeal { device } => self.on_partition_heal(device),
             Event::OffloadTimeout { task } => self.on_offload_timeout(task),
             Event::HedgeLaunch { task } => self.on_hedge_launch(task),
+            Event::LpStageBoundary { task, stage } => self.on_lp_stage_boundary(task, stage),
+            Event::PressureCheck => self.on_pressure_check(),
         }
     }
 
@@ -1152,8 +1225,155 @@ impl Engine {
         if is_hp {
             self.queue.push(finish, Event::HpFinish { task: h });
         } else {
-            self.queue.push(finish, Event::LpFinish { task: h });
+            self.begin_lp_exec(h, eff_start, proc);
         }
+    }
+
+    // ---- anytime execution ----------------------------------------------
+    //
+    // Imprecise-computation model: a rung may carry a [`StagePlan`]
+    // splitting its execution into a mandatory prefix plus optional
+    // refinement stages, each contributing a slice of processing time
+    // and accuracy. A running staged execution is a chain of
+    // stage-boundary events; the pressure controller may arm a cut so
+    // the next boundary completes the task early at partial accuracy.
+    // Every hook below no-ops for plan-less rungs (the default): no
+    // extra events, no extra RNG draws, byte-identical runs.
+
+    /// Per-rung anytime plan (`StagePlan::NONE` for plan-less rungs).
+    fn stage_plan(&self, ladder: usize, rung: usize) -> StagePlan {
+        self.stage_plans.get(ladder).and_then(|v| v.get(rung)).copied().unwrap_or(StagePlan::NONE)
+    }
+
+    /// Commit a low-priority edge execution's finish chain. Monolithic
+    /// rungs push exactly the one `LpFinish` the engine always pushed.
+    /// A cuttable plan additionally predicts every optional stage
+    /// boundary from the *same* already-sampled duration: boundary k
+    /// lands at `eff_start + total·frac_after(k)` (the final stage's
+    /// boundary coincides with the finish, so it is never pushed), and
+    /// truncating at k simply delivers the finish at that earlier point.
+    fn begin_lp_exec(&mut self, h: SlotRef, eff_start: SimTime, total: SimDuration) {
+        let (plan, ok) = {
+            let slot = self.tasks.get(h).expect("starting a live LP exec");
+            let plan = self.stage_plan(slot.ladder as usize, slot.rung as usize);
+            (plan, plan.cuttable())
+        };
+        if ok {
+            {
+                let slot = self.tasks.get_mut(h).expect("starting a live LP exec");
+                slot.exec = Some((eff_start, total));
+                slot.next_stage = plan.mandatory;
+                slot.cut_stage = u8::MAX;
+            }
+            for k in plan.mandatory..plan.n_stages {
+                let at = eff_start + (total as f64 * plan.frac_after(k)).round() as SimDuration;
+                self.queue.push(at, Event::LpStageBoundary { task: h, stage: k });
+            }
+            self.staged_execs.push(h);
+        }
+        self.queue.push(eff_start + total, Event::LpFinish { task: h });
+    }
+
+    /// A staged LP execution crossed stage boundary `stage`: either the
+    /// armed cut lands here — the task completes now at partial depth —
+    /// or the execution keeps refining toward the next boundary.
+    fn on_lp_stage_boundary(&mut self, h: SlotRef, stage: u8) {
+        let (task_id, device, cut_stage) = {
+            let Some(slot) = self.tasks.get(h) else {
+                self.queue.note_popped_stale();
+                return;
+            };
+            let (Some(rt), Some(_)) = (slot.rt.as_ref(), slot.exec) else {
+                self.queue.note_popped_stale();
+                return;
+            };
+            (slot.task.id, rt.alloc.device, slot.cut_stage)
+        };
+        self.trace(TraceEvent::StageBoundary { task: task_id, device, stage });
+        if cut_stage <= stage {
+            self.finish_lp(h, stage);
+        } else {
+            self.tasks.get_mut(h).expect("live staged exec").next_stage = stage + 1;
+        }
+    }
+
+    /// Periodic deadline-pressure survey: collect every staged execution
+    /// that still has an optional boundary ahead, predict its cut/full
+    /// finish times from the already-sampled duration (pure arithmetic,
+    /// zero RNG), and let the scheduler's rescue policy arm cuts. The
+    /// chain re-pushes itself until end-of-input so it never keeps an
+    /// otherwise-drained queue alive.
+    fn on_pressure_check(&mut self) {
+        if self.now > self.end_of_input {
+            return;
+        }
+        let period = crate::time::secs(self.cfg.pressure_check_s);
+        self.queue.push(self.now + period, Event::PressureCheck);
+        let now = self.now;
+        let mut execs = std::mem::take(&mut self.staged_execs);
+        let mut cands = std::mem::take(&mut self.pressure_cands);
+        let mut slots = std::mem::take(&mut self.pressure_slots);
+        cands.clear();
+        slots.clear();
+        execs.retain(|&h| {
+            // Sweep: executions that finished (slot freed or re-slotted,
+            // or `exec` cleared), were already cut, or are past their
+            // last optional boundary leave the worklist for good.
+            let Some(slot) = self.tasks.get(h) else { return false };
+            let (Some(rt), Some((eff_start, total))) = (slot.rt.as_ref(), slot.exec) else {
+                return false;
+            };
+            let plan = self.stage_plan(slot.ladder as usize, slot.rung as usize);
+            let next = slot.next_stage;
+            if slot.cut_stage != u8::MAX || next >= plan.n_stages {
+                return false;
+            }
+            let device = rt.alloc.device;
+            // A device predicted to die before the full-depth finish
+            // makes truncation an energy rescue, not just a deadline one.
+            let full_finish = eff_start + total;
+            let battery_doomed = self
+                .fleet
+                .as_ref()
+                .and_then(|f| f.depletion_eta_us(now, device))
+                .map_or(false, |eta| now + eta < full_finish);
+            cands.push(PressureCandidate {
+                task: slot.task.id,
+                device,
+                cut_stage: next,
+                n_stages: plan.n_stages,
+                cut_finish: eff_start
+                    + (total as f64 * plan.frac_after(next)).round() as SimDuration,
+                full_finish,
+                deadline: slot.task.deadline,
+                accuracy_loss: plan.accuracy_after(plan.n_stages) - plan.accuracy_after(next),
+                battery_doomed,
+            });
+            slots.push(h);
+            true
+        });
+        if !cands.is_empty() {
+            self.metrics.pressure_events = self.metrics.pressure_events.saturating_add(1);
+            let escalate = self.cfg.pressure_backlog > 0
+                && self.tasks.len() >= self.cfg.pressure_backlog as usize;
+            let d = self.sched.on_event(now, SchedEvent::Pressure { candidates: &cands, escalate });
+            self.charge_control(d.ops);
+            if let Outcome::Truncate { cuts } = d.outcome {
+                for cut in cuts {
+                    // Synchronous dispatch over a just-built survey: the
+                    // index maps straight back to a live slot, and the
+                    // cut targets a boundary still in the queue.
+                    let h = slots[cut.index as usize];
+                    if let Some(slot) = self.tasks.get_mut(h) {
+                        slot.cut_stage = cut.at_stage;
+                        self.metrics.pressure_cuts = self.metrics.pressure_cuts.saturating_add(1);
+                    }
+                }
+            }
+        }
+        self.staged_execs = execs;
+        self.pressure_cands = cands;
+        self.pressure_slots = slots;
     }
 
     fn on_hp_finish(&mut self, h: SlotRef) {
@@ -1452,6 +1672,16 @@ impl Engine {
     }
 
     fn on_lp_finish(&mut self, h: SlotRef) {
+        self.finish_lp(h, u8::MAX);
+    }
+
+    /// Terminal LP delivery. `cut == u8::MAX` is the full-depth finish
+    /// (the only case before stage plans existed); `cut == k` is a
+    /// truncated completion landing on stage boundary k — the result
+    /// delivers k stages' partial accuracy now instead of full accuracy
+    /// later, and the dead tail of the event chain (the unfired
+    /// boundaries plus the full-depth `LpFinish`) goes stale in place.
+    fn finish_lp(&mut self, h: SlotRef, cut: u8) {
         let Some(slot) = self.tasks.get(h) else {
             self.queue.note_popped_stale();
             return;
@@ -1473,13 +1703,24 @@ impl Engine {
         // reach its source across the partition. The task stays live and
         // undelivered until the heal re-fires this event (the deadline is
         // re-checked then — a long partition turns the hold into a
-        // violation). Local completions deliver locally, never held.
+        // violation). Local completions deliver locally, never held. A
+        // truncated result remembers its cut so the heal re-delivers the
+        // same partial depth.
         if offloaded && (self.is_partitioned(source) || self.is_partitioned(device)) {
-            if !self.held_finishes.contains(&task_id) {
-                self.held_finishes.push(task_id);
+            if !self.held_finishes.iter().any(|&(id, _)| id == task_id) {
+                self.held_finishes.push((task_id, cut));
                 self.metrics.partition_held_results = self.metrics.partition_held_results.saturating_add(1);
             }
             return;
+        }
+        let plan = self.stage_plan(lidx, rung);
+        if cut != u8::MAX {
+            // The execution ends here: the full-depth `LpFinish` and any
+            // boundary past the cut are now dead weight for compaction.
+            // (A held-then-healed cut over-counts — harmless: staleness
+            // is a sweep heuristic, not accounting the audit checks.)
+            self.queue.note_stale(plan.n_stages.saturating_sub(cut) as usize);
+            self.trace(TraceEvent::Truncate { task: task_id, device, stage: cut });
         }
         self.energy_task_end(device, cfg_idx);
         if self.now > deadline {
@@ -1555,9 +1796,27 @@ impl Engine {
         // Delivered-accuracy accounting: a completion delivers its
         // rung's inference accuracy (1.0 for ladder-less tasks —
         // identical to an explicit one-rung ladder at accuracy 1.0, so
-        // the no-degradation path stays byte-identical). Violations and
-        // drops deliver nothing and are never counted here.
-        let accuracy = if lidx == 0 { 1.0 } else { self.ladders[lidx][rung].accuracy };
+        // the no-degradation path stays byte-identical); a truncated
+        // completion delivers the plan's cumulative credit through its
+        // cut stage. Violations and drops deliver nothing and are never
+        // counted here, so `accuracy_sum` is exactly the fleet's
+        // delivered-inference ledger.
+        let accuracy = if cut != u8::MAX {
+            // Only deliveries that beat the deadline count as truncated
+            // *completions* — a cut result healing in late is a plain
+            // violation and was accounted above.
+            self.metrics.truncated_completions =
+                self.metrics.truncated_completions.saturating_add(1);
+            self.metrics.stages_skipped = self
+                .metrics
+                .stages_skipped
+                .saturating_add(plan.n_stages.saturating_sub(cut) as u64);
+            plan.accuracy_after(cut)
+        } else if lidx == 0 {
+            1.0
+        } else {
+            self.ladders[lidx][rung].accuracy
+        };
         self.metrics.accuracy_sum += accuracy;
         self.metrics.rung_completions[rung.min(MAX_RUNGS - 1)] += 1;
         if rung > 0 {
@@ -1617,7 +1876,7 @@ impl Engine {
                 let proc = self.actual_duration(&alloc);
                 self.trace(TraceEvent::TransferDone { task: flow });
                 self.trace_at(eff_start, TraceEvent::ExecStart { task: flow, device: alloc.device });
-                self.queue.push(eff_start + proc, Event::LpFinish { task: h });
+                self.begin_lp_exec(h, eff_start, proc);
                 self.energy_transfer_end(source, alloc.device);
             }
         }
@@ -2333,15 +2592,20 @@ impl Engine {
         }
         let held = std::mem::take(&mut self.held_finishes);
         let mut keep = Vec::new();
-        for id in held {
+        for (id, cut) in held {
             let h = self.slot_of(id);
             let Some(slot) = self.tasks.get(h) else { continue };
             let Some(rt) = slot.rt.as_ref() else { continue };
             let (src, dst) = (slot.task.source, rt.alloc.device);
             if self.is_partitioned(src) || self.is_partitioned(dst) {
-                keep.push(id);
-            } else {
+                keep.push((id, cut));
+            } else if cut == u8::MAX {
                 self.queue.push(self.now, Event::LpFinish { task: h });
+            } else {
+                // A truncated result re-delivers through its boundary so
+                // the same cut (and its partial accuracy) lands; the
+                // slot's armed `cut_stage` routes it back to `finish_lp`.
+                self.queue.push(self.now, Event::LpStageBoundary { task: h, stage: cut });
             }
         }
         self.held_finishes = keep;
@@ -2353,7 +2617,7 @@ impl Engine {
     /// purged via the scheduler eviction in the crash path.
     fn kill_partition_remnants_of(&mut self, device: DeviceId) {
         let mut doomed: Vec<TaskId> = Vec::new();
-        for &id in self.held_finishes.iter() {
+        for &(id, _) in self.held_finishes.iter() {
             if let Some(slot) = self.tasks.get(self.slot_of(id)) {
                 if slot.task.source == device {
                     doomed.push(id);
@@ -2392,7 +2656,7 @@ impl Engine {
     fn flush_partition_remnants(&mut self) {
         let held = std::mem::take(&mut self.held_finishes);
         let stalled = std::mem::take(&mut self.stalled_flows);
-        for id in held.into_iter().chain(stalled.into_iter().map(|(id, _)| id)) {
+        for id in held.into_iter().map(|(id, _)| id).chain(stalled.into_iter().map(|(id, _)| id)) {
             let Some(slot) = self.tasks.get(self.slot_of(id)) else { continue };
             let frame = slot.rt.as_ref().map(|rt| rt.alloc.frame);
             let _ = self.sched.on_event(self.now, SchedEvent::Violation { task: id });
@@ -2698,6 +2962,87 @@ mod tests {
             (0.78 - 1e-9..=0.92 + 1e-9).contains(&mean),
             "mean delivered accuracy {mean} must sit within the degraded rungs"
         );
+    }
+
+    #[test]
+    fn stage_plans_with_controller_off_decide_identically() {
+        use crate::workload::gen::variants::Ladder;
+        // Stage plans attached but the pressure controller off: boundary
+        // events fire and advance `next_stage`, yet nothing is ever cut —
+        // every placement, RNG draw, and delivered accuracy must match
+        // the monolithic ladder run. Only queue-compaction cadence may
+        // move (the extra boundary events shift the sweep heuristic), so
+        // that gauge is masked before the full-struct comparison.
+        let mut cfg = SystemConfig::default();
+        cfg.seed = 33;
+        cfg.frame_period_s = 12.0;
+        let trace = Arc::new(Trace::generate(TraceSpec::Weighted(3), cfg.n_devices, 10, 33));
+        let run = |staged: bool| {
+            let ladder =
+                if staged { Ladder::stage3_family_staged(&cfg) } else { Ladder::stage3_family(&cfg) };
+            let mut extras = RunExtras { lp_ladder: ladder.compile(&cfg), ..Default::default() };
+            if staged {
+                extras.lp_stage_plans = ladder.compile_stage_plans();
+            }
+            Engine::with_extras(
+                cfg.clone(),
+                Box::new(RasScheduler::new(&cfg, 0, cfg.link_bps)),
+                Arc::clone(&trace),
+                "anytime-off",
+                extras,
+            )
+            .run()
+        };
+        let mut plain = run(false);
+        let mut staged = run(true);
+        assert_eq!(staged.truncated_completions, 0, "no controller, no cuts");
+        assert_eq!(staged.pressure_events, 0);
+        assert_eq!(staged.pressure_cuts, 0);
+        assert_eq!(staged.stages_skipped, 0);
+        plain.queue_compactions = 0;
+        staged.queue_compactions = 0;
+        assert_eq!(format!("{plain:?}"), format!("{staged:?}"));
+    }
+
+    #[test]
+    fn pressure_escalation_truncates_and_conserves() {
+        use crate::workload::gen::variants::Ladder;
+        // Backlog threshold 1: every survey that finds live work
+        // escalates, so every cuttable staged execution whose truncated
+        // finish still meets its deadline gets cut at the next boundary.
+        let mut cfg = SystemConfig::default();
+        cfg.seed = 41;
+        cfg.frame_period_s = 12.0;
+        cfg.pressure_check_s = 0.5;
+        cfg.pressure_backlog = 1;
+        let trace = Arc::new(Trace::generate(TraceSpec::Weighted(3), cfg.n_devices, 12, 41));
+        let ladder = Ladder::stage3_family_staged(&cfg);
+        let extras = RunExtras {
+            lp_ladder: ladder.compile(&cfg),
+            lp_stage_plans: ladder.compile_stage_plans(),
+            ..Default::default()
+        };
+        let m = Engine::with_extras(
+            cfg.clone(),
+            Box::new(RasScheduler::new(&cfg, 0, cfg.link_bps)),
+            trace,
+            "anytime-on",
+            extras,
+        )
+        .run();
+        assert!(m.pressure_events > 0, "surveys must find live staged work");
+        assert!(m.pressure_cuts > 0, "escalation must arm cuts");
+        assert!(m.truncated_completions > 0, "armed cuts must land as truncated completions");
+        assert!(
+            m.truncated_completions <= m.pressure_cuts,
+            "each truncated completion consumes one armed cut"
+        );
+        assert!(m.stages_skipped >= m.truncated_completions, "a cut skips at least one stage");
+        // Truncated finishes still count as deadline-met completions and
+        // still bank their rung, so both ledgers close.
+        assert_eq!(m.rung_completions.iter().sum::<u64>(), m.lp_completed_total());
+        assert!(m.accuracy_sum > 0.0);
+        assert_lp_conserved(&m);
     }
 
     #[test]

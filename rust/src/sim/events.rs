@@ -170,6 +170,20 @@ pub enum Event {
     /// placement: launch a duplicate, first completion wins. Dead if the
     /// `SlotRef` went stale. Only pushed when `hedge_timeout_s > 0`.
     HedgeLaunch { task: SlotRef },
+    /// A running staged low-priority execution crossed the boundary
+    /// after anytime stage `stage` (1-based). If a truncation was armed
+    /// at or below this stage the task finishes *now* with partial
+    /// accuracy; otherwise execution continues into the next stage. All
+    /// boundary events of an execution are pushed when it starts; a
+    /// cancelled placement leaves them to die via the stale `SlotRef`.
+    /// Only pushed for rungs carrying a stage plan — monolithic runs
+    /// never see it.
+    LpStageBoundary { task: SlotRef, stage: u8 },
+    /// The deadline-pressure controller wakes up: survey running staged
+    /// executions and offer the scheduler a truncation decision
+    /// ([`crate::coordinator::scheduler::SchedEvent::Pressure`]).
+    /// Periodic chain, only seeded when `pressure_check_s > 0`.
+    PressureCheck,
 }
 
 /// A scheduled event: ordered by time, then insertion sequence (FIFO among

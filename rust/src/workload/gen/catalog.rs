@@ -159,6 +159,7 @@ impl TaskClass {
             },
             batch: self.batch.max(1),
             rungs: self.variants.iter().map(|v| v.compile(pad)).collect(),
+            stage_plans: self.variants.iter().map(|v| v.compile_stages()).collect(),
         }
     }
 
@@ -370,6 +371,27 @@ mod tests {
         let mut desync = TaskClass::low("x", 20.0, 4.0, 8.0, 6.0);
         desync.variants = fam.rungs;
         assert!(Catalog::new(vec![desync]).validate().is_err());
+    }
+
+    #[test]
+    fn stage_plans_compile_alongside_rungs() {
+        let cfg = SystemConfig::default();
+        let fam = Ladder::stage3_family_staged(&cfg);
+        let class = TaskClass::low("stage3", cfg.frame_period_s, 0.0, 1.0, 0.8)
+            .batch(2)
+            .ladder(fam.clone());
+        Catalog::new(vec![class.clone()]).validate().unwrap();
+        let g = class.compile(&cfg);
+        assert_eq!(g.stage_plans.len(), g.rungs.len());
+        assert!(g.stage_plans[0].is_staged() && g.stage_plans[0].cuttable());
+        let n = g.stage_plans[0].n_stages;
+        assert_eq!(g.stage_plans[0].accuracy_after(n), g.rungs[0].accuracy);
+        assert!(!g.stage_plans[2].is_staged());
+        // Unstaged ladders compile to all-NONE plans (anytime off).
+        let plain = TaskClass::low("p", cfg.frame_period_s, 0.0, 1.0, 0.8)
+            .ladder(Ladder::stage3_family(&cfg))
+            .compile(&cfg);
+        assert!(plain.stage_plans.iter().all(|p| !p.is_staged()));
     }
 
     #[test]

@@ -114,6 +114,10 @@ pub struct GenClass {
     /// spec by construction). Empty = no explicit ladder: the class runs
     /// its single model at implicit accuracy 1.0 and never degrades.
     pub rungs: Vec<crate::coordinator::task::VariantRung>,
+    /// Compiled anytime stage plans, parallel to `rungs` (entry `i`
+    /// splits rung `i`; `StagePlan::NONE` for monolithic rungs). Empty
+    /// whenever `rungs` is empty.
+    pub stage_plans: Vec<crate::coordinator::task::StagePlan>,
 }
 
 /// One planned arrival: `batch` tasks of `class` from `source` at `at`.

@@ -34,4 +34,4 @@ pub mod variants;
 pub use arrival::{empirical_rate_per_min, index_of_dispersion, ArrivalProcess};
 pub use catalog::{Catalog, TaskClass, FOUR_CORE_EFFICIENCY};
 pub use driver::{GenArrival, GenClass, GenSpec, GenWorkload, Workload};
-pub use variants::{Ladder, ModelVariant};
+pub use variants::{Ladder, ModelVariant, StageSpec};

@@ -20,8 +20,23 @@
 //! bit-identically to having no ladder at all.
 
 use crate::config::SystemConfig;
-use crate::coordinator::task::{VariantRung, MAX_RUNGS};
+use crate::coordinator::task::{StagePlan, VariantRung, MAX_RUNGS, MAX_STAGES};
 use crate::time::secs;
+
+/// One anytime stage of a model variant, spec-level: the *incremental*
+/// share of the variant's execution time this stage consumes and the
+/// *incremental* accuracy credit it banks on completion (the imprecise-
+/// computation split: a mandatory prefix earns most of the accuracy,
+/// optional refinement stages buy the rest).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageSpec {
+    /// Incremental fraction of the variant's total stage time, in (0, 1];
+    /// a variant's stage fractions must sum to 1.
+    pub frac: f64,
+    /// Incremental accuracy credit banked when this stage completes
+    /// (non-negative); a variant's credits must sum to its accuracy.
+    pub credit: f64,
+}
 
 /// One model variant of a task class: the accuracy it delivers and what
 /// it costs. Stage times are *benchmark means* like
@@ -38,11 +53,36 @@ pub struct ModelVariant {
     pub proc2_s: f64,
     /// Four-core stage time (benchmark mean), seconds.
     pub proc4_s: f64,
+    /// Anytime stage plan: empty (the default) means monolithic
+    /// execution, byte-identical to the pre-anytime system. Attach with
+    /// [`ModelVariant::staged`].
+    pub stages: Vec<StageSpec>,
+    /// Leading stages that can never be truncated (`>= 1` whenever
+    /// `stages` is non-empty).
+    pub mandatory: u8,
 }
 
 impl ModelVariant {
     pub fn new(name: &str, accuracy: f64, input_mbits: f64, proc2_s: f64, proc4_s: f64) -> Self {
-        Self { name: name.to_string(), accuracy, input_mbits, proc2_s, proc4_s }
+        Self {
+            name: name.to_string(),
+            accuracy,
+            input_mbits,
+            proc2_s,
+            proc4_s,
+            stages: Vec::new(),
+            mandatory: 0,
+        }
+    }
+
+    /// Attach an anytime stage plan: `mandatory` leading stages that can
+    /// never be cut, and one `(frac, credit)` pair per stage (incremental
+    /// time share / incremental accuracy credit). Validated by
+    /// [`Ladder::validate`].
+    pub fn staged(mut self, mandatory: usize, stages: &[(f64, f64)]) -> Self {
+        self.stages = stages.iter().map(|&(frac, credit)| StageSpec { frac, credit }).collect();
+        self.mandatory = mandatory as u8;
+        self
     }
 
     /// Compiled integer form (padding in seconds, added to both stage
@@ -53,6 +93,89 @@ impl ModelVariant {
             input_bytes: (self.input_mbits * 1e6 / 8.0).round() as u64,
             proc_us: [secs(self.proc2_s + pad_s), secs(self.proc4_s + pad_s)],
         }
+    }
+
+    /// Compiled stage plan: cumulative time fractions and accuracy
+    /// credits, with the final entries forced to exactly `1.0` and the
+    /// variant's accuracy so an uncut staged run is indistinguishable
+    /// from a monolithic one (no float-accumulation drift in the
+    /// accuracy ledger). [`StagePlan::NONE`] when the variant is
+    /// monolithic.
+    pub(crate) fn compile_stages(&self) -> StagePlan {
+        if self.stages.is_empty() {
+            return StagePlan::NONE;
+        }
+        let mut plan = StagePlan {
+            n_stages: self.stages.len() as u8,
+            mandatory: self.mandatory,
+            ..StagePlan::NONE
+        };
+        let (mut frac, mut credit) = (0.0, 0.0);
+        for (i, s) in self.stages.iter().enumerate() {
+            frac += s.frac;
+            credit += s.credit;
+            plan.cum_frac[i] = frac;
+            plan.cum_accuracy[i] = credit;
+        }
+        let last = self.stages.len() - 1;
+        plan.cum_frac[last] = 1.0;
+        plan.cum_accuracy[last] = self.accuracy;
+        plan
+    }
+
+    /// Per-variant stage-plan validity (called per rung by
+    /// [`Ladder::validate`]).
+    fn validate_stages(&self, rung: usize) -> anyhow::Result<()> {
+        if self.stages.is_empty() {
+            anyhow::ensure!(
+                self.mandatory == 0,
+                "rung {rung} ({}): mandatory prefix without a stage plan",
+                self.name
+            );
+            return Ok(());
+        }
+        let n = self.stages.len();
+        anyhow::ensure!(
+            n <= MAX_STAGES,
+            "rung {rung} ({}): {n} stages exceeds the supported maximum {MAX_STAGES}",
+            self.name
+        );
+        anyhow::ensure!(
+            (1..=n).contains(&(self.mandatory as usize)),
+            "rung {rung} ({}): mandatory prefix {} must be in 1..={n}",
+            self.name,
+            self.mandatory
+        );
+        let (mut frac, mut credit) = (0.0, 0.0);
+        for (i, s) in self.stages.iter().enumerate() {
+            anyhow::ensure!(
+                s.frac > 0.0 && s.frac <= 1.0,
+                "rung {rung} ({}): stage {} time fraction must be in (0, 1], got {}",
+                self.name,
+                i + 1,
+                s.frac
+            );
+            anyhow::ensure!(
+                s.credit >= 0.0,
+                "rung {rung} ({}): stage {} has negative accuracy credit",
+                self.name,
+                i + 1
+            );
+            frac += s.frac;
+            credit += s.credit;
+        }
+        anyhow::ensure!(
+            (frac - 1.0).abs() < 1e-9,
+            "rung {rung} ({}): stage time fractions sum to {frac}, want 1",
+            self.name
+        );
+        anyhow::ensure!(
+            (credit - self.accuracy).abs() < 1e-9,
+            "rung {rung} ({}): stage accuracy credits sum to {credit}, want {}",
+            self.name,
+            self.accuracy
+        );
+        Ok(())
     }
 }
 
@@ -117,6 +240,7 @@ impl Ladder {
                 r.name
             );
             anyhow::ensure!(r.input_mbits >= 0.0, "rung {} ({}): negative input", i, r.name);
+            r.validate_stages(i)?;
             if i > 0 {
                 let up = &self.rungs[i - 1];
                 anyhow::ensure!(
@@ -139,6 +263,18 @@ impl Ladder {
     /// (low-priority padding applied to every rung's stage times).
     pub fn compile(&self, cfg: &SystemConfig) -> Vec<VariantRung> {
         self.rungs.iter().map(|v| v.compile(cfg.proc_padding_s)).collect()
+    }
+
+    /// Does any rung carry an anytime stage plan?
+    pub fn has_stage_plans(&self) -> bool {
+        self.rungs.iter().any(|v| !v.stages.is_empty())
+    }
+
+    /// Compile every rung's stage plan, parallel to [`Ladder::compile`]
+    /// (entry `i` belongs to compiled rung `i`; [`StagePlan::NONE`] for
+    /// monolithic rungs).
+    pub fn compile_stage_plans(&self) -> Vec<StagePlan> {
+        self.rungs.iter().map(|v| v.compile_stages()).collect()
     }
 
     /// A three-rung family built from the paper's stage-3 benchmark
@@ -166,6 +302,21 @@ impl Ladder {
                 cfg.lp4_proc_s * 0.25,
             ),
         ])
+    }
+
+    /// [`Ladder::stage3_family`] with anytime stage plans attached: the
+    /// full and distilled variants split into a mandatory backbone plus
+    /// optional refinement stages (the usual anytime-DNN shape — early
+    /// exits bank most of the accuracy, late stages buy the last few
+    /// points), while the tiny variant stays monolithic (too small to
+    /// exit early). This is the anytime grid's workload.
+    pub fn stage3_family_staged(cfg: &SystemConfig) -> Ladder {
+        let mut fam = Ladder::stage3_family(cfg);
+        fam.rungs[0] = fam.rungs[0]
+            .clone()
+            .staged(1, &[(0.50, 0.70), (0.30, 0.17), (0.20, 0.10)]);
+        fam.rungs[1] = fam.rungs[1].clone().staged(1, &[(0.60, 0.72), (0.40, 0.20)]);
+        fam
     }
 }
 
@@ -218,6 +369,68 @@ mod tests {
                 .collect(),
         );
         assert!(deep.validate().is_err());
+    }
+
+    #[test]
+    fn staged_family_validates_and_compiles_cumulative_plans() {
+        let cfg = SystemConfig::default();
+        let fam = Ladder::stage3_family_staged(&cfg);
+        fam.validate().unwrap();
+        assert!(fam.has_stage_plans());
+        assert!(!Ladder::stage3_family(&cfg).has_stage_plans());
+        let plans = fam.compile_stage_plans();
+        assert_eq!(plans.len(), fam.depth());
+        // Rung 0: three stages, mandatory backbone of one.
+        let p = plans[0];
+        assert_eq!((p.n_stages, p.mandatory), (3, 1));
+        assert!(p.cuttable());
+        assert!((p.frac_after(1) - 0.50).abs() < 1e-12);
+        assert!((p.accuracy_after(2) - 0.87).abs() < 1e-12);
+        // Final entries are exact: an uncut staged run credits precisely
+        // the rung accuracy, no float-accumulation drift.
+        assert_eq!(p.frac_after(3), 1.0);
+        assert_eq!(p.accuracy_after(3), fam.rungs[0].accuracy);
+        // Cumulative fractions and credits are strictly increasing.
+        assert!(p.cum_frac[..3].windows(2).all(|w| w[0] < w[1]));
+        assert!(p.cum_accuracy[..3].windows(2).all(|w| w[0] < w[1]));
+        // The tiny rung stays monolithic.
+        assert_eq!(plans[2], StagePlan::NONE);
+        assert!(!plans[2].is_staged());
+        // Stage plans survive depth truncation (they ride on the rungs).
+        assert!(fam.truncated(2).has_stage_plans());
+    }
+
+    #[test]
+    fn validate_rejects_malformed_stage_plans() {
+        let base = || ModelVariant::new("v", 0.9, 1.0, 2.0, 1.5);
+        // Fractions must sum to 1.
+        let bad = Ladder::single(base().staged(1, &[(0.5, 0.5), (0.3, 0.4)]));
+        assert!(bad.validate().is_err(), "fractions sum to 0.8");
+        // Credits must sum to the variant accuracy.
+        let bad = Ladder::single(base().staged(1, &[(0.5, 0.5), (0.5, 0.5)]));
+        assert!(bad.validate().is_err(), "credits sum to 1.0, accuracy is 0.9");
+        // Mandatory prefix must cover at least one stage...
+        let bad = Ladder::single(base().staged(0, &[(0.5, 0.4), (0.5, 0.5)]));
+        assert!(bad.validate().is_err(), "mandatory 0");
+        // ...and no more than all of them.
+        let bad = Ladder::single(base().staged(3, &[(0.5, 0.4), (0.5, 0.5)]));
+        assert!(bad.validate().is_err(), "mandatory 3 of 2");
+        // Non-positive fractions and negative credits are rejected.
+        assert!(Ladder::single(base().staged(1, &[(0.0, 0.4), (1.0, 0.5)])).validate().is_err());
+        assert!(Ladder::single(base().staged(1, &[(0.5, -0.1), (0.5, 1.0)])).validate().is_err());
+        // Too many stages.
+        let mut many: Vec<(f64, f64)> =
+            (0..MAX_STAGES + 1).map(|_| (1.0 / (MAX_STAGES + 1) as f64, 0.0)).collect();
+        many[0].1 = 0.9;
+        assert!(Ladder::single(base().staged(1, &many)).validate().is_err());
+        // A mandatory prefix without stages is nonsense.
+        let mut stray = base();
+        stray.mandatory = 1;
+        assert!(Ladder::single(stray).validate().is_err());
+        // All-mandatory (no cut point) is legal, just never cuttable.
+        let solid = Ladder::single(base().staged(2, &[(0.5, 0.4), (0.5, 0.5)]));
+        solid.validate().unwrap();
+        assert!(!solid.compile_stage_plans()[0].cuttable());
     }
 
     #[test]

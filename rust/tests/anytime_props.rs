@@ -1,0 +1,324 @@
+//! Anytime-truncation property suite: randomized stage plans × arrival
+//! processes × schedulers, asserting the identities that make mid-flight
+//! truncation trustworthy —
+//!
+//! * the accuracy ledger closes through cuts (`Σ rung_completions ==
+//!   deadline-met`, mean delivered accuracy bounded below by the worst
+//!   mandatory-prefix credit and above by the best rung),
+//! * a cut never lands below the mandatory prefix (`stages_skipped` is
+//!   bounded by the optional-stage budget of the plans in play),
+//! * `truncated_completions ≤ pressure_cuts` (every truncation was
+//!   armed by a survey) and every full-depth twin truncates nothing,
+//!
+//! plus the acceptance scenario from the issue: under MMPP overload the
+//! pressure controller strictly raises deadlines met with accuracy
+//! goodput no worse — for every scheduler, including GREEDY — and the
+//! battery regression: a draining device survives on truncated work it
+//! could not survive at full depth (`pressure(_, 0)` is the rescue-only
+//! mode: no backlog escalation, cuts fire only for deadline- or
+//! battery-doomed tasks).
+
+use medge::config::SystemConfig;
+use medge::energy::EnergyModel;
+use medge::experiments::{anytime_catalog, frontier_arrivals, ANYTIME_BACKLOG, ANYTIME_CHECK_S};
+use medge::metrics::Metrics;
+use medge::scenario::{ScenarioBuilder, SchedKind};
+use medge::util::prop::forall;
+use medge::util::Rng;
+use medge::workload::gen::{
+    ArrivalProcess, Catalog, Ladder, ModelVariant, TaskClass, Workload,
+};
+use medge::workload::trace::TraceSpec;
+
+/// A random valid ladder (1–3 rungs descending on every axis from the
+/// paper's stage-3 cost point) with anytime stage plans attached to a
+/// random subset of rungs: 2–4 stages, a mandatory prefix strictly
+/// shorter than the plan (every staged rung stays cuttable), time
+/// fractions and accuracy credits drawn positive and closed exactly
+/// (last entry = remainder) so `Ladder::validate` accepts every draw.
+fn random_staged_ladder(rng: &mut Rng, cfg: &SystemConfig) -> Ladder {
+    let depth = 1 + rng.index(3);
+    let mut acc = 0.90 + rng.gen_f64() * 0.09;
+    let mut p2 = cfg.lp2_proc_s;
+    let mut p4 = cfg.lp4_proc_s;
+    let mut mbits = cfg.image_bytes as f64 * 8.0 / 1e6;
+    let mut rungs = Vec::with_capacity(depth);
+    for i in 0..depth {
+        let mut v = ModelVariant::new(&format!("r{i}"), acc, mbits, p2, p4);
+        // ~2/3 of rungs carry a stage plan; the rest stay monolithic so
+        // every run mixes cuttable and uncuttable work.
+        if rng.index(3) < 2 {
+            let n = 2 + rng.index(3); // 2..=4 stages
+            let w: Vec<f64> = (0..n).map(|_| 0.2 + rng.gen_f64()).collect();
+            let (tw, mut stages) = (w.iter().sum::<f64>(), Vec::with_capacity(n));
+            let (mut frac_left, mut credit_left) = (1.0, acc);
+            for (j, &wj) in w.iter().enumerate() {
+                let (f, c) = if j + 1 == n {
+                    (frac_left, credit_left) // exact closure, no drift
+                } else {
+                    (wj / tw, acc * wj / tw)
+                };
+                frac_left -= f;
+                credit_left -= c;
+                stages.push((f, c));
+            }
+            v = v.staged(1 + rng.index(n - 1), &stages);
+        }
+        rungs.push(v);
+        let shrink = 0.35 + rng.gen_f64() * 0.45;
+        acc *= 0.75 + rng.gen_f64() * 0.20;
+        p2 *= shrink;
+        p4 *= shrink;
+        mbits *= shrink;
+    }
+    let ladder = Ladder::new(rungs);
+    ladder.validate().expect("random staged ladder construction must stay valid");
+    ladder
+}
+
+fn random_process(rng: &mut Rng) -> ArrivalProcess {
+    match rng.index(3) {
+        0 => ArrivalProcess::Poisson { rate_per_min: 8.0 + rng.gen_f64() * 20.0 },
+        1 => ArrivalProcess::Mmpp {
+            on_rate_per_min: 20.0 + rng.gen_f64() * 30.0,
+            off_rate_per_min: 1.0,
+            mean_on_s: 30.0 + rng.gen_f64() * 40.0,
+            mean_off_s: 30.0 + rng.gen_f64() * 60.0,
+        },
+        _ => ArrivalProcess::Diurnal {
+            base_rate_per_min: 8.0 + rng.gen_f64() * 10.0,
+            amplitude: rng.gen_f64(),
+            period_s: 120.0 + rng.gen_f64() * 240.0,
+        },
+    }
+}
+
+/// The worst accuracy any deadline-met completion can credit: for a
+/// staged rung the mandatory-prefix credit (the deepest legal cut), for
+/// a monolithic rung its full accuracy.
+fn min_delivered_credit(ladder: &Ladder) -> f64 {
+    ladder
+        .rungs
+        .iter()
+        .map(|r| {
+            if r.stages.is_empty() {
+                r.accuracy
+            } else {
+                r.stages[..r.mandatory as usize].iter().map(|s| s.credit).sum()
+            }
+        })
+        .fold(f64::INFINITY, f64::min)
+}
+
+/// The most stages any single truncation can skip across the ladder.
+fn max_optional_stages(ladder: &Ladder) -> u64 {
+    ladder.rungs.iter().map(|r| r.stages.len() as u64 - r.mandatory as u64).max().unwrap_or(0)
+}
+
+fn assert_anytime_identities(m: &Metrics, ladder: &Ladder, ctx: &str) -> Result<(), String> {
+    let met = m.lp_deadline_met();
+    if m.rung_completions.iter().sum::<u64>() != met {
+        return Err(format!("{ctx}: Σ rung_completions != deadline-met {met}"));
+    }
+    if m.lp_generated != m.lp_completed_total() + m.lp_violations + m.lp_lost {
+        return Err(format!("{ctx}: lp conservation broke through truncation"));
+    }
+    if m.truncated_completions > m.pressure_cuts {
+        return Err(format!(
+            "{ctx}: {} truncations landed but only {} cuts were armed",
+            m.truncated_completions, m.pressure_cuts
+        ));
+    }
+    if m.truncated_completions > met {
+        return Err(format!("{ctx}: more truncated completions than deadline-met"));
+    }
+    if m.stages_skipped < m.truncated_completions {
+        return Err(format!("{ctx}: a truncation must skip at least one stage"));
+    }
+    // The mandatory floor, observed through the skip ledger: no single
+    // cut can skip more than the largest optional suffix in the ladder.
+    if m.stages_skipped > m.truncated_completions * max_optional_stages(ladder) {
+        return Err(format!(
+            "{ctx}: {} stages skipped over {} truncations exceeds the optional budget {}",
+            m.stages_skipped,
+            m.truncated_completions,
+            max_optional_stages(ladder)
+        ));
+    }
+    if met > 0 {
+        let mean = m.accuracy_per_deadline_met();
+        let lo = min_delivered_credit(ladder);
+        let hi = ladder.rungs.first().map(|r| r.accuracy).unwrap_or(1.0);
+        if !(lo - 1e-9..=hi + 1e-9).contains(&mean) {
+            return Err(format!(
+                "{ctx}: mean delivered accuracy {mean} outside credit bounds [{lo}, {hi}]"
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn anytime_identities_hold_across_random_plans_and_processes() {
+    forall("anytime identities (random staged ladder × process × scheduler)", 8, |rng| {
+        let cfg = SystemConfig::default();
+        let ladder = random_staged_ladder(rng, &cfg);
+        let process = random_process(rng);
+        let kind =
+            [SchedKind::Wps, SchedKind::Ras, SchedKind::Multi, SchedKind::Greedy][rng.index(4)];
+        let seed = rng.next_u64();
+        let catalog = Catalog::new(vec![TaskClass::low(
+            "stage3",
+            cfg.frame_period_s * (0.8 + rng.gen_f64() * 0.8),
+            0.0,
+            1.0,
+            0.8,
+        )
+        .batch(1 + rng.index(2) as u32)
+        .ladder(ladder.clone())]);
+        let base = ScenarioBuilder::new()
+            .scheduler(kind)
+            .workload(Workload::generative(process, catalog))
+            .minutes(5.0)
+            .seed(seed);
+        let check_s = 0.25 + rng.gen_f64() * 0.75;
+        let backlog = [0u32, 4, 8][rng.index(3)]; // 0 = rescue-only mode
+        let cut = base.clone().pressure(check_s, backlog).build().run();
+        let full = base.build().run();
+        if cut.gen_arrivals == 0 {
+            return Err("plan fired no arrivals".to_string());
+        }
+        // The controller never perturbs the offered load.
+        if cut.offered_tasks != full.offered_tasks {
+            return Err(format!(
+                "{}: pressure twin offered {} tasks, full twin {}",
+                cut.label, cut.offered_tasks, full.offered_tasks
+            ));
+        }
+        if full.truncated_completions != 0 || full.pressure_events != 0 || full.pressure_cuts != 0
+        {
+            return Err(format!("{}: the controller-off twin truncated", full.label));
+        }
+        assert_anytime_identities(&cut, &ladder, &cut.label)?;
+        assert_anytime_identities(&full, &ladder, &full.label)
+    });
+}
+
+/// One anytime cell: the staged stage-3 family under MMPP pressure at
+/// `rate` arrivals/min (ON state), controller on or off.
+fn anytime_run(kind: SchedKind, cut: bool, rate: f64, seed: u64, minutes: f64) -> Metrics {
+    let cfg = SystemConfig::default();
+    let mut b = ScenarioBuilder::new()
+        .scheduler(kind)
+        .workload(Workload::generative(frontier_arrivals(rate), anytime_catalog(&cfg)))
+        .minutes(minutes)
+        .seed(seed)
+        .named(format!("{}_{}", kind.label(), if cut { "cut" } else { "full" }));
+    if cut {
+        b = b.pressure(ANYTIME_CHECK_S, ANYTIME_BACKLOG);
+    }
+    b.build().run()
+}
+
+/// THE acceptance criterion: under MMPP overload, turning the pressure
+/// controller on strictly raises deadlines met — over the *same*
+/// offered load — while total delivered accuracy per offered task
+/// (goodput) does not fall, for every scheduler. Mean accuracy per
+/// completion may only move down or hold: truncation trades tail
+/// accuracy for completions, never the reverse.
+#[test]
+fn overload_truncation_strictly_raises_deadlines_met_on_every_scheduler() {
+    for kind in [SchedKind::Wps, SchedKind::Ras, SchedKind::Multi, SchedKind::Greedy] {
+        let full = anytime_run(kind, false, 40.0, 2025, 12.0);
+        let cut = anytime_run(kind, true, 40.0, 2025, 12.0);
+        assert_eq!(
+            full.offered_tasks,
+            cut.offered_tasks,
+            "{}: twins must face the same arrivals",
+            kind.label()
+        );
+        assert!(
+            full.lp_deadline_met() > 0,
+            "{}: the controller-off twin should still complete work in OFF windows",
+            kind.label()
+        );
+        assert!(
+            cut.truncated_completions > 0,
+            "{}: overload must force truncated completions",
+            kind.label()
+        );
+        assert!(
+            cut.lp_deadline_met() > full.lp_deadline_met(),
+            "{}: truncation must strictly raise deadlines met ({} vs {})",
+            kind.label(),
+            cut.lp_deadline_met(),
+            full.lp_deadline_met()
+        );
+        assert!(
+            cut.delivered_accuracy_rate() >= full.delivered_accuracy_rate(),
+            "{}: accuracy goodput must not fall ({:.4} vs {:.4})",
+            kind.label(),
+            cut.delivered_accuracy_rate(),
+            full.delivered_accuracy_rate()
+        );
+        assert!(
+            cut.accuracy_per_deadline_met() <= full.accuracy_per_deadline_met() + 1e-9,
+            "{}: mean accuracy per completion can only drop under truncation",
+            kind.label()
+        );
+    }
+}
+
+/// The battery regression pinned by this PR's bugfix: truncating a task
+/// on a battery device re-runs the depletion prediction with the
+/// shortened plan (`energy_task_end` → `arm_battery`), so a
+/// near-drained device survives work it could not survive at full
+/// depth. `pressure(_, 0)` keeps backlog escalation off — every cut
+/// here came from the rescue clause (deadline- or battery-doomed), the
+/// exact path the bug sat on.
+#[test]
+fn battery_doomed_rescue_truncates_and_outlives_the_full_depth_twin() {
+    let cfg = SystemConfig::default();
+    let base = || {
+        ScenarioBuilder::new()
+            .scheduler(SchedKind::Ras)
+            .trace(TraceSpec::Weighted(3))
+            .frames(12)
+            .seed(53)
+            .lp_ladder(Ladder::stage3_family_staged(&cfg))
+            .energy(EnergyModel::pi2b())
+            .battery_j(150.0)
+    };
+    let full = base().build().run();
+    let rescued = base().pressure(0.25, 0).build().run();
+    assert!(
+        full.battery_depletions >= 1,
+        "calibration: a 150 J battery must not survive 12 frames at full depth"
+    );
+    assert!(
+        rescued.pressure_cuts >= 1 && rescued.truncated_completions >= 1,
+        "the rescue clause must arm and land cuts ({} armed, {} landed)",
+        rescued.pressure_cuts,
+        rescued.truncated_completions
+    );
+    assert!(
+        rescued.battery_depletions <= full.battery_depletions,
+        "truncated work must not drain more batteries than full-depth work ({} vs {})",
+        rescued.battery_depletions,
+        full.battery_depletions
+    );
+    assert!(
+        rescued.lp_deadline_met() >= full.lp_deadline_met(),
+        "surviving devices must bank at least as many deadlines ({} vs {})",
+        rescued.lp_deadline_met(),
+        full.lp_deadline_met()
+    );
+    for m in [&full, &rescued] {
+        assert_eq!(
+            m.lp_generated,
+            m.lp_completed_total() + m.lp_violations + m.lp_lost,
+            "{}: lp conservation through depletion + truncation",
+            m.label
+        );
+    }
+}

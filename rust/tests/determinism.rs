@@ -117,6 +117,40 @@ fn accuracy_grid() -> Sweep {
     sweep
 }
 
+/// The anytime axis (PR 10): all four LP policies × truncation {full,
+/// cut} on the staged stage-3 family under bursty MMPP pressure, with a
+/// mid-run crash and a lossy link in every cell. Stage-boundary chains,
+/// pressure surveys, and truncated finishes all ride the seed-derived
+/// streams — and the controller itself draws no RNG — so the rows must
+/// be identical across worker-thread counts and repeats.
+fn anytime_grid() -> Sweep {
+    let cfg = medge::config::SystemConfig::default();
+    let kinds = [SchedKind::Wps, SchedKind::Ras, SchedKind::Multi, SchedKind::Greedy];
+    let mut sweep = Sweep::new();
+    for (i, kind) in kinds.into_iter().enumerate() {
+        for (j, cut) in [false, true].into_iter().enumerate() {
+            let mut b = ScenarioBuilder::new()
+                .scheduler(kind)
+                .workload(Workload::generative(
+                    medge::experiments::frontier_arrivals(30.0),
+                    medge::experiments::anytime_catalog(&cfg),
+                ))
+                .minutes(8.0)
+                .seed(1100 + (i * 2 + j) as u64)
+                .crash_at(120.0, 1)
+                .recover_at(240.0, 1)
+                .loss_rate(0.05)
+                .probe_loss(0.2)
+                .named(format!("{}_{}", kind.label(), if cut { "cut" } else { "full" }));
+            if cut {
+                b = b.pressure(0.5, 8);
+            }
+            sweep = sweep.add(b.build());
+        }
+    }
+    sweep
+}
+
 /// The energy & cloud-tier axis: {WPS, RAS, ENERGY} × {battery-constrained
 /// conveyor, cloud-burst MMPP overload}, with a crash and a lossy link in
 /// every cell. Battery depletion re-enters the crash/re-offer machinery and
@@ -296,6 +330,62 @@ fn energy_grid_actually_drains_and_offloads() {
             m.label
         );
     }
+}
+
+#[test]
+fn anytime_grid_identical_across_thread_counts() {
+    let g = anytime_grid();
+    let seq = rows_debug(&g.clone().threads(1));
+    let par4 = rows_debug(&g.clone().threads(4));
+    let par2 = rows_debug(&g.threads(2));
+    assert_eq!(seq.len(), 8);
+    for (i, row) in seq.iter().enumerate() {
+        assert_eq!(row, &par4[i], "anytime row {i} differs between --threads 1 and --threads 4");
+        assert_eq!(row, &par2[i], "anytime row {i} differs between --threads 1 and --threads 2");
+    }
+}
+
+#[test]
+fn anytime_grid_identical_across_repeated_runs() {
+    let g = anytime_grid().threads(4);
+    assert_eq!(rows_debug(&g), rows_debug(&g), "re-running the anytime sweep must not drift");
+}
+
+#[test]
+fn anytime_grid_actually_truncates_and_keeps_identities() {
+    // Guard against a silently inert controller: somewhere in the cut
+    // rows a truncation must actually land, full rows must never
+    // truncate, and the accounting identities must close through the
+    // crash window in every cell.
+    let rows = anytime_grid().threads(2).run();
+    let mut any_truncated = false;
+    for m in &rows {
+        if m.label.ends_with("_cut") {
+            any_truncated |= m.truncated_completions > 0;
+        } else {
+            assert_eq!(m.truncated_completions, 0, "{}: full row truncated", m.label);
+            assert_eq!(m.pressure_events, 0, "{}: full row surveyed", m.label);
+            assert_eq!(m.pressure_cuts, 0, "{}: full row armed cuts", m.label);
+        }
+        assert!(
+            m.stages_skipped >= m.truncated_completions,
+            "{}: each truncation skips at least one stage",
+            m.label
+        );
+        assert_eq!(
+            m.rung_completions.iter().sum::<u64>(),
+            m.lp_deadline_met(),
+            "{}: per-rung completion identity (truncated finishes still bank their rung)",
+            m.label
+        );
+        assert_eq!(
+            m.lp_generated,
+            m.lp_completed_total() + m.lp_violations + m.lp_lost,
+            "{}: lp conservation",
+            m.label
+        );
+    }
+    assert!(any_truncated, "the cut rows should truncate under MMPP pressure");
 }
 
 #[test]

@@ -104,6 +104,11 @@ fn golden_multi() {
     check("multi", SchedKind::Multi);
 }
 
+#[test]
+fn golden_greedy() {
+    check("greedy", SchedKind::Greedy);
+}
+
 /// The snapshot pipeline itself must be deterministic: serializing the
 /// same scenario twice gives identical bytes (if this fails, no snapshot
 /// can be trusted).
@@ -220,6 +225,36 @@ fn zero_trace_knob_replays_golden_rows_byte_for_byte() {
             plain,
             knobbed,
             "{}: explicit zero observability knobs must be byte-identical to defaults",
+            kind.label()
+        );
+    }
+}
+
+/// The anytime layer (PR 10) must be provably zero-cost when off: the
+/// golden scenario with the pressure controller set to its explicit OFF
+/// values (`pressure(0.0, 0)`) replays `json_rows` **byte-identically**
+/// to the untouched builder, for every scheduler — including the
+/// energy- and greedy-policy ones the other zero-knob tests predate.
+/// Without stage plans no boundary events exist and a zeroed survey
+/// interval schedules nothing — zero events, zero RNG draws, zeroed
+/// truncation/pressure fields. This is also what keeps the checked-in
+/// goldens valid across the anytime PR.
+#[test]
+fn zero_anytime_knobs_replay_golden_rows_byte_for_byte() {
+    for kind in [
+        SchedKind::Wps,
+        SchedKind::Ras,
+        SchedKind::Multi,
+        SchedKind::Energy,
+        SchedKind::Greedy,
+    ] {
+        let plain = report::json_rows(&[golden_scenario(kind)]);
+        let knobbed =
+            report::json_rows(&[golden_builder(kind).pressure(0.0, 0).build().run()]);
+        assert_eq!(
+            plain,
+            knobbed,
+            "{}: explicit zero anytime knobs must be byte-identical to defaults",
             kind.label()
         );
     }

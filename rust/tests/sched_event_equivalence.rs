@@ -6,10 +6,13 @@
 //! survived the `Decision` migration.
 
 use medge::config::SystemConfig;
+use medge::coordinator::scheduler::greedy::GreedyScheduler;
+use medge::coordinator::scheduler::multi::MultiScheduler;
 use medge::coordinator::scheduler::ras_sched::RasScheduler;
 use medge::coordinator::scheduler::wps::WpsScheduler;
 use medge::coordinator::scheduler::{
-    task_refs, Decision, HpOutcome, LpOutcome, Ops, Outcome, SchedEvent, Scheduler,
+    task_refs, Decision, HpOutcome, LpOutcome, Ops, Outcome, PressureCandidate, SchedEvent,
+    Scheduler,
 };
 use medge::coordinator::task::{Task, TaskId};
 use medge::time::SimTime;
@@ -316,6 +319,95 @@ fn deep_ladder_variant_selections_are_well_formed() {
             }
             (_, Some(k)) => panic!("variant {k} on a non-allocated outcome: {:?}", d.outcome),
             (_, None) => {}
+        }
+    }
+}
+
+/// The Fresa & Champati greedy only reorders *ladder rungs*: with no
+/// ladder (or a trivial one-rung ladder) there is nothing to reorder,
+/// so GREEDY must produce the same `Decision` stream — outcomes, ops,
+/// and internal RNG evolution — as the WPS scheduler it wraps, over a
+/// long random event stream. Chained with the tests above, this pins
+/// GREEDY ≡ WPS ≡ the pre-redesign callback surface whenever the
+/// accuracy-density ordering has no material to work with.
+#[test]
+fn greedy_with_trivial_ladder_decides_identically_to_wps() {
+    use medge::coordinator::task::VariantRung;
+    let cfg = SystemConfig { seed: 42, ..Default::default() };
+    let one_rung = [VariantRung {
+        accuracy: 1.0,
+        input_bytes: cfg.image_bytes,
+        proc_us: [cfg.lp2_proc(), cfg.lp4_proc()],
+    }];
+    for (tag, ladder) in [("no-ladder", &[][..]), ("one-rung", &one_rung[..])] {
+        let evs = gen_events(&mut Rng::seed_from_u64(0x47_5244), &cfg, 800);
+        let mut wps = WpsScheduler::new(&cfg, 0, cfg.link_bps);
+        let mut greedy = GreedyScheduler::new(&cfg, 0, cfg.link_bps);
+        let a = replay_laddered(&mut wps, &evs, ladder);
+        let b = replay_laddered(&mut greedy, &evs, ladder);
+        assert_streams_equal(&a, &b, &format!("GREEDY/{tag}"));
+        assert!(
+            a.iter().any(|d| matches!(d.outcome, Outcome::LpAllocated { .. })),
+            "{tag}: stream should exercise allocations"
+        );
+    }
+}
+
+/// Deadline-pressure rescue is a *shared* policy: every LP scheduler
+/// answers the same survey with the same cuts and the same ops charge.
+/// The schedulers differ in which executions exist (their placements),
+/// never in how a rescue is judged — so a truncation-on/off comparison
+/// between schedulers is apples-to-apples.
+#[test]
+fn pressure_surveys_are_judged_identically_by_every_scheduler() {
+    let cfg = SystemConfig::default();
+    let cand = |task, cut_finish, full_finish, battery_doomed| PressureCandidate {
+        task,
+        device: 0,
+        cut_stage: 1,
+        n_stages: 3,
+        cut_finish,
+        full_finish,
+        deadline: 1_000,
+        accuracy_loss: 0.27,
+        battery_doomed,
+    };
+    let cands = [
+        cand(1, 900, 1_500, false),  // rescue: full depth misses, cut fits
+        cand(2, 700, 950, false),    // healthy: cut only under escalation
+        cand(3, 800, 980, true),     // battery dies before full depth
+        cand(4, 1_200, 1_800, false), // unsalvageable: even the cut misses
+    ];
+    for escalate in [false, true] {
+        let mut scheds: Vec<Box<dyn Scheduler>> = vec![
+            Box::new(RasScheduler::new(&cfg, 0, cfg.link_bps)),
+            Box::new(WpsScheduler::new(&cfg, 0, cfg.link_bps)),
+            Box::new(MultiScheduler::new(&cfg, 0, cfg.link_bps, 8)),
+            Box::new(GreedyScheduler::new(&cfg, 0, cfg.link_bps)),
+        ];
+        let mut decisions = Vec::new();
+        for s in &mut scheds {
+            let d = s.on_event(0, SchedEvent::Pressure { candidates: &cands, escalate });
+            let Outcome::Truncate { cuts } = &d.outcome else {
+                panic!("{}: pressure must answer Truncate, got {:?}", s.name(), d.outcome)
+            };
+            let indices: Vec<u16> = cuts.iter().map(|c| c.index).collect();
+            assert!(indices.contains(&0), "{}: rescue cut missing", s.name());
+            assert_eq!(indices.contains(&1), escalate, "{}: healthy task", s.name());
+            assert!(indices.contains(&2), "{}: battery rescue missing", s.name());
+            assert!(!indices.contains(&3), "{}: infeasible cut armed", s.name());
+            for c in cuts {
+                assert_eq!(
+                    c.at_stage,
+                    cands[c.index as usize].cut_stage,
+                    "{}: cut must land on the offered boundary",
+                    s.name()
+                );
+            }
+            decisions.push(d);
+        }
+        for pair in decisions.windows(2) {
+            assert_eq!(pair[0], pair[1], "schedulers diverged on the same survey");
         }
     }
 }
